@@ -1,0 +1,160 @@
+//! END-TO-END DRIVER (DESIGN.md §6): the full system on a real small
+//! workload, proving all layers compose.
+//!
+//! 1. Generate a ~125M-parameter-shape 1.58-bit transformer
+//!    (`small-125m` preset) and save/load it through the `.rtw` format.
+//! 2. Preprocess every weight matrix into RSR indices (Algorithm 1) —
+//!    once, inside the serving engine's workers.
+//! 3. Serve batched synthetic ShortQuestions requests through the
+//!    whole coordinator (queue → batcher → scheduler → workers),
+//!    decoding greedily, on BOTH the Standard backend and RSR++.
+//! 4. Assert token-level output equality between backends (the paper's
+//!    §5.3 check) and report per-token latency + throughput for both.
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! ```sh
+//! cargo run --release --example llm_inference          # ~125M model
+//! RSR_E2E_SMALL=1 cargo run --release --example llm_inference  # quick
+//! ```
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use rsr::data::datasets::{Dataset, DatasetKind};
+use rsr::kernels::Backend;
+use rsr::model::config::ModelConfig;
+use rsr::model::tokenizer::Tokenizer;
+use rsr::model::weights::ModelWeights;
+use rsr::serving::engine::{EngineConfig, InferenceEngine};
+use rsr::serving::request::Request;
+
+struct RunReport {
+    tokens: HashMap<u64, Vec<u32>>,
+    wall: Duration,
+    decode_us_per_tok: f64,
+    tokens_out: u64,
+}
+
+fn run_backend(
+    weights: &Arc<ModelWeights>,
+    backend: Backend,
+    requests: &[(u64, Vec<u32>, usize)],
+) -> rsr::Result<RunReport> {
+    println!("  [{}] starting engine (preprocessing weights)...", backend.name());
+    let t0 = Instant::now();
+    let engine = InferenceEngine::start(
+        Arc::clone(weights),
+        EngineConfig { workers: 1, backend, ..Default::default() },
+    )?;
+    println!(
+        "  [{}] engine ready in {:.1}s",
+        backend.name(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    let t0 = Instant::now();
+    for (id, prompt, max_new) in requests {
+        engine.submit(Request::new(*id, prompt.clone(), *max_new))?;
+    }
+    let mut tokens = HashMap::new();
+    let mut decode_us = 0.0;
+    let mut tokens_out = 0u64;
+    for _ in 0..requests.len() {
+        let resp = engine
+            .recv_timeout(Duration::from_secs(600))
+            .ok_or_else(|| rsr::Error::Serving("timeout".into()))?;
+        if let Some(e) = resp.error {
+            return Err(rsr::Error::Serving(e));
+        }
+        decode_us += resp.timing.decode.as_micros() as f64;
+        tokens_out += resp.tokens.len() as u64;
+        tokens.insert(resp.id, resp.tokens);
+    }
+    let wall = t0.elapsed();
+    engine.shutdown();
+    Ok(RunReport {
+        tokens,
+        wall,
+        decode_us_per_tok: decode_us / tokens_out.max(1) as f64,
+        tokens_out,
+    })
+}
+
+fn main() -> rsr::Result<()> {
+    let quick = std::env::var("RSR_E2E_SMALL").is_ok();
+    let cfg = if quick {
+        ModelConfig::tiny()
+    } else {
+        ModelConfig::small_125m()
+    };
+    println!(
+        "== end-to-end driver: {} (~{:.0}M params, d={}, {} layers) ==",
+        cfg.name,
+        cfg.param_count() as f64 / 1e6,
+        cfg.d_model,
+        cfg.n_layers
+    );
+
+    // 1. Generate + round-trip through the on-disk format.
+    let t0 = Instant::now();
+    let weights = ModelWeights::generate(cfg, 20_250_711)?;
+    let path = std::env::temp_dir().join("rsr_e2e_model.rtw");
+    weights.save(&path)?;
+    let weights = Arc::new(ModelWeights::load(&path)?);
+    println!(
+        "generated + save/load round-trip in {:.1}s ({:.1} MB on disk)",
+        t0.elapsed().as_secs_f64(),
+        std::fs::metadata(&path)?.len() as f64 / 1048576.0
+    );
+
+    // 2. The workload: synthetic ShortQuestions, a few tokens each.
+    let n_requests = if quick { 4 } else { 6 };
+    let max_new = if quick { 4 } else { 6 };
+    let ds = Dataset::generate(DatasetKind::ShortQuestions, n_requests, 42);
+    let tokenizer = Tokenizer::new();
+    let requests: Vec<(u64, Vec<u32>, usize)> = ds
+        .prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| (i as u64, tokenizer.encode_with_bos(p), max_new))
+        .collect();
+    println!("workload: {n_requests} prompts x {max_new} new tokens\n");
+
+    // 3. Serve on both backends.
+    let std_report = run_backend(&weights, Backend::Standard, &requests)?;
+    let rsr_report = run_backend(&weights, Backend::RsrPlusPlus, &requests)?;
+
+    // 4. Equality check + report.
+    for (id, _, _) in &requests {
+        assert_eq!(
+            std_report.tokens[id], rsr_report.tokens[id],
+            "backend outputs diverged on request {id}"
+        );
+    }
+    println!("\nALL OUTPUTS EQUAL across backends (paper §5.3 check) ✓\n");
+    for (name, r) in [("Standard", &std_report), ("RSR++", &rsr_report)] {
+        println!(
+            "{name:>9}: {:>6.2}s wall, {:>7.0} µs/token decode, {:.2} tok/s",
+            r.wall.as_secs_f64(),
+            r.decode_us_per_tok,
+            r.tokens_out as f64 / r.wall.as_secs_f64(),
+        );
+    }
+    println!(
+        "\nper-token decode speedup (RSR++ vs Standard): {:.2}x",
+        std_report.decode_us_per_tok / rsr_report.decode_us_per_tok
+    );
+
+    // Show one exchange for flavor.
+    let (id0, prompt0, _) = &requests[0];
+    println!(
+        "\nsample: {:?} -> {} greedy tokens (identical on both backends)",
+        ds.prompts[*id0 as usize],
+        rsr_report.tokens[id0].len()
+    );
+    let _ = prompt0;
+    std::fs::remove_file(&path).ok();
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Quickstart: preprocess a ternary weight matrix once, multiply many
+//! times — the paper's core loop in five steps.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use rsr::kernels::index::TernaryRsrIndex;
+use rsr::kernels::optimal_k::optimal_k_rsrpp;
+use rsr::kernels::rsrpp::TernaryRsrPlusPlusPlan;
+use rsr::kernels::standard::standard_mul_ternary;
+use rsr::kernels::TernaryMatrix;
+use rsr::util::rng::Rng;
+
+fn main() -> rsr::Result<()> {
+    let n = 4096;
+    let mut rng = Rng::new(7);
+
+    // 1. A fixed ternary weight matrix (what a trained 1.58-bit model
+    //    ships) and an activation vector arriving at inference time.
+    let a = TernaryMatrix::random(n, n, 1.0 / 3.0, &mut rng);
+    let v = rng.f32_vec(n, -1.0, 1.0);
+
+    // 2. Choose the blocking parameter k (Eq 7's analytic optimum).
+    let k = optimal_k_rsrpp(n);
+    println!("n = {n}, optimal k = {k}");
+
+    // 3. Preprocess ONCE (paper Algorithm 1: blocking → binary row
+    //    order → full segmentation, on both Prop 2.1 halves).
+    let t0 = std::time::Instant::now();
+    let index = TernaryRsrIndex::preprocess(&a, k);
+    println!(
+        "preprocessed in {:.1} ms — index {:.1} MB vs {:.1} MB dense f32",
+        t0.elapsed().as_secs_f64() * 1e3,
+        index.bytes() as f64 / 1048576.0,
+        (n * n * 4) as f64 / 1048576.0,
+    );
+
+    // 4. Multiply MANY times (paper Algorithm 2 + 3).
+    let mut plan = TernaryRsrPlusPlusPlan::new(index)?;
+    let mut out = vec![0.0f32; n];
+    let t0 = std::time::Instant::now();
+    let reps = 20;
+    for _ in 0..reps {
+        plan.execute(&v, &mut out)?;
+    }
+    let rsr_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+
+    // 5. Compare with the standard O(n²) multiplies. Two baselines:
+    //    the naive branchy loop (the paper's "Standard" — what a plain
+    //    C++ implementation does) and an auto-vectorized multiply loop
+    //    (the strongest dense CPU baseline; see the ablations bench).
+    let t0 = std::time::Instant::now();
+    let expect = rsr::kernels::standard::standard_mul_ternary_i8(&v, &a);
+    let naive_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t0 = std::time::Instant::now();
+    let expect2 = standard_mul_ternary(&v, &a);
+    let vec_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let max_err = out
+        .iter()
+        .zip(expect.iter())
+        .map(|(g, e)| (g - e).abs())
+        .fold(0.0f32, f32::max);
+    drop(expect2);
+
+    println!("RSR++:                {rsr_ms:.3} ms/multiply");
+    println!("Standard (naive):     {naive_ms:.3} ms/multiply  -> {:.1}x speedup", naive_ms / rsr_ms);
+    println!("Standard (vectorized):{vec_ms:.3} ms/multiply  -> {:.1}x", vec_ms / rsr_ms);
+    println!("max |err| = {max_err:.2e}");
+    assert!(max_err < 1e-2, "results must agree");
+    Ok(())
+}

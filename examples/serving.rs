@@ -1,0 +1,110 @@
+//! Serving: bring up the full L3 stack (router → batcher → scheduler →
+//! engine workers) on a TCP port, drive it with concurrent clients
+//! replaying a Poisson trace of synthetic questions, and report
+//! latency/throughput from the metrics sink.
+//!
+//! ```sh
+//! cargo run --release --example serving
+//! ```
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use rsr::data::datasets::{Dataset, DatasetKind};
+use rsr::kernels::Backend;
+use rsr::model::config::ModelConfig;
+use rsr::model::weights::ModelWeights;
+use rsr::serving::engine::{EngineConfig, InferenceEngine};
+use rsr::serving::router::Router;
+use rsr::serving::server::{Client, Server};
+
+fn main() -> rsr::Result<()> {
+    // A small-but-real model so the example finishes in ~a minute.
+    let mut cfg = ModelConfig::tiny();
+    cfg.d_model = 256;
+    cfg.d_ff = 512;
+    cfg.n_heads = 8;
+    cfg.n_kv_heads = 4;
+    cfg.n_layers = 4;
+    println!("building {} (~{:.1}M params)...", cfg.name, cfg.param_count() as f64 / 1e6);
+    let weights = Arc::new(ModelWeights::generate(cfg, 11)?);
+
+    let engine = Arc::new(InferenceEngine::start(
+        Arc::clone(&weights),
+        EngineConfig { workers: 2, backend: Backend::RsrPlusPlus, ..Default::default() },
+    )?);
+    let router = Arc::new(Router::new(vec![Arc::clone(&engine)])?);
+    let server = Server::new(Arc::clone(&router));
+
+    // Bind on an ephemeral port.
+    let stop = Arc::new(AtomicBool::new(false));
+    let bound: Arc<Mutex<Option<std::net::SocketAddr>>> = Arc::default();
+    let bound2 = Arc::clone(&bound);
+    let stop2 = Arc::clone(&stop);
+    let server_thread = std::thread::spawn(move || {
+        server
+            .serve("127.0.0.1:0", stop2, move |addr| {
+                *bound2.lock().unwrap() = Some(addr);
+            })
+            .unwrap();
+    });
+    let addr = loop {
+        if let Some(a) = *bound.lock().unwrap() {
+            break a;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    };
+    println!("server bound on {addr}");
+
+    // Drive it: 3 concurrent clients × questions from the synthetic
+    // ShortQuestions dataset.
+    let ds = Dataset::generate(DatasetKind::ShortQuestions, 12, 77);
+    let t0 = Instant::now();
+    let mut client_threads = Vec::new();
+    for (ci, chunk) in ds.prompts.chunks(4).enumerate() {
+        let prompts: Vec<String> = chunk.to_vec();
+        client_threads.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).expect("connect");
+            let mut lines = Vec::new();
+            for (i, p) in prompts.iter().enumerate() {
+                let reply = client
+                    .request((ci * 100 + i) as u64, p, 8)
+                    .expect("request");
+                lines.push(format!(
+                    "client{ci}: {:<46} -> {} tok, {}µs decode",
+                    p,
+                    reply.get("tokens").and_then(|t| t.as_arr()).map_or(0, |a| a.len()),
+                    reply
+                        .get("decode_us")
+                        .and_then(|x| x.as_f64())
+                        .unwrap_or(0.0)
+                ));
+            }
+            lines
+        }));
+    }
+    let mut completed = 0;
+    for t in client_threads {
+        for line in t.join().unwrap() {
+            println!("{line}");
+            completed += 1;
+        }
+    }
+    let elapsed = t0.elapsed();
+
+    // Report.
+    let snap = engine.metrics().snapshot();
+    println!("\n--- metrics ---");
+    println!("{}", snap.to_string());
+    println!(
+        "\n{completed} requests in {:.2}s = {:.1} req/s; tokens out: {}",
+        elapsed.as_secs_f64(),
+        completed as f64 / elapsed.as_secs_f64(),
+        snap.get("tokens_out").and_then(|x| x.as_f64()).unwrap_or(0.0),
+    );
+
+    stop.store(true, Ordering::Relaxed);
+    server_thread.join().unwrap();
+    Ok(())
+}

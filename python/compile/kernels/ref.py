@@ -1,0 +1,107 @@
+"""Pure-numpy reference oracle for the RSR algorithms.
+
+This is the correctness anchor for the Layer-1 Pallas kernel: every
+kernel output is compared against these functions by pytest/hypothesis.
+It mirrors the paper exactly:
+
+* :func:`bin_matrix` — the ``Bin_[k]`` enumeration matrix (paper §3.2),
+* :func:`block_keys` — the k-bit row value per column block (Def 3.2),
+* :func:`preprocess` — Algorithm 1 (blocking, binary row order, full
+  segmentation),
+* :func:`rsr_matvec_ref` — Algorithm 2 over the preprocessed index,
+* :func:`decompose_ternary` — Proposition 2.1.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def bin_matrix(k: int) -> np.ndarray:
+    """The ``2^k x k`` binary-row-ordered enumeration matrix ``Bin_[k]``.
+
+    Column 0 holds the MSB, matching the paper's row-value convention
+    ``B_i[r,:]_2 = concat(B[r,1..k])``.
+    """
+    if not 1 <= k <= 16:
+        raise ValueError(f"k={k} out of range 1..16")
+    values = np.arange(2**k, dtype=np.int64)
+    shifts = (k - 1 - np.arange(k, dtype=np.int64))[None, :]
+    return ((values[:, None] >> shifts) & 1).astype(np.float32)
+
+
+def block_keys(B: np.ndarray, k: int) -> np.ndarray:
+    """Per-block k-bit row keys: shape ``(n_blocks, n_rows)`` int32.
+
+    ``B`` must be a 0/1 matrix whose column count is divisible by ``k``
+    (callers pad the ragged tail; the rust side handles it natively).
+    """
+    n, m = B.shape
+    if m % k != 0:
+        raise ValueError(f"cols {m} not divisible by k={k} (pad first)")
+    nb = m // k
+    blocks = B.reshape(n, nb, k).astype(np.int64)
+    shifts = (k - 1 - np.arange(k, dtype=np.int64))[None, None, :]
+    keys = (blocks << shifts).sum(axis=2)
+    return keys.T.astype(np.int32)  # (nb, n)
+
+
+def preprocess(B: np.ndarray, k: int):
+    """Algorithm 1: returns ``[(sigma, seg), ...]`` per column block.
+
+    ``sigma[pos] = original_row`` (stable, ascending key order) and
+    ``seg`` is the full segmentation with sentinel: ``2^k + 1`` entries.
+    """
+    keys = block_keys(B, k)
+    out = []
+    for bkeys in keys:
+        sigma = np.argsort(bkeys, kind="stable").astype(np.uint32)
+        counts = np.bincount(bkeys, minlength=2**k).astype(np.uint32)
+        seg = np.zeros(2**k + 1, dtype=np.uint32)
+        seg[1:] = np.cumsum(counts)
+        out.append((sigma, seg))
+    return out
+
+
+def segmented_sum(v: np.ndarray, sigma: np.ndarray, seg: np.ndarray) -> np.ndarray:
+    """Eq 5: segmented sums of ``v`` under ``(sigma, seg)``."""
+    perm = v[sigma]
+    sums = np.add.reduceat(
+        np.concatenate([perm, [0.0]]), seg[:-1].astype(np.int64)
+    )[: len(seg) - 1]
+    # reduceat quirk: empty segments (seg[j] == seg[j+1]) copy the
+    # element instead of summing zero — fix them up.
+    empty = seg[:-1] == seg[1:]
+    sums = np.where(empty, 0.0, sums)
+    return sums.astype(v.dtype)
+
+
+def rsr_matvec_ref(v: np.ndarray, B: np.ndarray, k: int) -> np.ndarray:
+    """Algorithm 2 (reference): ``v @ B`` via segmented sums + Bin_[k]."""
+    n, m = B.shape
+    if v.shape != (n,):
+        raise ValueError("shape mismatch")
+    binm = bin_matrix(k)
+    out = np.zeros(m, dtype=np.float32)
+    for bi, (sigma, seg) in enumerate(preprocess(B, k)):
+        u = segmented_sum(v.astype(np.float32), sigma, seg)
+        out[bi * k : (bi + 1) * k] = u @ binm
+    return out
+
+
+def decompose_ternary(A: np.ndarray):
+    """Proposition 2.1: ``A = B1 - B2`` with binary ``B1, B2``."""
+    B1 = (A == 1).astype(np.float32)
+    B2 = (A == -1).astype(np.float32)
+    return B1, B2
+
+
+def rsr_matvec_ternary_ref(v: np.ndarray, A: np.ndarray, k: int) -> np.ndarray:
+    """Ternary Algorithm 2 via Prop 2.1."""
+    B1, B2 = decompose_ternary(A)
+    return rsr_matvec_ref(v, B1, k) - rsr_matvec_ref(v, B2, k)
+
+
+def dense_matvec_ref(v: np.ndarray, W: np.ndarray) -> np.ndarray:
+    """The standard baseline: ``v @ W``."""
+    return v @ W

@@ -1,0 +1,164 @@
+"""Layer-1 Pallas kernel: RSR in its tensorized (MXU-friendly) form.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's GPU
+variant (Appendix C.1.II / E.3) replaces permutation + segmentation with
+a one-hot segmentation matrix so the segmented sum becomes a matmul. On
+TPU that is exactly the right shape for the MXU systolic array, so the
+kernel computes, per column block ``b``:
+
+    onehot = (keys_b[:, None] == iota(2^k))        # (n, 2^k) 0/1
+    u      = v @ onehot                            # segmented sums
+    out_b  = u @ Bin_[k]                           # block product
+
+The grid iterates over column blocks; ``BlockSpec`` streams the per-
+block key rows through VMEM while ``v`` and the tiny ``Bin_[k]`` stay
+resident. ``interpret=True`` everywhere — the CPU PJRT plugin cannot run
+Mosaic custom-calls; real-TPU estimates live in EXPERIMENTS.md §Perf.
+
+VMEM footprint per grid step (f32): ``n·2^k`` (one-hot) + ``n`` (v) +
+``n`` (keys) + ``2^k·k`` (Bin) + ``k`` (out). With the default tiling
+``ROW_TILE = 2048``, a ``k = 8`` kernel uses ~2.1 MB — comfortably
+inside the ~16 MB VMEM of a TPU core, leaving room for double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Rows processed per inner tile. Chosen so the one-hot tile
+# (ROW_TILE × 2^k f32) stays ~2 MB at k=8; see module docstring.
+ROW_TILE = 2048
+
+
+def _rsr_block_kernel(v_ref, keys_ref, bin_ref, o_ref):
+    """One grid step: one column block, full row range.
+
+    The one-hot segmented-sum matmul runs in row tiles so the VMEM
+    working set is bounded regardless of n.
+    """
+    v = v_ref[...]  # (n,)
+    keys = keys_ref[0]  # (n,)
+    binm = bin_ref[...]  # (2^k, k)
+    n = v.shape[0]
+    two_k = binm.shape[0]
+
+    u = jnp.zeros((two_k,), dtype=v.dtype)
+    # Static tiling (n and ROW_TILE are compile-time constants).
+    for start in range(0, n, ROW_TILE):
+        stop = min(start + ROW_TILE, n)
+        kt = keys[start:stop]
+        vt = v[start:stop]
+        iota = jax.lax.broadcasted_iota(jnp.int32, (stop - start, two_k), 1)
+        onehot = (kt[:, None] == iota).astype(v.dtype)  # (tile, 2^k)
+        u = u + vt @ onehot
+    o_ref[0, :] = u @ binm
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def rsr_matvec_binary(v, keys, binm, *, k: int):
+    """``v @ B`` for binary ``B`` given precomputed block keys.
+
+    Args:
+      v:    f32[n] activation vector.
+      keys: i32[n_blocks, n] k-bit row keys per block
+            (``ref.block_keys``; the build-time product of Algorithm 1).
+      binm: f32[2^k, k] the ``Bin_[k]`` matrix (``ref.bin_matrix``).
+      k:    block width (static).
+
+    Returns:
+      f32[n_blocks * k] — the product vector.
+    """
+    nb, n = keys.shape
+    out = pl.pallas_call(
+        _rsr_block_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((n,), lambda b: (0,)),
+            pl.BlockSpec((1, n), lambda b: (b, 0)),
+            pl.BlockSpec((2**k, k), lambda b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, k), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, k), v.dtype),
+        interpret=True,
+    )(v, keys, binm)
+    return out.reshape(nb * k)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def rsr_matvec_ternary(v, keys_plus, keys_minus, binm, *, k: int):
+    """Ternary ``v @ A`` via Prop 2.1: RSR on both binary halves."""
+    plus = rsr_matvec_binary(v, keys_plus, binm, k=k)
+    minus = rsr_matvec_binary(v, keys_minus, binm, k=k)
+    return plus - minus
+
+
+def prepare_binary(B: np.ndarray, k: int):
+    """Build-time preprocessing for :func:`rsr_matvec_binary`.
+
+    Pads the column count up to a multiple of ``k`` (extra zero columns
+    produce zero outputs that callers slice off).
+    """
+    n, m = B.shape
+    pad = (-m) % k
+    if pad:
+        B = np.concatenate([B, np.zeros((n, pad), dtype=B.dtype)], axis=1)
+    keys = ref.block_keys(B, k)
+    binm = ref.bin_matrix(k)
+    return keys, binm, m
+
+
+def prepare_ternary(A: np.ndarray, k: int):
+    """Build-time preprocessing for :func:`rsr_matvec_ternary`."""
+    B1, B2 = ref.decompose_ternary(A)
+    keys_p, binm, m = prepare_binary(B1, k)
+    keys_m, _, _ = prepare_binary(B2, k)
+    return keys_p, keys_m, binm, m
+
+
+def rsr_apply_binary(v: np.ndarray, B: np.ndarray, k: int) -> np.ndarray:
+    """Convenience one-shot: preprocess + kernel + unpad."""
+    keys, binm, m = prepare_binary(B, k)
+    out = rsr_matvec_binary(jnp.asarray(v), jnp.asarray(keys), jnp.asarray(binm), k=k)
+    return np.asarray(out)[:m]
+
+
+def rsr_apply_ternary(v: np.ndarray, A: np.ndarray, k: int) -> np.ndarray:
+    """Convenience one-shot for ternary matrices."""
+    kp, km, binm, m = prepare_ternary(A, k)
+    out = rsr_matvec_ternary(
+        jnp.asarray(v), jnp.asarray(kp), jnp.asarray(km), jnp.asarray(binm), k=k
+    )
+    return np.asarray(out)[:m]
+
+
+def vmem_bytes(n: int, k: int, row_tile: int = ROW_TILE) -> int:
+    """Estimated per-step VMEM footprint in bytes (f32 everywhere).
+
+    Used by the §Perf analysis: one-hot tile + v + keys + Bin + out.
+    """
+    tile = min(n, row_tile)
+    onehot = tile * (2**k) * 4
+    v_bytes = n * 4
+    keys_bytes = n * 4
+    bin_bytes = (2**k) * k * 4
+    return onehot + v_bytes + keys_bytes + bin_bytes + k * 4
+
+
+def mxu_utilization_estimate(n: int, k: int) -> float:
+    """Fraction of one-hot matmul MACs that contribute to the result.
+
+    The MXU executes the full ``n × 2^k`` one-hot product (n·2^k MACs
+    per block); the useful work of the segmented sum is n adds per
+    block, so utilization of the *useful* adds is ``n / (n·2^k) = 2^-k``
+    — the tensorized form trades redundant MACs for systolic-array
+    throughput exactly as the paper's GPU version does with cuBLAS.
+    Reported (not optimized away) in EXPERIMENTS.md §Perf.
+    """
+    return 1.0 / (2**k)

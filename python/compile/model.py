@@ -1,0 +1,74 @@
+"""Layer-2: the JAX model — BitLinear-style compute graphs that call the
+Layer-1 Pallas kernel, plus the dense baselines, all AOT-lowered by
+``aot.py`` into the HLO artifacts the rust runtime executes.
+
+Python never runs at serving time: these functions exist to be lowered
+once (``make artifacts``) and to be tested against ``kernels.ref``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import rsr_pallas
+
+
+def dense_matvec(v, w):
+    """The optimized-library baseline: ``v @ W`` (PJRT compiles this to
+    its Eigen dot — the stand-in for NumPy/cuBLAS in Fig 11)."""
+    return (v @ w,)
+
+
+def dense_matvec_batched(vs, w):
+    """Batched baseline ``V @ W`` for the serving/GPU comparisons."""
+    return (vs @ w,)
+
+
+def rsr_matvec(v, keys, binm, *, k: int):
+    """The RSR product as an XLA computation: Layer-2 entry point that
+    calls the Layer-1 Pallas kernel."""
+    return (rsr_pallas.rsr_matvec_binary(v, keys, binm, k=k),)
+
+
+def rsr_matvec_ternary(v, keys_plus, keys_minus, binm, *, k: int):
+    """Ternary RSR product (Prop 2.1) calling the Pallas kernel twice."""
+    return (
+        rsr_pallas.rsr_matvec_ternary(v, keys_plus, keys_minus, binm, k=k),
+    )
+
+
+def swiglu_ffn_dense(x, w_gate, w_up, w_down):
+    """Dense SwiGLU feed-forward block (the transformer's hot layer):
+    ``down( silu(gate(x)) * up(x) )`` — the PJRT model-level baseline."""
+    g = x @ w_gate
+    u = x @ w_up
+    h = jax.nn.silu(g) * u
+    return (h @ w_down,)
+
+
+def swiglu_ffn_rsr(x, keys_g, keys_u, keys_d, binm, *, k: int):
+    """SwiGLU block with every projection running the RSR Pallas kernel
+    (binary weights; the ternary variant doubles the key inputs).
+
+    Layer widths are implied by the key shapes: ``keys_g/keys_u`` index
+    ``d → ff`` matrices, ``keys_d`` the ``ff → d`` matrix.
+    """
+    g = rsr_pallas.rsr_matvec_binary(x, keys_g, binm, k=k)
+    u = rsr_pallas.rsr_matvec_binary(x, keys_u, binm, k=k)
+    h = jax.nn.silu(g) * u
+    return (rsr_pallas.rsr_matvec_binary(h, keys_d, binm, k=k),)
+
+
+def rmsnorm(x, weight, eps: float = 1e-6):
+    """RMSNorm (matches ``rust/src/model/rmsnorm.rs``)."""
+    ms = jnp.mean(x * x)
+    return x * jax.lax.rsqrt(ms + eps) * weight
+
+
+def decoder_ffn_halfblock_dense(h, norm_w, w_gate, w_up, w_down):
+    """Pre-norm residual FFN half-block: ``h + ffn(rmsnorm(h))`` — the
+    shape the paper's §5.3 per-layer timing actually exercises."""
+    x = rmsnorm(h, norm_w)
+    (y,) = swiglu_ffn_dense(x, w_gate, w_up, w_down)
+    return (h + y,)

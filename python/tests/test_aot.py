@@ -1,0 +1,59 @@
+"""AOT sanity: every artifact lowers to parseable HLO text with the
+declared entry signature, and the manifest is consistent."""
+
+import json
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def artifacts():
+    # Lowering (no compilation) is fast enough to do once per session.
+    return list(aot.build_artifacts())
+
+
+def test_expected_artifact_set(artifacts):
+    names = {a[0] for a in artifacts}
+    for n in aot.DENSE_SIZES:
+        assert f"dense_matvec_n{n}" in names
+    for n, k in aot.RSR_SIZES:
+        assert f"rsr_matvec_n{n}_k{k}" in names
+    for d, ff in aot.FFN_SHAPES:
+        assert f"ffn_dense_d{d}_ff{ff}" in names
+    for d, ff, k in aot.RSR_FFN_SHAPES:
+        assert f"ffn_rsr_d{d}_ff{ff}_k{k}" in names
+
+
+def test_hlo_text_is_emitted_and_parseable_shape(artifacts):
+    # Use the smallest artifact to keep the test quick.
+    name, lowered, inputs, outputs, meta = min(
+        artifacts, key=lambda a: a[3][0]["shape"][0] if a[3][0]["shape"] else 0
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # Parameter count matches the declared inputs.
+    assert text.count("parameter(") >= len(inputs)
+
+
+def test_manifest_written(tmp_path, monkeypatch):
+    # Run main() against a temp dir with trimmed sizes for speed.
+    monkeypatch.setattr(aot, "DENSE_SIZES", [64])
+    monkeypatch.setattr(aot, "BATCHED", [(2, 64)])
+    monkeypatch.setattr(aot, "RSR_SIZES", [(64, 4)])
+    monkeypatch.setattr(aot, "FFN_SHAPES", [(32, 64)])
+    monkeypatch.setattr(aot, "RSR_FFN_SHAPES", [(32, 64, 4)])
+    monkeypatch.setattr(
+        "sys.argv", ["aot", "--out-dir", str(tmp_path)]
+    )
+    aot.main()
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["format"] == "hlo-text"
+    assert len(manifest["artifacts"]) == 5
+    for art in manifest["artifacts"]:
+        assert (tmp_path / art["path"]).exists()
+        text = (tmp_path / art["path"]).read_text()
+        assert "HloModule" in text
+        assert all("shape" in s and "dtype" in s for s in art["inputs"])

@@ -1,0 +1,131 @@
+"""Pallas kernel vs the pure-numpy oracle — the core L1 correctness
+signal, with hypothesis sweeping shapes, k and densities."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, rsr_pallas
+
+
+def random_binary(n, m, p, seed):
+    rng = np.random.default_rng(seed)
+    return (rng.random((n, m)) < p).astype(np.float32)
+
+
+def random_ternary(n, m, seed):
+    rng = np.random.default_rng(seed)
+    return rng.integers(-1, 2, (n, m)).astype(np.float32)
+
+
+def random_vec(n, seed):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=n).astype(np.float32)
+
+
+class TestBinaryKernel:
+    @pytest.mark.parametrize("n,m,k", [(32, 32, 2), (64, 48, 4), (128, 130, 8)])
+    def test_matches_dense(self, n, m, k):
+        B = random_binary(n, m, 0.5, seed=n + m + k)
+        v = random_vec(n, seed=k)
+        got = rsr_pallas.rsr_apply_binary(v, B, k)
+        np.testing.assert_allclose(got, v @ B, rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("k", [1, 2, 3, 5, 7])
+    def test_all_k_widths(self, k):
+        n = 64
+        B = random_binary(n, n, 0.5, seed=k)
+        v = random_vec(n, seed=100 + k)
+        got = rsr_pallas.rsr_apply_binary(v, B, k)
+        np.testing.assert_allclose(got, v @ B, rtol=1e-4, atol=1e-4)
+
+    def test_ragged_columns_are_padded(self):
+        # m = 30 not divisible by k = 4 → wrapper pads and slices.
+        B = random_binary(48, 30, 0.5, seed=7)
+        v = random_vec(48, seed=8)
+        got = rsr_pallas.rsr_apply_binary(v, B, 4)
+        assert got.shape == (30,)
+        np.testing.assert_allclose(got, v @ B, rtol=1e-4, atol=1e-4)
+
+    def test_zero_matrix(self):
+        B = np.zeros((32, 16), dtype=np.float32)
+        v = random_vec(32, seed=9)
+        got = rsr_pallas.rsr_apply_binary(v, B, 4)
+        np.testing.assert_array_equal(got, np.zeros(16, dtype=np.float32))
+
+    def test_all_ones_matrix(self):
+        B = np.ones((32, 16), dtype=np.float32)
+        v = random_vec(32, seed=10)
+        got = rsr_pallas.rsr_apply_binary(v, B, 4)
+        np.testing.assert_allclose(got, np.full(16, v.sum()), rtol=1e-4)
+
+    def test_row_tiling_path(self, monkeypatch):
+        # Force the in-kernel row tiling to take multiple iterations.
+        monkeypatch.setattr(rsr_pallas, "ROW_TILE", 16)
+        B = random_binary(50, 24, 0.5, seed=11)
+        v = random_vec(50, seed=12)
+        got = rsr_pallas.rsr_apply_binary(v, B, 4)
+        np.testing.assert_allclose(got, v @ B, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(8, 96),
+        nb=st.integers(1, 6),
+        k=st.integers(1, 6),
+        density=st.floats(0.05, 0.95),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, n, nb, k, density, seed):
+        m = nb * k
+        B = random_binary(n, m, density, seed)
+        v = random_vec(n, seed ^ 0xABCDEF)
+        got = rsr_pallas.rsr_apply_binary(v, B, k)
+        np.testing.assert_allclose(got, v @ B, rtol=1e-3, atol=1e-3)
+
+
+class TestTernaryKernel:
+    @pytest.mark.parametrize("n,m,k", [(32, 32, 4), (96, 64, 5)])
+    def test_matches_dense(self, n, m, k):
+        A = random_ternary(n, m, seed=n * m)
+        v = random_vec(n, seed=m)
+        got = rsr_pallas.rsr_apply_ternary(v, A, k)
+        np.testing.assert_allclose(got, v @ A, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(8, 64),
+        nb=st.integers(1, 4),
+        k=st.integers(1, 5),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, n, nb, k, seed):
+        m = nb * k
+        A = random_ternary(n, m, seed)
+        v = random_vec(n, seed ^ 0x13579B)
+        got = rsr_pallas.rsr_apply_ternary(v, A, k)
+        np.testing.assert_allclose(got, v @ A, rtol=1e-3, atol=1e-3)
+
+
+class TestKernelVsRefPipeline:
+    """The kernel must agree with the *reference RSR pipeline*, not just
+    the dense product — catches compensating bugs."""
+
+    @pytest.mark.parametrize("n,k", [(40, 4), (64, 6)])
+    def test_kernel_equals_ref_rsr(self, n, k):
+        B = random_binary(n, n - (n % k), 0.5, seed=n)
+        v = random_vec(n, seed=k)
+        kernel_out = rsr_pallas.rsr_apply_binary(v, B, k)
+        ref_out = ref.rsr_matvec_ref(v, B, k)
+        np.testing.assert_allclose(kernel_out, ref_out, rtol=1e-4, atol=1e-4)
+
+
+class TestVmemModel:
+    def test_footprint_grows_with_k(self):
+        assert rsr_pallas.vmem_bytes(4096, 10) > rsr_pallas.vmem_bytes(4096, 4)
+
+    def test_default_tile_fits_tpu_vmem(self):
+        # The §Perf claim: k=8, any n → ≤ ~4MB per grid step.
+        assert rsr_pallas.vmem_bytes(65536, 8) < 4 * 2**20
+
+    def test_mxu_utilization_model(self):
+        assert rsr_pallas.mxu_utilization_estimate(1024, 8) == pytest.approx(1 / 256)

@@ -1,0 +1,85 @@
+"""Layer-2 model graphs: RSR path vs dense path parity, shapes."""
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref, rsr_pallas
+
+
+def test_dense_matvec():
+    rng = np.random.default_rng(0)
+    v = rng.normal(size=32).astype(np.float32)
+    w = rng.normal(size=(32, 16)).astype(np.float32)
+    (out,) = model.dense_matvec(v, w)
+    np.testing.assert_allclose(np.asarray(out), v @ w, rtol=1e-5)
+
+
+def test_dense_matvec_batched():
+    rng = np.random.default_rng(1)
+    vs = rng.normal(size=(4, 32)).astype(np.float32)
+    w = rng.normal(size=(32, 32)).astype(np.float32)
+    (out,) = model.dense_matvec_batched(vs, w)
+    np.testing.assert_allclose(np.asarray(out), vs @ w, rtol=1e-5)
+
+
+def test_rsr_matvec_graph_matches_dense():
+    rng = np.random.default_rng(2)
+    n, k = 48, 4
+    B = (rng.random((n, n)) < 0.5).astype(np.float32)
+    v = rng.normal(size=n).astype(np.float32)
+    keys, binm, m = rsr_pallas.prepare_binary(B, k)
+    (out,) = model.rsr_matvec(v, keys, binm, k=k)
+    np.testing.assert_allclose(np.asarray(out)[:m], v @ B, rtol=1e-4, atol=1e-4)
+
+
+def test_rsr_matvec_ternary_graph():
+    rng = np.random.default_rng(3)
+    n, k = 40, 4
+    A = rng.integers(-1, 2, (n, n)).astype(np.float32)
+    v = rng.normal(size=n).astype(np.float32)
+    kp, km, binm, m = rsr_pallas.prepare_ternary(A, k)
+    (out,) = model.rsr_matvec_ternary(v, kp, km, binm, k=k)
+    np.testing.assert_allclose(np.asarray(out)[:m], v @ A, rtol=1e-4, atol=1e-4)
+
+
+def test_ffn_rsr_matches_ffn_dense():
+    """The Layer-2 composition check: a SwiGLU block whose three
+    projections run the Pallas kernel must match the dense block."""
+    rng = np.random.default_rng(4)
+    d = ff = 32  # square so one Bin/k serves all three (keys differ)
+    k = 4
+    Wg = (rng.random((d, ff)) < 0.5).astype(np.float32)
+    Wu = (rng.random((d, ff)) < 0.5).astype(np.float32)
+    Wd = (rng.random((ff, d)) < 0.5).astype(np.float32)
+    x = rng.normal(size=d).astype(np.float32)
+
+    keys_g, binm, _ = rsr_pallas.prepare_binary(Wg, k)
+    keys_u, _, _ = rsr_pallas.prepare_binary(Wu, k)
+    keys_d, _, _ = rsr_pallas.prepare_binary(Wd, k)
+
+    (got,) = model.swiglu_ffn_rsr(x, keys_g, keys_u, keys_d, binm, k=k)
+    (expect,) = model.swiglu_ffn_dense(x, Wg, Wu, Wd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect), rtol=1e-3, atol=1e-3)
+
+
+def test_rmsnorm_matches_manual():
+    x = np.array([3.0, 4.0], dtype=np.float32)
+    w = np.array([1.0, 2.0], dtype=np.float32)
+    got = np.asarray(model.rmsnorm(x, w))
+    rms = np.sqrt((x**2).mean() + 1e-6)
+    np.testing.assert_allclose(got, x / rms * w, rtol=1e-5)
+
+
+def test_decoder_halfblock_residual():
+    rng = np.random.default_rng(5)
+    d, ff = 16, 32
+    h = rng.normal(size=d).astype(np.float32)
+    norm_w = np.ones(d, dtype=np.float32)
+    Wg = rng.normal(size=(d, ff)).astype(np.float32)
+    Wu = rng.normal(size=(d, ff)).astype(np.float32)
+    Wd = rng.normal(size=(ff, d)).astype(np.float32)
+    (out,) = model.decoder_ffn_halfblock_dense(h, norm_w, Wg, Wu, Wd)
+    x = np.asarray(model.rmsnorm(h, norm_w))
+    (y,) = model.swiglu_ffn_dense(x, Wg, Wu, Wd)
+    np.testing.assert_allclose(np.asarray(out), h + np.asarray(y), rtol=1e-5)

@@ -1,0 +1,123 @@
+"""Invariants of the pure-numpy reference implementation itself
+(Algorithm 1 structure, paper worked examples, Prop 2.1)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+PAPER_MATRIX = np.array(
+    [
+        [0, 1, 1, 1, 0, 1],
+        [0, 0, 0, 1, 1, 1],
+        [0, 1, 1, 1, 1, 0],
+        [1, 1, 0, 0, 1, 0],
+        [0, 0, 1, 1, 0, 1],
+        [0, 0, 0, 0, 1, 0],
+    ],
+    dtype=np.float32,
+)
+
+
+class TestPaperExamples:
+    def test_example_3_3_permutation(self):
+        # Paper σ = ⟨2,5,6,1,3,4⟩ (1-based) for block 1 of the running
+        # example → 0-based [1,4,5,0,2,3].
+        (sigma, seg), *_ = ref.preprocess(PAPER_MATRIX, 2)
+        np.testing.assert_array_equal(sigma, [1, 4, 5, 0, 2, 3])
+
+    def test_example_3_3_segmentation(self):
+        # Paper Full Segmentation [1,4,6,6] (1-based) → ours 0-based
+        # with sentinel: [0,3,5,5,6].
+        (sigma, seg), *_ = ref.preprocess(PAPER_MATRIX, 2)
+        np.testing.assert_array_equal(seg, [0, 3, 5, 5, 6])
+
+    def test_def_4_1_segmented_sum(self):
+        # v_π = [3,2,4,5,9,1] → SS = [9,14,0,1]; build v so that
+        # v[σ(pos)] = v_π[pos].
+        (sigma, seg), *_ = ref.preprocess(PAPER_MATRIX, 2)
+        v_pi = np.array([3, 2, 4, 5, 9, 1], dtype=np.float32)
+        v = np.zeros(6, dtype=np.float32)
+        v[sigma] = v_pi
+        np.testing.assert_array_equal(
+            ref.segmented_sum(v, sigma, seg), [9, 14, 0, 1]
+        )
+
+    def test_bin_matrix_paper_values(self):
+        np.testing.assert_array_equal(
+            ref.bin_matrix(2), [[0, 0], [0, 1], [1, 0], [1, 1]]
+        )
+        # Bin_[3] row 5 = 101.
+        np.testing.assert_array_equal(ref.bin_matrix(3)[5], [1, 0, 1])
+
+
+class TestStructuralInvariants:
+    @settings(max_examples=30, deadline=None)
+    @given(
+        n=st.integers(4, 80),
+        nb=st.integers(1, 5),
+        k=st.integers(1, 6),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_preprocess_invariants(self, n, nb, k, seed):
+        rng = np.random.default_rng(seed)
+        B = (rng.random((n, nb * k)) < 0.5).astype(np.float32)
+        for sigma, seg in ref.preprocess(B, k):
+            # σ is a bijection.
+            assert sorted(sigma) == list(range(n))
+            # L is monotone with the right endpoints.
+            assert seg[0] == 0 and seg[-1] == n
+            assert (np.diff(seg.astype(np.int64)) >= 0).all()
+            assert len(seg) == 2**k + 1
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        n=st.integers(4, 60),
+        nb=st.integers(1, 5),
+        k=st.integers(1, 5),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_rsr_ref_matches_dense(self, n, nb, k, seed):
+        rng = np.random.default_rng(seed)
+        B = (rng.random((n, nb * k)) < 0.5).astype(np.float32)
+        v = rng.normal(size=n).astype(np.float32)
+        np.testing.assert_allclose(
+            ref.rsr_matvec_ref(v, B, k), v @ B, rtol=1e-3, atol=1e-3
+        )
+
+    def test_prop_2_1(self):
+        rng = np.random.default_rng(0)
+        A = rng.integers(-1, 2, (20, 20)).astype(np.float32)
+        B1, B2 = ref.decompose_ternary(A)
+        np.testing.assert_array_equal(B1 - B2, A)
+        assert ((B1 == 0) | (B1 == 1)).all()
+        assert ((B2 == 0) | (B2 == 1)).all()
+        assert not ((B1 == 1) & (B2 == 1)).any()
+
+    def test_ternary_ref_matches_dense(self):
+        rng = np.random.default_rng(1)
+        A = rng.integers(-1, 2, (48, 24)).astype(np.float32)
+        v = rng.normal(size=48).astype(np.float32)
+        np.testing.assert_allclose(
+            ref.rsr_matvec_ternary_ref(v, A, 4), v @ A, rtol=1e-3, atol=1e-3
+        )
+
+
+class TestErrors:
+    def test_bad_k_rejected(self):
+        with pytest.raises(ValueError):
+            ref.bin_matrix(0)
+        with pytest.raises(ValueError):
+            ref.bin_matrix(17)
+
+    def test_non_divisible_cols_rejected(self):
+        with pytest.raises(ValueError):
+            ref.block_keys(np.zeros((4, 7), dtype=np.float32), 2)
+
+    def test_shape_mismatch_rejected(self):
+        with pytest.raises(ValueError):
+            ref.rsr_matvec_ref(
+                np.zeros(3, np.float32), np.zeros((4, 4), np.float32), 2
+            )

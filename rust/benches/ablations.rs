@@ -1,0 +1,4 @@
+//! `cargo bench --bench ablations` — design-choice ablations (DESIGN.md §5).
+fn main() {
+    rsr::bench::experiments::ablations::run(rsr::bench::full_mode());
+}

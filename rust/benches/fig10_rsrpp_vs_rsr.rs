@@ -1,0 +1,4 @@
+//! `cargo bench --bench fig10_rsrpp_vs_rsr` — regenerates paper Fig 10 / App F.2.
+fn main() {
+    rsr::bench::experiments::fig10::run(rsr::bench::full_mode());
+}

@@ -1,0 +1,4 @@
+//! `cargo bench --bench fig11_blas_vs_rsr` — regenerates paper Fig 11 / App F.3.
+fn main() {
+    rsr::bench::experiments::fig11::run(rsr::bench::full_mode());
+}

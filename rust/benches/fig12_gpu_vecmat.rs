@@ -1,0 +1,4 @@
+//! `cargo bench --bench fig12_gpu_vecmat` — regenerates paper Fig 12 / App F.4.
+fn main() {
+    rsr::bench::experiments::fig12::run(rsr::bench::full_mode());
+}

@@ -1,0 +1,4 @@
+//! `cargo bench --bench fig4_native` — regenerates paper Fig 4.
+fn main() {
+    rsr::bench::experiments::fig4::run(rsr::bench::full_mode());
+}

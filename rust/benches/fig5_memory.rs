@@ -1,0 +1,4 @@
+//! `cargo bench --bench fig5_memory` — regenerates paper Fig 5.
+fn main() {
+    rsr::bench::experiments::fig5::run(rsr::bench::full_mode());
+}

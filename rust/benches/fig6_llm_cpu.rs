@@ -1,0 +1,4 @@
+//! `cargo bench --bench fig6_llm_cpu` — regenerates paper Fig 6.
+fn main() {
+    rsr::bench::experiments::fig6::run(rsr::bench::full_mode());
+}

@@ -1,0 +1,4 @@
+//! `cargo bench --bench fig9_optimal_k` — regenerates paper Fig 9 / App F.1.
+fn main() {
+    rsr::bench::experiments::fig9::run(rsr::bench::full_mode());
+}

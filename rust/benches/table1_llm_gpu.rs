@@ -1,0 +1,4 @@
+//! `cargo bench --bench table1_llm_gpu` — regenerates paper Table 1.
+fn main() {
+    rsr::bench::experiments::table1::run(rsr::bench::full_mode());
+}

@@ -1,0 +1,143 @@
+//! Ablations of our own design choices (DESIGN.md §5 last row):
+//!
+//! 1. **Gather vs scatter** — RSR's permutation+segment (gather) vs the
+//!    tensorized key form (scatter-add): same math, different memory
+//!    access pattern.
+//! 2. **Baseline strength** — paper's dense-loop Standard vs our
+//!    bit-packed word-at-a-time baseline: how much of RSR's win
+//!    survives against a stronger no-preprocessing baseline.
+//! 3. **k sensitivity** — runtime at k* vs k*±2 (how sharp the optimum
+//!    is — relevant to deployments that share one k across layers).
+//! 4. **q-bit extension cost** — per-plane overhead of the App D.3
+//!    generalization (q = 2, 3, 4).
+
+use crate::bench::harness::{measure, ms, write_json, Table};
+use crate::bench::workloads::{binary_workload, SEED};
+use crate::kernels::index::RsrIndex;
+use crate::kernels::optimal_k::{k_max, optimal_k_rsrpp};
+use crate::kernels::qbit::{QbitMatrix, QbitRsrPlan};
+use crate::kernels::rsrpp::RsrPlusPlusPlan;
+use crate::kernels::standard::{packed_mul_binary, standard_mul_binary_u8};
+use crate::kernels::tensorized::TensorizedIndex;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Run all ablations.
+pub fn run(full: bool) {
+    let n = if full { 8192 } else { 2048 };
+    let reps = if full { 8 } else { 4 };
+    let k = optimal_k_rsrpp(n);
+    let (b, v) = binary_workload(n, SEED ^ 0xAB1A);
+    let mut out = vec![0.0f32; n];
+    let mut json = Vec::new();
+
+    // 1. gather vs scatter
+    let mut gather = RsrPlusPlusPlan::new(RsrIndex::preprocess(&b, k)).unwrap();
+    let scatter = TensorizedIndex::preprocess(&b, k);
+    let m_gather = measure("gather", 1, reps, || {
+        gather.execute(&v, &mut out).unwrap();
+    });
+    let m_scatter = measure("scatter", 1, reps, || {
+        scatter.execute(&v, &mut out).unwrap();
+    });
+    let mut t1 = Table::new(&["variant", "time", "index bytes"]);
+    t1.row(&[
+        "gather (σ + L, RSR++)".into(),
+        ms(&m_gather),
+        gather.index_bytes().to_string(),
+    ]);
+    t1.row(&["scatter (keys, tensorized)".into(), ms(&m_scatter), scatter.bytes().to_string()]);
+    t1.print(&format!("Ablation 1 — gather vs scatter segmented sum (n={n}, k={k})"));
+    json.push(Json::obj(vec![
+        ("ablation", Json::str("gather_vs_scatter")),
+        ("gather_ms", Json::num(m_gather.mean_ms())),
+        ("scatter_ms", Json::num(m_scatter.mean_ms())),
+    ]));
+
+    // 2. baseline strength
+    let dense = b.to_dense();
+    let m_dense = measure("std dense", 1, reps, || {
+        standard_mul_binary_u8(&v, &dense, n, n)
+    });
+    let m_packed = measure("std packed", 1, reps, || packed_mul_binary(&v, &b));
+    let mut t2 = Table::new(&["baseline", "time", "RSR++ speedup vs it"]);
+    t2.row(&[
+        "dense u8 loop (paper's Standard)".into(),
+        ms(&m_dense),
+        format!("{:.1}x", m_dense.summary.mean() / m_gather.summary.mean()),
+    ]);
+    t2.row(&[
+        "bit-packed word loop (stronger)".into(),
+        ms(&m_packed),
+        format!("{:.1}x", m_packed.summary.mean() / m_gather.summary.mean()),
+    ]);
+    t2.print(&format!("Ablation 2 — baseline strength (n={n})"));
+    json.push(Json::obj(vec![
+        ("ablation", Json::str("baseline_strength")),
+        ("dense_ms", Json::num(m_dense.mean_ms())),
+        ("packed_ms", Json::num(m_packed.mean_ms())),
+        ("rsrpp_ms", Json::num(m_gather.mean_ms())),
+    ]));
+
+    // 3. k sensitivity around k*
+    let mut t3 = Table::new(&["k", "time", "Δ vs k*"]);
+    let mut base_ms = 0.0;
+    for dk in [-2i32, -1, 0, 1, 2] {
+        let kk = (k as i32 + dk).clamp(1, k_max(n) as i32) as usize;
+        let mut plan = RsrPlusPlusPlan::new(RsrIndex::preprocess(&b, kk)).unwrap();
+        let m = measure(format!("k={kk}"), 1, reps, || {
+            plan.execute(&v, &mut out).unwrap();
+        });
+        if dk == 0 {
+            base_ms = m.mean_ms();
+        }
+        let delta = if base_ms > 0.0 {
+            format!("{:+.0}%", (m.mean_ms() - base_ms) / base_ms * 100.0)
+        } else {
+            "-".into()
+        };
+        t3.row(&[
+            format!("{kk}{}", if dk == 0 { " (k*)" } else { "" }),
+            ms(&m),
+            delta,
+        ]);
+    }
+    t3.print(&format!("Ablation 3 — k sensitivity around k*={k} (n={n})"));
+
+    // 4. q-bit extension cost
+    let qn = if full { 2048 } else { 1024 };
+    let mut rng = Rng::new(SEED ^ 0x9B17);
+    let qv = rng.f32_vec(qn, -1.0, 1.0);
+    let mut t4 = Table::new(&["q", "planes", "time", "vs q=2"]);
+    let mut q2_ms = 0.0;
+    for q in [2u32, 3, 4] {
+        let w = QbitMatrix::random(qn, qn, q, &mut rng);
+        let mut plan = QbitRsrPlan::preprocess(&w, optimal_k_rsrpp(qn)).unwrap();
+        let mut qout = vec![0.0f32; qn];
+        let m = measure(format!("q={q}"), 1, reps, || {
+            plan.execute(&qv, &mut qout).unwrap();
+        });
+        if q == 2 {
+            q2_ms = m.mean_ms();
+        }
+        t4.row(&[
+            q.to_string(),
+            (2 * (q - 1)).to_string(),
+            ms(&m),
+            format!("{:.1}x", m.mean_ms() / q2_ms),
+        ]);
+        json.push(Json::obj(vec![
+            ("ablation", Json::str("qbit")),
+            ("q", Json::num(q as f64)),
+            ("ms", Json::num(m.mean_ms())),
+        ]));
+    }
+    t4.print(&format!("Ablation 4 — q-bit generalization cost (n={qn})"));
+    println!(
+        "\nexpected: scatter ≈ gather (same O(n) pass, no σ storage); \
+         packed baseline narrows but does not erase RSR's win; runtime \
+         is flat within ±1 of k*; q-bit cost grows ~linearly in plane \
+         count 2(q−1)"
+    );
+    write_json("ablations", &Json::obj(vec![("entries", Json::Arr(json))]));
+}

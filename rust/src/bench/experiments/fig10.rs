@@ -1,0 +1,58 @@
+//! Fig 10 / App F.2: RSR++ vs RSR head-to-head (native), reporting the
+//! paper's improvement percentage `(T(RSR) − T(RSR++)) / T(RSR) × 100`.
+//! Paper's headline: up to 25% improvement.
+
+use crate::bench::harness::{measure, ms, write_json, Table};
+use crate::bench::workloads::{binary_workload, fig4_sizes, SEED};
+use crate::kernels::index::RsrIndex;
+use crate::kernels::optimal_k::optimal_k_rsrpp;
+use crate::kernels::rsr::RsrPlan;
+use crate::kernels::rsrpp::RsrPlusPlusPlan;
+use crate::util::json::Json;
+
+/// Run the Fig 10 reproduction.
+pub fn run(full: bool) {
+    let sizes = fig4_sizes(full);
+    let reps = if full { 10 } else { 5 };
+    let mut table = Table::new(&["n", "k", "RSR", "RSR++", "improvement %"]);
+    let mut json_rows = Vec::new();
+
+    for &n in &sizes {
+        // Same k for both (isolates the step-2 subroutine difference —
+        // the comparison Fig 10 makes).
+        let k = optimal_k_rsrpp(n);
+        let (b, v) = binary_workload(n, SEED ^ n as u64);
+        let idx = RsrIndex::preprocess(&b, k);
+        let mut rsr = RsrPlan::new(idx.clone()).unwrap();
+        let mut rsrpp = RsrPlusPlusPlan::new(idx).unwrap();
+        let mut out = vec![0.0f32; n];
+
+        let m_rsr = measure(format!("rsr n={n}"), 1, reps, || {
+            rsr.execute(&v, &mut out).unwrap();
+        });
+        let m_pp = measure(format!("rsr++ n={n}"), 1, reps, || {
+            rsrpp.execute(&v, &mut out).unwrap();
+        });
+        let improvement =
+            (m_rsr.summary.mean() - m_pp.summary.mean()) / m_rsr.summary.mean() * 100.0;
+
+        table.row(&[
+            format!("2^{}", n.trailing_zeros()),
+            k.to_string(),
+            ms(&m_rsr),
+            ms(&m_pp),
+            format!("{improvement:.1}%"),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("n", Json::num(n as f64)),
+            ("k", Json::num(k as f64)),
+            ("rsr_ms", Json::num(m_rsr.mean_ms())),
+            ("rsrpp_ms", Json::num(m_pp.mean_ms())),
+            ("improvement_pct", Json::num(improvement)),
+        ]));
+    }
+
+    table.print("Fig 10 — RSR++ vs RSR (same index, step-2 subroutine swap)");
+    println!("\npaper reference: RSR++ up to 25% faster than RSR");
+    write_json("fig10", &Json::obj(vec![("rows", Json::Arr(json_rows))]));
+}

@@ -1,0 +1,122 @@
+//! Fig 4: native RSR / RSR++ / Standard on binary matrices,
+//! `n = 2^11..2^16`, optimal k per n, average of 10 runs.
+//! Paper's headline: up to 29× speedup at `n = 2^16`.
+
+use std::time::Duration;
+
+use crate::bench::harness::{iters_for, measure, ms, write_json, Table};
+use crate::bench::workloads::{binary_workload, fig4_sizes, SEED};
+use crate::kernels::index::RsrIndex;
+use crate::kernels::optimal_k::{optimal_k_rsr, optimal_k_rsrpp};
+use crate::kernels::rsr::RsrPlan;
+use crate::kernels::rsrpp::RsrPlusPlusPlan;
+use crate::kernels::standard::standard_mul_binary_u8;
+use crate::util::json::Json;
+use crate::util::timer::time;
+
+/// Probe k in a window around the analytic optimum and return the
+/// empirically fastest (App F.1's procedure, trimmed to a window so
+/// Fig 4 setup stays cheap; the full sweep lives in the fig9 bench).
+fn empirical_k(
+    n: usize,
+    analytic: usize,
+    b: &crate::kernels::BinaryMatrix,
+    v: &[f32],
+    plusplus: bool,
+) -> usize {
+    use crate::kernels::optimal_k::k_max;
+    let lo = analytic.saturating_sub(4).max(1);
+    let hi = (analytic + 1).min(k_max(n));
+    let mut best = (f64::INFINITY, analytic);
+    let mut out = vec![0.0f32; n];
+    for k in lo..=hi {
+        let idx = RsrIndex::preprocess(b, k);
+        let secs = if plusplus {
+            let mut plan = RsrPlusPlusPlan::new(idx).unwrap();
+            plan.execute(v, &mut out).unwrap(); // warm
+            let t0 = std::time::Instant::now();
+            plan.execute(v, &mut out).unwrap();
+            t0.elapsed().as_secs_f64()
+        } else {
+            let mut plan = RsrPlan::new(idx).unwrap();
+            plan.execute(v, &mut out).unwrap();
+            let t0 = std::time::Instant::now();
+            plan.execute(v, &mut out).unwrap();
+            t0.elapsed().as_secs_f64()
+        };
+        if secs < best.0 {
+            best = (secs, k);
+        }
+    }
+    best.1
+}
+
+/// Run the Fig 4 reproduction.
+pub fn run(full: bool) {
+    let sizes = fig4_sizes(full);
+    let reps = if full { 10 } else { 5 }; // paper: average of 10
+    let mut table = Table::new(&[
+        "n", "k*", "Standard", "RSR", "RSR++", "speedup (RSR++ vs Std)",
+    ]);
+    let mut json_rows = Vec::new();
+
+    for &n in &sizes {
+        let (b, v) = binary_workload(n, SEED ^ n as u64);
+        // The paper uses the *empirically* optimal k per n (App F.1).
+        // The analytic argmin (Eq 6/7) ignores cache effects, so probe
+        // a window around it and keep the fastest.
+        let k_rsr = empirical_k(n, optimal_k_rsr(n), &b, &v, false);
+        let k_pp = empirical_k(n, optimal_k_rsrpp(n), &b, &v, true);
+
+        // Preprocess (excluded from inference timing, as in the paper).
+        let mut rsr = RsrPlan::new(RsrIndex::preprocess(&b, k_rsr)).unwrap();
+        let mut rsrpp = RsrPlusPlusPlan::new(RsrIndex::preprocess(&b, k_pp)).unwrap();
+
+        // The paper's Standard baseline: dense byte array double loop.
+        let dense = b.to_dense();
+        let mut out = vec![0.0f32; n];
+
+        // Adaptive reps so quick mode stays quick at large n.
+        let (_, single) = time(|| {
+            out.copy_from_slice(&standard_mul_binary_u8(&v, &dense, n, n));
+        });
+        let std_iters = iters_for(single, Duration::from_secs(8), 3, reps);
+
+        let m_std = measure(format!("standard n={n}"), 1, std_iters, || {
+            standard_mul_binary_u8(&v, &dense, n, n)
+        });
+        let m_rsr = measure(format!("rsr n={n}"), 1, reps, || {
+            rsr.execute(&v, &mut out).unwrap();
+        });
+        let m_pp = measure(format!("rsr++ n={n}"), 1, reps, || {
+            rsrpp.execute(&v, &mut out).unwrap();
+        });
+
+        let speedup = m_std.summary.mean() / m_pp.summary.mean();
+        table.row(&[
+            format!("2^{}", n.trailing_zeros()),
+            format!("{k_rsr}/{k_pp}"),
+            ms(&m_std),
+            ms(&m_rsr),
+            ms(&m_pp),
+            format!("{speedup:.1}x"),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("n", Json::num(n as f64)),
+            ("k_rsr", Json::num(k_rsr as f64)),
+            ("k_rsrpp", Json::num(k_pp as f64)),
+            ("standard_ms", Json::num(m_std.mean_ms())),
+            ("rsr_ms", Json::num(m_rsr.mean_ms())),
+            ("rsrpp_ms", Json::num(m_pp.mean_ms())),
+            ("speedup", Json::num(speedup)),
+        ]));
+    }
+
+    table.print("Fig 4 — native binary matmul: RSR/RSR++/Standard");
+    println!(
+        "\npaper reference: RSR++ up to 29x over Standard at n=2^16 \
+         (C++ on the authors' Xeon; shape — growing speedup in n — is \
+         the reproduction target)"
+    );
+    write_json("fig4", &Json::obj(vec![("rows", Json::Arr(json_rows))]));
+}

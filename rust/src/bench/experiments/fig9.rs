@@ -1,0 +1,89 @@
+//! Fig 9 / App F.1: finding the optimal k — runtime vs k for each n,
+//! for RSR (9a) and RSR++ (9b). The red-dot k* per n should grow
+//! with n and match the analytic argmin of Eq 6/7 within ±1–2.
+
+use crate::bench::harness::{write_json, Table};
+use crate::bench::workloads::{binary_workload, SEED};
+use crate::kernels::index::RsrIndex;
+use crate::kernels::optimal_k::{
+    empirical_k_sweep, k_max, optimal_k_rsr, optimal_k_rsrpp,
+};
+use crate::kernels::rsr::RsrPlan;
+use crate::kernels::rsrpp::RsrPlusPlusPlan;
+use crate::util::json::Json;
+
+fn sizes(full: bool) -> Vec<usize> {
+    if full {
+        vec![1 << 11, 1 << 12, 1 << 13, 1 << 14]
+    } else {
+        vec![1 << 11, 1 << 12]
+    }
+}
+
+/// Run the Fig 9 reproduction (both panels).
+pub fn run(full: bool) {
+    let reps = if full { 3 } else { 2 };
+    let mut json_entries = Vec::new();
+
+    for (algo, analytic) in [
+        ("RSR (9a)", optimal_k_rsr as fn(usize) -> usize),
+        ("RSR++ (9b)", optimal_k_rsrpp as fn(usize) -> usize),
+    ] {
+        let mut table = Table::new(&["n", "k sweep (ms by k)", "k* measured", "k* analytic"]);
+        for &n in &sizes(full) {
+            let (b, v) = binary_workload(n, SEED ^ n as u64);
+            let mut out = vec![0.0f32; n];
+            // Pre-build one plan per k so the sweep times inference only.
+            let is_rsr = algo.starts_with("RSR (");
+            let mut plans_rsr: Vec<Option<RsrPlan>> = Vec::new();
+            let mut plans_pp: Vec<Option<RsrPlusPlusPlan>> = Vec::new();
+            for k in 1..=k_max(n) {
+                if is_rsr {
+                    plans_rsr.push(Some(
+                        RsrPlan::new(RsrIndex::preprocess(&b, k)).unwrap(),
+                    ));
+                    plans_pp.push(None);
+                } else {
+                    plans_pp.push(Some(
+                        RsrPlusPlusPlan::new(RsrIndex::preprocess(&b, k)).unwrap(),
+                    ));
+                    plans_rsr.push(None);
+                }
+            }
+            let (k_opt, times) = empirical_k_sweep(n, reps, |k| {
+                if is_rsr {
+                    plans_rsr[k - 1].as_mut().unwrap().execute(&v, &mut out).unwrap();
+                } else {
+                    plans_pp[k - 1].as_mut().unwrap().execute(&v, &mut out).unwrap();
+                }
+            });
+            let sweep_str = times
+                .iter()
+                .map(|(k, ms)| format!("{k}:{ms:.1}"))
+                .collect::<Vec<_>>()
+                .join(" ");
+            table.row(&[
+                format!("2^{}", n.trailing_zeros()),
+                sweep_str,
+                k_opt.to_string(),
+                analytic(n).to_string(),
+            ]);
+            json_entries.push(Json::obj(vec![
+                ("algo", Json::str(algo)),
+                ("n", Json::num(n as f64)),
+                ("k_opt_measured", Json::num(k_opt as f64)),
+                ("k_opt_analytic", Json::num(analytic(n) as f64)),
+                (
+                    "sweep_ms",
+                    Json::nums(times.iter().map(|&(_, ms)| ms).collect::<Vec<_>>()),
+                ),
+            ]));
+        }
+        table.print(&format!("Fig 9 — optimal k sweep: {algo}"));
+    }
+    println!(
+        "\npaper reference: u-shaped runtime in k; k* grows with n \
+         (e.g. k*≈10–14 at n=2^13..2^16 for RSR++)"
+    );
+    write_json("fig9", &Json::obj(vec![("entries", Json::Arr(json_entries))]));
+}

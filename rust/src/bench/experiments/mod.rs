@@ -1,0 +1,15 @@
+//! One driver per paper table/figure (see DESIGN.md §5 for the
+//! experiment index) plus our own ablations. Each `run(full)` prints a
+//! markdown table mirroring the paper's rows and writes a JSON record
+//! under `target/bench-results/`.
+
+pub mod ablations;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig9;
+pub mod perf;
+pub mod table1;

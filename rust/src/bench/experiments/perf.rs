@@ -1,0 +1,94 @@
+//! §Perf driver: warm, repeated measurements of every ternary backend
+//! across sizes — the before/after evidence for EXPERIMENTS.md §Perf.
+//!
+//! "Before" = the straightforward gather pipeline (`rsr`, `rsr++`);
+//! "after" = the fused scatter + single-fold hot path (`rsr-fused`).
+//! Baselines (`standard`, `standard-packed`) bracket the comparison.
+
+use crate::bench::harness::{measure, ms, write_json, Table};
+use crate::bench::workloads::{ternary_workload, SEED};
+use crate::kernels::optimal_k::{k_max, optimal_k_rsrpp};
+use crate::kernels::Backend;
+use crate::model::bitlinear::BitLinear;
+use crate::util::json::Json;
+
+/// Pick the empirically fastest k for a backend at size n.
+fn best_k(n: usize, backend: Backend, a: &crate::kernels::TernaryMatrix, v: &[f32]) -> usize {
+    let analytic = optimal_k_rsrpp(n);
+    let lo = analytic.saturating_sub(4).max(1);
+    let hi = (analytic + 1).min(k_max(n));
+    let mut out = vec![0.0f32; n];
+    let mut best = (f64::INFINITY, analytic);
+    for k in lo..=hi {
+        let mut layer = BitLinear::new(a.clone(), 1.0, backend, k).unwrap();
+        layer.forward(v, &mut out).unwrap(); // warm
+        let t0 = std::time::Instant::now();
+        layer.forward(v, &mut out).unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        if secs < best.0 {
+            best = (secs, k);
+        }
+    }
+    best.1
+}
+
+/// Run the §Perf comparison.
+pub fn run(full: bool) {
+    let sizes: Vec<usize> =
+        if full { vec![2048, 4096, 8192] } else { vec![2048, 4096] };
+    let reps = if full { 10 } else { 6 };
+    let backends = [
+        Backend::Standard,
+        Backend::StandardPacked,
+        Backend::Rsr,
+        Backend::RsrPlusPlus,
+        Backend::Tensorized,
+        Backend::RsrFused,
+    ];
+    let mut table = Table::new(&["n", "backend", "k", "time", "vs rsr++"]);
+    let mut json_rows = Vec::new();
+
+    for &n in &sizes {
+        let (a, v) = ternary_workload(n, SEED ^ n as u64);
+        let mut out = vec![0.0f32; n];
+        let mut rsrpp_mean = 0.0;
+        for backend in backends {
+            let k = match backend {
+                Backend::Standard | Backend::StandardPacked => 0,
+                _ => best_k(n, backend, &a, &v),
+            };
+            let mut layer = BitLinear::new(a.clone(), 1.0, backend, k.max(1)).unwrap();
+            let m = measure(format!("{} n={n}", backend.name()), 2, reps, || {
+                layer.forward(&v, &mut out).unwrap();
+            });
+            if backend == Backend::RsrPlusPlus {
+                rsrpp_mean = m.summary.mean();
+            }
+            let rel = if rsrpp_mean > 0.0 {
+                format!("{:.2}x", rsrpp_mean / m.summary.mean())
+            } else {
+                "-".into()
+            };
+            table.row(&[
+                format!("2^{}", n.trailing_zeros()),
+                backend.name().to_string(),
+                if k == 0 { "-".into() } else { k.to_string() },
+                ms(&m),
+                rel,
+            ]);
+            json_rows.push(Json::obj(vec![
+                ("n", Json::num(n as f64)),
+                ("backend", Json::str(backend.name())),
+                ("k", Json::num(k as f64)),
+                ("ms", Json::num(m.mean_ms())),
+            ]));
+        }
+    }
+    table.print("§Perf — ternary v·A across backends (warm, empirical k)");
+    println!(
+        "\n'vs rsr++' > 1 means faster than the unfused RSR++ gather \
+         pipeline; rsr-fused is the optimized hot path (scatter keys, \
+         shared pass over v, single fold)"
+    );
+    write_json("perf", &Json::obj(vec![("rows", Json::Arr(json_rows))]));
+}

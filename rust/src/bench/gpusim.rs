@@ -1,0 +1,206 @@
+//! GPU cost-model simulator — the DESIGN.md substitution for the
+//! paper's NVIDIA Tesla T4 experiments (Table 1, Fig 12).
+//!
+//! No GPU exists in this environment, so we model the two PyTorch
+//! implementations the paper timed, with a roofline latency model
+//! calibrated to T4-class hardware (320 GB/s, ~10µs eager-mode launch
+//! overhead). Two comparisons appear in the paper and they have
+//! different baselines — we model each explicitly:
+//!
+//! **Table 1 (BitLinear level, ~2.5×).** The Standard path is
+//! PyTorch's 1.58-bit `BitLinear.forward`: read ternary weights
+//! (int8, `n²` bytes), dequantize+scale to fp16 (write `2n²`, read
+//! back `2n²`), then a cuBLAS GEMV — three kernels. The RSR path is a
+//! single batched matmul over the *precomputed* `N = M × Bin_[k]`
+//! tensor (App E.2 — same element count as the weight matrix, fp16,
+//! `2n²` bytes, one kernel). Asymptotic ratio
+//! `(3/e_ew + 2/e_gemv) / (2/e_gemv) ≈ 2.7`, matching the paper's
+//! 1.7–2.7×.
+//!
+//! **Fig 12 (bare vecmat, ≤2× and shrinking).** The baseline is a bare
+//! cuBLAS GEMV (no dequant pass). RSR's advantage there comes from the
+//! batched block layout keeping the working set cache/coalescing
+//! friendly at small `n`; the paper itself observes the advantage
+//! *decays with n* as application-level overhead grows ("the overhead
+//! of application-level optimization reducing the speedup"). We model
+//! that with an effective-bandwidth factor `β(n) = β₀·√(n/2^11)`
+//! calibrated to the paper's endpoints (≈2× at 2^11 → ≈1.1× at 2^14).
+//!
+//! Absolute µs come from calibration, not measurement; who-wins, the
+//! rough factor, and the trend in `n` are the reproduction targets.
+//! [`measured_parallel_speedup`] additionally runs the *real*
+//! tensorized kernel across CPU threads so the "block decomposition
+//! parallelizes" claim is backed by a measurement on this machine.
+
+use std::time::Duration;
+
+/// T4-class device parameters (fp16 data path).
+#[derive(Debug, Clone, Copy)]
+pub struct GpuParams {
+    /// Peak memory bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// Kernel launch + eager-mode dispatch overhead per kernel.
+    pub launch_overhead: Duration,
+    /// Elementwise-kernel efficiency (fraction of peak BW).
+    pub elementwise_eff: f64,
+    /// GEMV efficiency (fraction of peak BW for batch-1 matmul).
+    pub gemv_eff: f64,
+    /// Fig 12 RSR effective-bandwidth factor at n = 2^11 (β₀ < 1 means
+    /// *faster* than the plain GEMV — cache-resident index blocks).
+    pub rsr_beta0: f64,
+}
+
+impl Default for GpuParams {
+    fn default() -> Self {
+        Self {
+            mem_bw: 320e9,
+            launch_overhead: Duration::from_micros(10),
+            elementwise_eff: 0.55,
+            gemv_eff: 0.65,
+            rsr_beta0: 0.31,
+        }
+    }
+}
+
+fn gemv_secs(p: &GpuParams, bytes: f64) -> f64 {
+    bytes / (p.mem_bw * p.gemv_eff)
+}
+
+fn elementwise_secs(p: &GpuParams, bytes: f64) -> f64 {
+    bytes / (p.mem_bw * p.elementwise_eff)
+}
+
+// ---------------------------------------------------------------- Table 1
+
+/// Standard `BitLinear.forward` latency (dequant + GEMV, 3 kernels).
+pub fn standard_latency(p: &GpuParams, n_in: usize, n_out: usize) -> Duration {
+    let nn = n_in as f64 * n_out as f64;
+    // int8 read + fp16 write, then fp16 read by the GEMV.
+    let dequant = elementwise_secs(p, 3.0 * nn);
+    let gemv = gemv_secs(p, 2.0 * nn);
+    Duration::from_secs_f64(dequant + gemv) + 3 * p.launch_overhead
+}
+
+/// RSR tensorized latency (single bmm over precomputed `N`, fp16).
+pub fn rsr_latency(p: &GpuParams, n_in: usize, n_out: usize) -> Duration {
+    let nn = n_in as f64 * n_out as f64;
+    Duration::from_secs_f64(gemv_secs(p, 2.0 * nn)) + p.launch_overhead
+}
+
+/// A model layer shape (for Table 1's per-model latency).
+#[derive(Debug, Clone, Copy)]
+pub struct LayerShape {
+    /// Input width.
+    pub n_in: usize,
+    /// Output width.
+    pub n_out: usize,
+}
+
+/// Average per-BitLinear-call latency across a model's layer shapes —
+/// what Table 1 reports (µs per fully-connected forward).
+pub fn model_latency_us(p: &GpuParams, shapes: &[LayerShape], rsr: bool) -> f64 {
+    let total: f64 = shapes
+        .iter()
+        .map(|s| {
+            let d = if rsr {
+                rsr_latency(p, s.n_in, s.n_out)
+            } else {
+                standard_latency(p, s.n_in, s.n_out)
+            };
+            d.as_secs_f64()
+        })
+        .sum();
+    total / shapes.len() as f64 * 1e6
+}
+
+// ---------------------------------------------------------------- Fig 12
+
+/// Fig 12 baseline: bare cuBLAS GEMV over fp16 ternary weights.
+pub fn vecmat_standard_latency(p: &GpuParams, n: usize) -> Duration {
+    let nn = n as f64 * n as f64;
+    Duration::from_secs_f64(gemv_secs(p, 2.0 * nn)) + p.launch_overhead
+}
+
+/// Fig 12 RSR: batched one-hot form with the calibrated decaying
+/// advantage `β(n) = β₀ · √(n / 2^11)` (capped at 1.05 — the paper
+/// never shows RSR losing in the measured range).
+pub fn vecmat_rsr_latency(p: &GpuParams, n: usize) -> Duration {
+    let nn = n as f64 * n as f64;
+    let beta = (p.rsr_beta0 * (n as f64 / 2048.0).sqrt()).min(1.05);
+    Duration::from_secs_f64(gemv_secs(p, 2.0 * nn) * beta) + 2 * p.launch_overhead
+}
+
+/// Simulated Fig 12 speedup for a square `n×n` product.
+pub fn speedup(p: &GpuParams, n: usize) -> f64 {
+    vecmat_standard_latency(p, n).as_secs_f64() / vecmat_rsr_latency(p, n).as_secs_f64()
+}
+
+/// Measured CPU-thread scaling of the real tensorized kernel — the
+/// hardware-independent evidence behind the simulated parallel claim.
+/// Returns (threads, mean_ms) pairs.
+pub fn measured_parallel_speedup(n: usize, k: usize, threads: &[usize]) -> Vec<(usize, f64)> {
+    use crate::bench::harness::measure;
+    use crate::bench::workloads::binary_workload;
+    use crate::kernels::tensorized::TensorizedIndex;
+
+    let (b, v) = binary_workload(n, 0xA11E1);
+    let idx = TensorizedIndex::preprocess(&b, k);
+    let mut out = vec![0.0f32; n];
+    threads
+        .iter()
+        .map(|&t| {
+            let m = measure(format!("tensorized t={t}"), 1, 5, || {
+                idx.execute_parallel(&v, &mut out, t).unwrap();
+            });
+            (t, m.mean_ms())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig12_speedup_in_band_and_shrinking() {
+        let p = GpuParams::default();
+        let s11 = speedup(&p, 1 << 11);
+        let s14 = speedup(&p, 1 << 14);
+        // Paper: ~2x at 2^11, approaching 1x by 2^14.
+        assert!((1.5..2.6).contains(&s11), "s11 = {s11}");
+        assert!((0.95..1.5).contains(&s14), "s14 = {s14}");
+        assert!(s11 > s14, "advantage must shrink with n");
+    }
+
+    #[test]
+    fn table1_magnitudes_match_paper_band() {
+        // Paper Table 1: Standard 364–560µs, RSR 206–225µs (~2.5x).
+        let p = GpuParams::default();
+        let llama = [
+            LayerShape { n_in: 4096, n_out: 4096 },
+            LayerShape { n_in: 4096, n_out: 8192 },
+            LayerShape { n_in: 8192, n_out: 4096 },
+        ];
+        let std_us = model_latency_us(&p, &llama, false);
+        let rsr_us = model_latency_us(&p, &llama, true);
+        assert!((150.0..900.0).contains(&std_us), "std {std_us}µs");
+        assert!((80.0..400.0).contains(&rsr_us), "rsr {rsr_us}µs");
+        let ratio = std_us / rsr_us;
+        assert!((1.7..3.2).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn latencies_scale_with_size() {
+        let p = GpuParams::default();
+        assert!(standard_latency(&p, 4096, 4096) > standard_latency(&p, 1024, 1024));
+        assert!(rsr_latency(&p, 4096, 4096) > rsr_latency(&p, 1024, 1024));
+        assert!(vecmat_rsr_latency(&p, 4096) > vecmat_rsr_latency(&p, 2048));
+    }
+
+    #[test]
+    fn measured_parallel_speedup_runs() {
+        let results = measured_parallel_speedup(512, 6, &[1, 2]);
+        assert_eq!(results.len(), 2);
+        assert!(results.iter().all(|&(_, ms)| ms > 0.0));
+    }
+}

@@ -1,0 +1,174 @@
+//! Timing harness and report formatting (the criterion substitute).
+
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Result of timing one configuration.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Label (e.g. "rsr++ n=4096").
+    pub label: String,
+    /// Per-iteration wall times.
+    pub summary: Summary,
+}
+
+impl Measurement {
+    /// Mean milliseconds.
+    pub fn mean_ms(&self) -> f64 {
+        self.summary.mean() * 1e3
+    }
+
+    /// Sample stddev in milliseconds.
+    pub fn std_ms(&self) -> f64 {
+        self.summary.stddev() * 1e3
+    }
+}
+
+/// Time `f` with `warmup` throwaway runs then `iters` measured runs.
+pub fn measure<T>(
+    label: impl Into<String>,
+    warmup: usize,
+    iters: usize,
+    mut f: impl FnMut() -> T,
+) -> Measurement {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut summary = Summary::new();
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed();
+        std::hint::black_box(&out);
+        summary.push(dt.as_secs_f64());
+    }
+    Measurement { label: label.into(), summary }
+}
+
+/// Adaptive iteration count: aim for ~`budget` total, bounded.
+pub fn iters_for(single_run: Duration, budget: Duration, min: usize, max: usize) -> usize {
+    if single_run.is_zero() {
+        return max;
+    }
+    let n = (budget.as_secs_f64() / single_run.as_secs_f64()) as usize;
+    n.clamp(min, max)
+}
+
+/// An aligned text table writer for bench reports (markdown-flavored so
+/// EXPERIMENTS.md can embed the output verbatim).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Table with the given column headers.
+    pub fn new(headers: &[&str]) -> Self {
+        Self { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row (must match the header arity).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render as a markdown table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row.iter()) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths.iter()) {
+                s.push_str(&format!(" {c:<w$} |"));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    /// Print to stdout with a title.
+    pub fn print(&self, title: &str) {
+        println!("\n## {title}\n");
+        print!("{}", self.render());
+    }
+}
+
+/// Write a bench result JSON under `target/bench-results/<name>.json`.
+pub fn write_json(name: &str, json: &Json) {
+    let dir = std::path::Path::new("target/bench-results");
+    if std::fs::create_dir_all(dir).is_ok() {
+        let _ = std::fs::write(dir.join(format!("{name}.json")), json.to_string());
+    }
+}
+
+/// Format a mean ± std pair in ms.
+pub fn ms(m: &Measurement) -> String {
+    if m.mean_ms() < 0.1 {
+        format!("{:.1}±{:.1}µs", m.mean_ms() * 1e3, m.std_ms() * 1e3)
+    } else {
+        format!("{:.2}±{:.2}ms", m.mean_ms(), m.std_ms())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_runs_and_records() {
+        let m = measure("t", 1, 5, || (0..100).sum::<u64>());
+        assert_eq!(m.summary.len(), 5);
+        assert!(m.mean_ms() >= 0.0);
+    }
+
+    #[test]
+    fn iters_for_clamps() {
+        assert_eq!(
+            iters_for(Duration::from_millis(100), Duration::from_secs(1), 3, 50),
+            10
+        );
+        assert_eq!(
+            iters_for(Duration::from_millis(1), Duration::from_secs(10), 3, 50),
+            50
+        );
+        assert_eq!(
+            iters_for(Duration::from_secs(10), Duration::from_secs(1), 3, 50),
+            3
+        );
+    }
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = Table::new(&["n", "time"]);
+        t.row(&["1024".into(), "1.5ms".into()]);
+        let r = t.render();
+        assert!(r.contains("| n    | time  |"));
+        assert!(r.contains("| 1024 | 1.5ms |"));
+        assert!(r.lines().count() == 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["x".into()]);
+    }
+}

@@ -1,0 +1,21 @@
+//! The benchmark harness regenerating every table and figure in the
+//! paper's evaluation section (see DESIGN.md §5 for the index).
+//!
+//! criterion is unavailable offline; [`harness`] provides warmup +
+//! repeated timing + summary statistics + aligned table printing, and
+//! each `cargo bench` target (`rust/benches/*.rs`, `harness = false`)
+//! calls one function from [`experiments`].
+//!
+//! Default runs use trimmed size ranges so `cargo bench` completes in
+//! minutes; set `BENCH_FULL=1` for the paper's full ranges
+//! (`n = 2^11..2^16` in Fig 4).
+
+pub mod experiments;
+pub mod gpusim;
+pub mod harness;
+pub mod workloads;
+
+/// True when the full (paper-range) benches were requested.
+pub fn full_mode() -> bool {
+    std::env::var("BENCH_FULL").map(|v| v == "1" || v == "true").unwrap_or(false)
+}

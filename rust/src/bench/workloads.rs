@@ -1,0 +1,65 @@
+//! Workload generation shared by the experiment drivers: the paper's
+//! size ranges, seeded random matrices and vectors.
+
+use crate::kernels::{BinaryMatrix, TernaryMatrix};
+use crate::util::rng::Rng;
+
+/// Canonical bench seed (all experiments are reproducible).
+pub const SEED: u64 = 0x5EED_2025;
+
+/// Fig 4's size range: full = `2^11..=2^16`, quick = `2^11..=2^13`.
+pub fn fig4_sizes(full: bool) -> Vec<usize> {
+    let max_pow = if full { 16 } else { 13 };
+    (11..=max_pow).map(|p| 1usize << p).collect()
+}
+
+/// Fig 11's NumPy-comparison range: full = `2^11..=2^15` (paper),
+/// quick = `2^11..=2^12` — capped by what the AOT artifacts provide.
+pub fn fig11_sizes(full: bool) -> Vec<usize> {
+    let max_pow = if full { 12 } else { 11 };
+    (11..=max_pow).map(|p| 1usize << p).collect()
+}
+
+/// Fig 12's GPU range: `2^11..=2^14`.
+pub fn fig12_sizes() -> Vec<usize> {
+    (11..=14).map(|p| 1usize << p).collect()
+}
+
+/// Random binary matrix + input vector for size `n` (density 0.5,
+/// values uniform in [-1, 1) like the paper's random inputs).
+pub fn binary_workload(n: usize, seed: u64) -> (BinaryMatrix, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let b = BinaryMatrix::random(n, n, 0.5, &mut rng);
+    let v = rng.f32_vec(n, -1.0, 1.0);
+    (b, v)
+}
+
+/// Random ternary matrix + input vector.
+pub fn ternary_workload(n: usize, seed: u64) -> (TernaryMatrix, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let a = TernaryMatrix::random(n, n, 1.0 / 3.0, &mut rng);
+    let v = rng.f32_vec(n, -1.0, 1.0);
+    (a, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_ranges_match_paper() {
+        assert_eq!(fig4_sizes(true), vec![2048, 4096, 8192, 16384, 32768, 65536]);
+        assert_eq!(fig4_sizes(false).last(), Some(&8192));
+        assert_eq!(fig12_sizes(), vec![2048, 4096, 8192, 16384]);
+    }
+
+    #[test]
+    fn workloads_are_seeded() {
+        let (a1, v1) = binary_workload(64, 1);
+        let (a2, v2) = binary_workload(64, 1);
+        assert_eq!(a1, a2);
+        assert_eq!(v1, v2);
+        let (a3, _) = binary_workload(64, 2);
+        assert_ne!(a1, a3);
+    }
+}

@@ -1,0 +1,180 @@
+//! Synthetic question datasets matching the paper's §5.3 evaluation.
+//!
+//! The paper uses three datasets whose *content* is irrelevant to
+//! kernel timing — only the prompt-length distribution matters (each
+//! input runs one feed-forward pass per prompt token). We generate:
+//!
+//! * **ShortQuestions** — short factual questions (the paper built the
+//!   original with GPT-4; e.g. "What is the capital of France?"),
+//! * **SimpleQuestions-like** — entity-centric single-fact questions
+//!   mirroring Diefenbach et al. 2017's templates,
+//! * **TREC-like** — questions following the TREC QA taxonomy
+//!   (abbreviation / entity / description / human / location / number).
+
+use crate::util::rng::Rng;
+
+/// Which synthetic dataset to generate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DatasetKind {
+    /// Short factual questions.
+    ShortQuestions,
+    /// Entity-fact questions (SimpleQuestions-like).
+    SimpleQuestions,
+    /// TREC-taxonomy questions.
+    TrecQa,
+}
+
+impl DatasetKind {
+    /// All kinds, in the paper's Fig 6 order.
+    pub const ALL: [DatasetKind; 3] =
+        [DatasetKind::ShortQuestions, DatasetKind::SimpleQuestions, DatasetKind::TrecQa];
+
+    /// Display name used in bench reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DatasetKind::ShortQuestions => "ShortQuestions",
+            DatasetKind::SimpleQuestions => "SimpleQuestions",
+            DatasetKind::TrecQa => "TREC QA",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "shortquestions" | "short" => Some(DatasetKind::ShortQuestions),
+            "simplequestions" | "simple" => Some(DatasetKind::SimpleQuestions),
+            "trec" | "trecqa" | "trec-qa" => Some(DatasetKind::TrecQa),
+            _ => None,
+        }
+    }
+}
+
+/// A generated dataset: text prompts.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Which generator produced it.
+    pub kind: DatasetKind,
+    /// The prompts.
+    pub prompts: Vec<String>,
+}
+
+const CAPITALS: &[(&str, &str)] = &[
+    ("France", "Paris"),
+    ("Japan", "Tokyo"),
+    ("Italy", "Rome"),
+    ("Canada", "Ottawa"),
+    ("Egypt", "Cairo"),
+    ("Brazil", "Brasilia"),
+    ("Kenya", "Nairobi"),
+    ("Norway", "Oslo"),
+];
+
+const ENTITIES: &[&str] = &[
+    "the Nile", "Mount Everest", "the Pacific Ocean", "the Amazon rainforest",
+    "the Great Wall", "the Sahara", "Lake Baikal", "the Danube",
+];
+
+const PEOPLE: &[&str] = &[
+    "Marie Curie", "Alan Turing", "Ada Lovelace", "Isaac Newton",
+    "Katherine Johnson", "Leonhard Euler",
+];
+
+const SHORT_TEMPLATES: &[&str] = &[
+    "What is the capital of {X}?",
+    "How many continents are there?",
+    "What year did World War II end?",
+    "Who wrote Romeo and Juliet?",
+    "What is the chemical symbol for gold?",
+    "How many planets are in the solar system?",
+    "What is the largest mammal?",
+    "What language is spoken in {X}?",
+];
+
+const SIMPLE_TEMPLATES: &[&str] = &[
+    "Where is {E} located?",
+    "What type of place is {E}?",
+    "Which country contains {E}?",
+    "Who discovered {E}?",
+    "What is {E} known for?",
+];
+
+const TREC_TEMPLATES: &[&str] = &[
+    // ABBR / ENTY / DESC / HUM / LOC / NUM classes.
+    "What does the abbreviation NASA stand for?",
+    "What breed of dog is the smallest?",
+    "Why is the sky blue?",
+    "Who was {P}?",
+    "Where is {E}?",
+    "How many meters tall is {E}?",
+    "When was {P} born?",
+    "What is the speed of light?",
+];
+
+impl Dataset {
+    /// Generate `count` prompts deterministically from a seed.
+    pub fn generate(kind: DatasetKind, count: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ (kind as u64).wrapping_mul(0x9E3779B9));
+        let prompts = (0..count)
+            .map(|_| match kind {
+                DatasetKind::ShortQuestions => fill(&mut rng, SHORT_TEMPLATES),
+                DatasetKind::SimpleQuestions => fill(&mut rng, SIMPLE_TEMPLATES),
+                DatasetKind::TrecQa => fill(&mut rng, TREC_TEMPLATES),
+            })
+            .collect();
+        Self { kind, prompts }
+    }
+
+    /// Mean prompt length in bytes (≈ tokens under the byte tokenizer).
+    pub fn mean_len(&self) -> f64 {
+        if self.prompts.is_empty() {
+            return 0.0;
+        }
+        self.prompts.iter().map(|p| p.len()).sum::<usize>() as f64
+            / self.prompts.len() as f64
+    }
+}
+
+fn fill(rng: &mut Rng, templates: &[&str]) -> String {
+    let t = *rng.choose(templates);
+    t.replace("{X}", CAPITALS[rng.range(0, CAPITALS.len())].0)
+        .replace("{E}", *rng.choose(ENTITIES))
+        .replace("{P}", *rng.choose(PEOPLE))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic_and_kind_sensitive() {
+        let a = Dataset::generate(DatasetKind::ShortQuestions, 20, 1);
+        let b = Dataset::generate(DatasetKind::ShortQuestions, 20, 1);
+        let c = Dataset::generate(DatasetKind::TrecQa, 20, 1);
+        assert_eq!(a.prompts, b.prompts);
+        assert_ne!(a.prompts, c.prompts);
+    }
+
+    #[test]
+    fn prompts_are_questions_and_short() {
+        for kind in DatasetKind::ALL {
+            let d = Dataset::generate(kind, 50, 2);
+            assert_eq!(d.prompts.len(), 50);
+            for p in &d.prompts {
+                assert!(p.ends_with('?'), "{kind:?}: {p}");
+                assert!(p.len() < 120, "{kind:?}: too long: {p}");
+                assert!(!p.contains('{'), "unfilled template: {p}");
+            }
+            // "Short factual questions": mean well under 100 bytes.
+            assert!(d.mean_len() < 80.0, "{kind:?} mean {:.1}", d.mean_len());
+        }
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for kind in DatasetKind::ALL {
+            let lowered = kind.name().to_ascii_lowercase().replace(' ', "");
+            assert_eq!(DatasetKind::from_name(&lowered), Some(kind), "{lowered}");
+        }
+        assert_eq!(DatasetKind::from_name("bogus"), None);
+    }
+}

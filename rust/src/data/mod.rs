@@ -1,0 +1,7 @@
+//! Synthetic datasets and request traces (DESIGN.md §Substitutions for
+//! ShortQuestions / SimpleQuestions / TREC QA).
+
+pub mod datasets;
+pub mod trace;
+
+pub use datasets::{Dataset, DatasetKind};

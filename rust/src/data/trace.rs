@@ -1,0 +1,117 @@
+//! Request arrival traces for serving experiments: Poisson arrivals
+//! with configurable rate, plus a bursty variant — the workloads the
+//! batcher/scheduler ablations replay.
+
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// One trace entry: when a request arrives and its shape.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    /// Offset from trace start.
+    pub at: Duration,
+    /// Prompt length (tokens).
+    pub prompt_len: usize,
+    /// Tokens to generate.
+    pub max_new: usize,
+}
+
+/// Arrival process shape.
+#[derive(Debug, Clone, Copy)]
+pub enum Arrival {
+    /// Poisson with mean `rate_per_sec`.
+    Poisson {
+        /// Mean arrival rate (req/s).
+        rate_per_sec: f64,
+    },
+    /// Bursts of `burst` back-to-back requests every `period`.
+    Bursty {
+        /// Requests per burst.
+        burst: usize,
+        /// Gap between bursts.
+        period: Duration,
+    },
+}
+
+/// Generate a deterministic trace of `count` events.
+pub fn generate(
+    arrival: Arrival,
+    count: usize,
+    prompt_range: (usize, usize),
+    max_new: usize,
+    seed: u64,
+) -> Vec<TraceEvent> {
+    let mut rng = Rng::new(seed);
+    let mut events = Vec::with_capacity(count);
+    let mut t = Duration::ZERO;
+    let mut in_burst = 0usize;
+    for _ in 0..count {
+        match arrival {
+            Arrival::Poisson { rate_per_sec } => {
+                // Exponential inter-arrival via inverse CDF.
+                let u = rng.next_f64().max(1e-12);
+                let gap = -u.ln() / rate_per_sec.max(1e-9);
+                t += Duration::from_secs_f64(gap);
+            }
+            Arrival::Bursty { burst, period } => {
+                if in_burst >= burst {
+                    t += period;
+                    in_burst = 0;
+                }
+                in_burst += 1;
+            }
+        }
+        events.push(TraceEvent {
+            at: t,
+            prompt_len: rng.range(prompt_range.0, prompt_range.1.max(prompt_range.0 + 1)),
+            max_new,
+        });
+    }
+    events
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_roughly_matches() {
+        let events = generate(
+            Arrival::Poisson { rate_per_sec: 100.0 },
+            2000,
+            (5, 20),
+            8,
+            3,
+        );
+        assert_eq!(events.len(), 2000);
+        let total = events.last().unwrap().at.as_secs_f64();
+        let rate = 2000.0 / total;
+        assert!((60.0..150.0).contains(&rate), "observed rate {rate}");
+        // Monotone timestamps.
+        for w in events.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+    }
+
+    #[test]
+    fn bursty_produces_gaps() {
+        let events = generate(
+            Arrival::Bursty { burst: 4, period: Duration::from_millis(100) },
+            12,
+            (5, 6),
+            4,
+            7,
+        );
+        // Events 0..4 share t=0; then a 100ms jump.
+        assert_eq!(events[0].at, events[3].at);
+        assert!(events[4].at >= Duration::from_millis(100));
+    }
+
+    #[test]
+    fn prompt_lengths_in_range() {
+        let events =
+            generate(Arrival::Poisson { rate_per_sec: 10.0 }, 100, (3, 9), 4, 11);
+        assert!(events.iter().all(|e| (3..9).contains(&e.prompt_len)));
+    }
+}

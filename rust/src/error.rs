@@ -1,0 +1,46 @@
+//! Crate-wide error type.
+
+/// Errors produced by the rsr library.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// A block index failed structural validation.
+    #[error("invalid index: {0}")]
+    InvalidIndex(String),
+
+    /// Shape mismatch between operands.
+    #[error("shape mismatch: {0}")]
+    ShapeMismatch(String),
+
+    /// Weight / model file format problems.
+    #[error("invalid model file: {0}")]
+    InvalidModel(String),
+
+    /// AOT artifact problems (missing file, bad manifest).
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// Serving-layer failures (queue overflow, closed channels…).
+    #[error("serving error: {0}")]
+    Serving(String),
+
+    /// Configuration / CLI problems.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Underlying I/O failure.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+
+    /// Failure inside the XLA/PJRT runtime.
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

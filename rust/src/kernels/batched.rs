@@ -1,0 +1,216 @@
+//! Batched RSR: multiply a *batch* of activation vectors by one
+//! preprocessed matrix — the serving-side shape (dynamic batcher output)
+//! and the natural extension the paper's §C.1 parallelization implies.
+//!
+//! Per block, the segmented sums of all batch rows are computed in one
+//! pass over the index: for each position, the gathered `v[σ(pos)]`
+//! column is accumulated into `U[batch][segment]`. The index is read
+//! **once per batch** instead of once per vector — at batch size `b`
+//! the per-vector index traffic drops by `b×`, which is exactly why
+//! batched serving amortizes RSR so well (EXPERIMENTS.md §Perf).
+
+use super::index::{RsrIndex, TernaryRsrIndex};
+use super::rsrpp::block_product_fold;
+use crate::error::{Error, Result};
+
+/// Batched RSR++ plan over a binary matrix.
+#[derive(Debug, Clone)]
+pub struct BatchedRsrPlan {
+    index: RsrIndex,
+    max_batch: usize,
+    // Scratch: `U[b * 2^k + j]` segmented sums per batch row.
+    u: Vec<f32>,
+    fold: Vec<f32>,
+}
+
+impl BatchedRsrPlan {
+    /// Build a plan for batches up to `max_batch` rows.
+    pub fn new(index: RsrIndex, max_batch: usize) -> Result<Self> {
+        index.validate()?;
+        if max_batch == 0 {
+            return Err(Error::Config("max_batch must be >= 1".into()));
+        }
+        let max_u = index.blocks.iter().map(|b| 1usize << b.width).max().unwrap_or(0);
+        Ok(Self {
+            index,
+            max_batch,
+            u: vec![0.0; max_batch * max_u],
+            fold: vec![0.0; max_u],
+        })
+    }
+
+    /// The underlying index.
+    pub fn index(&self) -> &RsrIndex {
+        &self.index
+    }
+
+    /// `out[b] = vs[b] · B` for every batch row.
+    ///
+    /// `vs` is row-major `batch × rows`; `out` is row-major
+    /// `batch × cols`. `batch ≤ max_batch`.
+    pub fn execute(&mut self, vs: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
+        let (n, m) = (self.index.rows, self.index.cols);
+        if batch == 0 || batch > self.max_batch {
+            return Err(Error::ShapeMismatch(format!(
+                "batch {batch} outside 1..={}",
+                self.max_batch
+            )));
+        }
+        if vs.len() != batch * n {
+            return Err(Error::ShapeMismatch(format!(
+                "vs len {} != batch*rows {}",
+                vs.len(),
+                batch * n
+            )));
+        }
+        if out.len() != batch * m {
+            return Err(Error::ShapeMismatch(format!(
+                "out len {} != batch*cols {}",
+                out.len(),
+                batch * m
+            )));
+        }
+
+        for blk in &self.index.blocks {
+            let w = blk.width as usize;
+            let two_w = 1usize << w;
+            let u = &mut self.u[..batch * two_w];
+            u.fill(0.0);
+            // One pass over the index; gather the whole batch column.
+            for j in 0..two_w {
+                let lo = blk.seg[j] as usize;
+                let hi = blk.seg[j + 1] as usize;
+                for &s in &blk.sigma[lo..hi] {
+                    let s = s as usize;
+                    for b in 0..batch {
+                        u[b * two_w + j] += vs[b * n + s];
+                    }
+                }
+            }
+            // Fold each batch row's u into its output slice.
+            let col = blk.col_start as usize;
+            for b in 0..batch {
+                let ub = &u[b * two_w..(b + 1) * two_w];
+                let ob = &mut out[b * m + col..b * m + col + w];
+                block_product_fold(ub, w, ob, &mut self.fold);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Batched ternary plan (both Prop 2.1 halves).
+#[derive(Debug, Clone)]
+pub struct BatchedTernaryRsrPlan {
+    plus: BatchedRsrPlan,
+    minus: BatchedRsrPlan,
+    tmp: Vec<f32>,
+}
+
+impl BatchedTernaryRsrPlan {
+    /// Build from a preprocessed ternary index.
+    pub fn new(index: TernaryRsrIndex, max_batch: usize) -> Result<Self> {
+        let cols = index.plus.cols;
+        Ok(Self {
+            plus: BatchedRsrPlan::new(index.plus, max_batch)?,
+            minus: BatchedRsrPlan::new(index.minus, max_batch)?,
+            tmp: vec![0.0; max_batch * cols],
+        })
+    }
+
+    /// `out[b] = vs[b] · A` for every batch row.
+    pub fn execute(&mut self, vs: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
+        self.plus.execute(vs, batch, out)?;
+        let tmp = &mut self.tmp[..out.len()];
+        self.minus.execute(vs, batch, tmp)?;
+        for (o, t) in out.iter_mut().zip(tmp.iter()) {
+            *o -= t;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::binary::BinaryMatrix;
+    use super::super::standard::{standard_mul_binary, standard_mul_ternary};
+    use super::super::ternary::TernaryMatrix;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn batched_matches_per_vector() {
+        let mut rng = Rng::new(0xBA7);
+        let (n, m, k, batch) = (96, 64, 5, 7);
+        let b = BinaryMatrix::random(n, m, 0.5, &mut rng);
+        let vs: Vec<f32> = rng.f32_vec(batch * n, -1.0, 1.0);
+        let mut plan = BatchedRsrPlan::new(RsrIndex::preprocess(&b, k), batch).unwrap();
+        let mut out = vec![0.0; batch * m];
+        plan.execute(&vs, batch, &mut out).unwrap();
+        for bi in 0..batch {
+            let expect = standard_mul_binary(&vs[bi * n..(bi + 1) * n], &b);
+            for (g, e) in out[bi * m..(bi + 1) * m].iter().zip(expect.iter()) {
+                assert!((g - e).abs() < 1e-3 * (1.0 + e.abs()), "row {bi}: {g} vs {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_of_one_matches_unbatched_plan() {
+        let mut rng = Rng::new(0xBA8);
+        let b = BinaryMatrix::random(50, 30, 0.5, &mut rng);
+        let v = rng.f32_vec(50, -1.0, 1.0);
+        let idx = RsrIndex::preprocess(&b, 4);
+        let mut batched = BatchedRsrPlan::new(idx.clone(), 1).unwrap();
+        let mut single = super::super::rsrpp::RsrPlusPlusPlan::new(idx).unwrap();
+        let mut o1 = vec![0.0; 30];
+        let mut o2 = vec![0.0; 30];
+        batched.execute(&v, 1, &mut o1).unwrap();
+        single.execute(&v, &mut o2).unwrap();
+        for (a, b) in o1.iter().zip(o2.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn ternary_batched_matches_standard() {
+        let mut rng = Rng::new(0xBA9);
+        let (n, m, batch) = (64, 48, 4);
+        let a = TernaryMatrix::random(n, m, 1.0 / 3.0, &mut rng);
+        let vs = rng.f32_vec(batch * n, -1.0, 1.0);
+        let mut plan =
+            BatchedTernaryRsrPlan::new(TernaryRsrIndex::preprocess(&a, 4), batch)
+                .unwrap();
+        let mut out = vec![0.0; batch * m];
+        plan.execute(&vs, batch, &mut out).unwrap();
+        for bi in 0..batch {
+            let expect = standard_mul_ternary(&vs[bi * n..(bi + 1) * n], &a);
+            for (g, e) in out[bi * m..(bi + 1) * m].iter().zip(expect.iter()) {
+                assert!((g - e).abs() < 1e-3 * (1.0 + e.abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn partial_batches_are_allowed() {
+        let mut rng = Rng::new(0xBAA);
+        let b = BinaryMatrix::random(20, 12, 0.5, &mut rng);
+        let mut plan = BatchedRsrPlan::new(RsrIndex::preprocess(&b, 3), 8).unwrap();
+        let vs = rng.f32_vec(3 * 20, -1.0, 1.0);
+        let mut out = vec![0.0; 3 * 12];
+        plan.execute(&vs, 3, &mut out).unwrap();
+    }
+
+    #[test]
+    fn shape_errors_are_clean() {
+        let mut rng = Rng::new(0xBAB);
+        let b = BinaryMatrix::random(20, 12, 0.5, &mut rng);
+        let mut plan = BatchedRsrPlan::new(RsrIndex::preprocess(&b, 3), 4).unwrap();
+        let mut out = vec![0.0; 2 * 12];
+        assert!(plan.execute(&[0.0; 40], 0, &mut out).is_err()); // batch 0
+        assert!(plan.execute(&[0.0; 40], 5, &mut out).is_err()); // > max
+        assert!(plan.execute(&[0.0; 39], 2, &mut out).is_err()); // bad vs
+        assert!(plan.execute(&[0.0; 40], 2, &mut [0.0; 23]).is_err()); // bad out
+        assert!(BatchedRsrPlan::new(RsrIndex::preprocess(&b, 3), 0).is_err());
+    }
+}

@@ -1,0 +1,203 @@
+//! Binary matrices `B ∈ {0,1}^{n×m}` — the object Problem 2 multiplies
+//! against. Stored bit-packed (one u64 word per 64 columns, row-major),
+//! which is both the compact on-disk form and what the preprocessing
+//! pass reads.
+
+use crate::util::bitops;
+use crate::util::rng::Rng;
+
+/// A bit-packed binary matrix, row-major.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BinaryMatrix {
+    rows: usize,
+    cols: usize,
+    words_per_row: usize,
+    words: Vec<u64>,
+}
+
+impl BinaryMatrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        let words_per_row = bitops::words_for_bits(cols);
+        Self { rows, cols, words_per_row, words: vec![0; rows * words_per_row] }
+    }
+
+    /// Build from a dense 0/1 byte buffer (row-major, `rows*cols` long).
+    pub fn from_dense(rows: usize, cols: usize, data: &[u8]) -> Self {
+        assert_eq!(data.len(), rows * cols, "dense buffer size mismatch");
+        let mut m = Self::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                if data[r * cols + c] != 0 {
+                    m.set(r, c, true);
+                }
+            }
+        }
+        m
+    }
+
+    /// Build from rows of `&[u8]` 0/1 values (test convenience).
+    pub fn from_rows(rows: &[&[u8]]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let flat: Vec<u8> = rows.iter().flat_map(|x| x.iter().copied()).collect();
+        Self::from_dense(r, c, &flat)
+    }
+
+    /// Uniform random matrix with density `p` of ones.
+    ///
+    /// `p = 0.5` takes a fast word-at-a-time path (one `u64` draw per
+    /// 64 entries) so the paper's full `n = 2^16` benches can generate
+    /// half-gigabyte matrices in well under a second.
+    pub fn random(rows: usize, cols: usize, p: f64, rng: &mut Rng) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        if (p - 0.5).abs() < 1e-12 {
+            let tail_bits = cols & 63;
+            let tail_mask =
+                if tail_bits == 0 { u64::MAX } else { (1u64 << tail_bits) - 1 };
+            for r in 0..rows {
+                let row =
+                    &mut m.words[r * m.words_per_row..(r + 1) * m.words_per_row];
+                for (wi, w) in row.iter_mut().enumerate() {
+                    *w = rng.next_u64();
+                    if wi + 1 == cols.div_ceil(64) {
+                        *w &= tail_mask;
+                    }
+                }
+            }
+            return m;
+        }
+        for r in 0..rows {
+            for c in 0..cols {
+                if rng.bernoulli(p) {
+                    m.set(r, c, true);
+                }
+            }
+        }
+        m
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Read element `(r, c)`.
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        debug_assert!(r < self.rows && c < self.cols);
+        bitops::get_bit(self.row_words(r), c)
+    }
+
+    /// Write element `(r, c)`.
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: bool) {
+        debug_assert!(r < self.rows && c < self.cols);
+        let w = &mut self.words[r * self.words_per_row..(r + 1) * self.words_per_row];
+        if v {
+            bitops::set_bit(w, c);
+        } else {
+            w[c >> 6] &= !(1u64 << (c & 63));
+        }
+    }
+
+    /// The packed words of row `r`.
+    #[inline]
+    pub fn row_words(&self, r: usize) -> &[u64] {
+        &self.words[r * self.words_per_row..(r + 1) * self.words_per_row]
+    }
+
+    /// The k-bit row key for the column block starting at `col_start`
+    /// with `width` columns — MSB-first per the paper's Def 3.2.
+    #[inline]
+    pub fn row_key(&self, r: usize, col_start: usize, width: usize) -> u32 {
+        debug_assert!(width <= 16 && col_start + width <= self.cols);
+        bitops::extract_key_msb_first(self.row_words(r), col_start, width)
+    }
+
+    /// Count of ones in the whole matrix.
+    pub fn count_ones(&self) -> u64 {
+        bitops::popcount(&self.words)
+    }
+
+    /// Heap bytes used by the packed representation.
+    pub fn packed_bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+
+    /// Bytes a dense u8 representation would use (baseline for Fig 5).
+    pub fn dense_bytes(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Densify to a 0/1 byte buffer (tests, python interop).
+    pub fn to_dense(&self) -> Vec<u8> {
+        let mut out = vec![0u8; self.rows * self.cols];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[r * self.cols + c] = self.get(r, c) as u8;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut m = BinaryMatrix::zeros(5, 70);
+        m.set(0, 0, true);
+        m.set(4, 69, true);
+        m.set(2, 63, true);
+        m.set(2, 64, true);
+        assert!(m.get(0, 0));
+        assert!(m.get(4, 69));
+        assert!(m.get(2, 63) && m.get(2, 64));
+        assert!(!m.get(1, 1));
+        m.set(2, 63, false);
+        assert!(!m.get(2, 63));
+        assert_eq!(m.count_ones(), 3);
+    }
+
+    #[test]
+    fn from_dense_matches_get() {
+        let data = [1u8, 0, 1, 0, 1, 1];
+        let m = BinaryMatrix::from_dense(2, 3, &data);
+        assert!(m.get(0, 0) && !m.get(0, 1) && m.get(0, 2));
+        assert!(!m.get(1, 0) && m.get(1, 1) && m.get(1, 2));
+        assert_eq!(m.to_dense(), data);
+    }
+
+    #[test]
+    fn row_key_is_msb_first() {
+        // Paper example: row [1,0,1,1] → (1011)₂ = 11.
+        let m = BinaryMatrix::from_rows(&[&[1, 0, 1, 1]]);
+        assert_eq!(m.row_key(0, 0, 4), 0b1011);
+        assert_eq!(m.row_key(0, 1, 3), 0b011);
+    }
+
+    #[test]
+    fn random_density_is_plausible() {
+        let mut rng = Rng::new(5);
+        let m = BinaryMatrix::random(64, 64, 0.5, &mut rng);
+        let ones = m.count_ones() as f64 / (64.0 * 64.0);
+        assert!((0.4..0.6).contains(&ones), "density {ones}");
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let m = BinaryMatrix::zeros(128, 128);
+        assert_eq!(m.packed_bytes(), 128 * 2 * 8); // 2 words per row
+        assert_eq!(m.dense_bytes(), 128 * 128);
+    }
+}

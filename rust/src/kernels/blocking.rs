@@ -1,0 +1,87 @@
+//! Step 1 of preprocessing — *column blocking* (paper Def 3.1).
+//!
+//! `B` is split into `⌈m/k⌉` blocks of `k` consecutive columns; the last
+//! block may be narrower ("ragged tail") when `k ∤ m`.
+
+/// Geometry of one k-column block: which columns of `B` it covers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ColumnBlock {
+    /// Index of this block (0-based; paper's `i − 1`).
+    pub index: usize,
+    /// First column covered (inclusive).
+    pub col_start: usize,
+    /// Number of columns covered (`k`, except possibly the tail).
+    pub width: usize,
+}
+
+/// Enumerate the k-column blocks of an `_ × cols` matrix.
+pub fn column_blocks(cols: usize, k: usize) -> Vec<ColumnBlock> {
+    assert!(k >= 1, "block width must be at least 1");
+    assert!(k <= 16, "block width > 16 would need >65536-entry segmentation lists");
+    let mut out = Vec::with_capacity(cols.div_ceil(k));
+    let mut col_start = 0;
+    let mut index = 0;
+    while col_start < cols {
+        let width = k.min(cols - col_start);
+        out.push(ColumnBlock { index, col_start, width });
+        col_start += width;
+        index += 1;
+    }
+    out
+}
+
+/// The number of blocks `⌈cols/k⌉`.
+pub fn num_blocks(cols: usize, k: usize) -> usize {
+    cols.div_ceil(k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_division() {
+        let blocks = column_blocks(6, 2);
+        assert_eq!(blocks.len(), 3);
+        assert_eq!(blocks[0], ColumnBlock { index: 0, col_start: 0, width: 2 });
+        assert_eq!(blocks[2], ColumnBlock { index: 2, col_start: 4, width: 2 });
+    }
+
+    #[test]
+    fn ragged_tail() {
+        let blocks = column_blocks(7, 3);
+        assert_eq!(blocks.len(), 3);
+        assert_eq!(blocks[2], ColumnBlock { index: 2, col_start: 6, width: 1 });
+        assert_eq!(num_blocks(7, 3), 3);
+    }
+
+    #[test]
+    fn k_larger_than_cols() {
+        let blocks = column_blocks(3, 8);
+        assert_eq!(blocks.len(), 1);
+        assert_eq!(blocks[0].width, 3);
+    }
+
+    #[test]
+    fn blocks_partition_all_columns() {
+        for cols in [1usize, 5, 64, 100, 127] {
+            for k in [1usize, 2, 3, 7, 8, 16] {
+                let blocks = column_blocks(cols, k);
+                let total: usize = blocks.iter().map(|b| b.width).sum();
+                assert_eq!(total, cols, "cols={cols} k={k}");
+                // contiguity
+                let mut expect = 0;
+                for b in &blocks {
+                    assert_eq!(b.col_start, expect);
+                    expect += b.width;
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "at least 1")]
+    fn zero_k_rejected() {
+        column_blocks(4, 0);
+    }
+}

@@ -1,0 +1,364 @@
+//! The *block index* — the output of preprocessing (paper Algorithm 1)
+//! and the only thing the inference algorithms need. Replacing the
+//! weight matrix with its index is what yields the `O(n²/log n)` space
+//! bound of Theorem 3.6 and the Fig 5 memory numbers.
+//!
+//! Also home to [`BinMatrix`], the `2^k × k` enumeration matrix
+//! `Bin_[k]` used by Step 2 of RSR.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use super::binary::BinaryMatrix;
+use super::blocking::{column_blocks, ColumnBlock};
+use super::permutation::{binary_row_order, is_permutation};
+use super::segmentation::{full_segmentation, validate as validate_seg};
+use super::ternary::TernaryMatrix;
+use crate::error::{Error, Result};
+
+/// `Bin_[k]`: the binary-row-ordered `2^k × k` matrix with one row per
+/// k-bit value (paper §3.2). `get(l, j)` is bit `j` of value `l`,
+/// MSB-first — i.e. column 0 holds the most significant bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BinMatrix {
+    /// Bit width `k`.
+    pub k: usize,
+}
+
+impl BinMatrix {
+    /// The enumeration matrix for width `k ≤ 16`.
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1 && k <= 16);
+        Self { k }
+    }
+
+    /// Number of rows, `2^k`.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        1 << self.k
+    }
+
+    /// Element `(l, j)`: bit `k−1−j` of `l` (so column 0 is the MSB,
+    /// matching `B_i[r,:]₂` concatenation order).
+    #[inline]
+    pub fn get(&self, l: usize, j: usize) -> bool {
+        debug_assert!(l < self.rows() && j < self.k);
+        (l >> (self.k - 1 - j)) & 1 == 1
+    }
+
+    /// Densify (for tests / the tensorized path).
+    pub fn to_dense(&self) -> Vec<u8> {
+        let mut out = vec![0u8; self.rows() * self.k];
+        for l in 0..self.rows() {
+            for j in 0..self.k {
+                out[l * self.k + j] = self.get(l, j) as u8;
+            }
+        }
+        out
+    }
+}
+
+/// Index of a single k-column block: the permutation `σ` and the full
+/// segmentation list `L` (paper Algorithm 1 output).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockIndex {
+    /// First column of `B` this block covers.
+    pub col_start: u32,
+    /// Block width (`k`, or less for the ragged tail).
+    pub width: u32,
+    /// `sigma[pos] = original_row`; length `n`.
+    pub sigma: Vec<u32>,
+    /// Full segmentation with sentinel; length `2^width + 1`,
+    /// `seg[0] = 0`, `seg[2^width] = n`.
+    pub seg: Vec<u32>,
+}
+
+impl BlockIndex {
+    /// Heap bytes this block index occupies (σ + L as u32).
+    pub fn bytes(&self) -> usize {
+        (self.sigma.len() + self.seg.len()) * 4
+    }
+}
+
+/// The full RSR index for one binary matrix: every block's `(σᵢ, Lᵢ)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RsrIndex {
+    /// Rows of the indexed matrix (`n`).
+    pub rows: usize,
+    /// Columns of the indexed matrix (`m`).
+    pub cols: usize,
+    /// Blocking parameter `k`.
+    pub k: usize,
+    /// One index per k-column block, in column order.
+    pub blocks: Vec<BlockIndex>,
+}
+
+impl RsrIndex {
+    /// Paper Algorithm 1: block, permute, segment.
+    pub fn preprocess(b: &BinaryMatrix, k: usize) -> Self {
+        let geom = column_blocks(b.cols(), k);
+        let blocks = geom
+            .iter()
+            .map(|cb: &ColumnBlock| {
+                let ro = binary_row_order(b, cb.col_start, cb.width);
+                BlockIndex {
+                    col_start: cb.col_start as u32,
+                    width: cb.width as u32,
+                    sigma: ro.sigma,
+                    seg: full_segmentation(&ro.counts),
+                }
+            })
+            .collect();
+        Self { rows: b.rows(), cols: b.cols(), k, blocks }
+    }
+
+    /// Total index bytes (the Fig 5 "after preprocessing" number).
+    pub fn bytes(&self) -> usize {
+        self.blocks.iter().map(|b| b.bytes()).sum::<usize>() + 4 * 4
+    }
+
+    /// Validate all structural invariants (used after deserialization
+    /// and by property tests).
+    pub fn validate(&self) -> Result<()> {
+        let mut expect_col = 0u32;
+        for blk in &self.blocks {
+            if blk.col_start != expect_col {
+                return Err(Error::InvalidIndex(format!(
+                    "block at col {} expected {}",
+                    blk.col_start, expect_col
+                )));
+            }
+            if blk.width == 0 || blk.width as usize > self.k {
+                return Err(Error::InvalidIndex(format!("bad width {}", blk.width)));
+            }
+            if !is_permutation(&blk.sigma, self.rows) {
+                return Err(Error::InvalidIndex(format!(
+                    "sigma at col {} is not a permutation",
+                    blk.col_start
+                )));
+            }
+            validate_seg(&blk.seg, blk.width as usize, self.rows)
+                .map_err(Error::InvalidIndex)?;
+            expect_col += blk.width;
+        }
+        if expect_col as usize != self.cols {
+            return Err(Error::InvalidIndex(format!(
+                "blocks cover {} of {} columns",
+                expect_col, self.cols
+            )));
+        }
+        Ok(())
+    }
+
+    /// Serialize to the `.rsi` binary format (see module docs).
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        w.write_all(MAGIC)?;
+        for v in [self.rows as u32, self.cols as u32, self.k as u32, self.blocks.len() as u32] {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        for blk in &self.blocks {
+            w.write_all(&blk.col_start.to_le_bytes())?;
+            w.write_all(&blk.width.to_le_bytes())?;
+            for &s in &blk.sigma {
+                w.write_all(&s.to_le_bytes())?;
+            }
+            for &s in &blk.seg {
+                w.write_all(&s.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Deserialize and validate.
+    pub fn read_from(r: &mut impl Read) -> Result<Self> {
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(Error::InvalidIndex("bad magic".into()));
+        }
+        let rows = read_u32(r)? as usize;
+        let cols = read_u32(r)? as usize;
+        let k = read_u32(r)? as usize;
+        let nblocks = read_u32(r)? as usize;
+        if k == 0 || k > 16 || nblocks != cols.div_ceil(k.max(1)) {
+            return Err(Error::InvalidIndex("inconsistent header".into()));
+        }
+        let mut blocks = Vec::with_capacity(nblocks);
+        for _ in 0..nblocks {
+            let col_start = read_u32(r)?;
+            let width = read_u32(r)?;
+            if width == 0 || width > 16 {
+                return Err(Error::InvalidIndex("bad block width".into()));
+            }
+            let mut sigma = vec![0u32; rows];
+            read_u32s(r, &mut sigma)?;
+            let mut seg = vec![0u32; (1usize << width) + 1];
+            read_u32s(r, &mut seg)?;
+            blocks.push(BlockIndex { col_start, width, sigma, seg });
+        }
+        let idx = Self { rows, cols, k, blocks };
+        idx.validate()?;
+        Ok(idx)
+    }
+
+    /// Write to a file.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        self.write_to(&mut f)
+    }
+
+    /// Read from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        Self::read_from(&mut f)
+    }
+}
+
+const MAGIC: &[u8; 8] = b"RSRIDX1\0";
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u32s(r: &mut impl Read, out: &mut [u32]) -> Result<()> {
+    // Bulk read as bytes then decode; avoids per-element syscalls.
+    let mut buf = vec![0u8; out.len() * 4];
+    r.read_exact(&mut buf)?;
+    for (i, chunk) in buf.chunks_exact(4).enumerate() {
+        out[i] = u32::from_le_bytes(chunk.try_into().unwrap());
+    }
+    Ok(())
+}
+
+/// RSR index pair for a ternary matrix: `A = B⁽¹⁾ − B⁽²⁾` (Prop 2.1),
+/// both halves preprocessed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TernaryRsrIndex {
+    /// Index of `B⁽¹⁾ = [A == +1]`.
+    pub plus: RsrIndex,
+    /// Index of `B⁽²⁾ = [A == −1]`.
+    pub minus: RsrIndex,
+}
+
+impl TernaryRsrIndex {
+    /// Decompose and preprocess both binary halves.
+    pub fn preprocess(a: &TernaryMatrix, k: usize) -> Self {
+        let (p, m) = a.decompose();
+        Self { plus: RsrIndex::preprocess(&p, k), minus: RsrIndex::preprocess(&m, k) }
+    }
+
+    /// Total index bytes.
+    pub fn bytes(&self) -> usize {
+        self.plus.bytes() + self.minus.bytes()
+    }
+
+    /// Validate both halves.
+    pub fn validate(&self) -> Result<()> {
+        self.plus.validate()?;
+        self.minus.validate()
+    }
+}
+
+/// The paper's running example matrix (§3.1) — shared across kernel
+/// unit tests.
+#[cfg(test)]
+pub(crate) fn paper_matrix() -> BinaryMatrix {
+    BinaryMatrix::from_rows(&[
+        &[0, 1, 1, 1, 0, 1],
+        &[0, 0, 0, 1, 1, 1],
+        &[0, 1, 1, 1, 1, 0],
+        &[1, 1, 0, 0, 1, 0],
+        &[0, 0, 1, 1, 0, 1],
+        &[0, 0, 0, 0, 1, 0],
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    use super::paper_matrix;
+
+    #[test]
+    fn preprocess_paper_example_block1() {
+        let idx = RsrIndex::preprocess(&paper_matrix(), 2);
+        assert_eq!(idx.blocks.len(), 3);
+        let b1 = &idx.blocks[0];
+        // Block 1 is Example 3.3: σ = [1,4,5,0,2,3], L = [0,3,5,5,6].
+        assert_eq!(b1.sigma, vec![1, 4, 5, 0, 2, 3]);
+        assert_eq!(b1.seg, vec![0, 3, 5, 5, 6]);
+        idx.validate().unwrap();
+    }
+
+    #[test]
+    fn bin_matrix_matches_paper() {
+        // Bin_[2] = [[0,0],[0,1],[1,0],[1,1]].
+        let bin = BinMatrix::new(2);
+        assert_eq!(bin.to_dense(), vec![0, 0, 0, 1, 1, 0, 1, 1]);
+        // Bin_[3] row 5 = 101.
+        let b3 = BinMatrix::new(3);
+        assert!(b3.get(5, 0) && !b3.get(5, 1) && b3.get(5, 2));
+    }
+
+    #[test]
+    fn serialization_round_trips() {
+        let mut rng = Rng::new(41);
+        let b = BinaryMatrix::random(97, 50, 0.5, &mut rng);
+        let idx = RsrIndex::preprocess(&b, 5);
+        let mut buf = Vec::new();
+        idx.write_to(&mut buf).unwrap();
+        let back = RsrIndex::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(idx, back);
+    }
+
+    #[test]
+    fn deserialization_rejects_corruption() {
+        let mut rng = Rng::new(43);
+        let b = BinaryMatrix::random(16, 8, 0.5, &mut rng);
+        let idx = RsrIndex::preprocess(&b, 3);
+        let mut buf = Vec::new();
+        idx.write_to(&mut buf).unwrap();
+        // Corrupt the magic.
+        let mut bad = buf.clone();
+        bad[0] ^= 0xFF;
+        assert!(RsrIndex::read_from(&mut bad.as_slice()).is_err());
+        // Corrupt a sigma entry into a duplicate.
+        let mut bad = buf.clone();
+        let sigma_off = 8 + 16 + 8; // magic + header + block header
+        let dup = bad[sigma_off + 4..sigma_off + 8].to_vec();
+        bad[sigma_off..sigma_off + 4].copy_from_slice(&dup);
+        assert!(RsrIndex::read_from(&mut bad.as_slice()).is_err());
+        // Truncated stream.
+        let bad = &buf[..buf.len() - 3];
+        assert!(RsrIndex::read_from(&mut &bad[..]).is_err());
+    }
+
+    #[test]
+    fn index_is_smaller_than_dense_for_large_n() {
+        // Space: ~ (n/k)(n + 2^k) u32 vs n² f32. At n=4096, k=9 the
+        // index must come in well under the dense f32 weights.
+        let mut rng = Rng::new(47);
+        let n = 1024;
+        let b = BinaryMatrix::random(n, n, 0.5, &mut rng);
+        let idx = RsrIndex::preprocess(&b, 8);
+        let dense_f32 = n * n * 4;
+        assert!(
+            idx.bytes() < dense_f32,
+            "index {} vs dense {}",
+            idx.bytes(),
+            dense_f32
+        );
+    }
+
+    #[test]
+    fn ternary_index_roundtrip_and_validate() {
+        let mut rng = Rng::new(53);
+        let a = TernaryMatrix::random(64, 40, 1.0 / 3.0, &mut rng);
+        let idx = TernaryRsrIndex::preprocess(&a, 4);
+        idx.validate().unwrap();
+        assert!(idx.bytes() > 0);
+    }
+}

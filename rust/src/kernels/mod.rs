@@ -1,0 +1,113 @@
+//! The paper's core contribution: preprocessing binary/ternary weight
+//! matrices into *block indices* (per-column-block row permutations and
+//! full segmentation lists) and the RSR / RSR++ inference algorithms
+//! that multiply an activation vector by the preprocessed matrix in
+//! `O(n²/log n)` instead of `O(n²)`.
+//!
+//! Pipeline (paper §3–§4):
+//!
+//! ```text
+//!   TernaryMatrix ──decompose (Prop 2.1)──► (B⁽¹⁾, B⁽²⁾) binary
+//!   BinaryMatrix ──┬─ blocking (Def 3.1)      k-column blocks
+//!                  ├─ permutation (Def 3.2)   binary row order σᵢ
+//!                  └─ segmentation (Def 3.4)  full segmentation Lᵢ
+//!                                │
+//!                        RsrIndex (σᵢ, Lᵢ per block)
+//!                                │
+//!   v ∈ Rⁿ ──► segmented sum (Eq 5) ──► u·Bin_[k]  ──► v·B
+//!                   O(n)/block         RSR: O(k·2ᵏ)
+//!                                      RSR++: O(2ᵏ)   (Alg 3)
+//! ```
+//!
+//! Backends beyond the paper's two algorithms:
+//! * [`standard`] — the dense baselines RSR is measured against,
+//! * [`parallel`] — block-parallel execution (paper Appendix C.1.I),
+//! * [`tensorized`] — the one-hot-matrix formulation used for the GPU
+//!   path (paper Appendix C.1.II / E.2–E.3),
+//! * [`qbit`] — the q-bit generalization (paper Appendix D.3).
+
+pub mod batched;
+pub mod binary;
+pub mod blocking;
+pub mod fused;
+pub mod index;
+pub mod optimal_k;
+pub mod parallel;
+pub mod permutation;
+pub mod qbit;
+pub mod rsr;
+pub mod rsrpp;
+pub mod segmentation;
+pub mod standard;
+pub mod tensorized;
+pub mod ternary;
+
+pub use binary::BinaryMatrix;
+pub use index::{BinMatrix, BlockIndex, RsrIndex, TernaryRsrIndex};
+pub use rsr::{rsr_mul, RsrPlan};
+pub use rsrpp::{rsrpp_mul, RsrPlusPlusPlan};
+pub use ternary::TernaryMatrix;
+
+/// Which algorithm executes a preprocessed multiply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Backend {
+    /// Naive dense `O(n²)` multiply over i8 weights (paper's "Standard").
+    Standard,
+    /// Dense multiply over the bit-packed binary pair (stronger baseline).
+    StandardPacked,
+    /// Algorithm 2 (segmented sums + `u·Bin_[k]` as a dense product).
+    Rsr,
+    /// Algorithm 2 with Algorithm 3 as the step-2 subroutine.
+    RsrPlusPlus,
+    /// RSR++ with blocks executed across threads (Appendix C.1.I).
+    RsrParallel,
+    /// One-hot tensorized form (Appendix E.2); the GPU-path analog.
+    Tensorized,
+    /// Fused ternary hot path: shared scatter pass over both Prop 2.1
+    /// halves + a single fold (§Perf; see [`fused`]).
+    RsrFused,
+}
+
+impl Backend {
+    /// All backends, for sweeps in tests and benches.
+    pub const ALL: [Backend; 7] = [
+        Backend::Standard,
+        Backend::StandardPacked,
+        Backend::Rsr,
+        Backend::RsrPlusPlus,
+        Backend::RsrParallel,
+        Backend::Tensorized,
+        Backend::RsrFused,
+    ];
+
+    /// Short stable name used by the CLI and bench reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Standard => "standard",
+            Backend::StandardPacked => "standard-packed",
+            Backend::Rsr => "rsr",
+            Backend::RsrPlusPlus => "rsr++",
+            Backend::RsrParallel => "rsr-parallel",
+            Backend::Tensorized => "tensorized",
+            Backend::RsrFused => "rsr-fused",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn from_name(s: &str) -> Option<Backend> {
+        Backend::ALL.iter().copied().find(|b| b.name() == s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_names_round_trip() {
+        for b in Backend::ALL {
+            assert_eq!(Backend::from_name(b.name()), Some(b));
+        }
+        assert_eq!(Backend::from_name("nope"), None);
+    }
+}

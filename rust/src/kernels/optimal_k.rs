@@ -1,0 +1,148 @@
+//! Choosing the blocking parameter `k` (paper §4.2.2 / §4.3.2, App F.1).
+//!
+//! The analytic cost models are
+//!
+//! * RSR (Eq 6):   `cost(k) = (n/k)·(n + k·2^k)`
+//! * RSR++ (Eq 7): `cost(k) = (n/k)·(n + 2^k)`
+//!
+//! both unimodal in `k` over the practical range, so the paper's binary
+//! search applies; we also expose a plain argmin over the (tiny) range
+//! `1..=⌊log₂ n⌋` and an *empirical* timer-driven search used by the
+//! App F.1 reproduction.
+
+/// Analytic RSR cost model (Eq 6), in abstract operations.
+pub fn rsr_cost(n: usize, k: usize) -> f64 {
+    let n = n as f64;
+    let kf = k as f64;
+    (n / kf) * (n + kf * (1u64 << k) as f64)
+}
+
+/// Analytic RSR++ cost model (Eq 7).
+pub fn rsrpp_cost(n: usize, k: usize) -> f64 {
+    let n = n as f64;
+    let kf = k as f64;
+    (n / kf) * (n + (1u64 << k) as f64)
+}
+
+/// Upper end of the k search range: `⌊log₂ n⌋`, capped at 16 (the
+/// segmentation list is `2^k + 1` entries).
+pub fn k_max(n: usize) -> usize {
+    ((usize::BITS - 1 - n.leading_zeros()) as usize).clamp(1, 16)
+}
+
+/// Argmin of a unimodal cost model over `1..=k_max(n)` via ternary-style
+/// narrowing (the paper's "binary search on k"); falls back to a scan —
+/// the range never exceeds 16 values so both are exact and instant.
+fn argmin_cost(n: usize, cost: impl Fn(usize, usize) -> f64) -> usize {
+    (1..=k_max(n))
+        .min_by(|&a, &b| cost(n, a).partial_cmp(&cost(n, b)).unwrap())
+        .unwrap_or(1)
+}
+
+/// Analytic `k_opt` for RSR (Eq 6).
+pub fn optimal_k_rsr(n: usize) -> usize {
+    argmin_cost(n, rsr_cost)
+}
+
+/// Analytic `k_opt` for RSR++ (Eq 7).
+pub fn optimal_k_rsrpp(n: usize) -> usize {
+    argmin_cost(n, rsrpp_cost)
+}
+
+/// Empirical `k_opt`: time the given runner at every `k` in range and
+/// return `(k_opt, times_ms)` — this regenerates App F.1 / Fig 9.
+///
+/// `run(k)` must execute one full multiply with blocking parameter `k`.
+pub fn empirical_k_sweep(
+    n: usize,
+    reps: usize,
+    mut run: impl FnMut(usize),
+) -> (usize, Vec<(usize, f64)>) {
+    let mut results = Vec::new();
+    for k in 1..=k_max(n) {
+        // warmup
+        run(k);
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            run(k);
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        results.push((k, ms));
+    }
+    let k_opt = results
+        .iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .map(|&(k, _)| k)
+        .unwrap_or(1);
+    (k_opt, results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k_max_is_floor_log2() {
+        assert_eq!(k_max(2), 1);
+        assert_eq!(k_max(1024), 10);
+        assert_eq!(k_max(4096), 12);
+        assert_eq!(k_max(1 << 16), 16);
+        assert_eq!(k_max(1 << 20), 16); // capped
+    }
+
+    #[test]
+    fn optimal_k_grows_with_n() {
+        // Paper Fig 9: larger n → larger k_opt.
+        let ks: Vec<usize> = [1 << 8, 1 << 10, 1 << 12, 1 << 14, 1 << 16]
+            .iter()
+            .map(|&n| optimal_k_rsrpp(n))
+            .collect();
+        for w in ks.windows(2) {
+            assert!(w[0] <= w[1], "k_opt must be non-decreasing: {ks:?}");
+        }
+        assert!(ks[0] < ks[4]);
+    }
+
+    #[test]
+    fn rsrpp_opt_k_at_least_rsr_opt_k() {
+        // RSR++'s cheaper step 2 tolerates larger k (log n vs
+        // log(n/log n)).
+        for n in [1 << 10, 1 << 12, 1 << 14] {
+            assert!(optimal_k_rsrpp(n) >= optimal_k_rsr(n));
+        }
+    }
+
+    #[test]
+    fn cost_models_match_theory_at_canonical_k() {
+        // At k = log(n): RSR++ cost = (n/log n)(n + n) = 2n²/log n.
+        let n = 1 << 12;
+        let k = 12;
+        let c = rsrpp_cost(n, k);
+        let expect = 2.0 * (n as f64) * (n as f64) / 12.0;
+        assert!((c - expect).abs() < 1e-6 * expect);
+    }
+
+    #[test]
+    fn analytic_argmin_is_global_min() {
+        for n in [64usize, 1 << 10, 1 << 13] {
+            let k = optimal_k_rsr(n);
+            for other in 1..=k_max(n) {
+                assert!(rsr_cost(n, k) <= rsr_cost(n, other));
+            }
+            let kpp = optimal_k_rsrpp(n);
+            for other in 1..=k_max(n) {
+                assert!(rsrpp_cost(n, kpp) <= rsrpp_cost(n, other));
+            }
+        }
+    }
+
+    #[test]
+    fn empirical_sweep_returns_all_ks() {
+        let n = 256;
+        let (k_opt, times) = empirical_k_sweep(n, 1, |_k| {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(times.len(), k_max(n));
+        assert!(k_opt >= 1 && k_opt <= k_max(n));
+    }
+}

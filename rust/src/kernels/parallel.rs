@@ -1,0 +1,179 @@
+//! Block-parallel execution (paper Appendix C.1.I).
+//!
+//! Column blocks are independent: block `i` reads all of `v` but writes
+//! only columns `[iₛ, iₛ+width)` of the output. With `c` cores the
+//! time drops to `O(n²/(c·log n))` for RSR++.
+//!
+//! Each thread carries its own `u`/fold scratch; the output is split
+//! into disjoint per-block slices up front so no synchronization is
+//! needed beyond the work-stealing counter.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::index::{RsrIndex, TernaryRsrIndex};
+use super::rsr::{check_shapes, segmented_sum_unchecked};
+use super::rsrpp::block_product_fold;
+use crate::error::Result;
+
+/// Parallel RSR++ plan: validated index + thread count.
+#[derive(Debug, Clone)]
+pub struct ParallelRsrPlan {
+    index: RsrIndex,
+    threads: usize,
+}
+
+impl ParallelRsrPlan {
+    /// Build with an explicit thread count (`0` → default).
+    pub fn new(index: RsrIndex, threads: usize) -> Result<Self> {
+        index.validate()?;
+        let threads = if threads == 0 {
+            crate::util::threadpool::default_threads()
+        } else {
+            threads
+        };
+        Ok(Self { index, threads })
+    }
+
+    /// The underlying index.
+    pub fn index(&self) -> &RsrIndex {
+        &self.index
+    }
+
+    /// Configured worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// `out = v · B`, blocks distributed across threads.
+    pub fn execute(&self, v: &[f32], out: &mut [f32]) -> Result<()> {
+        check_shapes(&self.index, v, out)?;
+        let blocks = &self.index.blocks;
+        if blocks.is_empty() {
+            return Ok(());
+        }
+
+        // Split `out` into per-block disjoint slices.
+        let mut slices: Vec<&mut [f32]> = Vec::with_capacity(blocks.len());
+        let mut rest = out;
+        for blk in blocks {
+            let (head, tail) = rest.split_at_mut(blk.width as usize);
+            slices.push(head);
+            rest = tail;
+        }
+
+        let max_u = blocks.iter().map(|b| 1usize << b.width).max().unwrap();
+        let next = AtomicUsize::new(0);
+        let slices = std::sync::Mutex::new(slices.into_iter().map(Some).collect::<Vec<_>>());
+
+        std::thread::scope(|scope| {
+            for _ in 0..self.threads.min(blocks.len()) {
+                scope.spawn(|| {
+                    let mut u = vec![0.0f32; max_u];
+                    let mut fold = vec![0.0f32; max_u];
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= blocks.len() {
+                            break;
+                        }
+                        // Take ownership of this block's output slice.
+                        let slice = {
+                            let mut guard = slices.lock().unwrap();
+                            guard[i].take().expect("block claimed once")
+                        };
+                        let blk = &blocks[i];
+                        let w = blk.width as usize;
+                        segmented_sum_unchecked(blk, v, &mut u[..1 << w]);
+                        block_product_fold(&u[..1 << w], w, slice, &mut fold);
+                    }
+                });
+            }
+        });
+        Ok(())
+    }
+}
+
+/// Parallel ternary plan (`A = B⁽¹⁾ − B⁽²⁾`, both halves parallel).
+#[derive(Debug, Clone)]
+pub struct ParallelTernaryRsrPlan {
+    plus: ParallelRsrPlan,
+    minus: ParallelRsrPlan,
+}
+
+impl ParallelTernaryRsrPlan {
+    /// Build with an explicit thread count (`0` → default).
+    pub fn new(index: TernaryRsrIndex, threads: usize) -> Result<Self> {
+        Ok(Self {
+            plus: ParallelRsrPlan::new(index.plus, threads)?,
+            minus: ParallelRsrPlan::new(index.minus, threads)?,
+        })
+    }
+
+    /// `out = v · A`.
+    pub fn execute(&self, v: &[f32], out: &mut [f32]) -> Result<()> {
+        let mut tmp = vec![0.0f32; out.len()];
+        self.plus.execute(v, out)?;
+        self.minus.execute(v, &mut tmp)?;
+        for (o, t) in out.iter_mut().zip(tmp.iter()) {
+            *o -= t;
+        }
+        Ok(())
+    }
+
+    /// Index bytes across both Prop 2.1 halves.
+    pub fn index_bytes(&self) -> usize {
+        self.plus.index().bytes() + self.minus.index().bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::binary::BinaryMatrix;
+    use super::super::standard::standard_mul_binary;
+    use super::super::ternary::TernaryMatrix;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn parallel_matches_standard_across_thread_counts() {
+        let mut rng = Rng::new(107);
+        let b = BinaryMatrix::random(256, 96, 0.5, &mut rng);
+        let v = rng.f32_vec(256, -1.0, 1.0);
+        let expect = standard_mul_binary(&v, &b);
+        for threads in [1usize, 2, 4, 8] {
+            let plan =
+                ParallelRsrPlan::new(RsrIndex::preprocess(&b, 4), threads).unwrap();
+            let mut out = vec![0.0; 96];
+            plan.execute(&v, &mut out).unwrap();
+            for (g, e) in out.iter().zip(expect.iter()) {
+                assert!((g - e).abs() < 1e-3, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_ternary_matches_standard() {
+        use super::super::standard::standard_mul_ternary;
+        let mut rng = Rng::new(109);
+        let a = TernaryMatrix::random(128, 64, 1.0 / 3.0, &mut rng);
+        let v = rng.f32_vec(128, -1.0, 1.0);
+        let plan = ParallelTernaryRsrPlan::new(
+            TernaryRsrIndex::preprocess(&a, 4),
+            3,
+        )
+        .unwrap();
+        let mut out = vec![0.0; 64];
+        plan.execute(&v, &mut out).unwrap();
+        let expect = standard_mul_ternary(&v, &a);
+        for (g, e) in out.iter().zip(expect.iter()) {
+            assert!((g - e).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn zero_threads_uses_default() {
+        let mut rng = Rng::new(113);
+        let b = BinaryMatrix::random(32, 16, 0.5, &mut rng);
+        let plan = ParallelRsrPlan::new(RsrIndex::preprocess(&b, 3), 0).unwrap();
+        assert!(plan.threads() >= 1);
+    }
+}

@@ -1,0 +1,139 @@
+//! Step 2 of preprocessing — *binary row order* (paper Def 3.2).
+//!
+//! For one column block, rows are sorted by the k-bit value of the row
+//! (MSB = first column of the block, matching `B_i[r,:]₂`). The sort is
+//! a stable counting sort on the `2^k` possible keys — `O(n + 2^k)` per
+//! block, which is the `O(n)` bucket sort the proof of Thm 3.6 uses.
+//!
+//! The output `sigma` is the permutation as the paper uses it:
+//! `sigma[pos] = r` means row `r` of `B` lands at sorted position `pos`
+//! (`π_σ(v)[pos] = v[σ(pos)]`).
+
+use super::binary::BinaryMatrix;
+
+/// Result of binary-row-ordering one block: the permutation and the
+/// per-key counts (which Step 3 turns into the segmentation list).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RowOrder {
+    /// `sigma[pos] = original_row`, length `n`.
+    pub sigma: Vec<u32>,
+    /// `counts[key]` = number of rows whose block-key equals `key`,
+    /// length `2^width`.
+    pub counts: Vec<u32>,
+}
+
+/// Compute the binary row order of the block `B[:, col_start .. col_start+width]`.
+pub fn binary_row_order(b: &BinaryMatrix, col_start: usize, width: usize) -> RowOrder {
+    let n = b.rows();
+    let buckets = 1usize << width;
+    let mut counts = vec![0u32; buckets];
+
+    // Pass 1: histogram of row keys.
+    let mut keys = Vec::with_capacity(n);
+    for r in 0..n {
+        let key = b.row_key(r, col_start, width);
+        keys.push(key);
+        counts[key as usize] += 1;
+    }
+
+    // Exclusive prefix sum → first write position per key.
+    let mut pos = vec![0u32; buckets];
+    let mut acc = 0u32;
+    for (p, &c) in pos.iter_mut().zip(counts.iter()) {
+        *p = acc;
+        acc += c;
+    }
+
+    // Pass 2: stable placement.
+    let mut sigma = vec![0u32; n];
+    for (r, &key) in keys.iter().enumerate() {
+        let p = &mut pos[key as usize];
+        sigma[*p as usize] = r as u32;
+        *p += 1;
+    }
+
+    RowOrder { sigma, counts }
+}
+
+/// Check that `sigma` is a bijection on `0..n` (used by tests and the
+/// index deserializer's validation).
+pub fn is_permutation(sigma: &[u32], n: usize) -> bool {
+    if sigma.len() != n {
+        return false;
+    }
+    let mut seen = vec![false; n];
+    for &s in sigma {
+        let s = s as usize;
+        if s >= n || seen[s] {
+            return false;
+        }
+        seen[s] = true;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// The paper's Example 3.3 block (6×2).
+    fn example_block() -> BinaryMatrix {
+        BinaryMatrix::from_rows(&[
+            &[0, 1],
+            &[0, 0],
+            &[0, 1],
+            &[1, 1],
+            &[0, 0],
+            &[0, 0],
+        ])
+    }
+
+    #[test]
+    fn matches_paper_example_3_3() {
+        let b = example_block();
+        let ro = binary_row_order(&b, 0, 2);
+        // Paper: σ = ⟨2,5,6,1,3,4⟩ in 1-based = [1,4,5,0,2,3] 0-based.
+        assert_eq!(ro.sigma, vec![1, 4, 5, 0, 2, 3]);
+        // counts per key 00,01,10,11 = 3,2,0,1
+        assert_eq!(ro.counts, vec![3, 2, 0, 1]);
+    }
+
+    #[test]
+    fn sorted_keys_are_nondecreasing_and_stable() {
+        let mut rng = Rng::new(31);
+        let b = BinaryMatrix::random(200, 8, 0.5, &mut rng);
+        let ro = binary_row_order(&b, 0, 8);
+        assert!(is_permutation(&ro.sigma, 200));
+        let keys: Vec<u32> = ro.sigma.iter().map(|&r| b.row_key(r as usize, 0, 8)).collect();
+        for w in keys.windows(2) {
+            assert!(w[0] <= w[1], "keys not sorted");
+        }
+        // Stability: equal keys keep original row order.
+        for w in ro.sigma.windows(2) {
+            let (r0, r1) = (w[0] as usize, w[1] as usize);
+            if b.row_key(r0, 0, 8) == b.row_key(r1, 0, 8) {
+                assert!(r0 < r1, "counting sort must be stable");
+            }
+        }
+    }
+
+    #[test]
+    fn counts_sum_to_n() {
+        let mut rng = Rng::new(37);
+        for width in [1usize, 3, 5] {
+            let b = BinaryMatrix::random(77, 6 * width, 0.3, &mut rng);
+            let ro = binary_row_order(&b, width, width);
+            assert_eq!(ro.counts.iter().sum::<u32>(), 77);
+            assert_eq!(ro.counts.len(), 1 << width);
+        }
+    }
+
+    #[test]
+    fn is_permutation_rejects_bad_inputs() {
+        assert!(is_permutation(&[2, 0, 1], 3));
+        assert!(!is_permutation(&[0, 0, 1], 3)); // duplicate
+        assert!(!is_permutation(&[0, 3, 1], 3)); // out of range
+        assert!(!is_permutation(&[0, 1], 3)); // wrong length
+    }
+}

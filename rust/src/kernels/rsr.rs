@@ -1,0 +1,313 @@
+//! RSR — Algorithm 2 of the paper (inference time).
+//!
+//! For each k-column block `Bᵢ` with index `(σᵢ, Lᵢ)`:
+//!
+//! 1. **Segmented sum** (Eq 5, in place — never materializes the
+//!    permuted vector): `u[j] = Σ_{pos ∈ [L[j], L[j+1])} v[σ(pos)]`,
+//!    `O(n)` per block.
+//! 2. **Block product**: `rᵢ = u · Bin_[k]`, `O(k·2^k)`.
+//!
+//! Total `O((n/k)(n + k·2^k))`; with `k = log(n/log n)` that is
+//! `O(n²/(log n − log log n))` (Theorem 4.3).
+
+use super::index::{BlockIndex, RsrIndex, TernaryRsrIndex};
+use crate::error::{Error, Result};
+
+/// Step 1: segmented sums of `v` under `(σ, L)` without materializing
+/// the permuted vector (paper Eq 5). Writes `2^width` sums into `u`.
+#[inline]
+pub fn segmented_sum(blk: &BlockIndex, v: &[f32], u: &mut [f32]) {
+    let seg = &blk.seg;
+    let sigma = &blk.sigma;
+    debug_assert_eq!(u.len() + 1, seg.len());
+    for j in 0..u.len() {
+        let lo = seg[j] as usize;
+        let hi = seg[j + 1] as usize;
+        let mut acc = 0.0f32;
+        // Gather-accumulate over the segment. `sigma` entries are a
+        // permutation of 0..n so the unchecked reads stay in bounds;
+        // keep the checked form here — the hot path lives in
+        // `segmented_sum_unchecked` below and is exercised by the same
+        // tests.
+        for &s in &sigma[lo..hi] {
+            acc += v[s as usize];
+        }
+        u[j] = acc;
+    }
+}
+
+/// Bounds-check-free variant of [`segmented_sum`] used on the hot path.
+///
+/// # Safety contract (validated at plan build time)
+/// `blk` passed index validation: `sigma` is a permutation of
+/// `0..v.len()` and `seg` is monotone with last entry `v.len()`.
+#[inline]
+pub fn segmented_sum_unchecked(blk: &BlockIndex, v: &[f32], u: &mut [f32]) {
+    let seg = &blk.seg;
+    let sigma = &blk.sigma;
+    debug_assert_eq!(u.len() + 1, seg.len());
+    for j in 0..u.len() {
+        let lo = seg[j] as usize;
+        let hi = seg[j + 1] as usize;
+        let mut acc = 0.0f32;
+        unsafe {
+            for pos in lo..hi {
+                let s = *sigma.get_unchecked(pos) as usize;
+                acc += *v.get_unchecked(s);
+            }
+        }
+        u[j] = acc;
+    }
+}
+
+/// Step 2 (RSR's dense form): `r += u · Bin_[width]`, writing `width`
+/// outputs. `O(width · 2^width)` — iterate values `l`, scatter `u[l]`
+/// into each set bit's column.
+#[inline]
+pub fn block_product_dense(u: &[f32], width: usize, out: &mut [f32]) {
+    debug_assert_eq!(u.len(), 1 << width);
+    debug_assert_eq!(out.len(), width);
+    out.fill(0.0);
+    for (l, &ul) in u.iter().enumerate() {
+        if ul == 0.0 {
+            continue; // empty segments are common (2^k close to n)
+        }
+        // Column j of Bin_[k] holds bit (width-1-j) of l.
+        let mut bits = l;
+        let mut j = width;
+        while bits != 0 {
+            j -= 1;
+            if bits & 1 == 1 {
+                out[j] += ul;
+            }
+            bits >>= 1;
+        }
+    }
+}
+
+/// A reusable execution plan: the index plus scratch for `u`, so the
+/// per-call hot path does no allocation.
+#[derive(Debug, Clone)]
+pub struct RsrPlan {
+    index: RsrIndex,
+    scratch: Vec<f32>,
+}
+
+impl RsrPlan {
+    /// Build (and validate) a plan from a preprocessed index.
+    pub fn new(index: RsrIndex) -> Result<Self> {
+        index.validate()?;
+        let max_u = index
+            .blocks
+            .iter()
+            .map(|b| 1usize << b.width)
+            .max()
+            .unwrap_or(0);
+        Ok(Self { index, scratch: vec![0.0; max_u] })
+    }
+
+    /// The underlying index.
+    pub fn index(&self) -> &RsrIndex {
+        &self.index
+    }
+
+    /// `out = v · B` using RSR (Algorithm 2). `out.len() == cols`.
+    pub fn execute(&mut self, v: &[f32], out: &mut [f32]) -> Result<()> {
+        check_shapes(&self.index, v, out)?;
+        for blk in &self.index.blocks {
+            let w = blk.width as usize;
+            let u = &mut self.scratch[..1 << w];
+            segmented_sum_unchecked(blk, v, u);
+            let col = blk.col_start as usize;
+            block_product_dense(u, w, &mut out[col..col + w]);
+        }
+        Ok(())
+    }
+}
+
+pub(crate) fn check_shapes(index: &RsrIndex, v: &[f32], out: &[f32]) -> Result<()> {
+    if v.len() != index.rows {
+        return Err(Error::ShapeMismatch(format!(
+            "vector len {} != rows {}",
+            v.len(),
+            index.rows
+        )));
+    }
+    if out.len() != index.cols {
+        return Err(Error::ShapeMismatch(format!(
+            "output len {} != cols {}",
+            out.len(),
+            index.cols
+        )));
+    }
+    Ok(())
+}
+
+/// One-shot convenience: preprocess + execute RSR on a binary matrix.
+pub fn rsr_mul(v: &[f32], b: &super::binary::BinaryMatrix, k: usize) -> Vec<f32> {
+    let mut plan = RsrPlan::new(RsrIndex::preprocess(b, k)).expect("fresh index is valid");
+    let mut out = vec![0.0; b.cols()];
+    plan.execute(v, &mut out).expect("shapes match");
+    out
+}
+
+/// Ternary RSR: `v·A = v·B⁽¹⁾ − v·B⁽²⁾` (Prop 2.1).
+#[derive(Debug, Clone)]
+pub struct TernaryRsrPlan {
+    plus: RsrPlan,
+    minus: RsrPlan,
+    tmp: Vec<f32>,
+}
+
+impl TernaryRsrPlan {
+    /// Build from a preprocessed ternary index.
+    pub fn new(index: TernaryRsrIndex) -> Result<Self> {
+        let cols = index.plus.cols;
+        Ok(Self {
+            plus: RsrPlan::new(index.plus)?,
+            minus: RsrPlan::new(index.minus)?,
+            tmp: vec![0.0; cols],
+        })
+    }
+
+    /// `out = v · A`.
+    pub fn execute(&mut self, v: &[f32], out: &mut [f32]) -> Result<()> {
+        self.plus.execute(v, out)?;
+        self.minus.execute(v, &mut self.tmp)?;
+        for (o, t) in out.iter_mut().zip(self.tmp.iter()) {
+            *o -= t;
+        }
+        Ok(())
+    }
+
+    /// Index bytes across both halves.
+    pub fn bytes(&self) -> usize {
+        self.plus.index().bytes() + self.minus.index().bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::binary::BinaryMatrix;
+    use super::super::standard::{standard_mul_binary, standard_mul_ternary};
+    use super::super::ternary::TernaryMatrix;
+    use crate::util::rng::Rng;
+
+    fn assert_close(a: &[f32], b: &[f32]) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            let tol = 1e-3 * (1.0 + x.abs().max(y.abs()));
+            assert!((x - y).abs() <= tol, "elem {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matches_paper_segmented_sum_example() {
+        // Example under Def 4.1: the *permuted* vector v_π =
+        // [3,2,4,5,9,1] on Example 3.3's block → SS = [9, 14, 0, 1]
+        // (9 = 3+2+4, 14 = 5+9, empty segment 10, 1 = 1). Eq 5 computes
+        // the same sums in place from the unpermuted v, so build v with
+        // v[σ(pos)] = v_π[pos].
+        let b = super::super::index::paper_matrix();
+        let idx = RsrIndex::preprocess(&b, 2);
+        let blk = &idx.blocks[0];
+        let v_pi = [3.0f32, 2.0, 4.0, 5.0, 9.0, 1.0];
+        let mut v = [0.0f32; 6];
+        for (pos, &r) in blk.sigma.iter().enumerate() {
+            v[r as usize] = v_pi[pos];
+        }
+        let mut u = [0.0f32; 4];
+        segmented_sum(blk, &v, &mut u);
+        assert_eq!(u, [9.0, 14.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn unchecked_matches_checked() {
+        let mut rng = Rng::new(59);
+        let b = BinaryMatrix::random(100, 30, 0.5, &mut rng);
+        let idx = RsrIndex::preprocess(&b, 4);
+        let v = rng.f32_vec(100, -1.0, 1.0);
+        for blk in &idx.blocks {
+            let mut u1 = vec![0.0; 1 << blk.width];
+            let mut u2 = vec![0.0; 1 << blk.width];
+            segmented_sum(blk, &v, &mut u1);
+            segmented_sum_unchecked(blk, &v, &mut u2);
+            assert_eq!(u1, u2);
+        }
+    }
+
+    #[test]
+    fn rsr_matches_standard_binary() {
+        let mut rng = Rng::new(61);
+        for (n, m, k) in [(64, 64, 3), (100, 60, 4), (33, 7, 5), (128, 128, 1)] {
+            let b = BinaryMatrix::random(n, m, 0.5, &mut rng);
+            let v = rng.f32_vec(n, -2.0, 2.0);
+            let expect = standard_mul_binary(&v, &b);
+            let got = rsr_mul(&v, &b, k);
+            assert_close(&got, &expect);
+        }
+    }
+
+    #[test]
+    fn rsr_matches_standard_ternary() {
+        let mut rng = Rng::new(67);
+        let a = TernaryMatrix::random(80, 48, 1.0 / 3.0, &mut rng);
+        let v = rng.f32_vec(80, -1.0, 1.0);
+        let expect = standard_mul_ternary(&v, &a);
+        let mut plan =
+            TernaryRsrPlan::new(TernaryRsrIndex::preprocess(&a, 4)).unwrap();
+        let mut out = vec![0.0; 48];
+        plan.execute(&v, &mut out).unwrap();
+        assert_close(&out, &expect);
+    }
+
+    #[test]
+    fn plan_rejects_bad_shapes() {
+        let mut rng = Rng::new(71);
+        let b = BinaryMatrix::random(10, 10, 0.5, &mut rng);
+        let mut plan = RsrPlan::new(RsrIndex::preprocess(&b, 2)).unwrap();
+        let mut out = vec![0.0; 10];
+        assert!(plan.execute(&[0.0; 9], &mut out).is_err());
+        let v = vec![0.0; 10];
+        let mut bad_out = vec![0.0; 9];
+        assert!(plan.execute(&v, &mut bad_out).is_err());
+    }
+
+    #[test]
+    fn edge_cases_all_zero_and_all_one() {
+        let mut rng = Rng::new(73);
+        let v = rng.f32_vec(32, -1.0, 1.0);
+        let zero = BinaryMatrix::zeros(32, 16);
+        assert_eq!(rsr_mul(&v, &zero, 4), vec![0.0; 16]);
+        let mut ones = BinaryMatrix::zeros(32, 16);
+        for r in 0..32 {
+            for c in 0..16 {
+                ones.set(r, c, true);
+            }
+        }
+        let s: f32 = v.iter().sum();
+        let got = rsr_mul(&v, &ones, 4);
+        for g in got {
+            assert!((g - s).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn block_product_dense_matches_naive() {
+        let mut rng = Rng::new(79);
+        for width in 1..=8usize {
+            let u = rng.f32_vec(1 << width, -1.0, 1.0);
+            let mut out = vec![0.0; width];
+            block_product_dense(&u, width, &mut out);
+            // naive: out[j] = Σ_l u[l]·bit(l, j)
+            for j in 0..width {
+                let expect: f32 = (0..1usize << width)
+                    .filter(|l| (l >> (width - 1 - j)) & 1 == 1)
+                    .map(|l| u[l])
+                    .sum();
+                assert!((out[j] - expect).abs() < 1e-4);
+            }
+        }
+    }
+}

@@ -1,0 +1,205 @@
+//! RSR++ — Algorithm 3 of the paper.
+//!
+//! Step 2 of RSR computes `u · Bin_[k]` densely in `O(k·2^k)`. RSR++
+//! exploits the structure of `Bin_[k]`: the last output (LSB column) is
+//! the sum of `u` at odd values; folding adjacent pairs
+//! (`x'[m] = x[2m] + x[2m+1]`) shifts every value right by one bit, so
+//! the same odd-sum on the folded vector yields the next column. Total
+//! `Σᵢ O(2ⁱ) = O(2^k)`.
+//!
+//! With RSR++ as the step-2 subroutine the overall inference cost is
+//! `O((n/k)(n + 2^k))`; with `k = log n` that is `O(n²/log n)`
+//! (Theorem 4.4).
+
+use super::index::{RsrIndex, TernaryRsrIndex};
+use super::rsr::{check_shapes, segmented_sum_unchecked};
+use crate::error::Result;
+
+/// Algorithm 3: `out = u · Bin_[width]` in `O(2^width)` using the
+/// fold-and-odd-sum scheme. `scratch` must be at least `2^width` long;
+/// `u` is consumed logically (scratch holds the folded copies).
+#[inline]
+pub fn block_product_fold(u: &[f32], width: usize, out: &mut [f32], scratch: &mut [f32]) {
+    debug_assert_eq!(u.len(), 1 << width);
+    debug_assert_eq!(out.len(), width);
+    debug_assert!(scratch.len() >= 1 << width);
+
+    // Level k (LSB column, out[width-1]): odd-sum of u, while also
+    // producing the first fold into scratch.
+    let x = &mut scratch[..1 << width];
+    x.copy_from_slice(u);
+    let mut len = 1usize << width;
+    // Columns are emitted LSB-first: col = width-1 down to 0.
+    for col in (0..width).rev() {
+        // Sum of odd-indexed (odd-valued) entries of x[..len].
+        let mut odd = 0.0f32;
+        let mut i = 1;
+        while i < len {
+            odd += x[i];
+            i += 2;
+        }
+        out[col] = odd;
+        // Fold: x[m] = x[2m] + x[2m+1].
+        if col > 0 {
+            let half = len / 2;
+            for m in 0..half {
+                x[m] = x[2 * m] + x[2 * m + 1];
+            }
+            len = half;
+        }
+    }
+}
+
+/// A reusable RSR++ plan (index + scratch; no allocation per call).
+#[derive(Debug, Clone)]
+pub struct RsrPlusPlusPlan {
+    index: RsrIndex,
+    u: Vec<f32>,
+    fold: Vec<f32>,
+}
+
+impl RsrPlusPlusPlan {
+    /// Build (and validate) a plan from a preprocessed index.
+    pub fn new(index: RsrIndex) -> Result<Self> {
+        index.validate()?;
+        let max_u = index.blocks.iter().map(|b| 1usize << b.width).max().unwrap_or(0);
+        Ok(Self { index, u: vec![0.0; max_u], fold: vec![0.0; max_u] })
+    }
+
+    /// The underlying index.
+    pub fn index(&self) -> &RsrIndex {
+        &self.index
+    }
+
+    /// Index bytes (Fig 5 accounting at the plan level).
+    pub fn index_bytes(&self) -> usize {
+        self.index.bytes()
+    }
+
+    /// `out = v · B` using RSR with Algorithm 3 in step 2.
+    pub fn execute(&mut self, v: &[f32], out: &mut [f32]) -> Result<()> {
+        check_shapes(&self.index, v, out)?;
+        for blk in &self.index.blocks {
+            let w = blk.width as usize;
+            let u = &mut self.u[..1 << w];
+            segmented_sum_unchecked(blk, v, u);
+            let col = blk.col_start as usize;
+            block_product_fold(u, w, &mut out[col..col + w], &mut self.fold);
+        }
+        Ok(())
+    }
+}
+
+/// One-shot convenience: preprocess + execute RSR++ on a binary matrix.
+pub fn rsrpp_mul(v: &[f32], b: &super::binary::BinaryMatrix, k: usize) -> Vec<f32> {
+    let mut plan =
+        RsrPlusPlusPlan::new(RsrIndex::preprocess(b, k)).expect("fresh index is valid");
+    let mut out = vec![0.0; b.cols()];
+    plan.execute(v, &mut out).expect("shapes match");
+    out
+}
+
+/// Ternary RSR++ plan (both Prop 2.1 halves).
+#[derive(Debug, Clone)]
+pub struct TernaryRsrPlusPlusPlan {
+    plus: RsrPlusPlusPlan,
+    minus: RsrPlusPlusPlan,
+    tmp: Vec<f32>,
+}
+
+impl TernaryRsrPlusPlusPlan {
+    /// Build from a preprocessed ternary index.
+    pub fn new(index: TernaryRsrIndex) -> Result<Self> {
+        let cols = index.plus.cols;
+        Ok(Self {
+            plus: RsrPlusPlusPlan::new(index.plus)?,
+            minus: RsrPlusPlusPlan::new(index.minus)?,
+            tmp: vec![0.0; cols],
+        })
+    }
+
+    /// `out = v · A`.
+    pub fn execute(&mut self, v: &[f32], out: &mut [f32]) -> Result<()> {
+        self.plus.execute(v, out)?;
+        self.minus.execute(v, &mut self.tmp)?;
+        for (o, t) in out.iter_mut().zip(self.tmp.iter()) {
+            *o -= t;
+        }
+        Ok(())
+    }
+
+    /// Index bytes across both Prop 2.1 halves.
+    pub fn index_bytes(&self) -> usize {
+        self.plus.index().bytes() + self.minus.index().bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::binary::BinaryMatrix;
+    use super::super::rsr::{block_product_dense, rsr_mul};
+    use super::super::standard::standard_mul_binary;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fold_matches_dense_block_product() {
+        let mut rng = Rng::new(83);
+        for width in 1..=10usize {
+            let u = rng.f32_vec(1 << width, -1.0, 1.0);
+            let mut dense = vec![0.0; width];
+            let mut fold = vec![0.0; width];
+            let mut scratch = vec![0.0; 1 << width];
+            block_product_dense(&u, width, &mut dense);
+            block_product_fold(&u, width, &mut fold, &mut scratch);
+            for (a, b) in dense.iter().zip(fold.iter()) {
+                assert!((a - b).abs() < 1e-3, "width {width}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn fold_visualization_example() {
+        // Fig 3 style check with a tiny concrete case, width=2:
+        // u = [u0,u1,u2,u3]; out[1] (LSB col) = u1+u3; fold → [u0+u1,
+        // u2+u3]; out[0] = u2+u3.
+        let u = [1.0f32, 2.0, 3.0, 4.0];
+        let mut out = [0.0f32; 2];
+        let mut scratch = [0.0f32; 4];
+        block_product_fold(&u, 2, &mut out, &mut scratch);
+        assert_eq!(out, [7.0, 6.0]);
+    }
+
+    #[test]
+    fn rsrpp_matches_standard_and_rsr() {
+        let mut rng = Rng::new(89);
+        for (n, m, k) in [(64, 64, 3), (100, 60, 4), (33, 7, 5), (128, 128, 8)] {
+            let b = BinaryMatrix::random(n, m, 0.5, &mut rng);
+            let v = rng.f32_vec(n, -2.0, 2.0);
+            let expect = standard_mul_binary(&v, &b);
+            let got_pp = rsrpp_mul(&v, &b, k);
+            let got_rsr = rsr_mul(&v, &b, k);
+            for i in 0..m {
+                assert!((got_pp[i] - expect[i]).abs() < 1e-3 * (1.0 + expect[i].abs()));
+                assert!((got_pp[i] - got_rsr[i]).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn ternary_plan_works() {
+        use super::super::standard::standard_mul_ternary;
+        use super::super::ternary::TernaryMatrix;
+        let mut rng = Rng::new(97);
+        let a = TernaryMatrix::random(50, 30, 1.0 / 3.0, &mut rng);
+        let v = rng.f32_vec(50, -1.0, 1.0);
+        let mut plan =
+            TernaryRsrPlusPlusPlan::new(TernaryRsrIndex::preprocess(&a, 3)).unwrap();
+        let mut out = vec![0.0; 30];
+        plan.execute(&v, &mut out).unwrap();
+        let expect = standard_mul_ternary(&v, &a);
+        for (g, e) in out.iter().zip(expect.iter()) {
+            assert!((g - e).abs() < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,87 @@
+//! Step 3 of preprocessing — *full segmentation* (paper Def 3.4).
+//!
+//! For a binary-row-ordered block, the full segmentation list has one
+//! entry per possible k-bit value `j ∈ [0, 2^k)`: the first sorted
+//! position whose row-key is `j`. Keys with no rows reuse the next
+//! boundary (paper Fig 2). We store one extra sentinel entry `L[2^k] = n`
+//! so the segment for key `j` is always `[L[j], L[j+1])` — this removes
+//! the paper's `j = |L|` special case from the inner loop (Eq 3/5).
+
+/// Build the full segmentation list (with sentinel) from per-key counts.
+///
+/// `counts[j]` is the number of rows whose key is `j` (from
+/// [`super::permutation::binary_row_order`]); the result has
+/// `counts.len() + 1` entries, is non-decreasing, starts at 0 and ends
+/// at `n`.
+pub fn full_segmentation(counts: &[u32]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(counts.len() + 1);
+    let mut acc = 0u32;
+    out.push(0);
+    for &c in counts {
+        acc += c;
+        out.push(acc);
+    }
+    out
+}
+
+/// Per Proposition 3.5: the number of rows whose key is `j`.
+#[inline]
+pub fn segment_len(seg: &[u32], j: usize) -> u32 {
+    seg[j + 1] - seg[j]
+}
+
+/// Validate the structural invariants of a full segmentation list for a
+/// block of width `width` over `n` rows.
+pub fn validate(seg: &[u32], width: usize, n: usize) -> Result<(), String> {
+    let expect_len = (1usize << width) + 1;
+    if seg.len() != expect_len {
+        return Err(format!("segmentation length {} != 2^{width}+1", seg.len()));
+    }
+    if seg[0] != 0 {
+        return Err("segmentation must start at 0".into());
+    }
+    if *seg.last().unwrap() as usize != n {
+        return Err(format!("segmentation must end at n={n}"));
+    }
+    if seg.windows(2).any(|w| w[0] > w[1]) {
+        return Err("segmentation must be non-decreasing".into());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_paper_example_3_3() {
+        // counts for keys 00,01,10,11 = 3,2,0,1 (Example 3.3).
+        let seg = full_segmentation(&[3, 2, 0, 1]);
+        // Paper (1-based): [1,4,6,6]; ours (0-based + sentinel): [0,3,5,5,6].
+        assert_eq!(seg, vec![0, 3, 5, 5, 6]);
+        // Empty key 10 has zero length (Prop 3.5).
+        assert_eq!(segment_len(&seg, 2), 0);
+        assert_eq!(segment_len(&seg, 0), 3);
+        assert_eq!(segment_len(&seg, 3), 1);
+        validate(&seg, 2, 6).unwrap();
+    }
+
+    #[test]
+    fn lengths_recover_counts() {
+        let counts = vec![0u32, 7, 0, 0, 3, 1, 0, 2];
+        let seg = full_segmentation(&counts);
+        for (j, &c) in counts.iter().enumerate() {
+            assert_eq!(segment_len(&seg, j), c);
+        }
+        validate(&seg, 3, 13).unwrap();
+    }
+
+    #[test]
+    fn validate_catches_violations() {
+        assert!(validate(&[0, 1, 2], 2, 2).is_err()); // wrong length
+        assert!(validate(&[1, 1, 1, 1, 2], 2, 2).is_err()); // doesn't start at 0
+        assert!(validate(&[0, 1, 1, 1, 3], 2, 2).is_err()); // doesn't end at n
+        assert!(validate(&[0, 2, 1, 2, 2], 2, 2).is_err()); // decreasing
+        assert!(validate(&[0, 1, 1, 2, 2], 2, 2).is_ok());
+    }
+}

@@ -1,0 +1,231 @@
+//! The tensorized formulation (paper Appendix C.1.II / E.2–E.3).
+//!
+//! For each block `j` the paper defines a one-hot segmentation matrix
+//! `M_j ∈ {0,1}^{n×2^k}` with `M_j[r, key_j(r)] = 1`, so the segmented
+//! sum becomes the matmul `u = v·M_j` and the whole inference is one
+//! (batched) tensor contraction — the formulation that maps onto GPU
+//! matmul units and, in our TPU adaptation, onto the MXU (see
+//! DESIGN.md §Hardware-Adaptation; the Pallas kernel in
+//! `python/compile/kernels/rsr_pallas.py` is this same formulation).
+//!
+//! On CPU we store `M_j` compactly as the key-per-row vector (its
+//! one-hot row index), so `v·M_j` is a *scatter-add*:
+//! `u[key[r]] += v[r]` — note this needs **no permutation at all**,
+//! which is exactly why the GPU path skips `σ`. The follow-up product
+//! with `Bin_[k]` is shared with RSR/RSR++.
+//!
+//! This is also an ablation point: scatter-by-key (this module) versus
+//! gather-by-permutation (`rsr.rs`) — same math, different memory
+//! access pattern; see `benches/ablations.rs`.
+
+use super::binary::BinaryMatrix;
+use super::blocking::column_blocks;
+use super::rsrpp::block_product_fold;
+use super::ternary::TernaryMatrix;
+use crate::error::{Error, Result};
+use crate::util::threadpool::parallel_for;
+
+/// Compact tensorized index: per block, the per-row segment key
+/// (the one-hot column index of `M_j`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorizedIndex {
+    /// Rows (`n`).
+    pub rows: usize,
+    /// Columns (`m`).
+    pub cols: usize,
+    /// Blocking parameter `k`.
+    pub k: usize,
+    /// Block geometry: `(col_start, width)` per block.
+    pub blocks: Vec<(u32, u32)>,
+    /// `keys[block][r]` = k-bit key of row `r` in that block.
+    pub keys: Vec<Vec<u16>>,
+}
+
+impl TensorizedIndex {
+    /// Build from a binary matrix (the M-matrix construction of App E.2).
+    pub fn preprocess(b: &BinaryMatrix, k: usize) -> Self {
+        let geom = column_blocks(b.cols(), k);
+        let mut blocks = Vec::with_capacity(geom.len());
+        let mut keys = Vec::with_capacity(geom.len());
+        for cb in &geom {
+            blocks.push((cb.col_start as u32, cb.width as u32));
+            let mut ks = Vec::with_capacity(b.rows());
+            for r in 0..b.rows() {
+                ks.push(b.row_key(r, cb.col_start, cb.width) as u16);
+            }
+            keys.push(ks);
+        }
+        Self { rows: b.rows(), cols: b.cols(), k, blocks, keys }
+    }
+
+    /// Index bytes (keys are u16).
+    pub fn bytes(&self) -> usize {
+        self.keys.iter().map(|k| k.len() * 2).sum::<usize>() + self.blocks.len() * 8 + 16
+    }
+
+    /// `out = v · B` via scatter-add segmented sums.
+    pub fn execute(&self, v: &[f32], out: &mut [f32]) -> Result<()> {
+        self.check(v, out)?;
+        let max_u = self.blocks.iter().map(|&(_, w)| 1usize << w).max().unwrap_or(0);
+        let mut u = vec![0.0f32; max_u];
+        let mut fold = vec![0.0f32; max_u];
+        for (bi, &(col, w)) in self.blocks.iter().enumerate() {
+            let w = w as usize;
+            let u = &mut u[..1 << w];
+            u.fill(0.0);
+            for (r, &key) in self.keys[bi].iter().enumerate() {
+                u[key as usize] += v[r];
+            }
+            let col = col as usize;
+            block_product_fold(u, w, &mut out[col..col + w], &mut fold);
+        }
+        Ok(())
+    }
+
+    /// Batched execution across blocks on `threads` workers — the CPU
+    /// stand-in for the paper's single 3D-tensor GPU launch.
+    pub fn execute_parallel(&self, v: &[f32], out: &mut [f32], threads: usize) -> Result<()> {
+        self.check(v, out)?;
+        // Disjoint output slices per block.
+        let mut slices: Vec<&mut [f32]> = Vec::with_capacity(self.blocks.len());
+        let mut rest = out;
+        for &(_, w) in &self.blocks {
+            let (head, tail) = rest.split_at_mut(w as usize);
+            slices.push(head);
+            rest = tail;
+        }
+        let slices: Vec<std::sync::Mutex<Option<&mut [f32]>>> =
+            slices.into_iter().map(|s| std::sync::Mutex::new(Some(s))).collect();
+        parallel_for(threads, self.blocks.len(), |bi| {
+            let (_, w) = self.blocks[bi];
+            let w = w as usize;
+            let mut u = vec![0.0f32; 1 << w];
+            let mut fold = vec![0.0f32; 1 << w];
+            for (r, &key) in self.keys[bi].iter().enumerate() {
+                u[key as usize] += v[r];
+            }
+            let mut guard = slices[bi].lock().unwrap();
+            let slice = guard.take().expect("block claimed once");
+            block_product_fold(&u, w, slice, &mut fold);
+        });
+        Ok(())
+    }
+
+    fn check(&self, v: &[f32], out: &[f32]) -> Result<()> {
+        if v.len() != self.rows {
+            return Err(Error::ShapeMismatch(format!(
+                "vector len {} != rows {}",
+                v.len(),
+                self.rows
+            )));
+        }
+        if out.len() != self.cols {
+            return Err(Error::ShapeMismatch(format!(
+                "output len {} != cols {}",
+                out.len(),
+                self.cols
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Tensorized ternary index (both Prop 2.1 halves).
+#[derive(Debug, Clone)]
+pub struct TernaryTensorizedIndex {
+    /// Index of `[A == +1]`.
+    pub plus: TensorizedIndex,
+    /// Index of `[A == −1]`.
+    pub minus: TensorizedIndex,
+}
+
+impl TernaryTensorizedIndex {
+    /// Decompose and preprocess both halves.
+    pub fn preprocess(a: &TernaryMatrix, k: usize) -> Self {
+        let (p, m) = a.decompose();
+        Self {
+            plus: TensorizedIndex::preprocess(&p, k),
+            minus: TensorizedIndex::preprocess(&m, k),
+        }
+    }
+
+    /// `out = v · A`.
+    pub fn execute(&self, v: &[f32], out: &mut [f32]) -> Result<()> {
+        self.plus.execute(v, out)?;
+        let mut tmp = vec![0.0f32; out.len()];
+        self.minus.execute(v, &mut tmp)?;
+        for (o, t) in out.iter_mut().zip(tmp.iter()) {
+            *o -= t;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::standard::{standard_mul_binary, standard_mul_ternary};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tensorized_matches_standard() {
+        let mut rng = Rng::new(127);
+        for (n, m, k) in [(64, 48, 4), (100, 30, 5), (17, 5, 3)] {
+            let b = BinaryMatrix::random(n, m, 0.5, &mut rng);
+            let v = rng.f32_vec(n, -1.0, 1.0);
+            let idx = TensorizedIndex::preprocess(&b, k);
+            let mut out = vec![0.0; m];
+            idx.execute(&v, &mut out).unwrap();
+            let expect = standard_mul_binary(&v, &b);
+            for (g, e) in out.iter().zip(expect.iter()) {
+                assert!((g - e).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut rng = Rng::new(131);
+        let b = BinaryMatrix::random(256, 128, 0.5, &mut rng);
+        let v = rng.f32_vec(256, -1.0, 1.0);
+        let idx = TensorizedIndex::preprocess(&b, 6);
+        let mut serial = vec![0.0; 128];
+        let mut par = vec![0.0; 128];
+        idx.execute(&v, &mut serial).unwrap();
+        idx.execute_parallel(&v, &mut par, 4).unwrap();
+        assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn ternary_tensorized_matches_standard() {
+        let mut rng = Rng::new(137);
+        let a = TernaryMatrix::random(90, 60, 1.0 / 3.0, &mut rng);
+        let v = rng.f32_vec(90, -1.0, 1.0);
+        let idx = TernaryTensorizedIndex::preprocess(&a, 4);
+        let mut out = vec![0.0; 60];
+        idx.execute(&v, &mut out).unwrap();
+        let expect = standard_mul_ternary(&v, &a);
+        for (g, e) in out.iter().zip(expect.iter()) {
+            assert!((g - e).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn keys_equal_rsr_segment_membership() {
+        // The scatter keys and the gather permutation describe the same
+        // partition: row r lands in segment key(r).
+        let mut rng = Rng::new(139);
+        let b = BinaryMatrix::random(50, 12, 0.5, &mut rng);
+        let tens = TensorizedIndex::preprocess(&b, 4);
+        let rsr = super::super::index::RsrIndex::preprocess(&b, 4);
+        for (blk, keys) in rsr.blocks.iter().zip(tens.keys.iter()) {
+            for (pos, &r) in blk.sigma.iter().enumerate() {
+                let key = keys[r as usize] as usize;
+                assert!(
+                    (blk.seg[key] as usize) <= pos && pos < (blk.seg[key + 1] as usize),
+                    "row {r} key {key} pos {pos}"
+                );
+            }
+        }
+    }
+}

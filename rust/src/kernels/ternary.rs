@@ -1,0 +1,201 @@
+//! Ternary matrices `A ∈ {-1,0,1}^{n×m}` and the binary decomposition
+//! of Proposition 2.1: `A = B⁽¹⁾ − B⁽²⁾` with `B⁽¹⁾ = [A == 1]` and
+//! `B⁽²⁾ = [A == -1]`.
+
+use super::binary::BinaryMatrix;
+use crate::util::rng::Rng;
+
+/// A ternary matrix stored as i8 (−1, 0, 1), row-major. A 2-bit packed
+/// form is available for storage accounting.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TernaryMatrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<i8>,
+}
+
+impl TernaryMatrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    /// Build from a row-major i8 buffer of −1/0/1 values.
+    pub fn from_dense(rows: usize, cols: usize, data: Vec<i8>) -> Self {
+        assert_eq!(data.len(), rows * cols, "dense buffer size mismatch");
+        assert!(
+            data.iter().all(|&x| (-1..=1).contains(&x)),
+            "values must be in {{-1,0,1}}"
+        );
+        Self { rows, cols, data }
+    }
+
+    /// Uniform random ternary matrix: `P(-1) = P(1) = p`, `P(0) = 1−2p`.
+    /// `p = 1/3` gives the uniform distribution over {−1,0,1}.
+    pub fn random(rows: usize, cols: usize, p: f64, rng: &mut Rng) -> Self {
+        assert!(p <= 0.5);
+        let data = (0..rows * cols)
+            .map(|_| {
+                let x = rng.next_f64();
+                if x < p {
+                    1i8
+                } else if x < 2.0 * p {
+                    -1i8
+                } else {
+                    0i8
+                }
+            })
+            .collect();
+        Self { rows, cols, data }
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Read element `(r, c)`.
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> i8 {
+        self.data[r * self.cols + c]
+    }
+
+    /// Write element `(r, c)`.
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: i8) {
+        debug_assert!((-1..=1).contains(&v));
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Row slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[i8] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Raw buffer.
+    pub fn data(&self) -> &[i8] {
+        &self.data
+    }
+
+    /// Proposition 2.1: decompose into `(B⁽¹⁾, B⁽²⁾)` with
+    /// `A = B⁽¹⁾ − B⁽²⁾`.
+    pub fn decompose(&self) -> (BinaryMatrix, BinaryMatrix) {
+        let mut plus = BinaryMatrix::zeros(self.rows, self.cols);
+        let mut minus = BinaryMatrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for (c, &v) in row.iter().enumerate() {
+                match v {
+                    1 => plus.set(r, c, true),
+                    -1 => minus.set(r, c, true),
+                    _ => {}
+                }
+            }
+        }
+        (plus, minus)
+    }
+
+    /// Bytes of the i8 dense representation.
+    pub fn dense_bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Bytes of a 2-bit packed representation (4 entries/byte) — the
+    /// most compact raw form, used as the honest baseline in Fig 5.
+    pub fn packed2_bytes(&self) -> usize {
+        self.data.len().div_ceil(4)
+    }
+
+    /// Pack into 2-bit codes (00=0, 01=+1, 10=−1), row-major.
+    pub fn pack2(&self) -> Vec<u8> {
+        let mut out = vec![0u8; self.packed2_bytes()];
+        for (i, &v) in self.data.iter().enumerate() {
+            let code: u8 = match v {
+                0 => 0b00,
+                1 => 0b01,
+                -1 => 0b10,
+                _ => unreachable!(),
+            };
+            out[i / 4] |= code << ((i % 4) * 2);
+        }
+        out
+    }
+
+    /// Inverse of [`pack2`](Self::pack2).
+    pub fn unpack2(rows: usize, cols: usize, packed: &[u8]) -> Self {
+        let n = rows * cols;
+        assert!(packed.len() >= n.div_ceil(4), "packed buffer too small");
+        let data = (0..n)
+            .map(|i| match (packed[i / 4] >> ((i % 4) * 2)) & 0b11 {
+                0b00 => 0i8,
+                0b01 => 1i8,
+                0b10 => -1i8,
+                _ => panic!("invalid ternary code at {i}"),
+            })
+            .collect();
+        Self { rows, cols, data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TernaryMatrix {
+        TernaryMatrix::from_dense(
+            2,
+            3,
+            vec![1, 0, -1, /* row 1 */ -1, 1, 0],
+        )
+    }
+
+    #[test]
+    fn decompose_satisfies_prop_2_1() {
+        let a = sample();
+        let (p, m) = a.decompose();
+        for r in 0..2 {
+            for c in 0..3 {
+                let diff = p.get(r, c) as i8 - m.get(r, c) as i8;
+                assert_eq!(diff, a.get(r, c), "({r},{c})");
+                // B1 and B2 are never both 1.
+                assert!(!(p.get(r, c) && m.get(r, c)));
+            }
+        }
+    }
+
+    #[test]
+    fn pack2_roundtrip() {
+        let mut rng = Rng::new(17);
+        let a = TernaryMatrix::random(13, 29, 1.0 / 3.0, &mut rng);
+        let packed = a.pack2();
+        assert_eq!(packed.len(), a.packed2_bytes());
+        let b = TernaryMatrix::unpack2(13, 29, &packed);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn random_distribution_is_plausible() {
+        let mut rng = Rng::new(23);
+        let a = TernaryMatrix::random(100, 100, 1.0 / 3.0, &mut rng);
+        let pos = a.data().iter().filter(|&&x| x == 1).count();
+        let neg = a.data().iter().filter(|&&x| x == -1).count();
+        let zero = a.data().iter().filter(|&&x| x == 0).count();
+        for count in [pos, neg, zero] {
+            assert!((2800..3900).contains(&count), "count {count}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "values must be in")]
+    fn from_dense_rejects_out_of_range() {
+        TernaryMatrix::from_dense(1, 1, vec![2]);
+    }
+}

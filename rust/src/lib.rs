@@ -1,0 +1,57 @@
+//! # rsr — efficient inference for binary & ternary neural networks
+//!
+//! A production-oriented reproduction of *"An Efficient Matrix
+//! Multiplication Algorithm for Accelerating Inference in Binary and
+//! Ternary Neural Networks"* (Dehghankar, Erfanian & Asudeh, ICML
+//! 2025): the **RSR** and **RSR++** algorithms, which preprocess fixed
+//! binary/ternary weight matrices into *block indices* (per-block row
+//! permutations + full segmentation lists) and then multiply an
+//! activation vector by the matrix in `O(n²/log n)` time and
+//! `O(n²/log n)` index space.
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * [`kernels`] — the paper's algorithms and every multiply backend,
+//! * [`model`] — a 1.58-bit (ternary) transformer substrate whose
+//!   `BitLinear` layers dispatch to any backend,
+//! * [`runtime`] — loads AOT-compiled XLA artifacts (HLO text produced
+//!   by the python/JAX/Pallas build step) and executes them via PJRT,
+//! * [`serving`] — request router, dynamic batcher and prefill/decode
+//!   scheduler serving the model over TCP,
+//! * [`bench`] — the harness regenerating every table and figure of the
+//!   paper's evaluation section,
+//! * [`data`] — synthetic datasets and request traces,
+//! * [`util`] — PRNG/stats/threadpool/json substrates (offline
+//!   environment: no rand/rayon/serde/criterion).
+//!
+//! Quick start (see `examples/quickstart.rs`):
+//!
+//! ```
+//! use rsr::kernels::TernaryMatrix;
+//! use rsr::kernels::index::TernaryRsrIndex;
+//! use rsr::kernels::rsr::TernaryRsrPlan;
+//! use rsr::util::rng::Rng;
+//!
+//! let mut rng = Rng::new(0);
+//! let a = TernaryMatrix::random(256, 256, 1.0 / 3.0, &mut rng);
+//! let v = rng.f32_vec(256, -1.0, 1.0);
+//!
+//! // Preprocess once (paper Algorithm 1) …
+//! let index = TernaryRsrIndex::preprocess(&a, 6);
+//! let mut plan = TernaryRsrPlan::new(index).unwrap();
+//!
+//! // … multiply many times (paper Algorithm 2).
+//! let mut out = vec![0.0; 256];
+//! plan.execute(&v, &mut out).unwrap();
+//! ```
+
+pub mod bench;
+pub mod data;
+pub mod error;
+pub mod kernels;
+pub mod model;
+pub mod runtime;
+pub mod serving;
+pub mod util;
+
+pub use error::{Error, Result};

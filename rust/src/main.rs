@@ -1,0 +1,336 @@
+//! `rsr` — the command-line entrypoint of the RSR/RSR++ reproduction.
+//!
+//! ```text
+//! rsr preprocess  --n 4096 --k 0 --out idx.rsi        # Algorithm 1
+//! rsr multiply    --n 4096 --backend rsr++ [--check]  # one product
+//! rsr generate-model --preset tiny --out model.rtw    # synthetic 1.58-bit model
+//! rsr serve       --model model.rtw --addr 0.0.0.0:7878 [--replicas 2]
+//! rsr client      --addr 127.0.0.1:7878 --prompt "What is the capital of France?"
+//! rsr experiment  fig4|fig5|fig6|fig9|fig10|fig11|fig12|table1|ablations [--full]
+//! rsr selfcheck                                        # cross-backend sanity
+//! rsr artifacts                                        # list AOT artifacts
+//! ```
+//!
+//! (clap is unavailable in the offline registry; parsing is manual.)
+
+use std::collections::HashMap;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use rsr::error::{Error, Result};
+use rsr::kernels::index::{RsrIndex, TernaryRsrIndex};
+use rsr::kernels::optimal_k::{optimal_k_rsr, optimal_k_rsrpp};
+use rsr::kernels::{Backend, BinaryMatrix, TernaryMatrix};
+use rsr::model::config::ModelConfig;
+use rsr::model::weights::ModelWeights;
+use rsr::serving::engine::{EngineConfig, InferenceEngine};
+use rsr::serving::router::Router;
+use rsr::serving::server::{Client, Server};
+use rsr::util::rng::Rng;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+/// Parse `--key value` pairs after the subcommand.
+fn flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                out.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                out.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn get_usize(f: &HashMap<String, String>, key: &str, default: usize) -> Result<usize> {
+    match f.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .map_err(|_| Error::Config(format!("--{key} expects an integer, got {v}"))),
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    let f = flags(rest);
+    match cmd.as_str() {
+        "preprocess" => cmd_preprocess(&f),
+        "multiply" => cmd_multiply(&f),
+        "generate-model" => cmd_generate_model(&f),
+        "serve" => cmd_serve(&f),
+        "client" => cmd_client(&f),
+        "experiment" => cmd_experiment(rest, &f),
+        "selfcheck" => cmd_selfcheck(),
+        "artifacts" => cmd_artifacts(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(Error::Config(format!("unknown command {other} (try `rsr help`)"))),
+    }
+}
+
+fn print_help() {
+    println!(
+        "rsr — RSR/RSR++ efficient binary/ternary matmul (ICML 2025 reproduction)\n\n\
+         commands:\n  \
+         preprocess     --n N [--k K] [--seed S] [--out FILE]   build a block index\n  \
+         multiply       --n N [--backend B] [--k K] [--check]   run one v·A product\n  \
+         generate-model [--preset P] [--seed S] --out FILE      synthetic 1.58-bit model\n  \
+         serve          --model FILE [--addr A] [--replicas R] [--workers W] [--backend B]\n  \
+         client         [--addr A] --prompt TEXT [--max-new N]\n  \
+         experiment     <fig4|fig5|fig6|fig9|fig10|fig11|fig12|table1|ablations|all> [--full]\n  \
+         selfcheck                                              cross-backend equality\n  \
+         artifacts                                              list AOT artifacts\n\n\
+         backends: standard standard-packed rsr rsr++ rsr-parallel tensorized\n\
+         presets:  {}",
+        ModelConfig::PRESETS.join(" ")
+    );
+}
+
+fn cmd_preprocess(f: &HashMap<String, String>) -> Result<()> {
+    let n = get_usize(f, "n", 4096)?;
+    let seed = get_usize(f, "seed", 42)? as u64;
+    let k = match get_usize(f, "k", 0)? {
+        0 => optimal_k_rsrpp(n),
+        k => k,
+    };
+    let mut rng = Rng::new(seed);
+    let b = BinaryMatrix::random(n, n, 0.5, &mut rng);
+    let t0 = std::time::Instant::now();
+    let idx = RsrIndex::preprocess(&b, k);
+    let dt = t0.elapsed();
+    println!(
+        "preprocessed {n}x{n} (k={k}) in {:.1}ms: {} blocks, index {:.2} MB \
+         (dense f32 would be {:.2} MB)",
+        dt.as_secs_f64() * 1e3,
+        idx.blocks.len(),
+        idx.bytes() as f64 / 1048576.0,
+        (n * n * 4) as f64 / 1048576.0
+    );
+    if let Some(path) = f.get("out") {
+        idx.save(path)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_multiply(f: &HashMap<String, String>) -> Result<()> {
+    let n = get_usize(f, "n", 4096)?;
+    let seed = get_usize(f, "seed", 42)? as u64;
+    let k = get_usize(f, "k", 0)?;
+    let backend = f
+        .get("backend")
+        .map(|s| {
+            Backend::from_name(s)
+                .ok_or_else(|| Error::Config(format!("unknown backend {s}")))
+        })
+        .transpose()?
+        .unwrap_or(Backend::RsrPlusPlus);
+    let check = f.contains_key("check");
+
+    let mut rng = Rng::new(seed);
+    let a = TernaryMatrix::random(n, n, 1.0 / 3.0, &mut rng);
+    let v = rng.f32_vec(n, -1.0, 1.0);
+    let mut layer = rsr::model::bitlinear::BitLinear::new(a.clone(), 1.0, backend, k)?;
+    let mut out = vec![0.0f32; n];
+
+    let t0 = std::time::Instant::now();
+    layer.forward(&v, &mut out)?;
+    let dt = t0.elapsed();
+    println!(
+        "{} multiply {n}x{n}: {:.3} ms (out[0..4] = {:?})",
+        backend.name(),
+        dt.as_secs_f64() * 1e3,
+        &out[..4.min(n)]
+    );
+    if check {
+        let expect = rsr::kernels::standard::standard_mul_ternary(&v, &a);
+        let max_err = out
+            .iter()
+            .zip(expect.iter())
+            .map(|(g, e)| (g - e).abs())
+            .fold(0.0f32, f32::max);
+        println!("max |err| vs standard: {max_err:.2e}");
+        if max_err > 1e-2 {
+            return Err(Error::Config("check FAILED".into()));
+        }
+        println!("check OK");
+    }
+    Ok(())
+}
+
+fn cmd_generate_model(f: &HashMap<String, String>) -> Result<()> {
+    let preset = f.get("preset").map(|s| s.as_str()).unwrap_or("tiny");
+    let seed = get_usize(f, "seed", 42)? as u64;
+    let out = f
+        .get("out")
+        .ok_or_else(|| Error::Config("generate-model requires --out FILE".into()))?;
+    let cfg = ModelConfig::preset(preset)
+        .ok_or_else(|| Error::Config(format!("unknown preset {preset}")))?;
+    println!(
+        "generating {} (~{:.0}M params, d={}, layers={})...",
+        cfg.name,
+        cfg.param_count() as f64 / 1e6,
+        cfg.d_model,
+        cfg.n_layers
+    );
+    let weights = ModelWeights::generate(cfg, seed)?;
+    weights.save(out)?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
+    let model_path = f
+        .get("model")
+        .ok_or_else(|| Error::Config("serve requires --model FILE".into()))?;
+    let addr = f.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7878".into());
+    let replicas = get_usize(f, "replicas", 1)?.max(1);
+    let workers = get_usize(f, "workers", 2)?.max(1);
+    let backend = f
+        .get("backend")
+        .map(|s| {
+            Backend::from_name(s)
+                .ok_or_else(|| Error::Config(format!("unknown backend {s}")))
+        })
+        .transpose()?
+        .unwrap_or(Backend::RsrPlusPlus);
+
+    println!("loading {model_path}...");
+    let weights = Arc::new(ModelWeights::load(model_path)?);
+    println!(
+        "model {} loaded; preprocessing weights on {} replica(s) x {} worker(s), backend {}",
+        weights.config.name,
+        replicas,
+        workers,
+        backend.name()
+    );
+    let engines: Vec<Arc<InferenceEngine>> = (0..replicas)
+        .map(|_| {
+            InferenceEngine::start(
+                Arc::clone(&weights),
+                EngineConfig { workers, backend, ..Default::default() },
+            )
+            .map(Arc::new)
+        })
+        .collect::<Result<_>>()?;
+    let router = Arc::new(Router::new(engines)?);
+    let server = Server::new(router);
+    let stop = Arc::new(AtomicBool::new(false));
+    println!("serving on {addr} (Ctrl-C to stop)");
+    server.serve(&addr, stop, |bound| println!("bound {bound}"))
+}
+
+fn cmd_client(f: &HashMap<String, String>) -> Result<()> {
+    let addr: std::net::SocketAddr = f
+        .get("addr")
+        .cloned()
+        .unwrap_or_else(|| "127.0.0.1:7878".into())
+        .parse()
+        .map_err(|e| Error::Config(format!("bad --addr: {e}")))?;
+    let prompt = f
+        .get("prompt")
+        .ok_or_else(|| Error::Config("client requires --prompt TEXT".into()))?;
+    let max_new = get_usize(f, "max-new", 16)?;
+    let mut client = Client::connect(addr)?;
+    let reply = client.request(1, prompt, max_new)?;
+    println!("{}", reply.to_string());
+    Ok(())
+}
+
+fn cmd_experiment(rest: &[String], f: &HashMap<String, String>) -> Result<()> {
+    let full = f.contains_key("full") || rsr::bench::full_mode();
+    let which = rest
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .ok_or_else(|| Error::Config("experiment requires a figure id".into()))?;
+    use rsr::bench::experiments as ex;
+    match which.as_str() {
+        "fig4" => ex::fig4::run(full),
+        "fig5" => ex::fig5::run(full),
+        "fig6" => ex::fig6::run(full),
+        "fig9" => ex::fig9::run(full),
+        "fig10" => ex::fig10::run(full),
+        "fig11" => ex::fig11::run(full),
+        "fig12" => ex::fig12::run(full),
+        "table1" => ex::table1::run(full),
+        "ablations" => ex::ablations::run(full),
+        "perf" => ex::perf::run(full),
+        "all" => {
+            for r in [
+                ex::fig4::run as fn(bool),
+                ex::fig5::run,
+                ex::fig6::run,
+                ex::fig9::run,
+                ex::fig10::run,
+                ex::fig11::run,
+                ex::fig12::run,
+                ex::table1::run,
+                ex::ablations::run,
+            ] {
+                r(full);
+            }
+        }
+        other => return Err(Error::Config(format!("unknown experiment {other}"))),
+    }
+    Ok(())
+}
+
+fn cmd_selfcheck() -> Result<()> {
+    println!("cross-backend equality on random ternary 512x512...");
+    let mut rng = Rng::new(1);
+    let a = TernaryMatrix::random(512, 512, 1.0 / 3.0, &mut rng);
+    let v = rng.f32_vec(512, -1.0, 1.0);
+    let expect = rsr::kernels::standard::standard_mul_ternary(&v, &a);
+    for backend in Backend::ALL {
+        let mut layer = rsr::model::bitlinear::BitLinear::new(a.clone(), 1.0, backend, 0)?;
+        let mut out = vec![0.0f32; 512];
+        layer.forward(&v, &mut out)?;
+        let max_err = out
+            .iter()
+            .zip(expect.iter())
+            .map(|(g, e)| (g - e).abs())
+            .fold(0.0f32, f32::max);
+        println!("  {:<16} max |err| = {max_err:.2e}", backend.name());
+        if max_err > 1e-2 {
+            return Err(Error::Config(format!("{} disagrees", backend.name())));
+        }
+    }
+    // Index round-trip.
+    let idx = TernaryRsrIndex::preprocess(&a, optimal_k_rsr(512));
+    idx.validate()?;
+    println!("  index validation OK ({} bytes)", idx.bytes());
+    println!("selfcheck OK");
+    Ok(())
+}
+
+fn cmd_artifacts() -> Result<()> {
+    let engine = rsr::runtime::Engine::load(rsr::runtime::Engine::default_dir())?;
+    println!("artifacts in {:?}:", rsr::runtime::Engine::default_dir());
+    for name in engine.names() {
+        let spec = engine.spec(name).unwrap();
+        let ins: Vec<String> = spec.inputs.iter().map(|s| format!("{:?}", s.shape)).collect();
+        println!("  {name:<28} inputs {}", ins.join(" "));
+    }
+    Ok(())
+}

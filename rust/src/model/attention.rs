@@ -1,0 +1,209 @@
+//! Multi-head attention with grouped-query KV heads, RoPE and a KV
+//! cache — single-token (decode) forward, matching the paper's §5.3
+//! "one feedforward pass per token" setting where every projection is a
+//! vector–ternary-matrix product.
+
+use super::bitlinear::BitLinear;
+use super::config::ModelConfig;
+use super::kv_cache::KvCache;
+use super::rope::Rope;
+use super::tensor::softmax;
+use crate::error::Result;
+
+/// One attention layer: Q/K/V/O projections (all `BitLinear`) + cache.
+pub struct Attention {
+    n_heads: usize,
+    n_kv_heads: usize,
+    head_dim: usize,
+    wq: BitLinear,
+    wk: BitLinear,
+    wv: BitLinear,
+    wo: BitLinear,
+    cache: KvCache,
+    // Scratch (no allocation in the decode path).
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    scores: Vec<f32>,
+    ctx: Vec<f32>,
+}
+
+impl Attention {
+    /// Assemble from projection layers.
+    pub fn new(
+        cfg: &ModelConfig,
+        wq: BitLinear,
+        wk: BitLinear,
+        wv: BitLinear,
+        wo: BitLinear,
+    ) -> Self {
+        let kv_dim = cfg.n_kv_heads * cfg.head_dim();
+        Self {
+            n_heads: cfg.n_heads,
+            n_kv_heads: cfg.n_kv_heads,
+            head_dim: cfg.head_dim(),
+            wq,
+            wk,
+            wv,
+            wo,
+            cache: KvCache::new(cfg.max_seq_len, kv_dim),
+            q: vec![0.0; cfg.n_heads * cfg.head_dim()],
+            k: vec![0.0; kv_dim],
+            v: vec![0.0; kv_dim],
+            scores: vec![0.0; cfg.max_seq_len],
+            ctx: vec![0.0; cfg.n_heads * cfg.head_dim()],
+        }
+    }
+
+    /// Cached sequence length.
+    pub fn seq_len(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Clear the KV cache for a new sequence.
+    pub fn reset(&mut self) {
+        self.cache.reset();
+    }
+
+    /// Bytes held by prepared weights (all four projections).
+    pub fn weight_bytes(&self) -> usize {
+        self.wq.weight_bytes()
+            + self.wk.weight_bytes()
+            + self.wv.weight_bytes()
+            + self.wo.weight_bytes()
+    }
+
+    /// Decode-step forward: attend the normalized hidden `x` at
+    /// position `pos` against everything cached so far (causal).
+    pub fn forward(&mut self, x: &[f32], pos: usize, rope: &Rope, out: &mut [f32]) -> Result<()> {
+        self.wq.forward(x, &mut self.q)?;
+        self.wk.forward(x, &mut self.k)?;
+        self.wv.forward(x, &mut self.v)?;
+
+        rope.apply_heads(&mut self.q, pos);
+        rope.apply_heads(&mut self.k, pos);
+        self.cache.append(&self.k, &self.v)?;
+
+        let t = self.cache.len(); // positions 0..t-1 (inclusive of current)
+        let hd = self.head_dim;
+        let group = self.n_heads / self.n_kv_heads;
+        let scale = 1.0 / (hd as f32).sqrt();
+
+        for h in 0..self.n_heads {
+            let kv_h = h / group;
+            let qh = &self.q[h * hd..(h + 1) * hd];
+            let scores = &mut self.scores[..t];
+            for (p, s) in scores.iter_mut().enumerate() {
+                let krow = self.cache.key(p);
+                let kh = &krow[kv_h * hd..(kv_h + 1) * hd];
+                *s = qh.iter().zip(kh.iter()).map(|(a, b)| a * b).sum::<f32>() * scale;
+            }
+            softmax(scores);
+            let ctx_h = &mut self.ctx[h * hd..(h + 1) * hd];
+            ctx_h.fill(0.0);
+            for (p, &w) in scores.iter().enumerate() {
+                let vrow = self.cache.value(p);
+                let vh = &vrow[kv_h * hd..(kv_h + 1) * hd];
+                for (c, &vv) in ctx_h.iter_mut().zip(vh.iter()) {
+                    *c += w * vv;
+                }
+            }
+        }
+        self.wo.forward(&self.ctx, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{Backend, TernaryMatrix};
+    use crate::util::rng::Rng;
+
+    fn make_attn(cfg: &ModelConfig, backend: Backend, seed: u64) -> Attention {
+        let mut rng = Rng::new(seed);
+        let d = cfg.d_model;
+        let kv = cfg.n_kv_heads * cfg.head_dim();
+        let mk = |rows: usize, cols: usize, rng: &mut Rng| {
+            BitLinear::new(
+                TernaryMatrix::random(rows, cols, 1.0 / 3.0, rng),
+                1.0,
+                backend,
+                0,
+            )
+            .unwrap()
+        };
+        let wq = mk(d, d, &mut rng);
+        let wk = mk(d, kv, &mut rng);
+        let wv = mk(d, kv, &mut rng);
+        let wo = mk(d, d, &mut rng);
+        Attention::new(cfg, wq, wk, wv, wo)
+    }
+
+    #[test]
+    fn decode_steps_accumulate_cache() {
+        let cfg = ModelConfig::tiny();
+        let rope = Rope::new(cfg.head_dim(), cfg.max_seq_len, cfg.rope_theta);
+        let mut attn = make_attn(&cfg, Backend::RsrPlusPlus, 179);
+        let mut rng = Rng::new(181);
+        let mut out = vec![0.0; cfg.d_model];
+        for pos in 0..5 {
+            let x = rng.f32_vec(cfg.d_model, -1.0, 1.0);
+            attn.forward(&x, pos, &rope, &mut out).unwrap();
+            assert_eq!(attn.seq_len(), pos + 1);
+            assert!(out.iter().all(|v| v.is_finite()));
+        }
+        attn.reset();
+        assert_eq!(attn.seq_len(), 0);
+    }
+
+    #[test]
+    fn backends_agree_through_attention() {
+        let cfg = ModelConfig::tiny();
+        let rope = Rope::new(cfg.head_dim(), cfg.max_seq_len, cfg.rope_theta);
+        let mut std_attn = make_attn(&cfg, Backend::Standard, 191);
+        let mut rsr_attn = make_attn(&cfg, Backend::RsrPlusPlus, 191);
+        let mut rng = Rng::new(193);
+        let mut a = vec![0.0; cfg.d_model];
+        let mut b = vec![0.0; cfg.d_model];
+        for pos in 0..4 {
+            let x = rng.f32_vec(cfg.d_model, -1.0, 1.0);
+            std_attn.forward(&x, pos, &rope, &mut a).unwrap();
+            rsr_attn.forward(&x, pos, &rope, &mut b).unwrap();
+            for (x1, x2) in a.iter().zip(b.iter()) {
+                assert!((x1 - x2).abs() < 1e-2 * (1.0 + x1.abs()), "{x1} vs {x2}");
+            }
+        }
+    }
+
+    #[test]
+    fn first_token_attends_only_to_itself() {
+        // With a single cached position softmax over one score = 1, so
+        // ctx == v: output must equal wo(v).
+        let cfg = ModelConfig::tiny();
+        let rope = Rope::new(cfg.head_dim(), cfg.max_seq_len, cfg.rope_theta);
+        let mut attn = make_attn(&cfg, Backend::Standard, 197);
+        let mut rng = Rng::new(199);
+        let x = rng.f32_vec(cfg.d_model, -1.0, 1.0);
+        let mut out = vec![0.0; cfg.d_model];
+        attn.forward(&x, 0, &rope, &mut out).unwrap();
+        // Recompute v and wo(v) manually via fresh layers with the same
+        // seed for construction.
+        let mut attn2 = make_attn(&cfg, Backend::Standard, 197);
+        let mut v = vec![0.0; cfg.n_kv_heads * cfg.head_dim()];
+        attn2.wv.forward(&x, &mut v).unwrap();
+        // GQA expansion: each kv head serves group heads → ctx is v
+        // repeated per head group.
+        let hd = cfg.head_dim();
+        let group = cfg.n_heads / cfg.n_kv_heads;
+        let mut ctx = vec![0.0; cfg.n_heads * hd];
+        for h in 0..cfg.n_heads {
+            let kv_h = h / group;
+            ctx[h * hd..(h + 1) * hd].copy_from_slice(&v[kv_h * hd..(kv_h + 1) * hd]);
+        }
+        let mut expect = vec![0.0; cfg.d_model];
+        attn2.wo.forward(&ctx, &mut expect).unwrap();
+        for (g, e) in out.iter().zip(expect.iter()) {
+            assert!((g - e).abs() < 1e-4, "{g} vs {e}");
+        }
+    }
+}

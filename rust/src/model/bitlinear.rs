@@ -1,0 +1,196 @@
+//! `BitLinear` — the ternary linear layer (BitNet b1.58 style), the
+//! exact spot where the paper's §5.3 experiment swaps matmul
+//! implementations ("for each fully connected layer
+//! (`torch.nn.BitLinear`), we integrated and executed the inference
+//! step of RSR").
+//!
+//! `y = (x · W) · β` with `W ∈ {-1,0,1}^{in×out}` and a per-tensor
+//! scale `β` (the absmean scale a real BitNet checkpoint carries).
+//! The multiply dispatches to a prepared backend plan; all backends are
+//! bit-exact against each other up to f32 re-association.
+
+use crate::error::Result;
+use crate::kernels::index::TernaryRsrIndex;
+use crate::kernels::parallel::ParallelTernaryRsrPlan;
+use crate::kernels::rsr::TernaryRsrPlan;
+use crate::kernels::rsrpp::TernaryRsrPlusPlusPlan;
+use crate::kernels::standard::{packed_mul_ternary, standard_mul_ternary_i8};
+use crate::kernels::tensorized::TernaryTensorizedIndex;
+use crate::kernels::{Backend, BinaryMatrix, TernaryMatrix};
+
+/// Prepared execution state for one backend.
+enum Prepared {
+    /// Raw ternary weights (paper's Standard baseline).
+    Standard(TernaryMatrix),
+    /// Bit-packed Prop 2.1 halves (stronger baseline).
+    Packed(BinaryMatrix, BinaryMatrix),
+    /// RSR plan (Algorithm 2).
+    Rsr(TernaryRsrPlan),
+    /// RSR++ plan (Algorithm 2 + 3).
+    RsrPlusPlus(TernaryRsrPlusPlusPlan),
+    /// Block-parallel RSR++ (Appendix C.1.I).
+    Parallel(ParallelTernaryRsrPlan),
+    /// One-hot tensorized form (Appendix E.2).
+    Tensorized(TernaryTensorizedIndex),
+    /// Fused scatter + single-fold hot path (§Perf).
+    Fused(crate::kernels::fused::FusedTernaryPlan),
+}
+
+/// A ternary linear layer with a pluggable multiply backend.
+pub struct BitLinear {
+    in_dim: usize,
+    out_dim: usize,
+    scale: f32,
+    backend: Backend,
+    prepared: Prepared,
+}
+
+impl BitLinear {
+    /// Prepare a layer from ternary weights.
+    ///
+    /// `k = 0` selects the analytic optimum
+    /// [`crate::kernels::optimal_k::optimal_k_rsrpp`] for the row count.
+    pub fn new(w: TernaryMatrix, scale: f32, backend: Backend, k: usize) -> Result<Self> {
+        let (in_dim, out_dim) = (w.rows(), w.cols());
+        let k = if k == 0 {
+            crate::kernels::optimal_k::optimal_k_rsrpp(in_dim)
+        } else {
+            k
+        };
+        let prepared = match backend {
+            Backend::Standard => Prepared::Standard(w),
+            Backend::StandardPacked => {
+                let (p, m) = w.decompose();
+                Prepared::Packed(p, m)
+            }
+            Backend::Rsr => {
+                Prepared::Rsr(TernaryRsrPlan::new(TernaryRsrIndex::preprocess(&w, k))?)
+            }
+            Backend::RsrPlusPlus => Prepared::RsrPlusPlus(TernaryRsrPlusPlusPlan::new(
+                TernaryRsrIndex::preprocess(&w, k),
+            )?),
+            Backend::RsrParallel => Prepared::Parallel(ParallelTernaryRsrPlan::new(
+                TernaryRsrIndex::preprocess(&w, k),
+                0,
+            )?),
+            Backend::Tensorized => {
+                Prepared::Tensorized(TernaryTensorizedIndex::preprocess(&w, k))
+            }
+            Backend::RsrFused => Prepared::Fused(
+                crate::kernels::fused::FusedTernaryPlan::preprocess(&w, k)?,
+            ),
+        };
+        Ok(Self { in_dim, out_dim, scale, backend, prepared })
+    }
+
+    /// Input width.
+    pub fn in_dim(&self) -> usize {
+        self.in_dim
+    }
+
+    /// Output width.
+    pub fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    /// The backend this layer dispatches to.
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// Bytes held by the prepared weight representation — what Fig 5's
+    /// memory comparison measures at the model level.
+    pub fn weight_bytes(&self) -> usize {
+        match &self.prepared {
+            Prepared::Standard(w) => w.dense_bytes(),
+            Prepared::Packed(p, m) => p.packed_bytes() + m.packed_bytes(),
+            Prepared::Rsr(plan) => plan.bytes(),
+            Prepared::RsrPlusPlus(plan) => {
+                plan.index_bytes()
+            }
+            Prepared::Parallel(plan) => plan.index_bytes(),
+            Prepared::Tensorized(t) => t.plus.bytes() + t.minus.bytes(),
+            Prepared::Fused(plan) => plan.bytes(),
+        }
+    }
+
+    /// `out = (x · W) · β`. `x.len() == in_dim`, `out.len() == out_dim`.
+    pub fn forward(&mut self, x: &[f32], out: &mut [f32]) -> Result<()> {
+        debug_assert_eq!(x.len(), self.in_dim);
+        debug_assert_eq!(out.len(), self.out_dim);
+        match &mut self.prepared {
+            Prepared::Standard(w) => {
+                let y = standard_mul_ternary_i8(x, w);
+                out.copy_from_slice(&y);
+            }
+            Prepared::Packed(p, m) => {
+                let y = packed_mul_ternary(x, p, m);
+                out.copy_from_slice(&y);
+            }
+            Prepared::Rsr(plan) => plan.execute(x, out)?,
+            Prepared::RsrPlusPlus(plan) => plan.execute(x, out)?,
+            Prepared::Parallel(plan) => plan.execute(x, out)?,
+            Prepared::Tensorized(t) => t.execute(x, out)?,
+            Prepared::Fused(plan) => plan.execute(x, out)?,
+        }
+        if self.scale != 1.0 {
+            for o in out.iter_mut() {
+                *o *= self.scale;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn all_backends_agree() {
+        let mut rng = Rng::new(163);
+        let w = TernaryMatrix::random(96, 64, 1.0 / 3.0, &mut rng);
+        let x = rng.f32_vec(96, -1.0, 1.0);
+        let mut reference = vec![0.0; 64];
+        BitLinear::new(w.clone(), 0.5, Backend::Standard, 0)
+            .unwrap()
+            .forward(&x, &mut reference)
+            .unwrap();
+        for backend in Backend::ALL {
+            let mut layer = BitLinear::new(w.clone(), 0.5, backend, 4).unwrap();
+            let mut out = vec![0.0; 64];
+            layer.forward(&x, &mut out).unwrap();
+            for (g, e) in out.iter().zip(reference.iter()) {
+                assert!(
+                    (g - e).abs() < 1e-3 * (1.0 + e.abs()),
+                    "{}: {g} vs {e}",
+                    backend.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn k_zero_picks_optimal() {
+        let mut rng = Rng::new(167);
+        let w = TernaryMatrix::random(128, 32, 1.0 / 3.0, &mut rng);
+        let layer = BitLinear::new(w, 1.0, Backend::RsrPlusPlus, 0).unwrap();
+        assert_eq!(layer.in_dim(), 128);
+        assert_eq!(layer.out_dim(), 32);
+    }
+
+    #[test]
+    fn index_backends_use_less_memory_than_f32_dense_at_scale() {
+        // Fig 5 compares the index against the float storage NumPy
+        // keeps (4 bytes/weight): index ≈ 8n²/k bytes vs 4n² bytes,
+        // i.e. a 2/k ratio — clearly smaller for k ≥ 3.
+        let mut rng = Rng::new(173);
+        let n = 1024;
+        let w = TernaryMatrix::random(n, n, 1.0 / 3.0, &mut rng);
+        let dense_f32 = n * n * 4;
+        let rsr =
+            BitLinear::new(w, 1.0, Backend::RsrPlusPlus, 0).unwrap().weight_bytes();
+        assert!(rsr < dense_f32, "rsr {rsr} vs dense f32 {dense_f32}");
+    }
+}

@@ -1,0 +1,54 @@
+//! One decoder block: pre-norm attention + pre-norm MLP, both residual.
+
+use super::attention::Attention;
+use super::mlp::Mlp;
+use super::rmsnorm::RmsNorm;
+use super::rope::Rope;
+use super::tensor::add_assign;
+use crate::error::Result;
+
+/// A decoder block.
+pub struct Block {
+    attn_norm: RmsNorm,
+    attn: Attention,
+    mlp_norm: RmsNorm,
+    mlp: Mlp,
+    // Scratch.
+    normed: Vec<f32>,
+    branch: Vec<f32>,
+}
+
+impl Block {
+    /// Assemble a block.
+    pub fn new(attn_norm: RmsNorm, attn: Attention, mlp_norm: RmsNorm, mlp: Mlp) -> Self {
+        let d = attn_norm.dim();
+        Self { attn_norm, attn, mlp_norm, mlp, normed: vec![0.0; d], branch: vec![0.0; d] }
+    }
+
+    /// Clear the attention KV cache.
+    pub fn reset(&mut self) {
+        self.attn.reset();
+    }
+
+    /// Cached sequence length.
+    pub fn seq_len(&self) -> usize {
+        self.attn.seq_len()
+    }
+
+    /// Bytes held by prepared weights.
+    pub fn weight_bytes(&self) -> usize {
+        self.attn.weight_bytes() + self.mlp.weight_bytes()
+    }
+
+    /// In-place residual update of the hidden state `h` for position `pos`.
+    pub fn forward(&mut self, h: &mut [f32], pos: usize, rope: &Rope) -> Result<()> {
+        self.attn_norm.forward(h, &mut self.normed);
+        self.attn.forward(&self.normed, pos, rope, &mut self.branch)?;
+        add_assign(h, &self.branch);
+
+        self.mlp_norm.forward(h, &mut self.normed);
+        self.mlp.forward(&self.normed, &mut self.branch)?;
+        add_assign(h, &self.branch);
+        Ok(())
+    }
+}

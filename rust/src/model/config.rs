@@ -1,0 +1,188 @@
+//! Model architecture configuration and the paper's evaluation shapes.
+
+use crate::error::{Error, Result};
+
+/// Architecture of a decoder-only ternary transformer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    /// Human-readable name (appears in bench reports).
+    pub name: String,
+    /// Vocabulary size (byte-level tokenizer → small).
+    pub vocab_size: usize,
+    /// Hidden width `d_model`.
+    pub d_model: usize,
+    /// Number of decoder blocks.
+    pub n_layers: usize,
+    /// Attention heads.
+    pub n_heads: usize,
+    /// KV heads (GQA; `n_kv_heads == n_heads` → MHA).
+    pub n_kv_heads: usize,
+    /// Feed-forward inner width.
+    pub d_ff: usize,
+    /// Maximum sequence length (KV cache capacity).
+    pub max_seq_len: usize,
+    /// RoPE base frequency.
+    pub rope_theta: f32,
+}
+
+impl ModelConfig {
+    /// Per-head dimension.
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Total parameters (approximate, for reporting).
+    pub fn param_count(&self) -> usize {
+        let attn = self.d_model * self.d_model * 2
+            + 2 * self.d_model * (self.n_kv_heads * self.head_dim());
+        let mlp = 3 * self.d_model * self.d_ff;
+        let emb = self.vocab_size * self.d_model;
+        self.n_layers * (attn + mlp) + 2 * emb
+    }
+
+    /// Validate divisibility constraints.
+    pub fn validate(&self) -> Result<()> {
+        if self.d_model % self.n_heads != 0 {
+            return Err(Error::Config("d_model % n_heads != 0".into()));
+        }
+        if self.n_heads % self.n_kv_heads != 0 {
+            return Err(Error::Config("n_heads % n_kv_heads != 0".into()));
+        }
+        if self.head_dim() % 2 != 0 {
+            return Err(Error::Config("head_dim must be even for RoPE".into()));
+        }
+        if self.vocab_size == 0 || self.n_layers == 0 || self.max_seq_len == 0 {
+            return Err(Error::Config("zero-sized model dimension".into()));
+        }
+        Ok(())
+    }
+
+    /// Tiny config for unit tests (runs in milliseconds).
+    pub fn tiny() -> Self {
+        Self {
+            name: "tiny".into(),
+            vocab_size: 270,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_ff: 128,
+            max_seq_len: 128,
+            rope_theta: 10_000.0,
+        }
+    }
+
+    /// ~125M-parameter-shape model for the end-to-end example
+    /// (`examples/llm_inference.rs`).
+    pub fn small_125m() -> Self {
+        Self {
+            name: "small-125m".into(),
+            vocab_size: 270,
+            d_model: 768,
+            n_layers: 12,
+            n_heads: 12,
+            n_kv_heads: 12,
+            d_ff: 3072,
+            max_seq_len: 512,
+            rope_theta: 10_000.0,
+        }
+    }
+
+    /// Llama3-8B-1.58bit proxy: the paper states its matrix sizes range
+    /// `2^12..2^13` (d=4096, ffn=14336→trimmed to 8192 = 2^13 band).
+    /// Depth is trimmed to 4 blocks — Fig 6 measures *per-layer* matmul
+    /// speedup, which is depth-independent (see DESIGN.md).
+    pub fn llama3_8b_proxy() -> Self {
+        Self {
+            name: "Llama3-8B-1.58bit(proxy)".into(),
+            vocab_size: 270,
+            d_model: 4096,
+            n_layers: 4,
+            n_heads: 32,
+            n_kv_heads: 8,
+            d_ff: 8192,
+            max_seq_len: 256,
+            rope_theta: 500_000.0,
+        }
+    }
+
+    /// Falcon3-3B-1.58bit proxy: paper band `2^11..2^12` (d=2048...3072).
+    pub fn falcon3_3b_proxy() -> Self {
+        Self {
+            name: "Falcon3-3B-1.58bit(proxy)".into(),
+            vocab_size: 270,
+            d_model: 2048,
+            n_layers: 4,
+            n_heads: 16,
+            n_kv_heads: 4,
+            d_ff: 4096,
+            max_seq_len: 256,
+            rope_theta: 1_000_042.0,
+        }
+    }
+
+    /// Falcon3-10B-1.58bit proxy: paper band `2^11..2^12`, wider FFN.
+    pub fn falcon3_10b_proxy() -> Self {
+        Self {
+            name: "Falcon3-10B-1.58bit(proxy)".into(),
+            vocab_size: 270,
+            d_model: 2048,
+            n_layers: 6,
+            n_heads: 16,
+            n_kv_heads: 4,
+            d_ff: 8192,
+            max_seq_len: 256,
+            rope_theta: 1_000_042.0,
+        }
+    }
+
+    /// Look up a named preset.
+    pub fn preset(name: &str) -> Option<Self> {
+        match name {
+            "tiny" => Some(Self::tiny()),
+            "small-125m" => Some(Self::small_125m()),
+            "llama3-8b" => Some(Self::llama3_8b_proxy()),
+            "falcon3-3b" => Some(Self::falcon3_3b_proxy()),
+            "falcon3-10b" => Some(Self::falcon3_10b_proxy()),
+            _ => None,
+        }
+    }
+
+    /// All preset names.
+    pub const PRESETS: [&'static str; 5] =
+        ["tiny", "small-125m", "llama3-8b", "falcon3-3b", "falcon3-10b"];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        for name in ModelConfig::PRESETS {
+            let c = ModelConfig::preset(name).unwrap();
+            c.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+        assert!(ModelConfig::preset("nope").is_none());
+    }
+
+    #[test]
+    fn small_is_roughly_125m() {
+        let c = ModelConfig::small_125m();
+        let p = c.param_count();
+        assert!(
+            (90_000_000..200_000_000).contains(&p),
+            "param count {p}"
+        );
+    }
+
+    #[test]
+    fn validation_catches_bad_heads() {
+        let mut c = ModelConfig::tiny();
+        c.n_heads = 3;
+        assert!(c.validate().is_err());
+        let mut c = ModelConfig::tiny();
+        c.n_kv_heads = 3;
+        assert!(c.validate().is_err());
+    }
+}

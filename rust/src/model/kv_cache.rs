@@ -1,0 +1,120 @@
+//! Per-layer key/value cache for autoregressive decoding.
+
+use crate::error::{Error, Result};
+
+/// KV cache for one layer: `max_seq_len × (n_kv_heads · head_dim)`
+/// rows for keys and values.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    kv_dim: usize,
+    max_seq_len: usize,
+    len: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl KvCache {
+    /// Allocate an empty cache.
+    pub fn new(max_seq_len: usize, kv_dim: usize) -> Self {
+        Self {
+            kv_dim,
+            max_seq_len,
+            len: 0,
+            k: vec![0.0; max_seq_len * kv_dim],
+            v: vec![0.0; max_seq_len * kv_dim],
+        }
+    }
+
+    /// Number of cached positions.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when nothing has been appended.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Capacity in positions.
+    pub fn capacity(&self) -> usize {
+        self.max_seq_len
+    }
+
+    /// Append one position's K and V rows.
+    pub fn append(&mut self, k_row: &[f32], v_row: &[f32]) -> Result<()> {
+        if k_row.len() != self.kv_dim || v_row.len() != self.kv_dim {
+            return Err(Error::ShapeMismatch("kv row width".into()));
+        }
+        if self.len >= self.max_seq_len {
+            return Err(Error::Serving(format!(
+                "KV cache full at {} positions",
+                self.max_seq_len
+            )));
+        }
+        let off = self.len * self.kv_dim;
+        self.k[off..off + self.kv_dim].copy_from_slice(k_row);
+        self.v[off..off + self.kv_dim].copy_from_slice(v_row);
+        self.len += 1;
+        Ok(())
+    }
+
+    /// Key row at position `pos`.
+    pub fn key(&self, pos: usize) -> &[f32] {
+        debug_assert!(pos < self.len);
+        &self.k[pos * self.kv_dim..(pos + 1) * self.kv_dim]
+    }
+
+    /// Value row at position `pos`.
+    pub fn value(&self, pos: usize) -> &[f32] {
+        debug_assert!(pos < self.len);
+        &self.v[pos * self.kv_dim..(pos + 1) * self.kv_dim]
+    }
+
+    /// Drop all cached positions (new request on a reused slot).
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+
+    /// Heap bytes.
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_and_read_back() {
+        let mut c = KvCache::new(4, 3);
+        c.append(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]).unwrap();
+        c.append(&[7.0, 8.0, 9.0], &[10.0, 11.0, 12.0]).unwrap();
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.key(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(c.value(1), &[10.0, 11.0, 12.0]);
+    }
+
+    #[test]
+    fn overflow_is_an_error() {
+        let mut c = KvCache::new(1, 2);
+        c.append(&[0.0; 2], &[0.0; 2]).unwrap();
+        assert!(c.append(&[0.0; 2], &[0.0; 2]).is_err());
+    }
+
+    #[test]
+    fn wrong_width_is_an_error() {
+        let mut c = KvCache::new(2, 2);
+        assert!(c.append(&[0.0; 3], &[0.0; 2]).is_err());
+    }
+
+    #[test]
+    fn reset_reuses_capacity() {
+        let mut c = KvCache::new(2, 2);
+        c.append(&[1.0; 2], &[1.0; 2]).unwrap();
+        c.reset();
+        assert!(c.is_empty());
+        c.append(&[2.0; 2], &[2.0; 2]).unwrap();
+        assert_eq!(c.key(0), &[2.0, 2.0]);
+    }
+}

@@ -1,0 +1,102 @@
+//! SwiGLU feed-forward block (Llama/Falcon style): three `BitLinear`
+//! projections — the largest matrices in the model and where RSR's
+//! speedup shows most (paper Fig 6 dims `2^11..2^13` are FFN widths).
+
+use super::bitlinear::BitLinear;
+use super::tensor::silu;
+use crate::error::Result;
+
+/// `down( silu(gate(x)) ⊙ up(x) )`.
+pub struct Mlp {
+    gate: BitLinear,
+    up: BitLinear,
+    down: BitLinear,
+    // Scratch.
+    g: Vec<f32>,
+    u: Vec<f32>,
+}
+
+impl Mlp {
+    /// Assemble from the three projections.
+    pub fn new(gate: BitLinear, up: BitLinear, down: BitLinear) -> Self {
+        let d_ff = gate.out_dim();
+        debug_assert_eq!(up.out_dim(), d_ff);
+        debug_assert_eq!(down.in_dim(), d_ff);
+        Self { gate, up, down, g: vec![0.0; d_ff], u: vec![0.0; d_ff] }
+    }
+
+    /// Bytes held by prepared weights.
+    pub fn weight_bytes(&self) -> usize {
+        self.gate.weight_bytes() + self.up.weight_bytes() + self.down.weight_bytes()
+    }
+
+    /// Forward one token.
+    pub fn forward(&mut self, x: &[f32], out: &mut [f32]) -> Result<()> {
+        self.gate.forward(x, &mut self.g)?;
+        self.up.forward(x, &mut self.u)?;
+        for (g, &u) in self.g.iter_mut().zip(self.u.iter()) {
+            *g = silu(*g) * u;
+        }
+        self.down.forward(&self.g, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{Backend, TernaryMatrix};
+    use crate::util::rng::Rng;
+
+    fn make_mlp(d: usize, d_ff: usize, backend: Backend, seed: u64) -> Mlp {
+        let mut rng = Rng::new(seed);
+        let mk = |rows: usize, cols: usize, rng: &mut Rng| {
+            BitLinear::new(
+                TernaryMatrix::random(rows, cols, 1.0 / 3.0, rng),
+                1.0,
+                backend,
+                0,
+            )
+            .unwrap()
+        };
+        let gate = mk(d, d_ff, &mut rng);
+        let up = mk(d, d_ff, &mut rng);
+        let down = mk(d_ff, d, &mut rng);
+        Mlp::new(gate, up, down)
+    }
+
+    #[test]
+    fn output_is_finite_and_shaped() {
+        let mut mlp = make_mlp(32, 64, Backend::RsrPlusPlus, 211);
+        let mut rng = Rng::new(223);
+        let x = rng.f32_vec(32, -1.0, 1.0);
+        let mut out = vec![0.0; 32];
+        mlp.forward(&x, &mut out).unwrap();
+        assert!(out.iter().all(|v| v.is_finite()));
+        assert!(out.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn backends_agree_through_mlp() {
+        let mut a = make_mlp(48, 96, Backend::Standard, 227);
+        let mut b = make_mlp(48, 96, Backend::Rsr, 227);
+        let mut c = make_mlp(48, 96, Backend::Tensorized, 227);
+        let mut rng = Rng::new(229);
+        let x = rng.f32_vec(48, -1.0, 1.0);
+        let (mut oa, mut ob, mut oc) = (vec![0.0; 48], vec![0.0; 48], vec![0.0; 48]);
+        a.forward(&x, &mut oa).unwrap();
+        b.forward(&x, &mut ob).unwrap();
+        c.forward(&x, &mut oc).unwrap();
+        for i in 0..48 {
+            assert!((oa[i] - ob[i]).abs() < 1e-2 * (1.0 + oa[i].abs()));
+            assert!((oa[i] - oc[i]).abs() < 1e-2 * (1.0 + oa[i].abs()));
+        }
+    }
+
+    #[test]
+    fn zero_input_gives_zero_output() {
+        let mut mlp = make_mlp(16, 32, Backend::Standard, 233);
+        let mut out = vec![1.0; 16];
+        mlp.forward(&[0.0; 16], &mut out).unwrap();
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,35 @@
+//! A 1.58-bit (ternary-weight) decoder-only transformer — the substrate
+//! the paper's §5.3/§5.4 LLM experiments run on.
+//!
+//! The paper evaluates on Llama3-8B / Falcon3-3B / Falcon3-10B 1.58-bit
+//! checkpoints from Hugging Face; those are not available here, so we
+//! build architecturally equivalent models (BitNet-style: every linear
+//! layer is a [`bitlinear::BitLinear`] with ternary weights and a
+//! per-tensor scale) with *matching layer dimensions* and synthetic
+//! weights. Per DESIGN.md §Substitutions this preserves what Fig 6 and
+//! Table 1 measure — per-layer matmul cost and Standard-vs-RSR output
+//! equality — since timing depends on shapes, not trained values.
+//!
+//! Every `BitLinear` dispatches to a pluggable multiply backend
+//! ([`crate::kernels::Backend`]), so the whole model can run on
+//! Standard, RSR, RSR++, parallel-RSR or tensorized kernels and the
+//! outputs can be compared token-for-token.
+
+pub mod attention;
+pub mod bitlinear;
+pub mod block;
+pub mod config;
+pub mod kv_cache;
+pub mod mlp;
+pub mod quantize;
+pub mod rmsnorm;
+pub mod rope;
+pub mod sampler;
+pub mod tensor;
+pub mod tokenizer;
+pub mod transformer;
+pub mod weights;
+
+pub use bitlinear::BitLinear;
+pub use config::ModelConfig;
+pub use transformer::Transformer;

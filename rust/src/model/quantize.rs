@@ -1,0 +1,142 @@
+//! BitNet-b1.58 absmean quantization: import an fp32 weight matrix as
+//! `(TernaryMatrix, scale)` — the bridge that lets this system consume
+//! *real* trained checkpoints, not only synthetic weights (Ma et al.
+//! 2024, the 1.58-bit recipe the paper's models use):
+//!
+//! ```text
+//! γ = mean(|W|)            (absmean)
+//! W̃ = clip(round(W / γ), −1, 1) ∈ {−1,0,1}
+//! y ≈ (x · W̃) · γ
+//! ```
+
+use crate::error::{Error, Result};
+use crate::kernels::TernaryMatrix;
+
+/// Result of quantizing one weight matrix.
+#[derive(Debug, Clone)]
+pub struct QuantizedLinear {
+    /// The ternary weights.
+    pub weights: TernaryMatrix,
+    /// The per-tensor absmean scale γ.
+    pub scale: f32,
+}
+
+/// Absmean-quantize a dense row-major `rows × cols` f32 matrix.
+pub fn absmean_quantize(w: &[f32], rows: usize, cols: usize) -> Result<QuantizedLinear> {
+    if w.len() != rows * cols {
+        return Err(Error::ShapeMismatch(format!(
+            "buffer {} != {rows}x{cols}",
+            w.len()
+        )));
+    }
+    if w.is_empty() {
+        return Err(Error::Config("empty matrix".into()));
+    }
+    let gamma = w.iter().map(|x| x.abs()).sum::<f32>() / w.len() as f32;
+    // Degenerate all-zero matrix: keep scale 1, all zeros.
+    if gamma == 0.0 {
+        return Ok(QuantizedLinear {
+            weights: TernaryMatrix::zeros(rows, cols),
+            scale: 1.0,
+        });
+    }
+    let data: Vec<i8> = w
+        .iter()
+        .map(|&x| {
+            let q = (x / gamma).round();
+            q.clamp(-1.0, 1.0) as i8
+        })
+        .collect();
+    Ok(QuantizedLinear { weights: TernaryMatrix::from_dense(rows, cols, data), scale: gamma })
+}
+
+/// Mean-squared quantization error of `(W̃·γ)` vs `W` — used to sanity
+/// check imports and in tests.
+pub fn quantization_mse(w: &[f32], q: &QuantizedLinear) -> f32 {
+    let (rows, cols) = (q.weights.rows(), q.weights.cols());
+    debug_assert_eq!(w.len(), rows * cols);
+    let mut acc = 0.0f64;
+    for r in 0..rows {
+        for c in 0..cols {
+            let approx = q.weights.get(r, c) as f32 * q.scale;
+            let d = (w[r * cols + c] - approx) as f64;
+            acc += d * d;
+        }
+    }
+    (acc / w.len() as f64) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn quantizes_exact_ternary_losslessly() {
+        // A matrix that is already γ·{−1,0,1} must round-trip exactly.
+        let gamma = 0.37f32;
+        let vals = [-1.0f32, 0.0, 1.0, 1.0, 0.0, -1.0];
+        let w: Vec<f32> = vals.iter().map(|v| v * gamma).collect();
+        let q = absmean_quantize(&w, 2, 3).unwrap();
+        for (i, &v) in vals.iter().enumerate() {
+            assert_eq!(q.weights.get(i / 3, i % 3) as f32, v);
+        }
+        // γ is the absmean of the nonzero magnitude pattern: 4/6·gamma.
+        assert!((q.scale - gamma * 4.0 / 6.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gaussian_weights_quantize_with_bounded_error() {
+        let mut rng = Rng::new(0x0A);
+        let (rows, cols) = (64, 64);
+        let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal_f32() * 0.02).collect();
+        let q = absmean_quantize(&w, rows, cols).unwrap();
+        // All values in range.
+        assert!(q.scale > 0.0);
+        let mse = quantization_mse(&w, &q);
+        let var = w.iter().map(|x| x * x).sum::<f32>() / w.len() as f32;
+        // Ternary absmean keeps MSE well below the signal variance.
+        assert!(mse < var, "mse {mse} vs var {var}");
+    }
+
+    #[test]
+    fn zero_matrix_is_degenerate_but_valid() {
+        let q = absmean_quantize(&[0.0; 12], 3, 4).unwrap();
+        assert_eq!(q.scale, 1.0);
+        assert!(q.weights.data().iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn quantized_layer_runs_through_bitlinear() {
+        use crate::kernels::Backend;
+        use crate::model::bitlinear::BitLinear;
+        let mut rng = Rng::new(0x0B);
+        let (n, m) = (48, 32);
+        let w: Vec<f32> = (0..n * m).map(|_| rng.normal_f32() * 0.05).collect();
+        let x = rng.f32_vec(n, -1.0, 1.0);
+        let q = absmean_quantize(&w, n, m).unwrap();
+
+        // Dense reference of the quantized layer.
+        let dense: Vec<f32> = (0..m)
+            .map(|c| {
+                (0..n)
+                    .map(|r| x[r] * q.weights.get(r, c) as f32 * q.scale)
+                    .sum()
+            })
+            .collect();
+
+        let mut layer =
+            BitLinear::new(q.weights.clone(), q.scale, Backend::RsrFused, 0).unwrap();
+        let mut out = vec![0.0; m];
+        layer.forward(&x, &mut out).unwrap();
+        for (g, e) in out.iter().zip(dense.iter()) {
+            assert!((g - e).abs() < 1e-3 * (1.0 + e.abs()), "{g} vs {e}");
+        }
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        assert!(absmean_quantize(&[0.0; 5], 2, 3).is_err());
+        assert!(absmean_quantize(&[], 0, 0).is_err());
+    }
+}

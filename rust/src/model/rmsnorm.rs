@@ -1,0 +1,72 @@
+//! RMSNorm — the normalization used by Llama/Falcon-family models.
+
+/// RMS normalization with a learned (here: synthetic) gain vector.
+#[derive(Debug, Clone)]
+pub struct RmsNorm {
+    weight: Vec<f32>,
+    eps: f32,
+}
+
+impl RmsNorm {
+    /// Build from a gain vector.
+    pub fn new(weight: Vec<f32>, eps: f32) -> Self {
+        Self { weight, eps }
+    }
+
+    /// Hidden width.
+    pub fn dim(&self) -> usize {
+        self.weight.len()
+    }
+
+    /// Gain vector (weights serialization).
+    pub fn weight(&self) -> &[f32] {
+        &self.weight
+    }
+
+    /// `out = x / rms(x) * weight`.
+    pub fn forward(&self, x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.weight.len());
+        debug_assert_eq!(out.len(), x.len());
+        let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+        let inv = 1.0 / (ms + self.eps).sqrt();
+        for ((o, &xi), &w) in out.iter_mut().zip(x.iter()).zip(self.weight.iter()) {
+            *o = xi * inv * w;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_gain_normalizes_rms_to_one() {
+        let norm = RmsNorm::new(vec![1.0; 4], 1e-6);
+        let x = [2.0f32, -2.0, 2.0, -2.0];
+        let mut out = [0.0f32; 4];
+        norm.forward(&x, &mut out);
+        let rms = (out.iter().map(|v| v * v).sum::<f32>() / 4.0).sqrt();
+        assert!((rms - 1.0).abs() < 1e-4);
+        assert_eq!(out[0], -out[1]);
+    }
+
+    #[test]
+    fn gain_scales_output() {
+        let norm = RmsNorm::new(vec![2.0, 2.0], 1e-6);
+        let base = RmsNorm::new(vec![1.0, 1.0], 1e-6);
+        let x = [3.0f32, 4.0];
+        let mut a = [0.0f32; 2];
+        let mut b = [0.0f32; 2];
+        norm.forward(&x, &mut a);
+        base.forward(&x, &mut b);
+        assert!((a[0] - 2.0 * b[0]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_vector_is_finite() {
+        let norm = RmsNorm::new(vec![1.0; 3], 1e-6);
+        let mut out = [0.0f32; 3];
+        norm.forward(&[0.0; 3], &mut out);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,104 @@
+//! Rotary position embeddings (RoPE), precomputed per position.
+
+/// Precomputed cos/sin tables for RoPE.
+#[derive(Debug, Clone)]
+pub struct Rope {
+    head_dim: usize,
+    /// `cos[pos * half + i]`, `half = head_dim / 2`.
+    cos: Vec<f32>,
+    sin: Vec<f32>,
+}
+
+impl Rope {
+    /// Precompute tables for `max_seq_len` positions.
+    pub fn new(head_dim: usize, max_seq_len: usize, theta: f32) -> Self {
+        assert!(head_dim % 2 == 0, "head_dim must be even");
+        let half = head_dim / 2;
+        let mut cos = Vec::with_capacity(max_seq_len * half);
+        let mut sin = Vec::with_capacity(max_seq_len * half);
+        for pos in 0..max_seq_len {
+            for i in 0..half {
+                let freq = 1.0 / theta.powf(2.0 * i as f32 / head_dim as f32);
+                let angle = pos as f32 * freq;
+                cos.push(angle.cos());
+                sin.push(angle.sin());
+            }
+        }
+        Self { head_dim, cos, sin }
+    }
+
+    /// Rotate one head vector in place for position `pos`
+    /// (pairing `(x[i], x[i+half])` — the Llama layout).
+    pub fn apply(&self, x: &mut [f32], pos: usize) {
+        debug_assert_eq!(x.len(), self.head_dim);
+        let half = self.head_dim / 2;
+        let base = pos * half;
+        for i in 0..half {
+            let (c, s) = (self.cos[base + i], self.sin[base + i]);
+            let (a, b) = (x[i], x[i + half]);
+            x[i] = a * c - b * s;
+            x[i + half] = a * s + b * c;
+        }
+    }
+
+    /// Apply to every head in a concatenated multi-head vector.
+    pub fn apply_heads(&self, x: &mut [f32], pos: usize) {
+        debug_assert_eq!(x.len() % self.head_dim, 0);
+        for head in x.chunks_exact_mut(self.head_dim) {
+            self.apply(head, pos);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn position_zero_is_identity() {
+        let rope = Rope::new(8, 4, 10_000.0);
+        let mut x: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let orig = x.clone();
+        rope.apply(&mut x, 0);
+        for (a, b) in x.iter().zip(orig.iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rotation_preserves_norm() {
+        let rope = Rope::new(16, 32, 10_000.0);
+        let mut x: Vec<f32> = (0..16).map(|i| (i as f32).sin()).collect();
+        let norm0: f32 = x.iter().map(|v| v * v).sum();
+        rope.apply(&mut x, 17);
+        let norm1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((norm0 - norm1).abs() < 1e-4);
+    }
+
+    #[test]
+    fn relative_angle_property() {
+        // The dot product of rotated q (pos p) and rotated k (pos q)
+        // depends only on p − q for a single frequency pair.
+        let rope = Rope::new(2, 16, 10_000.0);
+        let q = [1.0f32, 0.0];
+        let k = [1.0f32, 0.0];
+        let dot_at = |pq: usize, pk: usize| {
+            let mut qq = q;
+            let mut kk = k;
+            rope.apply(&mut qq, pq);
+            rope.apply(&mut kk, pk);
+            qq[0] * kk[0] + qq[1] * kk[1]
+        };
+        assert!((dot_at(3, 1) - dot_at(7, 5)).abs() < 1e-5);
+        assert!((dot_at(4, 4) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn apply_heads_rotates_each_head() {
+        let rope = Rope::new(4, 8, 10_000.0);
+        let mut multi = vec![1.0f32, 2.0, 3.0, 4.0, 1.0, 2.0, 3.0, 4.0];
+        rope.apply_heads(&mut multi, 3);
+        // Both heads identical input → identical output.
+        assert_eq!(multi[..4], multi[4..]);
+    }
+}

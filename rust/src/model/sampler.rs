@@ -1,0 +1,90 @@
+//! Token sampling strategies for decoding.
+
+use super::tensor::{argmax, softmax};
+use crate::util::rng::Rng;
+
+/// Decoding strategy.
+#[derive(Debug, Clone, Copy)]
+pub enum Sampler {
+    /// Deterministic argmax — used everywhere outputs must be
+    /// comparable across backends (the paper's §5.3 equality check).
+    Greedy,
+    /// Top-k sampling with temperature.
+    TopK {
+        /// Candidates kept.
+        k: usize,
+        /// Softmax temperature (>0).
+        temperature: f32,
+    },
+}
+
+impl Sampler {
+    /// Pick the next token from logits.
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> u32 {
+        match *self {
+            Sampler::Greedy => argmax(logits) as u32,
+            Sampler::TopK { k, temperature } => {
+                let k = k.max(1).min(logits.len());
+                // Indices of the top-k logits.
+                let mut idx: Vec<usize> = (0..logits.len()).collect();
+                idx.select_nth_unstable_by(k - 1, |&a, &b| {
+                    logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal)
+                });
+                idx.truncate(k);
+                let mut probs: Vec<f32> =
+                    idx.iter().map(|&i| logits[i] / temperature.max(1e-6)).collect();
+                softmax(&mut probs);
+                let r = rng.next_f32();
+                let mut acc = 0.0;
+                for (p, &i) in probs.iter().zip(idx.iter()) {
+                    acc += p;
+                    if r <= acc {
+                        return i as u32;
+                    }
+                }
+                *idx.last().unwrap() as u32
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let s = Sampler::Greedy;
+        let mut rng = Rng::new(1);
+        assert_eq!(s.sample(&[0.1, 2.0, 0.5], &mut rng), 1);
+    }
+
+    #[test]
+    fn topk_stays_in_top_k() {
+        let s = Sampler::TopK { k: 2, temperature: 1.0 };
+        let mut rng = Rng::new(2);
+        let logits = [5.0f32, 4.0, -10.0, -10.0];
+        for _ in 0..100 {
+            let t = s.sample(&logits, &mut rng);
+            assert!(t == 0 || t == 1, "sampled {t}");
+        }
+    }
+
+    #[test]
+    fn low_temperature_approaches_greedy() {
+        let s = Sampler::TopK { k: 4, temperature: 0.01 };
+        let mut rng = Rng::new(3);
+        let logits = [1.0f32, 3.0, 2.0, 0.0];
+        for _ in 0..50 {
+            assert_eq!(s.sample(&logits, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn k_larger_than_vocab_is_clamped() {
+        let s = Sampler::TopK { k: 100, temperature: 1.0 };
+        let mut rng = Rng::new(4);
+        let t = s.sample(&[0.0, 1.0], &mut rng);
+        assert!(t < 2);
+    }
+}

@@ -1,0 +1,80 @@
+//! Byte-level tokenizer: 256 byte tokens + a handful of specials.
+//! Keeps the vocabulary tiny so the LM head stays cheap while the
+//! decoder blocks carry the paper-relevant matrix shapes.
+
+/// Special token ids start after the 256 byte values.
+pub const BOS: u32 = 256;
+/// End-of-sequence.
+pub const EOS: u32 = 257;
+/// Padding.
+pub const PAD: u32 = 258;
+/// First id available to models (vocab must be ≥ this).
+pub const VOCAB_MIN: usize = 259;
+
+/// Byte-level tokenizer.
+#[derive(Debug, Clone, Default)]
+pub struct Tokenizer;
+
+impl Tokenizer {
+    /// New tokenizer (stateless).
+    pub fn new() -> Self {
+        Self
+    }
+
+    /// Encode text to token ids (no BOS/EOS added).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.bytes().map(|b| b as u32).collect()
+    }
+
+    /// Encode with BOS prefix.
+    pub fn encode_with_bos(&self, text: &str) -> Vec<u32> {
+        let mut out = Vec::with_capacity(text.len() + 1);
+        out.push(BOS);
+        out.extend(self.encode(text));
+        out
+    }
+
+    /// Decode token ids back to text (specials are dropped; invalid
+    /// UTF-8 is replaced).
+    pub fn decode(&self, tokens: &[u32]) -> String {
+        let bytes: Vec<u8> = tokens
+            .iter()
+            .filter(|&&t| t < 256)
+            .map(|&t| t as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascii_round_trip() {
+        let t = Tokenizer::new();
+        let s = "What is the capital of France?";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn utf8_round_trip() {
+        let t = Tokenizer::new();
+        let s = "héllo — 世界";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn bos_prepended_and_dropped_on_decode() {
+        let t = Tokenizer::new();
+        let toks = t.encode_with_bos("ab");
+        assert_eq!(toks[0], BOS);
+        assert_eq!(t.decode(&toks), "ab");
+    }
+
+    #[test]
+    fn specials_do_not_collide_with_bytes() {
+        assert!(BOS as usize >= 256 && EOS as usize >= 256 && PAD as usize >= 256);
+        assert!(VOCAB_MIN > PAD as usize);
+    }
+}

@@ -1,0 +1,237 @@
+//! The assembled decoder-only transformer: embedding → blocks → final
+//! norm → LM head, decoding one token per forward pass (the paper's
+//! §5.3 setting).
+
+use super::attention::Attention;
+use super::bitlinear::BitLinear;
+use super::block::Block;
+use super::config::ModelConfig;
+use super::mlp::Mlp;
+use super::rmsnorm::RmsNorm;
+use super::rope::Rope;
+use super::sampler::Sampler;
+use super::weights::ModelWeights;
+use crate::error::{Error, Result};
+use crate::kernels::Backend;
+use crate::util::rng::Rng;
+
+/// A ready-to-run model instance: prepared weights on one backend.
+pub struct Transformer {
+    config: ModelConfig,
+    backend: Backend,
+    embedding: Vec<f32>,
+    blocks: Vec<Block>,
+    final_norm: RmsNorm,
+    lm_head: BitLinear,
+    rope: Rope,
+    // Scratch.
+    hidden: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+impl Transformer {
+    /// Prepare a model from raw weights on the given backend.
+    /// `k = 0` selects the analytic optimal blocking parameter.
+    pub fn from_weights(weights: &ModelWeights, backend: Backend, k: usize) -> Result<Self> {
+        let cfg = weights.config.clone();
+        cfg.validate()?;
+        let rope = Rope::new(cfg.head_dim(), cfg.max_seq_len, cfg.rope_theta);
+        let mut blocks = Vec::with_capacity(cfg.n_layers);
+        for lw in &weights.layers {
+            let attn = Attention::new(
+                &cfg,
+                BitLinear::new(lw.wq.clone(), lw.scales[0], backend, k)?,
+                BitLinear::new(lw.wk.clone(), lw.scales[1], backend, k)?,
+                BitLinear::new(lw.wv.clone(), lw.scales[2], backend, k)?,
+                BitLinear::new(lw.wo.clone(), lw.scales[3], backend, k)?,
+            );
+            let mlp = Mlp::new(
+                BitLinear::new(lw.gate.clone(), lw.scales[4], backend, k)?,
+                BitLinear::new(lw.up.clone(), lw.scales[5], backend, k)?,
+                BitLinear::new(lw.down.clone(), lw.scales[6], backend, k)?,
+            );
+            blocks.push(Block::new(
+                RmsNorm::new(lw.attn_norm.clone(), 1e-6),
+                attn,
+                RmsNorm::new(lw.mlp_norm.clone(), 1e-6),
+                mlp,
+            ));
+        }
+        let lm_head =
+            BitLinear::new(weights.lm_head.clone(), weights.lm_head_scale, backend, k)?;
+        Ok(Self {
+            embedding: weights.embedding.clone(),
+            final_norm: RmsNorm::new(weights.final_norm.clone(), 1e-6),
+            lm_head,
+            rope,
+            hidden: vec![0.0; cfg.d_model],
+            logits: vec![0.0; cfg.vocab_size],
+            blocks,
+            backend,
+            config: cfg,
+        })
+    }
+
+    /// Architecture.
+    pub fn config(&self) -> &ModelConfig {
+        &self.config
+    }
+
+    /// The multiply backend every `BitLinear` dispatches to.
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// Current decoded length (KV cache fill).
+    pub fn seq_len(&self) -> usize {
+        self.blocks.first().map_or(0, |b| b.seq_len())
+    }
+
+    /// Total prepared-weight bytes (Fig 5 at the model level).
+    pub fn weight_bytes(&self) -> usize {
+        self.blocks.iter().map(|b| b.weight_bytes()).sum::<usize>()
+            + self.lm_head.weight_bytes()
+            + self.embedding.len() * 4
+    }
+
+    /// Logits produced by the most recent [`forward_token`]
+    /// (zeros before the first call). Lets callers sample without
+    /// re-borrowing the model mutably.
+    ///
+    /// [`forward_token`]: Self::forward_token
+    pub fn last_logits(&self) -> &[f32] {
+        &self.logits
+    }
+
+    /// Reset all KV caches for a new sequence.
+    pub fn reset(&mut self) {
+        for b in &mut self.blocks {
+            b.reset();
+        }
+    }
+
+    /// One decode step: feed `token` at position `seq_len()`, return
+    /// logits over the vocabulary.
+    pub fn forward_token(&mut self, token: u32) -> Result<&[f32]> {
+        let pos = self.seq_len();
+        if pos >= self.config.max_seq_len {
+            return Err(Error::Serving("sequence exceeds max_seq_len".into()));
+        }
+        let d = self.config.d_model;
+        let t = token as usize;
+        if t >= self.config.vocab_size {
+            return Err(Error::Config(format!("token {token} out of vocab")));
+        }
+        self.hidden.copy_from_slice(&self.embedding[t * d..(t + 1) * d]);
+        for block in &mut self.blocks {
+            block.forward(&mut self.hidden, pos, &self.rope)?;
+        }
+        let mut normed = vec![0.0; d];
+        self.final_norm.forward(&self.hidden, &mut normed);
+        self.lm_head.forward(&normed, &mut self.logits)?;
+        Ok(&self.logits)
+    }
+
+    /// Feed a prompt (prefill) and greedily decode `max_new` tokens.
+    /// Returns the generated token ids.
+    pub fn generate(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+        sampler: Sampler,
+        rng: &mut Rng,
+    ) -> Result<Vec<u32>> {
+        self.reset();
+        if prompt.is_empty() {
+            return Err(Error::Config("empty prompt".into()));
+        }
+        let mut last_logits_token = None;
+        for &t in prompt {
+            self.forward_token(t)?;
+            last_logits_token = Some(t);
+        }
+        let _ = last_logits_token;
+        let mut out = Vec::with_capacity(max_new);
+        for _ in 0..max_new {
+            let logits = self.logits.clone();
+            let next = sampler.sample(&logits, rng);
+            out.push(next);
+            if next == super::tokenizer::EOS {
+                break;
+            }
+            if self.seq_len() >= self.config.max_seq_len {
+                break;
+            }
+            self.forward_token(next)?;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::weights::ModelWeights;
+
+    fn tiny_weights() -> ModelWeights {
+        ModelWeights::generate(ModelConfig::tiny(), 42).unwrap()
+    }
+
+    #[test]
+    fn forward_produces_finite_logits() {
+        let w = tiny_weights();
+        let mut m = Transformer::from_weights(&w, Backend::RsrPlusPlus, 0).unwrap();
+        let logits = m.forward_token(65).unwrap();
+        assert_eq!(logits.len(), w.config.vocab_size);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn backends_produce_identical_greedy_tokens() {
+        // The paper's §5.3 equality check: Standard vs RSR responses
+        // must match token-for-token.
+        let w = tiny_weights();
+        let prompt: Vec<u32> = "What is 2+2?".bytes().map(|b| b as u32).collect();
+        let mut outputs = Vec::new();
+        for backend in [Backend::Standard, Backend::Rsr, Backend::RsrPlusPlus] {
+            let mut m = Transformer::from_weights(&w, backend, 0).unwrap();
+            let mut rng = Rng::new(0);
+            let toks = m.generate(&prompt, 8, Sampler::Greedy, &mut rng).unwrap();
+            outputs.push((backend.name(), toks));
+        }
+        for pair in outputs.windows(2) {
+            assert_eq!(pair[0].1, pair[1].1, "{} vs {}", pair[0].0, pair[1].0);
+        }
+    }
+
+    #[test]
+    fn generate_is_deterministic_under_greedy() {
+        let w = tiny_weights();
+        let mut m = Transformer::from_weights(&w, Backend::Standard, 0).unwrap();
+        let prompt = [1u32, 2, 3];
+        let mut rng = Rng::new(9);
+        let a = m.generate(&prompt, 5, Sampler::Greedy, &mut rng).unwrap();
+        let b = m.generate(&prompt, 5, Sampler::Greedy, &mut rng).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn reset_between_sequences() {
+        let w = tiny_weights();
+        let mut m = Transformer::from_weights(&w, Backend::Standard, 0).unwrap();
+        m.forward_token(10).unwrap();
+        m.forward_token(11).unwrap();
+        assert_eq!(m.seq_len(), 2);
+        m.reset();
+        assert_eq!(m.seq_len(), 0);
+    }
+
+    #[test]
+    fn rejects_out_of_vocab_and_overflow() {
+        let w = tiny_weights();
+        let mut m = Transformer::from_weights(&w, Backend::Standard, 0).unwrap();
+        assert!(m.forward_token(100_000).is_err());
+        let mut rng = Rng::new(1);
+        assert!(m.generate(&[], 3, Sampler::Greedy, &mut rng).is_err());
+    }
+}

@@ -1,0 +1,314 @@
+//! Model weights: synthetic generation (the DESIGN.md substitution for
+//! the unavailable HF 1.58-bit checkpoints) and the `.rtw` binary file
+//! format (magic `RTW1`, config header, then per-tensor payloads with
+//! ternary matrices 2-bit packed).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use super::config::ModelConfig;
+use crate::error::{Error, Result};
+use crate::kernels::TernaryMatrix;
+use crate::util::rng::Rng;
+
+/// Raw weights for one decoder layer.
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    /// Attention projections (`d×d`, `d×kv`, `d×kv`, `d×d`).
+    pub wq: TernaryMatrix,
+    pub wk: TernaryMatrix,
+    pub wv: TernaryMatrix,
+    pub wo: TernaryMatrix,
+    /// MLP projections (`d×ff`, `d×ff`, `ff×d`).
+    pub gate: TernaryMatrix,
+    pub up: TernaryMatrix,
+    pub down: TernaryMatrix,
+    /// Per-tensor absmean-style scales.
+    pub scales: [f32; 7],
+    /// RMSNorm gains.
+    pub attn_norm: Vec<f32>,
+    pub mlp_norm: Vec<f32>,
+}
+
+/// Full model weights (config + tensors).
+#[derive(Debug, Clone)]
+pub struct ModelWeights {
+    /// Architecture.
+    pub config: ModelConfig,
+    /// Token embedding table, `vocab × d`, row-major f32.
+    pub embedding: Vec<f32>,
+    /// Decoder layers.
+    pub layers: Vec<LayerWeights>,
+    /// Final RMSNorm gain.
+    pub final_norm: Vec<f32>,
+    /// LM head, `d × vocab` ternary.
+    pub lm_head: TernaryMatrix,
+    /// LM head scale.
+    pub lm_head_scale: f32,
+}
+
+impl ModelWeights {
+    /// Generate synthetic weights for a config, deterministically from
+    /// a seed. Ternary entries are ~uniform over {−1,0,1} (the
+    /// distribution BitNet b1.58 absmean quantization produces is close
+    /// to this for well-trained layers); norm gains ~N(1, 0.02);
+    /// embeddings ~N(0, 0.02).
+    pub fn generate(config: ModelConfig, seed: u64) -> Result<Self> {
+        config.validate()?;
+        let mut rng = Rng::new(seed);
+        let d = config.d_model;
+        let kv = config.n_kv_heads * config.head_dim();
+        let ff = config.d_ff;
+        let embedding: Vec<f32> =
+            (0..config.vocab_size * d).map(|_| rng.normal_f32() * 0.02).collect();
+        let mut layers = Vec::with_capacity(config.n_layers);
+        for _ in 0..config.n_layers {
+            let tern = |rows: usize, cols: usize, rng: &mut Rng| {
+                TernaryMatrix::random(rows, cols, 1.0 / 3.0, rng)
+            };
+            layers.push(LayerWeights {
+                wq: tern(d, d, &mut rng),
+                wk: tern(d, kv, &mut rng),
+                wv: tern(d, kv, &mut rng),
+                wo: tern(d, d, &mut rng),
+                gate: tern(d, ff, &mut rng),
+                up: tern(d, ff, &mut rng),
+                down: tern(ff, d, &mut rng),
+                // Small scales keep activations bounded through depth.
+                scales: [
+                    1.0 / (d as f32).sqrt(),
+                    1.0 / (d as f32).sqrt(),
+                    1.0 / (d as f32).sqrt(),
+                    1.0 / (d as f32).sqrt(),
+                    1.0 / (d as f32).sqrt(),
+                    1.0 / (d as f32).sqrt(),
+                    1.0 / (ff as f32).sqrt(),
+                ],
+                attn_norm: (0..d).map(|_| 1.0 + rng.normal_f32() * 0.02).collect(),
+                mlp_norm: (0..d).map(|_| 1.0 + rng.normal_f32() * 0.02).collect(),
+            });
+        }
+        let final_norm = (0..d).map(|_| 1.0 + rng.normal_f32() * 0.02).collect();
+        let lm_head = TernaryMatrix::random(d, config.vocab_size, 1.0 / 3.0, &mut rng);
+        Ok(Self {
+            config,
+            embedding,
+            layers,
+            final_norm,
+            lm_head,
+            lm_head_scale: 1.0 / (d as f32).sqrt(),
+        })
+    }
+
+    /// Serialize to the `.rtw` format.
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        w.write_all(MAGIC)?;
+        let c = &self.config;
+        write_str(w, &c.name)?;
+        for v in [
+            c.vocab_size,
+            c.d_model,
+            c.n_layers,
+            c.n_heads,
+            c.n_kv_heads,
+            c.d_ff,
+            c.max_seq_len,
+        ] {
+            w.write_all(&(v as u32).to_le_bytes())?;
+        }
+        w.write_all(&c.rope_theta.to_le_bytes())?;
+        write_f32s(w, &self.embedding)?;
+        for l in &self.layers {
+            for m in [&l.wq, &l.wk, &l.wv, &l.wo, &l.gate, &l.up, &l.down] {
+                write_ternary(w, m)?;
+            }
+            for s in l.scales {
+                w.write_all(&s.to_le_bytes())?;
+            }
+            write_f32s(w, &l.attn_norm)?;
+            write_f32s(w, &l.mlp_norm)?;
+        }
+        write_f32s(w, &self.final_norm)?;
+        write_ternary(w, &self.lm_head)?;
+        w.write_all(&self.lm_head_scale.to_le_bytes())?;
+        Ok(())
+    }
+
+    /// Deserialize from the `.rtw` format.
+    pub fn read_from(r: &mut impl Read) -> Result<Self> {
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(Error::InvalidModel("bad magic".into()));
+        }
+        let name = read_str(r)?;
+        let mut dims = [0u32; 7];
+        for d in dims.iter_mut() {
+            *d = read_u32(r)?;
+        }
+        let rope_theta = f32::from_le_bytes(read_arr(r)?);
+        let config = ModelConfig {
+            name,
+            vocab_size: dims[0] as usize,
+            d_model: dims[1] as usize,
+            n_layers: dims[2] as usize,
+            n_heads: dims[3] as usize,
+            n_kv_heads: dims[4] as usize,
+            d_ff: dims[5] as usize,
+            max_seq_len: dims[6] as usize,
+            rope_theta,
+        };
+        config.validate()?;
+        let d = config.d_model;
+        let kv = config.n_kv_heads * config.head_dim();
+        let ff = config.d_ff;
+        let embedding = read_f32s(r, config.vocab_size * d)?;
+        let mut layers = Vec::with_capacity(config.n_layers);
+        for _ in 0..config.n_layers {
+            let wq = read_ternary(r, d, d)?;
+            let wk = read_ternary(r, d, kv)?;
+            let wv = read_ternary(r, d, kv)?;
+            let wo = read_ternary(r, d, d)?;
+            let gate = read_ternary(r, d, ff)?;
+            let up = read_ternary(r, d, ff)?;
+            let down = read_ternary(r, ff, d)?;
+            let mut scales = [0.0f32; 7];
+            for s in scales.iter_mut() {
+                *s = f32::from_le_bytes(read_arr(r)?);
+            }
+            let attn_norm = read_f32s(r, d)?;
+            let mlp_norm = read_f32s(r, d)?;
+            layers.push(LayerWeights {
+                wq,
+                wk,
+                wv,
+                wo,
+                gate,
+                up,
+                down,
+                scales,
+                attn_norm,
+                mlp_norm,
+            });
+        }
+        let final_norm = read_f32s(r, d)?;
+        let lm_head = read_ternary(r, d, config.vocab_size)?;
+        let lm_head_scale = f32::from_le_bytes(read_arr(r)?);
+        Ok(Self { config, embedding, layers, final_norm, lm_head, lm_head_scale })
+    }
+
+    /// Save to a file.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        self.write_to(&mut f)
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        Self::read_from(&mut f)
+    }
+}
+
+const MAGIC: &[u8; 4] = b"RTW1";
+
+fn write_str(w: &mut impl Write, s: &str) -> Result<()> {
+    w.write_all(&(s.len() as u32).to_le_bytes())?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_str(r: &mut impl Read) -> Result<String> {
+    let len = read_u32(r)? as usize;
+    if len > 1 << 16 {
+        return Err(Error::InvalidModel("name too long".into()));
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    String::from_utf8(buf).map_err(|e| Error::InvalidModel(e.to_string()))
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    Ok(u32::from_le_bytes(read_arr(r)?))
+}
+
+fn read_arr<const N: usize>(r: &mut impl Read) -> Result<[u8; N]> {
+    let mut b = [0u8; N];
+    r.read_exact(&mut b)?;
+    Ok(b)
+}
+
+fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+    let mut buf = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn write_ternary(w: &mut impl Write, m: &TernaryMatrix) -> Result<()> {
+    w.write_all(&m.pack2())?;
+    Ok(())
+}
+
+fn read_ternary(r: &mut impl Read, rows: usize, cols: usize) -> Result<TernaryMatrix> {
+    let nbytes = (rows * cols).div_ceil(4);
+    let mut buf = vec![0u8; nbytes];
+    r.read_exact(&mut buf)?;
+    Ok(TernaryMatrix::unpack2(rows, cols, &buf))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = ModelWeights::generate(ModelConfig::tiny(), 7).unwrap();
+        let b = ModelWeights::generate(ModelConfig::tiny(), 7).unwrap();
+        assert_eq!(a.embedding, b.embedding);
+        assert_eq!(a.layers[0].wq, b.layers[0].wq);
+        let c = ModelWeights::generate(ModelConfig::tiny(), 8).unwrap();
+        assert_ne!(a.layers[0].wq, c.layers[0].wq);
+    }
+
+    #[test]
+    fn rtw_round_trips() {
+        let w = ModelWeights::generate(ModelConfig::tiny(), 11).unwrap();
+        let mut buf = Vec::new();
+        w.write_to(&mut buf).unwrap();
+        let back = ModelWeights::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(w.config, back.config);
+        assert_eq!(w.embedding, back.embedding);
+        assert_eq!(w.layers.len(), back.layers.len());
+        for (a, b) in w.layers.iter().zip(back.layers.iter()) {
+            assert_eq!(a.wq, b.wq);
+            assert_eq!(a.down, b.down);
+            assert_eq!(a.scales, b.scales);
+            assert_eq!(a.attn_norm, b.attn_norm);
+        }
+        assert_eq!(w.lm_head, back.lm_head);
+    }
+
+    #[test]
+    fn rejects_corrupt_files() {
+        let w = ModelWeights::generate(ModelConfig::tiny(), 13).unwrap();
+        let mut buf = Vec::new();
+        w.write_to(&mut buf).unwrap();
+        let mut bad = buf.clone();
+        bad[0] ^= 0xFF;
+        assert!(ModelWeights::read_from(&mut bad.as_slice()).is_err());
+        let truncated = &buf[..buf.len() / 2];
+        assert!(ModelWeights::read_from(&mut &truncated[..]).is_err());
+    }
+}

@@ -1,0 +1,337 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` (`make artifacts`) and executes them on the
+//! XLA CPU client. This is the only place the `xla` crate is touched;
+//! python never runs on the request path.
+//!
+//! The dense-matvec artifacts serve as the *optimized-library baseline*
+//! (the NumPy/cuBLAS analog) in Fig 11 and the serving comparisons; the
+//! `rsr_matvec_*` artifact is the Layer-1 Pallas kernel lowered through
+//! Layer-2, executed from rust with rust-computed block keys — the
+//! full three-layer integration.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Element type of an artifact tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    /// 32-bit float.
+    F32,
+    /// 32-bit signed int.
+    I32,
+}
+
+impl DType {
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => Err(Error::Artifact(format!("unknown dtype {other}"))),
+        }
+    }
+}
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    /// Dimensions (row-major).
+    pub shape: Vec<usize>,
+    /// Element type.
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One entry of `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// Stable name (e.g. `dense_matvec_n4096`).
+    pub name: String,
+    /// File name of the HLO text within the artifact dir.
+    pub path: String,
+    /// Input tensors in call order.
+    pub inputs: Vec<TensorSpec>,
+    /// Output tensors.
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// A host tensor to feed an artifact.
+#[derive(Debug, Clone)]
+pub enum Tensor {
+    /// f32 data + shape.
+    F32(Vec<f32>, Vec<usize>),
+    /// i32 data + shape.
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Tensor {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Tensor::F32(data, shape) => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            Tensor::I32(data, shape) => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+
+    fn matches(&self, spec: &TensorSpec) -> bool {
+        match self {
+            Tensor::F32(data, shape) => {
+                spec.dtype == DType::F32 && shape == &spec.shape && data.len() == spec.elements()
+            }
+            Tensor::I32(data, shape) => {
+                spec.dtype == DType::I32 && shape == &spec.shape && data.len() == spec.elements()
+            }
+        }
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// The artifact's manifest entry.
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    /// Execute with host tensors, returning the (single-output) result
+    /// as f32. Validates shapes against the manifest.
+    pub fn run_f32(&self, inputs: &[Tensor]) -> Result<Vec<f32>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(Error::Artifact(format!(
+                "{}: {} inputs given, {} expected",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            )));
+        }
+        for (i, (t, s)) in inputs.iter().zip(self.spec.inputs.iter()).enumerate() {
+            if !t.matches(s) {
+                return Err(Error::Artifact(format!(
+                    "{}: input {i} shape/dtype mismatch (expected {:?})",
+                    self.spec.name, s
+                )));
+            }
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// The PJRT engine: one CPU client + the artifact registry.
+///
+/// Compilation is lazy and cached: the first `executable(name)` call
+/// compiles the HLO, later calls reuse it.
+///
+/// `PjRtClient` is `Rc`-based and therefore **not `Send`**: an `Engine`
+/// lives on one thread. Components that need PJRT from a threaded
+/// context (the serving engine's `Pjrt`-backed workers, benches)
+/// construct one engine per worker thread via [`thread_engine`].
+pub struct Engine {
+    dir: PathBuf,
+    specs: HashMap<String, ArtifactSpec>,
+    compiled: RefCell<HashMap<String, Rc<Executable>>>,
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// Load the manifest from an artifact directory and create the CPU
+    /// client. Fails if the directory or manifest is missing.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                manifest_path.display()
+            ))
+        })?;
+        let json = Json::parse(&text).map_err(Error::Artifact)?;
+        let mut specs = HashMap::new();
+        let arts = json
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| Error::Artifact("manifest missing artifacts[]".into()))?;
+        for a in arts {
+            let spec = parse_artifact(a)?;
+            specs.insert(spec.name.clone(), spec);
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { dir, specs, compiled: RefCell::new(HashMap::new()), client })
+    }
+
+    /// The default artifact directory: `$RSR_ARTIFACTS` or `artifacts/`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("RSR_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Artifact names available in the manifest.
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.specs.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Manifest entry by name.
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.get(name)
+    }
+
+    /// Get (compiling on first use) an executable.
+    pub fn executable(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.compiled.borrow().get(name) {
+            return Ok(Rc::clone(e));
+        }
+        let spec = self
+            .specs
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("unknown artifact {name}")))?
+            .clone();
+        let path = self.dir.join(&spec.path);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Artifact("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let executable = Rc::new(Executable { spec, exe });
+        self.compiled
+            .borrow_mut()
+            .insert(name.to_string(), Rc::clone(&executable));
+        Ok(executable)
+    }
+
+    /// Convenience: execute an artifact in one call.
+    pub fn run_f32(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<f32>> {
+        self.executable(name)?.run_f32(inputs)
+    }
+}
+
+fn parse_artifact(a: &Json) -> Result<ArtifactSpec> {
+    let name = a
+        .get("name")
+        .and_then(|n| n.as_str())
+        .ok_or_else(|| Error::Artifact("artifact missing name".into()))?
+        .to_string();
+    let path = a
+        .get("path")
+        .and_then(|p| p.as_str())
+        .ok_or_else(|| Error::Artifact(format!("{name}: missing path")))?
+        .to_string();
+    let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+        a.get(key)
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| Error::Artifact(format!("{name}: missing {key}")))?
+            .iter()
+            .map(|s| {
+                let shape = s
+                    .get("shape")
+                    .and_then(|x| x.as_arr())
+                    .ok_or_else(|| Error::Artifact(format!("{name}: bad shape")))?
+                    .iter()
+                    .map(|d| d.as_f64().unwrap_or(0.0) as usize)
+                    .collect();
+                let dtype = DType::from_str(
+                    s.get("dtype").and_then(|d| d.as_str()).unwrap_or("f32"),
+                )?;
+                Ok(TensorSpec { shape, dtype })
+            })
+            .collect()
+    };
+    let inputs = parse_specs("inputs")?;
+    let outputs = parse_specs("outputs")?;
+    Ok(ArtifactSpec { name, path, inputs, outputs })
+}
+
+thread_local! {
+    static THREAD_ENGINE: RefCell<Option<Rc<Engine>>> = const { RefCell::new(None) };
+}
+
+/// Per-thread engine (PJRT clients are heavy and `!Send`; one per
+/// thread, constructed on first use from [`Engine::default_dir`]).
+pub fn thread_engine() -> Result<Rc<Engine>> {
+    THREAD_ENGINE.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if let Some(e) = slot.as_ref() {
+            return Ok(Rc::clone(e));
+        }
+        let engine = Rc::new(Engine::load(Engine::default_dir())?);
+        *slot = Some(Rc::clone(&engine));
+        Ok(engine)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_spec_elements() {
+        let s = TensorSpec { shape: vec![2, 3, 4], dtype: DType::F32 };
+        assert_eq!(s.elements(), 24);
+    }
+
+    #[test]
+    fn tensor_shape_matching() {
+        let spec = TensorSpec { shape: vec![2, 2], dtype: DType::F32 };
+        assert!(Tensor::F32(vec![0.0; 4], vec![2, 2]).matches(&spec));
+        assert!(!Tensor::F32(vec![0.0; 4], vec![4]).matches(&spec));
+        assert!(!Tensor::I32(vec![0; 4], vec![2, 2]).matches(&spec));
+    }
+
+    #[test]
+    fn manifest_parsing() {
+        let manifest = r#"{"format":"hlo-text","artifacts":[
+            {"name":"t","path":"t.hlo.txt",
+             "inputs":[{"shape":[4],"dtype":"f32"},{"shape":[2,4],"dtype":"i32"}],
+             "outputs":[{"shape":[4],"dtype":"f32"}],
+             "meta":{"kind":"x"}}]}"#;
+        let json = Json::parse(manifest).unwrap();
+        let a = &json.get("artifacts").unwrap().as_arr().unwrap()[0];
+        let spec = parse_artifact(a).unwrap();
+        assert_eq!(spec.name, "t");
+        assert_eq!(spec.inputs.len(), 2);
+        assert_eq!(spec.inputs[1].dtype, DType::I32);
+        assert_eq!(spec.inputs[1].shape, vec![2, 4]);
+    }
+
+    #[test]
+    fn missing_dir_is_a_clean_error() {
+        let err = match Engine::load("/nonexistent/dir") {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn dtype_parsing() {
+        assert!(DType::from_str("f32").is_ok());
+        assert!(DType::from_str("i32").is_ok());
+        assert!(DType::from_str("f16").is_err());
+    }
+}

@@ -1,0 +1,127 @@
+//! Dynamic batching: group queued requests by size *or* deadline,
+//! whichever comes first — the standard latency/throughput knob of a
+//! serving system (vLLM/Orca style, scaled to this stack).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::queue::BoundedQueue;
+use super::request::Request;
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Maximum requests per batch.
+    pub max_batch: usize,
+    /// Maximum time to wait for the batch to fill.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// A group of requests picked up together.
+#[derive(Debug)]
+pub struct Batch {
+    /// The member requests.
+    pub requests: Vec<Request>,
+    /// When the batch was formed (for queue-time accounting).
+    pub formed_at: Instant,
+}
+
+/// Pulls requests off the shared queue according to a [`BatchPolicy`].
+pub struct Batcher {
+    queue: Arc<BoundedQueue<Request>>,
+    policy: BatchPolicy,
+}
+
+impl Batcher {
+    /// Batcher over a shared queue.
+    pub fn new(queue: Arc<BoundedQueue<Request>>, policy: BatchPolicy) -> Self {
+        Self { queue, policy }
+    }
+
+    /// Block (up to `idle_timeout`) for the next batch. `None` when the
+    /// queue is closed/idle.
+    ///
+    /// Strategy: block for the first request, then top up until either
+    /// the batch is full or `max_wait` has elapsed since the first
+    /// pickup — bounding the latency any request pays for batching.
+    pub fn next_batch(&self, idle_timeout: Duration) -> Option<Batch> {
+        let first = self.queue.pop_timeout(idle_timeout)?;
+        let formed_at = Instant::now();
+        let mut requests = vec![first];
+        while requests.len() < self.policy.max_batch {
+            let left = self.policy.max_wait.saturating_sub(formed_at.elapsed());
+            if left.is_zero() {
+                break;
+            }
+            match self.queue.pop_timeout(left) {
+                Some(r) => requests.push(r),
+                None => break,
+            }
+        }
+        Some(Batch { requests, formed_at })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> Request {
+        Request::new(id, vec![1, 2, 3], 4)
+    }
+
+    #[test]
+    fn full_batch_returns_immediately() {
+        let q = Arc::new(BoundedQueue::new(100));
+        for i in 0..10 {
+            q.try_push(req(i)).unwrap();
+        }
+        let b = Batcher::new(
+            Arc::clone(&q),
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) },
+        );
+        let t0 = Instant::now();
+        let batch = b.next_batch(Duration::from_secs(1)).unwrap();
+        assert_eq!(batch.requests.len(), 4);
+        assert!(t0.elapsed() < Duration::from_secs(1), "must not wait when full");
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let q = Arc::new(BoundedQueue::new(100));
+        q.try_push(req(0)).unwrap();
+        let b = Batcher::new(
+            Arc::clone(&q),
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(20) },
+        );
+        let t0 = Instant::now();
+        let batch = b.next_batch(Duration::from_secs(1)).unwrap();
+        assert_eq!(batch.requests.len(), 1);
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(15), "waited {waited:?}");
+        assert!(waited < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn idle_timeout_returns_none() {
+        let q: Arc<BoundedQueue<Request>> = Arc::new(BoundedQueue::new(4));
+        let b = Batcher::new(Arc::clone(&q), BatchPolicy::default());
+        assert!(b.next_batch(Duration::from_millis(10)).is_none());
+    }
+
+    #[test]
+    fn closed_queue_returns_none_after_drain() {
+        let q = Arc::new(BoundedQueue::new(4));
+        q.try_push(req(1)).unwrap();
+        q.close();
+        let b = Batcher::new(Arc::clone(&q), BatchPolicy::default());
+        assert_eq!(b.next_batch(Duration::from_millis(10)).unwrap().requests.len(), 1);
+        assert!(b.next_batch(Duration::from_millis(10)).is_none());
+    }
+}

@@ -1,0 +1,326 @@
+//! The inference engine: worker threads each owning a `Transformer`
+//! instance, pulling batches from the shared queue, running
+//! prefill → decode per request, and reporting completions.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::Metrics;
+use super::queue::{BoundedQueue, PushError};
+use super::request::{Request, Response, Timing};
+use super::scheduler::{schedule, Policy};
+use crate::error::{Error, Result};
+use crate::kernels::Backend;
+use crate::model::sampler::Sampler;
+use crate::model::transformer::Transformer;
+use crate::model::weights::ModelWeights;
+use crate::util::rng::Rng;
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Worker threads (each with its own `Transformer`).
+    pub workers: usize,
+    /// Request queue capacity (backpressure bound).
+    pub queue_capacity: usize,
+    /// Batching policy.
+    pub batch: BatchPolicy,
+    /// Scheduling policy within a batch.
+    pub schedule: Policy,
+    /// Multiply backend for the model.
+    pub backend: Backend,
+    /// Blocking parameter (0 → analytic optimum).
+    pub k: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            queue_capacity: 256,
+            batch: BatchPolicy::default(),
+            schedule: Policy::default(),
+            backend: Backend::RsrPlusPlus,
+            k: 0,
+        }
+    }
+}
+
+/// A running engine: submit requests, receive responses.
+///
+/// The response receiver is Mutex-wrapped so the engine is `Sync`; in
+/// multi-consumer settings (the TCP server) a single dispatcher thread
+/// should own consumption (see `server::ResponseHub`).
+pub struct InferenceEngine {
+    queue: Arc<BoundedQueue<Request>>,
+    metrics: Arc<Metrics>,
+    responses: std::sync::Mutex<mpsc::Receiver<Response>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    inflight: Arc<AtomicUsize>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl InferenceEngine {
+    /// Start workers. Model preparation (preprocessing every weight
+    /// matrix — paper Algorithm 1) happens here, once, per worker.
+    pub fn start(weights: Arc<ModelWeights>, cfg: EngineConfig) -> Result<Self> {
+        let queue = Arc::new(BoundedQueue::new(cfg.queue_capacity));
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = mpsc::channel::<Response>();
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        let mut workers = Vec::with_capacity(cfg.workers.max(1));
+        for wid in 0..cfg.workers.max(1) {
+            let queue = Arc::clone(&queue);
+            let metrics = Arc::clone(&metrics);
+            let tx = tx.clone();
+            let weights = Arc::clone(&weights);
+            let inflight = Arc::clone(&inflight);
+            let shutdown = Arc::clone(&shutdown);
+            let cfg = cfg.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("rsr-worker-{wid}"))
+                    .spawn(move || {
+                        // Preprocess once per worker (fixed weights —
+                        // the paper's core observation).
+                        let model = match Transformer::from_weights(
+                            &weights,
+                            cfg.backend,
+                            cfg.k,
+                        ) {
+                            Ok(m) => m,
+                            Err(e) => {
+                                eprintln!("worker {wid}: model build failed: {e}");
+                                return;
+                            }
+                        };
+                        worker_loop(model, queue, metrics, tx, inflight, shutdown, &cfg);
+                    })
+                    .map_err(|e| Error::Serving(e.to_string()))?,
+            );
+        }
+        Ok(Self {
+            queue,
+            metrics,
+            responses: std::sync::Mutex::new(rx),
+            workers,
+            inflight,
+            shutdown,
+        })
+    }
+
+    /// Submit a request; fails fast under backpressure.
+    pub fn submit(&self, request: Request) -> Result<()> {
+        let res = self.queue.try_push(request);
+        self.metrics.record_admission(res.is_ok());
+        match res {
+            Ok(()) => {
+                self.inflight.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(PushError::Full) => {
+                Err(Error::Serving("queue full — retry later".into()))
+            }
+            Err(PushError::Closed) => Err(Error::Serving("engine shut down".into())),
+        }
+    }
+
+    /// Receive the next completed response (blocking with timeout).
+    /// Single-consumer: concurrent callers serialize on an internal
+    /// lock and may steal each other's responses — multi-connection
+    /// fronts must use one dispatcher (see `server::ResponseHub`).
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<Response> {
+        self.responses.lock().unwrap().recv_timeout(timeout).ok()
+    }
+
+    /// Requests admitted but not yet answered.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    /// Queue depth + inflight, the router's load signal.
+    pub fn load(&self) -> usize {
+        self.queue.len() + self.inflight()
+    }
+
+    /// Metrics sink.
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Stop accepting work, drain, and join workers.
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    mut model: Transformer,
+    queue: Arc<BoundedQueue<Request>>,
+    metrics: Arc<Metrics>,
+    tx: mpsc::Sender<Response>,
+    inflight: Arc<AtomicUsize>,
+    shutdown: Arc<AtomicBool>,
+    cfg: &EngineConfig,
+) {
+    let batcher = Batcher::new(Arc::clone(&queue), cfg.batch);
+    let mut rng = Rng::new(0xC0FFEE);
+    loop {
+        if shutdown.load(Ordering::Relaxed) && queue.is_empty() {
+            break;
+        }
+        let Some(batch) = batcher.next_batch(Duration::from_millis(50)) else {
+            if queue.is_closed() && queue.is_empty() {
+                break;
+            }
+            continue;
+        };
+        for request in schedule(batch.requests, cfg.schedule) {
+            let response = run_request(&mut model, &request, &mut rng);
+            match &response.error {
+                None => metrics.record(&response.timing, response.tokens.len()),
+                Some(_) => metrics.record_failure(),
+            }
+            inflight.fetch_sub(1, Ordering::Relaxed);
+            if tx.send(response).is_err() {
+                return; // receiver dropped — engine gone
+            }
+        }
+    }
+}
+
+fn run_request(model: &mut Transformer, request: &Request, rng: &mut Rng) -> Response {
+    let picked_up = Instant::now();
+    let queue_time = picked_up.duration_since(request.arrival);
+
+    model.reset();
+    let mut timing = Timing { queue: queue_time, ..Timing::default() };
+
+    // Prefill.
+    let t0 = Instant::now();
+    for &t in &request.prompt {
+        if let Err(e) = model.forward_token(t) {
+            return Response::err(request.id, format!("prefill: {e}"));
+        }
+    }
+    timing.prefill = t0.elapsed();
+    if request.prompt.is_empty() {
+        return Response::err(request.id, "empty prompt");
+    }
+
+    // Decode (greedy — the §5.3 equality-comparable setting).
+    let t0 = Instant::now();
+    let mut tokens = Vec::with_capacity(request.max_new_tokens);
+    let sampler = Sampler::Greedy;
+    for _ in 0..request.max_new_tokens {
+        let logits = match model_logits(model) {
+            Ok(l) => l,
+            Err(e) => return Response::err(request.id, format!("decode: {e}")),
+        };
+        let next = sampler.sample(&logits, rng);
+        tokens.push(next);
+        if next == crate::model::tokenizer::EOS
+            || model.seq_len() >= model.config().max_seq_len
+        {
+            break;
+        }
+        if let Err(e) = model.forward_token(next) {
+            return Response::err(request.id, format!("decode: {e}"));
+        }
+    }
+    timing.decode = t0.elapsed();
+    Response::ok(request.id, tokens, timing)
+}
+
+fn model_logits(model: &Transformer) -> Result<Vec<f32>> {
+    // The logits of the last forward pass live in the model; we copy
+    // them because sampling mutates nothing but we need ownership.
+    Ok(model.last_logits().to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+
+    fn tiny_engine(cfg: EngineConfig) -> InferenceEngine {
+        let weights =
+            Arc::new(ModelWeights::generate(ModelConfig::tiny(), 99).unwrap());
+        InferenceEngine::start(weights, cfg).unwrap()
+    }
+
+    #[test]
+    fn serves_a_request_end_to_end() {
+        let engine = tiny_engine(EngineConfig { workers: 1, ..Default::default() });
+        engine.submit(Request::new(1, vec![10, 20, 30], 4)).unwrap();
+        let resp = engine.recv_timeout(Duration::from_secs(30)).expect("response");
+        assert_eq!(resp.id, 1);
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert!(!resp.tokens.is_empty());
+        assert!(resp.timing.total() > Duration::ZERO);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn multiple_workers_serve_many_requests() {
+        let engine = tiny_engine(EngineConfig { workers: 3, ..Default::default() });
+        for i in 0..12 {
+            engine.submit(Request::new(i, vec![1 + i as u32, 2, 3], 3)).unwrap();
+        }
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..12 {
+            let r = engine.recv_timeout(Duration::from_secs(60)).expect("resp");
+            assert!(r.error.is_none());
+            seen.insert(r.id);
+        }
+        assert_eq!(seen.len(), 12);
+        assert_eq!(engine.metrics().completed.load(Ordering::Relaxed), 12);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let engine = tiny_engine(EngineConfig {
+            workers: 1,
+            queue_capacity: 1,
+            ..Default::default()
+        });
+        // Stuff the queue beyond capacity; at least one must be rejected.
+        let mut rejected = 0;
+        for i in 0..20 {
+            if engine.submit(Request::new(i, vec![5; 16], 8)).is_err() {
+                rejected += 1;
+            }
+        }
+        assert!(rejected > 0, "expected backpressure rejections");
+        // Drain what was admitted.
+        while engine.recv_timeout(Duration::from_secs(10)).is_some() {
+            if engine.inflight() == 0 {
+                break;
+            }
+        }
+        engine.shutdown();
+    }
+
+    #[test]
+    fn malformed_request_yields_error_response() {
+        let engine = tiny_engine(EngineConfig { workers: 1, ..Default::default() });
+        // Out-of-vocab token → prefill error, engine survives.
+        engine.submit(Request::new(5, vec![999_999], 2)).unwrap();
+        let r = engine.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!(r.error.is_some());
+        // Engine still serves afterwards.
+        engine.submit(Request::new(6, vec![10], 2)).unwrap();
+        let r = engine.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!(r.error.is_none());
+        engine.shutdown();
+    }
+}

@@ -1,0 +1,135 @@
+//! Serving metrics: counters + per-phase latency histograms, merged
+//! across workers and snapshotted as JSON.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::json::Json;
+use crate::util::stats::LatencyHistogram;
+
+/// Shared metrics sink (one per engine; workers record through it).
+#[derive(Default)]
+pub struct Metrics {
+    /// Requests admitted to the queue.
+    pub admitted: AtomicU64,
+    /// Requests rejected by backpressure.
+    pub rejected: AtomicU64,
+    /// Requests completed successfully.
+    pub completed: AtomicU64,
+    /// Requests failed.
+    pub failed: AtomicU64,
+    /// Tokens generated in total.
+    pub tokens_out: AtomicU64,
+    hist: Mutex<Hists>,
+}
+
+#[derive(Default)]
+struct Hists {
+    queue: LatencyHistogram,
+    prefill: LatencyHistogram,
+    decode: LatencyHistogram,
+    total: LatencyHistogram,
+}
+
+impl Metrics {
+    /// Fresh metrics.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a completed request's timing.
+    pub fn record(&self, timing: &super::request::Timing, tokens: usize) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.tokens_out.fetch_add(tokens as u64, Ordering::Relaxed);
+        let mut h = self.hist.lock().unwrap();
+        h.queue.record(timing.queue);
+        h.prefill.record(timing.prefill);
+        h.decode.record(timing.decode);
+        h.total.record(timing.total());
+    }
+
+    /// Record a failure.
+    pub fn record_failure(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record queue admission / rejection.
+    pub fn record_admission(&self, admitted: bool) {
+        if admitted {
+            self.admitted.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Snapshot as JSON (for the CLI `metrics` output and tests).
+    pub fn snapshot(&self) -> Json {
+        let h = self.hist.lock().unwrap();
+        let phase = |hist: &LatencyHistogram| {
+            Json::obj(vec![
+                ("count", Json::num(hist.count() as f64)),
+                ("mean_us", Json::num(hist.mean_us())),
+                ("p50_us", Json::num(hist.percentile_us(50.0) as f64)),
+                ("p99_us", Json::num(hist.percentile_us(99.0) as f64)),
+                ("max_us", Json::num(hist.max_us() as f64)),
+            ])
+        };
+        Json::obj(vec![
+            ("admitted", Json::num(self.admitted.load(Ordering::Relaxed) as f64)),
+            ("rejected", Json::num(self.rejected.load(Ordering::Relaxed) as f64)),
+            ("completed", Json::num(self.completed.load(Ordering::Relaxed) as f64)),
+            ("failed", Json::num(self.failed.load(Ordering::Relaxed) as f64)),
+            ("tokens_out", Json::num(self.tokens_out.load(Ordering::Relaxed) as f64)),
+            ("queue", phase(&h.queue)),
+            ("prefill", phase(&h.prefill)),
+            ("decode", phase(&h.decode)),
+            ("total", phase(&h.total)),
+        ])
+    }
+}
+
+/// Tokens/second over a window (helper for bench reports).
+pub fn throughput(tokens: u64, elapsed: Duration) -> f64 {
+    if elapsed.is_zero() {
+        return 0.0;
+    }
+    tokens as f64 / elapsed.as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::request::Timing;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record_admission(true);
+        m.record_admission(false);
+        m.record(
+            &Timing {
+                queue: Duration::from_micros(100),
+                prefill: Duration::from_micros(200),
+                decode: Duration::from_micros(700),
+            },
+            5,
+        );
+        m.record_failure();
+        let snap = m.snapshot();
+        assert_eq!(snap.get("admitted").unwrap().as_f64(), Some(1.0));
+        assert_eq!(snap.get("rejected").unwrap().as_f64(), Some(1.0));
+        assert_eq!(snap.get("completed").unwrap().as_f64(), Some(1.0));
+        assert_eq!(snap.get("failed").unwrap().as_f64(), Some(1.0));
+        assert_eq!(snap.get("tokens_out").unwrap().as_f64(), Some(5.0));
+        let total = snap.get("total").unwrap();
+        assert_eq!(total.get("count").unwrap().as_f64(), Some(1.0));
+        assert!(total.get("mean_us").unwrap().as_f64().unwrap() >= 1000.0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        assert_eq!(throughput(100, Duration::from_secs(2)), 50.0);
+        assert_eq!(throughput(100, Duration::ZERO), 0.0);
+    }
+}

@@ -1,0 +1,43 @@
+//! Layer-3 serving coordinator: the production wrapper around the
+//! RSR-backed ternary transformer.
+//!
+//! Architecture (vLLM-router-like, scaled to this crate):
+//!
+//! ```text
+//!  TCP clients ──► server (line protocol, thread per conn)
+//!                     │
+//!                  router (least-loaded across engines)
+//!                     │
+//!              bounded request queue (backpressure)
+//!                     │
+//!                  batcher (size + deadline dynamic batching)
+//!                     │
+//!               scheduler (prefill-priority admission)
+//!                     │
+//!        engine workers (one Transformer instance each;
+//!        per-request prefill → decode; RSR/RSR++ backends)
+//!                     │
+//!                  metrics (latency histograms, counters)
+//! ```
+//!
+//! The paper's setting is single-vector matmuls (one token per forward
+//! pass), so batching here amortizes *dispatch and queueing*, and
+//! parallelism comes from engine workers each running vector–matrix
+//! products — matching §5.3's CPU deployment scenario.
+//!
+//! tokio is unavailable offline; everything is `std::thread` +
+//! `std::net` + condvar queues (see DESIGN.md §Substitutions).
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod queue;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+pub mod server;
+
+pub use engine::{EngineConfig, InferenceEngine};
+pub use request::{Request, Response};
+pub use router::Router;
+pub use server::Server;

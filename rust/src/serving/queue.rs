@@ -1,0 +1,181 @@
+//! A bounded MPMC queue with blocking pop and non-blocking push —
+//! the backpressure point of the serving stack: when the queue is
+//! full, `try_push` fails and the server returns an overload error
+//! instead of accepting unbounded work.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Bounded FIFO queue shared between producers (server threads) and
+/// consumers (engine workers).
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Why a push was rejected.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError {
+    /// Queue at capacity — caller should shed load.
+    Full,
+    /// Queue closed — system shutting down.
+    Closed,
+}
+
+impl<T> BoundedQueue<T> {
+    /// Queue with the given capacity (≥ 1).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Non-blocking push; fails when full or closed.
+    pub fn try_push(&self, item: T) -> Result<(), PushError> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(PushError::Closed);
+        }
+        if g.items.len() >= self.capacity {
+            return Err(PushError::Full);
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop with timeout; `None` on timeout or when closed and
+    /// drained.
+    pub fn pop_timeout(&self, timeout: Duration) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            let (guard, res) = self.not_empty.wait_timeout(g, timeout).unwrap();
+            g = guard;
+            if res.timed_out() && g.items.is_empty() {
+                return None;
+            }
+        }
+    }
+
+    /// Drain up to `max` items without blocking (after at least one is
+    /// available) — the batcher's bulk pickup.
+    pub fn pop_many(&self, max: usize, timeout: Duration) -> Vec<T> {
+        let mut out = Vec::new();
+        if let Some(first) = self.pop_timeout(timeout) {
+            out.push(first);
+            let mut g = self.inner.lock().unwrap();
+            while out.len() < max {
+                match g.items.pop_front() {
+                    Some(x) => out.push(x),
+                    None => break,
+                }
+            }
+        }
+        out
+    }
+
+    /// Items currently queued.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close the queue: producers fail, consumers drain then get `None`.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+    }
+
+    /// True when closed.
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(10);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.pop_timeout(Duration::from_millis(10)), Some(1));
+        assert_eq!(q.pop_timeout(Duration::from_millis(10)), Some(2));
+        assert_eq!(q.pop_timeout(Duration::from_millis(10)), None);
+    }
+
+    #[test]
+    fn backpressure_when_full() {
+        let q = BoundedQueue::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.try_push(3), Err(PushError::Full));
+        q.pop_timeout(Duration::from_millis(1)).unwrap();
+        q.try_push(3).unwrap();
+    }
+
+    #[test]
+    fn close_rejects_producers_but_drains() {
+        let q = BoundedQueue::new(4);
+        q.try_push(1).unwrap();
+        q.close();
+        assert_eq!(q.try_push(2), Err(PushError::Closed));
+        assert_eq!(q.pop_timeout(Duration::from_millis(10)), Some(1));
+        assert_eq!(q.pop_timeout(Duration::from_millis(10)), None);
+    }
+
+    #[test]
+    fn pop_many_batches() {
+        let q = BoundedQueue::new(10);
+        for i in 0..5 {
+            q.try_push(i).unwrap();
+        }
+        let batch = q.pop_many(3, Duration::from_millis(10));
+        assert_eq!(batch, vec![0, 1, 2]);
+        let rest = q.pop_many(10, Duration::from_millis(10));
+        assert_eq!(rest, vec![3, 4]);
+    }
+
+    #[test]
+    fn cross_thread_handoff() {
+        let q = Arc::new(BoundedQueue::new(100));
+        let qp = Arc::clone(&q);
+        let producer = std::thread::spawn(move || {
+            for i in 0..1000 {
+                while qp.try_push(i).is_err() {
+                    std::thread::yield_now();
+                }
+            }
+            qp.close();
+        });
+        let mut got = Vec::new();
+        while let Some(x) = q.pop_timeout(Duration::from_secs(5)) {
+            got.push(x);
+        }
+        producer.join().unwrap();
+        assert_eq!(got, (0..1000).collect::<Vec<_>>());
+    }
+}

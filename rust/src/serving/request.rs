@@ -1,0 +1,90 @@
+//! Request/response types flowing through the serving stack.
+
+use std::time::{Duration, Instant};
+
+/// A generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Client-assigned id, echoed in the response.
+    pub id: u64,
+    /// Prompt token ids (tokenized at the server edge).
+    pub prompt: Vec<u32>,
+    /// Maximum tokens to generate.
+    pub max_new_tokens: usize,
+    /// Arrival timestamp (set at admission).
+    pub arrival: Instant,
+}
+
+impl Request {
+    /// New request stamped with the current time.
+    pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize) -> Self {
+        Self { id, prompt, max_new_tokens, arrival: Instant::now() }
+    }
+}
+
+/// Per-request latency breakdown.
+#[derive(Debug, Clone, Default)]
+pub struct Timing {
+    /// Queue admission → worker pickup.
+    pub queue: Duration,
+    /// Prompt prefill (all prompt tokens through the model).
+    pub prefill: Duration,
+    /// Token generation.
+    pub decode: Duration,
+}
+
+impl Timing {
+    /// End-to-end latency.
+    pub fn total(&self) -> Duration {
+        self.queue + self.prefill + self.decode
+    }
+}
+
+/// A completed generation.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// Echoed request id.
+    pub id: u64,
+    /// Generated token ids.
+    pub tokens: Vec<u32>,
+    /// Latency breakdown.
+    pub timing: Timing,
+    /// Error message when generation failed (tokens empty).
+    pub error: Option<String>,
+}
+
+impl Response {
+    /// Successful response.
+    pub fn ok(id: u64, tokens: Vec<u32>, timing: Timing) -> Self {
+        Self { id, tokens, timing, error: None }
+    }
+
+    /// Failed response.
+    pub fn err(id: u64, msg: impl Into<String>) -> Self {
+        Self { id, tokens: Vec::new(), timing: Timing::default(), error: Some(msg.into()) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_total_adds_phases() {
+        let t = Timing {
+            queue: Duration::from_millis(1),
+            prefill: Duration::from_millis(2),
+            decode: Duration::from_millis(3),
+        };
+        assert_eq!(t.total(), Duration::from_millis(6));
+    }
+
+    #[test]
+    fn response_constructors() {
+        let ok = Response::ok(7, vec![1, 2], Timing::default());
+        assert!(ok.error.is_none());
+        let err = Response::err(8, "boom");
+        assert_eq!(err.error.as_deref(), Some("boom"));
+        assert!(err.tokens.is_empty());
+    }
+}

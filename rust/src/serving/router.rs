@@ -1,0 +1,128 @@
+//! Least-loaded routing across engines.
+//!
+//! An engine is one model replica (its own workers and queue). The
+//! router picks the replica with the smallest load signal
+//! (queue depth + inflight), falling back through replicas when the
+//! preferred one is saturated — the same strategy vllm-project/router
+//! uses across model servers.
+
+use std::sync::Arc;
+
+use super::engine::InferenceEngine;
+use super::request::Request;
+use crate::error::{Error, Result};
+
+/// Routes requests across replicas.
+pub struct Router {
+    engines: Vec<Arc<InferenceEngine>>,
+}
+
+impl Router {
+    /// Router over ≥ 1 replicas.
+    pub fn new(engines: Vec<Arc<InferenceEngine>>) -> Result<Self> {
+        if engines.is_empty() {
+            return Err(Error::Config("router needs at least one engine".into()));
+        }
+        Ok(Self { engines })
+    }
+
+    /// Number of replicas.
+    pub fn replicas(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// The replica a request would currently be routed to.
+    pub fn pick(&self) -> usize {
+        self.engines
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| e.load())
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+
+    /// Submit to the least-loaded replica, falling back through the
+    /// others if it rejects (all-full → error). Requests are cheap to
+    /// clone (token ids), so each attempt gets its own copy.
+    pub fn submit(&self, request: Request) -> Result<usize> {
+        let start = self.pick();
+        let n = self.engines.len();
+        let mut last_err = None;
+        for off in 0..n {
+            let idx = (start + off) % n;
+            match self.engines[idx].submit(request.clone()) {
+                Ok(()) => return Ok(idx),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.unwrap_or_else(|| Error::Serving("all replicas saturated".into())))
+    }
+
+    /// Engine handle by index (metrics, recv).
+    pub fn engine(&self, idx: usize) -> &Arc<InferenceEngine> {
+        &self.engines[idx]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::engine::EngineConfig;
+    use crate::model::config::ModelConfig;
+    use crate::model::weights::ModelWeights;
+    use std::time::Duration;
+
+    fn engines(n: usize) -> Vec<Arc<InferenceEngine>> {
+        let weights =
+            Arc::new(ModelWeights::generate(ModelConfig::tiny(), 7).unwrap());
+        (0..n)
+            .map(|_| {
+                Arc::new(
+                    InferenceEngine::start(
+                        Arc::clone(&weights),
+                        EngineConfig { workers: 1, ..Default::default() },
+                    )
+                    .unwrap(),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn requires_at_least_one_engine() {
+        assert!(Router::new(vec![]).is_err());
+    }
+
+    #[test]
+    fn routes_to_least_loaded() {
+        let es = engines(2);
+        let router = Router::new(es.clone()).unwrap();
+        // Load replica 0 with work so pick() moves to 1.
+        es[0].submit(Request::new(1, vec![1; 8], 4)).unwrap();
+        es[0].submit(Request::new(2, vec![1; 8], 4)).unwrap();
+        assert_eq!(router.pick(), 1);
+        // Drain.
+        for e in &es {
+            while e.inflight() > 0 {
+                e.recv_timeout(Duration::from_secs(30));
+            }
+        }
+    }
+
+    #[test]
+    fn submit_spreads_requests() {
+        let es = engines(2);
+        let router = Router::new(es.clone()).unwrap();
+        let mut routed = [0usize; 2];
+        for i in 0..6 {
+            let idx = router.submit(Request::new(i, vec![2, 3], 2)).unwrap();
+            routed[idx] += 1;
+        }
+        assert!(routed[0] > 0 && routed[1] > 0, "routed = {routed:?}");
+        for e in &es {
+            while e.inflight() > 0 {
+                e.recv_timeout(Duration::from_secs(30));
+            }
+        }
+    }
+}

@@ -1,0 +1,95 @@
+//! Prefill/decode-aware scheduling.
+//!
+//! Each engine worker runs one sequence at a time (batch-1 vector
+//! matmuls — the paper's setting), so the scheduler's job is admission
+//! *order*: short-prompt requests (cheap prefill) are admitted ahead of
+//! long-prompt ones within a batch window, bounding head-of-line
+//! blocking, while an aging bound prevents starvation.
+
+use std::time::Duration;
+
+use super::request::Request;
+
+/// Scheduling policy for ordering admitted requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Arrival order.
+    Fifo,
+    /// Shortest prompt first within the window, with aging: anything
+    /// older than the bound goes first regardless of length.
+    ShortestPromptFirst {
+        /// Aging bound; older requests jump the length ordering.
+        aging: Duration,
+    },
+}
+
+impl Default for Policy {
+    fn default() -> Self {
+        Policy::ShortestPromptFirst { aging: Duration::from_millis(50) }
+    }
+}
+
+/// Order a batch of requests for execution according to the policy.
+/// Returns the same requests, re-ordered.
+pub fn schedule(mut requests: Vec<Request>, policy: Policy) -> Vec<Request> {
+    match policy {
+        Policy::Fifo => requests,
+        Policy::ShortestPromptFirst { aging } => {
+            requests.sort_by_key(|r| {
+                let aged = r.arrival.elapsed() >= aging;
+                // Aged requests sort before everything (key 0), the
+                // rest by prompt length.
+                (!aged as usize, if aged { 0 } else { r.prompt.len() })
+            });
+            requests
+        }
+    }
+}
+
+/// Decode-work estimate for a request: prefill cost ≈ prompt length,
+/// decode cost ≈ max_new_tokens; used by the router's load accounting.
+pub fn work_estimate(r: &Request) -> usize {
+    r.prompt.len() + r.max_new_tokens
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    fn req(id: u64, prompt_len: usize) -> Request {
+        Request::new(id, vec![0; prompt_len], 8)
+    }
+
+    #[test]
+    fn fifo_preserves_order() {
+        let rs = vec![req(1, 10), req(2, 1), req(3, 5)];
+        let out = schedule(rs, Policy::Fifo);
+        let ids: Vec<u64> = out.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn shortest_prompt_first() {
+        let rs = vec![req(1, 10), req(2, 1), req(3, 5)];
+        let out =
+            schedule(rs, Policy::ShortestPromptFirst { aging: Duration::from_secs(60) });
+        let ids: Vec<u64> = out.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2, 3, 1]);
+    }
+
+    #[test]
+    fn aged_requests_jump_the_queue() {
+        let mut old = req(1, 100);
+        old.arrival = Instant::now() - Duration::from_secs(1);
+        let rs = vec![req(2, 1), old, req(3, 2)];
+        let out =
+            schedule(rs, Policy::ShortestPromptFirst { aging: Duration::from_millis(10) });
+        assert_eq!(out[0].id, 1, "aged request must be first");
+    }
+
+    #[test]
+    fn work_estimate_sums_phases() {
+        assert_eq!(work_estimate(&req(1, 7)), 15);
+    }
+}

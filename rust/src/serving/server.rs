@@ -1,0 +1,280 @@
+//! TCP front end: newline-delimited JSON protocol over `std::net`.
+//!
+//! Request line:  `{"id": 1, "prompt": "text", "max_new": 16}`
+//! Response line: `{"id": 1, "text": "...", "tokens": [..],
+//!                  "queue_us": .., "prefill_us": .., "decode_us": ..}`
+//! Error line:    `{"id": 1, "error": "..."}`
+//!
+//! One OS thread per connection (tokio is unavailable offline; at the
+//! request rates batch-1 CPU inference sustains, thread-per-conn is
+//! not the bottleneck — see DESIGN.md §Substitutions).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::request::Request;
+use super::router::Router;
+use crate::error::{Error, Result};
+use crate::model::tokenizer::Tokenizer;
+use crate::util::json::Json;
+
+/// Routes completed responses from every engine to the connection
+/// thread that registered the request id. One dispatcher thread per
+/// engine owns that engine's receiver, so concurrent connections never
+/// steal each other's responses.
+pub struct ResponseHub {
+    waiters: Arc<std::sync::Mutex<std::collections::HashMap<u64, std::sync::mpsc::Sender<super::request::Response>>>>,
+    stop: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ResponseHub {
+    /// Spawn one dispatcher per engine in the router.
+    pub fn start(router: &Arc<Router>) -> Self {
+        let waiters: Arc<
+            std::sync::Mutex<
+                std::collections::HashMap<u64, std::sync::mpsc::Sender<super::request::Response>>,
+            >,
+        > = Arc::default();
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut threads = Vec::new();
+        for i in 0..router.replicas() {
+            let router = Arc::clone(router);
+            let waiters = Arc::clone(&waiters);
+            let stop = Arc::clone(&stop);
+            threads.push(std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    if let Some(resp) =
+                        router.engine(i).recv_timeout(Duration::from_millis(100))
+                    {
+                        let tx = waiters.lock().unwrap().remove(&resp.id);
+                        if let Some(tx) = tx {
+                            let _ = tx.send(resp);
+                        }
+                    }
+                }
+            }));
+        }
+        Self { waiters, stop, threads }
+    }
+
+    /// Register interest in a request id; returns the receiver the
+    /// response will arrive on. Must be called BEFORE submit to avoid
+    /// a lost-wakeup race.
+    pub fn register(&self, id: u64) -> std::sync::mpsc::Receiver<super::request::Response> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.waiters.lock().unwrap().insert(id, tx);
+        tx_len_hint(&rx);
+        rx
+    }
+
+    /// Remove a registration (request failed to submit).
+    pub fn unregister(&self, id: u64) {
+        self.waiters.lock().unwrap().remove(&id);
+    }
+
+    /// Stop dispatchers.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn tx_len_hint<T>(_rx: &std::sync::mpsc::Receiver<T>) {}
+
+/// The TCP server: accepts connections, parses request lines, routes
+/// them, and writes response lines.
+pub struct Server {
+    router: Arc<Router>,
+    hub: Arc<ResponseHub>,
+    next_id: AtomicU64,
+}
+
+impl Server {
+    /// Server over a router (starts the response hub).
+    pub fn new(router: Arc<Router>) -> Self {
+        let hub = Arc::new(ResponseHub::start(&router));
+        Self { router, hub, next_id: AtomicU64::new(1) }
+    }
+
+    /// Bind and serve until `stop` is set. Returns the bound address
+    /// through `on_bound` (lets tests use port 0).
+    pub fn serve(
+        &self,
+        addr: &str,
+        stop: Arc<AtomicBool>,
+        on_bound: impl FnOnce(std::net::SocketAddr),
+    ) -> Result<()> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        on_bound(listener.local_addr()?);
+        let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        while !stop.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let router = Arc::clone(&self.router);
+                    let hub = Arc::clone(&self.hub);
+                    let next_id = self.next_id.fetch_add(1_000_000, Ordering::Relaxed);
+                    conns.push(std::thread::spawn(move || {
+                        let _ = handle_connection(stream, router, hub, next_id);
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        for c in conns {
+            let _ = c.join();
+        }
+        Ok(())
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    router: Arc<Router>,
+    hub: Arc<ResponseHub>,
+    id_base: u64,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    let tokenizer = Tokenizer::new();
+    let mut local_id = 0u64;
+
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        local_id += 1;
+        let internal_id = id_base + local_id;
+        match parse_request_line(&line, internal_id, &tokenizer) {
+            Ok((client_id, request)) => {
+                let reply = match route_and_wait(&router, &hub, request) {
+                    Ok(resp) => render_response(client_id, &resp, &tokenizer),
+                    Err(e) => {
+                        Json::obj(vec![
+                            ("id", Json::num(client_id as f64)),
+                            ("error", Json::str(e.to_string())),
+                        ])
+                    }
+                };
+                writeln!(writer, "{}", reply.to_string())?;
+            }
+            Err(e) => {
+                let reply = Json::obj(vec![("error", Json::str(e.to_string()))]);
+                writeln!(writer, "{}", reply.to_string())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn parse_request_line(
+    line: &str,
+    internal_id: u64,
+    tokenizer: &Tokenizer,
+) -> Result<(u64, Request)> {
+    let json = Json::parse(line).map_err(|e| Error::Serving(format!("bad json: {e}")))?;
+    let client_id = json
+        .get("id")
+        .and_then(|x| x.as_f64())
+        .ok_or_else(|| Error::Serving("missing id".into()))? as u64;
+    let prompt_text = json
+        .get("prompt")
+        .and_then(|x| x.as_str())
+        .ok_or_else(|| Error::Serving("missing prompt".into()))?;
+    if prompt_text.is_empty() {
+        return Err(Error::Serving("empty prompt".into()));
+    }
+    let max_new = json.get("max_new").and_then(|x| x.as_f64()).unwrap_or(16.0) as usize;
+    if max_new == 0 || max_new > 4096 {
+        return Err(Error::Serving("max_new out of range".into()));
+    }
+    let prompt = tokenizer.encode_with_bos(prompt_text);
+    Ok((client_id, Request::new(internal_id, prompt, max_new)))
+}
+
+fn route_and_wait(
+    router: &Router,
+    hub: &ResponseHub,
+    request: Request,
+) -> Result<super::request::Response> {
+    let want_id = request.id;
+    // Register BEFORE submitting so the dispatcher can never observe
+    // the response before the waiter exists.
+    let rx = hub.register(want_id);
+    if let Err(e) = router.submit(request) {
+        hub.unregister(want_id);
+        return Err(e);
+    }
+    rx.recv_timeout(Duration::from_secs(120))
+        .map_err(|_| Error::Serving("timeout waiting for response".into()))
+}
+
+fn render_response(
+    client_id: u64,
+    resp: &super::request::Response,
+    tokenizer: &Tokenizer,
+) -> Json {
+    if let Some(err) = &resp.error {
+        return Json::obj(vec![
+            ("id", Json::num(client_id as f64)),
+            ("error", Json::str(err.clone())),
+        ]);
+    }
+    Json::obj(vec![
+        ("id", Json::num(client_id as f64)),
+        ("text", Json::str(tokenizer.decode(&resp.tokens))),
+        (
+            "tokens",
+            Json::nums(resp.tokens.iter().map(|&t| t as f64).collect::<Vec<_>>()),
+        ),
+        ("queue_us", Json::num(resp.timing.queue.as_micros() as f64)),
+        ("prefill_us", Json::num(resp.timing.prefill.as_micros() as f64)),
+        ("decode_us", Json::num(resp.timing.decode.as_micros() as f64)),
+    ])
+}
+
+/// A minimal blocking client for tests, examples and the CLI.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    /// Connect to a server.
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Self> {
+        Ok(Self { stream: TcpStream::connect(addr)? })
+    }
+
+    /// Send one prompt and wait for the reply line.
+    pub fn request(&mut self, id: u64, prompt: &str, max_new: usize) -> Result<Json> {
+        let req = Json::obj(vec![
+            ("id", Json::num(id as f64)),
+            ("prompt", Json::str(prompt)),
+            ("max_new", Json::num(max_new as f64)),
+        ]);
+        writeln!(self.stream, "{}", req.to_string())?;
+        let mut reader = BufReader::new(self.stream.try_clone()?);
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        Json::parse(&line).map_err(Error::Serving)
+    }
+
+    /// Send a raw line (failure-injection tests).
+    pub fn send_raw(&mut self, line: &str) -> Result<Json> {
+        writeln!(self.stream, "{line}")?;
+        let mut reader = BufReader::new(self.stream.try_clone()?);
+        let mut out = String::new();
+        reader.read_line(&mut out)?;
+        Json::parse(&out).map_err(Error::Serving)
+    }
+}

@@ -1,0 +1,77 @@
+//! Bit-packing helpers shared by the binary/ternary matrix types.
+
+/// Number of u64 words needed to hold `bits` bits.
+#[inline]
+pub const fn words_for_bits(bits: usize) -> usize {
+    bits.div_ceil(64)
+}
+
+/// Set bit `i` in a word slice.
+#[inline]
+pub fn set_bit(words: &mut [u64], i: usize) {
+    words[i >> 6] |= 1u64 << (i & 63);
+}
+
+/// Read bit `i` from a word slice.
+#[inline]
+pub fn get_bit(words: &[u64], i: usize) -> bool {
+    (words[i >> 6] >> (i & 63)) & 1 == 1
+}
+
+/// Population count over a word slice.
+#[inline]
+pub fn popcount(words: &[u64]) -> u64 {
+    words.iter().map(|w| w.count_ones() as u64).sum()
+}
+
+/// Extract `width ≤ 16` bits starting at bit `start` from a packed row.
+/// Bits are returned with the *first* (lowest `start`) bit as the MSB,
+/// matching the paper's "concatenate B[r,1..k]" row-value convention.
+#[inline]
+pub fn extract_key_msb_first(words: &[u64], start: usize, width: usize) -> u32 {
+    let mut key = 0u32;
+    for j in 0..width {
+        key = (key << 1) | get_bit(words, start + j) as u32;
+    }
+    key
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn words_for_bits_rounds_up() {
+        assert_eq!(words_for_bits(0), 0);
+        assert_eq!(words_for_bits(1), 1);
+        assert_eq!(words_for_bits(64), 1);
+        assert_eq!(words_for_bits(65), 2);
+    }
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut w = vec![0u64; 3];
+        for i in [0usize, 1, 63, 64, 100, 191] {
+            set_bit(&mut w, i);
+        }
+        for i in 0..192 {
+            let expect = matches!(i, 0 | 1 | 63 | 64 | 100 | 191);
+            assert_eq!(get_bit(&w, i), expect, "bit {i}");
+        }
+        assert_eq!(popcount(&w), 6);
+    }
+
+    #[test]
+    fn key_extraction_is_msb_first() {
+        let mut w = vec![0u64; 1];
+        // bits 3..6 = 1,0,1 → key 0b101 = 5 (bit 3 is the MSB).
+        set_bit(&mut w, 3);
+        set_bit(&mut w, 5);
+        assert_eq!(extract_key_msb_first(&w, 3, 3), 0b101);
+        // crossing a word boundary
+        let mut w2 = vec![0u64; 2];
+        set_bit(&mut w2, 62);
+        set_bit(&mut w2, 65);
+        assert_eq!(extract_key_msb_first(&w2, 62, 4), 0b1001);
+    }
+}

@@ -1,0 +1,19 @@
+//! Small self-contained utilities the rest of the crate builds on.
+//!
+//! This environment resolves crates offline, so facilities that would
+//! normally come from `rand`, `rayon`, `serde_json` or `criterion` are
+//! provided here instead (see DESIGN.md §Substitutions):
+//!
+//! * [`rng`] — deterministic `SplitMix64` / `Xoshiro256**` PRNGs,
+//! * [`stats`] — streaming mean/stddev/percentile summaries,
+//! * [`timer`] — wall-clock measurement helpers,
+//! * [`json`] — a minimal JSON writer for metrics and bench reports,
+//! * [`threadpool`] — a scoped thread pool over `std::thread`,
+//! * [`bitops`] — bit-packing helpers shared by the kernels.
+
+pub mod bitops;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod timer;

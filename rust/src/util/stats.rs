@@ -1,0 +1,256 @@
+//! Summary statistics for benchmark measurements and serving metrics.
+
+/// A batch of scalar samples with the usual summary statistics.
+///
+/// Used by the bench harness (per-iteration wall times) and by the
+/// serving metrics (request latencies).
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Summary {
+    /// Empty summary.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build from an existing sample vector.
+    pub fn from_samples(samples: Vec<f64>) -> Self {
+        Self { samples, sorted: false }
+    }
+
+    /// Record one sample.
+    pub fn push(&mut self, x: f64) {
+        self.samples.push(x);
+        self.sorted = false;
+    }
+
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// True when no samples have been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Arithmetic mean (0 for empty).
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Sample standard deviation (0 for n < 2).
+    pub fn stddev(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let mean = self.mean();
+        let ss: f64 = self.samples.iter().map(|x| (x - mean) * (x - mean)).sum();
+        (ss / (n - 1) as f64).sqrt()
+    }
+
+    /// Minimum (0 for empty).
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min).min(f64::INFINITY)
+            .pipe_finite()
+    }
+
+    /// Maximum (0 for empty).
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max).pipe_finite()
+    }
+
+    /// Percentile in `[0, 100]` by nearest-rank on the sorted samples.
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            self.sorted = true;
+        }
+        let n = self.samples.len();
+        let rank = ((p / 100.0) * (n as f64 - 1.0)).round() as usize;
+        self.samples[rank.min(n - 1)]
+    }
+
+    /// Median (p50).
+    pub fn median(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// Borrow the raw samples.
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+}
+
+trait PipeFinite {
+    fn pipe_finite(self) -> f64;
+}
+
+impl PipeFinite for f64 {
+    fn pipe_finite(self) -> f64 {
+        if self.is_finite() {
+            self
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Online histogram with exponential bucket boundaries, for latency
+/// tracking in the serving layer without storing every sample.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// Bucket upper bounds in microseconds.
+    bounds_us: Vec<u64>,
+    counts: Vec<u64>,
+    total: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// Buckets from 1µs to ~17s, ×2 per bucket.
+    pub fn new() -> Self {
+        let bounds_us: Vec<u64> = (0..25).map(|i| 1u64 << i).collect();
+        let counts = vec![0; bounds_us.len() + 1];
+        Self { bounds_us, counts, total: 0, sum_us: 0, max_us: 0 }
+    }
+
+    /// Record one latency sample.
+    pub fn record(&mut self, d: std::time::Duration) {
+        let us = d.as_micros() as u64;
+        let idx = self
+            .bounds_us
+            .iter()
+            .position(|&b| us <= b)
+            .unwrap_or(self.bounds_us.len());
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Mean latency in microseconds.
+    pub fn mean_us(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.total as f64
+        }
+    }
+
+    /// Maximum recorded latency in microseconds.
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    /// Approximate percentile (upper bound of the bucket that crosses
+    /// the requested rank).
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * self.total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return if i < self.bounds_us.len() {
+                    self.bounds_us[i]
+                } else {
+                    self.max_us
+                };
+            }
+        }
+        self.max_us
+    }
+
+    /// Merge another histogram into this one (same bucket layout).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn summary_mean_stddev() {
+        let s = Summary::from_samples(vec![2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        // Sample stddev of that classic set is ~2.138.
+        assert!((s.stddev() - 2.138).abs() < 0.01, "{}", s.stddev());
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let mut s = Summary::from_samples((1..=100).map(|x| x as f64).collect());
+        // Even count: nearest-rank median is either middle element.
+        assert!(s.median() == 50.0 || s.median() == 51.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+        assert!((s.percentile(90.0) - 90.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn summary_empty_is_safe() {
+        let mut s = Summary::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.stddev(), 0.0);
+        assert_eq!(s.median(), 0.0);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn histogram_counts_and_percentiles() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i));
+        }
+        assert_eq!(h.count(), 1000);
+        assert!(h.mean_us() > 400.0 && h.mean_us() < 600.0);
+        // p50 of 1..=1000 µs falls in the 512-bucket.
+        assert_eq!(h.percentile_us(50.0), 512);
+        assert!(h.percentile_us(100.0) >= 1000);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record(Duration::from_micros(10));
+        b.record(Duration::from_micros(1000));
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.max_us(), 1000);
+    }
+}

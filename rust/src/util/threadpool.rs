@@ -1,0 +1,182 @@
+//! A scoped thread pool over `std::thread` (the offline registry has no
+//! rayon). Used for block-parallel RSR (paper Appendix C.1.I), the
+//! tensorized "GPU" execution path, and the serving engine's workers.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Number of worker threads to use by default: the machine's available
+/// parallelism, overridable with `RSR_THREADS`.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("RSR_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Run `f(chunk_index)` for every index in `0..chunks` across `threads`
+/// OS threads, work-stealing from a shared atomic counter.
+///
+/// Scoped: borrows in `f` may reference the caller's stack.
+pub fn parallel_for(threads: usize, chunks: usize, f: impl Fn(usize) + Sync) {
+    if chunks == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(chunks);
+    if threads == 1 {
+        for i in 0..chunks {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= chunks {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Map `f` over `items` in parallel, preserving order.
+pub fn parallel_map<T: Sync, R: Send>(
+    threads: usize,
+    items: &[T],
+    f: impl Fn(&T) -> R + Sync,
+) -> Vec<R> {
+    let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    {
+        let slots: Vec<SlotPtr<R>> =
+            out.iter_mut().map(|s| SlotPtr(s as *mut Option<R>)).collect();
+        parallel_for(threads, items.len(), |i| {
+            let r = f(&items[i]);
+            // SAFETY: each index is visited exactly once (the atomic
+            // counter hands out distinct indices), so each slot is
+            // written by exactly one thread.
+            let p = slots[i].0;
+            unsafe { *p = Some(r) };
+        });
+    }
+    out.into_iter().map(|s| s.expect("slot filled")).collect()
+}
+
+struct SlotPtr<R>(*mut Option<R>);
+// SAFETY: distinct indices → distinct slots; no aliasing writes.
+unsafe impl<R: Send> Sync for SlotPtr<R> {}
+unsafe impl<R: Send> Send for SlotPtr<R> {}
+
+/// A long-lived pool accepting closures — used by the serving engine
+/// where workers persist across requests.
+pub struct WorkerPool {
+    tx: Option<std::sync::mpsc::Sender<Job>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    queued: Arc<AtomicUsize>,
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+impl WorkerPool {
+    /// Spawn `threads` workers pulling from a shared queue.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let (tx, rx) = std::sync::mpsc::channel::<Job>();
+        let rx = Arc::new(std::sync::Mutex::new(rx));
+        let queued = Arc::new(AtomicUsize::new(0));
+        let handles = (0..threads)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let queued = Arc::clone(&queued);
+                std::thread::spawn(move || loop {
+                    let job = {
+                        let guard = rx.lock().expect("pool queue poisoned");
+                        guard.recv()
+                    };
+                    match job {
+                        Ok(job) => {
+                            job();
+                            queued.fetch_sub(1, Ordering::Relaxed);
+                        }
+                        Err(_) => break, // all senders dropped
+                    }
+                })
+            })
+            .collect();
+        Self { tx: Some(tx), handles, queued }
+    }
+
+    /// Enqueue a job.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.queued.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .as_ref()
+            .expect("pool not shut down")
+            .send(Box::new(job))
+            .expect("pool workers alive");
+    }
+
+    /// Jobs submitted but not yet finished.
+    pub fn pending(&self) -> usize {
+        self.queued.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_visits_every_index_once() {
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(8, hits.len(), |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_zero_chunks_is_noop() {
+        parallel_for(4, 0, |_| panic!("should not run"));
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<u64> = (0..513).collect();
+        let out = parallel_map(7, &items, |&x| x * x);
+        let expect: Vec<u64> = items.iter().map(|&x| x * x).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn worker_pool_runs_jobs_and_drains_on_drop() {
+        let counter = Arc::new(AtomicU64::new(0));
+        {
+            let pool = WorkerPool::new(4);
+            for _ in 0..100 {
+                let c = Arc::clone(&counter);
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        } // drop waits for workers
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+}

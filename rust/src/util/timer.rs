@@ -1,0 +1,85 @@
+//! Wall-clock timing helpers shared by benches and metrics.
+
+use std::time::{Duration, Instant};
+
+/// Time a closure, returning `(result, elapsed)`.
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Run `f` `iters` times and return per-iteration durations.
+///
+/// A `std::hint::black_box` on the closure result defeats dead-code
+/// elimination the same way criterion's `black_box` does.
+pub fn time_iters<T>(iters: usize, mut f: impl FnMut() -> T) -> Vec<Duration> {
+    let mut out = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let r = f();
+        std::hint::black_box(&r);
+        out.push(t0.elapsed());
+    }
+    out
+}
+
+/// A stopwatch accumulating named phases — used to attribute serving
+/// latency to queueing / batching / execution.
+#[derive(Debug, Default)]
+pub struct PhaseTimer {
+    phases: Vec<(&'static str, Duration)>,
+}
+
+impl PhaseTimer {
+    /// Empty timer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure and record it under `name`.
+    pub fn phase<T>(&mut self, name: &'static str, f: impl FnOnce() -> T) -> T {
+        let (out, d) = time(f);
+        self.phases.push((name, d));
+        out
+    }
+
+    /// Recorded `(name, duration)` pairs in insertion order.
+    pub fn phases(&self) -> &[(&'static str, Duration)] {
+        &self.phases
+    }
+
+    /// Total across phases.
+    pub fn total(&self) -> Duration {
+        self.phases.iter().map(|(_, d)| *d).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_measures_and_returns() {
+        let (v, d) = time(|| (0..1000).sum::<u64>());
+        assert_eq!(v, 499_500);
+        assert!(d.as_nanos() > 0);
+    }
+
+    #[test]
+    fn time_iters_returns_one_duration_per_iter() {
+        let ds = time_iters(5, || 1 + 1);
+        assert_eq!(ds.len(), 5);
+    }
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut t = PhaseTimer::new();
+        let a = t.phase("a", || 21 * 2);
+        assert_eq!(a, 42);
+        t.phase("b", || ());
+        assert_eq!(t.phases().len(), 2);
+        assert_eq!(t.phases()[0].0, "a");
+        assert!(t.total() >= t.phases()[1].1);
+    }
+}

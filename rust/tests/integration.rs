@@ -1,0 +1,170 @@
+//! Cross-module integration: preprocess → multiply end-to-end across
+//! shapes and backends; index persistence; model build from saved
+//! weights; CLI-level flows exercised through the library API.
+
+use rsr::kernels::index::{RsrIndex, TernaryRsrIndex};
+use rsr::kernels::optimal_k::{optimal_k_rsr, optimal_k_rsrpp};
+use rsr::kernels::qbit::{QbitMatrix, QbitRsrPlan};
+use rsr::kernels::rsr::{rsr_mul, TernaryRsrPlan};
+use rsr::kernels::rsrpp::{rsrpp_mul, TernaryRsrPlusPlusPlan};
+use rsr::kernels::standard::{standard_mul_binary, standard_mul_ternary};
+use rsr::kernels::{Backend, BinaryMatrix, TernaryMatrix};
+use rsr::model::bitlinear::BitLinear;
+use rsr::model::config::ModelConfig;
+use rsr::model::sampler::Sampler;
+use rsr::model::transformer::Transformer;
+use rsr::model::weights::ModelWeights;
+use rsr::util::rng::Rng;
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32) {
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+            "elem {i}: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn rsr_pipeline_over_many_shapes() {
+    let mut rng = Rng::new(0xA0);
+    for (n, m) in [(17, 3), (64, 64), (100, 129), (256, 40), (1000, 999)] {
+        let b = BinaryMatrix::random(n, m, 0.5, &mut rng);
+        let v = rng.f32_vec(n, -1.0, 1.0);
+        let expect = standard_mul_binary(&v, &b);
+        for k in [1usize, 3, 7] {
+            assert_close(&rsr_mul(&v, &b, k), &expect, 1e-3);
+            assert_close(&rsrpp_mul(&v, &b, k), &expect, 1e-3);
+        }
+    }
+}
+
+#[test]
+fn optimal_k_paths_agree_with_fixed_k() {
+    let mut rng = Rng::new(0xA1);
+    let n = 512;
+    let a = TernaryMatrix::random(n, n, 1.0 / 3.0, &mut rng);
+    let v = rng.f32_vec(n, -1.0, 1.0);
+    let expect = standard_mul_ternary(&v, &a);
+    for k in [optimal_k_rsr(n), optimal_k_rsrpp(n)] {
+        let mut plan = TernaryRsrPlan::new(TernaryRsrIndex::preprocess(&a, k)).unwrap();
+        let mut out = vec![0.0; n];
+        plan.execute(&v, &mut out).unwrap();
+        assert_close(&out, &expect, 1e-3);
+    }
+}
+
+#[test]
+fn index_survives_disk_round_trip_and_still_multiplies() {
+    let mut rng = Rng::new(0xA2);
+    let b = BinaryMatrix::random(300, 200, 0.5, &mut rng);
+    let v = rng.f32_vec(300, -1.0, 1.0);
+    let idx = RsrIndex::preprocess(&b, 6);
+
+    let path = std::env::temp_dir().join("rsr_it_index.rsi");
+    idx.save(&path).unwrap();
+    let loaded = RsrIndex::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(idx, loaded);
+
+    let mut plan = rsr::kernels::rsr::RsrPlan::new(loaded).unwrap();
+    let mut out = vec![0.0; 200];
+    plan.execute(&v, &mut out).unwrap();
+    assert_close(&out, &standard_mul_binary(&v, &b), 1e-3);
+}
+
+#[test]
+fn model_from_saved_weights_matches_fresh_model() {
+    let weights = ModelWeights::generate(ModelConfig::tiny(), 0xA3).unwrap();
+    let path = std::env::temp_dir().join("rsr_it_model.rtw");
+    weights.save(&path).unwrap();
+    let loaded = ModelWeights::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    let mut m1 = Transformer::from_weights(&weights, Backend::RsrPlusPlus, 0).unwrap();
+    let mut m2 = Transformer::from_weights(&loaded, Backend::RsrPlusPlus, 0).unwrap();
+    let mut rng = Rng::new(1);
+    let prompt = [5u32, 10, 15];
+    let a = m1.generate(&prompt, 6, Sampler::Greedy, &mut rng).unwrap();
+    let b = m2.generate(&prompt, 6, Sampler::Greedy, &mut rng).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn qbit_pipeline_end_to_end() {
+    let mut rng = Rng::new(0xA4);
+    for q in [2u32, 3, 5] {
+        let w = QbitMatrix::random(128, 96, q, &mut rng);
+        let v = rng.f32_vec(128, -1.0, 1.0);
+        let mut plan = QbitRsrPlan::preprocess(&w, 5).unwrap();
+        let mut out = vec![0.0; 96];
+        plan.execute(&v, &mut out).unwrap();
+        assert_close(&out, &w.standard_mul(&v), 2e-2);
+    }
+}
+
+#[test]
+fn ternary_plans_agree_with_each_other() {
+    let mut rng = Rng::new(0xA5);
+    let n = 384;
+    let a = TernaryMatrix::random(n, n, 1.0 / 3.0, &mut rng);
+    let v = rng.f32_vec(n, -1.0, 1.0);
+    let idx = TernaryRsrIndex::preprocess(&a, 6);
+    let mut p1 = TernaryRsrPlan::new(idx.clone()).unwrap();
+    let mut p2 = TernaryRsrPlusPlusPlan::new(idx).unwrap();
+    let (mut o1, mut o2) = (vec![0.0; n], vec![0.0; n]);
+    p1.execute(&v, &mut o1).unwrap();
+    p2.execute(&v, &mut o2).unwrap();
+    assert_close(&o1, &o2, 1e-4);
+}
+
+#[test]
+fn bitlinear_scale_applies_after_matmul() {
+    let mut rng = Rng::new(0xA6);
+    let a = TernaryMatrix::random(32, 16, 1.0 / 3.0, &mut rng);
+    let v = rng.f32_vec(32, -1.0, 1.0);
+    let mut unit = BitLinear::new(a.clone(), 1.0, Backend::Rsr, 4).unwrap();
+    let mut half = BitLinear::new(a, 0.5, Backend::Rsr, 4).unwrap();
+    let (mut o1, mut o2) = (vec![0.0; 16], vec![0.0; 16]);
+    unit.forward(&v, &mut o1).unwrap();
+    half.forward(&v, &mut o2).unwrap();
+    for (a, b) in o1.iter().zip(o2.iter()) {
+        assert!((a * 0.5 - b).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn identity_matrix_multiplication() {
+    // v · I = v under every backend (deterministic structure, catches
+    // permutation/segment off-by-ones cleanly).
+    let n = 64;
+    let mut a = TernaryMatrix::zeros(n, n);
+    for i in 0..n {
+        a.set(i, i, 1);
+    }
+    let mut rng = Rng::new(0xA7);
+    let v = rng.f32_vec(n, -2.0, 2.0);
+    for backend in Backend::ALL {
+        let mut layer = BitLinear::new(a.clone(), 1.0, backend, 4).unwrap();
+        let mut out = vec![0.0; n];
+        layer.forward(&v, &mut out).unwrap();
+        assert_close(&out, &v, 1e-5);
+    }
+}
+
+#[test]
+fn negated_identity_flips_sign() {
+    let n = 32;
+    let mut a = TernaryMatrix::zeros(n, n);
+    for i in 0..n {
+        a.set(i, i, -1);
+    }
+    let mut rng = Rng::new(0xA8);
+    let v = rng.f32_vec(n, -2.0, 2.0);
+    let mut layer = BitLinear::new(a, 1.0, Backend::RsrPlusPlus, 3).unwrap();
+    let mut out = vec![0.0; n];
+    layer.forward(&v, &mut out).unwrap();
+    let neg: Vec<f32> = v.iter().map(|x| -x).collect();
+    assert_close(&out, &neg, 1e-5);
+}

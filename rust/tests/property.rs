@@ -1,0 +1,251 @@
+//! Property-based tests over the paper's invariants, built on the
+//! in-tree deterministic PRNG (the offline registry has no proptest;
+//! see DESIGN.md §Substitutions). Every case prints its seed on
+//! failure so it can be replayed exactly.
+
+use rsr::kernels::blocking::column_blocks;
+use rsr::kernels::index::{BinMatrix, RsrIndex, TernaryRsrIndex};
+use rsr::kernels::permutation::is_permutation;
+use rsr::kernels::qbit::QbitMatrix;
+use rsr::kernels::rsr::rsr_mul;
+use rsr::kernels::rsrpp::rsrpp_mul;
+use rsr::kernels::standard::{standard_mul_binary, standard_mul_ternary};
+use rsr::kernels::tensorized::TensorizedIndex;
+use rsr::kernels::{BinaryMatrix, TernaryMatrix};
+use rsr::util::rng::Rng;
+
+const CASES: usize = 60;
+
+/// Deterministic per-case generator: (n, m, k, density, case seed).
+fn case_params(master: &mut Rng) -> (usize, usize, usize, f64, u64) {
+    let n = master.range(1, 200);
+    let m = master.range(1, 150);
+    let k = master.range(1, 11);
+    let density = master.next_f64();
+    let seed = master.next_u64();
+    (n, m, k, density, seed)
+}
+
+#[test]
+fn prop_rsr_equals_rsrpp_equals_standard() {
+    let mut master = Rng::new(0xBEEF);
+    for case in 0..CASES {
+        let (n, m, k, density, seed) = case_params(&mut master);
+        let mut rng = Rng::new(seed);
+        let b = BinaryMatrix::random(n, m, density, &mut rng);
+        // Integer-valued activations: f32 sums are exact for these
+        // magnitudes, so all reorderings must agree bit-for-bit.
+        let v = rng.int_f32_vec(n, 8);
+        let expect = standard_mul_binary(&v, &b);
+        let got_rsr = rsr_mul(&v, &b, k);
+        let got_pp = rsrpp_mul(&v, &b, k);
+        assert_eq!(got_rsr, expect, "case {case} seed {seed} (n={n},m={m},k={k})");
+        assert_eq!(got_pp, expect, "case {case} seed {seed} (n={n},m={m},k={k})");
+    }
+}
+
+#[test]
+fn prop_preprocessing_invariants() {
+    let mut master = Rng::new(0xCAFE);
+    for case in 0..CASES {
+        let (n, m, k, density, seed) = case_params(&mut master);
+        let mut rng = Rng::new(seed);
+        let b = BinaryMatrix::random(n, m, density, &mut rng);
+        let idx = RsrIndex::preprocess(&b, k);
+        idx.validate().unwrap_or_else(|e| panic!("case {case} seed {seed}: {e}"));
+        // Blocks tile the columns.
+        assert_eq!(idx.blocks.len(), m.div_ceil(k), "case {case}");
+        for blk in &idx.blocks {
+            // σ is a bijection (also checked by validate; assert the
+            // helper directly for coverage).
+            assert!(is_permutation(&blk.sigma, n), "case {case} seed {seed}");
+            // Sorted keys are non-decreasing and consistent with L:
+            // every position's key equals the segment it falls in.
+            for (pos, &r) in blk.sigma.iter().enumerate() {
+                let key =
+                    b.row_key(r as usize, blk.col_start as usize, blk.width as usize);
+                let lo = blk.seg[key as usize] as usize;
+                let hi = blk.seg[key as usize + 1] as usize;
+                assert!(
+                    (lo..hi).contains(&pos),
+                    "case {case} seed {seed}: row {r} key {key} at pos {pos} not in [{lo},{hi})"
+                );
+            }
+            // Prop 3.5: segment lengths sum to n.
+            let total: u32 =
+                (0..1usize << blk.width).map(|j| blk.seg[j + 1] - blk.seg[j]).sum();
+            assert_eq!(total as usize, n, "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_index_serialization_roundtrip() {
+    let mut master = Rng::new(0xD00D);
+    for case in 0..30 {
+        let (n, m, k, density, seed) = case_params(&mut master);
+        let mut rng = Rng::new(seed);
+        let b = BinaryMatrix::random(n.max(1), m.max(1), density, &mut rng);
+        let idx = RsrIndex::preprocess(&b, k);
+        let mut buf = Vec::new();
+        idx.write_to(&mut buf).unwrap();
+        let back = RsrIndex::read_from(&mut buf.as_slice())
+            .unwrap_or_else(|e| panic!("case {case} seed {seed}: {e}"));
+        assert_eq!(idx, back, "case {case}");
+    }
+}
+
+#[test]
+fn prop_ternary_decomposition_reconstructs() {
+    let mut master = Rng::new(0xE11E);
+    for case in 0..CASES {
+        let n = master.range(1, 80);
+        let m = master.range(1, 80);
+        let seed = master.next_u64();
+        let mut rng = Rng::new(seed);
+        let a = TernaryMatrix::random(n, m, 1.0 / 3.0, &mut rng);
+        let (p, mi) = a.decompose();
+        for r in 0..n {
+            for c in 0..m {
+                assert_eq!(
+                    p.get(r, c) as i8 - mi.get(r, c) as i8,
+                    a.get(r, c),
+                    "case {case} seed {seed} ({r},{c})"
+                );
+            }
+        }
+        // pack2 round-trip too.
+        assert_eq!(TernaryMatrix::unpack2(n, m, &a.pack2()), a, "case {case}");
+    }
+}
+
+#[test]
+fn prop_ternary_rsr_equals_standard_exact_on_integers() {
+    let mut master = Rng::new(0xF00D);
+    for case in 0..CASES {
+        let n = master.range(1, 120);
+        let m = master.range(1, 100);
+        let k = master.range(1, 9);
+        let seed = master.next_u64();
+        let mut rng = Rng::new(seed);
+        let a = TernaryMatrix::random(n, m, 1.0 / 3.0, &mut rng);
+        let v = rng.int_f32_vec(n, 6);
+        let expect = standard_mul_ternary(&v, &a);
+        let mut plan = rsr::kernels::rsr::TernaryRsrPlan::new(
+            TernaryRsrIndex::preprocess(&a, k),
+        )
+        .unwrap();
+        let mut out = vec![0.0; m];
+        plan.execute(&v, &mut out).unwrap();
+        assert_eq!(out, expect, "case {case} seed {seed} (n={n},m={m},k={k})");
+    }
+}
+
+#[test]
+fn prop_tensorized_equals_gather_exact_on_integers() {
+    let mut master = Rng::new(0x7E57);
+    for case in 0..CASES {
+        let (n, m, k, density, seed) = case_params(&mut master);
+        let mut rng = Rng::new(seed);
+        let b = BinaryMatrix::random(n, m, density, &mut rng);
+        let v = rng.int_f32_vec(n, 8);
+        let idx = TensorizedIndex::preprocess(&b, k);
+        let mut out = vec![0.0; m];
+        idx.execute(&v, &mut out).unwrap();
+        // Note: scatter order differs from gather order; integer values
+        // keep f32 addition exact so they must still be identical.
+        assert_eq!(out, standard_mul_binary(&v, &b), "case {case} seed {seed}");
+    }
+}
+
+#[test]
+fn prop_qbit_planes_reconstruct() {
+    let mut master = Rng::new(0x9B17);
+    for case in 0..30 {
+        let n = master.range(1, 40);
+        let m = master.range(1, 40);
+        let q = master.range(2, 9) as u32;
+        let seed = master.next_u64();
+        let mut rng = Rng::new(seed);
+        let w = QbitMatrix::random(n, m, q, &mut rng);
+        let planes = w.planes();
+        assert_eq!(planes.len(), (q - 1) as usize);
+        for r in 0..n {
+            for c in 0..m {
+                let recon: i32 = planes
+                    .iter()
+                    .map(|(b, p, mi)| {
+                        (1i32 << b) * (p.get(r, c) as i32 - mi.get(r, c) as i32)
+                    })
+                    .sum();
+                assert_eq!(recon, w.get(r, c), "case {case} seed {seed} q={q}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_bin_matrix_rows_are_sorted_binary_values() {
+    for k in 1..=10usize {
+        let bin = BinMatrix::new(k);
+        let mut prev = None;
+        for l in 0..bin.rows() {
+            let mut val = 0u32;
+            for j in 0..k {
+                val = (val << 1) | bin.get(l, j) as u32;
+            }
+            assert_eq!(val as usize, l, "Bin_[{k}] row {l} must encode {l}");
+            if let Some(p) = prev {
+                assert!(val > p);
+            }
+            prev = Some(val);
+        }
+    }
+}
+
+#[test]
+fn prop_blocking_partitions_columns() {
+    let mut master = Rng::new(0xB10C);
+    for _ in 0..100 {
+        let cols = master.range(1, 500);
+        let k = master.range(1, 17);
+        let blocks = column_blocks(cols, k);
+        let mut covered = 0usize;
+        for b in &blocks {
+            assert_eq!(b.col_start, covered);
+            assert!(b.width >= 1 && b.width <= k);
+            covered += b.width;
+        }
+        assert_eq!(covered, cols);
+        // Only the last block may be narrower than k.
+        for b in &blocks[..blocks.len().saturating_sub(1)] {
+            assert_eq!(b.width, k);
+        }
+    }
+}
+
+#[test]
+fn prop_linearity_of_rsr() {
+    // RSR is a linear operator: RSR(αu + βw, B) = αRSR(u,B) + βRSR(w,B).
+    let mut master = Rng::new(0x11EA);
+    for case in 0..20 {
+        let (n, m, k, density, seed) = case_params(&mut master);
+        let mut rng = Rng::new(seed);
+        let b = BinaryMatrix::random(n, m, density, &mut rng);
+        let u = rng.int_f32_vec(n, 4);
+        let w = rng.int_f32_vec(n, 4);
+        let (alpha, beta) = (2.0f32, -3.0f32);
+        let combined: Vec<f32> =
+            u.iter().zip(w.iter()).map(|(a, b)| alpha * a + beta * b).collect();
+        let lhs = rsrpp_mul(&combined, &b, k);
+        let ru = rsrpp_mul(&u, &b, k);
+        let rw = rsrpp_mul(&w, &b, k);
+        for i in 0..m {
+            let rhs = alpha * ru[i] + beta * rw[i];
+            assert!(
+                (lhs[i] - rhs).abs() < 1e-3 * (1.0 + rhs.abs()),
+                "case {case} seed {seed} elem {i}"
+            );
+        }
+    }
+}

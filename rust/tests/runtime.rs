@@ -1,0 +1,211 @@
+//! Integration: the rust runtime executing real AOT artifacts — the
+//! full three-layer path (Pallas kernel → JAX lowering → HLO text →
+//! PJRT CPU execution from rust).
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use rsr::kernels::standard::dense_mul_f32;
+use rsr::kernels::tensorized::TensorizedIndex;
+use rsr::kernels::BinaryMatrix;
+use rsr::runtime::{Engine, Tensor};
+use rsr::util::rng::Rng;
+
+fn engine() -> Option<Engine> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Engine::load(&dir) {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("skipping runtime tests: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let Some(engine) = engine() else { return };
+    let names = engine.names();
+    assert!(names.iter().any(|n| n.starts_with("dense_matvec_n")));
+    assert!(names.iter().any(|n| n.starts_with("rsr_matvec_")));
+    assert!(names.iter().any(|n| n.starts_with("ffn_dense_")));
+}
+
+#[test]
+fn dense_matvec_artifact_matches_rust_reference() {
+    let Some(engine) = engine() else { return };
+    let n = 1024;
+    let mut rng = Rng::new(2024);
+    let v = rng.f32_vec(n, -1.0, 1.0);
+    let w = rng.f32_vec(n * n, -0.1, 0.1);
+    let got = engine
+        .run_f32(
+            "dense_matvec_n1024",
+            &[Tensor::F32(v.clone(), vec![n]), Tensor::F32(w.clone(), vec![n, n])],
+        )
+        .expect("execute");
+    let expect = dense_mul_f32(&v, &w, n, n);
+    assert_eq!(got.len(), n);
+    for (g, e) in got.iter().zip(expect.iter()) {
+        assert!((g - e).abs() < 1e-2 * (1.0 + e.abs()), "{g} vs {e}");
+    }
+}
+
+#[test]
+fn rsr_pallas_artifact_runs_with_rust_computed_keys() {
+    // The paper's preprocessing done in RUST feeds the Pallas kernel
+    // lowered from python — the cross-layer integration check.
+    let Some(engine) = engine() else { return };
+    let (n, k) = (1024usize, 8usize);
+    let mut rng = Rng::new(777);
+    let b = BinaryMatrix::random(n, n, 0.5, &mut rng);
+    let v = rng.f32_vec(n, -1.0, 1.0);
+
+    // Rust-side preprocessing → block keys (the M-matrix one-hot form).
+    let tens = TensorizedIndex::preprocess(&b, k);
+    let nb = n / k;
+    let mut keys = vec![0i32; nb * n];
+    for (bi, ks) in tens.keys.iter().enumerate() {
+        for (r, &key) in ks.iter().enumerate() {
+            keys[bi * n + r] = key as i32;
+        }
+    }
+    // Bin_[k] matrix.
+    let bin = rsr::kernels::index::BinMatrix::new(k);
+    let binm: Vec<f32> = bin.to_dense().iter().map(|&x| x as f32).collect();
+
+    let got = engine
+        .run_f32(
+            &format!("rsr_matvec_n{n}_k{k}"),
+            &[
+                Tensor::F32(v.clone(), vec![n]),
+                Tensor::I32(keys, vec![nb, n]),
+                Tensor::F32(binm, vec![1 << k, k]),
+            ],
+        )
+        .expect("execute rsr artifact");
+
+    let expect = rsr::kernels::standard::standard_mul_binary(&v, &b);
+    assert_eq!(got.len(), n);
+    for (i, (g, e)) in got.iter().zip(expect.iter()).enumerate() {
+        assert!((g - e).abs() < 1e-2 * (1.0 + e.abs()), "col {i}: {g} vs {e}");
+    }
+}
+
+#[test]
+fn ffn_artifact_matches_rust_swiglu() {
+    let Some(engine) = engine() else { return };
+    let (d, ff) = (1024usize, 4096usize);
+    let mut rng = Rng::new(31337);
+    let x = rng.f32_vec(d, -1.0, 1.0);
+    let scale = 1.0 / (d as f32).sqrt();
+    let wg = rng.f32_vec(d * ff, -scale, scale);
+    let wu = rng.f32_vec(d * ff, -scale, scale);
+    let wd = rng.f32_vec(ff * d, -scale, scale);
+    let got = engine
+        .run_f32(
+            &format!("ffn_dense_d{d}_ff{ff}"),
+            &[
+                Tensor::F32(x.clone(), vec![d]),
+                Tensor::F32(wg.clone(), vec![d, ff]),
+                Tensor::F32(wu.clone(), vec![d, ff]),
+                Tensor::F32(wd.clone(), vec![ff, d]),
+            ],
+        )
+        .expect("execute ffn");
+    // Rust reference.
+    let g = dense_mul_f32(&x, &wg, d, ff);
+    let u = dense_mul_f32(&x, &wu, d, ff);
+    let h: Vec<f32> = g
+        .iter()
+        .zip(u.iter())
+        .map(|(&g, &u)| (g / (1.0 + (-g).exp())) * u)
+        .collect();
+    let expect = dense_mul_f32(&h, &wd, ff, d);
+    for (g, e) in got.iter().zip(expect.iter()) {
+        assert!((g - e).abs() < 1e-2 * (1.0 + e.abs()), "{g} vs {e}");
+    }
+}
+
+#[test]
+fn ffn_rsr_artifact_composes_l1_kernel_three_times() {
+    // The deepest cross-layer check: a SwiGLU block whose three
+    // projections each run the Pallas RSR kernel (L2 calling L1),
+    // executed from rust (L3) with rust-computed keys, compared to a
+    // rust-side dense reference.
+    let Some(engine) = engine() else { return };
+    let (d, ff, k) = (256usize, 512usize, 4usize);
+    let name = format!("ffn_rsr_d{d}_ff{ff}_k{k}");
+    if engine.spec(&name).is_none() {
+        eprintln!("skipping: artifact {name} absent (older manifest)");
+        return;
+    }
+    let mut rng = Rng::new(0xFF9);
+    let wg = BinaryMatrix::random(d, ff, 0.5, &mut rng);
+    let wu = BinaryMatrix::random(d, ff, 0.5, &mut rng);
+    let wd = BinaryMatrix::random(ff, d, 0.5, &mut rng);
+    let x = rng.f32_vec(d, -0.2, 0.2);
+
+    let keys_of = |b: &BinaryMatrix| -> Vec<i32> {
+        let t = TensorizedIndex::preprocess(b, k);
+        let mut out = vec![0i32; t.keys.len() * b.rows()];
+        for (bi, ks) in t.keys.iter().enumerate() {
+            for (r, &key) in ks.iter().enumerate() {
+                out[bi * b.rows() + r] = key as i32;
+            }
+        }
+        out
+    };
+    let bin = rsr::kernels::index::BinMatrix::new(k);
+    let binm: Vec<f32> = bin.to_dense().iter().map(|&v| v as f32).collect();
+
+    let got = engine
+        .run_f32(
+            &name,
+            &[
+                Tensor::F32(x.clone(), vec![d]),
+                Tensor::I32(keys_of(&wg), vec![ff / k, d]),
+                Tensor::I32(keys_of(&wu), vec![ff / k, d]),
+                Tensor::I32(keys_of(&wd), vec![d / k, ff]),
+                Tensor::F32(binm, vec![1 << k, k]),
+            ],
+        )
+        .expect("execute ffn_rsr");
+
+    // Dense rust reference of the same block.
+    let to_f32 = |b: &BinaryMatrix| -> Vec<f32> {
+        b.to_dense().iter().map(|&v| v as f32).collect()
+    };
+    let g = dense_mul_f32(&x, &to_f32(&wg), d, ff);
+    let u = dense_mul_f32(&x, &to_f32(&wu), d, ff);
+    let h: Vec<f32> = g
+        .iter()
+        .zip(u.iter())
+        .map(|(&g, &u)| (g / (1.0 + (-g).exp())) * u)
+        .collect();
+    let expect = dense_mul_f32(&h, &to_f32(&wd), ff, d);
+    assert_eq!(got.len(), d);
+    for (i, (g, e)) in got.iter().zip(expect.iter()).enumerate() {
+        assert!((g - e).abs() < 1e-2 * (1.0 + e.abs()), "elem {i}: {g} vs {e}");
+    }
+}
+
+#[test]
+fn shape_validation_rejects_bad_inputs() {
+    let Some(engine) = engine() else { return };
+    // Wrong arity.
+    assert!(engine
+        .run_f32("dense_matvec_n1024", &[Tensor::F32(vec![0.0; 1024], vec![1024])])
+        .is_err());
+    // Wrong shape.
+    assert!(engine
+        .run_f32(
+            "dense_matvec_n1024",
+            &[
+                Tensor::F32(vec![0.0; 512], vec![512]),
+                Tensor::F32(vec![0.0; 1024 * 1024], vec![1024, 1024]),
+            ],
+        )
+        .is_err());
+    // Unknown artifact.
+    assert!(engine.run_f32("nope", &[]).is_err());
+}

@@ -1,0 +1,232 @@
+//! Serving-stack integration: TCP round trips, concurrent clients,
+//! failure injection (malformed requests, backpressure, oversized
+//! prompts), and metrics accounting.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use rsr::kernels::Backend;
+use rsr::model::config::ModelConfig;
+use rsr::model::weights::ModelWeights;
+use rsr::serving::batcher::BatchPolicy;
+use rsr::serving::engine::{EngineConfig, InferenceEngine};
+use rsr::serving::request::Request;
+use rsr::serving::router::Router;
+use rsr::serving::server::{Client, Server};
+
+fn tiny_weights() -> Arc<ModelWeights> {
+    Arc::new(ModelWeights::generate(ModelConfig::tiny(), 0x5E21).unwrap())
+}
+
+struct TestServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TestServer {
+    fn start(replicas: usize, workers: usize) -> Self {
+        let weights = tiny_weights();
+        let engines: Vec<Arc<InferenceEngine>> = (0..replicas)
+            .map(|_| {
+                Arc::new(
+                    InferenceEngine::start(
+                        Arc::clone(&weights),
+                        EngineConfig {
+                            workers,
+                            backend: Backend::RsrPlusPlus,
+                            ..Default::default()
+                        },
+                    )
+                    .unwrap(),
+                )
+            })
+            .collect();
+        let router = Arc::new(Router::new(engines).unwrap());
+        let server = Server::new(router);
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let bound: Arc<Mutex<Option<std::net::SocketAddr>>> = Arc::default();
+        let bound2 = Arc::clone(&bound);
+        let thread = std::thread::spawn(move || {
+            server
+                .serve("127.0.0.1:0", stop2, move |a| {
+                    *bound2.lock().unwrap() = Some(a);
+                })
+                .unwrap();
+        });
+        let addr = loop {
+            if let Some(a) = *bound.lock().unwrap() {
+                break a;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        };
+        Self { addr, stop, thread: Some(thread) }
+    }
+}
+
+impl Drop for TestServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[test]
+fn tcp_round_trip_generates_tokens() {
+    let server = TestServer::start(1, 1);
+    let mut client = Client::connect(server.addr).unwrap();
+    let reply = client.request(7, "What is the capital of France?", 4).unwrap();
+    assert_eq!(reply.get("id").unwrap().as_f64(), Some(7.0));
+    assert!(reply.get("error").is_none(), "{}", reply.to_string());
+    let tokens = reply.get("tokens").unwrap().as_arr().unwrap();
+    assert!(!tokens.is_empty() && tokens.len() <= 4);
+    assert!(reply.get("decode_us").unwrap().as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn multiple_requests_on_one_connection() {
+    let server = TestServer::start(1, 1);
+    let mut client = Client::connect(server.addr).unwrap();
+    for i in 0..3 {
+        let reply = client.request(i, "How many continents are there?", 2).unwrap();
+        assert_eq!(reply.get("id").unwrap().as_f64(), Some(i as f64));
+        assert!(reply.get("error").is_none());
+    }
+}
+
+#[test]
+fn concurrent_clients_get_their_own_answers() {
+    let server = TestServer::start(1, 2);
+    let addr = server.addr;
+    let handles: Vec<_> = (0..4)
+        .map(|ci| {
+            std::thread::spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                // Distinct prompts per client; ids deliberately overlap
+                // across connections to prove isolation comes from the
+                // hub, not the client id.
+                let reply = client
+                    .request(1, &format!("Question number {ci}?"), 3)
+                    .unwrap();
+                assert!(reply.get("error").is_none(), "{}", reply.to_string());
+                reply.get("tokens").unwrap().as_arr().unwrap().len()
+            })
+        })
+        .collect();
+    for h in handles {
+        assert!(h.join().unwrap() > 0);
+    }
+}
+
+#[test]
+fn malformed_lines_get_error_replies_and_do_not_kill_connection() {
+    let server = TestServer::start(1, 1);
+    let mut client = Client::connect(server.addr).unwrap();
+    // Not JSON.
+    let reply = client.send_raw("this is not json").unwrap();
+    assert!(reply.get("error").is_some());
+    // Missing prompt.
+    let reply = client.send_raw(r#"{"id": 3}"#).unwrap();
+    assert!(reply.get("error").is_some());
+    // Empty prompt.
+    let reply = client.send_raw(r#"{"id": 3, "prompt": ""}"#).unwrap();
+    assert!(reply.get("error").is_some());
+    // max_new out of range.
+    let reply =
+        client.send_raw(r#"{"id": 3, "prompt": "hi", "max_new": 100000}"#).unwrap();
+    assert!(reply.get("error").is_some());
+    // Connection still serves good requests.
+    let reply = client.request(4, "still alive?", 2).unwrap();
+    assert!(reply.get("error").is_none());
+}
+
+#[test]
+fn engine_backpressure_is_reported() {
+    let weights = tiny_weights();
+    let engine = InferenceEngine::start(
+        weights,
+        EngineConfig {
+            workers: 1,
+            queue_capacity: 1,
+            batch: BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut rejected = 0;
+    for i in 0..30 {
+        if engine.submit(Request::new(i, vec![3; 32], 8)).is_err() {
+            rejected += 1;
+        }
+    }
+    assert!(rejected > 0);
+    let snap = engine.metrics().snapshot();
+    assert!(snap.get("rejected").unwrap().as_f64().unwrap() as u64 >= rejected as u64);
+    // Drain admitted requests before shutdown.
+    while engine.inflight() > 0 {
+        engine.recv_timeout(Duration::from_secs(30));
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn oversized_prompt_fails_cleanly() {
+    let weights = tiny_weights();
+    let max_seq = weights.config.max_seq_len;
+    let engine = InferenceEngine::start(
+        weights,
+        EngineConfig { workers: 1, ..Default::default() },
+    )
+    .unwrap();
+    engine.submit(Request::new(1, vec![5; max_seq + 10], 2)).unwrap();
+    let resp = engine.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert!(resp.error.is_some(), "prompt longer than KV capacity must fail");
+    // Engine survives and serves the next request.
+    engine.submit(Request::new(2, vec![5, 6, 7], 2)).unwrap();
+    let resp = engine.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert!(resp.error.is_none());
+    engine.shutdown();
+}
+
+#[test]
+fn replicated_router_balances_and_both_replicas_complete() {
+    let server = TestServer::start(2, 1);
+    let addr = server.addr;
+    let handles: Vec<_> = (0..6)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                client.request(i, "Where is the Nile?", 2).unwrap()
+            })
+        })
+        .collect();
+    for h in handles {
+        let reply = h.join().unwrap();
+        assert!(reply.get("error").is_none(), "{}", reply.to_string());
+    }
+}
+
+#[test]
+fn metrics_phases_are_accounted() {
+    let weights = tiny_weights();
+    let engine = InferenceEngine::start(
+        weights,
+        EngineConfig { workers: 1, ..Default::default() },
+    )
+    .unwrap();
+    engine.submit(Request::new(1, vec![10, 20, 30, 40], 3)).unwrap();
+    let resp = engine.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert!(resp.error.is_none());
+    assert!(resp.timing.prefill > Duration::ZERO);
+    assert!(resp.timing.decode > Duration::ZERO);
+    let snap = engine.metrics().snapshot();
+    assert_eq!(snap.get("completed").unwrap().as_f64(), Some(1.0));
+    assert!(
+        snap.get("prefill").unwrap().get("mean_us").unwrap().as_f64().unwrap() > 0.0
+    );
+    engine.shutdown();
+}
