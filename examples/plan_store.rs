@@ -1,0 +1,101 @@
+//! Compile once, serve many: pack a model's RSR plans to `.rsrz`
+//! artifacts, then serve them from a shared `PlanStore` across worker
+//! threads — the production deployment shape (`rsr pack` + `rsr serve
+//! --plans`), in miniature.
+//!
+//! ```sh
+//! cargo run --release --example plan_store
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use rsr::kernels::artifact::{ternary_fingerprint, PlanArtifact};
+use rsr::kernels::index::TernaryRsrIndex;
+use rsr::kernels::optimal_k::optimal_k_rsrpp;
+use rsr::model::config::ModelConfig;
+use rsr::model::sampler::Sampler;
+use rsr::model::transformer::Transformer;
+use rsr::model::weights::ModelWeights;
+use rsr::runtime::PlanStore;
+use rsr::util::rng::Rng;
+
+fn main() -> rsr::Result<()> {
+    // A trained 1.58-bit model (synthetic stand-in; see model::weights).
+    let weights = Arc::new(ModelWeights::generate(ModelConfig::tiny(), 42)?);
+    let names = weights.matrix_names();
+    println!("model `{}`: {} ternary matrices", weights.config.name, names.len());
+
+    // ── 1. PACK (offline, once) ─────────────────────────────────────
+    // Algorithm 1 over every weight matrix, serialized to versioned,
+    // checksummed .rsrz artifacts. This is `rsr pack`.
+    let dir = std::env::temp_dir().join(format!("rsr-example-plans-{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let t0 = Instant::now();
+    let (mut disk, mut dense) = (0usize, 0usize);
+    for (name, m, scale) in weights.named_matrices() {
+        let k = optimal_k_rsrpp(m.rows());
+        let art = PlanArtifact::ternary(name.clone(), TernaryRsrIndex::preprocess(m, k), scale)?
+            .with_weights_fingerprint(ternary_fingerprint(m));
+        disk += art.meta.payload_bytes;
+        dense += art.meta.dense_f32_bytes();
+        art.save(dir.join(format!("{name}.rsrz")))?;
+    }
+    println!(
+        "packed in {:.1} ms → {:.1} KB of artifacts ({:.1} KB dense f32)",
+        t0.elapsed().as_secs_f64() * 1e3,
+        disk as f64 / 1024.0,
+        dense as f64 / 1024.0,
+    );
+
+    // ── 2. SERVE (every process start, many times) ──────────────────
+    // One store per process; plans load lazily, each exactly once.
+    let t0 = Instant::now();
+    let store = Arc::new(PlanStore::open(&dir)?);
+    store.preload(&names)?;
+    println!(
+        "store loaded {} plans in {:.1} ms ({:.1} KB shared index)",
+        store.loaded_len(),
+        t0.elapsed().as_secs_f64() * 1e3,
+        store.index_bytes() as f64 / 1024.0,
+    );
+
+    // Worker threads share the store: each builds a Transformer whose
+    // BitLinear layers execute the SAME Arc'd indices with private
+    // scratch. No preprocessing happens on these threads.
+    let prompt: Vec<u32> = "What is 2+2?".bytes().map(|b| b as u32).collect();
+    let mut handles = Vec::new();
+    for wid in 0..3 {
+        let store = Arc::clone(&store);
+        let weights = Arc::clone(&weights);
+        let prompt = prompt.clone();
+        handles.push(std::thread::spawn(move || -> rsr::Result<(usize, Vec<u32>)> {
+            let t0 = Instant::now();
+            let mut model = Transformer::from_plan_store(&weights, &store)?;
+            let build_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let mut rng = Rng::new(0);
+            let tokens = model.generate(&prompt, 8, Sampler::Greedy, &mut rng)?;
+            println!("  worker {wid}: model ready in {build_ms:.1} ms (no preprocessing)");
+            Ok((wid, tokens))
+        }));
+    }
+    let mut outputs = Vec::new();
+    for h in handles {
+        outputs.push(h.join().expect("worker panicked")?);
+    }
+
+    // ── 3. VERIFY ───────────────────────────────────────────────────
+    // Store-served workers must agree with a freshly preprocessed
+    // in-memory model, token for token.
+    let mut reference =
+        Transformer::from_weights(&weights, rsr::kernels::Backend::RsrPlusPlus, 0)?;
+    let mut rng = Rng::new(0);
+    let expect = reference.generate(&prompt, 8, Sampler::Greedy, &mut rng)?;
+    for (wid, tokens) in &outputs {
+        assert_eq!(tokens, &expect, "worker {wid} diverged");
+    }
+    println!("all {} workers match the in-memory reference: {:?}", outputs.len(), expect);
+
+    std::fs::remove_dir_all(&dir)?;
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! `cargo bench --bench plan_store` — the compile-once/serve-many
+//! economics this repo's serving stack is built on.
+//!
+//! Compares three ways a 4-worker engine can obtain its plans:
+//!
+//! 1. **per-worker preprocess** (the seed behavior): every worker runs
+//!    Algorithm 1 itself — W× the startup latency and W index copies;
+//! 2. **shared `PlanStore`**: Algorithm 1 runs once, workers share the
+//!    `Arc`'d index and hold only per-thread scratch;
+//! 3. **`.rsrz` artifact load**: Algorithm 1 ran offline (`rsr pack`);
+//!    serving start is a checksum-verified deserialize.
+//!
+//! Per-call matvec latency is reported for the owned and shared paths
+//! to show the sharing refactor costs nothing at request time.
+
+use std::sync::Arc;
+
+use rsr::bench::harness::{measure, ms, Table};
+use rsr::kernels::artifact::{ArtifactPayload, PlanArtifact};
+use rsr::kernels::index::TernaryRsrIndex;
+use rsr::kernels::optimal_k::optimal_k_rsrpp;
+use rsr::kernels::rsrpp::TernaryRsrPlusPlusPlan;
+use rsr::kernels::TernaryMatrix;
+use rsr::runtime::{PlanStore, SharedTernaryPlan};
+use rsr::util::rng::Rng;
+
+fn main() {
+    let full = rsr::bench::full_mode();
+    let n: usize = if full { 4096 } else { 2048 };
+    let workers = 4usize;
+    let k = optimal_k_rsrpp(n);
+    let mut rng = Rng::new(0x9A7);
+    let a = TernaryMatrix::random(n, n, 1.0 / 3.0, &mut rng);
+    let v = rng.f32_vec(n, -1.0, 1.0);
+    let mut out = vec![0.0f32; n];
+
+    let mut table =
+        Table::new(&["path", "startup cost", "per-call matvec", "index copies"]);
+
+    // 1. Seed path: every worker preprocesses its own plan.
+    let m_cold = measure(format!("preprocess x{workers}"), 0, 2, || {
+        let mut plans = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            plans.push(
+                TernaryRsrPlusPlusPlan::new(TernaryRsrIndex::preprocess(&a, k)).unwrap(),
+            );
+        }
+        plans
+    });
+    let mut owned =
+        TernaryRsrPlusPlusPlan::new(TernaryRsrIndex::preprocess(&a, k)).unwrap();
+    let m_owned_exec =
+        measure("owned execute", 2, 20, || owned.execute(&v, &mut out).unwrap());
+    table.row(&[
+        "per-worker preprocess (seed)".into(),
+        ms(&m_cold),
+        ms(&m_owned_exec),
+        format!("{workers}"),
+    ]);
+
+    // 2. PlanStore: preprocess once, share the index, per-worker scratch.
+    let m_store = measure("store build + scratches", 0, 2, || {
+        let store = PlanStore::new();
+        store
+            .insert_ternary("w", TernaryRsrIndex::preprocess(&a, k), k, 1.0)
+            .unwrap();
+        let plan = store.get("w").unwrap().ternary().unwrap();
+        let scratches: Vec<_> = (0..workers).map(|_| plan.scratch()).collect();
+        (plan, scratches)
+    });
+    let shared =
+        Arc::new(SharedTernaryPlan::new(TernaryRsrIndex::preprocess(&a, k)).unwrap());
+    let mut scratch = shared.scratch();
+    let m_shared_exec = measure("shared execute", 2, 20, || {
+        shared.execute(&mut scratch, &v, &mut out).unwrap()
+    });
+    table.row(&[
+        "shared PlanStore".into(),
+        ms(&m_store),
+        ms(&m_shared_exec),
+        "1".into(),
+    ]);
+
+    // 3. Packed artifact: Algorithm 1 ran offline; startup is a
+    //    checksum-verified load.
+    let dir = std::env::temp_dir().join(format!("rsr-plan-bench-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("w.rsrz");
+    PlanArtifact::ternary("w", TernaryRsrIndex::preprocess(&a, k), 1.0)
+        .unwrap()
+        .save(&path)
+        .unwrap();
+    let m_load = measure("artifact load", 1, 3, || {
+        let art = PlanArtifact::load(&path).unwrap();
+        match art.payload {
+            ArtifactPayload::Ternary(t) => SharedTernaryPlan::new(t).unwrap(),
+            _ => unreachable!(),
+        }
+    });
+    table.row(&[
+        ".rsrz artifact load".into(),
+        ms(&m_load),
+        ms(&m_shared_exec),
+        "1".into(),
+    ]);
+
+    table.print(&format!(
+        "compile-once/serve-many (ternary {n}x{n}, k={k}, {workers} workers)"
+    ));
+    let meta = PlanArtifact::peek(&path).unwrap();
+    println!(
+        "\nartifact on disk: {:.2} MB vs {:.2} MB dense f32 (ratio {:.3}); \
+         shared index in memory: {:.2} MB once per process instead of {workers}x",
+        meta.payload_bytes as f64 / 1048576.0,
+        meta.dense_f32_bytes() as f64 / 1048576.0,
+        meta.ratio_vs_dense(),
+        shared.index_bytes() as f64 / 1048576.0,
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

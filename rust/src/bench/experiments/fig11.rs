@@ -44,7 +44,13 @@ pub fn run(full: bool) {
             println!("  (no artifact {artifact}; skipping n={n})");
             continue;
         }
-        let exe = engine.executable(&artifact).expect("compile artifact");
+        let exe = match engine.executable(&artifact) {
+            Ok(e) => e,
+            Err(e) => {
+                println!("  (cannot compile {artifact}: {e}; skipping n={n})");
+                continue;
+            }
+        };
         let mut rng = Rng::new(SEED ^ n as u64);
 
         // ---- binary panel (11a)

@@ -1,41 +1,71 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (the offline registry has no
+//! `thiserror`); semantics match the usual derive — `Io` is transparent
+//! and carries its source.
+
+use std::fmt;
 
 /// Errors produced by the rsr library.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// A block index failed structural validation.
-    #[error("invalid index: {0}")]
     InvalidIndex(String),
 
     /// Shape mismatch between operands.
-    #[error("shape mismatch: {0}")]
     ShapeMismatch(String),
 
     /// Weight / model file format problems.
-    #[error("invalid model file: {0}")]
     InvalidModel(String),
 
-    /// AOT artifact problems (missing file, bad manifest).
-    #[error("artifact error: {0}")]
+    /// AOT / plan artifact problems (missing file, bad manifest, bad
+    /// header, checksum or version mismatch).
     Artifact(String),
 
     /// Serving-layer failures (queue overflow, closed channels…).
-    #[error("serving error: {0}")]
     Serving(String),
 
     /// Configuration / CLI problems.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Underlying I/O failure.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// Failure inside the XLA/PJRT runtime.
-    #[error("xla error: {0}")]
     Xla(String),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidIndex(m) => write!(f, "invalid index: {m}"),
+            Error::ShapeMismatch(m) => write!(f, "shape mismatch: {m}"),
+            Error::InvalidModel(m) => write!(f, "invalid model file: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Serving(m) => write!(f, "serving error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Io(e) => write!(f, "{e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

@@ -1,0 +1,757 @@
+//! Versioned, checksummed **plan artifacts** — the `.rsrz` format.
+//!
+//! The paper's central economics: trained binary/ternary weights never
+//! change, so Algorithm 1 preprocessing can run **once, offline**, and
+//! every inference process afterwards loads the finished block index
+//! instead of recomputing it. A `.rsrz` file is that finished index —
+//! an [`RsrIndex`] or [`TernaryRsrIndex`] plus the blocking metadata
+//! (`k`, the per-tensor scale β, the layer name) — wrapped in a header
+//! that makes offline deployment safe: a format version, and an
+//! FNV-1a 64 checksum over the payload *and* the header metadata
+//! (shape, k, scale, fingerprint, name) so bit rot or truncated copies
+//! anywhere in the file are rejected at load instead of corrupting
+//! inference.
+//!
+//! ## On-disk layout (version 1, all integers little-endian)
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  "RSRZ"
+//! 4       4     format version (u32) — currently 1
+//! 8       4     kind (u32): 1 = binary RsrIndex, 2 = ternary pair
+//! 12      4     rows (u32)
+//! 16      4     cols (u32)
+//! 20      4     blocking parameter k (u32)
+//! 24      4     scale β (f32)
+//! 28      4     elem width (u32): bytes per index entry, 2 or 4
+//! 32      8     weights fingerprint (u64, 0 = unbound) — FNV-1a of the
+//!               source matrix ([`ternary_fingerprint`]); binds a plan
+//!               to the exact weights it was compiled from
+//! 40      8     payload length (u64)
+//! 48      8     FNV-1a 64 checksum (u64) over the payload followed by
+//!               every other header field (version, kind, shape, k,
+//!               scale, elem width, fingerprint, length, name) — a
+//!               flipped bit in the scale is as fatal as one in a
+//!               segmentation entry
+//! 56      4     name length (u32), then that many UTF-8 bytes
+//! …             payload
+//! ```
+//!
+//! The payload stores, for each k-column block in order, the
+//! permutation `σ` (`rows` entries) then the full segmentation `L`
+//! (`2^width + 1` entries). Block geometry (`col_start`, `width`) is
+//! *derived* from `(cols, k)` — not stored — and entries are written at
+//! the narrowest width that fits (`u16` whenever `rows < 2^16`), which
+//! is what gets the artifact to ≲ dense-f32 / 4 at `n ≥ 1024` instead
+//! of the ~0.4× a naive u32 dump achieves. A ternary artifact stores
+//! the `B⁽¹⁾` (plus) payload followed by `B⁽²⁾` (minus), same geometry.
+//!
+//! Decoding re-validates every structural invariant
+//! ([`RsrIndex::validate`]) after the checksum passes, so a loaded plan
+//! is exactly as trustworthy as a freshly preprocessed one — the
+//! bounds-check-free hot path relies on this.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use super::blocking::column_blocks;
+use super::index::{BlockIndex, RsrIndex, TernaryRsrIndex};
+use super::ternary::TernaryMatrix;
+use crate::error::{Error, Result};
+
+/// The `.rsrz` magic bytes.
+pub const RSRZ_MAGIC: &[u8; 4] = b"RSRZ";
+
+/// The format version this build writes and reads.
+pub const RSRZ_VERSION: u32 = 1;
+
+/// Reject implausible header dimensions before any allocation. The
+/// paper's largest evaluation size is `n = 2^16`; 2^20 leaves headroom
+/// while keeping every size computation far from usize overflow.
+const MAX_DIM: usize = 1 << 20;
+
+/// Largest payload a header may declare (a ternary `n = 2^16`, `k = 16`
+/// artifact is ≈ 4.3 GB; 16 GiB bounds what a corrupt header can ask
+/// the allocator for).
+const MAX_PAYLOAD: usize = 1 << 34;
+
+/// Longest accepted artifact name.
+const MAX_NAME: usize = 4096;
+
+/// What kind of index an artifact carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// A single binary-matrix index ([`RsrIndex`]).
+    Binary,
+    /// A ternary pair ([`TernaryRsrIndex`]: both Prop 2.1 halves).
+    Ternary,
+}
+
+impl ArtifactKind {
+    fn code(self) -> u32 {
+        match self {
+            ArtifactKind::Binary => 1,
+            ArtifactKind::Ternary => 2,
+        }
+    }
+
+    fn from_code(c: u32) -> Result<Self> {
+        match c {
+            1 => Ok(ArtifactKind::Binary),
+            2 => Ok(ArtifactKind::Ternary),
+            other => Err(Error::Artifact(format!("unknown artifact kind {other}"))),
+        }
+    }
+
+    /// Human-readable kind name (used by `rsr inspect`).
+    pub fn name(self) -> &'static str {
+        match self {
+            ArtifactKind::Binary => "binary",
+            ArtifactKind::Ternary => "ternary",
+        }
+    }
+}
+
+/// Everything the `.rsrz` header records about an artifact — readable
+/// without decoding the payload (see [`PlanArtifact::peek`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    /// Layer name (e.g. `layer0.wq`, `lm_head`).
+    pub name: String,
+    /// Format version the file was written with.
+    pub version: u32,
+    /// Binary or ternary.
+    pub kind: ArtifactKind,
+    /// Rows of the indexed matrix (`n`, the activation length).
+    pub rows: usize,
+    /// Columns of the indexed matrix (`m`, the output length).
+    pub cols: usize,
+    /// Blocking parameter the index was preprocessed with.
+    pub k: usize,
+    /// Per-tensor scale β applied after the multiply.
+    pub scale: f32,
+    /// Bytes per index entry in the payload (2 or 4).
+    pub elem_width: usize,
+    /// FNV-1a fingerprint of the source weight matrix
+    /// ([`ternary_fingerprint`]); `0` means unbound. Lets serve-time
+    /// detect plans packed from *different* weights that happen to
+    /// share the architecture's shapes.
+    pub weights_fp: u64,
+    /// Payload size on disk — the serve-time index footprint.
+    pub payload_bytes: usize,
+}
+
+impl ArtifactMeta {
+    /// Bytes a dense f32 copy of the same matrix would occupy — the
+    /// Fig 5 baseline `rsr inspect` compares against.
+    pub fn dense_f32_bytes(&self) -> usize {
+        self.rows * self.cols * 4
+    }
+
+    /// Bytes of the most compact raw form (bit-packed binary / 2-bit
+    /// packed ternary) — the honest non-index baseline.
+    pub fn packed_bytes(&self) -> usize {
+        match self.kind {
+            ArtifactKind::Binary => (self.rows * self.cols).div_ceil(8),
+            ArtifactKind::Ternary => (self.rows * self.cols).div_ceil(4),
+        }
+    }
+
+    /// `payload_bytes / dense_f32_bytes` — the compression ratio
+    /// reported by `rsr inspect`.
+    pub fn ratio_vs_dense(&self) -> f64 {
+        self.payload_bytes as f64 / self.dense_f32_bytes() as f64
+    }
+}
+
+/// The decoded index an artifact carries.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArtifactPayload {
+    /// A binary-matrix index.
+    Binary(RsrIndex),
+    /// A ternary index pair.
+    Ternary(TernaryRsrIndex),
+}
+
+/// A plan artifact: header metadata + decoded index, ready to be
+/// written to or read from a `.rsrz` stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanArtifact {
+    /// Header metadata.
+    pub meta: ArtifactMeta,
+    /// The index itself.
+    pub payload: ArtifactPayload,
+}
+
+impl PlanArtifact {
+    /// Wrap a validated binary index for serialization.
+    pub fn binary(name: impl Into<String>, index: RsrIndex, scale: f32) -> Result<Self> {
+        index.validate()?;
+        check_writable(index.rows, index.cols, index.k)?;
+        let elem_width = elem_width_for(index.rows);
+        let meta = ArtifactMeta {
+            name: name.into(),
+            version: RSRZ_VERSION,
+            kind: ArtifactKind::Binary,
+            rows: index.rows,
+            cols: index.cols,
+            k: index.k,
+            scale,
+            elem_width,
+            weights_fp: 0,
+            payload_bytes: expected_payload_bytes(
+                index.rows,
+                index.cols,
+                index.k,
+                elem_width,
+                ArtifactKind::Binary,
+            ),
+        };
+        check_name(&meta.name)?;
+        check_payload_cap(meta.payload_bytes)?;
+        Ok(Self { meta, payload: ArtifactPayload::Binary(index) })
+    }
+
+    /// Wrap a validated ternary index pair for serialization.
+    pub fn ternary(
+        name: impl Into<String>,
+        index: TernaryRsrIndex,
+        scale: f32,
+    ) -> Result<Self> {
+        index.validate()?;
+        let (p, m) = (&index.plus, &index.minus);
+        if p.rows != m.rows || p.cols != m.cols || p.k != m.k {
+            return Err(Error::InvalidIndex(
+                "ternary halves disagree on geometry".into(),
+            ));
+        }
+        check_writable(p.rows, p.cols, p.k)?;
+        let elem_width = elem_width_for(p.rows);
+        let meta = ArtifactMeta {
+            name: name.into(),
+            version: RSRZ_VERSION,
+            kind: ArtifactKind::Ternary,
+            rows: p.rows,
+            cols: p.cols,
+            k: p.k,
+            scale,
+            elem_width,
+            weights_fp: 0,
+            payload_bytes: expected_payload_bytes(
+                p.rows,
+                p.cols,
+                p.k,
+                elem_width,
+                ArtifactKind::Ternary,
+            ),
+        };
+        check_name(&meta.name)?;
+        check_payload_cap(meta.payload_bytes)?;
+        Ok(Self { meta, payload: ArtifactPayload::Ternary(index) })
+    }
+
+    /// Bind this artifact to the weights it was compiled from (see
+    /// [`ternary_fingerprint`]); serve-time loaders reject the plan if
+    /// the model's matrix no longer matches.
+    pub fn with_weights_fingerprint(mut self, fp: u64) -> Self {
+        self.meta.weights_fp = fp;
+        self
+    }
+
+    /// In-memory bytes of the decoded index (u32 vectors) — what a
+    /// process actually holds after loading; contrast with
+    /// [`ArtifactMeta::payload_bytes`], the on-disk footprint.
+    pub fn in_memory_bytes(&self) -> usize {
+        match &self.payload {
+            ArtifactPayload::Binary(i) => i.bytes(),
+            ArtifactPayload::Ternary(t) => t.bytes(),
+        }
+    }
+
+    /// Serialize to a `.rsrz` stream.
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        let m = &self.meta;
+        let mut payload = Vec::with_capacity(m.payload_bytes);
+        match &self.payload {
+            ArtifactPayload::Binary(idx) => encode_index(idx, m.elem_width, &mut payload),
+            ArtifactPayload::Ternary(t) => {
+                encode_index(&t.plus, m.elem_width, &mut payload);
+                encode_index(&t.minus, m.elem_width, &mut payload);
+            }
+        }
+        debug_assert_eq!(payload.len(), m.payload_bytes);
+        w.write_all(RSRZ_MAGIC)?;
+        for v in [RSRZ_VERSION, m.kind.code(), m.rows as u32, m.cols as u32, m.k as u32] {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        w.write_all(&m.scale.to_le_bytes())?;
+        w.write_all(&(m.elem_width as u32).to_le_bytes())?;
+        w.write_all(&m.weights_fp.to_le_bytes())?;
+        w.write_all(&(payload.len() as u64).to_le_bytes())?;
+        w.write_all(&artifact_checksum(m, &payload).to_le_bytes())?;
+        w.write_all(&(m.name.len() as u32).to_le_bytes())?;
+        w.write_all(m.name.as_bytes())?;
+        w.write_all(&payload)?;
+        Ok(())
+    }
+
+    /// Deserialize from a `.rsrz` stream: header checks → checksum →
+    /// decode → full structural validation.
+    pub fn read_from(r: &mut impl Read) -> Result<Self> {
+        let (meta, checksum) = read_header(r)?;
+        // try_reserve instead of vec![0; n]: a corrupt-but-plausible
+        // header must surface as Err, never as an allocator abort.
+        let mut payload = Vec::new();
+        payload.try_reserve_exact(meta.payload_bytes).map_err(|_| {
+            Error::Artifact(format!(
+                "cannot allocate {} payload bytes",
+                meta.payload_bytes
+            ))
+        })?;
+        payload.resize(meta.payload_bytes, 0);
+        r.read_exact(&mut payload)?;
+        if artifact_checksum(&meta, &payload) != checksum {
+            return Err(Error::Artifact(
+                "checksum mismatch (corrupt artifact header or payload)".into(),
+            ));
+        }
+        let mut off = 0;
+        let decoded = match meta.kind {
+            ArtifactKind::Binary => {
+                let idx = decode_index(&meta, &payload, &mut off)?;
+                idx.validate()?;
+                ArtifactPayload::Binary(idx)
+            }
+            ArtifactKind::Ternary => {
+                let plus = decode_index(&meta, &payload, &mut off)?;
+                let minus = decode_index(&meta, &payload, &mut off)?;
+                let t = TernaryRsrIndex { plus, minus };
+                t.validate()?;
+                ArtifactPayload::Ternary(t)
+            }
+        };
+        debug_assert_eq!(off, payload.len());
+        Ok(Self { meta, payload: decoded })
+    }
+
+    /// Read only the header of a `.rsrz` file — artifact stats without
+    /// paying for payload decode (what `rsr inspect` uses).
+    pub fn peek(path: impl AsRef<Path>) -> Result<ArtifactMeta> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let (meta, _checksum) = read_header(&mut f)?;
+        Ok(meta)
+    }
+
+    /// Write to a file.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        self.write_to(&mut f)
+    }
+
+    /// Read + validate from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        Self::read_from(&mut f)
+    }
+}
+
+/// Narrowest entry width that can hold every `σ`/`L` value (both are
+/// bounded by `rows`).
+fn elem_width_for(rows: usize) -> usize {
+    if rows < 1 << 16 {
+        2
+    } else {
+        4
+    }
+}
+
+fn check_name(name: &str) -> Result<()> {
+    if name.len() > MAX_NAME {
+        return Err(Error::Artifact(format!("artifact name too long ({})", name.len())));
+    }
+    Ok(())
+}
+
+/// Writers must refuse anything the reader's bounds would reject —
+/// never sink preprocessing cost into a file this build cannot load.
+/// (Dimensions and k here; the payload cap is checked once the size is
+/// known, in [`check_payload_cap`].)
+fn check_writable(rows: usize, cols: usize, k: usize) -> Result<()> {
+    if k == 0 || k > 16 {
+        return Err(Error::Artifact(format!(
+            "blocking parameter k={k} is outside the writable range 1..=16"
+        )));
+    }
+    if rows == 0 || cols == 0 || rows > MAX_DIM || cols > MAX_DIM {
+        return Err(Error::Artifact(format!(
+            "dimensions {rows}x{cols} exceed the .rsrz limit of {MAX_DIM}"
+        )));
+    }
+    Ok(())
+}
+
+/// The same payload cap the reader enforces, applied at write time.
+fn check_payload_cap(payload_bytes: usize) -> Result<()> {
+    if payload_bytes > MAX_PAYLOAD {
+        return Err(Error::Artifact(format!(
+            "payload of {payload_bytes} bytes exceeds the {MAX_PAYLOAD}-byte cap \
+             (choose a larger k: tiny k makes the index larger than the matrix)"
+        )));
+    }
+    Ok(())
+}
+
+/// Exact payload size implied by the header geometry.
+fn expected_payload_bytes(
+    rows: usize,
+    cols: usize,
+    k: usize,
+    elem_width: usize,
+    kind: ArtifactKind,
+) -> usize {
+    let entries: usize = column_blocks(cols, k)
+        .iter()
+        .map(|cb| rows + (1usize << cb.width) + 1)
+        .sum();
+    let per_index = entries * elem_width;
+    match kind {
+        ArtifactKind::Binary => per_index,
+        ArtifactKind::Ternary => per_index * 2,
+    }
+}
+
+fn encode_index(idx: &RsrIndex, elem_width: usize, out: &mut Vec<u8>) {
+    for blk in &idx.blocks {
+        for &v in blk.sigma.iter().chain(blk.seg.iter()) {
+            if elem_width == 2 {
+                out.extend_from_slice(&(v as u16).to_le_bytes());
+            } else {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+}
+
+fn decode_entries(
+    payload: &[u8],
+    off: &mut usize,
+    n: usize,
+    elem_width: usize,
+) -> Result<Vec<u32>> {
+    let need = n * elem_width;
+    if *off + need > payload.len() {
+        return Err(Error::Artifact("payload truncated".into()));
+    }
+    let slice = &payload[*off..*off + need];
+    *off += need;
+    let mut out = Vec::with_capacity(n);
+    if elem_width == 2 {
+        for c in slice.chunks_exact(2) {
+            out.push(u16::from_le_bytes([c[0], c[1]]) as u32);
+        }
+    } else {
+        for c in slice.chunks_exact(4) {
+            out.push(u32::from_le_bytes(c.try_into().unwrap()));
+        }
+    }
+    Ok(out)
+}
+
+fn decode_index(meta: &ArtifactMeta, payload: &[u8], off: &mut usize) -> Result<RsrIndex> {
+    let geom = column_blocks(meta.cols, meta.k);
+    let mut blocks = Vec::with_capacity(geom.len());
+    for cb in geom {
+        let sigma = decode_entries(payload, off, meta.rows, meta.elem_width)?;
+        let seg = decode_entries(payload, off, (1usize << cb.width) + 1, meta.elem_width)?;
+        blocks.push(BlockIndex {
+            col_start: cb.col_start as u32,
+            width: cb.width as u32,
+            sigma,
+            seg,
+        });
+    }
+    Ok(RsrIndex { rows: meta.rows, cols: meta.cols, k: meta.k, blocks })
+}
+
+fn read_header(r: &mut impl Read) -> Result<(ArtifactMeta, u64)> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != RSRZ_MAGIC {
+        return Err(Error::Artifact("bad magic (not a .rsrz plan artifact)".into()));
+    }
+    let version = read_u32(r)?;
+    if version != RSRZ_VERSION {
+        return Err(Error::Artifact(format!(
+            "unsupported .rsrz version {version} (this build reads version {RSRZ_VERSION})"
+        )));
+    }
+    let kind = ArtifactKind::from_code(read_u32(r)?)?;
+    let rows = read_u32(r)? as usize;
+    let cols = read_u32(r)? as usize;
+    let k = read_u32(r)? as usize;
+    let scale = f32::from_le_bytes(read_arr(r)?);
+    let elem_width = read_u32(r)? as usize;
+    let weights_fp = u64::from_le_bytes(read_arr(r)?);
+    let payload_len = u64::from_le_bytes(read_arr(r)?);
+    let checksum = u64::from_le_bytes(read_arr(r)?);
+    let name_len = read_u32(r)? as usize;
+
+    if rows == 0 || cols == 0 || rows > MAX_DIM || cols > MAX_DIM {
+        return Err(Error::Artifact(format!("implausible dimensions {rows}x{cols}")));
+    }
+    if k == 0 || k > 16 {
+        return Err(Error::Artifact(format!("blocking parameter k={k} out of range")));
+    }
+    if elem_width != 2 && elem_width != 4 {
+        return Err(Error::Artifact(format!("bad element width {elem_width}")));
+    }
+    if elem_width == 2 && rows >= 1 << 16 {
+        return Err(Error::Artifact(
+            "element width 2 cannot encode indices for rows >= 65536".into(),
+        ));
+    }
+    if name_len > MAX_NAME {
+        return Err(Error::Artifact(format!("artifact name too long ({name_len})")));
+    }
+    let mut name_bytes = vec![0u8; name_len];
+    r.read_exact(&mut name_bytes)?;
+    let name =
+        String::from_utf8(name_bytes).map_err(|e| Error::Artifact(e.to_string()))?;
+
+    // With rows/cols ≤ MAX_DIM = 2^20 and k ≥ 1 this sum stays well
+    // below 2^63, so the usize arithmetic cannot overflow (64-bit).
+    let expected = expected_payload_bytes(rows, cols, k, elem_width, kind);
+    if expected > MAX_PAYLOAD {
+        return Err(Error::Artifact(format!(
+            "payload of {expected} bytes exceeds the {MAX_PAYLOAD}-byte cap"
+        )));
+    }
+    if payload_len != expected as u64 {
+        return Err(Error::Artifact(format!(
+            "payload length {payload_len} does not match geometry (expected {expected})"
+        )));
+    }
+    let meta = ArtifactMeta {
+        name,
+        version,
+        kind,
+        rows,
+        cols,
+        k,
+        scale,
+        elem_width,
+        weights_fp,
+        payload_bytes: expected,
+    };
+    Ok((meta, checksum))
+}
+
+/// Fingerprint of a ternary weight matrix: FNV-1a 64 over the raw
+/// `{−1,0,1}` entries plus the shape. Stored in `.rsrz` headers (and
+/// computed by serve-time loaders) so a plans directory packed from
+/// *other* weights with the same shapes is rejected instead of silently
+/// producing wrong logits. Never returns `0` — that value is reserved
+/// to mean "unbound".
+pub fn ternary_fingerprint(m: &TernaryMatrix) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut step = |b: u8| {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    for &v in m.data() {
+        step(v as u8);
+    }
+    for d in [m.rows() as u64, m.cols() as u64] {
+        for b in d.to_le_bytes() {
+            step(b);
+        }
+    }
+    if h == 0 {
+        1
+    } else {
+        h
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    Ok(u32::from_le_bytes(read_arr(r)?))
+}
+
+fn read_arr<const N: usize>(r: &mut impl Read) -> Result<[u8; N]> {
+    let mut b = [0u8; N];
+    r.read_exact(&mut b)?;
+    Ok(b)
+}
+
+/// FNV-1a 64-bit over a byte slice — small, dependency-free, and
+/// plenty for detecting bit rot / truncation (not a cryptographic MAC).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    fnv1a64_continue(0xcbf2_9ce4_8422_2325, bytes)
+}
+
+fn fnv1a64_continue(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The stored checksum: FNV-1a over the payload, continued over every
+/// other header field. Computed from *parsed* values on read, so any
+/// header corruption that survives the structural checks (a flipped
+/// scale bit, a zeroed fingerprint) still fails the comparison.
+fn artifact_checksum(meta: &ArtifactMeta, payload: &[u8]) -> u64 {
+    let mut h = fnv1a64(payload);
+    for v in [
+        meta.version,
+        meta.kind.code(),
+        meta.rows as u32,
+        meta.cols as u32,
+        meta.k as u32,
+        meta.elem_width as u32,
+    ] {
+        h = fnv1a64_continue(h, &v.to_le_bytes());
+    }
+    h = fnv1a64_continue(h, &meta.scale.to_le_bytes());
+    h = fnv1a64_continue(h, &meta.weights_fp.to_le_bytes());
+    h = fnv1a64_continue(h, &(payload.len() as u64).to_le_bytes());
+    fnv1a64_continue(h, meta.name.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{BinaryMatrix, TernaryMatrix};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn binary_round_trip() {
+        let mut rng = Rng::new(301);
+        let b = BinaryMatrix::random(97, 50, 0.5, &mut rng);
+        let idx = RsrIndex::preprocess(&b, 5);
+        let art = PlanArtifact::binary("layer0.wq", idx.clone(), 0.25).unwrap();
+        let mut buf = Vec::new();
+        art.write_to(&mut buf).unwrap();
+        let back = PlanArtifact::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(back.meta.name, "layer0.wq");
+        assert_eq!(back.meta.k, 5);
+        assert_eq!(back.meta.scale, 0.25);
+        assert_eq!(back.meta.elem_width, 2);
+        match back.payload {
+            ArtifactPayload::Binary(ref got) => assert_eq!(got, &idx),
+            _ => panic!("wrong kind"),
+        }
+    }
+
+    #[test]
+    fn ternary_round_trip() {
+        let mut rng = Rng::new(307);
+        let a = TernaryMatrix::random(64, 40, 1.0 / 3.0, &mut rng);
+        let idx = TernaryRsrIndex::preprocess(&a, 4);
+        let art = PlanArtifact::ternary("lm_head", idx.clone(), 1.5).unwrap();
+        let mut buf = Vec::new();
+        art.write_to(&mut buf).unwrap();
+        let back = PlanArtifact::read_from(&mut buf.as_slice()).unwrap();
+        match back.payload {
+            ArtifactPayload::Ternary(ref got) => assert_eq!(got, &idx),
+            _ => panic!("wrong kind"),
+        }
+        assert_eq!(back.meta.kind.name(), "ternary");
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected_with_clear_error() {
+        let mut rng = Rng::new(311);
+        let b = BinaryMatrix::random(16, 8, 0.5, &mut rng);
+        let art = PlanArtifact::binary("x", RsrIndex::preprocess(&b, 3), 1.0).unwrap();
+        let mut buf = Vec::new();
+        art.write_to(&mut buf).unwrap();
+        // Version field lives at offset 4.
+        buf[4] = 99;
+        let err = PlanArtifact::read_from(&mut buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("version 99"), "{err}");
+    }
+
+    #[test]
+    fn corruption_is_rejected() {
+        let mut rng = Rng::new(313);
+        let b = BinaryMatrix::random(32, 20, 0.5, &mut rng);
+        let art = PlanArtifact::binary("x", RsrIndex::preprocess(&b, 3), 1.0).unwrap();
+        let mut buf = Vec::new();
+        art.write_to(&mut buf).unwrap();
+        // Bad magic.
+        let mut bad = buf.clone();
+        bad[0] ^= 0xFF;
+        assert!(PlanArtifact::read_from(&mut bad.as_slice()).is_err());
+        // Payload bit flip → checksum mismatch.
+        let mut bad = buf.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x01;
+        let err = PlanArtifact::read_from(&mut bad.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+        // Truncation.
+        let bad = &buf[..buf.len() - 5];
+        assert!(PlanArtifact::read_from(&mut &bad[..]).is_err());
+        // Header corruption that passes structural checks — a flipped
+        // scale bit (offset 24) — must still fail the checksum.
+        let mut bad = buf.clone();
+        bad[24] ^= 0x01;
+        let err = PlanArtifact::read_from(&mut bad.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+        // Same for the weights fingerprint (offset 32).
+        let mut bad = buf;
+        bad[32] ^= 0x01;
+        let err = PlanArtifact::read_from(&mut bad.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn wide_matrices_use_u32_entries() {
+        // elem_width must widen when rows >= 2^16 (sigma can't fit u16).
+        assert_eq!(elem_width_for(65535), 2);
+        assert_eq!(elem_width_for(65536), 4);
+    }
+
+    #[test]
+    fn meta_ratios_are_consistent() {
+        let mut rng = Rng::new(317);
+        let a = TernaryMatrix::random(128, 128, 1.0 / 3.0, &mut rng);
+        let art =
+            PlanArtifact::ternary("t", TernaryRsrIndex::preprocess(&a, 4), 1.0).unwrap();
+        let m = &art.meta;
+        assert_eq!(m.dense_f32_bytes(), 128 * 128 * 4);
+        assert_eq!(m.packed_bytes(), 128 * 128 / 4);
+        let mut buf = Vec::new();
+        art.write_to(&mut buf).unwrap();
+        // Header (60 bytes fixed) + name + payload; payload dominates.
+        assert_eq!(buf.len(), 60 + 1 + m.payload_bytes);
+        assert!((m.ratio_vs_dense() - m.payload_bytes as f64 / (128.0 * 128.0 * 4.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fnv_vector() {
+        // Known FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn weights_fingerprint_round_trips_and_discriminates() {
+        let mut rng = Rng::new(331);
+        let a = TernaryMatrix::random(32, 24, 1.0 / 3.0, &mut rng);
+        let b = TernaryMatrix::random(32, 24, 1.0 / 3.0, &mut rng);
+        let fa = ternary_fingerprint(&a);
+        assert_ne!(fa, 0, "0 is reserved for unbound");
+        assert_eq!(fa, ternary_fingerprint(&a), "deterministic");
+        assert_ne!(fa, ternary_fingerprint(&b), "different weights, different fp");
+
+        let art = PlanArtifact::ternary("t", TernaryRsrIndex::preprocess(&a, 3), 1.0)
+            .unwrap()
+            .with_weights_fingerprint(fa);
+        let mut buf = Vec::new();
+        art.write_to(&mut buf).unwrap();
+        let back = PlanArtifact::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(back.meta.weights_fp, fa);
+    }
+}

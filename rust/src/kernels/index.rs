@@ -1,7 +1,16 @@
 //! The *block index* — the output of preprocessing (paper Algorithm 1)
 //! and the only thing the inference algorithms need. Replacing the
 //! weight matrix with its index is what yields the `O(n²/log n)` space
-//! bound of Theorem 3.6 and the Fig 5 memory numbers.
+//! bound of Theorem 3.6 and the Fig 5 memory numbers; executing
+//! against it is what yields the `O(n²/log n)` time bound of
+//! Theorem 4.4 (see [`super::rsr`] / [`super::rsrpp`]).
+//!
+//! Because the weights of a trained binary/ternary network are fixed,
+//! an index is built **once** per matrix and reused for every
+//! inference — in memory via [`crate::runtime::PlanStore`], or across
+//! processes via the `.rsrz` artifacts of [`super::artifact`]. The
+//! `.rsi` stream format here is the raw-index building block the
+//! checksummed `.rsrz` envelope extends.
 //!
 //! Also home to [`BinMatrix`], the `2^k × k` enumeration matrix
 //! `Bin_[k]` used by Step 2 of RSR.
@@ -95,6 +104,34 @@ pub struct RsrIndex {
 
 impl RsrIndex {
     /// Paper Algorithm 1: block, permute, segment.
+    ///
+    /// Splits `b` into `⌈m/k⌉` blocks of `k` columns, sorts each
+    /// block's rows into binary row order `σᵢ`, and records the full
+    /// segmentation list `Lᵢ` of run boundaries. `O(n·m)` time, run
+    /// once per (fixed) weight matrix; the index then answers every
+    /// `v·B` in `O(n²/log n)` via [`super::rsr::RsrPlan`] or
+    /// [`super::rsrpp::RsrPlusPlusPlan`].
+    ///
+    /// The paper's §3.1 running example (block 1 is Example 3.3):
+    ///
+    /// ```
+    /// use rsr::kernels::{BinaryMatrix, RsrIndex};
+    ///
+    /// let b = BinaryMatrix::from_rows(&[
+    ///     &[0, 1, 1, 1, 0, 1],
+    ///     &[0, 0, 0, 1, 1, 1],
+    ///     &[0, 1, 1, 1, 1, 0],
+    ///     &[1, 1, 0, 0, 1, 0],
+    ///     &[0, 0, 1, 1, 0, 1],
+    ///     &[0, 0, 0, 0, 1, 0],
+    /// ]);
+    /// let idx = RsrIndex::preprocess(&b, 2);
+    /// assert_eq!(idx.blocks.len(), 3);
+    /// // Example 3.3: σ₁ = [1,4,5,0,2,3], L₁ = [0,3,5,5,6].
+    /// assert_eq!(idx.blocks[0].sigma, vec![1, 4, 5, 0, 2, 3]);
+    /// assert_eq!(idx.blocks[0].seg, vec![0, 3, 5, 5, 6]);
+    /// idx.validate().unwrap();
+    /// ```
     pub fn preprocess(b: &BinaryMatrix, k: usize) -> Self {
         let geom = column_blocks(b.cols(), k);
         let blocks = geom

@@ -25,7 +25,14 @@
 //! * [`tensorized`] — the one-hot-matrix formulation used for the GPU
 //!   path (paper Appendix C.1.II / E.2–E.3),
 //! * [`qbit`] — the q-bit generalization (paper Appendix D.3).
+//!
+//! Because the weight matrices are fixed, preprocessing is a one-time
+//! cost: indices can be persisted to versioned, checksummed `.rsrz`
+//! plan artifacts ([`artifact`]) and shared across processes and
+//! threads through [`crate::runtime::PlanStore`]
+//! (compile once, serve many).
 
+pub mod artifact;
 pub mod batched;
 pub mod binary;
 pub mod blocking;
@@ -42,6 +49,7 @@ pub mod standard;
 pub mod tensorized;
 pub mod ternary;
 
+pub use artifact::{ArtifactKind, ArtifactMeta, ArtifactPayload, PlanArtifact};
 pub use binary::BinaryMatrix;
 pub use index::{BinMatrix, BlockIndex, RsrIndex, TernaryRsrIndex};
 pub use rsr::{rsr_mul, RsrPlan};

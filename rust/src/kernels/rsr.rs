@@ -8,7 +8,11 @@
 //! 2. **Block product**: `rᵢ = u · Bin_[k]`, `O(k·2^k)`.
 //!
 //! Total `O((n/k)(n + k·2^k))`; with `k = log(n/log n)` that is
-//! `O(n²/(log n − log log n))` (Theorem 4.3).
+//! `O(n²/(log n − log log n))` (Theorem 4.3) — strictly below the
+//! `O(n²)` of a dense multiply, and within a log-log factor of the
+//! `O(n²/log n)` RSR++ achieves by replacing step 2 with Algorithm 3
+//! ([`super::rsrpp`]). Preprocessing runs once per fixed weight matrix
+//! ([`RsrIndex::preprocess`]); plans amortize it over every inference.
 
 use super::index::{BlockIndex, RsrIndex, TernaryRsrIndex};
 use crate::error::{Error, Result};
@@ -111,7 +115,30 @@ impl RsrPlan {
         &self.index
     }
 
-    /// `out = v · B` using RSR (Algorithm 2). `out.len() == cols`.
+    /// `out = v · B` using RSR (Algorithm 2). `v.len() == rows`,
+    /// `out.len() == cols`; shapes are checked, the hot loop is not.
+    ///
+    /// Preprocess once, execute many times:
+    ///
+    /// ```
+    /// use rsr::kernels::standard::standard_mul_binary;
+    /// use rsr::kernels::{BinaryMatrix, RsrIndex, RsrPlan};
+    /// use rsr::util::rng::Rng;
+    ///
+    /// let mut rng = Rng::new(7);
+    /// let b = BinaryMatrix::random(64, 64, 0.5, &mut rng);
+    /// let mut plan = RsrPlan::new(RsrIndex::preprocess(&b, 4)).unwrap();
+    ///
+    /// let mut out = vec![0.0; 64];
+    /// for _ in 0..3 {
+    ///     let v = rng.f32_vec(64, -1.0, 1.0);
+    ///     plan.execute(&v, &mut out).unwrap();
+    ///     let expect = standard_mul_binary(&v, &b);
+    ///     for (g, e) in out.iter().zip(&expect) {
+    ///         assert!((g - e).abs() < 1e-3 * (1.0 + e.abs()));
+    ///     }
+    /// }
+    /// ```
     pub fn execute(&mut self, v: &[f32], out: &mut [f32]) -> Result<()> {
         check_shapes(&self.index, v, out)?;
         for blk in &self.index.blocks {

@@ -1,6 +1,13 @@
 //! Ternary matrices `A ∈ {-1,0,1}^{n×m}` and the binary decomposition
 //! of Proposition 2.1: `A = B⁽¹⁾ − B⁽²⁾` with `B⁽¹⁾ = [A == 1]` and
 //! `B⁽²⁾ = [A == -1]`.
+//!
+//! The decomposition is what carries the paper's binary-matrix results
+//! over to 1.58-bit networks: `v·A = v·B⁽¹⁾ − v·B⁽²⁾`, so two RSR
+//! indices give the ternary multiply in the same `O(n²/log n)` time —
+//! at twice the constant, which the fused backend
+//! ([`crate::kernels::fused`]) and the shared plans of
+//! [`crate::runtime::PlanStore`] both exploit.
 
 use super::binary::BinaryMatrix;
 use crate::util::rng::Rng;

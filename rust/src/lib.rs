@@ -11,11 +11,16 @@
 //!
 //! The crate is the Layer-3 coordinator of a three-layer stack:
 //!
-//! * [`kernels`] — the paper's algorithms and every multiply backend,
+//! * [`kernels`] — the paper's algorithms, every multiply backend, and
+//!   the versioned `.rsrz` plan-artifact format
+//!   ([`kernels::artifact`]),
 //! * [`model`] — a 1.58-bit (ternary) transformer substrate whose
-//!   `BitLinear` layers dispatch to any backend,
-//! * [`runtime`] — loads AOT-compiled XLA artifacts (HLO text produced
-//!   by the python/JAX/Pallas build step) and executes them via PJRT,
+//!   `BitLinear` layers dispatch to any backend or execute shared
+//!   store-compiled plans,
+//! * [`runtime`] — the [`runtime::PlanStore`] (compile-once/serve-many
+//!   plan registry shared by every worker and replica) and the PJRT
+//!   engine that executes AOT-compiled XLA artifacts (HLO text produced
+//!   by the python/JAX/Pallas build step; `pjrt` feature),
 //! * [`serving`] — request router, dynamic batcher and prefill/decode
 //!   scheduler serving the model over TCP,
 //! * [`bench`] — the harness regenerating every table and figure of the

@@ -4,7 +4,9 @@
 //! rsr preprocess  --n 4096 --k 0 --out idx.rsi        # Algorithm 1
 //! rsr multiply    --n 4096 --backend rsr++ [--check]  # one product
 //! rsr generate-model --preset tiny --out model.rtw    # synthetic 1.58-bit model
-//! rsr serve       --model model.rtw --addr 0.0.0.0:7878 [--replicas 2]
+//! rsr pack        --model model.rtw --out plans/      # compile-once: .rsrz plan artifacts
+//! rsr inspect     --plans plans/ [--deep]             # artifact stats / integrity
+//! rsr serve       --model model.rtw [--plans plans/] --addr 0.0.0.0:7878 [--replicas 2]
 //! rsr client      --addr 127.0.0.1:7878 --prompt "What is the capital of France?"
 //! rsr experiment  fig4|fig5|fig6|fig9|fig10|fig11|fig12|table1|ablations [--full]
 //! rsr selfcheck                                        # cross-backend sanity
@@ -14,10 +16,13 @@
 //! (clap is unavailable in the offline registry; parsing is manual.)
 
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
+use rsr::bench::harness::Table;
 use rsr::error::{Error, Result};
+use rsr::kernels::artifact::{ternary_fingerprint, PlanArtifact};
 use rsr::kernels::index::{RsrIndex, TernaryRsrIndex};
 use rsr::kernels::optimal_k::{optimal_k_rsr, optimal_k_rsrpp};
 use rsr::kernels::{Backend, BinaryMatrix, TernaryMatrix};
@@ -76,6 +81,8 @@ fn run(args: &[String]) -> Result<()> {
         "preprocess" => cmd_preprocess(&f),
         "multiply" => cmd_multiply(&f),
         "generate-model" => cmd_generate_model(&f),
+        "pack" => cmd_pack(&f),
+        "inspect" => cmd_inspect(&f),
         "serve" => cmd_serve(&f),
         "client" => cmd_client(&f),
         "experiment" => cmd_experiment(rest, &f),
@@ -96,7 +103,9 @@ fn print_help() {
          preprocess     --n N [--k K] [--seed S] [--out FILE]   build a block index\n  \
          multiply       --n N [--backend B] [--k K] [--check]   run one v·A product\n  \
          generate-model [--preset P] [--seed S] --out FILE      synthetic 1.58-bit model\n  \
-         serve          --model FILE [--addr A] [--replicas R] [--workers W] [--backend B]\n  \
+         pack           --model FILE | --n N  --out DIR [--k K] preprocess to .rsrz artifacts\n  \
+         inspect        --plans DIR | --file FILE [--deep]      plan artifact stats\n  \
+         serve          --model FILE [--plans DIR] [--addr A] [--replicas R] [--workers W] [--backend B]\n  \
          client         [--addr A] --prompt TEXT [--max-new N]\n  \
          experiment     <fig4|fig5|fig6|fig9|fig10|fig11|fig12|table1|ablations|all> [--full]\n  \
          selfcheck                                              cross-backend equality\n  \
@@ -216,21 +225,51 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
         .transpose()?
         .unwrap_or(Backend::RsrPlusPlus);
 
+    let plans = f.get("plans").map(PathBuf::from);
+    let k = get_usize(f, "k", 0)?;
+
     println!("loading {model_path}...");
     let weights = Arc::new(ModelWeights::load(model_path)?);
+
+    // One process-wide plan store on the RSR++ path: every replica and
+    // every worker thread shares the same compiled plans (the
+    // compile-once/serve-many contract; the (plans, backend) policy
+    // lives in InferenceEngine::build_plan_store).
+    let cfg = EngineConfig { workers, backend, k, plan_dir: plans.clone(), ..Default::default() };
+    if let Some(dir) = &plans {
+        println!("opening plan artifacts in {}...", dir.display());
+    }
+    let t0 = std::time::Instant::now();
+    let store = InferenceEngine::build_plan_store(&weights, &cfg)?;
+    if let Some(s) = &store {
+        if plans.is_some() {
+            println!(
+                "loaded {} plans ({:.1} MB shared index) in {:.1}ms",
+                s.loaded_len(),
+                s.index_bytes() as f64 / 1048576.0,
+                t0.elapsed().as_secs_f64() * 1e3
+            );
+        }
+    }
+
     println!(
-        "model {} loaded; preprocessing weights on {} replica(s) x {} worker(s), backend {}",
+        "model {} loaded; {} replica(s) x {} worker(s), backend {}{}",
         weights.config.name,
         replicas,
         workers,
-        backend.name()
+        backend.name(),
+        if store.is_some() { " (shared plan store)" } else { "" }
     );
     let engines: Vec<Arc<InferenceEngine>> = (0..replicas)
         .map(|_| {
-            InferenceEngine::start(
-                Arc::clone(&weights),
-                EngineConfig { workers, backend, ..Default::default() },
-            )
+            match &store {
+                Some(s) => InferenceEngine::start_with_store(
+                    Arc::clone(&weights),
+                    cfg.clone(),
+                    Arc::clone(s),
+                ),
+                None => InferenceEngine::start(Arc::clone(&weights), cfg.clone()),
+            }
             .map(Arc::new)
         })
         .collect::<Result<_>>()?;
@@ -294,6 +333,150 @@ fn cmd_experiment(rest: &[String], f: &HashMap<String, String>) -> Result<()> {
         other => return Err(Error::Config(format!("unknown experiment {other}"))),
     }
     Ok(())
+}
+
+/// Preprocess one ternary matrix (paper Algorithm 1), wrap it in a
+/// `.rsrz` artifact, save it, and account for it in the report table.
+fn pack_one(
+    out_dir: &Path,
+    name: &str,
+    m: &TernaryMatrix,
+    scale: f32,
+    k_flag: usize,
+    table: &mut Table,
+    totals: &mut (usize, usize),
+) -> Result<()> {
+    let k = if k_flag == 0 { optimal_k_rsrpp(m.rows()) } else { k_flag };
+    let t0 = std::time::Instant::now();
+    let idx = TernaryRsrIndex::preprocess(m, k);
+    let art = PlanArtifact::ternary(name, idx, scale)?
+        .with_weights_fingerprint(ternary_fingerprint(m));
+    art.save(out_dir.join(format!("{name}.rsrz")))?;
+    let meta = &art.meta;
+    table.row(&[
+        name.to_string(),
+        format!("{}x{}", meta.rows, meta.cols),
+        k.to_string(),
+        human_bytes(meta.payload_bytes),
+        human_bytes(meta.dense_f32_bytes()),
+        format!("{:.3}", meta.ratio_vs_dense()),
+        format!("{:.1}ms", t0.elapsed().as_secs_f64() * 1e3),
+    ]);
+    totals.0 += meta.payload_bytes;
+    totals.1 += meta.dense_f32_bytes();
+    Ok(())
+}
+
+fn cmd_pack(f: &HashMap<String, String>) -> Result<()> {
+    let out = f
+        .get("out")
+        .ok_or_else(|| Error::Config("pack requires --out DIR".into()))?;
+    let out = PathBuf::from(out);
+    std::fs::create_dir_all(&out)?;
+    let k_flag = get_usize(f, "k", 0)?;
+    // Fail before any preprocessing: k > 16 would panic in blocking and
+    // could never be loaded back anyway.
+    if k_flag > 16 {
+        return Err(Error::Config(format!(
+            "--k {k_flag} is out of range (1..=16, or 0 for the analytic optimum)"
+        )));
+    }
+
+    let mut table =
+        Table::new(&["name", "shape", "k", "artifact", "dense f32", "ratio", "preprocess"]);
+    let mut totals = (0usize, 0usize);
+    if let Some(path) = f.get("model") {
+        println!("loading {path}...");
+        let weights = ModelWeights::load(path)?;
+        for (name, m, scale) in weights.named_matrices() {
+            pack_one(&out, &name, m, scale, k_flag, &mut table, &mut totals)?;
+        }
+    } else {
+        let n = get_usize(f, "n", 0)?;
+        if n == 0 {
+            return Err(Error::Config("pack requires --model FILE or --n N".into()));
+        }
+        let seed = get_usize(f, "seed", 42)? as u64;
+        let mut rng = Rng::new(seed);
+        let a = TernaryMatrix::random(n, n, 1.0 / 3.0, &mut rng);
+        pack_one(&out, &format!("synthetic_n{n}"), &a, 1.0, k_flag, &mut table, &mut totals)?;
+    }
+    table.print(&format!("packed plan artifacts → {}", out.display()));
+    println!(
+        "\ntotal: {} of .rsrz artifacts vs {} dense f32 (ratio {:.3}) — \
+         preprocessing is now an offline, one-time cost",
+        human_bytes(totals.0),
+        human_bytes(totals.1),
+        totals.0 as f64 / totals.1 as f64
+    );
+    Ok(())
+}
+
+fn cmd_inspect(f: &HashMap<String, String>) -> Result<()> {
+    let deep = f.contains_key("deep");
+    let mut paths: Vec<PathBuf> = Vec::new();
+    if let Some(file) = f.get("file") {
+        paths.push(PathBuf::from(file));
+    } else if let Some(dir) = f.get("plans") {
+        for entry in std::fs::read_dir(dir)? {
+            let p = entry?.path();
+            if p.extension().is_some_and(|e| e == "rsrz") {
+                paths.push(p);
+            }
+        }
+        paths.sort();
+        if paths.is_empty() {
+            return Err(Error::Config(format!("no .rsrz artifacts in {dir}")));
+        }
+    } else {
+        return Err(Error::Config("inspect requires --plans DIR or --file FILE".into()));
+    }
+
+    let mut table = Table::new(&[
+        "name", "kind", "shape", "k", "scale", "index bytes", "dense f32", "packed", "ratio",
+    ]);
+    let mut totals = (0usize, 0usize);
+    for p in &paths {
+        // --deep decodes the payload, verifies the checksum and
+        // re-validates every structural invariant; the default reads
+        // only the header.
+        let meta = if deep { PlanArtifact::load(p)?.meta } else { PlanArtifact::peek(p)? };
+        table.row(&[
+            meta.name.clone(),
+            meta.kind.name().to_string(),
+            format!("{}x{}", meta.rows, meta.cols),
+            meta.k.to_string(),
+            format!("{:.4}", meta.scale),
+            human_bytes(meta.payload_bytes),
+            human_bytes(meta.dense_f32_bytes()),
+            human_bytes(meta.packed_bytes()),
+            format!("{:.3}", meta.ratio_vs_dense()),
+        ]);
+        totals.0 += meta.payload_bytes;
+        totals.1 += meta.dense_f32_bytes();
+    }
+    table.print(if deep {
+        "plan artifacts (deep: payload decoded, checksum + invariants verified)"
+    } else {
+        "plan artifacts"
+    });
+    println!(
+        "\ntotal index {} vs dense f32 {} — ratio {:.3}",
+        human_bytes(totals.0),
+        human_bytes(totals.1),
+        totals.0 as f64 / totals.1 as f64
+    );
+    Ok(())
+}
+
+fn human_bytes(b: usize) -> String {
+    if b >= 1 << 20 {
+        format!("{:.2} MB", b as f64 / 1048576.0)
+    } else if b >= 1024 {
+        format!("{:.1} KB", b as f64 / 1024.0)
+    } else {
+        format!("{b} B")
+    }
 }
 
 fn cmd_selfcheck() -> Result<()> {

@@ -9,6 +9,8 @@
 //! The multiply dispatches to a prepared backend plan; all backends are
 //! bit-exact against each other up to f32 re-association.
 
+use std::sync::Arc;
+
 use crate::error::Result;
 use crate::kernels::index::TernaryRsrIndex;
 use crate::kernels::parallel::ParallelTernaryRsrPlan;
@@ -17,6 +19,7 @@ use crate::kernels::rsrpp::TernaryRsrPlusPlusPlan;
 use crate::kernels::standard::{packed_mul_ternary, standard_mul_ternary_i8};
 use crate::kernels::tensorized::TernaryTensorizedIndex;
 use crate::kernels::{Backend, BinaryMatrix, TernaryMatrix};
+use crate::runtime::plan_store::{PlanScratch, SharedTernaryPlan};
 
 /// Prepared execution state for one backend.
 enum Prepared {
@@ -34,6 +37,11 @@ enum Prepared {
     Tensorized(TernaryTensorizedIndex),
     /// Fused scatter + single-fold hot path (§Perf).
     Fused(crate::kernels::fused::FusedTernaryPlan),
+    /// A store-shared RSR++ plan: the index lives behind an `Arc`
+    /// (built once per process by a
+    /// [`PlanStore`](crate::runtime::PlanStore)), only the scratch is
+    /// owned by this layer instance.
+    Shared { plan: Arc<SharedTernaryPlan>, scratch: PlanScratch },
 }
 
 /// A ternary linear layer with a pluggable multiply backend.
@@ -83,6 +91,22 @@ impl BitLinear {
         Ok(Self { in_dim, out_dim, scale, backend, prepared })
     }
 
+    /// Prepare a layer around a plan compiled elsewhere (a
+    /// [`PlanStore`](crate::runtime::PlanStore) entry). The expensive
+    /// index is shared; this instance owns only its per-thread scratch.
+    /// Executes via RSR++ — bit-identical to `Backend::RsrPlusPlus`.
+    pub fn from_shared(plan: Arc<SharedTernaryPlan>, scale: f32) -> Self {
+        let (in_dim, out_dim) = (plan.rows(), plan.cols());
+        let scratch = plan.scratch();
+        Self {
+            in_dim,
+            out_dim,
+            scale,
+            backend: Backend::RsrPlusPlus,
+            prepared: Prepared::Shared { plan, scratch },
+        }
+    }
+
     /// Input width.
     pub fn in_dim(&self) -> usize {
         self.in_dim
@@ -111,6 +135,9 @@ impl BitLinear {
             Prepared::Parallel(plan) => plan.index_bytes(),
             Prepared::Tensorized(t) => t.plus.bytes() + t.minus.bytes(),
             Prepared::Fused(plan) => plan.bytes(),
+            // The index is shared process-wide; report it in full here
+            // (Fig 5 semantics) — per-instance cost is just the scratch.
+            Prepared::Shared { plan, .. } => plan.index_bytes(),
         }
     }
 
@@ -132,6 +159,7 @@ impl BitLinear {
             Prepared::Parallel(plan) => plan.execute(x, out)?,
             Prepared::Tensorized(t) => t.execute(x, out)?,
             Prepared::Fused(plan) => plan.execute(x, out)?,
+            Prepared::Shared { plan, scratch } => plan.execute(scratch, x, out)?,
         }
         if self.scale != 1.0 {
             for o in out.iter_mut() {
@@ -169,6 +197,32 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn shared_plan_layer_matches_owned_rsrpp_layer() {
+        let mut rng = Rng::new(179);
+        let w = TernaryMatrix::random(96, 64, 1.0 / 3.0, &mut rng);
+        let x = rng.f32_vec(96, -1.0, 1.0);
+        let mut owned = BitLinear::new(w.clone(), 0.5, Backend::RsrPlusPlus, 4).unwrap();
+        let mut expect = vec![0.0; 64];
+        owned.forward(&x, &mut expect).unwrap();
+
+        let plan =
+            Arc::new(SharedTernaryPlan::new(TernaryRsrIndex::preprocess(&w, 4)).unwrap());
+        let mut shared = BitLinear::from_shared(Arc::clone(&plan), 0.5);
+        assert_eq!(shared.in_dim(), 96);
+        assert_eq!(shared.out_dim(), 64);
+        assert_eq!(shared.backend(), Backend::RsrPlusPlus);
+        let mut got = vec![0.0; 64];
+        shared.forward(&x, &mut got).unwrap();
+        assert_eq!(got, expect, "shared layer must be bit-identical to owned layer");
+
+        // A second instance over the SAME Arc'd plan works independently.
+        let mut shared2 = BitLinear::from_shared(plan, 0.5);
+        let mut got2 = vec![0.0; 64];
+        shared2.forward(&x, &mut got2).unwrap();
+        assert_eq!(got2, expect);
     }
 
     #[test]

@@ -72,6 +72,107 @@ impl Transformer {
         })
     }
 
+    /// Prepare a model whose `BitLinear` layers execute **shared**
+    /// plans from a [`PlanStore`](crate::runtime::PlanStore) instead of
+    /// preprocessing their own. The store resolves each layer name
+    /// (`layer{i}.wq` … `lm_head`, see
+    /// [`ModelWeights::named_matrices`]) once per process; this
+    /// instance holds only per-thread scratch, so N workers cost one
+    /// index, not N. Executes via RSR++ — outputs are bit-identical to
+    /// [`from_weights`](Self::from_weights) with
+    /// `Backend::RsrPlusPlus`.
+    ///
+    /// `weights` still provides everything that is not a ternary
+    /// matmul: config, embeddings, norms. Each plan is validated
+    /// against the weights — shape *and* weights fingerprint (when the
+    /// artifact carries one) — so a mismatched or stale artifact
+    /// directory fails here, not at request time.
+    pub fn from_plan_store(
+        weights: &ModelWeights,
+        store: &crate::runtime::PlanStore,
+    ) -> Result<Self> {
+        let cfg = weights.config.clone();
+        cfg.validate()?;
+        // Fingerprints only carry information for disk-backed stores
+        // (a Model-backed store hashed these same matrices itself), and
+        // a store the engine already verified as a whole
+        // (`PlanStore::verify_fingerprints`) needn't be re-hashed per
+        // worker.
+        let verify_fp = store.is_artifact_backed() && !store.fingerprints_verified();
+        let get = |name: &str,
+                   m: &crate::kernels::TernaryMatrix,
+                   scale: f32|
+         -> Result<BitLinear> {
+            let entry = store.get(name)?;
+            if entry.shape() != (m.rows(), m.cols()) {
+                return Err(Error::InvalidModel(format!(
+                    "plan {name} has shape {:?}, model expects ({}, {})",
+                    entry.shape(),
+                    m.rows(),
+                    m.cols()
+                )));
+            }
+            // The fingerprint binds the ternary entries; the scale is
+            // checked separately — a recalibrated checkpoint can change
+            // β while the {−1,0,1} pattern stays identical.
+            if entry.scale != scale {
+                return Err(Error::InvalidModel(format!(
+                    "plan {name} was packed with scale {} but the model carries {scale} \
+                     (stale artifacts — re-run `rsr pack`)",
+                    entry.scale
+                )));
+            }
+            // Same shapes do not imply same weights: a plans directory
+            // packed from another checkpoint of this architecture must
+            // not silently serve its logits.
+            if verify_fp
+                && entry.weights_fp != 0
+                && entry.weights_fp != crate::kernels::artifact::ternary_fingerprint(m)
+            {
+                return Err(Error::InvalidModel(format!(
+                    "plan {name} was packed from different weights \
+                     (fingerprint mismatch — re-run `rsr pack`)"
+                )));
+            }
+            // The model's own scale is authoritative at execution time.
+            Ok(BitLinear::from_shared(entry.ternary()?, scale))
+        };
+        let rope = Rope::new(cfg.head_dim(), cfg.max_seq_len, cfg.rope_theta);
+        let mut blocks = Vec::with_capacity(cfg.n_layers);
+        for (i, lw) in weights.layers.iter().enumerate() {
+            let attn = Attention::new(
+                &cfg,
+                get(&format!("layer{i}.wq"), &lw.wq, lw.scales[0])?,
+                get(&format!("layer{i}.wk"), &lw.wk, lw.scales[1])?,
+                get(&format!("layer{i}.wv"), &lw.wv, lw.scales[2])?,
+                get(&format!("layer{i}.wo"), &lw.wo, lw.scales[3])?,
+            );
+            let mlp = Mlp::new(
+                get(&format!("layer{i}.gate"), &lw.gate, lw.scales[4])?,
+                get(&format!("layer{i}.up"), &lw.up, lw.scales[5])?,
+                get(&format!("layer{i}.down"), &lw.down, lw.scales[6])?,
+            );
+            blocks.push(Block::new(
+                RmsNorm::new(lw.attn_norm.clone(), 1e-6),
+                attn,
+                RmsNorm::new(lw.mlp_norm.clone(), 1e-6),
+                mlp,
+            ));
+        }
+        let lm_head = get("lm_head", &weights.lm_head, weights.lm_head_scale)?;
+        Ok(Self {
+            embedding: weights.embedding.clone(),
+            final_norm: RmsNorm::new(weights.final_norm.clone(), 1e-6),
+            lm_head,
+            rope,
+            hidden: vec![0.0; cfg.d_model],
+            logits: vec![0.0; cfg.vocab_size],
+            blocks,
+            backend: Backend::RsrPlusPlus,
+            config: cfg,
+        })
+    }
+
     /// Architecture.
     pub fn config(&self) -> &ModelConfig {
         &self.config
@@ -202,6 +303,45 @@ mod tests {
         for pair in outputs.windows(2) {
             assert_eq!(pair[0].1, pair[1].1, "{} vs {}", pair[0].0, pair[1].0);
         }
+    }
+
+    #[test]
+    fn plan_store_model_matches_owned_model_token_for_token() {
+        use std::sync::Arc;
+        let w = tiny_weights();
+        let store = crate::runtime::PlanStore::for_model(Arc::new(w.clone()), 0);
+        let mut owned = Transformer::from_weights(&w, Backend::RsrPlusPlus, 0).unwrap();
+        let mut shared = Transformer::from_plan_store(&w, &store).unwrap();
+        let prompt = [5u32, 6, 7];
+        let mut rng = Rng::new(3);
+        let a = owned.generate(&prompt, 6, Sampler::Greedy, &mut rng).unwrap();
+        let mut rng = Rng::new(3);
+        let b = shared.generate(&prompt, 6, Sampler::Greedy, &mut rng).unwrap();
+        assert_eq!(a, b, "store-served model must match owned model");
+        // Every ternary matrix resolved exactly once.
+        assert_eq!(store.loaded_len(), w.config.n_layers * 7 + 1);
+    }
+
+    #[test]
+    fn plan_store_shape_mismatch_fails_at_build() {
+        let w = tiny_weights();
+        let store = crate::runtime::PlanStore::new();
+        // Insert one wrong-shaped plan under a real layer name.
+        let mut rng = Rng::new(5);
+        let bad = crate::kernels::TernaryMatrix::random(8, 8, 1.0 / 3.0, &mut rng);
+        store
+            .insert_ternary(
+                "layer0.wq",
+                crate::kernels::TernaryRsrIndex::preprocess(&bad, 2),
+                2,
+                1.0,
+            )
+            .unwrap();
+        let err = match Transformer::from_plan_store(&w, &store) {
+            Err(e) => e,
+            Ok(_) => panic!("expected a shape error"),
+        };
+        assert!(err.to_string().contains("shape"), "{err}");
     }
 
     #[test]

@@ -197,6 +197,46 @@ impl ModelWeights {
         Ok(Self { config, embedding, layers, final_norm, lm_head, lm_head_scale })
     }
 
+    /// Every ternary weight matrix with its stable artifact name and
+    /// per-tensor scale: `layer{i}.{wq,wk,wv,wo,gate,up,down}` plus
+    /// `lm_head`. These names key the
+    /// [`PlanStore`](crate::runtime::PlanStore) and the `.rsrz` files
+    /// `rsr pack` writes, so pack-time and serve-time agree by
+    /// construction.
+    pub fn named_matrices(&self) -> Vec<(String, &TernaryMatrix, f32)> {
+        let mut out = Vec::with_capacity(self.layers.len() * 7 + 1);
+        for (i, l) in self.layers.iter().enumerate() {
+            let fields: [(&str, &TernaryMatrix, f32); 7] = [
+                ("wq", &l.wq, l.scales[0]),
+                ("wk", &l.wk, l.scales[1]),
+                ("wv", &l.wv, l.scales[2]),
+                ("wo", &l.wo, l.scales[3]),
+                ("gate", &l.gate, l.scales[4]),
+                ("up", &l.up, l.scales[5]),
+                ("down", &l.down, l.scales[6]),
+            ];
+            for (field, m, s) in fields {
+                out.push((format!("layer{i}.{field}"), m, s));
+            }
+        }
+        out.push(("lm_head".to_string(), &self.lm_head, self.lm_head_scale));
+        out
+    }
+
+    /// All artifact names, in [`named_matrices`](Self::named_matrices)
+    /// order — what a `PlanStore` must resolve to serve this model.
+    pub fn matrix_names(&self) -> Vec<String> {
+        self.named_matrices().into_iter().map(|(n, _, _)| n).collect()
+    }
+
+    /// Look up one matrix by artifact name.
+    pub fn matrix(&self, name: &str) -> Option<(&TernaryMatrix, f32)> {
+        self.named_matrices()
+            .into_iter()
+            .find(|(n, _, _)| n == name)
+            .map(|(_, m, s)| (m, s))
+    }
+
     /// Save to a file.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
@@ -298,6 +338,20 @@ mod tests {
             assert_eq!(a.attn_norm, b.attn_norm);
         }
         assert_eq!(w.lm_head, back.lm_head);
+    }
+
+    #[test]
+    fn named_matrices_cover_every_tensor() {
+        let w = ModelWeights::generate(ModelConfig::tiny(), 19).unwrap();
+        let names = w.matrix_names();
+        assert_eq!(names.len(), w.config.n_layers * 7 + 1);
+        assert_eq!(names[0], "layer0.wq");
+        assert_eq!(names.last().unwrap().as_str(), "lm_head");
+        let (m, s) = w.matrix("layer1.down").unwrap();
+        assert_eq!(m.rows(), w.config.d_ff);
+        assert_eq!(m.cols(), w.config.d_model);
+        assert_eq!(s, w.layers[1].scales[6]);
+        assert!(w.matrix("layer9.wq").is_none());
     }
 
     #[test]

@@ -1,13 +1,28 @@
-//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
-//! `python/compile/aot.py` (`make artifacts`) and executes them on the
-//! XLA CPU client. This is the only place the `xla` crate is touched;
-//! python never runs on the request path.
+//! Layer-2 runtime: compiled-plan registries shared by every inference
+//! path.
 //!
-//! The dense-matvec artifacts serve as the *optimized-library baseline*
-//! (the NumPy/cuBLAS analog) in Fig 11 and the serving comparisons; the
-//! `rsr_matvec_*` artifact is the Layer-1 Pallas kernel lowered through
-//! Layer-2, executed from rust with rust-computed block keys — the
-//! full three-layer integration.
+//! Two registries live here:
+//!
+//! * [`plan_store`] — the [`PlanStore`](plan_store::PlanStore): a
+//!   thread-safe, lazily-populated cache of **RSR plans** (preprocessed
+//!   block indices, paper Algorithm 1) keyed by layer name. Plans are
+//!   compiled once — from weights in memory or from versioned `.rsrz`
+//!   artifacts on disk — and shared across every serving worker and
+//!   replica; callers hold per-thread execution scratch. This is the
+//!   crate's compile-once/serve-many backbone.
+//! * [`Engine`] — the PJRT engine: loads the AOT-compiled HLO-text
+//!   artifacts produced by `python/compile/aot.py` (`make artifacts`)
+//!   and executes them on the XLA CPU client. The dense-matvec
+//!   artifacts serve as the *optimized-library baseline* (the
+//!   NumPy/cuBLAS analog) in Fig 11; the `rsr_matvec_*` artifact is the
+//!   Layer-1 Pallas kernel lowered through Layer-2, executed from rust
+//!   with rust-computed block keys.
+//!
+//! PJRT needs the external `xla` crate, which the offline environment
+//! cannot fetch; every call into it is gated behind the `pjrt` cargo
+//! feature. Without the feature [`Engine`] still parses manifests (so
+//! `rsr artifacts` works) but refuses to compile or execute, and
+//! [`pjrt_enabled`] reports `false` so tests and benches skip cleanly.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -16,6 +31,15 @@ use std::rc::Rc;
 
 use crate::error::{Error, Result};
 use crate::util::json::Json;
+
+pub mod plan_store;
+
+pub use plan_store::{PlanEntry, PlanScratch, PlanStore, SharedRsrPlan, SharedTernaryPlan};
+
+/// Whether this build can execute AOT artifacts through PJRT.
+pub fn pjrt_enabled() -> bool {
+    cfg!(feature = "pjrt")
+}
 
 /// Element type of an artifact tensor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -75,6 +99,7 @@ pub enum Tensor {
 }
 
 impl Tensor {
+    #[cfg(feature = "pjrt")]
     fn to_literal(&self) -> Result<xla::Literal> {
         let lit = match self {
             Tensor::F32(data, shape) => {
@@ -104,6 +129,7 @@ impl Tensor {
 /// A compiled artifact ready to execute.
 pub struct Executable {
     spec: ArtifactSpec,
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
 }
 
@@ -113,9 +139,8 @@ impl Executable {
         &self.spec
     }
 
-    /// Execute with host tensors, returning the (single-output) result
-    /// as f32. Validates shapes against the manifest.
-    pub fn run_f32(&self, inputs: &[Tensor]) -> Result<Vec<f32>> {
+    /// Validate input arity + shapes against the manifest.
+    fn check_inputs(&self, inputs: &[Tensor]) -> Result<()> {
         if inputs.len() != self.spec.inputs.len() {
             return Err(Error::Artifact(format!(
                 "{}: {} inputs given, {} expected",
@@ -132,12 +157,31 @@ impl Executable {
                 )));
             }
         }
+        Ok(())
+    }
+
+    /// Execute with host tensors, returning the (single-output) result
+    /// as f32. Validates shapes against the manifest.
+    #[cfg(feature = "pjrt")]
+    pub fn run_f32(&self, inputs: &[Tensor]) -> Result<Vec<f32>> {
+        self.check_inputs(inputs)?;
         let literals: Vec<xla::Literal> =
             inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
         let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
         // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
         let out = result.to_tuple1()?;
         Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute with host tensors — unavailable in this build: requires
+    /// the `pjrt` feature (see the module docs).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn run_f32(&self, inputs: &[Tensor]) -> Result<Vec<f32>> {
+        self.check_inputs(inputs)?;
+        Err(Error::Artifact(format!(
+            "{}: executing AOT artifacts requires the `pjrt` feature",
+            self.spec.name
+        )))
     }
 }
 
@@ -148,18 +192,20 @@ impl Executable {
 ///
 /// `PjRtClient` is `Rc`-based and therefore **not `Send`**: an `Engine`
 /// lives on one thread. Components that need PJRT from a threaded
-/// context (the serving engine's `Pjrt`-backed workers, benches)
-/// construct one engine per worker thread via [`thread_engine`].
+/// context (benches) construct one engine per worker thread via
+/// [`thread_engine`].
 pub struct Engine {
     dir: PathBuf,
     specs: HashMap<String, ArtifactSpec>,
     compiled: RefCell<HashMap<String, Rc<Executable>>>,
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
 }
 
 impl Engine {
-    /// Load the manifest from an artifact directory and create the CPU
-    /// client. Fails if the directory or manifest is missing.
+    /// Load the manifest from an artifact directory (and, with the
+    /// `pjrt` feature, create the CPU client). Fails if the directory
+    /// or manifest is missing.
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let manifest_path = dir.join("manifest.json");
@@ -179,8 +225,15 @@ impl Engine {
             let spec = parse_artifact(a)?;
             specs.insert(spec.name.clone(), spec);
         }
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Self { dir, specs, compiled: RefCell::new(HashMap::new()), client })
+        #[cfg(feature = "pjrt")]
+        return Ok(Self {
+            dir,
+            specs,
+            compiled: RefCell::new(HashMap::new()),
+            client: xla::PjRtClient::cpu()?,
+        });
+        #[cfg(not(feature = "pjrt"))]
+        return Ok(Self { dir, specs, compiled: RefCell::new(HashMap::new()) });
     }
 
     /// The default artifact directory: `$RSR_ARTIFACTS` or `artifacts/`.
@@ -188,6 +241,11 @@ impl Engine {
         std::env::var("RSR_ARTIFACTS")
             .map(PathBuf::from)
             .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// The artifact directory this engine was loaded from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
     }
 
     /// Artifact names available in the manifest.
@@ -203,6 +261,7 @@ impl Engine {
     }
 
     /// Get (compiling on first use) an executable.
+    #[cfg(feature = "pjrt")]
     pub fn executable(&self, name: &str) -> Result<Rc<Executable>> {
         if let Some(e) = self.compiled.borrow().get(name) {
             return Ok(Rc::clone(e));
@@ -223,6 +282,23 @@ impl Engine {
             .borrow_mut()
             .insert(name.to_string(), Rc::clone(&executable));
         Ok(executable)
+    }
+
+    /// Get an executable — unavailable in this build: compiling HLO
+    /// requires the `pjrt` feature (see the module docs).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn executable(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.compiled.borrow().get(name) {
+            return Ok(Rc::clone(e));
+        }
+        let _ = self
+            .specs
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("unknown artifact {name}")))?;
+        Err(Error::Artifact(format!(
+            "artifact {name} cannot be compiled: this build lacks the `pjrt` feature \
+             (a vendored xla crate is required; see ARCHITECTURE.md)"
+        )))
     }
 
     /// Convenience: execute an artifact in one call.

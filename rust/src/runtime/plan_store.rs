@@ -1,0 +1,614 @@
+//! The [`PlanStore`] — a shared, thread-safe registry of compiled RSR
+//! plans, and the compile-once/serve-many execution primitives
+//! ([`SharedRsrPlan`], [`SharedTernaryPlan`], [`PlanScratch`]).
+//!
+//! ## Why this exists
+//!
+//! The per-plan state of [`crate::kernels::rsr::RsrPlan`] /
+//! [`crate::kernels::rsrpp::RsrPlusPlusPlan`] bundles two things with
+//! very different lifetimes:
+//!
+//! * the **block index** (paper Algorithm 1 output) — large, immutable,
+//!   expensive to build, identical for every thread serving the model;
+//! * the **execution scratch** (`u`, fold buffers) — tiny, mutated on
+//!   every multiply, inherently per-thread.
+//!
+//! The seed code rebuilt both *per worker, per replica, per process
+//! start*: a `serve --replicas 4 --workers 4` deployment preprocessed
+//! every weight matrix sixteen times and held sixteen copies in memory.
+//! This module splits the two: a [`SharedTernaryPlan`] holds the index
+//! behind an `Arc` (validated once, then read-only), and every executor
+//! carries its own [`PlanScratch`]. The [`PlanStore`] is the registry
+//! that hands plans out by layer name, building each at most once —
+//! from an in-memory model, or lazily from `.rsrz` artifacts packed
+//! offline by `rsr pack` (see [`crate::kernels::artifact`]).
+//!
+//! Execution uses RSR++ (Algorithm 2 with Algorithm 3 in step 2), the
+//! paper's `O(n²/log n)` fast path, and performs the operations in the
+//! same order as `TernaryRsrPlusPlusPlan` — outputs are bit-identical
+//! to the owned in-memory plan, which the artifact round-trip tests
+//! assert.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::kernels::artifact::{ternary_fingerprint, ArtifactPayload, PlanArtifact};
+use crate::kernels::index::{RsrIndex, TernaryRsrIndex};
+use crate::kernels::optimal_k::optimal_k_rsrpp;
+use crate::kernels::rsr::{check_shapes, segmented_sum_unchecked};
+use crate::kernels::rsrpp::block_product_fold;
+use crate::model::weights::ModelWeights;
+
+/// Per-thread execution scratch: the `u` segmented-sum buffer, the
+/// RSR++ fold buffer, and the ternary subtraction temporary. Cheap to
+/// create (three `Vec<f32>`s), grown on demand, reusable across plans.
+#[derive(Debug, Clone, Default)]
+pub struct PlanScratch {
+    u: Vec<f32>,
+    fold: Vec<f32>,
+    tmp: Vec<f32>,
+}
+
+impl PlanScratch {
+    /// An empty scratch; buffers grow on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn with_capacity(max_u: usize, cols: usize) -> Self {
+        Self { u: vec![0.0; max_u], fold: vec![0.0; max_u], tmp: vec![0.0; cols] }
+    }
+
+    fn ensure_u(&mut self, max_u: usize) {
+        if self.u.len() < max_u {
+            self.u.resize(max_u, 0.0);
+        }
+        if self.fold.len() < max_u {
+            self.fold.resize(max_u, 0.0);
+        }
+    }
+
+    /// Heap bytes currently held — what each *thread* pays, as opposed
+    /// to the shared index bytes paid once per process.
+    pub fn bytes(&self) -> usize {
+        (self.u.len() + self.fold.len() + self.tmp.len()) * 4
+    }
+}
+
+/// An immutable, `Arc`-shareable RSR++ plan for one binary matrix:
+/// the validated index plus precomputed execution bounds. Unlike
+/// [`crate::kernels::rsrpp::RsrPlusPlusPlan`] it takes `&self` — many
+/// threads execute the same plan concurrently, each with its own
+/// [`PlanScratch`].
+#[derive(Debug, Clone)]
+pub struct SharedRsrPlan {
+    index: Arc<RsrIndex>,
+    max_u: usize,
+}
+
+impl SharedRsrPlan {
+    /// Validate an index and wrap it for sharing.
+    pub fn new(index: RsrIndex) -> Result<Self> {
+        index.validate()?;
+        let max_u = index.blocks.iter().map(|b| 1usize << b.width).max().unwrap_or(0);
+        Ok(Self { index: Arc::new(index), max_u })
+    }
+
+    /// The underlying index.
+    pub fn index(&self) -> &RsrIndex {
+        &self.index
+    }
+
+    /// Rows of the indexed matrix (input length).
+    pub fn rows(&self) -> usize {
+        self.index.rows
+    }
+
+    /// Columns of the indexed matrix (output length).
+    pub fn cols(&self) -> usize {
+        self.index.cols
+    }
+
+    /// Shared index bytes (paid once per process, not per thread).
+    pub fn index_bytes(&self) -> usize {
+        self.index.bytes()
+    }
+
+    /// A scratch sized for this plan.
+    pub fn scratch(&self) -> PlanScratch {
+        PlanScratch::with_capacity(self.max_u, 0)
+    }
+
+    /// `out = v · B` via RSR++ (Algorithms 2 + 3), identical operation
+    /// order to `RsrPlusPlusPlan::execute` — bit-identical results.
+    pub fn execute(&self, scratch: &mut PlanScratch, v: &[f32], out: &mut [f32]) -> Result<()> {
+        check_shapes(&self.index, v, out)?;
+        scratch.ensure_u(self.max_u);
+        for blk in &self.index.blocks {
+            let w = blk.width as usize;
+            let u = &mut scratch.u[..1 << w];
+            segmented_sum_unchecked(blk, v, u);
+            let col = blk.col_start as usize;
+            block_product_fold(u, w, &mut out[col..col + w], &mut scratch.fold);
+        }
+        Ok(())
+    }
+}
+
+/// An immutable, `Arc`-shareable ternary RSR++ plan (both Prop 2.1
+/// halves). See [`SharedRsrPlan`] for the sharing model.
+#[derive(Debug, Clone)]
+pub struct SharedTernaryPlan {
+    plus: SharedRsrPlan,
+    minus: SharedRsrPlan,
+}
+
+impl SharedTernaryPlan {
+    /// Validate a ternary index pair and wrap it for sharing.
+    pub fn new(index: TernaryRsrIndex) -> Result<Self> {
+        let TernaryRsrIndex { plus, minus } = index;
+        if plus.rows != minus.rows || plus.cols != minus.cols {
+            return Err(Error::InvalidIndex("ternary halves disagree on shape".into()));
+        }
+        Ok(Self { plus: SharedRsrPlan::new(plus)?, minus: SharedRsrPlan::new(minus)? })
+    }
+
+    /// Rows (input length).
+    pub fn rows(&self) -> usize {
+        self.plus.rows()
+    }
+
+    /// Columns (output length).
+    pub fn cols(&self) -> usize {
+        self.plus.cols()
+    }
+
+    /// Shared index bytes across both halves.
+    pub fn index_bytes(&self) -> usize {
+        self.plus.index_bytes() + self.minus.index_bytes()
+    }
+
+    /// The `B⁽¹⁾` half's index.
+    pub fn plus_index(&self) -> &RsrIndex {
+        self.plus.index()
+    }
+
+    /// The `B⁽²⁾` half's index.
+    pub fn minus_index(&self) -> &RsrIndex {
+        self.minus.index()
+    }
+
+    /// A scratch sized for this plan.
+    pub fn scratch(&self) -> PlanScratch {
+        PlanScratch::with_capacity(self.plus.max_u.max(self.minus.max_u), self.cols())
+    }
+
+    /// `out = v · A = v·B⁽¹⁾ − v·B⁽²⁾`, identical operation order to
+    /// `TernaryRsrPlusPlusPlan::execute` — bit-identical results.
+    pub fn execute(&self, scratch: &mut PlanScratch, v: &[f32], out: &mut [f32]) -> Result<()> {
+        let mut tmp = std::mem::take(&mut scratch.tmp);
+        if tmp.len() != self.cols() {
+            tmp.resize(self.cols(), 0.0);
+        }
+        let result = (|| -> Result<()> {
+            self.plus.execute(scratch, v, out)?;
+            self.minus.execute(scratch, v, &mut tmp)?;
+            for (o, t) in out.iter_mut().zip(tmp.iter()) {
+                *o -= t;
+            }
+            Ok(())
+        })();
+        scratch.tmp = tmp;
+        result
+    }
+}
+
+/// A named, compiled plan held by the store.
+#[derive(Debug, Clone)]
+pub struct PlanEntry {
+    /// Layer name (the store key, e.g. `layer0.wq`).
+    pub name: String,
+    /// Blocking parameter the index was built with.
+    pub k: usize,
+    /// Per-tensor scale β.
+    pub scale: f32,
+    /// Fingerprint of the weights this plan was compiled from
+    /// ([`ternary_fingerprint`]); `0` = unbound. Serve-time model
+    /// builders compare it against their weights so stale artifact
+    /// directories fail loudly instead of serving wrong logits.
+    pub weights_fp: u64,
+    /// The plan itself.
+    pub plan: PlanKind,
+}
+
+/// Binary or ternary compiled plan.
+#[derive(Debug, Clone)]
+pub enum PlanKind {
+    /// Plan over one binary matrix.
+    Binary(Arc<SharedRsrPlan>),
+    /// Plan over a ternary matrix (both Prop 2.1 halves).
+    Ternary(Arc<SharedTernaryPlan>),
+}
+
+impl PlanEntry {
+    /// The ternary plan, or an error if this entry is binary.
+    pub fn ternary(&self) -> Result<Arc<SharedTernaryPlan>> {
+        match &self.plan {
+            PlanKind::Ternary(p) => Ok(Arc::clone(p)),
+            PlanKind::Binary(_) => Err(Error::Config(format!(
+                "plan {} is binary, expected ternary",
+                self.name
+            ))),
+        }
+    }
+
+    /// The binary plan, or an error if this entry is ternary.
+    pub fn binary(&self) -> Result<Arc<SharedRsrPlan>> {
+        match &self.plan {
+            PlanKind::Binary(p) => Ok(Arc::clone(p)),
+            PlanKind::Ternary(_) => Err(Error::Config(format!(
+                "plan {} is ternary, expected binary",
+                self.name
+            ))),
+        }
+    }
+
+    /// Shared index bytes of this entry.
+    pub fn index_bytes(&self) -> usize {
+        match &self.plan {
+            PlanKind::Binary(p) => p.index_bytes(),
+            PlanKind::Ternary(p) => p.index_bytes(),
+        }
+    }
+
+    /// `(rows, cols)` of the planned matrix.
+    pub fn shape(&self) -> (usize, usize) {
+        match &self.plan {
+            PlanKind::Binary(p) => (p.rows(), p.cols()),
+            PlanKind::Ternary(p) => (p.rows(), p.cols()),
+        }
+    }
+}
+
+/// Where the store materializes plans from on a cache miss.
+enum Source {
+    /// No backing source; only explicitly inserted entries resolve.
+    None,
+    /// A directory of `{name}.rsrz` artifacts (the `rsr pack` output).
+    Dir(PathBuf),
+    /// Preprocess lazily from in-memory model weights with blocking
+    /// parameter `k` (`0` → analytic optimum per matrix).
+    Model { weights: Arc<ModelWeights>, k: usize },
+}
+
+/// The process-wide plan registry: loads/compiles each plan once (two
+/// racing first requests may duplicate the build; one result wins),
+/// caches it behind an `Arc`, and serves it to every thread.
+///
+/// Typical lifecycle:
+///
+/// ```text
+///   offline:  rsr pack --model m.rtw --out plans/      (Algorithm 1, once)
+///   serve:    PlanStore::open("plans/")                (mmap-friendly lazy loads)
+///             → engine workers share Arc<PlanStore>
+///             → each worker: plan = store.get("layer0.wq"),
+///                            scratch = plan.scratch()   (per-thread)
+/// ```
+///
+/// All methods take `&self`; the store is `Send + Sync` and intended to
+/// live in an `Arc` shared across replicas and worker threads.
+pub struct PlanStore {
+    source: Source,
+    entries: Mutex<HashMap<String, Arc<PlanEntry>>>,
+    /// Set once [`verify_fingerprints`](Self::verify_fingerprints) has
+    /// succeeded, letting per-worker model builds skip the per-layer
+    /// weight hashing.
+    fingerprints_verified: AtomicBool,
+}
+
+impl PlanStore {
+    /// An empty registry; populate with [`insert_ternary`](Self::insert_ternary).
+    pub fn new() -> Self {
+        Self {
+            source: Source::None,
+            entries: Mutex::new(HashMap::new()),
+            fingerprints_verified: AtomicBool::new(false),
+        }
+    }
+
+    /// A registry backed by a directory of `.rsrz` artifacts (the
+    /// output of `rsr pack`). Artifacts load lazily on first `get`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        if !dir.is_dir() {
+            return Err(Error::Artifact(format!(
+                "plan directory {} does not exist",
+                dir.display()
+            )));
+        }
+        Ok(Self {
+            source: Source::Dir(dir),
+            entries: Mutex::new(HashMap::new()),
+            fingerprints_verified: AtomicBool::new(false),
+        })
+    }
+
+    /// A registry that preprocesses lazily from in-memory model weights
+    /// (`k = 0` → analytic optimum per matrix). Each layer is cached
+    /// after its first build and shared by every replica/worker that
+    /// requests it.
+    pub fn for_model(weights: Arc<ModelWeights>, k: usize) -> Self {
+        Self {
+            source: Source::Model { weights, k },
+            entries: Mutex::new(HashMap::new()),
+            fingerprints_verified: AtomicBool::new(false),
+        }
+    }
+
+    /// Get (building/loading on first use) the plan for `name`.
+    pub fn get(&self, name: &str) -> Result<Arc<PlanEntry>> {
+        if let Some(e) = self.entries.lock().unwrap().get(name) {
+            return Ok(Arc::clone(e));
+        }
+        // Build OUTSIDE the lock: a multi-second Algorithm-1 run (or a
+        // disk load) must not serialize unrelated lookups and cache
+        // hits. Racing first requests for the same name may build
+        // twice; the first insert wins and every caller converges on
+        // that one `Arc`, so sharing still holds.
+        let entry = Arc::new(self.build(name)?);
+        let mut entries = self.entries.lock().unwrap();
+        let winner = entries.entry(name.to_string()).or_insert(entry);
+        Ok(Arc::clone(winner))
+    }
+
+    fn build(&self, name: &str) -> Result<PlanEntry> {
+        match &self.source {
+            Source::None => Err(Error::Config(format!(
+                "plan {name} not found in store (no backing source)"
+            ))),
+            Source::Dir(dir) => {
+                let path = dir.join(format!("{name}.rsrz"));
+                let art = PlanArtifact::load(&path).map_err(|e| {
+                    Error::Artifact(format!("loading {}: {e}", path.display()))
+                })?;
+                let plan = match art.payload {
+                    ArtifactPayload::Binary(idx) => {
+                        PlanKind::Binary(Arc::new(SharedRsrPlan::new(idx)?))
+                    }
+                    ArtifactPayload::Ternary(t) => {
+                        PlanKind::Ternary(Arc::new(SharedTernaryPlan::new(t)?))
+                    }
+                };
+                Ok(PlanEntry {
+                    name: name.to_string(),
+                    k: art.meta.k,
+                    scale: art.meta.scale,
+                    weights_fp: art.meta.weights_fp,
+                    plan,
+                })
+            }
+            Source::Model { weights, k } => {
+                let (m, scale) = weights.matrix(name).ok_or_else(|| {
+                    Error::Config(format!("model has no matrix named {name}"))
+                })?;
+                let k_eff = if *k == 0 { optimal_k_rsrpp(m.rows()) } else { *k };
+                let idx = TernaryRsrIndex::preprocess(m, k_eff);
+                Ok(PlanEntry {
+                    name: name.to_string(),
+                    k: k_eff,
+                    scale,
+                    weights_fp: ternary_fingerprint(m),
+                    plan: PlanKind::Ternary(Arc::new(SharedTernaryPlan::new(idx)?)),
+                })
+            }
+        }
+    }
+
+    /// Insert an explicitly built ternary plan (benches / tests / ad
+    /// hoc callers without a model or artifact dir).
+    pub fn insert_ternary(
+        &self,
+        name: impl Into<String>,
+        index: TernaryRsrIndex,
+        k: usize,
+        scale: f32,
+    ) -> Result<Arc<PlanEntry>> {
+        let name = name.into();
+        let entry = Arc::new(PlanEntry {
+            name: name.clone(),
+            k,
+            scale,
+            weights_fp: 0,
+            plan: PlanKind::Ternary(Arc::new(SharedTernaryPlan::new(index)?)),
+        });
+        self.entries.lock().unwrap().insert(name, Arc::clone(&entry));
+        Ok(entry)
+    }
+
+    /// Whether entries come from external artifacts (disk) rather than
+    /// the served weights themselves. Only then does a serve-time
+    /// weights-fingerprint comparison carry information — a
+    /// Model-backed store's fingerprints were computed from the very
+    /// matrices being served, so checking them would cost a full pass
+    /// over the weights per worker to confirm a tautology.
+    pub fn is_artifact_backed(&self) -> bool {
+        matches!(self.source, Source::Dir(_))
+    }
+
+    /// Resolve every name now, surfacing missing/corrupt artifacts as
+    /// one early error instead of per-worker failures at request time.
+    pub fn preload(&self, names: &[String]) -> Result<()> {
+        for n in names {
+            self.get(n)?;
+        }
+        Ok(())
+    }
+
+    /// Compare every one of `weights`' matrices against its loaded
+    /// plan's weights fingerprint, **once** for the whole store; model
+    /// builds ([`Transformer::from_plan_store`]) then skip their
+    /// per-layer recomputation, so the full pass over the weights
+    /// happens once per process instead of once per worker thread.
+    ///
+    /// [`Transformer::from_plan_store`]: crate::model::Transformer::from_plan_store
+    pub fn verify_fingerprints(&self, weights: &ModelWeights) -> Result<()> {
+        for (name, m, _scale) in weights.named_matrices() {
+            let entry = self.get(&name)?;
+            if entry.weights_fp != 0 && entry.weights_fp != ternary_fingerprint(m) {
+                return Err(Error::InvalidModel(format!(
+                    "plan {name} was packed from different weights \
+                     (fingerprint mismatch — re-run `rsr pack`)"
+                )));
+            }
+        }
+        self.fingerprints_verified.store(true, Ordering::Release);
+        Ok(())
+    }
+
+    /// Whether [`verify_fingerprints`](Self::verify_fingerprints) has
+    /// already succeeded for this store.
+    pub fn fingerprints_verified(&self) -> bool {
+        self.fingerprints_verified.load(Ordering::Acquire)
+    }
+
+    /// Names currently materialized, sorted.
+    pub fn loaded_names(&self) -> Vec<String> {
+        let mut v: Vec<String> =
+            self.entries.lock().unwrap().keys().cloned().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Number of materialized plans.
+    pub fn loaded_len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    /// Total shared index bytes across materialized plans — the
+    /// process-wide weight footprint every thread shares.
+    pub fn index_bytes(&self) -> usize {
+        self.entries.lock().unwrap().values().map(|e| e.index_bytes()).sum()
+    }
+}
+
+impl Default for PlanStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::rsrpp::TernaryRsrPlusPlusPlan;
+    use crate::kernels::TernaryMatrix;
+    use crate::model::config::ModelConfig;
+    use crate::util::rng::Rng;
+
+    fn sample_plan(n: usize, m: usize, k: usize, seed: u64) -> (TernaryMatrix, SharedTernaryPlan) {
+        let mut rng = Rng::new(seed);
+        let a = TernaryMatrix::random(n, m, 1.0 / 3.0, &mut rng);
+        let plan = SharedTernaryPlan::new(TernaryRsrIndex::preprocess(&a, k)).unwrap();
+        (a, plan)
+    }
+
+    #[test]
+    fn shared_plan_is_bit_identical_to_owned_plan() {
+        let (a, shared) = sample_plan(96, 64, 4, 401);
+        let mut rng = Rng::new(402);
+        let v = rng.f32_vec(96, -1.0, 1.0);
+        let mut owned =
+            TernaryRsrPlusPlusPlan::new(TernaryRsrIndex::preprocess(&a, 4)).unwrap();
+        let mut expect = vec![0.0; 64];
+        owned.execute(&v, &mut expect).unwrap();
+        let mut scratch = shared.scratch();
+        let mut got = vec![0.0; 64];
+        shared.execute(&mut scratch, &v, &mut got).unwrap();
+        assert_eq!(got, expect, "shared plan must be bit-identical to owned plan");
+    }
+
+    #[test]
+    fn empty_scratch_grows_on_demand() {
+        let (_, shared) = sample_plan(50, 30, 3, 403);
+        let mut rng = Rng::new(404);
+        let v = rng.f32_vec(50, -1.0, 1.0);
+        let mut sized = shared.scratch();
+        let mut fresh = PlanScratch::new();
+        let mut a = vec![0.0; 30];
+        let mut b = vec![0.0; 30];
+        shared.execute(&mut sized, &v, &mut a).unwrap();
+        shared.execute(&mut fresh, &v, &mut b).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn concurrent_executions_share_one_index() {
+        let (a, shared) = sample_plan(128, 80, 5, 405);
+        let shared = Arc::new(shared);
+        let mut rng = Rng::new(406);
+        let v = rng.f32_vec(128, -1.0, 1.0);
+        let mut owned =
+            TernaryRsrPlusPlusPlan::new(TernaryRsrIndex::preprocess(&a, 5)).unwrap();
+        let mut expect = vec![0.0; 80];
+        owned.execute(&v, &mut expect).unwrap();
+
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let plan = Arc::clone(&shared);
+                let v = v.clone();
+                std::thread::spawn(move || {
+                    let mut scratch = plan.scratch();
+                    let mut out = vec![0.0; 80];
+                    for _ in 0..8 {
+                        plan.execute(&mut scratch, &v, &mut out).unwrap();
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), expect);
+        }
+    }
+
+    #[test]
+    fn store_builds_each_plan_once() {
+        let weights =
+            Arc::new(crate::model::weights::ModelWeights::generate(ModelConfig::tiny(), 7).unwrap());
+        let store = PlanStore::for_model(Arc::clone(&weights), 0);
+        let a = store.get("layer0.wq").unwrap();
+        let b = store.get("layer0.wq").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second get must hit the cache");
+        assert_eq!(store.loaded_len(), 1);
+        assert!(store.index_bytes() > 0);
+        assert!(store.get("layer0.nope").is_err());
+    }
+
+    #[test]
+    fn store_rejects_unknown_names_without_source() {
+        let store = PlanStore::new();
+        assert!(store.get("anything").is_err());
+        let mut rng = Rng::new(407);
+        let a = TernaryMatrix::random(32, 16, 1.0 / 3.0, &mut rng);
+        store
+            .insert_ternary("adhoc", TernaryRsrIndex::preprocess(&a, 3), 3, 1.0)
+            .unwrap();
+        let e = store.get("adhoc").unwrap();
+        assert_eq!(e.shape(), (32, 16));
+        assert_eq!(e.ternary().unwrap().cols(), 16);
+        assert!(e.binary().is_err());
+    }
+
+    #[test]
+    fn shape_errors_surface() {
+        let (_, shared) = sample_plan(40, 20, 3, 408);
+        let mut scratch = shared.scratch();
+        let mut out = vec![0.0; 20];
+        assert!(shared.execute(&mut scratch, &[0.0; 39], &mut out).is_err());
+        let mut bad_out = vec![0.0; 19];
+        assert!(shared.execute(&mut scratch, &[0.0; 40], &mut bad_out).is_err());
+    }
+}

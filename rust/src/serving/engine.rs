@@ -2,6 +2,7 @@
 //! instance, pulling batches from the shared queue, running
 //! prefill → decode per request, and reporting completions.
 
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
@@ -16,6 +17,7 @@ use crate::kernels::Backend;
 use crate::model::sampler::Sampler;
 use crate::model::transformer::Transformer;
 use crate::model::weights::ModelWeights;
+use crate::runtime::plan_store::PlanStore;
 use crate::util::rng::Rng;
 
 /// Engine configuration.
@@ -33,6 +35,12 @@ pub struct EngineConfig {
     pub backend: Backend,
     /// Blocking parameter (0 → analytic optimum).
     pub k: usize,
+    /// Directory of `.rsrz` plan artifacts (the `rsr pack` output).
+    /// When set — and the backend is an RSR plan backend — workers load
+    /// preprocessed plans from disk instead of running Algorithm 1 at
+    /// startup. When `None`, plans are still built only once per
+    /// process and shared across workers via the [`PlanStore`].
+    pub plan_dir: Option<PathBuf>,
 }
 
 impl Default for EngineConfig {
@@ -44,6 +52,7 @@ impl Default for EngineConfig {
             schedule: Policy::default(),
             backend: Backend::RsrPlusPlus,
             k: 0,
+            plan_dir: None,
         }
     }
 }
@@ -63,9 +72,77 @@ pub struct InferenceEngine {
 }
 
 impl InferenceEngine {
-    /// Start workers. Model preparation (preprocessing every weight
-    /// matrix — paper Algorithm 1) happens here, once, per worker.
+    /// Start workers.
+    ///
+    /// On the RSR++ backend (the default), model preparation goes
+    /// through a process-shared [`PlanStore`]: each weight matrix is
+    /// preprocessed (paper Algorithm 1) — or loaded from a packed
+    /// `.rsrz` artifact when [`EngineConfig::plan_dir`] is set — **at
+    /// most once**, and every worker thread shares the resulting index,
+    /// holding only per-thread scratch. Other backends keep the
+    /// original prepare-per-worker path.
     pub fn start(weights: Arc<ModelWeights>, cfg: EngineConfig) -> Result<Self> {
+        let store = Self::build_plan_store(&weights, &cfg)?;
+        Self::spawn(weights, cfg, store)
+    }
+
+    /// Resolve the `(plan_dir, backend)` policy into the optional
+    /// shared store [`start`](Self::start) uses. The single source of
+    /// truth for that policy: `rsr serve` calls it once and hands the
+    /// same store to every replica via
+    /// [`start_with_store`](Self::start_with_store).
+    pub fn build_plan_store(
+        weights: &Arc<ModelWeights>,
+        cfg: &EngineConfig,
+    ) -> Result<Option<Arc<PlanStore>>> {
+        match (&cfg.plan_dir, cfg.backend) {
+            (Some(dir), Backend::RsrPlusPlus) => {
+                let store = PlanStore::open(dir)?;
+                // Resolve every layer now: a missing or corrupt
+                // artifact fails engine startup, not the first request.
+                store.preload(&weights.matrix_names())?;
+                // One whole-store weights check here, so worker builds
+                // skip their per-layer fingerprint recomputation.
+                store.verify_fingerprints(weights)?;
+                Ok(Some(Arc::new(store)))
+            }
+            (Some(_), other) => Err(Error::Config(format!(
+                "plan artifacts execute via rsr++; backend {} cannot use --plans",
+                other.name()
+            ))),
+            (None, Backend::RsrPlusPlus) => {
+                let store = PlanStore::for_model(Arc::clone(weights), cfg.k);
+                // Preprocess every layer HERE, before workers spawn:
+                // lazily-racing worker threads would otherwise all miss
+                // the cold cache together and run Algorithm 1 in
+                // parallel duplicate — the exact W× cost this store
+                // exists to eliminate.
+                store.preload(&weights.matrix_names())?;
+                Ok(Some(Arc::new(store)))
+            }
+            (None, _) => Ok(None),
+        }
+    }
+
+    /// Start workers against an externally owned [`PlanStore`] — the
+    /// multi-replica path: `rsr serve --replicas N` builds one store
+    /// and passes the same `Arc` to every replica, so the whole process
+    /// holds each layer's index exactly once. The store's plans execute
+    /// via RSR++; `cfg.backend`/`cfg.k`/`cfg.plan_dir` are ignored on
+    /// this path.
+    pub fn start_with_store(
+        weights: Arc<ModelWeights>,
+        cfg: EngineConfig,
+        store: Arc<PlanStore>,
+    ) -> Result<Self> {
+        Self::spawn(weights, cfg, Some(store))
+    }
+
+    fn spawn(
+        weights: Arc<ModelWeights>,
+        cfg: EngineConfig,
+        store: Option<Arc<PlanStore>>,
+    ) -> Result<Self> {
         let queue = Arc::new(BoundedQueue::new(cfg.queue_capacity));
         let metrics = Arc::new(Metrics::new());
         let (tx, rx) = mpsc::channel::<Response>();
@@ -80,18 +157,20 @@ impl InferenceEngine {
             let weights = Arc::clone(&weights);
             let inflight = Arc::clone(&inflight);
             let shutdown = Arc::clone(&shutdown);
+            let store = store.clone();
             let cfg = cfg.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("rsr-worker-{wid}"))
                     .spawn(move || {
-                        // Preprocess once per worker (fixed weights —
-                        // the paper's core observation).
-                        let model = match Transformer::from_weights(
-                            &weights,
-                            cfg.backend,
-                            cfg.k,
-                        ) {
+                        // Fixed weights — preprocessing amortizes (the
+                        // paper's core observation): shared plans from
+                        // the store, or per-worker prepare otherwise.
+                        let built = match &store {
+                            Some(s) => Transformer::from_plan_store(&weights, s),
+                            None => Transformer::from_weights(&weights, cfg.backend, cfg.k),
+                        };
+                        let model = match built {
                             Ok(m) => m,
                             Err(e) => {
                                 eprintln!("worker {wid}: model build failed: {e}");
@@ -284,6 +363,56 @@ mod tests {
         assert_eq!(seen.len(), 12);
         assert_eq!(engine.metrics().completed.load(Ordering::Relaxed), 12);
         engine.shutdown();
+    }
+
+    #[test]
+    fn serves_from_packed_plan_artifacts() {
+        use crate::kernels::artifact::{ternary_fingerprint, PlanArtifact};
+        use crate::kernels::index::TernaryRsrIndex;
+        use crate::kernels::optimal_k::optimal_k_rsrpp;
+
+        let weights =
+            Arc::new(ModelWeights::generate(ModelConfig::tiny(), 99).unwrap());
+        let dir = std::env::temp_dir()
+            .join(format!("rsr-engine-plans-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        for (name, m, scale) in weights.named_matrices() {
+            let k = optimal_k_rsrpp(m.rows());
+            let art = PlanArtifact::ternary(
+                name.clone(),
+                TernaryRsrIndex::preprocess(m, k),
+                scale,
+            )
+            .unwrap()
+            .with_weights_fingerprint(ternary_fingerprint(m));
+            art.save(dir.join(format!("{name}.rsrz"))).unwrap();
+        }
+
+        let engine = InferenceEngine::start(
+            Arc::clone(&weights),
+            EngineConfig { workers: 2, plan_dir: Some(dir.clone()), ..Default::default() },
+        )
+        .unwrap();
+        engine.submit(Request::new(1, vec![10, 20, 30], 4)).unwrap();
+        let resp = engine.recv_timeout(Duration::from_secs(30)).expect("response");
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        engine.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn plan_dir_requires_rsrpp_backend() {
+        let weights =
+            Arc::new(ModelWeights::generate(ModelConfig::tiny(), 99).unwrap());
+        let res = InferenceEngine::start(
+            weights,
+            EngineConfig {
+                backend: Backend::Standard,
+                plan_dir: Some(std::path::PathBuf::from("/nonexistent")),
+                ..Default::default()
+            },
+        );
+        assert!(res.is_err());
     }
 
     #[test]

@@ -1,0 +1,242 @@
+//! Integration: the compile-once/serve-many contract.
+//!
+//! Pack (serialize) → load (deserialize) → execute must be
+//! **bit-identical** to a freshly preprocessed in-memory plan, corrupt
+//! or mismatched artifacts must be rejected, and the on-disk index must
+//! actually be small (≤ dense-f32/4 at `n ≥ 1024` — the `rsr inspect`
+//! acceptance bar).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use rsr::kernels::artifact::{ternary_fingerprint, ArtifactPayload, PlanArtifact, RSRZ_VERSION};
+use rsr::kernels::index::{RsrIndex, TernaryRsrIndex};
+use rsr::kernels::optimal_k::optimal_k_rsrpp;
+use rsr::kernels::rsrpp::TernaryRsrPlusPlusPlan;
+use rsr::kernels::{BinaryMatrix, TernaryMatrix};
+use rsr::model::config::ModelConfig;
+use rsr::model::weights::ModelWeights;
+use rsr::runtime::{PlanStore, SharedTernaryPlan};
+use rsr::util::rng::Rng;
+
+/// Fresh per-test temp dir (no tempfile crate offline).
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("rsr-artifact-test-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn packed_plan_executes_bit_identically_to_in_memory_plan() {
+    let (n, m) = (1024usize, 1024usize);
+    let k = optimal_k_rsrpp(n);
+    let mut rng = Rng::new(0xA11CE);
+    let a = TernaryMatrix::random(n, m, 1.0 / 3.0, &mut rng);
+    let v = rng.f32_vec(n, -1.0, 1.0);
+
+    // Freshly preprocessed in-memory plan (the seed's only path).
+    let mut owned = TernaryRsrPlusPlusPlan::new(TernaryRsrIndex::preprocess(&a, k)).unwrap();
+    let mut expect = vec![0.0f32; m];
+    owned.execute(&v, &mut expect).unwrap();
+
+    // Pack → store-load → execute.
+    let dir = temp_dir("roundtrip");
+    let art =
+        PlanArtifact::ternary("layer0.wq", TernaryRsrIndex::preprocess(&a, k), 1.0).unwrap();
+    art.save(dir.join("layer0.wq.rsrz")).unwrap();
+
+    let store = PlanStore::open(&dir).unwrap();
+    let entry = store.get("layer0.wq").unwrap();
+    assert_eq!(entry.k, k);
+    let plan = entry.ternary().unwrap();
+    let mut scratch = plan.scratch();
+    let mut got = vec![0.0f32; m];
+    plan.execute(&mut scratch, &v, &mut got).unwrap();
+
+    assert_eq!(got, expect, "store-loaded plan must be bit-identical");
+
+    // The acceptance bar: on-disk index ≤ dense f32 / 4 at n = 1024.
+    let meta = PlanArtifact::peek(dir.join("layer0.wq.rsrz")).unwrap();
+    assert!(
+        meta.payload_bytes <= meta.dense_f32_bytes() / 4,
+        "index {} bytes vs dense/4 {} bytes",
+        meta.payload_bytes,
+        meta.dense_f32_bytes() / 4
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn serialize_deserialize_preserves_index_exactly() {
+    let mut rng = Rng::new(0xBEEF);
+    for (n, m, k) in [(64usize, 64usize, 3usize), (100, 60, 4), (33, 7, 5)] {
+        let a = TernaryMatrix::random(n, m, 1.0 / 3.0, &mut rng);
+        let idx = TernaryRsrIndex::preprocess(&a, k);
+        let art = PlanArtifact::ternary("t", idx.clone(), 0.5).unwrap();
+        let mut buf = Vec::new();
+        art.write_to(&mut buf).unwrap();
+        let back = PlanArtifact::read_from(&mut buf.as_slice()).unwrap();
+        match back.payload {
+            ArtifactPayload::Ternary(got) => assert_eq!(got, idx, "n={n} m={m} k={k}"),
+            _ => panic!("wrong kind"),
+        }
+    }
+    // Binary artifacts too.
+    let b = BinaryMatrix::random(80, 48, 0.5, &mut rng);
+    let idx = RsrIndex::preprocess(&b, 4);
+    let art = PlanArtifact::binary("b", idx.clone(), 1.0).unwrap();
+    let mut buf = Vec::new();
+    art.write_to(&mut buf).unwrap();
+    match PlanArtifact::read_from(&mut buf.as_slice()).unwrap().payload {
+        ArtifactPayload::Binary(got) => assert_eq!(got, idx),
+        _ => panic!("wrong kind"),
+    }
+}
+
+#[test]
+fn corrupted_header_is_rejected() {
+    let mut rng = Rng::new(0xC0DE);
+    let a = TernaryMatrix::random(48, 32, 1.0 / 3.0, &mut rng);
+    let art = PlanArtifact::ternary("t", TernaryRsrIndex::preprocess(&a, 3), 1.0).unwrap();
+    let mut buf = Vec::new();
+    art.write_to(&mut buf).unwrap();
+
+    // Magic.
+    let mut bad = buf.clone();
+    bad[2] ^= 0xFF;
+    assert!(PlanArtifact::read_from(&mut bad.as_slice()).is_err());
+    // Kind (offset 8).
+    let mut bad = buf.clone();
+    bad[8] = 77;
+    assert!(PlanArtifact::read_from(&mut bad.as_slice()).is_err());
+    // Declared rows (offset 12) no longer matches the payload geometry.
+    let mut bad = buf.clone();
+    bad[12] = bad[12].wrapping_add(1);
+    assert!(PlanArtifact::read_from(&mut bad.as_slice()).is_err());
+    // k out of range (offset 20).
+    let mut bad = buf.clone();
+    bad[20] = 99;
+    assert!(PlanArtifact::read_from(&mut bad.as_slice()).is_err());
+}
+
+#[test]
+fn version_mismatch_is_rejected() {
+    let mut rng = Rng::new(0xFACE);
+    let a = TernaryMatrix::random(24, 24, 1.0 / 3.0, &mut rng);
+    let art = PlanArtifact::ternary("t", TernaryRsrIndex::preprocess(&a, 3), 1.0).unwrap();
+    let mut buf = Vec::new();
+    art.write_to(&mut buf).unwrap();
+    assert_eq!(
+        u32::from_le_bytes(buf[4..8].try_into().unwrap()),
+        RSRZ_VERSION,
+        "version field must sit at offset 4"
+    );
+    buf[4..8].copy_from_slice(&(RSRZ_VERSION + 1).to_le_bytes());
+    let err = match PlanArtifact::read_from(&mut buf.as_slice()) {
+        Err(e) => e,
+        Ok(_) => panic!("future version must be rejected"),
+    };
+    assert!(err.to_string().contains("version"), "{err}");
+}
+
+#[test]
+fn payload_corruption_fails_the_checksum() {
+    let mut rng = Rng::new(0xD00D);
+    let a = TernaryMatrix::random(40, 40, 1.0 / 3.0, &mut rng);
+    let art = PlanArtifact::ternary("t", TernaryRsrIndex::preprocess(&a, 4), 1.0).unwrap();
+    let mut buf = Vec::new();
+    art.write_to(&mut buf).unwrap();
+    // Flip one payload byte (well past the 60-byte header + name).
+    let off = buf.len() - 7;
+    buf[off] ^= 0x10;
+    let err = match PlanArtifact::read_from(&mut buf.as_slice()) {
+        Err(e) => e,
+        Ok(_) => panic!("corrupt payload must be rejected"),
+    };
+    assert!(err.to_string().contains("checksum"), "{err}");
+}
+
+#[test]
+fn whole_model_packs_and_serves_through_the_store() {
+    // End-to-end over every layer of a model: pack all matrices, open a
+    // dir-backed store, and check a sample of layers against fresh
+    // preprocessing.
+    let weights = Arc::new(ModelWeights::generate(ModelConfig::tiny(), 31).unwrap());
+    let dir = temp_dir("model");
+    for (name, m, scale) in weights.named_matrices() {
+        let k = optimal_k_rsrpp(m.rows());
+        PlanArtifact::ternary(name.clone(), TernaryRsrIndex::preprocess(m, k), scale)
+            .unwrap()
+            .with_weights_fingerprint(ternary_fingerprint(m))
+            .save(dir.join(format!("{name}.rsrz")))
+            .unwrap();
+    }
+
+    let store = PlanStore::open(&dir).unwrap();
+    store.preload(&weights.matrix_names()).unwrap();
+    assert_eq!(store.loaded_len(), weights.matrix_names().len());
+
+    let mut rng = Rng::new(32);
+    for name in ["layer0.wq", "layer1.down", "lm_head"] {
+        let (m, scale) = weights.matrix(name).unwrap();
+        let entry = store.get(name).unwrap();
+        assert_eq!(entry.scale, scale);
+        let plan: Arc<SharedTernaryPlan> = entry.ternary().unwrap();
+        let v = rng.f32_vec(m.rows(), -1.0, 1.0);
+        let k = optimal_k_rsrpp(m.rows());
+        let mut owned =
+            TernaryRsrPlusPlusPlan::new(TernaryRsrIndex::preprocess(m, k)).unwrap();
+        let mut expect = vec![0.0f32; m.cols()];
+        owned.execute(&v, &mut expect).unwrap();
+        let mut scratch = plan.scratch();
+        let mut got = vec![0.0f32; m.cols()];
+        plan.execute(&mut scratch, &v, &mut got).unwrap();
+        assert_eq!(got, expect, "{name}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn stale_plans_from_other_weights_are_rejected() {
+    use rsr::model::transformer::Transformer;
+
+    // Pack plans from checkpoint A, then try to serve checkpoint B of
+    // the SAME architecture: every shape matches, but the fingerprint
+    // must catch the swap before any wrong logits are produced.
+    let a = ModelWeights::generate(ModelConfig::tiny(), 71).unwrap();
+    let b = ModelWeights::generate(ModelConfig::tiny(), 72).unwrap();
+    let dir = temp_dir("stale");
+    for (name, m, scale) in a.named_matrices() {
+        let k = optimal_k_rsrpp(m.rows());
+        PlanArtifact::ternary(name.clone(), TernaryRsrIndex::preprocess(m, k), scale)
+            .unwrap()
+            .with_weights_fingerprint(ternary_fingerprint(m))
+            .save(dir.join(format!("{name}.rsrz")))
+            .unwrap();
+    }
+    let store = PlanStore::open(&dir).unwrap();
+    // Same weights: builds fine.
+    assert!(Transformer::from_plan_store(&a, &store).is_ok());
+    // Different weights, same shapes: must fail loudly.
+    let err = match Transformer::from_plan_store(&b, &store) {
+        Err(e) => e,
+        Ok(_) => panic!("stale plans must be rejected"),
+    };
+    assert!(err.to_string().contains("fingerprint"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn store_reports_missing_artifacts_cleanly() {
+    let dir = temp_dir("missing");
+    let store = PlanStore::open(&dir).unwrap();
+    let err = match store.get("layer0.wq") {
+        Err(e) => e,
+        Ok(_) => panic!("missing artifact must error"),
+    };
+    assert!(err.to_string().contains("layer0.wq"), "{err}");
+    assert!(PlanStore::open(dir.join("nonexistent-subdir")).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -11,6 +11,10 @@ use rsr::runtime::{Engine, Tensor};
 use rsr::util::rng::Rng;
 
 fn engine() -> Option<Engine> {
+    if !rsr::runtime::pjrt_enabled() {
+        eprintln!("skipping runtime tests: built without the `pjrt` feature");
+        return None;
+    }
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     match Engine::load(&dir) {
         Ok(e) => Some(e),
