@@ -93,7 +93,8 @@ fn main() {
     let m_load = measure("artifact load", 1, 3, || {
         let art = PlanArtifact::load(&path).unwrap();
         match art.payload {
-            ArtifactPayload::Ternary(t) => SharedTernaryPlan::new(t).unwrap(),
+            // v2 payload is already the flat execution form: wrap, no copy.
+            ArtifactPayload::Ternary(t) => SharedTernaryPlan::from_flat(t).unwrap(),
             _ => unreachable!(),
         }
     });

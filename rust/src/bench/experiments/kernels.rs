@@ -1,0 +1,198 @@
+//! `rsr bench-kernels` — the kernel-layer perf trajectory.
+//!
+//! Times one `v·A` (ternary, square `n×n`) through every hot-path
+//! backend on a fixed size grid and writes the numbers to
+//! `BENCH_kernels.json`, so the repo records its kernel performance
+//! machine-readably from PR to PR (CI runs a 1-size smoke on every
+//! push; the full grid is `n ∈ {1024, 4096, 8192}`).
+//!
+//! Backends:
+//! * `standard` — dense `O(n²)` i8 multiply (the paper's baseline);
+//! * `rsr` — Algorithm 2 on the flat plan;
+//! * `rsrpp` — Algorithm 2 + 3 on the flat plan (SIMD-dispatched
+//!   segmented sums, pairwise fold);
+//! * `rsr_parallel` — RSR++ across the persistent worker pool;
+//! * `batched_per_vec` — batched RSR++ (segment-major interleaved
+//!   layout), reported **per vector** at the configured batch size.
+
+use std::path::PathBuf;
+
+use crate::bench::harness::{measure, ms, Measurement, Table};
+use crate::kernels::batched::BatchedTernaryRsrPlan;
+use crate::kernels::index::TernaryRsrIndex;
+use crate::kernels::optimal_k::optimal_k_rsrpp;
+use crate::kernels::parallel::ParallelTernaryRsrPlan;
+use crate::kernels::rsr::TernaryRsrPlan;
+use crate::kernels::rsrpp::TernaryRsrPlusPlusPlan;
+use crate::kernels::standard::standard_mul_ternary_i8;
+use crate::kernels::TernaryMatrix;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Options for one bench-kernels run.
+#[derive(Debug, Clone)]
+pub struct KernelBenchOpts {
+    /// Matrix sizes (`n×n`) to sweep.
+    pub sizes: Vec<usize>,
+    /// Measured iterations per backend per size.
+    pub reps: usize,
+    /// Batch size for the batched backend.
+    pub batch: usize,
+    /// Thread count for the parallel backend (`0` → default).
+    pub threads: usize,
+    /// Where to write the JSON record (`None` → stdout table only).
+    pub json_path: Option<PathBuf>,
+}
+
+impl Default for KernelBenchOpts {
+    fn default() -> Self {
+        Self {
+            sizes: vec![1024, 4096, 8192],
+            reps: 5,
+            batch: 8,
+            threads: 0,
+            json_path: Some(PathBuf::from("BENCH_kernels.json")),
+        }
+    }
+}
+
+fn speedup(standard: &Measurement, other: &Measurement) -> f64 {
+    standard.summary.mean() / other.summary.mean().max(1e-12)
+}
+
+/// Run the grid; returns the JSON record that was (optionally) written.
+pub fn run(opts: &KernelBenchOpts) -> Json {
+    let mut table = Table::new(&[
+        "n",
+        "k",
+        "standard",
+        "rsr",
+        "rsr++",
+        "rsr++ parallel",
+        "batched/vec",
+        "rsr++ speedup",
+    ]);
+    let mut sizes_json = Vec::new();
+
+    for &n in &opts.sizes {
+        let k = optimal_k_rsrpp(n);
+        let mut rng = Rng::new(0xBE7C + n as u64);
+        let a = TernaryMatrix::random(n, n, 1.0 / 3.0, &mut rng);
+        let v = rng.f32_vec(n, -1.0, 1.0);
+        let vs = rng.f32_vec(opts.batch * n, -1.0, 1.0);
+        let mut out = vec![0.0f32; n];
+        let mut bout = vec![0.0f32; opts.batch * n];
+
+        // Preprocess once; cloning the index for each plan is a bulk
+        // copy, not a repeat of Algorithm 1's sorting passes.
+        let idx = TernaryRsrIndex::preprocess(&a, k);
+        let mut rsr = TernaryRsrPlan::new(idx.clone()).expect("fresh index");
+        let mut rsrpp = TernaryRsrPlusPlusPlan::new(idx.clone()).expect("fresh index");
+        let mut par =
+            ParallelTernaryRsrPlan::new(idx.clone(), opts.threads).expect("fresh index");
+        let mut bat = BatchedTernaryRsrPlan::new(idx, opts.batch).expect("fresh index");
+
+        let reps = opts.reps.max(1);
+        let m_std = measure(format!("standard n={n}"), 1, reps, || {
+            std::hint::black_box(standard_mul_ternary_i8(&v, &a))
+        });
+        let m_rsr = measure(format!("rsr n={n}"), 1, reps, || {
+            rsr.execute(&v, &mut out).unwrap()
+        });
+        let m_pp = measure(format!("rsr++ n={n}"), 1, reps, || {
+            rsrpp.execute(&v, &mut out).unwrap()
+        });
+        let m_par = measure(format!("rsr++ parallel n={n}"), 1, reps, || {
+            par.execute(&v, &mut out).unwrap()
+        });
+        let m_bat = measure(format!("batched n={n}"), 1, reps, || {
+            bat.execute(&vs, opts.batch, &mut bout).unwrap()
+        });
+        let bat_per_vec_ms = m_bat.mean_ms() / opts.batch as f64;
+
+        table.row(&[
+            n.to_string(),
+            k.to_string(),
+            ms(&m_std),
+            ms(&m_rsr),
+            ms(&m_pp),
+            ms(&m_par),
+            format!("{bat_per_vec_ms:.3}ms"),
+            format!("{:.2}x", speedup(&m_std, &m_pp)),
+        ]);
+
+        sizes_json.push(Json::obj(vec![
+            ("n", Json::num(n as f64)),
+            ("k", Json::num(k as f64)),
+            (
+                "ms",
+                Json::obj(vec![
+                    ("standard", Json::num(m_std.mean_ms())),
+                    ("rsr", Json::num(m_rsr.mean_ms())),
+                    ("rsrpp", Json::num(m_pp.mean_ms())),
+                    ("rsr_parallel", Json::num(m_par.mean_ms())),
+                    ("batched_per_vec", Json::num(bat_per_vec_ms)),
+                ]),
+            ),
+            (
+                "speedup_vs_standard",
+                Json::obj(vec![
+                    ("rsr", Json::num(speedup(&m_std, &m_rsr))),
+                    ("rsrpp", Json::num(speedup(&m_std, &m_pp))),
+                    ("rsr_parallel", Json::num(speedup(&m_std, &m_par))),
+                    (
+                        "batched_per_vec",
+                        Json::num(m_std.mean_ms() / bat_per_vec_ms.max(1e-12)),
+                    ),
+                ]),
+            ),
+        ]));
+    }
+
+    let record = Json::obj(vec![
+        ("bench", Json::str("kernels")),
+        ("reps", Json::num(opts.reps as f64)),
+        ("batch", Json::num(opts.batch as f64)),
+        (
+            "threads",
+            Json::num(if opts.threads == 0 {
+                crate::util::threadpool::default_threads() as f64
+            } else {
+                opts.threads as f64
+            }),
+        ),
+        ("sizes", Json::Arr(sizes_json)),
+    ]);
+
+    table.print("bench-kernels: standard vs RSR vs RSR++ vs parallel/batched");
+    if let Some(path) = &opts.json_path {
+        match std::fs::write(path, record.to_string()) {
+            Ok(()) => println!("\nwrote {}", path.display()),
+            Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
+        }
+    }
+    record
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_runs_and_records_speedups() {
+        let opts = KernelBenchOpts {
+            sizes: vec![128],
+            reps: 1,
+            batch: 2,
+            threads: 1,
+            json_path: None,
+        };
+        let record = run(&opts);
+        let sizes = record.get("sizes").unwrap().as_arr().unwrap();
+        assert_eq!(sizes.len(), 1);
+        let entry = &sizes[0];
+        assert_eq!(entry.get("n").unwrap().as_f64(), Some(128.0));
+        let sp = entry.get("speedup_vs_standard").unwrap();
+        assert!(sp.get("rsrpp").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

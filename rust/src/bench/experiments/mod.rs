@@ -11,5 +11,6 @@ pub mod fig4;
 pub mod fig5;
 pub mod fig6;
 pub mod fig9;
+pub mod kernels;
 pub mod perf;
 pub mod table1;

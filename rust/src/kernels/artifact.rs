@@ -12,12 +12,12 @@
 //! anywhere in the file are rejected at load instead of corrupting
 //! inference.
 //!
-//! ## On-disk layout (version 1, all integers little-endian)
+//! ## On-disk layout (version 2, all integers little-endian)
 //!
 //! ```text
 //! offset  size  field
 //! 0       4     magic  "RSRZ"
-//! 4       4     format version (u32) — currently 1
+//! 4       4     format version (u32) — currently 2 (v1 still readable)
 //! 8       4     kind (u32): 1 = binary RsrIndex, 2 = ternary pair
 //! 12      4     rows (u32)
 //! 16      4     cols (u32)
@@ -37,33 +37,46 @@
 //! …             payload
 //! ```
 //!
-//! The payload stores, for each k-column block in order, the
-//! permutation `σ` (`rows` entries) then the full segmentation `L`
-//! (`2^width + 1` entries). Block geometry (`col_start`, `width`) is
-//! *derived* from `(cols, k)` — not stored — and entries are written at
-//! the narrowest width that fits (`u16` whenever `rows < 2^16`), which
-//! is what gets the artifact to ≲ dense-f32 / 4 at `n ≥ 1024` instead
-//! of the ~0.4× a naive u32 dump achieves. A ternary artifact stores
-//! the `B⁽¹⁾` (plus) payload followed by `B⁽²⁾` (minus), same geometry.
+//! **Version 2 payload** is the [`FlatPlan`] arena, serialized
+//! directly: the whole `sigma_all` arena (every block's `σ`,
+//! concatenated), then the whole `seg_all` arena (every block's `L`,
+//! concatenated). Loading is therefore a checksum pass, **two bulk
+//! widening copies**, and one structural validation — the decoded plan
+//! *is* the execution-time layout, with no per-block `Vec` assembly.
+//! **Version 1** (still read, never written) interleaved the two per
+//! block: `σ₀ L₀ σ₁ L₁ …`. Both versions carry exactly the same
+//! entries, so `payload_bytes` is version-independent.
+//!
+//! Block geometry (`col_start`, `width`) is *derived* from `(cols, k)`
+//! — not stored — and entries are written at the narrowest width that
+//! fits (`u16` whenever `rows < 2^16`), which is what gets the
+//! artifact to ≲ dense-f32 / 4 at `n ≥ 1024` instead of the ~0.4× a
+//! naive u32 dump achieves. A ternary artifact stores the `B⁽¹⁾`
+//! (plus) payload followed by `B⁽²⁾` (minus), same geometry.
 //!
 //! Decoding re-validates every structural invariant
-//! ([`RsrIndex::validate`]) after the checksum passes, so a loaded plan
-//! is exactly as trustworthy as a freshly preprocessed one — the
+//! ([`FlatPlan::from_arena`]) after the checksum passes, so a loaded
+//! plan is exactly as trustworthy as a freshly preprocessed one — the
 //! bounds-check-free hot path relies on this.
 
 use std::io::{Read, Write};
 use std::path::Path;
 
 use super::blocking::column_blocks;
-use super::index::{BlockIndex, RsrIndex, TernaryRsrIndex};
+use super::flat::{FlatPlan, TernaryFlatPlan};
+use super::index::{RsrIndex, TernaryRsrIndex};
 use super::ternary::TernaryMatrix;
 use crate::error::{Error, Result};
 
 /// The `.rsrz` magic bytes.
 pub const RSRZ_MAGIC: &[u8; 4] = b"RSRZ";
 
-/// The format version this build writes and reads.
-pub const RSRZ_VERSION: u32 = 1;
+/// The format version this build writes (v2: arena-ordered payload).
+pub const RSRZ_VERSION: u32 = 2;
+
+/// The oldest format version this build still reads (v1: per-block
+/// interleaved payload).
+pub const RSRZ_MIN_VERSION: u32 = 1;
 
 /// Reject implausible header dimensions before any allocation. The
 /// paper's largest evaluation size is `n = 2^16`; 2^20 leaves headroom
@@ -164,13 +177,14 @@ impl ArtifactMeta {
     }
 }
 
-/// The decoded index an artifact carries.
+/// The decoded plan an artifact carries — already in the contiguous
+/// [`FlatPlan`] execution form (the v2 payload *is* the arena).
 #[derive(Debug, Clone, PartialEq)]
 pub enum ArtifactPayload {
-    /// A binary-matrix index.
-    Binary(RsrIndex),
-    /// A ternary index pair.
-    Ternary(TernaryRsrIndex),
+    /// A binary-matrix plan.
+    Binary(FlatPlan),
+    /// A ternary plan pair.
+    Ternary(TernaryFlatPlan),
 }
 
 /// A plan artifact: header metadata + decoded index, ready to be
@@ -184,32 +198,42 @@ pub struct PlanArtifact {
 }
 
 impl PlanArtifact {
-    /// Wrap a validated binary index for serialization.
+    /// Wrap a validated binary index for serialization (flattened into
+    /// the arena form the payload serializes directly).
     pub fn binary(name: impl Into<String>, index: RsrIndex, scale: f32) -> Result<Self> {
-        index.validate()?;
-        check_writable(index.rows, index.cols, index.k)?;
-        let elem_width = elem_width_for(index.rows);
+        let plan = FlatPlan::from_index(&index)?;
+        Self::binary_flat(name, plan, scale)
+    }
+
+    /// Wrap an already-flat binary plan for serialization.
+    pub fn binary_flat(
+        name: impl Into<String>,
+        plan: FlatPlan,
+        scale: f32,
+    ) -> Result<Self> {
+        check_writable(plan.rows(), plan.cols(), plan.k())?;
+        let elem_width = elem_width_for(plan.rows());
         let meta = ArtifactMeta {
             name: name.into(),
             version: RSRZ_VERSION,
             kind: ArtifactKind::Binary,
-            rows: index.rows,
-            cols: index.cols,
-            k: index.k,
+            rows: plan.rows(),
+            cols: plan.cols(),
+            k: plan.k(),
             scale,
             elem_width,
             weights_fp: 0,
             payload_bytes: expected_payload_bytes(
-                index.rows,
-                index.cols,
-                index.k,
+                plan.rows(),
+                plan.cols(),
+                plan.k(),
                 elem_width,
                 ArtifactKind::Binary,
             ),
         };
         check_name(&meta.name)?;
         check_payload_cap(meta.payload_bytes)?;
-        Ok(Self { meta, payload: ArtifactPayload::Binary(index) })
+        Ok(Self { meta, payload: ArtifactPayload::Binary(plan) })
     }
 
     /// Wrap a validated ternary index pair for serialization.
@@ -218,36 +242,41 @@ impl PlanArtifact {
         index: TernaryRsrIndex,
         scale: f32,
     ) -> Result<Self> {
-        index.validate()?;
-        let (p, m) = (&index.plus, &index.minus);
-        if p.rows != m.rows || p.cols != m.cols || p.k != m.k {
-            return Err(Error::InvalidIndex(
-                "ternary halves disagree on geometry".into(),
-            ));
-        }
-        check_writable(p.rows, p.cols, p.k)?;
-        let elem_width = elem_width_for(p.rows);
+        let plan = TernaryFlatPlan::from_index(&index)?;
+        Self::ternary_flat(name, plan, scale)
+    }
+
+    /// Wrap an already-flat ternary plan pair for serialization.
+    pub fn ternary_flat(
+        name: impl Into<String>,
+        plan: TernaryFlatPlan,
+        scale: f32,
+    ) -> Result<Self> {
+        plan.check_geometry()?;
+        let p = &plan.plus;
+        check_writable(p.rows(), p.cols(), p.k())?;
+        let elem_width = elem_width_for(p.rows());
         let meta = ArtifactMeta {
             name: name.into(),
             version: RSRZ_VERSION,
             kind: ArtifactKind::Ternary,
-            rows: p.rows,
-            cols: p.cols,
-            k: p.k,
+            rows: p.rows(),
+            cols: p.cols(),
+            k: p.k(),
             scale,
             elem_width,
             weights_fp: 0,
             payload_bytes: expected_payload_bytes(
-                p.rows,
-                p.cols,
-                p.k,
+                p.rows(),
+                p.cols(),
+                p.k(),
                 elem_width,
                 ArtifactKind::Ternary,
             ),
         };
         check_name(&meta.name)?;
         check_payload_cap(meta.payload_bytes)?;
-        Ok(Self { meta, payload: ArtifactPayload::Ternary(index) })
+        Ok(Self { meta, payload: ArtifactPayload::Ternary(plan) })
     }
 
     /// Bind this artifact to the weights it was compiled from (see
@@ -258,37 +287,39 @@ impl PlanArtifact {
         self
     }
 
-    /// In-memory bytes of the decoded index (u32 vectors) — what a
-    /// process actually holds after loading; contrast with
+    /// In-memory bytes of the decoded flat plan (arenas + descriptors)
+    /// — what a process actually holds after loading; contrast with
     /// [`ArtifactMeta::payload_bytes`], the on-disk footprint.
     pub fn in_memory_bytes(&self) -> usize {
         match &self.payload {
-            ArtifactPayload::Binary(i) => i.bytes(),
+            ArtifactPayload::Binary(p) => p.bytes(),
             ArtifactPayload::Ternary(t) => t.bytes(),
         }
     }
 
-    /// Serialize to a `.rsrz` stream.
+    /// Serialize to a `.rsrz` stream. Always writes the current format
+    /// version (a v1-loaded artifact is upgraded on re-save).
     pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
-        let m = &self.meta;
+        let mut m = self.meta.clone();
+        m.version = RSRZ_VERSION;
         let mut payload = Vec::with_capacity(m.payload_bytes);
         match &self.payload {
-            ArtifactPayload::Binary(idx) => encode_index(idx, m.elem_width, &mut payload),
+            ArtifactPayload::Binary(p) => encode_flat(p, m.elem_width, &mut payload),
             ArtifactPayload::Ternary(t) => {
-                encode_index(&t.plus, m.elem_width, &mut payload);
-                encode_index(&t.minus, m.elem_width, &mut payload);
+                encode_flat(&t.plus, m.elem_width, &mut payload);
+                encode_flat(&t.minus, m.elem_width, &mut payload);
             }
         }
         debug_assert_eq!(payload.len(), m.payload_bytes);
         w.write_all(RSRZ_MAGIC)?;
-        for v in [RSRZ_VERSION, m.kind.code(), m.rows as u32, m.cols as u32, m.k as u32] {
+        for v in [m.version, m.kind.code(), m.rows as u32, m.cols as u32, m.k as u32] {
             w.write_all(&v.to_le_bytes())?;
         }
         w.write_all(&m.scale.to_le_bytes())?;
         w.write_all(&(m.elem_width as u32).to_le_bytes())?;
         w.write_all(&m.weights_fp.to_le_bytes())?;
         w.write_all(&(payload.len() as u64).to_le_bytes())?;
-        w.write_all(&artifact_checksum(m, &payload).to_le_bytes())?;
+        w.write_all(&artifact_checksum(&m, &payload).to_le_bytes())?;
         w.write_all(&(m.name.len() as u32).to_le_bytes())?;
         w.write_all(m.name.as_bytes())?;
         w.write_all(&payload)?;
@@ -318,15 +349,13 @@ impl PlanArtifact {
         let mut off = 0;
         let decoded = match meta.kind {
             ArtifactKind::Binary => {
-                let idx = decode_index(&meta, &payload, &mut off)?;
-                idx.validate()?;
-                ArtifactPayload::Binary(idx)
+                ArtifactPayload::Binary(decode_flat(&meta, &payload, &mut off)?)
             }
             ArtifactKind::Ternary => {
-                let plus = decode_index(&meta, &payload, &mut off)?;
-                let minus = decode_index(&meta, &payload, &mut off)?;
-                let t = TernaryRsrIndex { plus, minus };
-                t.validate()?;
+                let plus = decode_flat(&meta, &payload, &mut off)?;
+                let minus = decode_flat(&meta, &payload, &mut off)?;
+                let t = TernaryFlatPlan { plus, minus };
+                t.check_geometry()?;
                 ArtifactPayload::Ternary(t)
             }
         };
@@ -420,31 +449,33 @@ fn expected_payload_bytes(
     }
 }
 
-fn encode_index(idx: &RsrIndex, elem_width: usize, out: &mut Vec<u8>) {
-    for blk in &idx.blocks {
-        for &v in blk.sigma.iter().chain(blk.seg.iter()) {
-            if elem_width == 2 {
-                out.extend_from_slice(&(v as u16).to_le_bytes());
-            } else {
-                out.extend_from_slice(&v.to_le_bytes());
-            }
+/// v2 encoding: the flat arena, serialized directly — all of
+/// `sigma_all`, then all of `seg_all`.
+fn encode_flat(plan: &FlatPlan, elem_width: usize, out: &mut Vec<u8>) {
+    for &v in plan.sigma_all().iter().chain(plan.seg_all().iter()) {
+        if elem_width == 2 {
+            out.extend_from_slice(&(v as u16).to_le_bytes());
+        } else {
+            out.extend_from_slice(&v.to_le_bytes());
         }
     }
 }
 
-fn decode_entries(
+/// Bulk widening copy of `n` entries from the payload into `out`.
+fn decode_entries_into(
     payload: &[u8],
     off: &mut usize,
     n: usize,
     elem_width: usize,
-) -> Result<Vec<u32>> {
+    out: &mut Vec<u32>,
+) -> Result<()> {
     let need = n * elem_width;
     if *off + need > payload.len() {
         return Err(Error::Artifact("payload truncated".into()));
     }
     let slice = &payload[*off..*off + need];
     *off += need;
-    let mut out = Vec::with_capacity(n);
+    out.reserve(n);
     if elem_width == 2 {
         for c in slice.chunks_exact(2) {
             out.push(u16::from_le_bytes([c[0], c[1]]) as u32);
@@ -454,23 +485,36 @@ fn decode_entries(
             out.push(u32::from_le_bytes(c.try_into().unwrap()));
         }
     }
-    Ok(out)
+    Ok(())
 }
 
-fn decode_index(meta: &ArtifactMeta, payload: &[u8], off: &mut usize) -> Result<RsrIndex> {
+/// Decode one index's payload into a validated [`FlatPlan`].
+///
+/// v2 is the fast path: the payload *is* the arena, so this is two
+/// bulk copies plus [`FlatPlan::from_arena`] validation. v1 assembles
+/// the same arenas from the per-block interleaved ordering.
+fn decode_flat(meta: &ArtifactMeta, payload: &[u8], off: &mut usize) -> Result<FlatPlan> {
     let geom = column_blocks(meta.cols, meta.k);
-    let mut blocks = Vec::with_capacity(geom.len());
-    for cb in geom {
-        let sigma = decode_entries(payload, off, meta.rows, meta.elem_width)?;
-        let seg = decode_entries(payload, off, (1usize << cb.width) + 1, meta.elem_width)?;
-        blocks.push(BlockIndex {
-            col_start: cb.col_start as u32,
-            width: cb.width as u32,
-            sigma,
-            seg,
-        });
+    let sigma_entries = geom.len() * meta.rows;
+    let seg_entries: usize = geom.iter().map(|cb| (1usize << cb.width) + 1).sum();
+    let mut sigma_all = Vec::new();
+    let mut seg_all = Vec::new();
+    if meta.version == 1 {
+        for cb in &geom {
+            decode_entries_into(payload, off, meta.rows, meta.elem_width, &mut sigma_all)?;
+            decode_entries_into(
+                payload,
+                off,
+                (1usize << cb.width) + 1,
+                meta.elem_width,
+                &mut seg_all,
+            )?;
+        }
+    } else {
+        decode_entries_into(payload, off, sigma_entries, meta.elem_width, &mut sigma_all)?;
+        decode_entries_into(payload, off, seg_entries, meta.elem_width, &mut seg_all)?;
     }
-    Ok(RsrIndex { rows: meta.rows, cols: meta.cols, k: meta.k, blocks })
+    FlatPlan::from_arena(meta.rows, meta.cols, meta.k, sigma_all, seg_all)
 }
 
 fn read_header(r: &mut impl Read) -> Result<(ArtifactMeta, u64)> {
@@ -480,9 +524,10 @@ fn read_header(r: &mut impl Read) -> Result<(ArtifactMeta, u64)> {
         return Err(Error::Artifact("bad magic (not a .rsrz plan artifact)".into()));
     }
     let version = read_u32(r)?;
-    if version != RSRZ_VERSION {
+    if !(RSRZ_MIN_VERSION..=RSRZ_VERSION).contains(&version) {
         return Err(Error::Artifact(format!(
-            "unsupported .rsrz version {version} (this build reads version {RSRZ_VERSION})"
+            "unsupported .rsrz version {version} (this build reads versions \
+             {RSRZ_MIN_VERSION}..={RSRZ_VERSION})"
         )));
     }
     let kind = ArtifactKind::from_code(read_u32(r)?)?;
@@ -630,16 +675,18 @@ mod tests {
         let mut rng = Rng::new(301);
         let b = BinaryMatrix::random(97, 50, 0.5, &mut rng);
         let idx = RsrIndex::preprocess(&b, 5);
-        let art = PlanArtifact::binary("layer0.wq", idx.clone(), 0.25).unwrap();
+        let flat = FlatPlan::from_index(&idx).unwrap();
+        let art = PlanArtifact::binary("layer0.wq", idx, 0.25).unwrap();
         let mut buf = Vec::new();
         art.write_to(&mut buf).unwrap();
         let back = PlanArtifact::read_from(&mut buf.as_slice()).unwrap();
         assert_eq!(back.meta.name, "layer0.wq");
+        assert_eq!(back.meta.version, RSRZ_VERSION);
         assert_eq!(back.meta.k, 5);
         assert_eq!(back.meta.scale, 0.25);
         assert_eq!(back.meta.elem_width, 2);
         match back.payload {
-            ArtifactPayload::Binary(ref got) => assert_eq!(got, &idx),
+            ArtifactPayload::Binary(ref got) => assert_eq!(got, &flat),
             _ => panic!("wrong kind"),
         }
     }
@@ -649,15 +696,80 @@ mod tests {
         let mut rng = Rng::new(307);
         let a = TernaryMatrix::random(64, 40, 1.0 / 3.0, &mut rng);
         let idx = TernaryRsrIndex::preprocess(&a, 4);
-        let art = PlanArtifact::ternary("lm_head", idx.clone(), 1.5).unwrap();
+        let flat = TernaryFlatPlan::from_index(&idx).unwrap();
+        let art = PlanArtifact::ternary("lm_head", idx, 1.5).unwrap();
         let mut buf = Vec::new();
         art.write_to(&mut buf).unwrap();
         let back = PlanArtifact::read_from(&mut buf.as_slice()).unwrap();
         match back.payload {
-            ArtifactPayload::Ternary(ref got) => assert_eq!(got, &idx),
+            ArtifactPayload::Ternary(ref got) => assert_eq!(got, &flat),
             _ => panic!("wrong kind"),
         }
         assert_eq!(back.meta.kind.name(), "ternary");
+    }
+
+    /// Hand-assemble a version-1 stream (per-block interleaved payload)
+    /// for `idx` and check this build still reads it — and that the
+    /// decoded plan is identical to the v2 decode of the same index.
+    #[test]
+    fn v1_artifacts_still_load() {
+        let mut rng = Rng::new(331);
+        let b = BinaryMatrix::random(45, 26, 0.5, &mut rng);
+        let idx = RsrIndex::preprocess(&b, 3);
+        let flat = FlatPlan::from_index(&idx).unwrap();
+        let elem_width = elem_width_for(idx.rows);
+
+        // v1 payload: σ then L per block, in block order.
+        let mut payload = Vec::new();
+        for blk in &idx.blocks {
+            for &v in blk.sigma.iter().chain(blk.seg.iter()) {
+                payload.extend_from_slice(&(v as u16).to_le_bytes());
+            }
+        }
+        let meta = ArtifactMeta {
+            name: "legacy".into(),
+            version: 1,
+            kind: ArtifactKind::Binary,
+            rows: idx.rows,
+            cols: idx.cols,
+            k: idx.k,
+            scale: 0.75,
+            elem_width,
+            weights_fp: 0,
+            payload_bytes: payload.len(),
+        };
+        let mut buf = Vec::new();
+        buf.extend_from_slice(RSRZ_MAGIC);
+        for v in [1u32, meta.kind.code(), meta.rows as u32, meta.cols as u32, meta.k as u32]
+        {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        buf.extend_from_slice(&meta.scale.to_le_bytes());
+        buf.extend_from_slice(&(meta.elem_width as u32).to_le_bytes());
+        buf.extend_from_slice(&meta.weights_fp.to_le_bytes());
+        buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        buf.extend_from_slice(&artifact_checksum(&meta, &payload).to_le_bytes());
+        buf.extend_from_slice(&(meta.name.len() as u32).to_le_bytes());
+        buf.extend_from_slice(meta.name.as_bytes());
+        buf.extend_from_slice(&payload);
+
+        let back = PlanArtifact::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(back.meta.version, 1);
+        assert_eq!(back.meta.scale, 0.75);
+        match back.payload {
+            ArtifactPayload::Binary(ref got) => assert_eq!(got, &flat),
+            _ => panic!("wrong kind"),
+        }
+
+        // Re-saving a v1 artifact upgrades it to the current version.
+        let mut upgraded = Vec::new();
+        back.write_to(&mut upgraded).unwrap();
+        let again = PlanArtifact::read_from(&mut upgraded.as_slice()).unwrap();
+        assert_eq!(again.meta.version, RSRZ_VERSION);
+        match again.payload {
+            ArtifactPayload::Binary(ref got) => assert_eq!(got, &flat),
+            _ => panic!("wrong kind"),
+        }
     }
 
     #[test]

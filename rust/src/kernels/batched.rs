@@ -3,45 +3,236 @@
 //! and the natural extension the paper's §C.1 parallelization implies.
 //!
 //! Per block, the segmented sums of all batch rows are computed in one
-//! pass over the index: for each position, the gathered `v[σ(pos)]`
-//! column is accumulated into `U[batch][segment]`. The index is read
-//! **once per batch** instead of once per vector — at batch size `b`
-//! the per-vector index traffic drops by `b×`, which is exactly why
-//! batched serving amortizes RSR so well (EXPERIMENTS.md §Perf).
+//! pass over the index, so the index is read **once per batch** instead
+//! of once per vector — at batch size `b` the per-vector index traffic
+//! drops by `b×`, which is exactly why batched serving amortizes RSR so
+//! well (EXPERIMENTS.md §Perf).
+//!
+//! ## Layout
+//!
+//! Scratch is **segment-major interleaved**: `U[j·batch + b]` holds
+//! segment `j` of batch row `b`. The activation batch is transposed
+//! once per call into the same interleaving (`VT[s·batch + b]`), so the
+//! innermost loop of the segmented sum is a contiguous `batch`-wide
+//! vector add (`U[j·batch ..] += VT[s·batch ..]`) the compiler
+//! autovectorizes — in the previous row-major layout it was a
+//! `2^k`-strided scatter touching one float per cache line. The RSR++
+//! fold then runs on the interleaved buffer directly: folding
+//! `x'[m] = x[2m] + x[2m+1]` becomes a pair of contiguous `batch`-wide
+//! adds per output value, and each emitted column is written (or, for
+//! the ternary minus half, subtracted) straight into the caller's
+//! output — the ternary path materializes no `batch × cols` temporary.
 
+use super::flat::{FlatPlan, TernaryFlatPlan};
 use super::index::{RsrIndex, TernaryRsrIndex};
-use super::rsrpp::block_product_fold;
 use crate::error::{Error, Result};
+
+/// How a batched fold emits its column into the output.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Emit {
+    /// `out = value` (first / only Prop 2.1 half).
+    Write,
+    /// `out -= value` (the minus half of a ternary plan).
+    Subtract,
+}
+
+/// Interleaved segmented sums for one block: for every segment `j`,
+/// `u[j·batch + b] = Σ_{pos ∈ [L[j], L[j+1])} vt[σ(pos)·batch + b]`.
+///
+/// `vt` is the batch-interleaved activation transpose; the innermost
+/// loop is a contiguous `batch`-wide add.
+#[inline]
+fn segmented_sum_interleaved(
+    sigma: &[u32],
+    seg: &[u32],
+    vt: &[f32],
+    batch: usize,
+    u: &mut [f32],
+) {
+    let two_w = seg.len() - 1;
+    debug_assert_eq!(u.len(), two_w * batch);
+    debug_assert_eq!(vt.len() % batch, 0);
+    for j in 0..two_w {
+        let lo = seg[j] as usize;
+        let hi = seg[j + 1] as usize;
+        let uj = &mut u[j * batch..(j + 1) * batch];
+        uj.fill(0.0);
+        for &s in &sigma[lo..hi] {
+            let row = &vt[s as usize * batch..s as usize * batch + batch];
+            for (acc, &x) in uj.iter_mut().zip(row.iter()) {
+                *acc += x;
+            }
+        }
+    }
+}
+
+/// Batched RSR++ fold on the interleaved buffer: every fold level is a
+/// contiguous `batch`-wide add, and each emitted column goes straight
+/// into `out[b·out_stride + col_start + c]`.
+///
+/// `x` is consumed in place (`2^width · batch` floats); `odd` is
+/// `batch` floats of scratch.
+#[inline]
+fn block_product_fold_interleaved(
+    x: &mut [f32],
+    width: usize,
+    batch: usize,
+    odd: &mut [f32],
+    out: &mut [f32],
+    out_stride: usize,
+    col_start: usize,
+    emit: Emit,
+) {
+    debug_assert!(x.len() >= (1usize << width) * batch);
+    debug_assert_eq!(odd.len(), batch);
+    let mut len = 1usize << width;
+    // Columns are emitted LSB-first: c = width-1 down to 0.
+    for c in (0..width).rev() {
+        let half = len / 2;
+        odd.fill(0.0);
+        for m in 0..half {
+            // Read both halves of the pair before writing: the write
+            // row `m` never overlaps the read rows `2m`/`2m+1` except
+            // at m = 0, where the reads of iteration 0 come first.
+            for b in 0..batch {
+                let a = x[2 * m * batch + b];
+                let bb = x[(2 * m + 1) * batch + b];
+                odd[b] += bb;
+                x[m * batch + b] = a + bb;
+            }
+        }
+        let col = col_start + c;
+        match emit {
+            Emit::Write => {
+                for b in 0..batch {
+                    out[b * out_stride + col] = odd[b];
+                }
+            }
+            Emit::Subtract => {
+                for b in 0..batch {
+                    out[b * out_stride + col] -= odd[b];
+                }
+            }
+        }
+        len = half;
+    }
+}
+
+/// Scratch shared by the binary and ternary batched plans.
+#[derive(Debug, Clone)]
+struct BatchScratch {
+    /// Interleaved segmented sums, `max_batch · max_u`.
+    u: Vec<f32>,
+    /// Batch-interleaved activation transpose, `max_batch · rows`.
+    vt: Vec<f32>,
+    /// Per-level odd-lane sums, `max_batch`.
+    odd: Vec<f32>,
+}
+
+impl BatchScratch {
+    fn new(max_batch: usize, rows: usize, max_u: usize) -> Self {
+        Self {
+            u: vec![0.0; max_batch * max_u],
+            vt: vec![0.0; max_batch * rows],
+            odd: vec![0.0; max_batch],
+        }
+    }
+
+    /// Transpose the row-major `batch × rows` activations into the
+    /// interleaved `vt[s·batch + b]` form.
+    fn transpose_into(&mut self, vs: &[f32], batch: usize, rows: usize) {
+        let vt = &mut self.vt[..batch * rows];
+        for b in 0..batch {
+            let row = &vs[b * rows..(b + 1) * rows];
+            for (s, &x) in row.iter().enumerate() {
+                vt[s * batch + b] = x;
+            }
+        }
+    }
+}
+
+fn check_batch_shapes(
+    rows: usize,
+    cols: usize,
+    max_batch: usize,
+    vs: &[f32],
+    batch: usize,
+    out: &[f32],
+) -> Result<()> {
+    if batch == 0 || batch > max_batch {
+        return Err(Error::ShapeMismatch(format!(
+            "batch {batch} outside 1..={max_batch}"
+        )));
+    }
+    if vs.len() != batch * rows {
+        return Err(Error::ShapeMismatch(format!(
+            "vs len {} != batch*rows {}",
+            vs.len(),
+            batch * rows
+        )));
+    }
+    if out.len() != batch * cols {
+        return Err(Error::ShapeMismatch(format!(
+            "out len {} != batch*cols {}",
+            out.len(),
+            batch * cols
+        )));
+    }
+    Ok(())
+}
+
+/// Run one flat plan's blocks over the interleaved batch, emitting into
+/// `out` per [`Emit`].
+#[inline]
+fn execute_batched_flat(
+    plan: &FlatPlan,
+    scratch: &mut BatchScratch,
+    batch: usize,
+    out: &mut [f32],
+    emit: Emit,
+) {
+    let cols = plan.cols();
+    let vt = &scratch.vt[..batch * plan.rows()];
+    for (i, blk) in plan.blocks().iter().enumerate() {
+        let w = blk.width as usize;
+        let two_w = 1usize << w;
+        let u = &mut scratch.u[..two_w * batch];
+        segmented_sum_interleaved(plan.block_sigma(i), plan.block_seg(i), vt, batch, u);
+        block_product_fold_interleaved(
+            u,
+            w,
+            batch,
+            &mut scratch.odd[..batch],
+            out,
+            cols,
+            blk.col_start as usize,
+            emit,
+        );
+    }
+}
 
 /// Batched RSR++ plan over a binary matrix.
 #[derive(Debug, Clone)]
 pub struct BatchedRsrPlan {
-    index: RsrIndex,
+    plan: FlatPlan,
     max_batch: usize,
-    // Scratch: `U[b * 2^k + j]` segmented sums per batch row.
-    u: Vec<f32>,
-    fold: Vec<f32>,
+    scratch: BatchScratch,
 }
 
 impl BatchedRsrPlan {
     /// Build a plan for batches up to `max_batch` rows.
     pub fn new(index: RsrIndex, max_batch: usize) -> Result<Self> {
-        index.validate()?;
         if max_batch == 0 {
             return Err(Error::Config("max_batch must be >= 1".into()));
         }
-        let max_u = index.blocks.iter().map(|b| 1usize << b.width).max().unwrap_or(0);
-        Ok(Self {
-            index,
-            max_batch,
-            u: vec![0.0; max_batch * max_u],
-            fold: vec![0.0; max_u],
-        })
+        let plan = FlatPlan::from_index(&index)?;
+        let scratch = BatchScratch::new(max_batch, plan.rows(), plan.max_u());
+        Ok(Self { plan, max_batch, scratch })
     }
 
-    /// The underlying index.
-    pub fn index(&self) -> &RsrIndex {
-        &self.index
+    /// The underlying flat plan.
+    pub fn flat(&self) -> &FlatPlan {
+        &self.plan
     }
 
     /// `out[b] = vs[b] · B` for every batch row.
@@ -49,83 +240,43 @@ impl BatchedRsrPlan {
     /// `vs` is row-major `batch × rows`; `out` is row-major
     /// `batch × cols`. `batch ≤ max_batch`.
     pub fn execute(&mut self, vs: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
-        let (n, m) = (self.index.rows, self.index.cols);
-        if batch == 0 || batch > self.max_batch {
-            return Err(Error::ShapeMismatch(format!(
-                "batch {batch} outside 1..={}",
-                self.max_batch
-            )));
-        }
-        if vs.len() != batch * n {
-            return Err(Error::ShapeMismatch(format!(
-                "vs len {} != batch*rows {}",
-                vs.len(),
-                batch * n
-            )));
-        }
-        if out.len() != batch * m {
-            return Err(Error::ShapeMismatch(format!(
-                "out len {} != batch*cols {}",
-                out.len(),
-                batch * m
-            )));
-        }
-
-        for blk in &self.index.blocks {
-            let w = blk.width as usize;
-            let two_w = 1usize << w;
-            let u = &mut self.u[..batch * two_w];
-            u.fill(0.0);
-            // One pass over the index; gather the whole batch column.
-            for j in 0..two_w {
-                let lo = blk.seg[j] as usize;
-                let hi = blk.seg[j + 1] as usize;
-                for &s in &blk.sigma[lo..hi] {
-                    let s = s as usize;
-                    for b in 0..batch {
-                        u[b * two_w + j] += vs[b * n + s];
-                    }
-                }
-            }
-            // Fold each batch row's u into its output slice.
-            let col = blk.col_start as usize;
-            for b in 0..batch {
-                let ub = &u[b * two_w..(b + 1) * two_w];
-                let ob = &mut out[b * m + col..b * m + col + w];
-                block_product_fold(ub, w, ob, &mut self.fold);
-            }
-        }
+        let (n, m) = (self.plan.rows(), self.plan.cols());
+        check_batch_shapes(n, m, self.max_batch, vs, batch, out)?;
+        self.scratch.transpose_into(vs, batch, n);
+        execute_batched_flat(&self.plan, &mut self.scratch, batch, out, Emit::Write);
         Ok(())
     }
 }
 
-/// Batched ternary plan (both Prop 2.1 halves).
+/// Batched ternary plan (both Prop 2.1 halves). The minus half is
+/// subtracted directly into `out` block by block — no `batch × cols`
+/// temporary exists anywhere in the ternary batched path.
 #[derive(Debug, Clone)]
 pub struct BatchedTernaryRsrPlan {
-    plus: BatchedRsrPlan,
-    minus: BatchedRsrPlan,
-    tmp: Vec<f32>,
+    plan: TernaryFlatPlan,
+    max_batch: usize,
+    scratch: BatchScratch,
 }
 
 impl BatchedTernaryRsrPlan {
     /// Build from a preprocessed ternary index.
     pub fn new(index: TernaryRsrIndex, max_batch: usize) -> Result<Self> {
-        let cols = index.plus.cols;
-        Ok(Self {
-            plus: BatchedRsrPlan::new(index.plus, max_batch)?,
-            minus: BatchedRsrPlan::new(index.minus, max_batch)?,
-            tmp: vec![0.0; max_batch * cols],
-        })
+        if max_batch == 0 {
+            return Err(Error::Config("max_batch must be >= 1".into()));
+        }
+        let plan = TernaryFlatPlan::from_index(&index)?;
+        let max_u = plan.plus.max_u().max(plan.minus.max_u());
+        let scratch = BatchScratch::new(max_batch, plan.plus.rows(), max_u);
+        Ok(Self { plan, max_batch, scratch })
     }
 
     /// `out[b] = vs[b] · A` for every batch row.
     pub fn execute(&mut self, vs: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
-        self.plus.execute(vs, batch, out)?;
-        let tmp = &mut self.tmp[..out.len()];
-        self.minus.execute(vs, batch, tmp)?;
-        for (o, t) in out.iter_mut().zip(tmp.iter()) {
-            *o -= t;
-        }
+        let (n, m) = (self.plan.plus.rows(), self.plan.plus.cols());
+        check_batch_shapes(n, m, self.max_batch, vs, batch, out)?;
+        self.scratch.transpose_into(vs, batch, n);
+        execute_batched_flat(&self.plan.plus, &mut self.scratch, batch, out, Emit::Write);
+        execute_batched_flat(&self.plan.minus, &mut self.scratch, batch, out, Emit::Subtract);
         Ok(())
     }
 }
@@ -189,6 +340,25 @@ mod tests {
                 assert!((g - e).abs() < 1e-3 * (1.0 + e.abs()));
             }
         }
+    }
+
+    #[test]
+    fn ternary_batched_overwrites_stale_output() {
+        // `out` is written, not accumulated: garbage in the output
+        // buffer must not survive (the minus half subtracts in place,
+        // so this guards the Write-then-Subtract emit order).
+        let mut rng = Rng::new(0xBAC);
+        let (n, m, batch) = (40, 24, 3);
+        let a = TernaryMatrix::random(n, m, 1.0 / 3.0, &mut rng);
+        let vs = rng.f32_vec(batch * n, -1.0, 1.0);
+        let mut plan =
+            BatchedTernaryRsrPlan::new(TernaryRsrIndex::preprocess(&a, 3), batch)
+                .unwrap();
+        let mut clean = vec![0.0; batch * m];
+        plan.execute(&vs, batch, &mut clean).unwrap();
+        let mut dirty = vec![1e6; batch * m];
+        plan.execute(&vs, batch, &mut dirty).unwrap();
+        assert_eq!(clean, dirty);
     }
 
     #[test]

@@ -1,0 +1,600 @@
+//! The **flat plan** — the contiguous, cache-streamable execution form
+//! of an [`RsrIndex`].
+//!
+//! [`RsrIndex`] is the *preprocessing* output (paper Algorithm 1): one
+//! [`BlockIndex`](super::index::BlockIndex) per k-column block, each
+//! owning its own `sigma`/`seg` heap allocations. That shape is right
+//! for building, validating and serializing, but wrong for executing:
+//! a single `v·B` walks `2·⌈m/k⌉` scattered `Vec`s, so the prefetcher
+//! restarts at every block boundary and the per-block descriptors are
+//! spread across the heap.
+//!
+//! A [`FlatPlan`] lays the same data out CSR-style in **two arenas**:
+//!
+//! ```text
+//!   sigma_all: [ σ₀ (rows) | σ₁ (rows) | … | σ_{nb−1} (rows) ]
+//!   seg_all:   [ L₀ (2^w₀+1) | L₁ (2^w₁+1) | … | L_{nb−1} ]
+//!   blocks:    [ (col_start, width, sigma_off, seg_off) … ]   (16 B each)
+//! ```
+//!
+//! Execution streams the two arenas front to back — exactly the access
+//! pattern hardware prefetchers reward — and the kernels on top are
+//! written for instruction-level parallelism: segmented sums gather
+//! with four independent accumulators (or an AVX2 `vgatherdps` path
+//! selected once at runtime), and the RSR++ fold is a pairwise loop
+//! the compiler can autovectorize
+//! ([`block_product_fold`](super::rsrpp::block_product_fold)).
+//!
+//! A `FlatPlan` validates every structural invariant at construction
+//! ([`FlatPlan::from_index`] / [`FlatPlan::from_arena`]) and is
+//! immutable afterwards, so the bounds-check-free kernels may trust it.
+//! Every executing plan type — [`super::rsr::RsrPlan`],
+//! [`super::rsrpp::RsrPlusPlusPlan`], the batched/parallel plans and
+//! [`crate::runtime::SharedRsrPlan`] — is a thin wrapper around one.
+
+use super::blocking::column_blocks;
+use super::index::{RsrIndex, TernaryRsrIndex};
+use super::permutation::is_permutation;
+use super::rsrpp::block_product_fold;
+use super::segmentation::validate as validate_seg;
+use crate::error::{Error, Result};
+
+/// Descriptor of one k-column block inside the arenas: 16 bytes, so a
+/// whole plan's geometry fits in a couple of cache lines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlatBlock {
+    /// First output column this block covers.
+    pub col_start: u32,
+    /// Block width (`k`, or less for the ragged tail).
+    pub width: u32,
+    /// Offset of this block's `σ` in `sigma_all` (always `i · rows`).
+    pub sigma_off: u32,
+    /// Offset of this block's `L` in `seg_all`.
+    pub seg_off: u32,
+}
+
+/// The contiguous execution form of one binary matrix's RSR index:
+/// two arenas plus per-block descriptors. See the module docs for the
+/// layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlatPlan {
+    rows: usize,
+    cols: usize,
+    k: usize,
+    sigma_all: Vec<u32>,
+    seg_all: Vec<u32>,
+    blocks: Vec<FlatBlock>,
+    max_u: usize,
+}
+
+impl FlatPlan {
+    /// Build (and validate) a flat plan from a preprocessed index.
+    /// The index's per-block `Vec`s are copied once into the arenas;
+    /// the index itself can be dropped afterwards.
+    pub fn from_index(index: &RsrIndex) -> Result<Self> {
+        index.validate()?;
+        let nb = index.blocks.len();
+        let sigma_len = nb * index.rows;
+        let seg_len: usize =
+            index.blocks.iter().map(|b| (1usize << b.width) + 1).sum();
+        check_arena_offsets(sigma_len, seg_len)?;
+        let mut sigma_all = Vec::with_capacity(sigma_len);
+        let mut seg_all = Vec::with_capacity(seg_len);
+        let mut blocks = Vec::with_capacity(nb);
+        for blk in &index.blocks {
+            blocks.push(FlatBlock {
+                col_start: blk.col_start,
+                width: blk.width,
+                sigma_off: sigma_all.len() as u32,
+                seg_off: seg_all.len() as u32,
+            });
+            sigma_all.extend_from_slice(&blk.sigma);
+            seg_all.extend_from_slice(&blk.seg);
+        }
+        let max_u =
+            index.blocks.iter().map(|b| 1usize << b.width).max().unwrap_or(0);
+        Ok(Self {
+            rows: index.rows,
+            cols: index.cols,
+            k: index.k,
+            sigma_all,
+            seg_all,
+            blocks,
+            max_u,
+        })
+    }
+
+    /// Build (and validate) a flat plan directly from raw arenas — the
+    /// `.rsrz` v2 load path: block geometry is derived from
+    /// `(cols, k)`, then every block's `σ`/`L` slice is checked exactly
+    /// as [`RsrIndex::validate`] would.
+    pub fn from_arena(
+        rows: usize,
+        cols: usize,
+        k: usize,
+        sigma_all: Vec<u32>,
+        seg_all: Vec<u32>,
+    ) -> Result<Self> {
+        if k == 0 || k > 16 {
+            return Err(Error::InvalidIndex(format!("bad blocking parameter k={k}")));
+        }
+        let geom = column_blocks(cols, k);
+        let expect_sigma = geom.len() * rows;
+        let expect_seg: usize = geom.iter().map(|cb| (1usize << cb.width) + 1).sum();
+        if sigma_all.len() != expect_sigma || seg_all.len() != expect_seg {
+            return Err(Error::InvalidIndex(format!(
+                "arena sizes {}+{} do not match geometry ({expect_sigma}+{expect_seg})",
+                sigma_all.len(),
+                seg_all.len()
+            )));
+        }
+        check_arena_offsets(expect_sigma, expect_seg)?;
+        let mut blocks = Vec::with_capacity(geom.len());
+        let (mut so, mut go) = (0usize, 0usize);
+        let mut max_u = 0usize;
+        for cb in &geom {
+            let two_w = 1usize << cb.width;
+            if !is_permutation(&sigma_all[so..so + rows], rows) {
+                return Err(Error::InvalidIndex(format!(
+                    "sigma at col {} is not a permutation",
+                    cb.col_start
+                )));
+            }
+            validate_seg(&seg_all[go..go + two_w + 1], cb.width, rows)
+                .map_err(Error::InvalidIndex)?;
+            blocks.push(FlatBlock {
+                col_start: cb.col_start as u32,
+                width: cb.width as u32,
+                sigma_off: so as u32,
+                seg_off: go as u32,
+            });
+            so += rows;
+            go += two_w + 1;
+            max_u = max_u.max(two_w);
+        }
+        Ok(Self { rows, cols, k, sigma_all, seg_all, blocks, max_u })
+    }
+
+    /// Rows of the planned matrix (`n`, the activation length).
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Columns of the planned matrix (`m`, the output length).
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Blocking parameter the index was preprocessed with.
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Per-block descriptors, in column order.
+    #[inline]
+    pub fn blocks(&self) -> &[FlatBlock] {
+        &self.blocks
+    }
+
+    /// The permutation arena (every block's `σ`, concatenated).
+    #[inline]
+    pub fn sigma_all(&self) -> &[u32] {
+        &self.sigma_all
+    }
+
+    /// The segmentation arena (every block's `L`, concatenated).
+    #[inline]
+    pub fn seg_all(&self) -> &[u32] {
+        &self.seg_all
+    }
+
+    /// Largest `2^width` across blocks — the `u` scratch size every
+    /// executor needs.
+    #[inline]
+    pub fn max_u(&self) -> usize {
+        self.max_u
+    }
+
+    /// Block `i`'s permutation slice (`rows` entries).
+    #[inline]
+    pub fn block_sigma(&self, i: usize) -> &[u32] {
+        let off = self.blocks[i].sigma_off as usize;
+        &self.sigma_all[off..off + self.rows]
+    }
+
+    /// Block `i`'s full segmentation slice (`2^width + 1` entries).
+    #[inline]
+    pub fn block_seg(&self, i: usize) -> &[u32] {
+        let blk = &self.blocks[i];
+        let off = blk.seg_off as usize;
+        &self.seg_all[off..off + (1usize << blk.width) + 1]
+    }
+
+    /// Heap bytes the plan occupies (arenas + descriptors) — the Fig 5
+    /// "after preprocessing" number at the execution layer.
+    pub fn bytes(&self) -> usize {
+        (self.sigma_all.len() + self.seg_all.len()) * 4
+            + self.blocks.len() * std::mem::size_of::<FlatBlock>()
+            + 4 * 4
+    }
+
+    /// Reconstruct the boxed-per-block index form (serialization of
+    /// `.rsi`, debugging, tests).
+    pub fn to_index(&self) -> RsrIndex {
+        let blocks = (0..self.blocks.len())
+            .map(|i| super::index::BlockIndex {
+                col_start: self.blocks[i].col_start,
+                width: self.blocks[i].width,
+                sigma: self.block_sigma(i).to_vec(),
+                seg: self.block_seg(i).to_vec(),
+            })
+            .collect();
+        RsrIndex { rows: self.rows, cols: self.cols, k: self.k, blocks }
+    }
+}
+
+/// Arena offsets are stored as `u32` in [`FlatBlock`]; with dimensions
+/// capped at `2^20` a plan can theoretically exceed that, so refuse to
+/// build one we could not address. (`.rsrz` payload caps reject such
+/// sizes long before this.)
+fn check_arena_offsets(sigma_len: usize, seg_len: usize) -> Result<()> {
+    if sigma_len > u32::MAX as usize || seg_len > u32::MAX as usize {
+        return Err(Error::InvalidIndex(format!(
+            "index too large for flat-plan u32 offsets ({sigma_len} sigma entries)"
+        )));
+    }
+    Ok(())
+}
+
+/// Flat plan pair for a ternary matrix (`A = B⁽¹⁾ − B⁽²⁾`, Prop 2.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TernaryFlatPlan {
+    /// Plan of `B⁽¹⁾ = [A == +1]`.
+    pub plus: FlatPlan,
+    /// Plan of `B⁽²⁾ = [A == −1]`.
+    pub minus: FlatPlan,
+}
+
+impl TernaryFlatPlan {
+    /// Build from a preprocessed ternary index pair.
+    pub fn from_index(index: &TernaryRsrIndex) -> Result<Self> {
+        let plan = Self {
+            plus: FlatPlan::from_index(&index.plus)?,
+            minus: FlatPlan::from_index(&index.minus)?,
+        };
+        plan.check_geometry()?;
+        Ok(plan)
+    }
+
+    /// Both halves must share `(rows, cols, k)` — the batched/parallel
+    /// ternary executors walk their blocks in lockstep.
+    pub fn check_geometry(&self) -> Result<()> {
+        let (p, m) = (&self.plus, &self.minus);
+        if p.rows != m.rows || p.cols != m.cols || p.k != m.k {
+            return Err(Error::InvalidIndex(
+                "ternary halves disagree on geometry".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Heap bytes across both halves.
+    pub fn bytes(&self) -> usize {
+        self.plus.bytes() + self.minus.bytes()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Gather kernels (segmented sums over the arena)
+// ---------------------------------------------------------------------------
+
+/// Gather-sum `Σ v[idx[_]]` with four independent accumulators, so the
+/// loads and adds overlap instead of forming one serial `acc +=` chain.
+///
+/// # Safety
+/// Every entry of `idx` must be `< v.len()`. Plan executors get this
+/// for free: their `idx` is a sub-slice of a validated permutation of
+/// `0..rows` and shapes are checked before the hot loop.
+#[inline]
+pub unsafe fn gather_sum_scalar(idx: &[u32], v: &[f32]) -> f32 {
+    let mut acc0 = 0.0f32;
+    let mut acc1 = 0.0f32;
+    let mut acc2 = 0.0f32;
+    let mut acc3 = 0.0f32;
+    let mut chunks = idx.chunks_exact(4);
+    // SAFETY: see the contract above; `c` has exactly 4 entries.
+    unsafe {
+        for c in &mut chunks {
+            acc0 += *v.get_unchecked(*c.get_unchecked(0) as usize);
+            acc1 += *v.get_unchecked(*c.get_unchecked(1) as usize);
+            acc2 += *v.get_unchecked(*c.get_unchecked(2) as usize);
+            acc3 += *v.get_unchecked(*c.get_unchecked(3) as usize);
+        }
+        for &s in chunks.remainder() {
+            acc0 += *v.get_unchecked(s as usize);
+        }
+    }
+    (acc0 + acc1) + (acc2 + acc3)
+}
+
+/// AVX2 gather-sum: two in-flight `vgatherdps` streams (16 floats per
+/// iteration), horizontal reduction at the end, scalar tail.
+///
+/// # Safety
+/// Caller must ensure AVX2 is available **and** every `idx` entry is
+/// `< v.len()` (same contract as [`gather_sum_scalar`]).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gather_sum_avx2(idx: &[u32], v: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let n = idx.len();
+    let p = idx.as_ptr();
+    let base = v.as_ptr();
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let ix0 = _mm256_loadu_si256(p.add(i) as *const __m256i);
+        let ix1 = _mm256_loadu_si256(p.add(i + 8) as *const __m256i);
+        acc0 = _mm256_add_ps(acc0, _mm256_i32gather_ps::<4>(base, ix0));
+        acc1 = _mm256_add_ps(acc1, _mm256_i32gather_ps::<4>(base, ix1));
+        i += 16;
+    }
+    if i + 8 <= n {
+        let ix = _mm256_loadu_si256(p.add(i) as *const __m256i);
+        acc0 = _mm256_add_ps(acc0, _mm256_i32gather_ps::<4>(base, ix));
+        i += 8;
+    }
+    let acc = _mm256_add_ps(acc0, acc1);
+    // Horizontal sum of the 8 lanes (SSE-level shuffles).
+    let lo = _mm256_castps256_ps128(acc);
+    let hi = _mm256_extractf128_ps::<1>(acc);
+    let sum4 = _mm_add_ps(lo, hi);
+    let sum2 = _mm_add_ps(sum4, _mm_movehl_ps(sum4, sum4));
+    let sum1 = _mm_add_ss(sum2, _mm_shuffle_ps::<0b01>(sum2, sum2));
+    let mut total = _mm_cvtss_f32(sum1);
+    while i < n {
+        total += *v.get_unchecked(*p.add(i) as usize);
+        i += 1;
+    }
+    total
+}
+
+/// Segments shorter than this stay on the scalar path even when AVX2
+/// is available — a `vgatherdps` setup + horizontal reduction does not
+/// pay for itself on a handful of elements.
+#[cfg(target_arch = "x86_64")]
+const AVX2_MIN_GATHER: usize = 16;
+
+/// Whether the AVX2 gather path is usable, detected once per process.
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    use std::sync::atomic::{AtomicU8, Ordering};
+    static STATE: AtomicU8 = AtomicU8::new(0);
+    match STATE.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => {
+            let ok = is_x86_feature_detected!("avx2");
+            STATE.store(if ok { 1 } else { 2 }, Ordering::Relaxed);
+            ok
+        }
+    }
+}
+
+/// Gather-sum with runtime SIMD dispatch: AVX2 `vgatherdps` on x86-64
+/// CPUs that have it (for segments long enough to amortize the setup),
+/// the 4-accumulator scalar kernel everywhere else. Results differ
+/// from the scalar path only by f32 re-association.
+///
+/// # Safety
+/// Same contract as [`gather_sum_scalar`]: every `idx` entry `< v.len()`.
+#[inline]
+pub unsafe fn gather_sum(idx: &[u32], v: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if idx.len() >= AVX2_MIN_GATHER && avx2_available() {
+            // SAFETY: AVX2 presence checked; index bounds per contract.
+            return unsafe { gather_sum_avx2(idx, v) };
+        }
+    }
+    // SAFETY: forwarded contract.
+    unsafe { gather_sum_scalar(idx, v) }
+}
+
+/// Segmented sums over one block's arena slices (paper Eq 5 on the
+/// flat layout): `u[j] = Σ_{pos ∈ [L[j], L[j+1])} v[σ(pos)]`.
+///
+/// # Safety
+/// `sigma`/`seg` must be the matching [`FlatPlan::block_sigma`] /
+/// [`FlatPlan::block_seg`] slices of a **validated** plan and
+/// `v.len()` must equal that plan's `rows()` — the gather kernels skip
+/// bounds checks under that contract. (Out-of-range `seg` values would
+/// already panic on the safe `sigma[lo..hi]` slicing.)
+#[inline]
+pub unsafe fn segmented_sum_flat(sigma: &[u32], seg: &[u32], v: &[f32], u: &mut [f32]) {
+    debug_assert_eq!(u.len() + 1, seg.len());
+    debug_assert_eq!(*seg.last().unwrap() as usize, sigma.len());
+    for j in 0..u.len() {
+        let lo = seg[j] as usize;
+        let hi = seg[j + 1] as usize;
+        // SAFETY: forwarded contract (sigma entries < rows == v.len()).
+        u[j] = unsafe { gather_sum(&sigma[lo..hi], v) };
+    }
+}
+
+/// [`segmented_sum_flat`] pinned to the scalar kernel — the reference
+/// the dispatch-path property tests compare against, and the only path
+/// on non-x86 targets.
+///
+/// # Safety
+/// Same contract as [`segmented_sum_flat`].
+#[inline]
+pub unsafe fn segmented_sum_flat_scalar(sigma: &[u32], seg: &[u32], v: &[f32], u: &mut [f32]) {
+    debug_assert_eq!(u.len() + 1, seg.len());
+    for j in 0..u.len() {
+        let lo = seg[j] as usize;
+        let hi = seg[j + 1] as usize;
+        // SAFETY: forwarded contract (sigma entries < rows == v.len()).
+        u[j] = unsafe { gather_sum_scalar(&sigma[lo..hi], v) };
+    }
+}
+
+/// The shared RSR++ hot loop over a flat plan: segmented sums + fold
+/// per block. Both the owned [`super::rsrpp::RsrPlusPlusPlan`] and the
+/// store-shared [`crate::runtime::SharedRsrPlan`] call this, so their
+/// outputs are bit-identical by construction.
+///
+/// `u` and `fold` must each hold at least [`FlatPlan::max_u`] floats;
+/// shapes of `v`/`out` are the caller's contract.
+#[inline]
+pub(crate) fn execute_rsrpp_flat(
+    plan: &FlatPlan,
+    v: &[f32],
+    out: &mut [f32],
+    u: &mut [f32],
+    fold: &mut [f32],
+) {
+    // A hard check (not debug-only): it makes the unchecked gathers
+    // below sound regardless of the caller, and costs one comparison
+    // per execute.
+    assert_eq!(v.len(), plan.rows(), "activation length must match plan rows");
+    for (i, blk) in plan.blocks.iter().enumerate() {
+        let w = blk.width as usize;
+        let u = &mut u[..1 << w];
+        // SAFETY: the slices come from a validated plan and
+        // v.len() == rows was just asserted.
+        unsafe { segmented_sum_flat(plan.block_sigma(i), plan.block_seg(i), v, u) };
+        let col = blk.col_start as usize;
+        block_product_fold(u, w, &mut out[col..col + w], fold);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::binary::BinaryMatrix;
+    use super::super::rsr::segmented_sum;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn flat_plan_mirrors_index() {
+        let mut rng = Rng::new(2024);
+        let b = BinaryMatrix::random(97, 50, 0.5, &mut rng);
+        let idx = RsrIndex::preprocess(&b, 5);
+        let flat = FlatPlan::from_index(&idx).unwrap();
+        assert_eq!(flat.rows(), 97);
+        assert_eq!(flat.cols(), 50);
+        assert_eq!(flat.blocks().len(), idx.blocks.len());
+        for (i, blk) in idx.blocks.iter().enumerate() {
+            assert_eq!(flat.block_sigma(i), &blk.sigma[..]);
+            assert_eq!(flat.block_seg(i), &blk.seg[..]);
+            assert_eq!(flat.blocks()[i].col_start, blk.col_start);
+            assert_eq!(flat.blocks()[i].width, blk.width);
+        }
+        assert_eq!(flat.to_index(), idx);
+    }
+
+    #[test]
+    fn from_arena_round_trips_and_validates() {
+        let mut rng = Rng::new(2025);
+        let b = BinaryMatrix::random(64, 30, 0.5, &mut rng);
+        let idx = RsrIndex::preprocess(&b, 4);
+        let flat = FlatPlan::from_index(&idx).unwrap();
+        let back = FlatPlan::from_arena(
+            64,
+            30,
+            4,
+            flat.sigma_all().to_vec(),
+            flat.seg_all().to_vec(),
+        )
+        .unwrap();
+        assert_eq!(back, flat);
+        // Corrupt a sigma entry into a duplicate → rejected.
+        let mut bad = flat.sigma_all().to_vec();
+        bad[0] = bad[1];
+        assert!(FlatPlan::from_arena(64, 30, 4, bad, flat.seg_all().to_vec()).is_err());
+        // Wrong arena length → rejected.
+        assert!(FlatPlan::from_arena(
+            64,
+            30,
+            4,
+            flat.sigma_all()[1..].to_vec(),
+            flat.seg_all().to_vec()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn flat_segmented_sums_match_checked_reference() {
+        let mut rng = Rng::new(2026);
+        for (n, m, k) in [(100, 30, 4), (97, 61, 7), (33, 5, 3)] {
+            let b = BinaryMatrix::random(n, m, 0.5, &mut rng);
+            let idx = RsrIndex::preprocess(&b, k);
+            let flat = FlatPlan::from_index(&idx).unwrap();
+            let v = rng.f32_vec(n, -1.0, 1.0);
+            for (i, blk) in idx.blocks.iter().enumerate() {
+                let two_w = 1usize << blk.width;
+                let mut expect = vec![0.0f32; two_w];
+                segmented_sum(blk, &v, &mut expect);
+                let mut scalar = vec![0.0f32; two_w];
+                // SAFETY: slices of a validated plan; v.len() == rows.
+                unsafe {
+                    segmented_sum_flat_scalar(
+                        flat.block_sigma(i),
+                        flat.block_seg(i),
+                        &v,
+                        &mut scalar,
+                    );
+                }
+                let mut dispatched = vec![0.0f32; two_w];
+                // SAFETY: as above.
+                unsafe {
+                    segmented_sum_flat(
+                        flat.block_sigma(i),
+                        flat.block_seg(i),
+                        &v,
+                        &mut dispatched,
+                    );
+                }
+                for j in 0..two_w {
+                    let tol = 1e-4 * (1.0 + expect[j].abs());
+                    assert!((scalar[j] - expect[j]).abs() <= tol);
+                    assert!((dispatched[j] - expect[j]).abs() <= tol);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gather_sum_handles_all_lengths() {
+        // Cross the 4-wide scalar unroll and the 8/16-wide AVX2 widths.
+        let mut rng = Rng::new(2027);
+        let v = rng.f32_vec(256, -1.0, 1.0);
+        for len in 0..=67usize {
+            let idx: Vec<u32> = (0..len).map(|i| ((i * 37) % 256) as u32).collect();
+            let expect: f64 = idx.iter().map(|&s| v[s as usize] as f64).sum();
+            // SAFETY: every index is < 256 == v.len() by construction.
+            for got in [unsafe { gather_sum_scalar(&idx, &v) }, unsafe { gather_sum(&idx, &v) }] {
+                assert!(
+                    (got as f64 - expect).abs() <= 1e-4 * (1.0 + expect.abs()),
+                    "len {len}: {got} vs {expect}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ternary_flat_plan_geometry_checked() {
+        use super::super::ternary::TernaryMatrix;
+        let mut rng = Rng::new(2028);
+        let a = TernaryMatrix::random(40, 24, 1.0 / 3.0, &mut rng);
+        let idx = TernaryRsrIndex::preprocess(&a, 3);
+        let t = TernaryFlatPlan::from_index(&idx).unwrap();
+        assert!(t.bytes() > 0);
+        t.check_geometry().unwrap();
+    }
+}

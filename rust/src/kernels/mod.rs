@@ -36,6 +36,7 @@ pub mod artifact;
 pub mod batched;
 pub mod binary;
 pub mod blocking;
+pub mod flat;
 pub mod fused;
 pub mod index;
 pub mod optimal_k;
@@ -51,6 +52,7 @@ pub mod ternary;
 
 pub use artifact::{ArtifactKind, ArtifactMeta, ArtifactPayload, PlanArtifact};
 pub use binary::BinaryMatrix;
+pub use flat::{FlatBlock, FlatPlan, TernaryFlatPlan};
 pub use index::{BinMatrix, BlockIndex, RsrIndex, TernaryRsrIndex};
 pub use rsr::{rsr_mul, RsrPlan};
 pub use rsrpp::{rsrpp_mul, RsrPlusPlusPlan};

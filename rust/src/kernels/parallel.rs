@@ -4,116 +4,211 @@
 //! only columns `[iₛ, iₛ+width)` of the output. With `c` cores the
 //! time drops to `O(n²/(c·log n))` for RSR++.
 //!
-//! Each thread carries its own `u`/fold scratch; the output is split
-//! into disjoint per-block slices up front so no synchronization is
-//! needed beyond the work-stealing counter.
+//! The hot path is spawn-free and lock-free: a
+//! [`PersistentPool`](crate::util::threadpool::PersistentPool) of
+//! workers is built once per plan, every worker lane owns a
+//! pre-allocated `u`/fold scratch slot, and the per-block output
+//! ranges come straight from the flat-plan descriptors —
+//! `(col_start, width)` are disjoint by construction (validated at
+//! build), so each block writes its own output slice with no
+//! synchronization at all. The previous implementation paid a
+//! `thread::scope` spawn per worker per call, a `Vec` of output slices
+//! and a `Mutex` lock per block.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::cell::UnsafeCell;
 
+use super::flat::{segmented_sum_flat, FlatPlan, TernaryFlatPlan};
 use super::index::{RsrIndex, TernaryRsrIndex};
-use super::rsr::{check_shapes, segmented_sum_unchecked};
+use super::rsr::check_shapes;
 use super::rsrpp::block_product_fold;
 use crate::error::Result;
+use crate::util::threadpool::PersistentPool;
 
-/// Parallel RSR++ plan: validated index + thread count.
-#[derive(Debug, Clone)]
+/// One worker lane's `(u, fold)` scratch. Wrapped in an `UnsafeCell`
+/// so the `Fn` closure handed to the pool can mutate it.
+struct LaneScratch(UnsafeCell<(Vec<f32>, Vec<f32>)>);
+
+// SAFETY: lane `w` is accessed only by the pool worker with index `w`
+// (the pool guarantees worker indices are unique among concurrently
+// running closure invocations), so no slot is ever aliased.
+unsafe impl Sync for LaneScratch {}
+
+impl LaneScratch {
+    fn new(max_u: usize) -> Self {
+        Self(UnsafeCell::new((vec![0.0; max_u], vec![0.0; max_u])))
+    }
+}
+
+fn lanes(threads: usize, max_u: usize) -> Vec<LaneScratch> {
+    (0..threads).map(|_| LaneScratch::new(max_u)).collect()
+}
+
+/// Raw output base pointer, sendable to pool workers. Each block writes
+/// the disjoint `[col_start, col_start + width)` range.
+#[derive(Clone, Copy)]
+struct OutPtr(*mut f32);
+unsafe impl Send for OutPtr {}
+unsafe impl Sync for OutPtr {}
+
+/// Execute one block of `plan` into `out_ptr` using lane `w`'s scratch.
+///
+/// # Safety
+/// * `out_ptr` points at a live `[f32]` of length `plan.cols()`;
+/// * no other concurrent invocation uses the same block index `i`
+///   (disjoint output columns) or the same lane `w` (exclusive
+///   scratch).
+unsafe fn run_block(
+    plan: &FlatPlan,
+    v: &[f32],
+    out_ptr: OutPtr,
+    scratch: &[LaneScratch],
+    w: usize,
+    i: usize,
+) {
+    let blk = &plan.blocks()[i];
+    let width = blk.width as usize;
+    let (u, fold) = &mut *scratch[w].0.get();
+    let u = &mut u[..1 << width];
+    segmented_sum_flat(plan.block_sigma(i), plan.block_seg(i), v, u);
+    let out =
+        std::slice::from_raw_parts_mut(out_ptr.0.add(blk.col_start as usize), width);
+    block_product_fold(u, width, out, fold);
+}
+
+/// Parallel RSR++ plan: flat arena + a persistent worker pool.
 pub struct ParallelRsrPlan {
-    index: RsrIndex,
-    threads: usize,
+    plan: FlatPlan,
+    pool: PersistentPool,
+    scratch: Vec<LaneScratch>,
+}
+
+impl std::fmt::Debug for ParallelRsrPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ParallelRsrPlan")
+            .field("rows", &self.plan.rows())
+            .field("cols", &self.plan.cols())
+            .field("threads", &self.pool.threads())
+            .finish()
+    }
 }
 
 impl ParallelRsrPlan {
-    /// Build with an explicit thread count (`0` → default).
+    /// Build with an explicit thread count (`0` → default). Workers are
+    /// spawned here, once; `execute` never spawns. The pool is **owned
+    /// by this plan** — threads beyond the block count would never get
+    /// work, so the lane count is capped there; prefer the (shared,
+    /// serial-per-thread) RSR++ backend when running many plans
+    /// concurrently, or reuse one parallel plan per matrix.
     pub fn new(index: RsrIndex, threads: usize) -> Result<Self> {
-        index.validate()?;
-        let threads = if threads == 0 {
-            crate::util::threadpool::default_threads()
-        } else {
-            threads
-        };
-        Ok(Self { index, threads })
+        let plan = FlatPlan::from_index(&index)?;
+        let threads = resolve_threads(threads).min(plan.blocks().len().max(1));
+        let pool = PersistentPool::new(threads);
+        let scratch = lanes(pool.threads(), plan.max_u());
+        Ok(Self { plan, pool, scratch })
     }
 
-    /// The underlying index.
-    pub fn index(&self) -> &RsrIndex {
-        &self.index
+    /// The underlying flat plan.
+    pub fn flat(&self) -> &FlatPlan {
+        &self.plan
     }
 
     /// Configured worker count.
     pub fn threads(&self) -> usize {
-        self.threads
+        self.pool.threads()
     }
 
-    /// `out = v · B`, blocks distributed across threads.
-    pub fn execute(&self, v: &[f32], out: &mut [f32]) -> Result<()> {
-        check_shapes(&self.index, v, out)?;
-        let blocks = &self.index.blocks;
-        if blocks.is_empty() {
+    /// Index bytes held by this plan.
+    pub fn index_bytes(&self) -> usize {
+        self.plan.bytes()
+    }
+
+    /// `out = v · B`, blocks distributed across the persistent pool.
+    pub fn execute(&mut self, v: &[f32], out: &mut [f32]) -> Result<()> {
+        check_shapes(self.plan.rows(), self.plan.cols(), v, out)?;
+        if self.plan.blocks().is_empty() {
             return Ok(());
         }
-
-        // Split `out` into per-block disjoint slices.
-        let mut slices: Vec<&mut [f32]> = Vec::with_capacity(blocks.len());
-        let mut rest = out;
-        for blk in blocks {
-            let (head, tail) = rest.split_at_mut(blk.width as usize);
-            slices.push(head);
-            rest = tail;
-        }
-
-        let max_u = blocks.iter().map(|b| 1usize << b.width).max().unwrap();
-        let next = AtomicUsize::new(0);
-        let slices = std::sync::Mutex::new(slices.into_iter().map(Some).collect::<Vec<_>>());
-
-        std::thread::scope(|scope| {
-            for _ in 0..self.threads.min(blocks.len()) {
-                scope.spawn(|| {
-                    let mut u = vec![0.0f32; max_u];
-                    let mut fold = vec![0.0f32; max_u];
-                    loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= blocks.len() {
-                            break;
-                        }
-                        // Take ownership of this block's output slice.
-                        let slice = {
-                            let mut guard = slices.lock().unwrap();
-                            guard[i].take().expect("block claimed once")
-                        };
-                        let blk = &blocks[i];
-                        let w = blk.width as usize;
-                        segmented_sum_unchecked(blk, v, &mut u[..1 << w]);
-                        block_product_fold(&u[..1 << w], w, slice, &mut fold);
-                    }
-                });
-            }
+        let plan = &self.plan;
+        let scratch = &self.scratch;
+        let out_ptr = OutPtr(out.as_mut_ptr());
+        self.pool.run(plan.blocks().len(), |w, i| {
+            // SAFETY: chunk indices are unique (disjoint columns) and
+            // worker lanes are unique; `out` outlives the call because
+            // `run` blocks until every worker quiesces.
+            unsafe { run_block(plan, v, out_ptr, scratch, w, i) };
         });
         Ok(())
     }
 }
 
-/// Parallel ternary plan (`A = B⁽¹⁾ − B⁽²⁾`, both halves parallel).
-#[derive(Debug, Clone)]
+/// Parallel ternary plan (`A = B⁽¹⁾ − B⁽²⁾`). Both halves are
+/// dispatched in a **single** pool generation — chunks `0..nb` run the
+/// plus half into `out`, chunks `nb..2·nb` run the minus half into the
+/// plan-owned `tmp` — followed by one vectorizable subtraction. No
+/// allocation on the execute path (the seed version allocated a
+/// `cols`-sized `Vec` per call).
 pub struct ParallelTernaryRsrPlan {
-    plus: ParallelRsrPlan,
-    minus: ParallelRsrPlan,
+    plan: TernaryFlatPlan,
+    pool: PersistentPool,
+    scratch: Vec<LaneScratch>,
+    tmp: Vec<f32>,
+}
+
+impl std::fmt::Debug for ParallelTernaryRsrPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ParallelTernaryRsrPlan")
+            .field("rows", &self.plan.plus.rows())
+            .field("cols", &self.plan.plus.cols())
+            .field("threads", &self.pool.threads())
+            .finish()
+    }
 }
 
 impl ParallelTernaryRsrPlan {
-    /// Build with an explicit thread count (`0` → default).
+    /// Build with an explicit thread count (`0` → default). Lanes are
+    /// capped at the total block count across both halves (see
+    /// [`ParallelRsrPlan::new`] on pool ownership).
     pub fn new(index: TernaryRsrIndex, threads: usize) -> Result<Self> {
-        Ok(Self {
-            plus: ParallelRsrPlan::new(index.plus, threads)?,
-            minus: ParallelRsrPlan::new(index.minus, threads)?,
-        })
+        let plan = TernaryFlatPlan::from_index(&index)?;
+        let total_blocks = plan.plus.blocks().len() + plan.minus.blocks().len();
+        let threads = resolve_threads(threads).min(total_blocks.max(1));
+        let pool = PersistentPool::new(threads);
+        let max_u = plan.plus.max_u().max(plan.minus.max_u());
+        let scratch = lanes(pool.threads(), max_u);
+        let tmp = vec![0.0; plan.plus.cols()];
+        Ok(Self { plan, pool, scratch, tmp })
+    }
+
+    /// Configured worker count.
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
     }
 
     /// `out = v · A`.
-    pub fn execute(&self, v: &[f32], out: &mut [f32]) -> Result<()> {
-        let mut tmp = vec![0.0f32; out.len()];
-        self.plus.execute(v, out)?;
-        self.minus.execute(v, &mut tmp)?;
-        for (o, t) in out.iter_mut().zip(tmp.iter()) {
+    pub fn execute(&mut self, v: &[f32], out: &mut [f32]) -> Result<()> {
+        let (plus, minus) = (&self.plan.plus, &self.plan.minus);
+        check_shapes(plus.rows(), plus.cols(), v, out)?;
+        let nb_plus = plus.blocks().len();
+        let chunks = nb_plus + minus.blocks().len();
+        if chunks == 0 {
+            return Ok(());
+        }
+        let scratch = &self.scratch;
+        let out_ptr = OutPtr(out.as_mut_ptr());
+        let tmp_ptr = OutPtr(self.tmp.as_mut_ptr());
+        self.pool.run(chunks, |w, c| {
+            // SAFETY: per half, chunk indices are unique and columns
+            // disjoint; the two halves write to different buffers; lane
+            // scratch is exclusive; both buffers outlive the call.
+            unsafe {
+                if c < nb_plus {
+                    run_block(plus, v, out_ptr, scratch, w, c);
+                } else {
+                    run_block(minus, v, tmp_ptr, scratch, w, c - nb_plus);
+                }
+            }
+        });
+        for (o, t) in out.iter_mut().zip(self.tmp.iter()) {
             *o -= t;
         }
         Ok(())
@@ -121,7 +216,15 @@ impl ParallelTernaryRsrPlan {
 
     /// Index bytes across both Prop 2.1 halves.
     pub fn index_bytes(&self) -> usize {
-        self.plus.index().bytes() + self.minus.index().bytes()
+        self.plan.bytes()
+    }
+}
+
+fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        crate::util::threadpool::default_threads()
+    } else {
+        threads
     }
 }
 
@@ -140,12 +243,15 @@ mod tests {
         let v = rng.f32_vec(256, -1.0, 1.0);
         let expect = standard_mul_binary(&v, &b);
         for threads in [1usize, 2, 4, 8] {
-            let plan =
+            let mut plan =
                 ParallelRsrPlan::new(RsrIndex::preprocess(&b, 4), threads).unwrap();
             let mut out = vec![0.0; 96];
-            plan.execute(&v, &mut out).unwrap();
-            for (g, e) in out.iter().zip(expect.iter()) {
-                assert!((g - e).abs() < 1e-3, "threads={threads}");
+            // Repeated executes reuse the same pool generation machinery.
+            for _ in 0..3 {
+                plan.execute(&v, &mut out).unwrap();
+                for (g, e) in out.iter().zip(expect.iter()) {
+                    assert!((g - e).abs() < 1e-3, "threads={threads}");
+                }
             }
         }
     }
@@ -156,16 +262,18 @@ mod tests {
         let mut rng = Rng::new(109);
         let a = TernaryMatrix::random(128, 64, 1.0 / 3.0, &mut rng);
         let v = rng.f32_vec(128, -1.0, 1.0);
-        let plan = ParallelTernaryRsrPlan::new(
+        let mut plan = ParallelTernaryRsrPlan::new(
             TernaryRsrIndex::preprocess(&a, 4),
             3,
         )
         .unwrap();
-        let mut out = vec![0.0; 64];
-        plan.execute(&v, &mut out).unwrap();
         let expect = standard_mul_ternary(&v, &a);
-        for (g, e) in out.iter().zip(expect.iter()) {
-            assert!((g - e).abs() < 1e-3);
+        let mut out = vec![0.0; 64];
+        for _ in 0..3 {
+            plan.execute(&v, &mut out).unwrap();
+            for (g, e) in out.iter().zip(expect.iter()) {
+                assert!((g - e).abs() < 1e-3);
+            }
         }
     }
 

@@ -162,7 +162,7 @@ impl QbitRsrPlan {
     pub fn bytes(&self) -> usize {
         self.planes
             .iter()
-            .map(|(_, p, m)| p.index().bytes() + m.index().bytes())
+            .map(|(_, p, m)| p.index_bytes() + m.index_bytes())
             .sum()
     }
 }

@@ -10,82 +10,113 @@
 //! With RSR++ as the step-2 subroutine the overall inference cost is
 //! `O((n/k)(n + 2^k))`; with `k = log n` that is `O(n²/log n)`
 //! (Theorem 4.4).
+//!
+//! The plans here execute on the contiguous [`FlatPlan`] arena (see
+//! [`super::flat`]) — the index is copied into flat form once at plan
+//! construction and the per-block `Vec`s are dropped.
 
+use super::flat::{execute_rsrpp_flat, FlatPlan};
 use super::index::{RsrIndex, TernaryRsrIndex};
-use super::rsr::{check_shapes, segmented_sum_unchecked};
+use super::rsr::check_shapes;
 use crate::error::Result;
 
 /// Algorithm 3: `out = u · Bin_[width]` in `O(2^width)` using the
 /// fold-and-odd-sum scheme. `scratch` must be at least `2^width` long;
 /// `u` is consumed logically (scratch holds the folded copies).
+///
+/// Each level folds pairs **and** accumulates the odd-lane sum in one
+/// pass, with a 4-wide unroll so the pair adds and the four odd
+/// accumulators are independent instruction streams (the serial
+/// `acc +=` chain of the textbook form is the bottleneck otherwise —
+/// at this point the whole block's data is cache-resident and the
+/// fold is pure ALU work).
 #[inline]
 pub fn block_product_fold(u: &[f32], width: usize, out: &mut [f32], scratch: &mut [f32]) {
     debug_assert_eq!(u.len(), 1 << width);
     debug_assert_eq!(out.len(), width);
     debug_assert!(scratch.len() >= 1 << width);
 
-    // Level k (LSB column, out[width-1]): odd-sum of u, while also
-    // producing the first fold into scratch.
     let x = &mut scratch[..1 << width];
     x.copy_from_slice(u);
     let mut len = 1usize << width;
     // Columns are emitted LSB-first: col = width-1 down to 0.
     for col in (0..width).rev() {
-        // Sum of odd-indexed (odd-valued) entries of x[..len].
-        let mut odd = 0.0f32;
-        let mut i = 1;
-        while i < len {
-            odd += x[i];
-            i += 2;
-        }
-        out[col] = odd;
-        // Fold: x[m] = x[2m] + x[2m+1].
-        if col > 0 {
-            let half = len / 2;
-            for m in 0..half {
-                x[m] = x[2 * m] + x[2 * m + 1];
+        let half = len / 2;
+        let mut odd0 = 0.0f32;
+        let mut odd1 = 0.0f32;
+        let mut odd2 = 0.0f32;
+        let mut odd3 = 0.0f32;
+        let mut m = 0usize;
+        // SAFETY: all reads are at `< len` and all writes at `< half`,
+        // both within `x[..1 << width]`; reads of iteration m touch
+        // `[2m, 2m+8)` while earlier writes covered `[0, m+4)`, and
+        // every read in an iteration happens before its writes, so the
+        // in-place fold never reads a clobbered slot.
+        unsafe {
+            while m + 4 <= half {
+                let a0 = *x.get_unchecked(2 * m);
+                let b0 = *x.get_unchecked(2 * m + 1);
+                let a1 = *x.get_unchecked(2 * m + 2);
+                let b1 = *x.get_unchecked(2 * m + 3);
+                let a2 = *x.get_unchecked(2 * m + 4);
+                let b2 = *x.get_unchecked(2 * m + 5);
+                let a3 = *x.get_unchecked(2 * m + 6);
+                let b3 = *x.get_unchecked(2 * m + 7);
+                *x.get_unchecked_mut(m) = a0 + b0;
+                *x.get_unchecked_mut(m + 1) = a1 + b1;
+                *x.get_unchecked_mut(m + 2) = a2 + b2;
+                *x.get_unchecked_mut(m + 3) = a3 + b3;
+                odd0 += b0;
+                odd1 += b1;
+                odd2 += b2;
+                odd3 += b3;
+                m += 4;
             }
-            len = half;
+            while m < half {
+                let a = *x.get_unchecked(2 * m);
+                let b = *x.get_unchecked(2 * m + 1);
+                *x.get_unchecked_mut(m) = a + b;
+                odd0 += b;
+                m += 1;
+            }
         }
+        out[col] = (odd0 + odd1) + (odd2 + odd3);
+        len = half;
     }
 }
 
-/// A reusable RSR++ plan (index + scratch; no allocation per call).
+/// A reusable RSR++ plan: the flat arena + scratch (no allocation per
+/// call).
 #[derive(Debug, Clone)]
 pub struct RsrPlusPlusPlan {
-    index: RsrIndex,
+    plan: FlatPlan,
     u: Vec<f32>,
     fold: Vec<f32>,
 }
 
 impl RsrPlusPlusPlan {
-    /// Build (and validate) a plan from a preprocessed index.
+    /// Build (and validate) a plan from a preprocessed index. The index
+    /// is flattened into the contiguous arena form and dropped.
     pub fn new(index: RsrIndex) -> Result<Self> {
-        index.validate()?;
-        let max_u = index.blocks.iter().map(|b| 1usize << b.width).max().unwrap_or(0);
-        Ok(Self { index, u: vec![0.0; max_u], fold: vec![0.0; max_u] })
+        let plan = FlatPlan::from_index(&index)?;
+        let max_u = plan.max_u();
+        Ok(Self { plan, u: vec![0.0; max_u], fold: vec![0.0; max_u] })
     }
 
-    /// The underlying index.
-    pub fn index(&self) -> &RsrIndex {
-        &self.index
+    /// The underlying flat plan.
+    pub fn flat(&self) -> &FlatPlan {
+        &self.plan
     }
 
     /// Index bytes (Fig 5 accounting at the plan level).
     pub fn index_bytes(&self) -> usize {
-        self.index.bytes()
+        self.plan.bytes()
     }
 
     /// `out = v · B` using RSR with Algorithm 3 in step 2.
     pub fn execute(&mut self, v: &[f32], out: &mut [f32]) -> Result<()> {
-        check_shapes(&self.index, v, out)?;
-        for blk in &self.index.blocks {
-            let w = blk.width as usize;
-            let u = &mut self.u[..1 << w];
-            segmented_sum_unchecked(blk, v, u);
-            let col = blk.col_start as usize;
-            block_product_fold(u, w, &mut out[col..col + w], &mut self.fold);
-        }
+        check_shapes(self.plan.rows(), self.plan.cols(), v, out)?;
+        execute_rsrpp_flat(&self.plan, v, out, &mut self.u, &mut self.fold);
         Ok(())
     }
 }
@@ -130,7 +161,7 @@ impl TernaryRsrPlusPlusPlan {
 
     /// Index bytes across both Prop 2.1 halves.
     pub fn index_bytes(&self) -> usize {
-        self.plus.index().bytes() + self.minus.index().bytes()
+        self.plus.index_bytes() + self.minus.index_bytes()
     }
 }
 

@@ -50,6 +50,26 @@
 //! plan.execute(&v, &mut out).unwrap();
 //! ```
 
+// Style-class clippy lints the kernel code intentionally trades away:
+// index-centric loops mirror the paper's pseudocode, bench/kernel
+// signatures carry many scalar parameters, and the offline substrates
+// (json, stats) predate the trait conventions clippy nudges toward.
+// CI compiles with `clippy -D warnings`; anything outside this list is
+// a hard error there.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::inherent_to_string,
+    clippy::new_without_default,
+    clippy::large_enum_variant,
+    clippy::type_complexity,
+    clippy::manual_memcpy,
+    clippy::collapsible_if,
+    clippy::collapsible_else_if,
+    clippy::comparison_chain,
+    clippy::missing_safety_doc
+)]
+
 pub mod bench;
 pub mod data;
 pub mod error;

@@ -15,6 +15,15 @@
 //!
 //! (clap is unavailable in the offline registry; parsing is manual.)
 
+// Same style-class allowances as the library crate root (CI runs
+// `clippy -D warnings` over both).
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::collapsible_if,
+    clippy::field_reassign_with_default
+)]
+
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::AtomicBool;
@@ -85,6 +94,7 @@ fn run(args: &[String]) -> Result<()> {
         "inspect" => cmd_inspect(&f),
         "serve" => cmd_serve(&f),
         "client" => cmd_client(&f),
+        "bench-kernels" => cmd_bench_kernels(&f),
         "experiment" => cmd_experiment(rest, &f),
         "selfcheck" => cmd_selfcheck(),
         "artifacts" => cmd_artifacts(),
@@ -107,6 +117,7 @@ fn print_help() {
          inspect        --plans DIR | --file FILE [--deep]      plan artifact stats\n  \
          serve          --model FILE [--plans DIR] [--addr A] [--replicas R] [--workers W] [--backend B]\n  \
          client         [--addr A] --prompt TEXT [--max-new N]\n  \
+         bench-kernels  [--sizes 1024,4096,8192] [--reps N] [--batch B] [--threads T] [--json FILE]\n  \
          experiment     <fig4|fig5|fig6|fig9|fig10|fig11|fig12|table1|ablations|all> [--full]\n  \
          selfcheck                                              cross-backend equality\n  \
          artifacts                                              list AOT artifacts\n\n\
@@ -294,6 +305,35 @@ fn cmd_client(f: &HashMap<String, String>) -> Result<()> {
     let mut client = Client::connect(addr)?;
     let reply = client.request(1, prompt, max_new)?;
     println!("{}", reply.to_string());
+    Ok(())
+}
+
+/// `rsr bench-kernels`: time the kernel backends on a size grid and
+/// record `BENCH_kernels.json` (the repo's machine-readable perf
+/// trajectory — see ISSUE/README perf notes).
+fn cmd_bench_kernels(f: &HashMap<String, String>) -> Result<()> {
+    use rsr::bench::experiments::kernels::{run, KernelBenchOpts};
+    let mut opts = KernelBenchOpts::default();
+    if let Some(sizes) = f.get("sizes") {
+        opts.sizes = sizes
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<usize>()
+                    .map_err(|_| Error::Config(format!("bad size {s} in --sizes")))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        if opts.sizes.is_empty() {
+            return Err(Error::Config("--sizes must name at least one n".into()));
+        }
+    }
+    opts.reps = get_usize(f, "reps", opts.reps)?.max(1);
+    opts.batch = get_usize(f, "batch", opts.batch)?.max(1);
+    opts.threads = get_usize(f, "threads", 0)?;
+    opts.json_path = Some(PathBuf::from(
+        f.get("json").cloned().unwrap_or_else(|| "BENCH_kernels.json".into()),
+    ));
+    run(&opts);
     Ok(())
 }
 

@@ -8,7 +8,8 @@
 //! [`crate::kernels::rsrpp::RsrPlusPlusPlan`] bundles two things with
 //! very different lifetimes:
 //!
-//! * the **block index** (paper Algorithm 1 output) — large, immutable,
+//! * the **flat plan** ([`crate::kernels::FlatPlan`], the contiguous
+//!   arena form of the paper's Algorithm 1 output) — large, immutable,
 //!   expensive to build, identical for every thread serving the model;
 //! * the **execution scratch** (`u`, fold buffers) — tiny, mutated on
 //!   every multiply, inherently per-thread.
@@ -16,18 +17,20 @@
 //! The seed code rebuilt both *per worker, per replica, per process
 //! start*: a `serve --replicas 4 --workers 4` deployment preprocessed
 //! every weight matrix sixteen times and held sixteen copies in memory.
-//! This module splits the two: a [`SharedTernaryPlan`] holds the index
-//! behind an `Arc` (validated once, then read-only), and every executor
-//! carries its own [`PlanScratch`]. The [`PlanStore`] is the registry
-//! that hands plans out by layer name, building each at most once —
-//! from an in-memory model, or lazily from `.rsrz` artifacts packed
-//! offline by `rsr pack` (see [`crate::kernels::artifact`]).
+//! This module splits the two: a [`SharedTernaryPlan`] holds the flat
+//! plan behind an `Arc` (validated once, then read-only), and every
+//! executor carries its own [`PlanScratch`] sized from the plan's
+//! `max_u`. The [`PlanStore`] is the registry that hands plans out by
+//! layer name, building each at most once — from an in-memory model,
+//! or lazily from `.rsrz` artifacts packed offline by `rsr pack`
+//! (see [`crate::kernels::artifact`]; the v2 payload *is* the arena,
+//! so a disk load lands directly in execution form).
 //!
 //! Execution uses RSR++ (Algorithm 2 with Algorithm 3 in step 2), the
-//! paper's `O(n²/log n)` fast path, and performs the operations in the
-//! same order as `TernaryRsrPlusPlusPlan` — outputs are bit-identical
-//! to the owned in-memory plan, which the artifact round-trip tests
-//! assert.
+//! paper's `O(n²/log n)` fast path, through the **same** flat kernel
+//! loop as the owned `TernaryRsrPlusPlusPlan` — outputs are
+//! bit-identical to the owned in-memory plan, which the artifact
+//! round-trip tests assert.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -36,10 +39,10 @@ use std::sync::{Arc, Mutex};
 
 use crate::error::{Error, Result};
 use crate::kernels::artifact::{ternary_fingerprint, ArtifactPayload, PlanArtifact};
+use crate::kernels::flat::{execute_rsrpp_flat, FlatPlan, TernaryFlatPlan};
 use crate::kernels::index::{RsrIndex, TernaryRsrIndex};
 use crate::kernels::optimal_k::optimal_k_rsrpp;
-use crate::kernels::rsr::{check_shapes, segmented_sum_unchecked};
-use crate::kernels::rsrpp::block_product_fold;
+use crate::kernels::rsr::check_shapes;
 use crate::model::weights::ModelWeights;
 
 /// Per-thread execution scratch: the `u` segmented-sum buffer, the
@@ -78,62 +81,60 @@ impl PlanScratch {
     }
 }
 
-/// An immutable, `Arc`-shareable RSR++ plan for one binary matrix:
-/// the validated index plus precomputed execution bounds. Unlike
+/// An immutable, `Arc`-shareable RSR++ plan for one binary matrix: the
+/// validated flat arena. Unlike
 /// [`crate::kernels::rsrpp::RsrPlusPlusPlan`] it takes `&self` — many
 /// threads execute the same plan concurrently, each with its own
 /// [`PlanScratch`].
 #[derive(Debug, Clone)]
 pub struct SharedRsrPlan {
-    index: Arc<RsrIndex>,
-    max_u: usize,
+    flat: Arc<FlatPlan>,
 }
 
 impl SharedRsrPlan {
-    /// Validate an index and wrap it for sharing.
+    /// Flatten (and validate) an index and wrap it for sharing.
     pub fn new(index: RsrIndex) -> Result<Self> {
-        index.validate()?;
-        let max_u = index.blocks.iter().map(|b| 1usize << b.width).max().unwrap_or(0);
-        Ok(Self { index: Arc::new(index), max_u })
+        Ok(Self { flat: Arc::new(FlatPlan::from_index(&index)?) })
     }
 
-    /// The underlying index.
-    pub fn index(&self) -> &RsrIndex {
-        &self.index
+    /// Wrap an already-validated flat plan (the `.rsrz` v2 load path —
+    /// no copy, no revalidation).
+    pub fn from_flat(flat: FlatPlan) -> Self {
+        Self { flat: Arc::new(flat) }
     }
 
-    /// Rows of the indexed matrix (input length).
+    /// The shared flat plan (the view every executor reads).
+    pub fn flat(&self) -> &FlatPlan {
+        &self.flat
+    }
+
+    /// Rows of the planned matrix (input length).
     pub fn rows(&self) -> usize {
-        self.index.rows
+        self.flat.rows()
     }
 
-    /// Columns of the indexed matrix (output length).
+    /// Columns of the planned matrix (output length).
     pub fn cols(&self) -> usize {
-        self.index.cols
+        self.flat.cols()
     }
 
     /// Shared index bytes (paid once per process, not per thread).
     pub fn index_bytes(&self) -> usize {
-        self.index.bytes()
+        self.flat.bytes()
     }
 
     /// A scratch sized for this plan.
     pub fn scratch(&self) -> PlanScratch {
-        PlanScratch::with_capacity(self.max_u, 0)
+        PlanScratch::with_capacity(self.flat.max_u(), 0)
     }
 
-    /// `out = v · B` via RSR++ (Algorithms 2 + 3), identical operation
-    /// order to `RsrPlusPlusPlan::execute` — bit-identical results.
+    /// `out = v · B` via RSR++ (Algorithms 2 + 3), through the same
+    /// flat kernel loop as `RsrPlusPlusPlan::execute` — bit-identical
+    /// results.
     pub fn execute(&self, scratch: &mut PlanScratch, v: &[f32], out: &mut [f32]) -> Result<()> {
-        check_shapes(&self.index, v, out)?;
-        scratch.ensure_u(self.max_u);
-        for blk in &self.index.blocks {
-            let w = blk.width as usize;
-            let u = &mut scratch.u[..1 << w];
-            segmented_sum_unchecked(blk, v, u);
-            let col = blk.col_start as usize;
-            block_product_fold(u, w, &mut out[col..col + w], &mut scratch.fold);
-        }
+        check_shapes(self.flat.rows(), self.flat.cols(), v, out)?;
+        scratch.ensure_u(self.flat.max_u());
+        execute_rsrpp_flat(&self.flat, v, out, &mut scratch.u, &mut scratch.fold);
         Ok(())
     }
 }
@@ -147,13 +148,20 @@ pub struct SharedTernaryPlan {
 }
 
 impl SharedTernaryPlan {
-    /// Validate a ternary index pair and wrap it for sharing.
+    /// Flatten (and validate) a ternary index pair and wrap it for
+    /// sharing.
     pub fn new(index: TernaryRsrIndex) -> Result<Self> {
-        let TernaryRsrIndex { plus, minus } = index;
-        if plus.rows != minus.rows || plus.cols != minus.cols {
-            return Err(Error::InvalidIndex("ternary halves disagree on shape".into()));
-        }
-        Ok(Self { plus: SharedRsrPlan::new(plus)?, minus: SharedRsrPlan::new(minus)? })
+        Self::from_flat(TernaryFlatPlan::from_index(&index)?)
+    }
+
+    /// Wrap an already-validated flat plan pair (the `.rsrz` v2 load
+    /// path).
+    pub fn from_flat(plan: TernaryFlatPlan) -> Result<Self> {
+        plan.check_geometry()?;
+        Ok(Self {
+            plus: SharedRsrPlan::from_flat(plan.plus),
+            minus: SharedRsrPlan::from_flat(plan.minus),
+        })
     }
 
     /// Rows (input length).
@@ -171,19 +179,22 @@ impl SharedTernaryPlan {
         self.plus.index_bytes() + self.minus.index_bytes()
     }
 
-    /// The `B⁽¹⁾` half's index.
-    pub fn plus_index(&self) -> &RsrIndex {
-        self.plus.index()
+    /// The `B⁽¹⁾` half's flat plan.
+    pub fn plus_flat(&self) -> &FlatPlan {
+        self.plus.flat()
     }
 
-    /// The `B⁽²⁾` half's index.
-    pub fn minus_index(&self) -> &RsrIndex {
-        self.minus.index()
+    /// The `B⁽²⁾` half's flat plan.
+    pub fn minus_flat(&self) -> &FlatPlan {
+        self.minus.flat()
     }
 
     /// A scratch sized for this plan.
     pub fn scratch(&self) -> PlanScratch {
-        PlanScratch::with_capacity(self.plus.max_u.max(self.minus.max_u), self.cols())
+        PlanScratch::with_capacity(
+            self.plus.flat.max_u().max(self.minus.flat.max_u()),
+            self.cols(),
+        )
     }
 
     /// `out = v · A = v·B⁽¹⁾ − v·B⁽²⁾`, identical operation order to
@@ -374,12 +385,14 @@ impl PlanStore {
                 let art = PlanArtifact::load(&path).map_err(|e| {
                     Error::Artifact(format!("loading {}: {e}", path.display()))
                 })?;
+                // The decoded payload is already the flat execution
+                // form — wrap it without copying or revalidating.
                 let plan = match art.payload {
-                    ArtifactPayload::Binary(idx) => {
-                        PlanKind::Binary(Arc::new(SharedRsrPlan::new(idx)?))
+                    ArtifactPayload::Binary(flat) => {
+                        PlanKind::Binary(Arc::new(SharedRsrPlan::from_flat(flat)))
                     }
                     ArtifactPayload::Ternary(t) => {
-                        PlanKind::Ternary(Arc::new(SharedTernaryPlan::new(t)?))
+                        PlanKind::Ternary(Arc::new(SharedTernaryPlan::from_flat(t)?))
                     }
                 };
                 Ok(PlanEntry {
@@ -610,5 +623,16 @@ mod tests {
         assert!(shared.execute(&mut scratch, &[0.0; 39], &mut out).is_err());
         let mut bad_out = vec![0.0; 19];
         assert!(shared.execute(&mut scratch, &[0.0; 40], &mut bad_out).is_err());
+    }
+
+    #[test]
+    fn flat_views_expose_both_halves() {
+        let (_, shared) = sample_plan(48, 20, 3, 409);
+        assert_eq!(shared.plus_flat().rows(), 48);
+        assert_eq!(shared.minus_flat().cols(), 20);
+        assert_eq!(
+            shared.index_bytes(),
+            shared.plus_flat().bytes() + shared.minus_flat().bytes()
+        );
     }
 }

@@ -1,9 +1,14 @@
-//! A scoped thread pool over `std::thread` (the offline registry has no
-//! rayon). Used for block-parallel RSR (paper Appendix C.1.I), the
-//! tensorized "GPU" execution path, and the serving engine's workers.
+//! Thread pools over `std::thread` (the offline registry has no
+//! rayon): one-shot scoped helpers ([`parallel_for`] / [`parallel_map`]),
+//! the serving engine's job queue ([`WorkerPool`]), and the
+//! [`PersistentPool`] that block-parallel RSR execution
+//! (paper Appendix C.1.I) dispatches to without spawning threads or
+//! taking locks per call.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::thread::Thread;
 
 /// Number of worker threads to use by default: the machine's available
 /// parallelism, overridable with `RSR_THREADS`.
@@ -73,6 +78,278 @@ struct SlotPtr<R>(*mut Option<R>);
 // SAFETY: distinct indices → distinct slots; no aliasing writes.
 unsafe impl<R: Send> Sync for SlotPtr<R> {}
 unsafe impl<R: Send> Send for SlotPtr<R> {}
+
+/// A type-erased borrowed task: a thin data pointer plus a monomorphic
+/// trampoline. Erasing the closure type this way (instead of
+/// `Box<dyn Fn>`) keeps [`PersistentPool::run`] allocation-free.
+#[derive(Clone, Copy)]
+struct RawTask {
+    /// `&F` with the lifetime erased; valid for the duration of the
+    /// generation it was published for (the caller blocks in
+    /// [`PersistentPool::run`] until every worker acknowledges).
+    data: *const (),
+    /// Calls `(*data)(worker, chunk)`.
+    call: unsafe fn(*const (), usize, usize),
+}
+
+unsafe fn call_task<F: Fn(usize, usize) + Sync>(data: *const (), worker: usize, chunk: usize) {
+    (*(data as *const F))(worker, chunk)
+}
+
+/// Shared state of a [`PersistentPool`], written by the (single)
+/// submitting thread and read by workers under the generation
+/// protocol documented on [`PersistentPool`].
+struct PoolCore {
+    /// The current borrowed task. Written by `run` strictly before the
+    /// `generation` bump that publishes it; read by workers strictly
+    /// after observing that bump.
+    task: UnsafeCell<RawTask>,
+    /// The submitting thread's handle, for the end-of-generation
+    /// unpark. Same write/read discipline as `task`.
+    caller: UnsafeCell<Option<Thread>>,
+    /// Bumped (Release) once per `run` call to publish a task.
+    generation: AtomicUsize,
+    /// Work-stealing chunk counter for the current generation.
+    next: AtomicUsize,
+    /// Chunk count of the current generation.
+    chunks: AtomicUsize,
+    /// Workers that have finished the current generation. `run`
+    /// returns only when this reaches the worker count, which is what
+    /// makes the borrowed `task` pointer sound.
+    acks: AtomicUsize,
+    /// Set by a worker whose task invocation panicked; `run` observes
+    /// it after quiescing and re-raises on the calling thread, so a
+    /// panicking task surfaces instead of silently losing a block.
+    panicked: AtomicBool,
+    /// Set (then all workers unparked) to shut the pool down.
+    shutdown: AtomicBool,
+}
+
+// SAFETY: the UnsafeCell fields are written only between generations
+// (before the Release bump of `generation`, which `run` may do only
+// after every worker acknowledged the previous generation) and read by
+// workers only after an Acquire load of the new generation — so no
+// access to them is ever concurrent. The raw task pointer inside is
+// only dereferenced during the generation its referent is pinned for
+// (the submitting thread blocks until every worker acks), so moving
+// the core between threads (Send, required by `Arc` + `spawn`) is
+// equally sound.
+unsafe impl Sync for PoolCore {}
+unsafe impl Send for PoolCore {}
+
+/// A persistent fork-join pool for borrowed, index-addressed work.
+///
+/// Built once per [`ParallelRsrPlan`](crate::kernels::parallel::ParallelRsrPlan);
+/// each [`run`](Self::run) call then costs two atomic stores, one
+/// Release increment and `workers` unparks — **no thread spawn, no
+/// mutex, no allocation** on the hot path (the old implementation paid
+/// a `thread::scope` spawn per worker per call plus a
+/// `Mutex<Vec<Option<&mut [f32]>>>` lock per block).
+///
+/// Protocol per `run` (one *generation*):
+/// 1. the caller writes the erased task + its own thread handle, resets
+///    the chunk/ack counters, bumps `generation` (Release) and unparks
+///    every worker;
+/// 2. workers wake on the Acquire-observed bump, claim chunks from the
+///    shared counter, and call the task as `f(worker_index, chunk)`;
+/// 3. the caller claims chunks too (as worker index `workers`), then
+///    parks until all workers have incremented `acks` — every worker
+///    acknowledges every generation, even when it claimed no chunks,
+///    which is exactly what licenses reusing the task slot next call.
+///
+/// `run` takes `&mut self`: one submission at a time, enforced by the
+/// borrow checker rather than a runtime lock.
+pub struct PersistentPool {
+    core: Arc<PoolCore>,
+    /// Unpark handles of the workers (fixed at construction).
+    worker_threads: Vec<Thread>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for PersistentPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PersistentPool")
+            .field("workers", &self.handles.len())
+            .finish()
+    }
+}
+
+impl PersistentPool {
+    /// A pool delivering `threads` lanes of parallelism: the calling
+    /// thread participates in every `run`, so `threads - 1` workers are
+    /// spawned (`threads <= 1` spawns none and `run` degenerates to a
+    /// serial loop).
+    pub fn new(threads: usize) -> Self {
+        let nworkers = threads.max(1) - 1;
+        let core = Arc::new(PoolCore {
+            task: UnsafeCell::new(RawTask { data: std::ptr::null(), call: noop_task }),
+            caller: UnsafeCell::new(None),
+            generation: AtomicUsize::new(0),
+            next: AtomicUsize::new(0),
+            chunks: AtomicUsize::new(0),
+            acks: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles: Vec<_> = (0..nworkers)
+            .map(|worker| {
+                let core = Arc::clone(&core);
+                let total = nworkers;
+                std::thread::spawn(move || worker_loop(&core, worker, total))
+            })
+            .collect();
+        let worker_threads = handles.iter().map(|h| h.thread().clone()).collect();
+        Self { core, worker_threads, handles }
+    }
+
+    /// Total parallelism (spawned workers + the calling thread).
+    pub fn threads(&self) -> usize {
+        self.handles.len() + 1
+    }
+
+    /// Run `f(worker_index, chunk)` for every chunk in `0..chunks`,
+    /// work-stealing across the pool; blocks until all chunks are done
+    /// *and* every worker has quiesced. `worker_index` is stable within
+    /// one call and `< self.threads()` — callers use it to address
+    /// per-lane scratch. Borrows in `f` may reference the caller's
+    /// stack.
+    pub fn run<F: Fn(usize, usize) + Sync>(&mut self, chunks: usize, f: F) {
+        if chunks == 0 {
+            return;
+        }
+        let nworkers = self.handles.len();
+        if nworkers == 0 {
+            for i in 0..chunks {
+                f(0, i);
+            }
+            return;
+        }
+        let core = &*self.core;
+        // SAFETY (task/caller slots): all workers acknowledged the
+        // previous generation before the previous `run` returned, and
+        // none observes the slots again until the Release bump below.
+        unsafe {
+            *core.task.get() = RawTask {
+                data: &f as *const F as *const (),
+                call: call_task::<F>,
+            };
+            *core.caller.get() = Some(std::thread::current());
+        }
+        core.chunks.store(chunks, Ordering::Relaxed);
+        core.next.store(0, Ordering::Relaxed);
+        core.acks.store(0, Ordering::Relaxed);
+        // Clear any panic report left by a generation whose run()
+        // itself unwound off the caller lane (the sticky flag must
+        // never blame a later, successful task).
+        core.panicked.store(false, Ordering::Relaxed);
+        core.generation.fetch_add(1, Ordering::Release);
+        // From here until every worker acks, `f` is borrowed by the
+        // workers. The guard performs that wait in its destructor, so
+        // the borrow ends before `f` is dropped even if `f` panics on
+        // the caller's own lane below (unwind safety of the erased
+        // pointer).
+        let quiesce = QuiesceGuard { core, nworkers };
+        for t in &self.worker_threads {
+            t.unpark();
+        }
+        // The caller is the extra lane, index `nworkers`.
+        loop {
+            let i = core.next.fetch_add(1, Ordering::Relaxed);
+            if i >= chunks {
+                break;
+            }
+            f(nworkers, i);
+        }
+        drop(quiesce);
+        // A worker caught a panic from the task: its chunk's work is
+        // incomplete, so the result must not be used — re-raise here
+        // (the worker thread itself stays alive for future runs).
+        if core.panicked.swap(false, Ordering::AcqRel) {
+            panic!("PersistentPool task panicked on a worker thread");
+        }
+    }
+}
+
+/// Blocks (in `drop`) until every worker of the current generation has
+/// acknowledged. The Acquire load pairs with each worker's Release
+/// ack, making all their writes (the computed output blocks) visible
+/// to the caller; `park` can return spuriously, hence the loop, and
+/// the timeout bounds any lost-unpark window.
+struct QuiesceGuard<'a> {
+    core: &'a PoolCore,
+    nworkers: usize,
+}
+
+impl Drop for QuiesceGuard<'_> {
+    fn drop(&mut self) {
+        while self.core.acks.load(Ordering::Acquire) < self.nworkers {
+            std::thread::park_timeout(std::time::Duration::from_micros(100));
+        }
+    }
+}
+
+unsafe fn noop_task(_: *const (), _: usize, _: usize) {}
+
+fn worker_loop(core: &PoolCore, worker: usize, nworkers: usize) {
+    let mut seen = 0usize;
+    loop {
+        // Park until a new generation is published (or shutdown).
+        let current = loop {
+            if core.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            let g = core.generation.load(Ordering::Acquire);
+            if g != seen {
+                break g;
+            }
+            std::thread::park();
+        };
+        seen = current;
+        // SAFETY: the Acquire load above synchronizes with the
+        // caller's Release bump, so the task/caller slots written
+        // before it are visible and no longer being written.
+        let task = unsafe { *core.task.get() };
+        let caller = unsafe { (*core.caller.get()).clone() };
+        let chunks = core.chunks.load(Ordering::Relaxed);
+        // Catch panics so a panicking task cannot skip the ack below —
+        // an unacked worker would deadlock the caller's quiesce wait
+        // (and kill this thread for every future generation). The
+        // caller re-raises after quiescing.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
+            let i = core.next.fetch_add(1, Ordering::Relaxed);
+            if i >= chunks {
+                break;
+            }
+            // SAFETY: `data` outlives the generation (the caller blocks
+            // until this worker's ack below).
+            unsafe { (task.call)(task.data, worker, i) };
+        }));
+        if result.is_err() {
+            core.panicked.store(true, Ordering::Release);
+        }
+        // The caller handle was cloned *before* the ack: after the ack
+        // the caller may return and start the next generation, so no
+        // shared slot may be touched past this point.
+        let prev = core.acks.fetch_add(1, Ordering::Release);
+        if prev + 1 == nworkers {
+            if let Some(t) = caller {
+                t.unpark();
+            }
+        }
+    }
+}
+
+impl Drop for PersistentPool {
+    fn drop(&mut self) {
+        self.core.shutdown.store(true, Ordering::Release);
+        for t in &self.worker_threads {
+            t.unpark();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
 
 /// A long-lived pool accepting closures — used by the serving engine
 /// where workers persist across requests.
@@ -163,6 +440,68 @@ mod tests {
         let out = parallel_map(7, &items, |&x| x * x);
         let expect: Vec<u64> = items.iter().map(|&x| x * x).collect();
         assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn persistent_pool_covers_every_chunk_across_generations() {
+        let mut pool = PersistentPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        for round in 0..20usize {
+            let hits: Vec<AtomicUsize> =
+                (0..round * 7 + 1).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(hits.len(), |worker, i| {
+                assert!(worker < 4);
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "round {round}"
+            );
+        }
+    }
+
+    #[test]
+    fn persistent_pool_single_thread_is_serial() {
+        let mut pool = PersistentPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let mut seen = vec![false; 17];
+        {
+            let cell: Vec<AtomicUsize> = (0..17).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(17, |worker, i| {
+                assert_eq!(worker, 0);
+                cell[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (s, c) in seen.iter_mut().zip(cell.iter()) {
+                *s = c.load(Ordering::Relaxed) == 1;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn persistent_pool_zero_chunks_is_noop() {
+        let mut pool = PersistentPool::new(3);
+        pool.run(0, |_, _| panic!("should not run"));
+    }
+
+    #[test]
+    fn persistent_pool_surfaces_task_panics_and_stays_usable() {
+        let mut pool = PersistentPool::new(3);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(64, |_w, i| {
+                if i == 13 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "task panic must surface on the caller");
+        // The workers survived (they caught the panic and acked), so
+        // the pool keeps working.
+        let hits: Vec<AtomicUsize> = (0..10).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(hits.len(), |_, i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
     }
 
     #[test]

@@ -10,6 +10,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use rsr::kernels::artifact::{ternary_fingerprint, ArtifactPayload, PlanArtifact, RSRZ_VERSION};
+use rsr::kernels::flat::{FlatPlan, TernaryFlatPlan};
 use rsr::kernels::index::{RsrIndex, TernaryRsrIndex};
 use rsr::kernels::optimal_k::optimal_k_rsrpp;
 use rsr::kernels::rsrpp::TernaryRsrPlusPlusPlan;
@@ -78,8 +79,9 @@ fn serialize_deserialize_preserves_index_exactly() {
         let mut buf = Vec::new();
         art.write_to(&mut buf).unwrap();
         let back = PlanArtifact::read_from(&mut buf.as_slice()).unwrap();
+        let flat = TernaryFlatPlan::from_index(&idx).unwrap();
         match back.payload {
-            ArtifactPayload::Ternary(got) => assert_eq!(got, idx, "n={n} m={m} k={k}"),
+            ArtifactPayload::Ternary(got) => assert_eq!(got, flat, "n={n} m={m} k={k}"),
             _ => panic!("wrong kind"),
         }
     }
@@ -90,7 +92,11 @@ fn serialize_deserialize_preserves_index_exactly() {
     let mut buf = Vec::new();
     art.write_to(&mut buf).unwrap();
     match PlanArtifact::read_from(&mut buf.as_slice()).unwrap().payload {
-        ArtifactPayload::Binary(got) => assert_eq!(got, idx),
+        ArtifactPayload::Binary(got) => {
+            assert_eq!(got, FlatPlan::from_index(&idx).unwrap());
+            // The boxed index form is recoverable from the arena.
+            assert_eq!(got.to_index(), idx);
+        }
         _ => panic!("wrong kind"),
     }
 }

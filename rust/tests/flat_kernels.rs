@@ -1,0 +1,251 @@
+//! Property tests: every flat-plan execution path against the checked
+//! reference kernels (`segmented_sum` + `block_product_dense` over the
+//! boxed `BlockIndex` form).
+//!
+//! Grid: `k ∈ {1..8}`, shapes with non-divisible tails (`m % k != 0`),
+//! batch sizes `{1, 3, 8}`, thread counts `{1, 2, 8}`. The optimized
+//! kernels re-associate f32 additions (4-way accumulators, AVX2
+//! gathers, pairwise folds), so comparisons are tolerance-based; paths
+//! that share the exact same kernel loop (owned RSR++ vs store-shared)
+//! are asserted **bit-identical** where the plan layer guarantees it.
+
+use rsr::kernels::batched::{BatchedRsrPlan, BatchedTernaryRsrPlan};
+use rsr::kernels::flat::{segmented_sum_flat, segmented_sum_flat_scalar, FlatPlan};
+use rsr::kernels::index::{RsrIndex, TernaryRsrIndex};
+use rsr::kernels::parallel::{ParallelRsrPlan, ParallelTernaryRsrPlan};
+use rsr::kernels::rsr::{block_product_dense, segmented_sum, RsrPlan, TernaryRsrPlan};
+use rsr::kernels::rsrpp::{RsrPlusPlusPlan, TernaryRsrPlusPlusPlan};
+use rsr::kernels::{BinaryMatrix, TernaryMatrix};
+use rsr::runtime::{SharedRsrPlan, SharedTernaryPlan};
+use rsr::util::rng::Rng;
+
+/// The checked reference: `v·B` via the fully bounds-checked, strictly
+/// serial kernels on the boxed index.
+fn reference_mul(idx: &RsrIndex, v: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; idx.cols];
+    for blk in &idx.blocks {
+        let w = blk.width as usize;
+        let mut u = vec![0.0f32; 1 << w];
+        segmented_sum(blk, v, &mut u);
+        let col = blk.col_start as usize;
+        block_product_dense(&u, w, &mut out[col..col + w]);
+    }
+    out
+}
+
+fn reference_mul_ternary(idx: &TernaryRsrIndex, v: &[f32]) -> Vec<f32> {
+    let plus = reference_mul(&idx.plus, v);
+    let minus = reference_mul(&idx.minus, v);
+    plus.iter().zip(minus.iter()).map(|(p, m)| p - m).collect()
+}
+
+fn assert_close(got: &[f32], expect: &[f32], what: &str) {
+    assert_eq!(got.len(), expect.len(), "{what}: length");
+    for (i, (g, e)) in got.iter().zip(expect.iter()).enumerate() {
+        let tol = 1e-3 * (1.0 + e.abs());
+        assert!((g - e).abs() <= tol, "{what}[{i}]: {g} vs {e}");
+    }
+}
+
+/// Shapes whose column counts are prime, so `m % k != 0` (a ragged
+/// tail block exists) for every `k ∈ {2..8}`.
+fn shape_grid() -> Vec<(usize, usize)> {
+    vec![(97, 61), (64, 43), (130, 17)]
+}
+
+#[test]
+fn binary_plans_match_reference_across_k_grid() {
+    let mut rng = Rng::new(0xF1A7);
+    for k in 1..=8usize {
+        for &(n, m) in &shape_grid() {
+            let b = BinaryMatrix::random(n, m, 0.5, &mut rng);
+            let idx = RsrIndex::preprocess(&b, k);
+            let v = rng.f32_vec(n, -2.0, 2.0);
+            let expect = reference_mul(&idx, &v);
+            if k > 1 {
+                assert_ne!(m % k, 0, "grid must exercise the ragged tail");
+            }
+
+            let mut out = vec![0.0f32; m];
+            let what = format!("k={k} n={n} m={m}");
+
+            let mut rsr = RsrPlan::new(idx.clone()).unwrap();
+            rsr.execute(&v, &mut out).unwrap();
+            assert_close(&out, &expect, &format!("rsr {what}"));
+
+            let mut pp = RsrPlusPlusPlan::new(idx.clone()).unwrap();
+            pp.execute(&v, &mut out).unwrap();
+            assert_close(&out, &expect, &format!("rsr++ {what}"));
+            let pp_out = out.clone();
+
+            // The store-shared plan runs the identical flat loop →
+            // bit-identical to the owned RSR++ plan.
+            let shared = SharedRsrPlan::new(idx.clone()).unwrap();
+            let mut scratch = shared.scratch();
+            shared.execute(&mut scratch, &v, &mut out).unwrap();
+            assert_eq!(out, pp_out, "shared vs owned rsr++ {what}");
+        }
+    }
+}
+
+#[test]
+fn ternary_plans_match_reference_across_k_grid() {
+    let mut rng = Rng::new(0xF1A8);
+    for k in 1..=8usize {
+        let (n, m) = (73, 41);
+        let a = TernaryMatrix::random(n, m, 1.0 / 3.0, &mut rng);
+        let idx = TernaryRsrIndex::preprocess(&a, k);
+        let v = rng.f32_vec(n, -1.0, 1.0);
+        let expect = reference_mul_ternary(&idx, &v);
+        let mut out = vec![0.0f32; m];
+        let what = format!("ternary k={k}");
+
+        let mut rsr = TernaryRsrPlan::new(idx.clone()).unwrap();
+        rsr.execute(&v, &mut out).unwrap();
+        assert_close(&out, &expect, &format!("rsr {what}"));
+
+        let mut pp = TernaryRsrPlusPlusPlan::new(idx.clone()).unwrap();
+        pp.execute(&v, &mut out).unwrap();
+        assert_close(&out, &expect, &format!("rsr++ {what}"));
+        let pp_out = out.clone();
+
+        let shared = SharedTernaryPlan::new(idx.clone()).unwrap();
+        let mut scratch = shared.scratch();
+        shared.execute(&mut scratch, &v, &mut out).unwrap();
+        assert_eq!(out, pp_out, "shared vs owned {what}");
+    }
+}
+
+#[test]
+fn batched_plans_match_reference_across_batch_sizes() {
+    let mut rng = Rng::new(0xF1A9);
+    for k in [1usize, 3, 5, 8] {
+        for &batch in &[1usize, 3, 8] {
+            let (n, m) = (97, 61);
+            let b = BinaryMatrix::random(n, m, 0.5, &mut rng);
+            let idx = RsrIndex::preprocess(&b, k);
+            let vs = rng.f32_vec(batch * n, -1.0, 1.0);
+            let mut plan = BatchedRsrPlan::new(idx.clone(), batch).unwrap();
+            let mut out = vec![0.0f32; batch * m];
+            plan.execute(&vs, batch, &mut out).unwrap();
+            for bi in 0..batch {
+                let expect = reference_mul(&idx, &vs[bi * n..(bi + 1) * n]);
+                assert_close(
+                    &out[bi * m..(bi + 1) * m],
+                    &expect,
+                    &format!("batched k={k} batch={batch} row={bi}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_ternary_matches_reference_across_batch_sizes() {
+    let mut rng = Rng::new(0xF1AA);
+    for &batch in &[1usize, 3, 8] {
+        let (n, m, k) = (73, 41, 4);
+        let a = TernaryMatrix::random(n, m, 1.0 / 3.0, &mut rng);
+        let idx = TernaryRsrIndex::preprocess(&a, k);
+        let vs = rng.f32_vec(batch * n, -1.0, 1.0);
+        let mut plan = BatchedTernaryRsrPlan::new(idx.clone(), batch).unwrap();
+        let mut out = vec![0.0f32; batch * m];
+        plan.execute(&vs, batch, &mut out).unwrap();
+        for bi in 0..batch {
+            let expect = reference_mul_ternary(&idx, &vs[bi * n..(bi + 1) * n]);
+            assert_close(
+                &out[bi * m..(bi + 1) * m],
+                &expect,
+                &format!("batched ternary batch={batch} row={bi}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_plans_match_reference_across_thread_counts() {
+    let mut rng = Rng::new(0xF1AB);
+    for &threads in &[1usize, 2, 8] {
+        for k in [1usize, 4, 8] {
+            let (n, m) = (130, 67);
+            let b = BinaryMatrix::random(n, m, 0.5, &mut rng);
+            let idx = RsrIndex::preprocess(&b, k);
+            let v = rng.f32_vec(n, -1.0, 1.0);
+            let expect = reference_mul(&idx, &v);
+            let mut plan = ParallelRsrPlan::new(idx, threads).unwrap();
+            let mut out = vec![0.0f32; m];
+            // Repeat to exercise pool generation reuse.
+            for round in 0..3 {
+                plan.execute(&v, &mut out).unwrap();
+                assert_close(
+                    &out,
+                    &expect,
+                    &format!("parallel threads={threads} k={k} round={round}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_ternary_matches_reference_across_thread_counts() {
+    let mut rng = Rng::new(0xF1AC);
+    for &threads in &[1usize, 2, 8] {
+        let (n, m, k) = (96, 51, 4);
+        let a = TernaryMatrix::random(n, m, 1.0 / 3.0, &mut rng);
+        let idx = TernaryRsrIndex::preprocess(&a, k);
+        let v = rng.f32_vec(n, -1.0, 1.0);
+        let expect = reference_mul_ternary(&idx, &v);
+        let mut plan = ParallelTernaryRsrPlan::new(idx, threads).unwrap();
+        let mut out = vec![0.0f32; m];
+        for round in 0..3 {
+            plan.execute(&v, &mut out).unwrap();
+            assert_close(
+                &out,
+                &expect,
+                &format!("parallel ternary threads={threads} round={round}"),
+            );
+        }
+    }
+}
+
+/// Both dispatch arms of the segmented sum (runtime SIMD pick vs the
+/// pinned scalar kernel) against the checked reference, per block, on
+/// segment lengths crossing all unroll widths.
+#[test]
+fn simd_dispatch_and_scalar_paths_agree_with_reference() {
+    let mut rng = Rng::new(0xF1AD);
+    for k in 1..=8usize {
+        let (n, m) = (257, 33); // ragged everywhere, segments of many lengths
+        let b = BinaryMatrix::random(n, m, 0.3, &mut rng);
+        let idx = RsrIndex::preprocess(&b, k);
+        let flat = FlatPlan::from_index(&idx).unwrap();
+        let v = rng.f32_vec(n, -1.0, 1.0);
+        for (i, blk) in idx.blocks.iter().enumerate() {
+            let two_w = 1usize << blk.width;
+            let mut expect = vec![0.0f32; two_w];
+            segmented_sum(blk, &v, &mut expect);
+            let mut scalar = vec![0.0f32; two_w];
+            // SAFETY: block slices of a validated FlatPlan; v.len() == rows.
+            unsafe {
+                segmented_sum_flat_scalar(flat.block_sigma(i), flat.block_seg(i), &v, &mut scalar);
+            }
+            let mut dispatched = vec![0.0f32; two_w];
+            // SAFETY: as above.
+            unsafe {
+                segmented_sum_flat(flat.block_sigma(i), flat.block_seg(i), &v, &mut dispatched);
+            }
+            for j in 0..two_w {
+                let tol = 1e-4 * (1.0 + expect[j].abs());
+                assert!(
+                    (scalar[j] - expect[j]).abs() <= tol,
+                    "scalar k={k} block={i} seg={j}"
+                );
+                assert!(
+                    (dispatched[j] - expect[j]).abs() <= tol,
+                    "dispatch k={k} block={i} seg={j}"
+                );
+            }
+        }
+    }
+}
