@@ -1,23 +1,31 @@
 //! `rsr bench-kernels` — the kernel-layer perf trajectory.
 //!
-//! Times one `v·A` (ternary, square `n×n`) through every hot-path
-//! backend on a fixed size grid and writes the numbers to
-//! `BENCH_kernels.json`, so the repo records its kernel performance
-//! machine-readably from PR to PR (CI runs a 1-size smoke on every
-//! push; the full grid is `n ∈ {1024, 4096, 8192}`).
+//! Times one `v·A` through every hot-path backend on a grid of
+//! `n×m` shapes and writes the numbers to `BENCH_kernels.json`, so the
+//! repo records its kernel performance machine-readably from PR to PR
+//! (CI runs a 1-shape smoke on every push and uploads the JSON as a
+//! workflow artifact; the default grid is square
+//! `n ∈ {1024, 4096, 8192}`, and `--shapes` adds the rectangular
+//! layer shapes real models serve, e.g. `4096x11008`).
+//!
+//! Timing goes through [`crate::tune::microbench`] — the **same**
+//! calibrated inner-repeat/median-of-trials path the autotuner ranks
+//! candidates with — so the recorded trajectory and `rsr tune`'s
+//! decisions never disagree about methodology.
 //!
 //! Backends:
 //! * `standard` — dense `O(n²)` i8 multiply (the paper's baseline);
 //! * `rsr` — Algorithm 2 on the flat plan;
 //! * `rsrpp` — Algorithm 2 + 3 on the flat plan (SIMD-dispatched
 //!   segmented sums, pairwise fold);
-//! * `rsr_parallel` — RSR++ across the persistent worker pool;
+//! * `rsr_parallel` — RSR++ across the shared worker pool;
 //! * `batched_per_vec` — batched RSR++ (segment-major interleaved
 //!   layout), reported **per vector** at the configured batch size.
 
 use std::path::PathBuf;
+use std::time::Duration;
 
-use crate::bench::harness::{measure, ms, Measurement, Table};
+use crate::bench::harness::Table;
 use crate::kernels::batched::BatchedTernaryRsrPlan;
 use crate::kernels::index::TernaryRsrIndex;
 use crate::kernels::optimal_k::optimal_k_rsrpp;
@@ -26,20 +34,26 @@ use crate::kernels::rsr::TernaryRsrPlan;
 use crate::kernels::rsrpp::TernaryRsrPlusPlusPlan;
 use crate::kernels::standard::standard_mul_ternary_i8;
 use crate::kernels::TernaryMatrix;
+use crate::tune::microbench::{bench, BenchOpts, BenchResult};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// Options for one bench-kernels run.
 #[derive(Debug, Clone)]
 pub struct KernelBenchOpts {
-    /// Matrix sizes (`n×n`) to sweep.
-    pub sizes: Vec<usize>,
-    /// Measured iterations per backend per size.
+    /// `(n, m)` shapes to sweep (`--sizes N` adds the square `N×N`;
+    /// `--shapes NxM` adds rectangles).
+    pub shapes: Vec<(usize, usize)>,
+    /// Trials per backend per shape (the reported figure is their
+    /// median).
     pub reps: usize,
     /// Batch size for the batched backend.
     pub batch: usize,
-    /// Thread count for the parallel backend (`0` → default).
+    /// Thread count for the parallel backend (`0` → the shared
+    /// process-wide pool).
     pub threads: usize,
+    /// Soft measurement budget per backend per shape.
+    pub budget: Duration,
     /// Where to write the JSON record (`None` → stdout table only).
     pub json_path: Option<PathBuf>,
 }
@@ -47,23 +61,32 @@ pub struct KernelBenchOpts {
 impl Default for KernelBenchOpts {
     fn default() -> Self {
         Self {
-            sizes: vec![1024, 4096, 8192],
+            shapes: vec![(1024, 1024), (4096, 4096), (8192, 8192)],
             reps: 5,
             batch: 8,
             threads: 0,
+            budget: Duration::from_millis(250),
             json_path: Some(PathBuf::from("BENCH_kernels.json")),
         }
     }
 }
 
-fn speedup(standard: &Measurement, other: &Measurement) -> f64 {
-    standard.summary.mean() / other.summary.mean().max(1e-12)
+fn median_ms(r: &BenchResult) -> f64 {
+    r.median_ns / 1e6
+}
+
+fn fmt_ms(r: &BenchResult) -> String {
+    crate::tune::microbench::human_ns(r.median_ns)
+}
+
+fn speedup(standard: &BenchResult, other: &BenchResult) -> f64 {
+    standard.median_ns / other.median_ns.max(1e-9)
 }
 
 /// Run the grid; returns the JSON record that was (optionally) written.
 pub fn run(opts: &KernelBenchOpts) -> Json {
     let mut table = Table::new(&[
-        "n",
+        "shape",
         "k",
         "standard",
         "rsr",
@@ -72,16 +95,17 @@ pub fn run(opts: &KernelBenchOpts) -> Json {
         "batched/vec",
         "rsr++ speedup",
     ]);
-    let mut sizes_json = Vec::new();
+    let mut shapes_json = Vec::new();
+    let bench_opts = BenchOpts { trials: opts.reps.max(1), budget: opts.budget };
 
-    for &n in &opts.sizes {
+    for &(n, m) in &opts.shapes {
         let k = optimal_k_rsrpp(n);
-        let mut rng = Rng::new(0xBE7C + n as u64);
-        let a = TernaryMatrix::random(n, n, 1.0 / 3.0, &mut rng);
+        let mut rng = Rng::new(0xBE7C + n as u64 + ((m as u64) << 24));
+        let a = TernaryMatrix::random(n, m, 1.0 / 3.0, &mut rng);
         let v = rng.f32_vec(n, -1.0, 1.0);
         let vs = rng.f32_vec(opts.batch * n, -1.0, 1.0);
-        let mut out = vec![0.0f32; n];
-        let mut bout = vec![0.0f32; opts.batch * n];
+        let mut out = vec![0.0f32; m];
+        let mut bout = vec![0.0f32; opts.batch * m];
 
         // Preprocess once; cloning the index for each plan is a bulk
         // copy, not a repeat of Algorithm 1's sorting passes.
@@ -92,45 +116,39 @@ pub fn run(opts: &KernelBenchOpts) -> Json {
             ParallelTernaryRsrPlan::new(idx.clone(), opts.threads).expect("fresh index");
         let mut bat = BatchedTernaryRsrPlan::new(idx, opts.batch).expect("fresh index");
 
-        let reps = opts.reps.max(1);
-        let m_std = measure(format!("standard n={n}"), 1, reps, || {
-            std::hint::black_box(standard_mul_ternary_i8(&v, &a))
+        let m_std = bench(bench_opts, || {
+            std::hint::black_box(standard_mul_ternary_i8(&v, &a));
         });
-        let m_rsr = measure(format!("rsr n={n}"), 1, reps, || {
-            rsr.execute(&v, &mut out).unwrap()
-        });
-        let m_pp = measure(format!("rsr++ n={n}"), 1, reps, || {
-            rsrpp.execute(&v, &mut out).unwrap()
-        });
-        let m_par = measure(format!("rsr++ parallel n={n}"), 1, reps, || {
-            par.execute(&v, &mut out).unwrap()
-        });
-        let m_bat = measure(format!("batched n={n}"), 1, reps, || {
+        let m_rsr = bench(bench_opts, || rsr.execute(&v, &mut out).unwrap());
+        let m_pp = bench(bench_opts, || rsrpp.execute(&v, &mut out).unwrap());
+        let m_par = bench(bench_opts, || par.execute(&v, &mut out).unwrap());
+        let m_bat = bench(bench_opts, || {
             bat.execute(&vs, opts.batch, &mut bout).unwrap()
         });
-        let bat_per_vec_ms = m_bat.mean_ms() / opts.batch as f64;
+        let bat_per_vec_ms = median_ms(&m_bat) / opts.batch as f64;
 
         table.row(&[
-            n.to_string(),
+            format!("{n}x{m}"),
             k.to_string(),
-            ms(&m_std),
-            ms(&m_rsr),
-            ms(&m_pp),
-            ms(&m_par),
+            fmt_ms(&m_std),
+            fmt_ms(&m_rsr),
+            fmt_ms(&m_pp),
+            fmt_ms(&m_par),
             format!("{bat_per_vec_ms:.3}ms"),
             format!("{:.2}x", speedup(&m_std, &m_pp)),
         ]);
 
-        sizes_json.push(Json::obj(vec![
+        shapes_json.push(Json::obj(vec![
             ("n", Json::num(n as f64)),
+            ("m", Json::num(m as f64)),
             ("k", Json::num(k as f64)),
             (
                 "ms",
                 Json::obj(vec![
-                    ("standard", Json::num(m_std.mean_ms())),
-                    ("rsr", Json::num(m_rsr.mean_ms())),
-                    ("rsrpp", Json::num(m_pp.mean_ms())),
-                    ("rsr_parallel", Json::num(m_par.mean_ms())),
+                    ("standard", Json::num(median_ms(&m_std))),
+                    ("rsr", Json::num(median_ms(&m_rsr))),
+                    ("rsrpp", Json::num(median_ms(&m_pp))),
+                    ("rsr_parallel", Json::num(median_ms(&m_par))),
                     ("batched_per_vec", Json::num(bat_per_vec_ms)),
                 ]),
             ),
@@ -142,7 +160,7 @@ pub fn run(opts: &KernelBenchOpts) -> Json {
                     ("rsr_parallel", Json::num(speedup(&m_std, &m_par))),
                     (
                         "batched_per_vec",
-                        Json::num(m_std.mean_ms() / bat_per_vec_ms.max(1e-12)),
+                        Json::num(median_ms(&m_std) / bat_per_vec_ms.max(1e-12)),
                     ),
                 ]),
             ),
@@ -161,7 +179,7 @@ pub fn run(opts: &KernelBenchOpts) -> Json {
                 opts.threads as f64
             }),
         ),
-        ("sizes", Json::Arr(sizes_json)),
+        ("shapes", Json::Arr(shapes_json)),
     ]);
 
     table.print("bench-kernels: standard vs RSR vs RSR++ vs parallel/batched");
@@ -181,17 +199,19 @@ mod tests {
     #[test]
     fn smoke_runs_and_records_speedups() {
         let opts = KernelBenchOpts {
-            sizes: vec![128],
+            shapes: vec![(128, 128), (96, 160)],
             reps: 1,
             batch: 2,
             threads: 1,
+            budget: Duration::from_millis(2),
             json_path: None,
         };
         let record = run(&opts);
-        let sizes = record.get("sizes").unwrap().as_arr().unwrap();
-        assert_eq!(sizes.len(), 1);
-        let entry = &sizes[0];
-        assert_eq!(entry.get("n").unwrap().as_f64(), Some(128.0));
+        let shapes = record.get("shapes").unwrap().as_arr().unwrap();
+        assert_eq!(shapes.len(), 2);
+        let entry = &shapes[1];
+        assert_eq!(entry.get("n").unwrap().as_f64(), Some(96.0));
+        assert_eq!(entry.get("m").unwrap().as_f64(), Some(160.0));
         let sp = entry.get("speedup_vs_standard").unwrap();
         assert!(sp.get("rsrpp").unwrap().as_f64().unwrap() > 0.0);
     }

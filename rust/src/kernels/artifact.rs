@@ -618,11 +618,13 @@ pub fn ternary_fingerprint(m: &TernaryMatrix) -> u64 {
     }
 }
 
-fn read_u32(r: &mut impl Read) -> Result<u32> {
+/// Shared with the `.rsrt` reader ([`crate::tune::profile`]), like the
+/// FNV helpers below.
+pub(crate) fn read_u32(r: &mut impl Read) -> Result<u32> {
     Ok(u32::from_le_bytes(read_arr(r)?))
 }
 
-fn read_arr<const N: usize>(r: &mut impl Read) -> Result<[u8; N]> {
+pub(crate) fn read_arr<const N: usize>(r: &mut impl Read) -> Result<[u8; N]> {
     let mut b = [0u8; N];
     r.read_exact(&mut b)?;
     Ok(b)
@@ -630,11 +632,13 @@ fn read_arr<const N: usize>(r: &mut impl Read) -> Result<[u8; N]> {
 
 /// FNV-1a 64-bit over a byte slice — small, dependency-free, and
 /// plenty for detecting bit rot / truncation (not a cryptographic MAC).
-fn fnv1a64(bytes: &[u8]) -> u64 {
+/// Shared with the `.rsrt` tuning-profile format
+/// ([`crate::tune::profile`]).
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
     fnv1a64_continue(0xcbf2_9ce4_8422_2325, bytes)
 }
 
-fn fnv1a64_continue(mut h: u64, bytes: &[u8]) -> u64 {
+pub(crate) fn fnv1a64_continue(mut h: u64, bytes: &[u8]) -> u64 {
     for &b in bytes {
         h ^= b as u64;
         h = h.wrapping_mul(0x0000_0100_0000_01b3);

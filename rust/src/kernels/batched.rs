@@ -211,23 +211,83 @@ fn execute_batched_flat(
     }
 }
 
+/// The batched executor body: transpose + interleaved scratch, holding
+/// **no** plan of its own. Callers pass borrowed [`FlatPlan`]s per
+/// execute, so the same executor drives plan-owned arenas
+/// ([`BatchedRsrPlan`] / [`BatchedTernaryRsrPlan`]) and store-shared
+/// ones ([`crate::runtime::ExecutablePlan`]).
+#[derive(Debug, Clone)]
+pub struct BatchedExec {
+    max_batch: usize,
+    scratch: BatchScratch,
+}
+
+impl BatchedExec {
+    /// An executor for plans with `rows` input length needing at most
+    /// `max_u` segmented sums per block, serving batches up to
+    /// `max_batch`.
+    pub fn new(rows: usize, max_u: usize, max_batch: usize) -> Result<Self> {
+        if max_batch == 0 {
+            return Err(Error::Config("max_batch must be >= 1".into()));
+        }
+        Ok(Self { max_batch, scratch: BatchScratch::new(max_batch, rows, max_u) })
+    }
+
+    /// Largest batch this executor accepts.
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// `out[b] = vs[b] · B` for every batch row (row-major `batch×rows`
+    /// in, `batch×cols` out, `batch ≤ max_batch`).
+    pub fn execute(
+        &mut self,
+        plan: &FlatPlan,
+        vs: &[f32],
+        batch: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let (n, m) = (plan.rows(), plan.cols());
+        check_batch_shapes(n, m, self.max_batch, vs, batch, out)?;
+        self.scratch.transpose_into(vs, batch, n);
+        execute_batched_flat(plan, &mut self.scratch, batch, out, Emit::Write);
+        Ok(())
+    }
+
+    /// `out[b] = vs[b] · A` for every batch row. The minus half is
+    /// subtracted directly into `out` block by block — no `batch × cols`
+    /// temporary exists anywhere in the ternary batched path.
+    pub fn execute_ternary(
+        &mut self,
+        plus: &FlatPlan,
+        minus: &FlatPlan,
+        vs: &[f32],
+        batch: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let (n, m) = (plus.rows(), plus.cols());
+        check_batch_shapes(n, m, self.max_batch, vs, batch, out)?;
+        check_batch_shapes(minus.rows(), minus.cols(), self.max_batch, vs, batch, out)?;
+        self.scratch.transpose_into(vs, batch, n);
+        execute_batched_flat(plus, &mut self.scratch, batch, out, Emit::Write);
+        execute_batched_flat(minus, &mut self.scratch, batch, out, Emit::Subtract);
+        Ok(())
+    }
+}
+
 /// Batched RSR++ plan over a binary matrix.
 #[derive(Debug, Clone)]
 pub struct BatchedRsrPlan {
     plan: FlatPlan,
-    max_batch: usize,
-    scratch: BatchScratch,
+    exec: BatchedExec,
 }
 
 impl BatchedRsrPlan {
     /// Build a plan for batches up to `max_batch` rows.
     pub fn new(index: RsrIndex, max_batch: usize) -> Result<Self> {
-        if max_batch == 0 {
-            return Err(Error::Config("max_batch must be >= 1".into()));
-        }
         let plan = FlatPlan::from_index(&index)?;
-        let scratch = BatchScratch::new(max_batch, plan.rows(), plan.max_u());
-        Ok(Self { plan, max_batch, scratch })
+        let exec = BatchedExec::new(plan.rows(), plan.max_u(), max_batch)?;
+        Ok(Self { plan, exec })
     }
 
     /// The underlying flat plan.
@@ -240,44 +300,30 @@ impl BatchedRsrPlan {
     /// `vs` is row-major `batch × rows`; `out` is row-major
     /// `batch × cols`. `batch ≤ max_batch`.
     pub fn execute(&mut self, vs: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
-        let (n, m) = (self.plan.rows(), self.plan.cols());
-        check_batch_shapes(n, m, self.max_batch, vs, batch, out)?;
-        self.scratch.transpose_into(vs, batch, n);
-        execute_batched_flat(&self.plan, &mut self.scratch, batch, out, Emit::Write);
-        Ok(())
+        self.exec.execute(&self.plan, vs, batch, out)
     }
 }
 
-/// Batched ternary plan (both Prop 2.1 halves). The minus half is
-/// subtracted directly into `out` block by block — no `batch × cols`
-/// temporary exists anywhere in the ternary batched path.
+/// Batched ternary plan (both Prop 2.1 halves). See
+/// [`BatchedExec::execute_ternary`] for the emit order.
 #[derive(Debug, Clone)]
 pub struct BatchedTernaryRsrPlan {
     plan: TernaryFlatPlan,
-    max_batch: usize,
-    scratch: BatchScratch,
+    exec: BatchedExec,
 }
 
 impl BatchedTernaryRsrPlan {
     /// Build from a preprocessed ternary index.
     pub fn new(index: TernaryRsrIndex, max_batch: usize) -> Result<Self> {
-        if max_batch == 0 {
-            return Err(Error::Config("max_batch must be >= 1".into()));
-        }
         let plan = TernaryFlatPlan::from_index(&index)?;
         let max_u = plan.plus.max_u().max(plan.minus.max_u());
-        let scratch = BatchScratch::new(max_batch, plan.plus.rows(), max_u);
-        Ok(Self { plan, max_batch, scratch })
+        let exec = BatchedExec::new(plan.plus.rows(), max_u, max_batch)?;
+        Ok(Self { plan, exec })
     }
 
     /// `out[b] = vs[b] · A` for every batch row.
     pub fn execute(&mut self, vs: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
-        let (n, m) = (self.plan.plus.rows(), self.plan.plus.cols());
-        check_batch_shapes(n, m, self.max_batch, vs, batch, out)?;
-        self.scratch.transpose_into(vs, batch, n);
-        execute_batched_flat(&self.plan.plus, &mut self.scratch, batch, out, Emit::Write);
-        execute_batched_flat(&self.plan.minus, &mut self.scratch, batch, out, Emit::Subtract);
-        Ok(())
+        self.exec.execute_ternary(&self.plan.plus, &self.plan.minus, vs, batch, out)
     }
 }
 

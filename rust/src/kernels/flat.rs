@@ -385,6 +385,22 @@ fn avx2_available() -> bool {
     }
 }
 
+/// Whether the dispatched gather path ([`gather_sum`]) can take the
+/// AVX2 route on this host — i.e. whether the `rsr++` and
+/// `rsr++-scalar` tuning candidates can differ. Also feeds the machine
+/// fingerprint of `.rsrt` tuning profiles
+/// ([`crate::tune::profile::MachineFingerprint`]).
+pub fn simd_gather_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        avx2_available()
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
 /// Gather-sum with runtime SIMD dispatch: AVX2 `vgatherdps` on x86-64
 /// CPUs that have it (for segments long enough to amortize the setup),
 /// the 4-accumulator scalar kernel everywhere else. Results differ
@@ -470,6 +486,50 @@ pub(crate) fn execute_rsrpp_flat(
         unsafe { segmented_sum_flat(plan.block_sigma(i), plan.block_seg(i), v, u) };
         let col = blk.col_start as usize;
         block_product_fold(u, w, &mut out[col..col + w], fold);
+    }
+}
+
+/// [`execute_rsrpp_flat`] pinned to the scalar gather kernel — the
+/// `rsr++-scalar` candidate of the autotuner (on machines where the
+/// AVX2 gather loses to the 4-accumulator scalar loop, the tuned
+/// profile selects this path explicitly).
+#[inline]
+pub(crate) fn execute_rsrpp_flat_scalar(
+    plan: &FlatPlan,
+    v: &[f32],
+    out: &mut [f32],
+    u: &mut [f32],
+    fold: &mut [f32],
+) {
+    assert_eq!(v.len(), plan.rows(), "activation length must match plan rows");
+    for (i, blk) in plan.blocks.iter().enumerate() {
+        let w = blk.width as usize;
+        let u = &mut u[..1 << w];
+        // SAFETY: the slices come from a validated plan and
+        // v.len() == rows was just asserted.
+        unsafe {
+            segmented_sum_flat_scalar(plan.block_sigma(i), plan.block_seg(i), v, u)
+        };
+        let col = blk.col_start as usize;
+        block_product_fold(u, w, &mut out[col..col + w], fold);
+    }
+}
+
+/// The RSR (Algorithm 2) hot loop over a flat plan: segmented sums +
+/// **dense** step-2 block product (`O(k·2^k)` instead of the fold's
+/// `O(2^k)`). [`super::rsr::RsrPlan`] and the tuned runtime path both
+/// call this, so their outputs are bit-identical by construction.
+#[inline]
+pub(crate) fn execute_rsr_flat(plan: &FlatPlan, v: &[f32], out: &mut [f32], u: &mut [f32]) {
+    assert_eq!(v.len(), plan.rows(), "activation length must match plan rows");
+    for (i, blk) in plan.blocks.iter().enumerate() {
+        let w = blk.width as usize;
+        let u = &mut u[..1 << w];
+        // SAFETY: the slices come from a validated plan and
+        // v.len() == rows was just asserted.
+        unsafe { segmented_sum_flat(plan.block_sigma(i), plan.block_seg(i), v, u) };
+        let col = blk.col_start as usize;
+        super::rsr::block_product_dense(u, w, &mut out[col..col + w]);
     }
 }
 

@@ -49,6 +49,25 @@ pub fn optimal_k_rsrpp(n: usize) -> usize {
     argmin_cost(n, rsrpp_cost)
 }
 
+/// Candidate window for the empirical autotuner: every `k` within
+/// `radius` of the analytic RSR++ optimum, widened to also contain the
+/// analytic RSR optimum (the two models disagree by a log-log factor,
+/// and the RSR backend's best `k` is usually smaller), clamped to the
+/// valid `1..=k_max(n)` range. Sorted ascending, deduplicated.
+///
+/// The analytic models (Eq 6/7) count abstract operations; on real
+/// hardware the winner shifts with cache sizes, gather throughput and
+/// the n×m shape, which is exactly why `rsr tune` measures this window
+/// instead of trusting the argmin.
+pub fn k_candidates(n: usize, radius: usize) -> Vec<usize> {
+    let hi_end = k_max(n);
+    let center_pp = optimal_k_rsrpp(n);
+    let center_r = optimal_k_rsr(n);
+    let lo = center_pp.saturating_sub(radius).min(center_r).max(1);
+    let hi = (center_pp + radius).max(center_r).min(hi_end);
+    (lo..=hi).collect()
+}
+
 /// Empirical `k_opt`: time the given runner at every `k` in range and
 /// return `(k_opt, times_ms)` — this regenerates App F.1 / Fig 9.
 ///
@@ -134,6 +153,23 @@ mod tests {
                 assert!(rsrpp_cost(n, kpp) <= rsrpp_cost(n, other));
             }
         }
+    }
+
+    #[test]
+    fn k_candidates_window_contains_both_analytic_optima() {
+        for n in [64usize, 1 << 10, 1 << 12, 1 << 16] {
+            for radius in [0usize, 1, 2, 4] {
+                let c = k_candidates(n, radius);
+                assert!(!c.is_empty());
+                assert!(c.contains(&optimal_k_rsrpp(n)), "n={n} r={radius}: {c:?}");
+                assert!(c.contains(&optimal_k_rsr(n)), "n={n} r={radius}: {c:?}");
+                assert!(c.windows(2).all(|w| w[0] < w[1]), "sorted+dedup: {c:?}");
+                assert!(*c.first().unwrap() >= 1);
+                assert!(*c.last().unwrap() <= k_max(n));
+            }
+        }
+        // Tiny n: window degenerates but stays valid.
+        assert_eq!(k_candidates(2, 4), vec![1]);
     }
 
     #[test]

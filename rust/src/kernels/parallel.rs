@@ -6,14 +6,22 @@
 //!
 //! The hot path is spawn-free and lock-free: a
 //! [`PersistentPool`](crate::util::threadpool::PersistentPool) of
-//! workers is built once per plan, every worker lane owns a
-//! pre-allocated `u`/fold scratch slot, and the per-block output
-//! ranges come straight from the flat-plan descriptors —
+//! workers is checked out per execute through a
+//! [`PoolHandle`](crate::util::threadpool::PoolHandle), every worker
+//! lane owns a pre-allocated `u`/fold scratch slot, and the per-block
+//! output ranges come straight from the flat-plan descriptors —
 //! `(col_start, width)` are disjoint by construction (validated at
 //! build), so each block writes its own output slice with no
-//! synchronization at all. The previous implementation paid a
-//! `thread::scope` spawn per worker per call, a `Vec` of output slices
-//! and a `Mutex` lock per block.
+//! synchronization at all.
+//!
+//! Pool ownership (ROADMAP item): plans built with `threads = 0` (the
+//! default everywhere above the kernel layer) share the **process-wide**
+//! pool via [`PoolHandle::global`] — N weight matrices cost one set of
+//! parked workers, not N. An explicit `threads > 0` still gets a
+//! dedicated pool for benches that pin parallelism. The executor body
+//! lives in [`SharedParallelExec`] so the tuned runtime path
+//! ([`crate::runtime::ExecutablePlan`]) can run **store-shared**
+//! (`Arc`'d) flat plans through the same code.
 
 use std::cell::UnsafeCell;
 
@@ -22,7 +30,7 @@ use super::index::{RsrIndex, TernaryRsrIndex};
 use super::rsr::check_shapes;
 use super::rsrpp::block_product_fold;
 use crate::error::Result;
-use crate::util::threadpool::PersistentPool;
+use crate::util::threadpool::PoolHandle;
 
 /// One worker lane's `(u, fold)` scratch. Wrapped in an `UnsafeCell`
 /// so the `Fn` closure handed to the pool can mutate it.
@@ -75,60 +83,51 @@ unsafe fn run_block(
     block_product_fold(u, width, out, fold);
 }
 
-/// Parallel RSR++ plan: flat arena + a persistent worker pool.
-pub struct ParallelRsrPlan {
-    plan: FlatPlan,
-    pool: PersistentPool,
+/// The block-parallel executor body: a pool handle, per-lane scratch
+/// and (for the ternary path) the minus-half temporary. Holds **no**
+/// plan — callers pass borrowed [`FlatPlan`]s per execute, so the same
+/// executor works for plan-owned arenas ([`ParallelRsrPlan`]) and
+/// store-shared ones ([`crate::runtime::ExecutablePlan`]).
+pub struct SharedParallelExec {
+    pool: PoolHandle,
     scratch: Vec<LaneScratch>,
+    tmp: Vec<f32>,
 }
 
-impl std::fmt::Debug for ParallelRsrPlan {
+impl std::fmt::Debug for SharedParallelExec {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("ParallelRsrPlan")
-            .field("rows", &self.plan.rows())
-            .field("cols", &self.plan.cols())
+        f.debug_struct("SharedParallelExec")
             .field("threads", &self.pool.threads())
             .finish()
     }
 }
 
-impl ParallelRsrPlan {
-    /// Build with an explicit thread count (`0` → default). Workers are
-    /// spawned here, once; `execute` never spawns. The pool is **owned
-    /// by this plan** — threads beyond the block count would never get
-    /// work, so the lane count is capped there; prefer the (shared,
-    /// serial-per-thread) RSR++ backend when running many plans
-    /// concurrently, or reuse one parallel plan per matrix.
-    pub fn new(index: RsrIndex, threads: usize) -> Result<Self> {
-        let plan = FlatPlan::from_index(&index)?;
-        let threads = resolve_threads(threads).min(plan.blocks().len().max(1));
-        let pool = PersistentPool::new(threads);
-        let scratch = lanes(pool.threads(), plan.max_u());
-        Ok(Self { plan, pool, scratch })
+impl SharedParallelExec {
+    /// An executor for plans needing at most `max_u` segmented sums per
+    /// block and `cols` output columns (`cols` sizes the ternary
+    /// temporary; pass 0 for binary-only use).
+    pub fn new(pool: PoolHandle, max_u: usize, cols: usize) -> Self {
+        let scratch = lanes(pool.threads(), max_u);
+        Self { pool, scratch, tmp: vec![0.0; cols] }
     }
 
-    /// The underlying flat plan.
-    pub fn flat(&self) -> &FlatPlan {
-        &self.plan
-    }
-
-    /// Configured worker count.
+    /// Lanes of parallelism the checkout can use.
     pub fn threads(&self) -> usize {
         self.pool.threads()
     }
 
-    /// Index bytes held by this plan.
-    pub fn index_bytes(&self) -> usize {
-        self.plan.bytes()
-    }
-
-    /// `out = v · B`, blocks distributed across the persistent pool.
-    pub fn execute(&mut self, v: &[f32], out: &mut [f32]) -> Result<()> {
-        check_shapes(self.plan.rows(), self.plan.cols(), v, out)?;
-        if self.plan.blocks().is_empty() {
+    /// `out = v · B`, blocks distributed across the pool.
+    ///
+    /// `plan` must need at most the `max_u` this executor was built
+    /// with (callers construct the two together).
+    pub fn execute(&mut self, plan: &FlatPlan, v: &[f32], out: &mut [f32]) -> Result<()> {
+        check_shapes(plan.rows(), plan.cols(), v, out)?;
+        debug_assert!(plan.max_u() <= self.scratch.first().map_or(0, |l|
+            // SAFETY: construction-time read, no concurrent access.
+            unsafe { (*l.0.get()).0.len() }));
+        if plan.blocks().is_empty() {
             return Ok(());
         }
-        let plan = &self.plan;
         let scratch = &self.scratch;
         let out_ptr = OutPtr(out.as_mut_ptr());
         self.pool.run(plan.blocks().len(), |w, i| {
@@ -139,55 +138,21 @@ impl ParallelRsrPlan {
         });
         Ok(())
     }
-}
 
-/// Parallel ternary plan (`A = B⁽¹⁾ − B⁽²⁾`). Both halves are
-/// dispatched in a **single** pool generation — chunks `0..nb` run the
-/// plus half into `out`, chunks `nb..2·nb` run the minus half into the
-/// plan-owned `tmp` — followed by one vectorizable subtraction. No
-/// allocation on the execute path (the seed version allocated a
-/// `cols`-sized `Vec` per call).
-pub struct ParallelTernaryRsrPlan {
-    plan: TernaryFlatPlan,
-    pool: PersistentPool,
-    scratch: Vec<LaneScratch>,
-    tmp: Vec<f32>,
-}
-
-impl std::fmt::Debug for ParallelTernaryRsrPlan {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("ParallelTernaryRsrPlan")
-            .field("rows", &self.plan.plus.rows())
-            .field("cols", &self.plan.plus.cols())
-            .field("threads", &self.pool.threads())
-            .finish()
-    }
-}
-
-impl ParallelTernaryRsrPlan {
-    /// Build with an explicit thread count (`0` → default). Lanes are
-    /// capped at the total block count across both halves (see
-    /// [`ParallelRsrPlan::new`] on pool ownership).
-    pub fn new(index: TernaryRsrIndex, threads: usize) -> Result<Self> {
-        let plan = TernaryFlatPlan::from_index(&index)?;
-        let total_blocks = plan.plus.blocks().len() + plan.minus.blocks().len();
-        let threads = resolve_threads(threads).min(total_blocks.max(1));
-        let pool = PersistentPool::new(threads);
-        let max_u = plan.plus.max_u().max(plan.minus.max_u());
-        let scratch = lanes(pool.threads(), max_u);
-        let tmp = vec![0.0; plan.plus.cols()];
-        Ok(Self { plan, pool, scratch, tmp })
-    }
-
-    /// Configured worker count.
-    pub fn threads(&self) -> usize {
-        self.pool.threads()
-    }
-
-    /// `out = v · A`.
-    pub fn execute(&mut self, v: &[f32], out: &mut [f32]) -> Result<()> {
-        let (plus, minus) = (&self.plan.plus, &self.plan.minus);
+    /// `out = v · A = v·B⁽¹⁾ − v·B⁽²⁾`. Both halves are dispatched in a
+    /// **single** pool generation — chunks `0..nb` run the plus half
+    /// into `out`, chunks `nb..2·nb` run the minus half into the
+    /// executor-owned `tmp` — followed by one vectorizable subtraction.
+    /// No allocation on the execute path.
+    pub fn execute_ternary(
+        &mut self,
+        plus: &FlatPlan,
+        minus: &FlatPlan,
+        v: &[f32],
+        out: &mut [f32],
+    ) -> Result<()> {
         check_shapes(plus.rows(), plus.cols(), v, out)?;
+        check_shapes(minus.rows(), minus.cols(), v, &self.tmp)?;
         let nb_plus = plus.blocks().len();
         let chunks = nb_plus + minus.blocks().len();
         if chunks == 0 {
@@ -213,18 +178,107 @@ impl ParallelTernaryRsrPlan {
         }
         Ok(())
     }
+}
+
+/// Resolve a `threads` request into a handle: `0` → the process-wide
+/// shared pool; an explicit count → a dedicated pool of that size.
+fn resolve_pool(threads: usize) -> PoolHandle {
+    if threads == 0 {
+        PoolHandle::global()
+    } else {
+        PoolHandle::new(threads)
+    }
+}
+
+/// Parallel RSR++ plan: flat arena + the shared-pool executor.
+pub struct ParallelRsrPlan {
+    plan: FlatPlan,
+    exec: SharedParallelExec,
+}
+
+impl std::fmt::Debug for ParallelRsrPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ParallelRsrPlan")
+            .field("rows", &self.plan.rows())
+            .field("cols", &self.plan.cols())
+            .field("threads", &self.exec.threads())
+            .finish()
+    }
+}
+
+impl ParallelRsrPlan {
+    /// Build a parallel plan. `threads = 0` (the default above the
+    /// kernel layer) checks the **process-wide** pool out per execute —
+    /// no workers are spawned per plan; an explicit count spawns a
+    /// dedicated pool here, once. `execute` never spawns.
+    pub fn new(index: RsrIndex, threads: usize) -> Result<Self> {
+        let plan = FlatPlan::from_index(&index)?;
+        let exec = SharedParallelExec::new(resolve_pool(threads), plan.max_u(), 0);
+        Ok(Self { plan, exec })
+    }
+
+    /// The underlying flat plan.
+    pub fn flat(&self) -> &FlatPlan {
+        &self.plan
+    }
+
+    /// Lanes of parallelism an execute can use.
+    pub fn threads(&self) -> usize {
+        self.exec.threads()
+    }
+
+    /// Index bytes held by this plan.
+    pub fn index_bytes(&self) -> usize {
+        self.plan.bytes()
+    }
+
+    /// `out = v · B`, blocks distributed across the pool.
+    pub fn execute(&mut self, v: &[f32], out: &mut [f32]) -> Result<()> {
+        self.exec.execute(&self.plan, v, out)
+    }
+}
+
+/// Parallel ternary plan (`A = B⁽¹⁾ − B⁽²⁾`). See
+/// [`SharedParallelExec::execute_ternary`] for the dispatch shape.
+pub struct ParallelTernaryRsrPlan {
+    plan: TernaryFlatPlan,
+    exec: SharedParallelExec,
+}
+
+impl std::fmt::Debug for ParallelTernaryRsrPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ParallelTernaryRsrPlan")
+            .field("rows", &self.plan.plus.rows())
+            .field("cols", &self.plan.plus.cols())
+            .field("threads", &self.exec.threads())
+            .finish()
+    }
+}
+
+impl ParallelTernaryRsrPlan {
+    /// Build a ternary parallel plan; `threads` semantics as in
+    /// [`ParallelRsrPlan::new`].
+    pub fn new(index: TernaryRsrIndex, threads: usize) -> Result<Self> {
+        let plan = TernaryFlatPlan::from_index(&index)?;
+        let max_u = plan.plus.max_u().max(plan.minus.max_u());
+        let exec =
+            SharedParallelExec::new(resolve_pool(threads), max_u, plan.plus.cols());
+        Ok(Self { plan, exec })
+    }
+
+    /// Lanes of parallelism an execute can use.
+    pub fn threads(&self) -> usize {
+        self.exec.threads()
+    }
+
+    /// `out = v · A`.
+    pub fn execute(&mut self, v: &[f32], out: &mut [f32]) -> Result<()> {
+        self.exec.execute_ternary(&self.plan.plus, &self.plan.minus, v, out)
+    }
 
     /// Index bytes across both Prop 2.1 halves.
     pub fn index_bytes(&self) -> usize {
         self.plan.bytes()
-    }
-}
-
-fn resolve_threads(threads: usize) -> usize {
-    if threads == 0 {
-        crate::util::threadpool::default_threads()
-    } else {
-        threads
     }
 }
 
@@ -278,10 +332,46 @@ mod tests {
     }
 
     #[test]
-    fn zero_threads_uses_default() {
+    fn zero_threads_shares_the_global_pool() {
         let mut rng = Rng::new(113);
         let b = BinaryMatrix::random(32, 16, 0.5, &mut rng);
         let plan = ParallelRsrPlan::new(RsrIndex::preprocess(&b, 3), 0).unwrap();
         assert!(plan.threads() >= 1);
+        // Two default-threaded plans report the same lane count — both
+        // ride the one process-wide pool (no per-plan worker spawn).
+        let plan2 = ParallelRsrPlan::new(RsrIndex::preprocess(&b, 3), 0).unwrap();
+        assert_eq!(plan.threads(), plan2.threads());
+    }
+
+    #[test]
+    fn concurrent_default_plans_stay_correct_under_contention() {
+        // Several threads execute global-pool plans at once: whoever
+        // loses the checkout runs serially, and every result must still
+        // match the reference.
+        let mut rng = Rng::new(127);
+        let b = BinaryMatrix::random(96, 48, 0.5, &mut rng);
+        let v = rng.f32_vec(96, -1.0, 1.0);
+        let expect = standard_mul_binary(&v, &b);
+        let idx = RsrIndex::preprocess(&b, 4);
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let idx = idx.clone();
+                let v = v.clone();
+                std::thread::spawn(move || {
+                    let mut plan = ParallelRsrPlan::new(idx, 0).unwrap();
+                    let mut out = vec![0.0; 48];
+                    for _ in 0..5 {
+                        plan.execute(&v, &mut out).unwrap();
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            let out = h.join().unwrap();
+            for (g, e) in out.iter().zip(expect.iter()) {
+                assert!((g - e).abs() < 1e-3);
+            }
+        }
     }
 }

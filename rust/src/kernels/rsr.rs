@@ -20,7 +20,7 @@
 //! The plans themselves execute on the contiguous [`FlatPlan`] arena
 //! ([`super::flat`]).
 
-use super::flat::{segmented_sum_flat, FlatPlan};
+use super::flat::{execute_rsr_flat, FlatPlan};
 use super::index::{BlockIndex, RsrIndex, TernaryRsrIndex};
 use crate::error::{Error, Result};
 
@@ -148,17 +148,7 @@ impl RsrPlan {
     /// ```
     pub fn execute(&mut self, v: &[f32], out: &mut [f32]) -> Result<()> {
         check_shapes(self.plan.rows(), self.plan.cols(), v, out)?;
-        for (i, blk) in self.plan.blocks().iter().enumerate() {
-            let w = blk.width as usize;
-            let u = &mut self.scratch[..1 << w];
-            // SAFETY: slices from a validated plan; check_shapes above
-            // guarantees v.len() == rows.
-            unsafe {
-                segmented_sum_flat(self.plan.block_sigma(i), self.plan.block_seg(i), v, u)
-            };
-            let col = blk.col_start as usize;
-            block_product_dense(u, w, &mut out[col..col + w]);
-        }
+        execute_rsr_flat(&self.plan, v, out, &mut self.scratch);
         Ok(())
     }
 }

@@ -10,6 +10,7 @@
 //! [`crate::runtime::PlanStore`] both exploit.
 
 use super::binary::BinaryMatrix;
+use crate::error::{Error, Result};
 use crate::util::rng::Rng;
 
 /// A ternary matrix stored as i8 (−1, 0, 1), row-major. A 2-bit packed
@@ -137,18 +138,33 @@ impl TernaryMatrix {
     }
 
     /// Inverse of [`pack2`](Self::pack2).
-    pub fn unpack2(rows: usize, cols: usize, packed: &[u8]) -> Self {
+    ///
+    /// A short buffer or the reserved code `0b11` is a decode error,
+    /// not a panic — `.rtw` weight loading feeds untrusted bytes
+    /// through here, and a corrupt input must not abort a serving
+    /// process.
+    pub fn unpack2(rows: usize, cols: usize, packed: &[u8]) -> Result<Self> {
         let n = rows * cols;
-        assert!(packed.len() >= n.div_ceil(4), "packed buffer too small");
-        let data = (0..n)
-            .map(|i| match (packed[i / 4] >> ((i % 4) * 2)) & 0b11 {
+        if packed.len() < n.div_ceil(4) {
+            return Err(Error::InvalidModel(format!(
+                "packed ternary buffer too small: {} bytes for {rows}x{cols}",
+                packed.len()
+            )));
+        }
+        let mut data = Vec::with_capacity(n);
+        for i in 0..n {
+            data.push(match (packed[i / 4] >> ((i % 4) * 2)) & 0b11 {
                 0b00 => 0i8,
                 0b01 => 1i8,
                 0b10 => -1i8,
-                _ => panic!("invalid ternary code at {i}"),
-            })
-            .collect();
-        Self { rows, cols, data }
+                _ => {
+                    return Err(Error::InvalidModel(format!(
+                        "invalid ternary code 0b11 at entry {i}"
+                    )))
+                }
+            });
+        }
+        Ok(Self { rows, cols, data })
     }
 }
 
@@ -184,8 +200,22 @@ mod tests {
         let a = TernaryMatrix::random(13, 29, 1.0 / 3.0, &mut rng);
         let packed = a.pack2();
         assert_eq!(packed.len(), a.packed2_bytes());
-        let b = TernaryMatrix::unpack2(13, 29, &packed);
+        let b = TernaryMatrix::unpack2(13, 29, &packed).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn unpack2_rejects_corrupt_input_without_panicking() {
+        let mut rng = Rng::new(19);
+        let a = TernaryMatrix::random(8, 8, 1.0 / 3.0, &mut rng);
+        let mut packed = a.pack2();
+        // The reserved code 0b11 → decode error, not a panic.
+        packed[3] |= 0b11;
+        let err = TernaryMatrix::unpack2(8, 8, &packed).unwrap_err();
+        assert!(err.to_string().contains("invalid ternary code"), "{err}");
+        // Truncated buffer → decode error.
+        let short = &a.pack2()[..a.packed2_bytes() - 1];
+        assert!(TernaryMatrix::unpack2(8, 8, short).is_err());
     }
 
     #[test]

@@ -21,6 +21,10 @@
 //!   plan registry shared by every worker and replica) and the PJRT
 //!   engine that executes AOT-compiled XLA artifacts (HLO text produced
 //!   by the python/JAX/Pallas build step; `pjrt` feature),
+//! * [`tune`] — the empirical autotuner: per-layer `(k, backend)`
+//!   microbenchmarks compiled into versioned `.rsrt` profiles that the
+//!   plan store executes ([`tune::TuneProfile`],
+//!   [`runtime::ExecutablePlan`]),
 //! * [`serving`] — request router, dynamic batcher and prefill/decode
 //!   scheduler serving the model over TCP,
 //! * [`bench`] — the harness regenerating every table and figure of the
@@ -77,6 +81,7 @@ pub mod kernels;
 pub mod model;
 pub mod runtime;
 pub mod serving;
+pub mod tune;
 pub mod util;
 
 pub use error::{Error, Result};

@@ -5,8 +5,9 @@
 //! rsr multiply    --n 4096 --backend rsr++ [--check]  # one product
 //! rsr generate-model --preset tiny --out model.rtw    # synthetic 1.58-bit model
 //! rsr pack        --model model.rtw --out plans/      # compile-once: .rsrz plan artifacts
-//! rsr inspect     --plans plans/ [--deep]             # artifact stats / integrity
-//! rsr serve       --model model.rtw [--plans plans/] --addr 0.0.0.0:7878 [--replicas 2]
+//! rsr tune        --weights model.rtw --out model.rsrt [--budget-ms N]  # measure (k, backend)/layer
+//! rsr inspect     --plans plans/ [--deep]             # artifact/.rsrt stats, integrity
+//! rsr serve       --model model.rtw [--plans plans/] [--profile model.rsrt] --addr 0.0.0.0:7878
 //! rsr client      --addr 127.0.0.1:7878 --prompt "What is the capital of France?"
 //! rsr experiment  fig4|fig5|fig6|fig9|fig10|fig11|fig12|table1|ablations [--full]
 //! rsr selfcheck                                        # cross-backend sanity
@@ -40,6 +41,7 @@ use rsr::model::weights::ModelWeights;
 use rsr::serving::engine::{EngineConfig, InferenceEngine};
 use rsr::serving::router::Router;
 use rsr::serving::server::{Client, Server};
+use rsr::tune::{human_ns, tune_model, TuneOpts, TuneProfile};
 use rsr::util::rng::Rng;
 
 fn main() {
@@ -91,6 +93,7 @@ fn run(args: &[String]) -> Result<()> {
         "multiply" => cmd_multiply(&f),
         "generate-model" => cmd_generate_model(&f),
         "pack" => cmd_pack(&f),
+        "tune" => cmd_tune(&f),
         "inspect" => cmd_inspect(&f),
         "serve" => cmd_serve(&f),
         "client" => cmd_client(&f),
@@ -113,11 +116,12 @@ fn print_help() {
          preprocess     --n N [--k K] [--seed S] [--out FILE]   build a block index\n  \
          multiply       --n N [--backend B] [--k K] [--check]   run one v·A product\n  \
          generate-model [--preset P] [--seed S] --out FILE      synthetic 1.58-bit model\n  \
-         pack           --model FILE | --n N  --out DIR [--k K] preprocess to .rsrz artifacts\n  \
-         inspect        --plans DIR | --file FILE [--deep]      plan artifact stats\n  \
-         serve          --model FILE [--plans DIR] [--addr A] [--replicas R] [--workers W] [--backend B]\n  \
+         pack           --model FILE | --n N  --out DIR [--k K] [--profile FILE.rsrt]  preprocess to .rsrz\n  \
+         tune           --weights FILE --out FILE.rsrt [--budget-ms N] [--radius R] [--trials T]\n  \
+         inspect        --plans DIR | --file FILE [--deep]      .rsrz / .rsrt stats\n  \
+         serve          --model FILE [--plans DIR] [--profile FILE.rsrt] [--addr A] [--replicas R] [--workers W] [--backend B]\n  \
          client         [--addr A] --prompt TEXT [--max-new N]\n  \
-         bench-kernels  [--sizes 1024,4096,8192] [--reps N] [--batch B] [--threads T] [--json FILE]\n  \
+         bench-kernels  [--sizes 1024,4096] [--shapes 4096x11008] [--reps N] [--batch B] [--threads T] [--json FILE]\n  \
          experiment     <fig4|fig5|fig6|fig9|fig10|fig11|fig12|table1|ablations|all> [--full]\n  \
          selfcheck                                              cross-backend equality\n  \
          artifacts                                              list AOT artifacts\n\n\
@@ -237,6 +241,7 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
         .unwrap_or(Backend::RsrPlusPlus);
 
     let plans = f.get("plans").map(PathBuf::from);
+    let profile = f.get("profile").map(PathBuf::from);
     let k = get_usize(f, "k", 0)?;
 
     println!("loading {model_path}...");
@@ -244,9 +249,16 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
 
     // One process-wide plan store on the RSR++ path: every replica and
     // every worker thread shares the same compiled plans (the
-    // compile-once/serve-many contract; the (plans, backend) policy
-    // lives in InferenceEngine::build_plan_store).
-    let cfg = EngineConfig { workers, backend, k, plan_dir: plans.clone(), ..Default::default() };
+    // compile-once/serve-many contract; the (plans, backend, profile)
+    // policy lives in InferenceEngine::build_plan_store).
+    let cfg = EngineConfig {
+        workers,
+        backend,
+        k,
+        plan_dir: plans.clone(),
+        tune_profile: profile,
+        ..Default::default()
+    };
     if let Some(dir) = &plans {
         println!("opening plan artifacts in {}...", dir.display());
     }
@@ -314,27 +326,49 @@ fn cmd_client(f: &HashMap<String, String>) -> Result<()> {
 fn cmd_bench_kernels(f: &HashMap<String, String>) -> Result<()> {
     use rsr::bench::experiments::kernels::{run, KernelBenchOpts};
     let mut opts = KernelBenchOpts::default();
+    // --sizes N,… (squares) and/or --shapes NxM,… (rectangles); naming
+    // either replaces the default grid.
+    let mut shapes = Vec::new();
     if let Some(sizes) = f.get("sizes") {
-        opts.sizes = sizes
-            .split(',')
-            .map(|s| {
-                s.trim()
-                    .parse::<usize>()
-                    .map_err(|_| Error::Config(format!("bad size {s} in --sizes")))
-            })
-            .collect::<Result<Vec<_>>>()?;
-        if opts.sizes.is_empty() {
-            return Err(Error::Config("--sizes must name at least one n".into()));
+        for s in sizes.split(',') {
+            let n: usize = s
+                .trim()
+                .parse()
+                .map_err(|_| Error::Config(format!("bad size {s} in --sizes")))?;
+            shapes.push((n, n));
         }
+    }
+    if let Some(spec) = f.get("shapes") {
+        for s in spec.split(',') {
+            shapes.push(parse_shape(s.trim())?);
+        }
+    }
+    if !shapes.is_empty() {
+        opts.shapes = shapes;
+    }
+    if opts.shapes.iter().any(|&(n, m)| n == 0 || m == 0) {
+        return Err(Error::Config("shapes must be positive".into()));
     }
     opts.reps = get_usize(f, "reps", opts.reps)?.max(1);
     opts.batch = get_usize(f, "batch", opts.batch)?.max(1);
     opts.threads = get_usize(f, "threads", 0)?;
+    opts.budget =
+        std::time::Duration::from_millis(get_usize(f, "budget-ms", 250)? as u64);
     opts.json_path = Some(PathBuf::from(
         f.get("json").cloned().unwrap_or_else(|| "BENCH_kernels.json".into()),
     ));
     run(&opts);
     Ok(())
+}
+
+/// Parse one `NxM` pair (e.g. `4096x11008`).
+fn parse_shape(s: &str) -> Result<(usize, usize)> {
+    let err = || Error::Config(format!("bad shape {s} in --shapes (expected NxM)"));
+    let (n, m) = s.split_once(|c| c == 'x' || c == 'X').ok_or_else(err)?;
+    Ok((
+        n.trim().parse().map_err(|_| err())?,
+        m.trim().parse().map_err(|_| err())?,
+    ))
 }
 
 fn cmd_experiment(rest: &[String], f: &HashMap<String, String>) -> Result<()> {
@@ -421,6 +455,22 @@ fn cmd_pack(f: &HashMap<String, String>) -> Result<()> {
             "--k {k_flag} is out of range (1..=16, or 0 for the analytic optimum)"
         )));
     }
+    // --profile packs each layer at its tuned k, so the artifacts can
+    // be served together with that profile (`rsr serve --plans …
+    // --profile …`). No host fingerprint check here: packing routinely
+    // happens on a build box for a profile tuned on the serve box.
+    let profile = match f.get("profile") {
+        None => None,
+        Some(p) => {
+            let prof = TuneProfile::load(p)?;
+            println!(
+                "packing at the tuned blocking from {p} ({} layers, machine {})",
+                prof.len(),
+                prof.fingerprint.describe()
+            );
+            Some(prof)
+        }
+    };
 
     let mut table =
         Table::new(&["name", "shape", "k", "artifact", "dense f32", "ratio", "preprocess"]);
@@ -429,7 +479,13 @@ fn cmd_pack(f: &HashMap<String, String>) -> Result<()> {
         println!("loading {path}...");
         let weights = ModelWeights::load(path)?;
         for (name, m, scale) in weights.named_matrices() {
-            pack_one(&out, &name, m, scale, k_flag, &mut table, &mut totals)?;
+            // Tuned k per layer; layers absent from the profile keep
+            // the --k / analytic default.
+            let k_layer = profile
+                .as_ref()
+                .and_then(|p| p.get(&name))
+                .map_or(k_flag, |l| l.winner().k);
+            pack_one(&out, &name, m, scale, k_layer, &mut table, &mut totals)?;
         }
     } else {
         let n = get_usize(f, "n", 0)?;
@@ -455,59 +511,194 @@ fn cmd_pack(f: &HashMap<String, String>) -> Result<()> {
 fn cmd_inspect(f: &HashMap<String, String>) -> Result<()> {
     let deep = f.contains_key("deep");
     let mut paths: Vec<PathBuf> = Vec::new();
+    let mut profiles: Vec<PathBuf> = Vec::new();
+    let is_rsrt = |p: &Path| p.extension().is_some_and(|e| e == "rsrt");
     if let Some(file) = f.get("file") {
-        paths.push(PathBuf::from(file));
+        let p = PathBuf::from(file);
+        if is_rsrt(&p) {
+            profiles.push(p);
+        } else {
+            paths.push(p);
+        }
+    } else if let Some(file) = f.get("profile") {
+        profiles.push(PathBuf::from(file));
     } else if let Some(dir) = f.get("plans") {
         for entry in std::fs::read_dir(dir)? {
             let p = entry?.path();
             if p.extension().is_some_and(|e| e == "rsrz") {
                 paths.push(p);
+            } else if is_rsrt(&p) {
+                profiles.push(p);
             }
         }
         paths.sort();
-        if paths.is_empty() {
-            return Err(Error::Config(format!("no .rsrz artifacts in {dir}")));
+        profiles.sort();
+        if paths.is_empty() && profiles.is_empty() {
+            return Err(Error::Config(format!(
+                "no .rsrz artifacts or .rsrt profiles in {dir}"
+            )));
         }
     } else {
-        return Err(Error::Config("inspect requires --plans DIR or --file FILE".into()));
+        return Err(Error::Config(
+            "inspect requires --plans DIR, --file FILE or --profile FILE".into(),
+        ));
     }
 
-    let mut table = Table::new(&[
-        "name", "kind", "shape", "k", "scale", "index bytes", "dense f32", "packed", "ratio",
-    ]);
-    let mut totals = (0usize, 0usize);
-    for p in &paths {
-        // --deep decodes the payload, verifies the checksum and
-        // re-validates every structural invariant; the default reads
-        // only the header.
-        let meta = if deep { PlanArtifact::load(p)?.meta } else { PlanArtifact::peek(p)? };
-        table.row(&[
-            meta.name.clone(),
-            meta.kind.name().to_string(),
-            format!("{}x{}", meta.rows, meta.cols),
-            meta.k.to_string(),
-            format!("{:.4}", meta.scale),
-            human_bytes(meta.payload_bytes),
-            human_bytes(meta.dense_f32_bytes()),
-            human_bytes(meta.packed_bytes()),
-            format!("{:.3}", meta.ratio_vs_dense()),
+    if !paths.is_empty() {
+        let mut table = Table::new(&[
+            "name", "kind", "shape", "k", "scale", "index bytes", "dense f32", "packed", "ratio",
         ]);
-        totals.0 += meta.payload_bytes;
-        totals.1 += meta.dense_f32_bytes();
+        let mut totals = (0usize, 0usize);
+        for p in &paths {
+            // --deep decodes the payload, verifies the checksum and
+            // re-validates every structural invariant; the default reads
+            // only the header.
+            let meta =
+                if deep { PlanArtifact::load(p)?.meta } else { PlanArtifact::peek(p)? };
+            table.row(&[
+                meta.name.clone(),
+                meta.kind.name().to_string(),
+                format!("{}x{}", meta.rows, meta.cols),
+                meta.k.to_string(),
+                format!("{:.4}", meta.scale),
+                human_bytes(meta.payload_bytes),
+                human_bytes(meta.dense_f32_bytes()),
+                human_bytes(meta.packed_bytes()),
+                format!("{:.3}", meta.ratio_vs_dense()),
+            ]);
+            totals.0 += meta.payload_bytes;
+            totals.1 += meta.dense_f32_bytes();
+        }
+        table.print(if deep {
+            "plan artifacts (deep: payload decoded, checksum + invariants verified)"
+        } else {
+            "plan artifacts"
+        });
+        println!(
+            "\ntotal index {} vs dense f32 {} — ratio {:.3}",
+            human_bytes(totals.0),
+            human_bytes(totals.1),
+            totals.0 as f64 / totals.1 as f64
+        );
     }
-    table.print(if deep {
-        "plan artifacts (deep: payload decoded, checksum + invariants verified)"
-    } else {
-        "plan artifacts"
-    });
-    println!(
-        "\ntotal index {} vs dense f32 {} — ratio {:.3}",
-        human_bytes(totals.0),
-        human_bytes(totals.1),
-        totals.0 as f64 / totals.1 as f64
-    );
+    for p in &profiles {
+        inspect_profile(p)?;
+    }
     Ok(())
 }
+
+/// Print one `.rsrt` tuning profile: fingerprint (flagged when it is
+/// not this host's), per-layer winner and the head of the fallback
+/// chain. Loading alone verifies the checksum and every structural
+/// invariant.
+fn inspect_profile(path: &Path) -> Result<()> {
+    let p = TuneProfile::load(path)?;
+    let foreign = p.verify_host().is_err();
+    let mut table =
+        Table::new(&["layer", "shape", "winner", "k", "median", "fallback chain"]);
+    for l in &p.layers {
+        let w = l.winner();
+        let fallbacks: Vec<String> = l
+            .chain
+            .iter()
+            .skip(1)
+            .take(3)
+            .map(|c| format!("{} k={}", c.backend.name(), c.k))
+            .collect();
+        table.row(&[
+            l.name.clone(),
+            format!("{}x{}", l.rows, l.cols),
+            w.backend.name().to_string(),
+            w.k.to_string(),
+            human_ns(w.ns),
+            if fallbacks.is_empty() { "-".into() } else { fallbacks.join(", ") },
+        ]);
+    }
+    table.print(&format!(
+        "tuning profile {} — {} layers, machine {}{}",
+        path.display(),
+        p.len(),
+        p.fingerprint.describe(),
+        if foreign { " (NOT this host: serving would reject it)" } else { "" }
+    ));
+    Ok(())
+}
+
+fn cmd_tune(f: &HashMap<String, String>) -> Result<()> {
+    let weights_path = f
+        .get("weights")
+        .or_else(|| f.get("model"))
+        .ok_or_else(|| Error::Config("tune requires --weights FILE (a .rtw model)".into()))?;
+    let out = f
+        .get("out")
+        .ok_or_else(|| Error::Config("tune requires --out FILE (the .rsrt profile)".into()))?;
+    let budget_ms = get_usize(f, "budget-ms", 250)?.max(1);
+    let radius = get_usize(f, "radius", 2)?;
+    let trials = get_usize(f, "trials", 5)?.max(1);
+
+    println!("loading {weights_path}...");
+    let weights = ModelWeights::load(weights_path)?;
+    let opts = TuneOpts {
+        radius,
+        budget_per_layer: std::time::Duration::from_millis(budget_ms as u64),
+        trials,
+    };
+    println!(
+        "tuning {} layers ({budget_ms}ms/layer, k-radius {radius}, {trials} trials)...",
+        weights.matrix_names().len()
+    );
+    let t0 = std::time::Instant::now();
+    let (profile, reports) = tune_model(&weights, &opts, |r| {
+        let w = r.winner();
+        println!(
+            "  {:<14} {:>5}x{:<5} -> {} k={} ({})",
+            r.name,
+            r.rows,
+            r.cols,
+            w.candidate.backend.name(),
+            w.candidate.k,
+            human_ns(w.result.median_ns)
+        );
+    })?;
+
+    let mut table =
+        Table::new(&["layer", "shape", "winner", "k", "median", "runner-up", "margin"]);
+    for r in &reports {
+        let w = r.winner();
+        let ru = r.timings.get(1);
+        table.row(&[
+            r.name.clone(),
+            format!("{}x{}", r.rows, r.cols),
+            w.candidate.backend.name().to_string(),
+            w.candidate.k.to_string(),
+            human_ns(w.result.median_ns),
+            ru.map_or_else(
+                || "-".into(),
+                |t| format!("{} k={}", t.candidate.backend.name(), t.candidate.k),
+            ),
+            ru.map_or_else(
+                || "-".into(),
+                |t| {
+                    format!(
+                        "{:+.1}%",
+                        (t.result.median_ns / w.result.median_ns.max(1e-9) - 1.0) * 100.0
+                    )
+                },
+            ),
+        ]);
+    }
+    table.print("tune: per-layer winners");
+    profile.save(out)?;
+    println!(
+        "\nwrote {out} — {} layers, machine {}, tuned in {:.1}s",
+        profile.len(),
+        profile.fingerprint.describe(),
+        t0.elapsed().as_secs_f64()
+    );
+    println!("serve it with: rsr serve --model {weights_path} --profile {out}");
+    Ok(())
+}
+
 
 fn human_bytes(b: usize) -> String {
     if b >= 1 << 20 {

@@ -19,7 +19,9 @@ use crate::kernels::rsrpp::TernaryRsrPlusPlusPlan;
 use crate::kernels::standard::{packed_mul_ternary, standard_mul_ternary_i8};
 use crate::kernels::tensorized::TernaryTensorizedIndex;
 use crate::kernels::{Backend, BinaryMatrix, TernaryMatrix};
-use crate::runtime::plan_store::{PlanScratch, SharedTernaryPlan};
+use crate::runtime::executable::ExecutablePlan;
+use crate::runtime::plan_store::{PlanEntry, PlanScratch, SharedTernaryPlan};
+use crate::tune::candidates::TunedBackend;
 
 /// Prepared execution state for one backend.
 enum Prepared {
@@ -42,6 +44,10 @@ enum Prepared {
     /// [`PlanStore`](crate::runtime::PlanStore)), only the scratch is
     /// owned by this layer instance.
     Shared { plan: Arc<SharedTernaryPlan>, scratch: PlanScratch },
+    /// A store-shared plan executing a **tuned** backend choice (an
+    /// `rsr tune` profile winner) through
+    /// [`ExecutablePlan`](crate::runtime::ExecutablePlan).
+    Tuned(ExecutablePlan),
 }
 
 /// A ternary linear layer with a pluggable multiply backend.
@@ -107,6 +113,28 @@ impl BitLinear {
         }
     }
 
+    /// Prepare a layer from a [`PlanStore`](crate::runtime::PlanStore)
+    /// entry, honoring the entry's tuned `(k, backend)` choice when the
+    /// store was built with an `rsr tune` profile. Untuned entries take
+    /// the exact [`from_shared`](Self::from_shared) path — a store
+    /// without a profile behaves identically to before tuning existed.
+    pub fn from_plan_entry(entry: &PlanEntry, scale: f32) -> Result<Self> {
+        let plan = entry.ternary()?;
+        match &entry.tuned {
+            None => Ok(Self::from_shared(plan, scale)),
+            Some(choice) => {
+                let exec = ExecutablePlan::new(plan, choice.backend)?;
+                Ok(Self {
+                    in_dim: exec.rows(),
+                    out_dim: exec.cols(),
+                    scale,
+                    backend: coarse_backend(choice.backend),
+                    prepared: Prepared::Tuned(exec),
+                })
+            }
+        }
+    }
+
     /// Input width.
     pub fn in_dim(&self) -> usize {
         self.in_dim
@@ -117,9 +145,20 @@ impl BitLinear {
         self.out_dim
     }
 
-    /// The backend this layer dispatches to.
+    /// The backend this layer dispatches to. For tuned layers this is
+    /// the coarse algorithm *family* (see
+    /// [`tuned_backend`](Self::tuned_backend) for the exact choice).
     pub fn backend(&self) -> Backend {
         self.backend
+    }
+
+    /// The exact tuned backend, when this layer executes a profile
+    /// choice.
+    pub fn tuned_backend(&self) -> Option<TunedBackend> {
+        match &self.prepared {
+            Prepared::Tuned(exec) => Some(exec.backend()),
+            _ => None,
+        }
     }
 
     /// Bytes held by the prepared weight representation — what Fig 5's
@@ -138,6 +177,7 @@ impl BitLinear {
             // The index is shared process-wide; report it in full here
             // (Fig 5 semantics) — per-instance cost is just the scratch.
             Prepared::Shared { plan, .. } => plan.index_bytes(),
+            Prepared::Tuned(exec) => exec.index_bytes(),
         }
     }
 
@@ -160,6 +200,7 @@ impl BitLinear {
             Prepared::Tensorized(t) => t.execute(x, out)?,
             Prepared::Fused(plan) => plan.execute(x, out)?,
             Prepared::Shared { plan, scratch } => plan.execute(scratch, x, out)?,
+            Prepared::Tuned(exec) => exec.execute(x, out)?,
         }
         if self.scale != 1.0 {
             for o in out.iter_mut() {
@@ -167,6 +208,19 @@ impl BitLinear {
             }
         }
         Ok(())
+    }
+}
+
+/// Map a tuned backend to the coarse [`Backend`] family it belongs to
+/// (the scalar-gather and batched variants are RSR++ executions the
+/// `Backend` enum cannot distinguish).
+fn coarse_backend(tuned: TunedBackend) -> Backend {
+    match tuned {
+        TunedBackend::Rsr => Backend::Rsr,
+        TunedBackend::RsrPlusPlus
+        | TunedBackend::RsrPlusPlusScalar
+        | TunedBackend::Batched => Backend::RsrPlusPlus,
+        TunedBackend::Parallel => Backend::RsrParallel,
     }
 }
 
@@ -223,6 +277,41 @@ mod tests {
         let mut got2 = vec![0.0; 64];
         shared2.forward(&x, &mut got2).unwrap();
         assert_eq!(got2, expect);
+    }
+
+    #[test]
+    fn plan_entry_layers_execute_tuned_and_untuned() {
+        use crate::runtime::PlanStore;
+        use crate::tune::profile::LayerChoice;
+
+        let mut rng = Rng::new(191);
+        let w = TernaryMatrix::random(64, 48, 1.0 / 3.0, &mut rng);
+        let x = rng.int_f32_vec(64, 2);
+        let store = PlanStore::new();
+        let entry = store
+            .insert_ternary("l", crate::kernels::TernaryRsrIndex::preprocess(&w, 4), 4, 1.0)
+            .unwrap();
+
+        // Untuned entry → the from_shared path, bit-identical to it.
+        let mut untuned = BitLinear::from_plan_entry(&entry, 1.0).unwrap();
+        assert_eq!(untuned.tuned_backend(), None);
+        let mut expect = vec![0.0; 48];
+        untuned.forward(&x, &mut expect).unwrap();
+
+        // A tuned entry dispatches its choice; on integer inputs every
+        // backend is exactly equal.
+        for backend in TunedBackend::ALL {
+            let tuned_entry = PlanEntry {
+                tuned: Some(LayerChoice { backend, k: 4, ns: 1.0 }),
+                ..(*entry).clone()
+            };
+            let mut layer = BitLinear::from_plan_entry(&tuned_entry, 1.0).unwrap();
+            assert_eq!(layer.tuned_backend(), Some(backend));
+            assert_eq!(layer.in_dim(), 64);
+            let mut got = vec![0.0; 48];
+            layer.forward(&x, &mut got).unwrap();
+            assert_eq!(got, expect, "{}", backend.name());
+        }
     }
 
     #[test]

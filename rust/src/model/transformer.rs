@@ -80,7 +80,11 @@ impl Transformer {
     /// instance holds only per-thread scratch, so N workers cost one
     /// index, not N. Executes via RSR++ — outputs are bit-identical to
     /// [`from_weights`](Self::from_weights) with
-    /// `Backend::RsrPlusPlus`.
+    /// `Backend::RsrPlusPlus` — unless the store carries an `rsr tune`
+    /// profile ([`PlanStore::with_profile`]), in which case each layer
+    /// runs its measured `(k, backend)` winner.
+    ///
+    /// [`PlanStore::with_profile`]: crate::runtime::PlanStore::with_profile
     ///
     /// `weights` still provides everything that is not a ternary
     /// matmul: config, embeddings, norms. Each plan is validated
@@ -135,7 +139,11 @@ impl Transformer {
                 )));
             }
             // The model's own scale is authoritative at execution time.
-            Ok(BitLinear::from_shared(entry.ternary()?, scale))
+            // A store with a tuning profile hands back entries carrying
+            // their measured (k, backend) winner; from_plan_entry
+            // dispatches it (untuned entries keep the shared-RSR++
+            // path bit-for-bit).
+            BitLinear::from_plan_entry(&entry, scale)
         };
         let rope = Rope::new(cfg.head_dim(), cfg.max_seq_len, cfg.rope_theta);
         let mut blocks = Vec::with_capacity(cfg.n_layers);

@@ -305,7 +305,7 @@ fn read_ternary(r: &mut impl Read, rows: usize, cols: usize) -> Result<TernaryMa
     let nbytes = (rows * cols).div_ceil(4);
     let mut buf = vec![0u8; nbytes];
     r.read_exact(&mut buf)?;
-    Ok(TernaryMatrix::unpack2(rows, cols, &buf))
+    TernaryMatrix::unpack2(rows, cols, &buf)
 }
 
 #[cfg(test)]

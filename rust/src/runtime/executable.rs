@@ -1,0 +1,218 @@
+//! [`ExecutablePlan`] — one execution object over a store-shared plan,
+//! dispatching to whichever backend a tuning profile selected.
+//!
+//! The four plan families (RSR, RSR++ scalar/SIMD, block-parallel,
+//! batched) previously had four unrelated execute signatures; the
+//! profile-driven serve path needs them behind **one** `execute(v,
+//! out)` so a [`BitLinear`](crate::model::bitlinear::BitLinear) can run
+//! whatever `rsr tune` measured fastest without caring which family
+//! won. The heavy state — the validated flat arenas — stays behind the
+//! store's `Arc` ([`SharedTernaryPlan`]); an `ExecutablePlan` owns only
+//! its per-instance scratch (and, for the parallel variant, a handle to
+//! the process-wide worker pool), so N workers still cost one index.
+//!
+//! The tuner executes candidates through this same type, which is what
+//! makes its measurements transfer to serving.
+
+use std::sync::Arc;
+
+use super::plan_store::{PlanScratch, SharedTernaryPlan};
+use crate::error::Result;
+use crate::kernels::batched::BatchedExec;
+use crate::kernels::parallel::SharedParallelExec;
+use crate::tune::candidates::TunedBackend;
+use crate::util::threadpool::PoolHandle;
+
+/// Per-backend execution state (the plan itself lives in the shared
+/// `Arc`; this is the cheap, per-instance part).
+enum ExecState {
+    /// RSR / RSR++ (scalar or SIMD): a plain per-thread scratch.
+    Scratch(PlanScratch),
+    /// Block-parallel: per-lane scratch + the shared pool handle.
+    Parallel(SharedParallelExec),
+    /// Batched layout executed at batch 1.
+    Batched(BatchedExec),
+}
+
+/// A ready-to-run multiply over a store-shared ternary plan, executing
+/// the [`TunedBackend`] it was materialized with.
+pub struct ExecutablePlan {
+    plan: Arc<SharedTernaryPlan>,
+    backend: TunedBackend,
+    state: ExecState,
+}
+
+impl std::fmt::Debug for ExecutablePlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ExecutablePlan")
+            .field("backend", &self.backend.name())
+            .field("rows", &self.plan.rows())
+            .field("cols", &self.plan.cols())
+            .finish()
+    }
+}
+
+impl ExecutablePlan {
+    /// Materialize an executor for `backend` over a shared plan. The
+    /// parallel variant checks the **process-wide** pool out per
+    /// execute ([`PoolHandle::global`]) — building N of these spawns no
+    /// threads.
+    pub fn new(plan: Arc<SharedTernaryPlan>, backend: TunedBackend) -> Result<Self> {
+        let max_u = plan.plus_flat().max_u().max(plan.minus_flat().max_u());
+        let state = match backend {
+            TunedBackend::Rsr
+            | TunedBackend::RsrPlusPlus
+            | TunedBackend::RsrPlusPlusScalar => ExecState::Scratch(plan.scratch()),
+            TunedBackend::Parallel => ExecState::Parallel(SharedParallelExec::new(
+                PoolHandle::global(),
+                max_u,
+                plan.cols(),
+            )),
+            TunedBackend::Batched => {
+                ExecState::Batched(BatchedExec::new(plan.rows(), max_u, 1)?)
+            }
+        };
+        Ok(Self { plan, backend, state })
+    }
+
+    /// The backend this executor dispatches to.
+    pub fn backend(&self) -> TunedBackend {
+        self.backend
+    }
+
+    /// Rows of the planned matrix (input length).
+    pub fn rows(&self) -> usize {
+        self.plan.rows()
+    }
+
+    /// Columns of the planned matrix (output length).
+    pub fn cols(&self) -> usize {
+        self.plan.cols()
+    }
+
+    /// The shared plan this executor runs.
+    pub fn plan(&self) -> &Arc<SharedTernaryPlan> {
+        &self.plan
+    }
+
+    /// Shared index bytes (paid once per process, not per instance).
+    pub fn index_bytes(&self) -> usize {
+        self.plan.index_bytes()
+    }
+
+    /// `out = v · A` through the tuned backend. Same shape contract as
+    /// every plan executor: `v.len() == rows`, `out.len() == cols`.
+    pub fn execute(&mut self, v: &[f32], out: &mut [f32]) -> Result<()> {
+        match (&mut self.state, self.backend) {
+            (ExecState::Scratch(s), TunedBackend::Rsr) => {
+                self.plan.execute_rsr(s, v, out)
+            }
+            (ExecState::Scratch(s), TunedBackend::RsrPlusPlus) => {
+                self.plan.execute(s, v, out)
+            }
+            (ExecState::Scratch(s), TunedBackend::RsrPlusPlusScalar) => {
+                self.plan.execute_scalar(s, v, out)
+            }
+            (ExecState::Parallel(e), _) => {
+                e.execute_ternary(self.plan.plus_flat(), self.plan.minus_flat(), v, out)
+            }
+            (ExecState::Batched(e), _) => e.execute_ternary(
+                self.plan.plus_flat(),
+                self.plan.minus_flat(),
+                v,
+                1,
+                out,
+            ),
+            // `new` pairs state and backend; the combinations above are
+            // exhaustive for what it constructs.
+            (ExecState::Scratch(_), _) => unreachable!("scratch state with {:?}", self.backend),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::index::TernaryRsrIndex;
+    use crate::kernels::standard::standard_mul_ternary;
+    use crate::kernels::TernaryMatrix;
+    use crate::util::rng::Rng;
+
+    fn shared_plan(n: usize, m: usize, k: usize, seed: u64) -> (TernaryMatrix, Arc<SharedTernaryPlan>) {
+        let mut rng = Rng::new(seed);
+        let a = TernaryMatrix::random(n, m, 1.0 / 3.0, &mut rng);
+        let plan =
+            Arc::new(SharedTernaryPlan::new(TernaryRsrIndex::preprocess(&a, k)).unwrap());
+        (a, plan)
+    }
+
+    #[test]
+    fn every_backend_matches_the_standard_multiply() {
+        let (a, plan) = shared_plan(96, 64, 4, 901);
+        let mut rng = Rng::new(902);
+        let v = rng.f32_vec(96, -1.0, 1.0);
+        let expect = standard_mul_ternary(&v, &a);
+        for backend in TunedBackend::ALL {
+            let mut exec = ExecutablePlan::new(Arc::clone(&plan), backend).unwrap();
+            assert_eq!(exec.backend(), backend);
+            assert_eq!((exec.rows(), exec.cols()), (96, 64));
+            let mut out = vec![0.0f32; 64];
+            // Twice: scratch reuse must not change results.
+            for _ in 0..2 {
+                exec.execute(&v, &mut out).unwrap();
+                for (g, e) in out.iter().zip(expect.iter()) {
+                    assert!(
+                        (g - e).abs() < 1e-3 * (1.0 + e.abs()),
+                        "{}: {g} vs {e}",
+                        backend.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_backend_is_bit_exact_on_integer_activations() {
+        // With integer-valued f32 activations every intermediate sum is
+        // exactly representable, so all backends — whatever their
+        // accumulation order — must agree to the last bit. This is the
+        // property that makes profile-driven backend swaps safe.
+        let (a, plan) = shared_plan(80, 56, 3, 903);
+        let mut rng = Rng::new(904);
+        let v = rng.int_f32_vec(80, 3);
+        let expect = standard_mul_ternary(&v, &a);
+        for backend in TunedBackend::ALL {
+            let mut exec = ExecutablePlan::new(Arc::clone(&plan), backend).unwrap();
+            let mut out = vec![0.0f32; 56];
+            exec.execute(&v, &mut out).unwrap();
+            assert_eq!(out, expect, "{}", backend.name());
+        }
+    }
+
+    #[test]
+    fn rsrpp_backend_is_bit_identical_to_untuned_shared_execute() {
+        let (_, plan) = shared_plan(64, 40, 4, 905);
+        let mut rng = Rng::new(906);
+        let v = rng.f32_vec(64, -1.0, 1.0);
+        let mut scratch = plan.scratch();
+        let mut expect = vec![0.0f32; 40];
+        plan.execute(&mut scratch, &v, &mut expect).unwrap();
+        let mut exec =
+            ExecutablePlan::new(Arc::clone(&plan), TunedBackend::RsrPlusPlus).unwrap();
+        let mut got = vec![0.0f32; 40];
+        exec.execute(&v, &mut got).unwrap();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn shape_errors_surface_for_every_backend() {
+        let (_, plan) = shared_plan(32, 16, 3, 907);
+        for backend in TunedBackend::ALL {
+            let mut exec = ExecutablePlan::new(Arc::clone(&plan), backend).unwrap();
+            let mut out = vec![0.0f32; 16];
+            assert!(exec.execute(&[0.0; 31], &mut out).is_err(), "{}", backend.name());
+            let mut bad = vec![0.0f32; 15];
+            assert!(exec.execute(&[0.0; 32], &mut bad).is_err(), "{}", backend.name());
+        }
+    }
+}

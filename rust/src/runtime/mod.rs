@@ -10,6 +10,10 @@
 //!   artifacts on disk — and shared across every serving worker and
 //!   replica; callers hold per-thread execution scratch. This is the
 //!   crate's compile-once/serve-many backbone.
+//! * [`executable`] — the [`ExecutablePlan`]: one execution object
+//!   over a store-shared plan, dispatching to whichever backend an
+//!   `rsr tune` profile selected for that layer (RSR, RSR++
+//!   scalar/SIMD, block-parallel, batched).
 //! * [`Engine`] — the PJRT engine: loads the AOT-compiled HLO-text
 //!   artifacts produced by `python/compile/aot.py` (`make artifacts`)
 //!   and executes them on the XLA CPU client. The dense-matvec
@@ -32,8 +36,10 @@ use std::rc::Rc;
 use crate::error::{Error, Result};
 use crate::util::json::Json;
 
+pub mod executable;
 pub mod plan_store;
 
+pub use executable::ExecutablePlan;
 pub use plan_store::{PlanEntry, PlanScratch, PlanStore, SharedRsrPlan, SharedTernaryPlan};
 
 /// Whether this build can execute AOT artifacts through PJRT.

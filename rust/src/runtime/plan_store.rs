@@ -39,11 +39,15 @@ use std::sync::{Arc, Mutex};
 
 use crate::error::{Error, Result};
 use crate::kernels::artifact::{ternary_fingerprint, ArtifactPayload, PlanArtifact};
-use crate::kernels::flat::{execute_rsrpp_flat, FlatPlan, TernaryFlatPlan};
+use crate::kernels::flat::{
+    execute_rsr_flat, execute_rsrpp_flat, execute_rsrpp_flat_scalar, FlatPlan,
+    TernaryFlatPlan,
+};
 use crate::kernels::index::{RsrIndex, TernaryRsrIndex};
 use crate::kernels::optimal_k::optimal_k_rsrpp;
 use crate::kernels::rsr::check_shapes;
 use crate::model::weights::ModelWeights;
+use crate::tune::profile::{LayerChoice, TuneProfile};
 
 /// Per-thread execution scratch: the `u` segmented-sum buffer, the
 /// RSR++ fold buffer, and the ternary subtraction temporary. Cheap to
@@ -137,6 +141,37 @@ impl SharedRsrPlan {
         execute_rsrpp_flat(&self.flat, v, out, &mut scratch.u, &mut scratch.fold);
         Ok(())
     }
+
+    /// [`execute`](Self::execute) pinned to the scalar gather kernel —
+    /// the tuner's `rsr++-scalar` candidate, selected where the AVX2
+    /// gather loses.
+    pub fn execute_scalar(
+        &self,
+        scratch: &mut PlanScratch,
+        v: &[f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        check_shapes(self.flat.rows(), self.flat.cols(), v, out)?;
+        scratch.ensure_u(self.flat.max_u());
+        execute_rsrpp_flat_scalar(&self.flat, v, out, &mut scratch.u, &mut scratch.fold);
+        Ok(())
+    }
+
+    /// `out = v · B` via RSR (Algorithm 2 with the dense step-2 block
+    /// product) — bit-identical to
+    /// [`RsrPlan::execute`](crate::kernels::rsr::RsrPlan::execute) on
+    /// the same index.
+    pub fn execute_rsr(
+        &self,
+        scratch: &mut PlanScratch,
+        v: &[f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        check_shapes(self.flat.rows(), self.flat.cols(), v, out)?;
+        scratch.ensure_u(self.flat.max_u());
+        execute_rsr_flat(&self.flat, v, out, &mut scratch.u);
+        Ok(())
+    }
 }
 
 /// An immutable, `Arc`-shareable ternary RSR++ plan (both Prop 2.1
@@ -197,16 +232,23 @@ impl SharedTernaryPlan {
         )
     }
 
-    /// `out = v · A = v·B⁽¹⁾ − v·B⁽²⁾`, identical operation order to
-    /// `TernaryRsrPlusPlusPlan::execute` — bit-identical results.
-    pub fn execute(&self, scratch: &mut PlanScratch, v: &[f32], out: &mut [f32]) -> Result<()> {
+    /// `out = v · A = v·B⁽¹⁾ − v·B⁽²⁾` with `half` executing each
+    /// Prop 2.1 half — the one subtraction structure every per-half
+    /// variant shares.
+    fn execute_with(
+        &self,
+        scratch: &mut PlanScratch,
+        v: &[f32],
+        out: &mut [f32],
+        half: impl Fn(&SharedRsrPlan, &mut PlanScratch, &[f32], &mut [f32]) -> Result<()>,
+    ) -> Result<()> {
         let mut tmp = std::mem::take(&mut scratch.tmp);
         if tmp.len() != self.cols() {
             tmp.resize(self.cols(), 0.0);
         }
         let result = (|| -> Result<()> {
-            self.plus.execute(scratch, v, out)?;
-            self.minus.execute(scratch, v, &mut tmp)?;
+            half(&self.plus, scratch, v, out)?;
+            half(&self.minus, scratch, v, &mut tmp)?;
             for (o, t) in out.iter_mut().zip(tmp.iter()) {
                 *o -= t;
             }
@@ -214,6 +256,32 @@ impl SharedTernaryPlan {
         })();
         scratch.tmp = tmp;
         result
+    }
+
+    /// `out = v · A = v·B⁽¹⁾ − v·B⁽²⁾`, identical operation order to
+    /// `TernaryRsrPlusPlusPlan::execute` — bit-identical results.
+    pub fn execute(&self, scratch: &mut PlanScratch, v: &[f32], out: &mut [f32]) -> Result<()> {
+        self.execute_with(scratch, v, out, SharedRsrPlan::execute)
+    }
+
+    /// [`execute`](Self::execute) pinned to the scalar gather kernel.
+    pub fn execute_scalar(
+        &self,
+        scratch: &mut PlanScratch,
+        v: &[f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        self.execute_with(scratch, v, out, SharedRsrPlan::execute_scalar)
+    }
+
+    /// `out = v · A` via RSR (dense step-2 block product per half).
+    pub fn execute_rsr(
+        &self,
+        scratch: &mut PlanScratch,
+        v: &[f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        self.execute_with(scratch, v, out, SharedRsrPlan::execute_rsr)
     }
 }
 
@@ -231,6 +299,14 @@ pub struct PlanEntry {
     /// builders compare it against their weights so stale artifact
     /// directories fail loudly instead of serving wrong logits.
     pub weights_fp: u64,
+    /// The tuned execution choice for this layer, when the store was
+    /// built [`with_profile`](PlanStore::with_profile); `None` executes
+    /// the untuned default (shared RSR++). Consumers
+    /// ([`BitLinear::from_plan_entry`]) materialize an
+    /// [`ExecutablePlan`](crate::runtime::ExecutablePlan) from it.
+    ///
+    /// [`BitLinear::from_plan_entry`]: crate::model::bitlinear::BitLinear::from_plan_entry
+    pub tuned: Option<LayerChoice>,
     /// The plan itself.
     pub plan: PlanKind,
 }
@@ -314,6 +390,10 @@ enum Source {
 pub struct PlanStore {
     source: Source,
     entries: Mutex<HashMap<String, Arc<PlanEntry>>>,
+    /// Tuned `(k, backend)` choices per layer
+    /// ([`with_profile`](Self::with_profile)); `None` = untuned
+    /// defaults.
+    profile: Option<Arc<TuneProfile>>,
     /// Set once [`verify_fingerprints`](Self::verify_fingerprints) has
     /// succeeded, letting per-worker model builds skip the per-layer
     /// weight hashing.
@@ -326,6 +406,7 @@ impl PlanStore {
         Self {
             source: Source::None,
             entries: Mutex::new(HashMap::new()),
+            profile: None,
             fingerprints_verified: AtomicBool::new(false),
         }
     }
@@ -343,6 +424,7 @@ impl PlanStore {
         Ok(Self {
             source: Source::Dir(dir),
             entries: Mutex::new(HashMap::new()),
+            profile: None,
             fingerprints_verified: AtomicBool::new(false),
         })
     }
@@ -355,8 +437,40 @@ impl PlanStore {
         Self {
             source: Source::Model { weights, k },
             entries: Mutex::new(HashMap::new()),
+            profile: None,
             fingerprints_verified: AtomicBool::new(false),
         }
+    }
+
+    /// Attach an `rsr tune` profile: every layer the profile names is
+    /// materialized with its tuned `(k, backend)` instead of the global
+    /// defaults, and the resulting entries carry the choice for
+    /// executors to dispatch on. Strictly additive — layers absent from
+    /// the profile (and stores never given one) behave exactly as
+    /// before.
+    ///
+    /// Fails if the profile was measured on a different machine
+    /// ([`TuneProfile::verify_host`]) — tuned rankings do not transfer —
+    /// or if entries were already materialized (the choice must govern
+    /// the build, not race it).
+    ///
+    /// On an artifact-backed store the profile can only *select*, not
+    /// re-preprocess: a layer whose artifact was packed at a different
+    /// `k` than the profile's winner fails at load with instructions to
+    /// re-pack.
+    pub fn with_profile(self, profile: TuneProfile) -> Result<Self> {
+        profile.verify_host()?;
+        if self.loaded_len() > 0 {
+            return Err(Error::Config(
+                "with_profile must be applied before any plan is materialized".into(),
+            ));
+        }
+        Ok(Self { profile: Some(Arc::new(profile)), ..self })
+    }
+
+    /// The attached tuning profile, if any.
+    pub fn profile(&self) -> Option<&TuneProfile> {
+        self.profile.as_deref()
     }
 
     /// Get (building/loading on first use) the plan for `name`.
@@ -376,6 +490,25 @@ impl PlanStore {
     }
 
     fn build(&self, name: &str) -> Result<PlanEntry> {
+        // The tuned choice governs this build: the blocking parameter
+        // `k` the index must carry, and the backend the entry records.
+        let layer_profile = self.profile.as_ref().and_then(|p| p.get(name));
+        let tuned = layer_profile.map(|l| *l.winner());
+        // A profile's measurements only apply to the matrix shape they
+        // were taken on; a name collision across different checkpoints
+        // must not silently apply a foreign (k, backend).
+        let check_profile_shape = |rows: usize, cols: usize| -> Result<()> {
+            if let Some(lp) = layer_profile {
+                if (lp.rows, lp.cols) != (rows, cols) {
+                    return Err(Error::InvalidModel(format!(
+                        "tuning profile measured {name} as {}x{}, but the served \
+                         matrix is {rows}x{cols} — re-run `rsr tune` on these weights",
+                        lp.rows, lp.cols
+                    )));
+                }
+            }
+            Ok(())
+        };
         match &self.source {
             Source::None => Err(Error::Config(format!(
                 "plan {name} not found in store (no backing source)"
@@ -385,6 +518,21 @@ impl PlanStore {
                 let art = PlanArtifact::load(&path).map_err(|e| {
                     Error::Artifact(format!("loading {}: {e}", path.display()))
                 })?;
+                check_profile_shape(art.meta.rows, art.meta.cols)?;
+                // A packed artifact is preprocessed at a fixed k; the
+                // profile can select its backend but cannot re-block
+                // the index.
+                if let Some(choice) = &tuned {
+                    if choice.k != art.meta.k {
+                        return Err(Error::Config(format!(
+                            "plan {name} was packed with k={} but the tuning profile \
+                             selected k={} — re-pack at the tuned blocking \
+                             (`rsr pack --model … --profile …`), or serve without \
+                             --plans to preprocess at the tuned k",
+                            art.meta.k, choice.k
+                        )));
+                    }
+                }
                 // The decoded payload is already the flat execution
                 // form — wrap it without copying or revalidating.
                 let plan = match art.payload {
@@ -400,6 +548,7 @@ impl PlanStore {
                     k: art.meta.k,
                     scale: art.meta.scale,
                     weights_fp: art.meta.weights_fp,
+                    tuned,
                     plan,
                 })
             }
@@ -407,13 +556,19 @@ impl PlanStore {
                 let (m, scale) = weights.matrix(name).ok_or_else(|| {
                     Error::Config(format!("model has no matrix named {name}"))
                 })?;
-                let k_eff = if *k == 0 { optimal_k_rsrpp(m.rows()) } else { *k };
+                check_profile_shape(m.rows(), m.cols())?;
+                let k_eff = match &tuned {
+                    Some(choice) => choice.k,
+                    None if *k == 0 => optimal_k_rsrpp(m.rows()),
+                    None => *k,
+                };
                 let idx = TernaryRsrIndex::preprocess(m, k_eff);
                 Ok(PlanEntry {
                     name: name.to_string(),
                     k: k_eff,
                     scale,
                     weights_fp: ternary_fingerprint(m),
+                    tuned,
                     plan: PlanKind::Ternary(Arc::new(SharedTernaryPlan::new(idx)?)),
                 })
             }
@@ -435,6 +590,7 @@ impl PlanStore {
             k,
             scale,
             weights_fp: 0,
+            tuned: None,
             plan: PlanKind::Ternary(Arc::new(SharedTernaryPlan::new(index)?)),
         });
         self.entries.lock().unwrap().insert(name, Arc::clone(&entry));
@@ -613,6 +769,53 @@ mod tests {
         assert_eq!(e.shape(), (32, 16));
         assert_eq!(e.ternary().unwrap().cols(), 16);
         assert!(e.binary().is_err());
+    }
+
+    #[test]
+    fn with_profile_governs_k_and_marks_entries() {
+        use crate::tune::candidates::TunedBackend;
+        use crate::tune::profile::{
+            LayerChoice, LayerProfile, MachineFingerprint, TuneProfile,
+        };
+        let weights =
+            Arc::new(crate::model::weights::ModelWeights::generate(ModelConfig::tiny(), 9).unwrap());
+        // Analytic k for d=64 rows differs from the forced k below.
+        let forced_k = 3;
+        assert_ne!(crate::kernels::optimal_k::optimal_k_rsrpp(64), forced_k);
+        let profile = TuneProfile::new(
+            MachineFingerprint::current(),
+            vec![LayerProfile {
+                name: "layer0.wq".into(),
+                rows: 64,
+                cols: 64,
+                chain: vec![LayerChoice {
+                    backend: TunedBackend::Rsr,
+                    k: forced_k,
+                    ns: 1.0,
+                }],
+            }],
+        )
+        .unwrap();
+        let store = PlanStore::for_model(Arc::clone(&weights), 0)
+            .with_profile(profile)
+            .unwrap();
+        let tuned = store.get("layer0.wq").unwrap();
+        assert_eq!(tuned.k, forced_k, "profile k must govern the build");
+        assert_eq!(tuned.tuned.unwrap().backend, TunedBackend::Rsr);
+        // Layers absent from the profile keep the untuned defaults.
+        let untouched = store.get("layer0.wk").unwrap();
+        assert_eq!(untouched.k, crate::kernels::optimal_k::optimal_k_rsrpp(64));
+        assert!(untouched.tuned.is_none());
+    }
+
+    #[test]
+    fn foreign_profile_is_rejected_at_attach() {
+        use crate::tune::profile::{MachineFingerprint, TuneProfile};
+        let mut fp = MachineFingerprint::current();
+        fp.threads += 1;
+        let profile = TuneProfile::new(fp, vec![]).unwrap();
+        let err = PlanStore::new().with_profile(profile).unwrap_err();
+        assert!(err.to_string().contains("different machine"), "{err}");
     }
 
     #[test]

@@ -18,6 +18,8 @@ use crate::model::sampler::Sampler;
 use crate::model::transformer::Transformer;
 use crate::model::weights::ModelWeights;
 use crate::runtime::plan_store::PlanStore;
+use crate::tune::candidates::TunedBackend;
+use crate::tune::profile::TuneProfile;
 use crate::util::rng::Rng;
 
 /// Engine configuration.
@@ -41,6 +43,12 @@ pub struct EngineConfig {
     /// startup. When `None`, plans are still built only once per
     /// process and shared across workers via the [`PlanStore`].
     pub plan_dir: Option<PathBuf>,
+    /// `.rsrt` tuning profile (the `rsr tune` output). When set — RSR++
+    /// backend only, like `plan_dir` — every layer materializes with
+    /// its measured `(k, backend)` winner instead of the analytic
+    /// defaults. The profile must have been tuned on this machine
+    /// (fingerprint-checked at startup).
+    pub tune_profile: Option<PathBuf>,
 }
 
 impl Default for EngineConfig {
@@ -53,6 +61,7 @@ impl Default for EngineConfig {
             backend: Backend::RsrPlusPlus,
             k: 0,
             plan_dir: None,
+            tune_profile: None,
         }
     }
 }
@@ -95,9 +104,61 @@ impl InferenceEngine {
         weights: &Arc<ModelWeights>,
         cfg: &EngineConfig,
     ) -> Result<Option<Arc<PlanStore>>> {
+        // Load + host-verify the tuning profile first: a foreign or
+        // corrupt .rsrt must fail startup before any preprocessing is
+        // paid for.
+        let profile = match &cfg.tune_profile {
+            None => None,
+            Some(path) => {
+                if cfg.backend != Backend::RsrPlusPlus {
+                    return Err(Error::Config(format!(
+                        "tuning profiles drive the rsr++ plan path; backend {} \
+                         cannot use --profile",
+                        cfg.backend.name()
+                    )));
+                }
+                let p = TuneProfile::load(path).map_err(|e| {
+                    Error::Artifact(format!("loading {}: {e}", path.display()))
+                })?;
+                p.verify_host()?;
+                println!(
+                    "loaded tuning profile {} ({} layers, machine {})",
+                    path.display(),
+                    p.len(),
+                    p.fingerprint.describe()
+                );
+                // The tuner measures the parallel backend on an
+                // uncontended pool; many engine workers contend the
+                // checkout (losers fall back to serial), so the tuned
+                // ranking may not hold — say so rather than silently
+                // serving a loser.
+                let parallel_layers = p
+                    .layers
+                    .iter()
+                    .filter(|l| l.winner().backend == TunedBackend::Parallel)
+                    .count();
+                if parallel_layers > 0 && cfg.workers > 1 {
+                    eprintln!(
+                        "warning: profile selects the parallel backend for \
+                         {parallel_layers} layer(s), but it was measured without \
+                         pool contention; with {} workers the shared pool will \
+                         contend and rsr++ may serve faster — consider --workers 1 \
+                         or re-tuning under load",
+                        cfg.workers
+                    );
+                }
+                Some(p)
+            }
+        };
+        let with_profile = |store: PlanStore| -> Result<PlanStore> {
+            match profile {
+                Some(p) => store.with_profile(p),
+                None => Ok(store),
+            }
+        };
         match (&cfg.plan_dir, cfg.backend) {
             (Some(dir), Backend::RsrPlusPlus) => {
-                let store = PlanStore::open(dir)?;
+                let store = with_profile(PlanStore::open(dir)?)?;
                 // Resolve every layer now: a missing or corrupt
                 // artifact fails engine startup, not the first request.
                 store.preload(&weights.matrix_names())?;
@@ -111,7 +172,8 @@ impl InferenceEngine {
                 other.name()
             ))),
             (None, Backend::RsrPlusPlus) => {
-                let store = PlanStore::for_model(Arc::clone(weights), cfg.k);
+                let store =
+                    with_profile(PlanStore::for_model(Arc::clone(weights), cfg.k))?;
                 // Preprocess every layer HERE, before workers spawn:
                 // lazily-racing worker threads would otherwise all miss
                 // the cold cache together and run Algorithm 1 in

@@ -1,0 +1,167 @@
+//! The tuner's search space: which `(k, backend)` configurations are
+//! worth timing for one layer matrix.
+//!
+//! The analytic `k` optimum (paper §4.2.2, [`crate::kernels::optimal_k`])
+//! minimizes an abstract operation count; on real hardware the winner
+//! shifts with cache sizes, AVX2 gather throughput, thread count and
+//! the layer's n×m shape (paper Fig 9 shows the measured curve moving
+//! against the model's). So the tuner measures a **window** of `k`
+//! values around the analytic optimum, crossed with every execution
+//! backend the serve path can dispatch to — including the
+//! scalar-pinned gather variant, which on gather-weak cores beats the
+//! AVX2 path the runtime dispatch would otherwise pick.
+
+use crate::error::{Error, Result};
+use crate::kernels::flat::simd_gather_available;
+use crate::kernels::optimal_k::k_candidates;
+use crate::util::threadpool::PoolHandle;
+
+/// An execution backend the tuner can select for a layer. This is the
+/// *serve-time dispatch* space of
+/// [`crate::runtime::ExecutablePlan`] — narrower than
+/// [`crate::kernels::Backend`] (no dense baselines: they are what RSR
+/// replaces, not a deployment option) but finer where it matters (the
+/// scalar/SIMD gather split is invisible to `Backend`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TunedBackend {
+    /// Algorithm 2 with the dense step-2 block product (`O(k·2^k)`).
+    Rsr,
+    /// Algorithm 2 + 3 with runtime-dispatched (SIMD where available)
+    /// segmented-sum gathers — the untuned default.
+    RsrPlusPlus,
+    /// Algorithm 2 + 3 pinned to the 4-accumulator scalar gather.
+    RsrPlusPlusScalar,
+    /// RSR++ with blocks fanned across the shared worker pool
+    /// (Appendix C.1.I).
+    Parallel,
+    /// RSR++ in the segment-major interleaved batched layout, executed
+    /// at batch 1 — a serial single-accumulator kernel shape.
+    Batched,
+}
+
+impl TunedBackend {
+    /// Every backend, in stable `.rsrt` code order.
+    pub const ALL: [TunedBackend; 5] = [
+        TunedBackend::Rsr,
+        TunedBackend::RsrPlusPlus,
+        TunedBackend::RsrPlusPlusScalar,
+        TunedBackend::Parallel,
+        TunedBackend::Batched,
+    ];
+
+    /// Short stable name (CLI / `rsr inspect` / tune reports).
+    pub fn name(self) -> &'static str {
+        match self {
+            TunedBackend::Rsr => "rsr",
+            TunedBackend::RsrPlusPlus => "rsr++",
+            TunedBackend::RsrPlusPlusScalar => "rsr++-scalar",
+            TunedBackend::Parallel => "parallel",
+            TunedBackend::Batched => "batched",
+        }
+    }
+
+    /// Parse a [`name`](Self::name).
+    pub fn from_name(s: &str) -> Option<TunedBackend> {
+        TunedBackend::ALL.iter().copied().find(|b| b.name() == s)
+    }
+
+    /// Stable on-disk code (`.rsrt` payload).
+    pub(crate) fn code(self) -> u32 {
+        match self {
+            TunedBackend::Rsr => 1,
+            TunedBackend::RsrPlusPlus => 2,
+            TunedBackend::RsrPlusPlusScalar => 3,
+            TunedBackend::Parallel => 4,
+            TunedBackend::Batched => 5,
+        }
+    }
+
+    /// Decode an on-disk code.
+    pub(crate) fn from_code(c: u32) -> Result<TunedBackend> {
+        TunedBackend::ALL
+            .iter()
+            .copied()
+            .find(|b| b.code() == c)
+            .ok_or_else(|| Error::Artifact(format!("unknown tuned backend code {c}")))
+    }
+}
+
+/// One configuration to measure: a blocking parameter and a backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Candidate {
+    /// Blocking parameter.
+    pub k: usize,
+    /// Execution backend.
+    pub backend: TunedBackend,
+}
+
+/// The candidate grid for a matrix with `rows` input length: the
+/// `k`-window of [`k_candidates`] × every [`TunedBackend`] that can
+/// pay off on this host. Pruned, not padded:
+///
+/// * `rsr++-scalar` is dropped when the dispatched path cannot take a
+///   SIMD route anyway (the two candidates would be byte-for-byte the
+///   same code);
+/// * `parallel` is dropped when the shared pool has a single lane.
+///
+/// Grouped by `k` (all backends of one `k` adjacent) so the tuner
+/// preprocesses each index once and times every backend on it.
+pub fn candidate_space(rows: usize, radius: usize) -> Vec<Candidate> {
+    let simd = simd_gather_available();
+    let lanes = PoolHandle::global().threads();
+    let mut out = Vec::new();
+    for k in k_candidates(rows, radius) {
+        for backend in TunedBackend::ALL {
+            match backend {
+                TunedBackend::RsrPlusPlusScalar if !simd => continue,
+                TunedBackend::Parallel if lanes < 2 => continue,
+                _ => out.push(Candidate { k, backend }),
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_names_and_codes_round_trip() {
+        for b in TunedBackend::ALL {
+            assert_eq!(TunedBackend::from_name(b.name()), Some(b));
+            assert_eq!(TunedBackend::from_code(b.code()).unwrap(), b);
+        }
+        assert_eq!(TunedBackend::from_name("dense"), None);
+        assert!(TunedBackend::from_code(99).is_err());
+    }
+
+    #[test]
+    fn space_covers_every_k_with_the_default_backend() {
+        let space = candidate_space(1024, 2);
+        assert!(!space.is_empty());
+        for k in k_candidates(1024, 2) {
+            assert!(space
+                .iter()
+                .any(|c| c.k == k && c.backend == TunedBackend::RsrPlusPlus));
+            // RSR rides along at every k too.
+            assert!(space.iter().any(|c| c.k == k && c.backend == TunedBackend::Rsr));
+        }
+        // Grouped by k: once a new k starts, the previous never recurs.
+        let ks: Vec<usize> = space.iter().map(|c| c.k).collect();
+        let mut seen_end = std::collections::HashSet::new();
+        for w in ks.windows(2) {
+            if w[0] != w[1] {
+                assert!(seen_end.insert(w[0]), "k {} re-opened", w[0]);
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_candidate_only_where_simd_dispatch_exists() {
+        let has_scalar = candidate_space(512, 1)
+            .iter()
+            .any(|c| c.backend == TunedBackend::RsrPlusPlusScalar);
+        assert_eq!(has_scalar, simd_gather_available());
+    }
+}

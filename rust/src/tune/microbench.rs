@@ -1,0 +1,152 @@
+//! The tuner's measurement harness: calibrated inner-repeat,
+//! median-of-trials timing.
+//!
+//! Sub-microsecond multiplies (a tiny layer at favorable `k`) cannot be
+//! timed one call at a time — clock granularity and `Instant` overhead
+//! swamp the signal. So each *trial* runs the operation `inner` times
+//! back-to-back, where `inner` is **calibrated** from a first timed
+//! call so one trial lands near a fixed duration; the reported figure
+//! is the **median** of the per-trial per-op times (robust against the
+//! scheduler preempting a trial, where a mean would smear the outlier
+//! in). Built on [`crate::util::timer`] and
+//! [`crate::util::stats::Summary`]; this is also the measurement path
+//! `rsr bench-kernels` reports, so tuning decisions and the recorded
+//! perf trajectory never disagree about methodology.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+use crate::util::timer::time;
+
+/// Target wall time for one calibrated trial. Long enough that clock
+/// granularity is noise, short enough that a default budget buys
+/// several trials even for large layers.
+const TRIAL_TARGET: Duration = Duration::from_micros(200);
+
+/// Ceiling on calibrated inner repeats (nanosecond-scale ops would
+/// otherwise calibrate into the millions and blow the budget on one
+/// trial).
+const MAX_INNER: usize = 1 << 20;
+
+/// How one configuration was measured.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Median per-op time in nanoseconds — the number the tuner ranks.
+    pub median_ns: f64,
+    /// Mean per-op time in nanoseconds (reported alongside; not ranked).
+    pub mean_ns: f64,
+    /// Calibrated ops per trial.
+    pub inner: usize,
+    /// Trials actually run (budget may stop the loop early).
+    pub trials: usize,
+}
+
+/// Options for one measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchOpts {
+    /// Trials to attempt (median is taken across these).
+    pub trials: usize,
+    /// Soft wall-time budget for this measurement, calibration
+    /// included. At least one trial always runs, so a tiny budget
+    /// degrades to fewer/shorter trials, never to no data.
+    pub budget: Duration,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self { trials: 5, budget: Duration::from_millis(50) }
+    }
+}
+
+/// Human-readable nanoseconds (`1.23ms` / `4.5µs` / `678ns`) — the one
+/// formatter every surface that prints microbench numbers shares
+/// (`rsr tune`, `rsr inspect`, `rsr bench-kernels`).
+pub fn human_ns(ns: f64) -> String {
+    if ns >= 1e6 {
+        format!("{:.2}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.1}µs", ns / 1e3)
+    } else {
+        format!("{ns:.0}ns")
+    }
+}
+
+/// Measure `f` under `opts`: calibrate inner repeats from one timed
+/// warmup call, then run up to `opts.trials` trials of `inner`
+/// back-to-back calls and report the median per-op nanoseconds.
+pub fn bench(opts: BenchOpts, mut f: impl FnMut()) -> BenchResult {
+    let started = Instant::now();
+    let trials = opts.trials.max(1);
+    // Calibration doubles as warmup (first-touch faults, branch
+    // predictors, the pool's first generation).
+    let (_, first) = time(&mut f);
+    let per_trial = (opts.budget / (trials as u32 + 1)).max(TRIAL_TARGET);
+    let inner = if first.is_zero() {
+        MAX_INNER
+    } else {
+        ((per_trial.as_secs_f64() / first.as_secs_f64()) as usize).clamp(1, MAX_INNER)
+    };
+
+    let mut per_op_ns = Summary::new();
+    for _ in 0..trials {
+        let t0 = Instant::now();
+        for _ in 0..inner {
+            f();
+        }
+        let dt = t0.elapsed();
+        per_op_ns.push(dt.as_secs_f64() * 1e9 / inner as f64);
+        // Soft budget: never stop before the first trial lands.
+        if started.elapsed() >= opts.budget {
+            break;
+        }
+    }
+    BenchResult {
+        median_ns: per_op_ns.median(),
+        mean_ns: per_op_ns.mean(),
+        inner,
+        trials: per_op_ns.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reports_a_positive_median_and_runs_at_least_once() {
+        let mut hits = 0usize;
+        let r = bench(
+            BenchOpts { trials: 3, budget: Duration::from_millis(5) },
+            || {
+                hits += 1;
+                std::hint::black_box((0..64).sum::<u64>());
+            },
+        );
+        assert!(hits >= 1);
+        assert!(r.trials >= 1);
+        assert!(r.inner >= 1);
+        assert!(r.median_ns > 0.0, "median {}", r.median_ns);
+        assert!(r.mean_ns > 0.0);
+    }
+
+    #[test]
+    fn slow_ops_get_few_inner_reps() {
+        let r = bench(
+            BenchOpts { trials: 2, budget: Duration::from_millis(4) },
+            || std::thread::sleep(Duration::from_millis(2)),
+        );
+        assert_eq!(r.inner, 1, "a 2ms op must not be repeated inside a trial");
+        // 2ms per op ≈ 2e6 ns, with generous slack for CI jitter.
+        assert!(r.median_ns > 1e6);
+    }
+
+    #[test]
+    fn budget_bounds_the_trial_count() {
+        let r = bench(
+            BenchOpts { trials: 100, budget: Duration::from_millis(3) },
+            || std::thread::sleep(Duration::from_millis(1)),
+        );
+        assert!(r.trials < 100, "3ms budget cannot afford 100 x 1ms trials");
+        assert!(r.trials >= 1);
+    }
+}

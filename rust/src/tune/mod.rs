@@ -1,0 +1,47 @@
+//! `tune` — the empirical autotuner: compile per-layer `(k, backend)`
+//! execution profiles, once, offline.
+//!
+//! The paper's §4/Fig 9 shows RSR/RSR++ speedups hinging on the
+//! blocking parameter `k`, and its own measurements show the *measured*
+//! optimum drifting from the analytic one — the cost models count
+//! operations, while the winner on real hardware is decided by cache
+//! sizes, AVX2 gather throughput, thread count and each layer's n×m
+//! shape. The weights are fixed, so this decision — like preprocessing
+//! itself — is a compile-once/serve-many artifact:
+//!
+//! ```text
+//!   offline:  rsr tune --weights m.rtw --out m.rsrt     (measure, once)
+//!   serve:    rsr serve --model m.rtw --profile m.rsrt  (dispatch per layer)
+//! ```
+//!
+//! Pipeline:
+//!
+//! * [`candidates`] — the search space: a `k` window around the
+//!   analytic optimum ([`crate::kernels::optimal_k::k_candidates`])
+//!   × every serve-time backend ([`TunedBackend`]), pruned to what can
+//!   pay off on this host;
+//! * [`microbench`] — calibrated inner-repeat / median-of-trials
+//!   timing, the one measurement path shared with `rsr bench-kernels`;
+//! * [`tuner`] — the driver: one Algorithm-1 run per `(layer, k)`,
+//!   every backend timed through the same
+//!   [`ExecutablePlan`](crate::runtime::ExecutablePlan) serving uses;
+//! * [`profile`] — the versioned, checksummed `.rsrt` format with a
+//!   machine fingerprint, rejected on foreign hosts the way `.rsrz`
+//!   artifacts are rejected on foreign weights.
+//!
+//! A [`PlanStore`](crate::runtime::PlanStore) given a profile
+//! ([`PlanStore::with_profile`](crate::runtime::PlanStore::with_profile))
+//! materializes every layer at its tuned `(k, backend)`; without one,
+//! nothing changes — the profile is strictly additive.
+
+pub mod candidates;
+pub mod microbench;
+pub mod profile;
+pub mod tuner;
+
+pub use candidates::{candidate_space, Candidate, TunedBackend};
+pub use microbench::{bench, human_ns, BenchOpts, BenchResult};
+pub use profile::{
+    LayerChoice, LayerProfile, MachineFingerprint, TuneProfile, RSRT_MAGIC, RSRT_VERSION,
+};
+pub use tuner::{tune_matrix, tune_model, CandidateTiming, LayerReport, TuneOpts};

@@ -1,0 +1,547 @@
+//! The **`.rsrt` tuning profile** — the durable output of `rsr tune`.
+//!
+//! Tuning, like preprocessing, is a compile-once/serve-many artifact:
+//! the weights never change, and for one machine the measured winner
+//! per layer does not either. A `.rsrt` file records, per named layer,
+//! the measured preference chain of `(backend, k)` configurations —
+//! `chain[0]` is the winner a profile-driven
+//! [`PlanStore`](crate::runtime::PlanStore) materializes, the rest is
+//! the fallback order `rsr inspect` shows and future policy can demote
+//! to.
+//!
+//! Measured numbers are only meaningful on the machine that produced
+//! them, so the header carries a **machine fingerprint** (CPU feature
+//! flags + thread count) and loading a profile on a host whose
+//! fingerprint differs is an error, mirroring how `.rsrz` artifacts
+//! bind to the exact weights they were compiled from.
+//!
+//! ## On-disk layout (version 1, all integers little-endian)
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  "RSRT"
+//! 4       4     format version (u32) — currently 1
+//! 8       4     machine feature flags (u32; bit 0 x86-64, bit 1
+//!               aarch64, bit 2 AVX2-gather)
+//! 12      4     machine thread count (u32)
+//! 16      4     layer count (u32)
+//! 20      8     body length (u64)
+//! 28      8     FNV-1a 64 checksum (u64) over the body bytes followed
+//!               by every other header field — a flipped bit in the
+//!               thread count is as fatal as one in a measured time
+//! 36      …     body: per layer —
+//!                 name length (u32), UTF-8 name,
+//!                 rows (u32), cols (u32),
+//!                 chain length (u32), then per chain entry:
+//!                   backend code (u32), k (u32), median ns (f64 bits)
+//! ```
+//!
+//! Decoding re-validates everything after the checksum passes: name and
+//! chain caps, `k` range, backend codes, finite non-negative times —
+//! the same trust-on-load discipline as
+//! [`crate::kernels::artifact`].
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use super::candidates::TunedBackend;
+use crate::error::{Error, Result};
+use crate::kernels::artifact::{fnv1a64, fnv1a64_continue, read_arr, read_u32};
+use crate::kernels::flat::simd_gather_available;
+use crate::util::threadpool::default_threads;
+
+/// The `.rsrt` magic bytes.
+pub const RSRT_MAGIC: &[u8; 4] = b"RSRT";
+
+/// The format version this build reads and writes.
+pub const RSRT_VERSION: u32 = 1;
+
+/// Caps mirroring the `.rsrz` reader: bound what a corrupt header can
+/// ask the allocator for.
+const MAX_LAYERS: usize = 1 << 20;
+const MAX_NAME: usize = 4096;
+const MAX_CHAIN: usize = 256;
+const MAX_BODY: usize = 1 << 28;
+const MAX_DIM: usize = 1 << 20;
+
+/// Machine feature bits stored in the fingerprint.
+const FEAT_X86_64: u32 = 1 << 0;
+const FEAT_AARCH64: u32 = 1 << 1;
+const FEAT_AVX2_GATHER: u32 = 1 << 2;
+
+/// What `rsr tune` measured *on*: the CPU features that change which
+/// kernels exist (the AVX2 gather path) plus the thread count that
+/// changes what `parallel` is worth. Two hosts with equal fingerprints
+/// agree on the candidate space and roughly on its ranking; anything
+/// else must re-tune.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MachineFingerprint {
+    /// Feature bit set (see the `FEAT_*` constants).
+    pub features: u32,
+    /// Lanes of parallelism available ([`default_threads`]).
+    pub threads: u32,
+}
+
+impl MachineFingerprint {
+    /// Fingerprint of the current host.
+    pub fn current() -> Self {
+        let mut features = 0u32;
+        if cfg!(target_arch = "x86_64") {
+            features |= FEAT_X86_64;
+        }
+        if cfg!(target_arch = "aarch64") {
+            features |= FEAT_AARCH64;
+        }
+        if simd_gather_available() {
+            features |= FEAT_AVX2_GATHER;
+        }
+        Self { features, threads: default_threads() as u32 }
+    }
+
+    /// Human-readable form, e.g. `x86_64+avx2/8t`.
+    pub fn describe(&self) -> String {
+        let mut parts = Vec::new();
+        if self.features & FEAT_X86_64 != 0 {
+            parts.push("x86_64");
+        }
+        if self.features & FEAT_AARCH64 != 0 {
+            parts.push("aarch64");
+        }
+        if self.features & FEAT_AVX2_GATHER != 0 {
+            parts.push("avx2");
+        }
+        if parts.is_empty() {
+            parts.push("generic");
+        }
+        format!("{}/{}t", parts.join("+"), self.threads)
+    }
+}
+
+/// One measured configuration in a layer's preference chain.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerChoice {
+    /// Execution backend.
+    pub backend: TunedBackend,
+    /// Blocking parameter the index must be built with.
+    pub k: usize,
+    /// Measured median nanoseconds per multiply.
+    pub ns: f64,
+}
+
+/// The tuning result for one named layer matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerProfile {
+    /// Layer name (the [`PlanStore`](crate::runtime::PlanStore) key,
+    /// e.g. `layer0.wq`).
+    pub name: String,
+    /// Rows of the tuned matrix (input length) — sanity-checked against
+    /// the served model.
+    pub rows: usize,
+    /// Columns (output length).
+    pub cols: usize,
+    /// Measured configurations, fastest first; never empty.
+    pub chain: Vec<LayerChoice>,
+}
+
+impl LayerProfile {
+    /// The winning configuration (`chain[0]`).
+    pub fn winner(&self) -> &LayerChoice {
+        &self.chain[0]
+    }
+}
+
+/// A full tuning profile: the machine it was measured on plus one
+/// [`LayerProfile`] per tuned layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuneProfile {
+    /// The measuring host.
+    pub fingerprint: MachineFingerprint,
+    /// Per-layer results, in tuning order.
+    pub layers: Vec<LayerProfile>,
+}
+
+impl TuneProfile {
+    /// Assemble a profile. Every layer must carry a non-empty chain and
+    /// in-range geometry (the same invariants loading enforces).
+    pub fn new(
+        fingerprint: MachineFingerprint,
+        layers: Vec<LayerProfile>,
+    ) -> Result<Self> {
+        let p = Self { fingerprint, layers };
+        p.validate()?;
+        Ok(p)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.layers.len() > MAX_LAYERS {
+            return Err(Error::Artifact(format!(
+                "tuning profile has {} layers (cap {MAX_LAYERS})",
+                self.layers.len()
+            )));
+        }
+        for l in &self.layers {
+            if l.name.is_empty() || l.name.len() > MAX_NAME {
+                return Err(Error::Artifact(format!(
+                    "tuning profile layer name length {} out of range",
+                    l.name.len()
+                )));
+            }
+            if l.rows == 0 || l.cols == 0 || l.rows > MAX_DIM || l.cols > MAX_DIM {
+                return Err(Error::Artifact(format!(
+                    "layer {}: implausible dimensions {}x{}",
+                    l.name, l.rows, l.cols
+                )));
+            }
+            if l.chain.is_empty() || l.chain.len() > MAX_CHAIN {
+                return Err(Error::Artifact(format!(
+                    "layer {}: chain length {} out of range 1..={MAX_CHAIN}",
+                    l.name,
+                    l.chain.len()
+                )));
+            }
+            for c in &l.chain {
+                if c.k == 0 || c.k > 16 {
+                    return Err(Error::Artifact(format!(
+                        "layer {}: blocking parameter k={} out of range",
+                        l.name, c.k
+                    )));
+                }
+                if !c.ns.is_finite() || c.ns < 0.0 {
+                    return Err(Error::Artifact(format!(
+                        "layer {}: measured time {} is not a finite non-negative ns",
+                        l.name, c.ns
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of tuned layers.
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// True when no layers were tuned.
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Look up one layer by name.
+    pub fn get(&self, name: &str) -> Option<&LayerProfile> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+
+    /// Reject this profile unless it was measured on a machine with the
+    /// current host's fingerprint. The error is deliberately distinct
+    /// from any format error: the file is *valid*, just not *for this
+    /// machine*.
+    pub fn verify_host(&self) -> Result<()> {
+        let host = MachineFingerprint::current();
+        if self.fingerprint != host {
+            return Err(Error::Config(format!(
+                "tuning profile was measured on a different machine \
+                 (profile {}, host {}) — re-run `rsr tune` on this host",
+                self.fingerprint.describe(),
+                host.describe()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Serialize to a `.rsrt` stream.
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        self.validate()?;
+        let mut body = Vec::new();
+        for l in &self.layers {
+            body.extend_from_slice(&(l.name.len() as u32).to_le_bytes());
+            body.extend_from_slice(l.name.as_bytes());
+            body.extend_from_slice(&(l.rows as u32).to_le_bytes());
+            body.extend_from_slice(&(l.cols as u32).to_le_bytes());
+            body.extend_from_slice(&(l.chain.len() as u32).to_le_bytes());
+            for c in &l.chain {
+                body.extend_from_slice(&c.backend.code().to_le_bytes());
+                body.extend_from_slice(&(c.k as u32).to_le_bytes());
+                body.extend_from_slice(&c.ns.to_bits().to_le_bytes());
+            }
+        }
+        let checksum = profile_checksum(
+            RSRT_VERSION,
+            &self.fingerprint,
+            self.layers.len(),
+            &body,
+        );
+        w.write_all(RSRT_MAGIC)?;
+        for v in [
+            RSRT_VERSION,
+            self.fingerprint.features,
+            self.fingerprint.threads,
+            self.layers.len() as u32,
+        ] {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        w.write_all(&(body.len() as u64).to_le_bytes())?;
+        w.write_all(&checksum.to_le_bytes())?;
+        w.write_all(&body)?;
+        Ok(())
+    }
+
+    /// Deserialize from a `.rsrt` stream: header checks → checksum →
+    /// decode → full structural validation.
+    pub fn read_from(r: &mut impl Read) -> Result<Self> {
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != RSRT_MAGIC {
+            return Err(Error::Artifact(
+                "bad magic (not a .rsrt tuning profile)".into(),
+            ));
+        }
+        let version = read_u32(r)?;
+        if version != RSRT_VERSION {
+            return Err(Error::Artifact(format!(
+                "unsupported .rsrt version {version} (this build reads version \
+                 {RSRT_VERSION})"
+            )));
+        }
+        let features = read_u32(r)?;
+        let threads = read_u32(r)?;
+        let layer_count = read_u32(r)? as usize;
+        let body_len = u64::from_le_bytes(read_arr(r)?) as usize;
+        let checksum = u64::from_le_bytes(read_arr(r)?);
+        if layer_count > MAX_LAYERS {
+            return Err(Error::Artifact(format!(
+                "implausible layer count {layer_count}"
+            )));
+        }
+        if body_len > MAX_BODY {
+            return Err(Error::Artifact(format!(
+                "implausible body length {body_len}"
+            )));
+        }
+        let mut body = Vec::new();
+        body.try_reserve_exact(body_len).map_err(|_| {
+            Error::Artifact(format!("cannot allocate {body_len} body bytes"))
+        })?;
+        body.resize(body_len, 0);
+        r.read_exact(&mut body)?;
+        let fingerprint = MachineFingerprint { features, threads };
+        if profile_checksum(version, &fingerprint, layer_count, &body) != checksum {
+            return Err(Error::Artifact(
+                "checksum mismatch (corrupt tuning profile header or body)".into(),
+            ));
+        }
+
+        let mut off = 0usize;
+        let mut layers = Vec::with_capacity(layer_count.min(1024));
+        for _ in 0..layer_count {
+            let name_len = read_body_u32(&body, &mut off)? as usize;
+            if name_len > MAX_NAME {
+                return Err(Error::Artifact(format!("layer name too long ({name_len})")));
+            }
+            let name_bytes = read_body_bytes(&body, &mut off, name_len)?;
+            let name = String::from_utf8(name_bytes.to_vec())
+                .map_err(|e| Error::Artifact(e.to_string()))?;
+            let rows = read_body_u32(&body, &mut off)? as usize;
+            let cols = read_body_u32(&body, &mut off)? as usize;
+            let chain_len = read_body_u32(&body, &mut off)? as usize;
+            if chain_len > MAX_CHAIN {
+                return Err(Error::Artifact(format!(
+                    "layer {name}: chain length {chain_len} out of range"
+                )));
+            }
+            let mut chain = Vec::with_capacity(chain_len);
+            for _ in 0..chain_len {
+                let backend = TunedBackend::from_code(read_body_u32(&body, &mut off)?)?;
+                let k = read_body_u32(&body, &mut off)? as usize;
+                let bits = read_body_bytes(&body, &mut off, 8)?;
+                let ns = f64::from_bits(u64::from_le_bytes(bits.try_into().unwrap()));
+                chain.push(LayerChoice { backend, k, ns });
+            }
+            layers.push(LayerProfile { name, rows, cols, chain });
+        }
+        if off != body.len() {
+            return Err(Error::Artifact(format!(
+                "tuning profile body has {} trailing bytes",
+                body.len() - off
+            )));
+        }
+        Self::new(fingerprint, layers)
+    }
+
+    /// Write to a file.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        self.write_to(&mut f)
+    }
+
+    /// Read + validate from a file (host fingerprint is **not** checked
+    /// here — `rsr inspect` must read foreign profiles; serve-time
+    /// loaders call [`verify_host`](Self::verify_host)).
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        Self::read_from(&mut f)
+    }
+}
+
+/// FNV-1a over the body, continued over every other header field —
+/// computed from *parsed* values on read, exactly like the `.rsrz`
+/// checksum, so surviving header corruption still fails the comparison.
+fn profile_checksum(
+    version: u32,
+    fp: &MachineFingerprint,
+    layer_count: usize,
+    body: &[u8],
+) -> u64 {
+    let mut h = fnv1a64(body);
+    for v in [version, fp.features, fp.threads, layer_count as u32] {
+        h = fnv1a64_continue(h, &v.to_le_bytes());
+    }
+    fnv1a64_continue(h, &(body.len() as u64).to_le_bytes())
+}
+
+fn read_body_bytes<'a>(body: &'a [u8], off: &mut usize, n: usize) -> Result<&'a [u8]> {
+    if *off + n > body.len() {
+        return Err(Error::Artifact("tuning profile body truncated".into()));
+    }
+    let s = &body[*off..*off + n];
+    *off += n;
+    Ok(s)
+}
+
+fn read_body_u32(body: &[u8], off: &mut usize) -> Result<u32> {
+    let b = read_body_bytes(body, off, 4)?;
+    Ok(u32::from_le_bytes(b.try_into().unwrap()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn sample_profile() -> TuneProfile {
+        TuneProfile::new(
+            MachineFingerprint::current(),
+            vec![
+                LayerProfile {
+                    name: "layer0.wq".into(),
+                    rows: 64,
+                    cols: 64,
+                    chain: vec![
+                        LayerChoice { backend: TunedBackend::RsrPlusPlus, k: 5, ns: 810.0 },
+                        LayerChoice { backend: TunedBackend::Rsr, k: 4, ns: 1024.5 },
+                    ],
+                },
+                LayerProfile {
+                    name: "lm_head".into(),
+                    rows: 64,
+                    cols: 270,
+                    chain: vec![LayerChoice {
+                        backend: TunedBackend::Parallel,
+                        k: 6,
+                        ns: 2048.25,
+                    }],
+                },
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn round_trip_preserves_everything() {
+        let p = sample_profile();
+        let mut buf = Vec::new();
+        p.write_to(&mut buf).unwrap();
+        let back = TuneProfile::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(back, p);
+        assert_eq!(back.get("lm_head").unwrap().winner().k, 6);
+        assert!(back.get("nope").is_none());
+        assert_eq!(back.len(), 2);
+    }
+
+    #[test]
+    fn version_and_magic_are_checked() {
+        let p = sample_profile();
+        let mut buf = Vec::new();
+        p.write_to(&mut buf).unwrap();
+        let mut bad = buf.clone();
+        bad[0] ^= 0xFF;
+        assert!(TuneProfile::read_from(&mut bad.as_slice()).is_err());
+        let mut bad = buf;
+        bad[4] = 42;
+        let err = TuneProfile::read_from(&mut bad.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("version 42"), "{err}");
+    }
+
+    #[test]
+    fn corruption_and_truncation_are_rejected() {
+        let p = sample_profile();
+        let mut buf = Vec::new();
+        p.write_to(&mut buf).unwrap();
+        // Body bit flip → checksum.
+        let mut bad = buf.clone();
+        let last = bad.len() - 3;
+        bad[last] ^= 0x40;
+        let err = TuneProfile::read_from(&mut bad.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+        // Header bit flip (thread count, offset 12) → checksum.
+        let mut bad = buf.clone();
+        bad[12] ^= 0x01;
+        let err = TuneProfile::read_from(&mut bad.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+        // Truncation.
+        for cut in [buf.len() - 1, buf.len() / 2, 10] {
+            assert!(TuneProfile::read_from(&mut &buf[..cut]).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn host_verification_distinguishes_machines() {
+        let mut p = sample_profile();
+        p.verify_host().unwrap();
+        p.fingerprint.threads += 1;
+        let err = p.verify_host().unwrap_err();
+        assert!(err.to_string().contains("different machine"), "{err}");
+        // A foreign profile still round-trips (inspect must read it)…
+        let mut buf = Vec::new();
+        p.write_to(&mut buf).unwrap();
+        let back = TuneProfile::read_from(&mut buf.as_slice()).unwrap();
+        // …but keeps failing host verification after the trip.
+        assert!(back.verify_host().is_err());
+    }
+
+    #[test]
+    fn invalid_profiles_cannot_be_constructed() {
+        let fp = MachineFingerprint::current();
+        let bad_chain = LayerProfile {
+            name: "x".into(),
+            rows: 4,
+            cols: 4,
+            chain: vec![],
+        };
+        assert!(TuneProfile::new(fp, vec![bad_chain]).is_err());
+        let bad_k = LayerProfile {
+            name: "x".into(),
+            rows: 4,
+            cols: 4,
+            chain: vec![LayerChoice { backend: TunedBackend::Rsr, k: 17, ns: 1.0 }],
+        };
+        assert!(TuneProfile::new(fp, vec![bad_k]).is_err());
+        let bad_ns = LayerProfile {
+            name: "x".into(),
+            rows: 4,
+            cols: 4,
+            chain: vec![LayerChoice {
+                backend: TunedBackend::Rsr,
+                k: 3,
+                ns: f64::NAN,
+            }],
+        };
+        assert!(TuneProfile::new(fp, vec![bad_ns]).is_err());
+    }
+
+    #[test]
+    fn fingerprint_describe_is_stable_shape() {
+        let d = MachineFingerprint::current().describe();
+        assert!(d.contains("/"), "{d}");
+        assert!(d.ends_with('t'), "{d}");
+    }
+}

@@ -1,0 +1,205 @@
+//! The tuning driver: walk a model's named layer matrices, measure
+//! every [`Candidate`] on each, and assemble the `.rsrt`
+//! [`TuneProfile`].
+//!
+//! Honesty rule: every candidate is timed through the **same**
+//! [`ExecutablePlan`](crate::runtime::ExecutablePlan) object the
+//! profile-driven serve path will run — same shared-`Arc` plan, same
+//! scratch discipline, same pool handle — so the measured ranking
+//! transfers to serving rather than being a proxy. One stated caveat:
+//! tuning runs alone, so the `parallel` candidate is measured on an
+//! **uncontended** shared pool. Under many concurrent engine workers
+//! the pool checkout contends (losers run serially — see
+//! [`PoolHandle::run`](crate::util::threadpool::PoolHandle::run)) and
+//! `rsr++` may overtake it; the serving engine warns when a
+//! parallel-winning profile is loaded with multiple workers.
+//!
+//! Cost shape: preprocessing dominates for big layers, so the candidate
+//! walk is grouped by `k` — Algorithm 1 runs once per `(layer, k)` and
+//! every backend is timed on that one shared index.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::candidates::{candidate_space, Candidate};
+use super::microbench::{bench, BenchOpts, BenchResult};
+use super::profile::{LayerChoice, LayerProfile, MachineFingerprint, TuneProfile};
+use crate::error::{Error, Result};
+use crate::kernels::index::TernaryRsrIndex;
+use crate::kernels::TernaryMatrix;
+use crate::model::weights::ModelWeights;
+use crate::runtime::{ExecutablePlan, SharedTernaryPlan};
+use crate::util::rng::Rng;
+
+/// Options for one tuning run.
+#[derive(Debug, Clone, Copy)]
+pub struct TuneOpts {
+    /// `k`-window radius around the analytic optimum
+    /// ([`crate::kernels::optimal_k::k_candidates`]).
+    pub radius: usize,
+    /// Soft wall-time measurement budget **per layer**, split evenly
+    /// across its candidates (preprocessing is on top — it is the
+    /// artifact being produced, not a measurement cost).
+    pub budget_per_layer: Duration,
+    /// Trials per candidate (the ranked figure is their median).
+    pub trials: usize,
+}
+
+impl Default for TuneOpts {
+    fn default() -> Self {
+        Self { radius: 2, budget_per_layer: Duration::from_millis(250), trials: 5 }
+    }
+}
+
+/// One candidate's measurement on one layer.
+#[derive(Debug, Clone)]
+pub struct CandidateTiming {
+    /// What was measured.
+    pub candidate: Candidate,
+    /// How it measured.
+    pub result: BenchResult,
+}
+
+/// Full measurement record for one layer — the profile keeps only the
+/// `(backend, k, ns)` chain; this carries the rest for reporting.
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    /// Layer name.
+    pub name: String,
+    /// Rows (input length).
+    pub rows: usize,
+    /// Columns (output length).
+    pub cols: usize,
+    /// Every candidate timed, fastest first.
+    pub timings: Vec<CandidateTiming>,
+}
+
+impl LayerReport {
+    /// The winning timing.
+    pub fn winner(&self) -> &CandidateTiming {
+        &self.timings[0]
+    }
+}
+
+/// Tune one ternary matrix: preprocess each candidate `k` once, time
+/// every backend on the shared index, and return the timings sorted
+/// fastest-first.
+pub fn tune_matrix(name: &str, m: &TernaryMatrix, opts: &TuneOpts) -> Result<LayerReport> {
+    let space = candidate_space(m.rows(), opts.radius);
+    if space.is_empty() {
+        return Err(Error::Config(format!(
+            "no tuning candidates for {name} ({}x{})",
+            m.rows(),
+            m.cols()
+        )));
+    }
+    let bench_opts = BenchOpts {
+        trials: opts.trials,
+        budget: (opts.budget_per_layer / space.len() as u32)
+            .max(Duration::from_micros(500)),
+    };
+    // A fixed activation per layer: candidates race on identical input.
+    let mut rng = Rng::new(0x7E57_0000u64 ^ (m.rows() as u64) ^ ((m.cols() as u64) << 20));
+    let v = rng.f32_vec(m.rows(), -1.0, 1.0);
+    let mut out = vec![0.0f32; m.cols()];
+
+    let mut timings = Vec::with_capacity(space.len());
+    let mut shared: Option<(usize, Arc<SharedTernaryPlan>)> = None;
+    for cand in space {
+        // Algorithm 1 once per k; every backend shares that index.
+        if shared.as_ref().map(|(k, _)| *k) != Some(cand.k) {
+            let idx = TernaryRsrIndex::preprocess(m, cand.k);
+            shared = Some((cand.k, Arc::new(SharedTernaryPlan::new(idx)?)));
+        }
+        let plan = Arc::clone(&shared.as_ref().expect("just built").1);
+        let mut exec = ExecutablePlan::new(plan, cand.backend)?;
+        let result = bench(bench_opts, || {
+            exec.execute(&v, &mut out).expect("tuner shapes are fixed");
+        });
+        timings.push(CandidateTiming { candidate: cand, result });
+    }
+    timings.sort_by(|a, b| {
+        a.result
+            .median_ns
+            .partial_cmp(&b.result.median_ns)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    Ok(LayerReport { name: name.to_string(), rows: m.rows(), cols: m.cols(), timings })
+}
+
+/// Tune every named layer matrix of a model. `progress` is called once
+/// per finished layer (the CLI prints a row; tests pass `|_| {}`).
+///
+/// Returns the assembled profile plus the full per-layer reports.
+pub fn tune_model(
+    weights: &ModelWeights,
+    opts: &TuneOpts,
+    mut progress: impl FnMut(&LayerReport),
+) -> Result<(TuneProfile, Vec<LayerReport>)> {
+    let mut layers = Vec::new();
+    let mut reports = Vec::new();
+    for (name, m, _scale) in weights.named_matrices() {
+        let report = tune_matrix(&name, m, opts)?;
+        layers.push(LayerProfile {
+            name: report.name.clone(),
+            rows: report.rows,
+            cols: report.cols,
+            chain: report
+                .timings
+                .iter()
+                .map(|t| LayerChoice {
+                    backend: t.candidate.backend,
+                    k: t.candidate.k,
+                    ns: t.result.median_ns,
+                })
+                .collect(),
+        });
+        progress(&report);
+        reports.push(report);
+    }
+    let profile = TuneProfile::new(MachineFingerprint::current(), layers)?;
+    Ok((profile, reports))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+
+    fn fast_opts() -> TuneOpts {
+        TuneOpts {
+            radius: 0,
+            budget_per_layer: Duration::from_millis(2),
+            trials: 1,
+        }
+    }
+
+    #[test]
+    fn tune_matrix_measures_every_candidate_and_sorts() {
+        let mut rng = Rng::new(41);
+        let m = TernaryMatrix::random(96, 48, 1.0 / 3.0, &mut rng);
+        let report = tune_matrix("t", &m, &fast_opts()).unwrap();
+        assert_eq!(report.timings.len(), candidate_space(96, 0).len());
+        assert!(report
+            .timings
+            .windows(2)
+            .all(|w| w[0].result.median_ns <= w[1].result.median_ns));
+        assert!(report.winner().result.median_ns > 0.0);
+    }
+
+    #[test]
+    fn tune_model_covers_every_layer_and_verifies_on_host() {
+        let weights = ModelWeights::generate(ModelConfig::tiny(), 55).unwrap();
+        let mut seen = 0usize;
+        let (profile, reports) =
+            tune_model(&weights, &fast_opts(), |_| seen += 1).unwrap();
+        let expect = weights.matrix_names().len();
+        assert_eq!(profile.len(), expect);
+        assert_eq!(reports.len(), expect);
+        assert_eq!(seen, expect);
+        profile.verify_host().unwrap();
+        let l = profile.get("layer0.wq").unwrap();
+        assert_eq!((l.rows, l.cols), (64, 64));
+        assert!(!l.chain.is_empty());
+    }
+}

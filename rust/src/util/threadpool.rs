@@ -1,9 +1,12 @@
 //! Thread pools over `std::thread` (the offline registry has no
 //! rayon): one-shot scoped helpers ([`parallel_for`] / [`parallel_map`]),
-//! the serving engine's job queue ([`WorkerPool`]), and the
+//! the serving engine's job queue ([`WorkerPool`]), the
 //! [`PersistentPool`] that block-parallel RSR execution
 //! (paper Appendix C.1.I) dispatches to without spawning threads or
-//! taking locks per call.
+//! taking locks per call, and the shareable [`PoolHandle`] (most
+//! importantly [`PoolHandle::global`], the process-wide pool) that
+//! lets every parallel plan check one pool out per execute instead of
+//! owning its own workers.
 
 use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -351,6 +354,79 @@ impl Drop for PersistentPool {
     }
 }
 
+/// A clonable, shareable handle to a [`PersistentPool`].
+///
+/// The ROADMAP problem this solves: every `ParallelRsrPlan` used to
+/// *own* a pool, so a transformer built on the parallel backend spawned
+/// `default_threads − 1` parked workers **per weight matrix**. A
+/// `PoolHandle` instead lets any number of plans share one pool — most
+/// commonly [`PoolHandle::global`], the lazily-created process-wide
+/// pool — and check it out per `run` call.
+///
+/// The checkout is a `try_lock`, not a blocking lock: inside one
+/// `run`, the hot path is still the pool's lock-free generation
+/// protocol, and when another plan holds the pool (the machine's cores
+/// are already busy executing it) the caller degrades to running its
+/// chunks serially on its own thread instead of queueing — forward
+/// progress is never blocked on a peer's multiply.
+#[derive(Clone)]
+pub struct PoolHandle {
+    inner: Arc<std::sync::Mutex<PersistentPool>>,
+    /// Cached lane count so sizing per-lane scratch never takes the lock.
+    threads: usize,
+}
+
+impl std::fmt::Debug for PoolHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PoolHandle").field("threads", &self.threads).finish()
+    }
+}
+
+impl PoolHandle {
+    /// A dedicated pool of `threads` lanes (benches and tests that pin
+    /// an explicit parallelism; everything else should share
+    /// [`global`](Self::global)).
+    pub fn new(threads: usize) -> Self {
+        let pool = PersistentPool::new(threads);
+        let threads = pool.threads();
+        Self { inner: Arc::new(std::sync::Mutex::new(pool)), threads }
+    }
+
+    /// The process-wide pool, sized [`default_threads`] and created on
+    /// first use. Every parallel plan built with `threads = 0` shares
+    /// this handle, so N weight matrices cost one set of workers, not N.
+    pub fn global() -> PoolHandle {
+        static GLOBAL: std::sync::OnceLock<PoolHandle> = std::sync::OnceLock::new();
+        GLOBAL.get_or_init(|| PoolHandle::new(default_threads())).clone()
+    }
+
+    /// Lanes of parallelism a `run` through this handle can use. Worker
+    /// indices passed to the task are `< threads()`.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(worker_index, chunk)` for every chunk in `0..chunks` on
+    /// the shared pool if it is free, or serially on the calling thread
+    /// (as lane 0) if another plan currently holds it. Semantics
+    /// otherwise match [`PersistentPool::run`].
+    pub fn run<F: Fn(usize, usize) + Sync>(&self, chunks: usize, f: F) {
+        use std::sync::TryLockError;
+        match self.inner.try_lock() {
+            Ok(mut pool) => pool.run(chunks, f),
+            // A panic on a previous checkout poisoned the mutex; the
+            // pool itself survived (workers catch task panics), so
+            // recover it rather than silently going serial forever.
+            Err(TryLockError::Poisoned(p)) => p.into_inner().run(chunks, f),
+            Err(TryLockError::WouldBlock) => {
+                for i in 0..chunks {
+                    f(0, i);
+                }
+            }
+        }
+    }
+}
+
 /// A long-lived pool accepting closures — used by the serving engine
 /// where workers persist across requests.
 pub struct WorkerPool {
@@ -499,6 +575,54 @@ mod tests {
         // the pool keeps working.
         let hits: Vec<AtomicUsize> = (0..10).map(|_| AtomicUsize::new(0)).collect();
         pool.run(hits.len(), |_, i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn pool_handle_is_shared_and_covers_every_chunk() {
+        let handle = PoolHandle::new(3);
+        assert_eq!(handle.threads(), 3);
+        let clone = handle.clone();
+        for h in [&handle, &clone] {
+            let hits: Vec<AtomicUsize> = (0..23).map(|_| AtomicUsize::new(0)).collect();
+            h.run(hits.len(), |worker, i| {
+                assert!(worker < 3);
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        }
+    }
+
+    #[test]
+    fn pool_handle_contention_falls_back_to_serial() {
+        // Hold the pool from one thread while another runs through the
+        // same handle: the second must complete serially, not deadlock.
+        let handle = PoolHandle::new(2);
+        let inner = handle.clone();
+        let hits: Vec<AtomicUsize> = (0..50).map(|_| AtomicUsize::new(0)).collect();
+        handle.run(2, |_w, outer_chunk| {
+            if outer_chunk == 0 {
+                // Re-entering run() while the pool is checked out takes
+                // the serial path (worker index 0 for every chunk).
+                inner.run(hits.len(), |w, i| {
+                    assert_eq!(w, 0);
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn global_pool_is_one_instance() {
+        let a = PoolHandle::global();
+        let b = PoolHandle::global();
+        assert!(Arc::ptr_eq(&a.inner, &b.inner));
+        assert!(a.threads() >= 1);
+        let hits: Vec<AtomicUsize> = (0..7).map(|_| AtomicUsize::new(0)).collect();
+        a.run(hits.len(), |_, i| {
             hits[i].fetch_add(1, Ordering::Relaxed);
         });
         assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));

@@ -115,7 +115,7 @@ fn prop_ternary_decomposition_reconstructs() {
             }
         }
         // pack2 round-trip too.
-        assert_eq!(TernaryMatrix::unpack2(n, m, &a.pack2()), a, "case {case}");
+        assert_eq!(TernaryMatrix::unpack2(n, m, &a.pack2()).unwrap(), a, "case {case}");
     }
 }
 

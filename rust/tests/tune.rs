@@ -1,0 +1,306 @@
+//! Integration: the tuning subsystem's compile-once/serve-many
+//! contract (mirrors `tests/artifact.rs` for `.rsrz`).
+//!
+//! A `.rsrt` profile must round-trip exactly, reject truncation /
+//! bit flips / unknown versions / foreign machine fingerprints with
+//! distinct errors, and — the core safety property — a profile-driven
+//! [`PlanStore`] must produce **bit-identical** multiply results to the
+//! untuned store for every backend the profile can select (exercised on
+//! integer-valued activations, where all f32 sums are exact, so any
+//! divergence is an indexing bug rather than rounding).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use rsr::model::bitlinear::BitLinear;
+use rsr::model::config::ModelConfig;
+use rsr::model::sampler::Sampler;
+use rsr::model::transformer::Transformer;
+use rsr::model::weights::ModelWeights;
+use rsr::runtime::PlanStore;
+use rsr::serving::engine::{EngineConfig, InferenceEngine};
+use rsr::serving::request::Request;
+use rsr::tune::{
+    tune_model, LayerChoice, LayerProfile, MachineFingerprint, TuneOpts, TuneProfile,
+    TunedBackend,
+};
+use rsr::util::rng::Rng;
+
+/// Fresh per-test temp dir (no tempfile crate offline).
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("rsr-tune-test-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn tiny_weights(seed: u64) -> ModelWeights {
+    ModelWeights::generate(ModelConfig::tiny(), seed).unwrap()
+}
+
+/// A profile forcing one `(backend, k)` on every layer of `weights`.
+fn forced_profile(weights: &ModelWeights, backend: TunedBackend, k: usize) -> TuneProfile {
+    let layers = weights
+        .named_matrices()
+        .into_iter()
+        .map(|(name, m, _scale)| LayerProfile {
+            name,
+            rows: m.rows(),
+            cols: m.cols(),
+            chain: vec![LayerChoice { backend, k, ns: 1.0 }],
+        })
+        .collect();
+    TuneProfile::new(MachineFingerprint::current(), layers).unwrap()
+}
+
+#[test]
+fn rsrt_file_round_trips_exactly() {
+    let weights = tiny_weights(21);
+    let (profile, _) = tune_model(
+        &weights,
+        &TuneOpts { radius: 0, budget_per_layer: Duration::from_millis(2), trials: 1 },
+        |_| {},
+    )
+    .unwrap();
+    let dir = temp_dir("roundtrip");
+    let path = dir.join("tiny.rsrt");
+    profile.save(&path).unwrap();
+    let back = TuneProfile::load(&path).unwrap();
+    assert_eq!(back, profile);
+    back.verify_host().unwrap();
+    assert_eq!(back.len(), weights.matrix_names().len());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_rsrt_files_are_rejected() {
+    let profile = forced_profile(&tiny_weights(23), TunedBackend::RsrPlusPlus, 4);
+    let mut buf = Vec::new();
+    profile.write_to(&mut buf).unwrap();
+
+    // Round-trips clean.
+    assert_eq!(TuneProfile::read_from(&mut buf.as_slice()).unwrap(), profile);
+
+    // Truncation at any point.
+    for cut in [4usize, 20, 35, buf.len() / 2, buf.len() - 1] {
+        assert!(TuneProfile::read_from(&mut &buf[..cut]).is_err(), "cut {cut}");
+    }
+    // Body bit flip → checksum.
+    let mut bad = buf.clone();
+    let last = bad.len() - 5;
+    bad[last] ^= 0x08;
+    let err = TuneProfile::read_from(&mut bad.as_slice()).unwrap_err();
+    assert!(err.to_string().contains("checksum"), "{err}");
+    // Header bit flip (fingerprint features, offset 8) → checksum.
+    let mut bad = buf.clone();
+    bad[8] ^= 0x01;
+    let err = TuneProfile::read_from(&mut bad.as_slice()).unwrap_err();
+    assert!(err.to_string().contains("checksum"), "{err}");
+    // Unknown version (offset 4) → distinct version error.
+    let mut bad = buf.clone();
+    bad[4..8].copy_from_slice(&99u32.to_le_bytes());
+    let err = TuneProfile::read_from(&mut bad.as_slice()).unwrap_err();
+    assert!(err.to_string().contains("version 99"), "{err}");
+    // Bad magic.
+    let mut bad = buf;
+    bad[1] ^= 0xFF;
+    let err = TuneProfile::read_from(&mut bad.as_slice()).unwrap_err();
+    assert!(err.to_string().contains("magic"), "{err}");
+}
+
+#[test]
+fn foreign_fingerprint_fails_distinctly_through_the_whole_stack() {
+    let weights = tiny_weights(29);
+    let mut profile = forced_profile(&weights, TunedBackend::RsrPlusPlus, 4);
+    profile.fingerprint.threads += 7;
+    let dir = temp_dir("foreign");
+    let path = dir.join("foreign.rsrt");
+    profile.save(&path).unwrap();
+
+    // The file itself is valid — inspect-style loading succeeds…
+    let back = TuneProfile::load(&path).unwrap();
+    // …host verification fails with the machine error, not a format one.
+    let err = back.verify_host().unwrap_err();
+    assert!(err.to_string().contains("different machine"), "{err}");
+    assert!(!err.to_string().contains("checksum"), "{err}");
+
+    // PlanStore::with_profile refuses it.
+    let store = PlanStore::for_model(Arc::new(weights.clone()), 0);
+    assert!(store.with_profile(back).is_err());
+
+    // And the engine refuses it at startup.
+    let res = InferenceEngine::start(
+        Arc::new(weights),
+        EngineConfig { workers: 1, tune_profile: Some(path), ..Default::default() },
+    );
+    let err = match res {
+        Err(e) => e,
+        Ok(_) => panic!("foreign profile must fail engine startup"),
+    };
+    assert!(err.to_string().contains("different machine"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The acceptance-criteria determinism test: for every backend the
+/// profile can select, a profile-driven store's layers multiply
+/// bit-identically to the untuned store's layers.
+#[test]
+fn profile_driven_store_is_bit_identical_across_all_backends() {
+    let weights = Arc::new(tiny_weights(31));
+    let untuned = PlanStore::for_model(Arc::clone(&weights), 0);
+    let mut rng = Rng::new(32);
+
+    // Reference outputs from the untuned store, on integer activations
+    // (exact f32 arithmetic → backend choice cannot change results).
+    let sample_layers = ["layer0.wq", "layer1.gate", "layer1.down", "lm_head"];
+    let mut inputs = Vec::new();
+    let mut expected = Vec::new();
+    for name in sample_layers {
+        let entry = untuned.get(name).unwrap();
+        let (rows, cols) = entry.shape();
+        let x = rng.int_f32_vec(rows, 2);
+        let mut layer = BitLinear::from_plan_entry(&entry, 1.0).unwrap();
+        let mut out = vec![0.0f32; cols];
+        layer.forward(&x, &mut out).unwrap();
+        inputs.push(x);
+        expected.push(out);
+    }
+
+    for backend in TunedBackend::ALL {
+        // One forced k for every layer (untuned layers pick their own
+        // analytic k) — on exact integer arithmetic neither the
+        // blocking nor the backend may change a single bit.
+        let store = PlanStore::for_model(Arc::clone(&weights), 0)
+            .with_profile(forced_profile(
+                &weights,
+                backend,
+                rsr::kernels::optimal_k::optimal_k_rsrpp(weights.config.d_model),
+            ))
+            .unwrap();
+        for (i, name) in sample_layers.iter().enumerate() {
+            let entry = store.get(name).unwrap();
+            assert_eq!(entry.tuned.unwrap().backend, backend);
+            let mut layer = BitLinear::from_plan_entry(&entry, 1.0).unwrap();
+            let mut out = vec![0.0f32; expected[i].len()];
+            layer.forward(&inputs[i], &mut out).unwrap();
+            assert_eq!(out, expected[i], "{name} via {}", backend.name());
+        }
+    }
+}
+
+#[test]
+fn tuned_transformer_generates_identical_tokens() {
+    // End to end at the model level: a store whose profile selects the
+    // default backend at the default k is bit-identical to the untuned
+    // store, so greedy decoding must match token for token. (Other
+    // backends differ only by f32 re-association; the multiply-level
+    // test above pins them exactly on integer inputs.)
+    let weights = tiny_weights(37);
+    let k = rsr::kernels::optimal_k::optimal_k_rsrpp(weights.config.d_model);
+    let untuned_store = PlanStore::for_model(Arc::new(weights.clone()), 0);
+    let tuned_store = PlanStore::for_model(Arc::new(weights.clone()), 0)
+        .with_profile(forced_profile(&weights, TunedBackend::RsrPlusPlus, k))
+        .unwrap();
+
+    let mut a = Transformer::from_plan_store(&weights, &untuned_store).unwrap();
+    let mut b = Transformer::from_plan_store(&weights, &tuned_store).unwrap();
+    let prompt = [5u32, 6, 7, 8];
+    let mut rng = Rng::new(3);
+    let ta = a.generate(&prompt, 6, Sampler::Greedy, &mut rng).unwrap();
+    let mut rng = Rng::new(3);
+    let tb = b.generate(&prompt, 6, Sampler::Greedy, &mut rng).unwrap();
+    assert_eq!(ta, tb);
+
+    // The parallel-tuned model also produces identical tokens: its
+    // per-block arithmetic is the same fold, just fanned across lanes.
+    let par_store = PlanStore::for_model(Arc::new(weights.clone()), 0)
+        .with_profile(forced_profile(&weights, TunedBackend::Parallel, k))
+        .unwrap();
+    let mut c = Transformer::from_plan_store(&weights, &par_store).unwrap();
+    let mut rng = Rng::new(3);
+    let tc = c.generate(&prompt, 6, Sampler::Greedy, &mut rng).unwrap();
+    assert_eq!(ta, tc);
+}
+
+#[test]
+fn profile_with_foreign_layer_geometry_is_rejected() {
+    // Same layer names, different matrix shape (a different checkpoint
+    // config): the profile's measurements do not apply and the store
+    // must say so instead of silently tuning the wrong matrix.
+    let weights = tiny_weights(47);
+    let mut profile = forced_profile(&weights, TunedBackend::RsrPlusPlus, 4);
+    profile.layers[0].rows += 1;
+    assert_eq!(profile.layers[0].name, "layer0.wq");
+    let store = PlanStore::for_model(Arc::new(weights), 0)
+        .with_profile(profile)
+        .unwrap();
+    let err = store.get("layer0.wq").unwrap_err();
+    assert!(err.to_string().contains("re-run `rsr tune`"), "{err}");
+    // Untouched layers still build.
+    store.get("layer0.wk").unwrap();
+}
+
+#[test]
+fn artifact_backed_store_rejects_profile_with_mismatched_k() {
+    use rsr::kernels::artifact::{ternary_fingerprint, PlanArtifact};
+    use rsr::kernels::index::TernaryRsrIndex;
+
+    let weights = tiny_weights(41);
+    let dir = temp_dir("kmismatch");
+    // Pack everything at k=4…
+    for (name, m, scale) in weights.named_matrices() {
+        PlanArtifact::ternary(name.clone(), TernaryRsrIndex::preprocess(m, 4), scale)
+            .unwrap()
+            .with_weights_fingerprint(ternary_fingerprint(m))
+            .save(dir.join(format!("{name}.rsrz")))
+            .unwrap();
+    }
+    // …and tune to k=3: selection cannot re-block a packed artifact.
+    let store = PlanStore::open(&dir)
+        .unwrap()
+        .with_profile(forced_profile(&weights, TunedBackend::Rsr, 3))
+        .unwrap();
+    let err = store.get("layer0.wq").unwrap_err();
+    assert!(err.to_string().contains("rsr pack --model"), "{err}");
+
+    // Matching k works and carries the tuned backend through.
+    let store = PlanStore::open(&dir)
+        .unwrap()
+        .with_profile(forced_profile(&weights, TunedBackend::Rsr, 4))
+        .unwrap();
+    let entry = store.get("layer0.wq").unwrap();
+    assert_eq!(entry.tuned.unwrap().backend, TunedBackend::Rsr);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tune_then_serve_end_to_end() {
+    // The CLI contract as a library flow: tune a tiny model on a small
+    // budget, write the .rsrt, start an engine with it, serve a request.
+    let weights = Arc::new(tiny_weights(43));
+    let (profile, reports) = tune_model(
+        &weights,
+        &TuneOpts { radius: 1, budget_per_layer: Duration::from_millis(3), trials: 2 },
+        |_| {},
+    )
+    .unwrap();
+    assert_eq!(reports.len(), weights.matrix_names().len());
+    let dir = temp_dir("serve");
+    let path = dir.join("tiny.rsrt");
+    profile.save(&path).unwrap();
+
+    let engine = InferenceEngine::start(
+        Arc::clone(&weights),
+        EngineConfig { workers: 2, tune_profile: Some(path), ..Default::default() },
+    )
+    .unwrap();
+    engine.submit(Request::new(1, vec![10, 20, 30], 4)).unwrap();
+    let resp = engine.recv_timeout(Duration::from_secs(30)).expect("response");
+    assert_eq!(resp.id, 1);
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    assert!(!resp.tokens.is_empty());
+    engine.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
