@@ -13,4 +13,5 @@ pub mod fig6;
 pub mod fig9;
 pub mod kernels;
 pub mod perf;
+pub mod serving;
 pub mod table1;

@@ -1,0 +1,221 @@
+//! `rsr bench-serve` — the serving-layer perf trajectory: decode
+//! throughput as a function of batch size.
+//!
+//! Sweeps the continuous-batching batch size over a synthetic model
+//! (default `B ∈ {1, 4, 8, 16}` on one `n = 1024` layer stack) by
+//! driving [`Transformer::forward_batch`] — the exact lockstep step the
+//! serving engine's continuous loop executes — with every slot live,
+//! and records tokens/sec to `BENCH_serving.json` (CI uploads it as a
+//! workflow artifact). This is the number the batched RSR kernels
+//! exist for: the shared plan index is read once per **step** instead
+//! of once per sequence, so per-step cost grows sublinearly in `B` and
+//! decode tokens/sec should rise monotonically from `B = 1` on
+//! paper-scale layers.
+//!
+//! Timing is a plain wall-clock loop rather than
+//! [`crate::tune::microbench`]: a decode step mutates the KV caches
+//! (sequence length grows per call), so the microbench's calibrated
+//! inner-repeat would measure ever-longer attention windows and
+//! overflow `max_seq_len`. Every batch size decodes the same number of
+//! steps from the same prefill depth, so the attention cost is
+//! identical across the sweep and the comparison stays honest.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::bench::harness::Table;
+use crate::error::Result;
+use crate::model::config::ModelConfig;
+use crate::model::tensor::argmax;
+use crate::model::transformer::Transformer;
+use crate::model::weights::ModelWeights;
+use crate::runtime::PlanStore;
+use crate::util::json::Json;
+
+/// Unmeasured decode steps per batch size (first-touch faults, branch
+/// history) before the timed window opens.
+const WARMUP_STEPS: usize = 2;
+
+/// Options for one bench-serve run.
+#[derive(Debug, Clone)]
+pub struct ServeBenchOpts {
+    /// Batch sizes to sweep.
+    pub batches: Vec<usize>,
+    /// Hidden width of the synthetic model (layer matrices are
+    /// `d_model × d_model` and `d_model × d_ff` — the paper's `n`).
+    pub d_model: usize,
+    /// Feed-forward width.
+    pub d_ff: usize,
+    /// Decoder blocks.
+    pub n_layers: usize,
+    /// Prompt tokens prefilled per slot before the timed window.
+    pub prompt_len: usize,
+    /// Timed decode steps per batch size.
+    pub steps: usize,
+    /// Where to write the JSON record (`None` → stdout table only).
+    pub json_path: Option<PathBuf>,
+}
+
+impl Default for ServeBenchOpts {
+    fn default() -> Self {
+        Self {
+            batches: vec![1, 4, 8, 16],
+            d_model: 1024,
+            d_ff: 2048,
+            n_layers: 1,
+            prompt_len: 4,
+            steps: 32,
+            json_path: Some(PathBuf::from("BENCH_serving.json")),
+        }
+    }
+}
+
+fn synthetic_config(opts: &ServeBenchOpts) -> ModelConfig {
+    ModelConfig {
+        name: format!("bench-serve-{}", opts.d_model),
+        vocab_size: 270,
+        d_model: opts.d_model,
+        n_layers: opts.n_layers,
+        n_heads: 8,
+        n_kv_heads: 4,
+        d_ff: opts.d_ff,
+        max_seq_len: opts.prompt_len + WARMUP_STEPS + opts.steps + 2,
+        rope_theta: 10_000.0,
+    }
+}
+
+/// Run the sweep; returns the JSON record that was (optionally)
+/// written. Preprocessing (Algorithm 1) runs **once** through a shared
+/// [`PlanStore`] — every batch size executes the same compiled plans,
+/// so the sweep isolates the batching effect.
+pub fn run(opts: &ServeBenchOpts) -> Result<Json> {
+    let cfg = synthetic_config(opts);
+    cfg.validate()?;
+    let vocab = cfg.vocab_size;
+    println!(
+        "bench-serve: {} layer(s) of n={} (d_ff {}), prompt {}, {} timed steps",
+        cfg.n_layers, cfg.d_model, cfg.d_ff, opts.prompt_len, opts.steps
+    );
+    let weights = Arc::new(ModelWeights::generate(cfg.clone(), 0xBE5E)?);
+    let store = PlanStore::for_model(Arc::clone(&weights), 0);
+    store.preload(&weights.matrix_names())?;
+
+    let mut measured: Vec<(usize, f64, f64, f64)> = Vec::new();
+    for &b in &opts.batches {
+        let mut model = Transformer::from_plan_store(&weights, &store)?;
+        model.ensure_slots(b);
+        let slots: Vec<usize> = (0..b).collect();
+        // Lockstep prefill: step j feeds a (deterministic, per-slot
+        // distinct) prompt token j to every slot; the final prefill
+        // step's logits seed greedy decode, mirroring the engine.
+        let mut inputs: Vec<u32> =
+            (0..b).map(|s| ((s * 7 + 11) % 256) as u32).collect();
+        for j in 0..opts.prompt_len.max(1) {
+            let logits = model.forward_batch(&inputs, &slots)?;
+            let last = j + 1 >= opts.prompt_len.max(1);
+            for (row, inp) in inputs.iter_mut().enumerate() {
+                *inp = if last {
+                    argmax(&logits[row * vocab..(row + 1) * vocab]) as u32
+                } else {
+                    ((row * 13 + (j + 1) * 31 + 17) % 256) as u32
+                };
+            }
+        }
+        let mut decode = |steps: usize, model: &mut Transformer| -> Result<()> {
+            for _ in 0..steps {
+                let logits = model.forward_batch(&inputs, &slots)?;
+                for (row, inp) in inputs.iter_mut().enumerate() {
+                    *inp = argmax(&logits[row * vocab..(row + 1) * vocab]) as u32;
+                }
+            }
+            Ok(())
+        };
+        decode(WARMUP_STEPS, &mut model)?;
+        let t0 = Instant::now();
+        decode(opts.steps, &mut model)?;
+        let dt = t0.elapsed();
+
+        let tokens = (b * opts.steps) as f64;
+        let tps = tokens / dt.as_secs_f64().max(1e-12);
+        let ms_step = dt.as_secs_f64() * 1e3 / opts.steps as f64;
+        measured.push((b, ms_step, ms_step / b as f64, tps));
+    }
+
+    // The speedup baseline is the smallest swept batch (B=1 when
+    // present), whatever order --batches listed them in.
+    let base_tps = measured
+        .iter()
+        .min_by_key(|&&(b, ..)| b)
+        .map_or(1.0, |&(_, _, _, tps)| tps)
+        .max(1e-12);
+    let base_b = measured.iter().map(|&(b, ..)| b).min().unwrap_or(1);
+    let mut table = Table::new(&[
+        "batch",
+        "steps",
+        "ms/step",
+        "ms/token",
+        "decode tok/s",
+        &format!("vs B={base_b}"),
+    ]);
+    let mut rows = Vec::new();
+    for &(b, ms_step, ms_token, tps) in &measured {
+        table.row(&[
+            b.to_string(),
+            opts.steps.to_string(),
+            format!("{ms_step:.3}"),
+            format!("{ms_token:.3}"),
+            format!("{tps:.1}"),
+            format!("{:.2}x", tps / base_tps),
+        ]);
+        rows.push(Json::obj(vec![
+            ("batch", Json::num(b as f64)),
+            ("ms_per_step", Json::num(ms_step)),
+            ("ms_per_token", Json::num(ms_token)),
+            ("decode_tokens_per_sec", Json::num(tps)),
+            ("speedup_vs_smallest_batch", Json::num(tps / base_tps)),
+        ]));
+    }
+
+    let record = Json::obj(vec![
+        ("bench", Json::str("serving")),
+        ("d_model", Json::num(cfg.d_model as f64)),
+        ("d_ff", Json::num(cfg.d_ff as f64)),
+        ("n_layers", Json::num(cfg.n_layers as f64)),
+        ("prompt_len", Json::num(opts.prompt_len as f64)),
+        ("steps", Json::num(opts.steps as f64)),
+        ("batches", Json::Arr(rows)),
+    ]);
+    table.print("bench-serve: continuous batched decode throughput by batch size");
+    if let Some(path) = &opts.json_path {
+        match std::fs::write(path, record.to_string()) {
+            Ok(()) => println!("\nwrote {}", path.display()),
+            Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
+        }
+    }
+    Ok(record)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_runs_and_records_every_batch() {
+        let opts = ServeBenchOpts {
+            batches: vec![1, 2],
+            d_model: 64,
+            d_ff: 96,
+            n_layers: 1,
+            prompt_len: 2,
+            steps: 2,
+            json_path: None,
+        };
+        let record = run(&opts).unwrap();
+        let rows = record.get("batches").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1].get("batch").unwrap().as_f64(), Some(2.0));
+        assert!(rows[0].get("decode_tokens_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert!(rows[1].get("ms_per_token").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

@@ -131,10 +131,25 @@ struct BatchScratch {
 
 impl BatchScratch {
     fn new(max_batch: usize, rows: usize, max_u: usize) -> Self {
-        Self {
-            u: vec![0.0; max_batch * max_u],
-            vt: vec![0.0; max_batch * rows],
-            odd: vec![0.0; max_batch],
+        let mut s = Self { u: Vec::new(), vt: Vec::new(), odd: Vec::new() };
+        s.ensure(max_batch, rows, max_u);
+        s
+    }
+
+    /// Grow the buffers to serve `max_batch` rows of a plan with `rows`
+    /// input length and `max_u` segmented sums per block. No-op when
+    /// already large enough — called per execute so one executor can
+    /// follow a growing slot count (and serve differently-shaped plans)
+    /// without reallocation churn.
+    fn ensure(&mut self, max_batch: usize, rows: usize, max_u: usize) {
+        if self.u.len() < max_batch * max_u {
+            self.u.resize(max_batch * max_u, 0.0);
+        }
+        if self.vt.len() < max_batch * rows {
+            self.vt.resize(max_batch * rows, 0.0);
+        }
+        if self.odd.len() < max_batch {
+            self.odd.resize(max_batch, 0.0);
         }
     }
 
@@ -238,6 +253,16 @@ impl BatchedExec {
         self.max_batch
     }
 
+    /// Raise the accepted batch ceiling to at least `batch`. Continuous
+    /// batching admits sequences into free slots mid-flight, so the
+    /// live-slot count an executor sees can grow after construction;
+    /// buffers grow lazily on the next execute.
+    pub fn ensure_batch(&mut self, batch: usize) {
+        if batch > self.max_batch {
+            self.max_batch = batch;
+        }
+    }
+
     /// `out[b] = vs[b] · B` for every batch row (row-major `batch×rows`
     /// in, `batch×cols` out, `batch ≤ max_batch`).
     pub fn execute(
@@ -249,6 +274,7 @@ impl BatchedExec {
     ) -> Result<()> {
         let (n, m) = (plan.rows(), plan.cols());
         check_batch_shapes(n, m, self.max_batch, vs, batch, out)?;
+        self.scratch.ensure(self.max_batch, n, plan.max_u());
         self.scratch.transpose_into(vs, batch, n);
         execute_batched_flat(plan, &mut self.scratch, batch, out, Emit::Write);
         Ok(())
@@ -268,6 +294,7 @@ impl BatchedExec {
         let (n, m) = (plus.rows(), plus.cols());
         check_batch_shapes(n, m, self.max_batch, vs, batch, out)?;
         check_batch_shapes(minus.rows(), minus.cols(), self.max_batch, vs, batch, out)?;
+        self.scratch.ensure(self.max_batch, n, plus.max_u().max(minus.max_u()));
         self.scratch.transpose_into(vs, batch, n);
         execute_batched_flat(plus, &mut self.scratch, batch, out, Emit::Write);
         execute_batched_flat(minus, &mut self.scratch, batch, out, Emit::Subtract);
@@ -415,6 +442,54 @@ mod tests {
         let vs = rng.f32_vec(3 * 20, -1.0, 1.0);
         let mut out = vec![0.0; 3 * 12];
         plan.execute(&vs, 3, &mut out).unwrap();
+    }
+
+    #[test]
+    fn ensure_batch_grows_a_live_executor() {
+        // Continuous batching admits sequences mid-flight: an executor
+        // built for 2 rows must serve 5 after ensure_batch, with
+        // results identical to a fresh full-size plan.
+        let mut rng = Rng::new(0xBAD);
+        let (n, m, big) = (48, 36, 5);
+        let a = TernaryMatrix::random(n, m, 1.0 / 3.0, &mut rng);
+        let vs = rng.f32_vec(big * n, -1.0, 1.0);
+        let idx = TernaryRsrIndex::preprocess(&a, 4);
+        let mut grown = BatchedTernaryRsrPlan::new(idx.clone(), 2).unwrap();
+        let mut small = vec![0.0; 2 * m];
+        grown.execute(&vs[..2 * n], 2, &mut small).unwrap();
+        assert!(grown.execute(&vs, big, &mut vec![0.0; big * m]).is_err());
+        grown.exec.ensure_batch(big);
+        let mut out = vec![0.0; big * m];
+        grown.execute(&vs, big, &mut out).unwrap();
+        let mut fresh = BatchedTernaryRsrPlan::new(idx, big).unwrap();
+        let mut expect = vec![0.0; big * m];
+        fresh.execute(&vs, big, &mut expect).unwrap();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn row_results_are_independent_of_batch_size() {
+        // Per row, the interleaved kernel performs the identical f32
+        // addition sequence at every batch size — the invariant that
+        // makes continuous batching's ragged batches safe: a sequence's
+        // output never changes when batchmates join or retire.
+        let mut rng = Rng::new(0xBAE);
+        let (n, m) = (56, 40);
+        let a = TernaryMatrix::random(n, m, 1.0 / 3.0, &mut rng);
+        let vs = rng.f32_vec(4 * n, -1.0, 1.0);
+        let idx = TernaryRsrIndex::preprocess(&a, 4);
+        let mut plan = BatchedTernaryRsrPlan::new(idx, 4).unwrap();
+        let mut full = vec![0.0; 4 * m];
+        plan.execute(&vs, 4, &mut full).unwrap();
+        for bi in 0..4 {
+            let mut solo = vec![0.0; m];
+            plan.execute(&vs[bi * n..(bi + 1) * n], 1, &mut solo).unwrap();
+            assert_eq!(
+                &full[bi * m..(bi + 1) * m],
+                &solo[..],
+                "row {bi} must be bit-identical alone and in a batch"
+            );
+        }
     }
 
     #[test]

@@ -98,6 +98,7 @@ fn run(args: &[String]) -> Result<()> {
         "serve" => cmd_serve(&f),
         "client" => cmd_client(&f),
         "bench-kernels" => cmd_bench_kernels(&f),
+        "bench-serve" => cmd_bench_serve(&f),
         "experiment" => cmd_experiment(rest, &f),
         "selfcheck" => cmd_selfcheck(),
         "artifacts" => cmd_artifacts(),
@@ -119,9 +120,10 @@ fn print_help() {
          pack           --model FILE | --n N  --out DIR [--k K] [--profile FILE.rsrt]  preprocess to .rsrz\n  \
          tune           --weights FILE --out FILE.rsrt [--budget-ms N] [--radius R] [--trials T]\n  \
          inspect        --plans DIR | --file FILE [--deep]      .rsrz / .rsrt stats\n  \
-         serve          --model FILE [--plans DIR] [--profile FILE.rsrt] [--addr A] [--replicas R] [--workers W] [--backend B]\n  \
+         serve          --model FILE [--plans DIR] [--profile FILE.rsrt] [--addr A] [--replicas R] [--workers W] [--max-slots S] [--backend B]\n  \
          client         [--addr A] --prompt TEXT [--max-new N]\n  \
          bench-kernels  [--sizes 1024,4096] [--shapes 4096x11008] [--reps N] [--batch B] [--threads T] [--json FILE]\n  \
+         bench-serve    [--batches 1,4,8,16] [--d-model 1024] [--d-ff 2048] [--layers 1] [--steps 32] [--prompt 4] [--json FILE]\n  \
          experiment     <fig4|fig5|fig6|fig9|fig10|fig11|fig12|table1|ablations|all> [--full]\n  \
          selfcheck                                              cross-backend equality\n  \
          artifacts                                              list AOT artifacts\n\n\
@@ -243,6 +245,17 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
     let plans = f.get("plans").map(PathBuf::from);
     let profile = f.get("profile").map(PathBuf::from);
     let k = get_usize(f, "k", 0)?;
+    // Continuous-batching knob: concurrent decode slots per worker.
+    // 1 serves strictly sequentially (the pre-batching path).
+    let batch = rsr::serving::batcher::BatchPolicy {
+        max_slots: get_usize(
+            f,
+            "max-slots",
+            rsr::serving::batcher::BatchPolicy::default().max_slots,
+        )?
+        .max(1),
+        ..Default::default()
+    };
 
     println!("loading {model_path}...");
     let weights = Arc::new(ModelWeights::load(model_path)?);
@@ -255,6 +268,7 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
         workers,
         backend,
         k,
+        batch,
         plan_dir: plans.clone(),
         tune_profile: profile,
         ..Default::default()
@@ -276,10 +290,11 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
     }
 
     println!(
-        "model {} loaded; {} replica(s) x {} worker(s), backend {}{}",
+        "model {} loaded; {} replica(s) x {} worker(s) x {} slot(s), backend {}{}",
         weights.config.name,
         replicas,
         workers,
+        cfg.batch.max_slots,
         backend.name(),
         if store.is_some() { " (shared plan store)" } else { "" }
     );
@@ -358,6 +373,40 @@ fn cmd_bench_kernels(f: &HashMap<String, String>) -> Result<()> {
         f.get("json").cloned().unwrap_or_else(|| "BENCH_kernels.json".into()),
     ));
     run(&opts);
+    Ok(())
+}
+
+/// `rsr bench-serve`: sweep continuous-batching batch sizes over a
+/// synthetic model and record decode tokens/sec to `BENCH_serving.json`
+/// (the serving-layer perf trajectory; see bench/experiments/serving).
+fn cmd_bench_serve(f: &HashMap<String, String>) -> Result<()> {
+    use rsr::bench::experiments::serving::{run, ServeBenchOpts};
+    let mut opts = ServeBenchOpts::default();
+    if let Some(spec) = f.get("batches") {
+        let mut batches = Vec::new();
+        for s in spec.split(',') {
+            let b: usize = s
+                .trim()
+                .parse()
+                .map_err(|_| Error::Config(format!("bad batch {s} in --batches")))?;
+            if b == 0 {
+                return Err(Error::Config("batch sizes must be positive".into()));
+            }
+            batches.push(b);
+        }
+        if !batches.is_empty() {
+            opts.batches = batches;
+        }
+    }
+    opts.d_model = get_usize(f, "d-model", opts.d_model)?;
+    opts.d_ff = get_usize(f, "d-ff", opts.d_ff)?;
+    opts.n_layers = get_usize(f, "layers", opts.n_layers)?.max(1);
+    opts.steps = get_usize(f, "steps", opts.steps)?.max(1);
+    opts.prompt_len = get_usize(f, "prompt", opts.prompt_len)?.max(1);
+    opts.json_path = Some(PathBuf::from(
+        f.get("json").cloned().unwrap_or_else(|| "BENCH_serving.json".into()),
+    ));
+    run(&opts)?;
     Ok(())
 }
 
@@ -615,10 +664,11 @@ fn inspect_profile(path: &Path) -> Result<()> {
         ]);
     }
     table.print(&format!(
-        "tuning profile {} — {} layers, machine {}{}",
+        "tuning profile {} — {} layers, machine {}, batched measured at batch {}{}",
         path.display(),
         p.len(),
         p.fingerprint.describe(),
+        p.bench_batch,
         if foreign { " (NOT this host: serving would reject it)" } else { "" }
     ));
     Ok(())

@@ -1,16 +1,20 @@
-//! Multi-head attention with grouped-query KV heads, RoPE and a KV
-//! cache — single-token (decode) forward, matching the paper's §5.3
+//! Multi-head attention with grouped-query KV heads, RoPE and per-slot
+//! KV caches — single-token (decode) forward, matching the paper's §5.3
 //! "one feedforward pass per token" setting where every projection is a
-//! vector–ternary-matrix product.
+//! vector–ternary-matrix product, plus a lockstep batched forward
+//! ([`Attention::forward_batch`]) where the projections amortize the
+//! shared index across every live slot while RoPE, cache appends and
+//! the attention reduction stay per-slot.
 
 use super::bitlinear::BitLinear;
 use super::config::ModelConfig;
 use super::kv_cache::KvCache;
 use super::rope::Rope;
-use super::tensor::softmax;
+use super::tensor::{ensure_len, softmax};
 use crate::error::Result;
 
-/// One attention layer: Q/K/V/O projections (all `BitLinear`) + cache.
+/// One attention layer: Q/K/V/O projections (all `BitLinear`) + one KV
+/// cache per decode slot (slot 0 is the single-sequence path).
 pub struct Attention {
     n_heads: usize,
     n_kv_heads: usize,
@@ -19,13 +23,18 @@ pub struct Attention {
     wk: BitLinear,
     wv: BitLinear,
     wo: BitLinear,
-    cache: KvCache,
+    caches: Vec<KvCache>,
     // Scratch (no allocation in the decode path).
     q: Vec<f32>,
     k: Vec<f32>,
     v: Vec<f32>,
     scores: Vec<f32>,
     ctx: Vec<f32>,
+    // Stacked batch scratch (grown on the first batched step).
+    qb: Vec<f32>,
+    kb: Vec<f32>,
+    vb: Vec<f32>,
+    ctxb: Vec<f32>,
 }
 
 impl Attention {
@@ -46,23 +55,54 @@ impl Attention {
             wk,
             wv,
             wo,
-            cache: KvCache::new(cfg.max_seq_len, kv_dim),
+            caches: vec![KvCache::new(cfg.max_seq_len, kv_dim)],
             q: vec![0.0; cfg.n_heads * cfg.head_dim()],
             k: vec![0.0; kv_dim],
             v: vec![0.0; kv_dim],
             scores: vec![0.0; cfg.max_seq_len],
             ctx: vec![0.0; cfg.n_heads * cfg.head_dim()],
+            qb: Vec::new(),
+            kb: Vec::new(),
+            vb: Vec::new(),
+            ctxb: Vec::new(),
         }
     }
 
-    /// Cached sequence length.
+    /// Cached sequence length (slot 0 — the single-sequence path).
     pub fn seq_len(&self) -> usize {
-        self.cache.len()
+        self.caches[0].len()
     }
 
-    /// Clear the KV cache for a new sequence.
+    /// KV slots currently allocated (≥ 1).
+    pub fn slots(&self) -> usize {
+        self.caches.len()
+    }
+
+    /// Grow to at least `n` per-slot KV caches. Existing slots keep
+    /// their cached state; new slots start empty.
+    pub fn ensure_slots(&mut self, n: usize) {
+        let (cap, kv_dim) = (self.caches[0].capacity(), self.k.len());
+        while self.caches.len() < n {
+            self.caches.push(KvCache::new(cap, kv_dim));
+        }
+    }
+
+    /// Cached sequence length of one slot.
+    pub fn seq_len_slot(&self, slot: usize) -> usize {
+        self.caches[slot].len()
+    }
+
+    /// Clear one slot's KV cache for a new sequence (slot reuse in the
+    /// continuous-batching engine).
+    pub fn reset_slot(&mut self, slot: usize) {
+        self.caches[slot].reset();
+    }
+
+    /// Clear every slot's KV cache.
     pub fn reset(&mut self) {
-        self.cache.reset();
+        for c in &mut self.caches {
+            c.reset();
+        }
     }
 
     /// Bytes held by prepared weights (all four projections).
@@ -75,6 +115,7 @@ impl Attention {
 
     /// Decode-step forward: attend the normalized hidden `x` at
     /// position `pos` against everything cached so far (causal).
+    /// Single-sequence path — uses slot 0's cache.
     pub fn forward(&mut self, x: &[f32], pos: usize, rope: &Rope, out: &mut [f32]) -> Result<()> {
         self.wq.forward(x, &mut self.q)?;
         self.wk.forward(x, &mut self.k)?;
@@ -82,9 +123,10 @@ impl Attention {
 
         rope.apply_heads(&mut self.q, pos);
         rope.apply_heads(&mut self.k, pos);
-        self.cache.append(&self.k, &self.v)?;
+        let cache = &mut self.caches[0];
+        cache.append(&self.k, &self.v)?;
 
-        let t = self.cache.len(); // positions 0..t-1 (inclusive of current)
+        let t = cache.len(); // positions 0..t-1 (inclusive of current)
         let hd = self.head_dim;
         let group = self.n_heads / self.n_kv_heads;
         let scale = 1.0 / (hd as f32).sqrt();
@@ -94,7 +136,7 @@ impl Attention {
             let qh = &self.q[h * hd..(h + 1) * hd];
             let scores = &mut self.scores[..t];
             for (p, s) in scores.iter_mut().enumerate() {
-                let krow = self.cache.key(p);
+                let krow = cache.key(p);
                 let kh = &krow[kv_h * hd..(kv_h + 1) * hd];
                 *s = qh.iter().zip(kh.iter()).map(|(a, b)| a * b).sum::<f32>() * scale;
             }
@@ -102,7 +144,7 @@ impl Attention {
             let ctx_h = &mut self.ctx[h * hd..(h + 1) * hd];
             ctx_h.fill(0.0);
             for (p, &w) in scores.iter().enumerate() {
-                let vrow = self.cache.value(p);
+                let vrow = cache.value(p);
                 let vh = &vrow[kv_h * hd..(kv_h + 1) * hd];
                 for (c, &vv) in ctx_h.iter_mut().zip(vh.iter()) {
                     *c += w * vv;
@@ -110,6 +152,84 @@ impl Attention {
             }
         }
         self.wo.forward(&self.ctx, out)
+    }
+
+    /// Lockstep decode forward over the live slots: row `i` of `xs`
+    /// (row-major `slots.len() × d_model`, already normed) is one
+    /// decode step for slot `slots[i]` at that slot's own position.
+    ///
+    /// The Q/K/V/O projections run **batched** — the shared plan index
+    /// is read once per step instead of once per slot, the win the
+    /// batched RSR kernels exist for. RoPE, the cache append and the
+    /// attention reduction are inherently per-slot (each slot attends
+    /// its own cache at its own length) and loop over rows with exactly
+    /// the arithmetic of [`forward`](Self::forward).
+    pub fn forward_batch(
+        &mut self,
+        xs: &[f32],
+        slots: &[usize],
+        rope: &Rope,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let b = slots.len();
+        let q_dim = self.n_heads * self.head_dim;
+        let kv_dim = self.k.len();
+        if let Some(&max) = slots.iter().max() {
+            // Same slot cap as the transformer: each slot is a full KV
+            // cache, so a wild index fails instead of overflowing
+            // `max + 1` or allocating without bound.
+            if max >= super::transformer::MAX_SLOTS {
+                return Err(crate::error::Error::Config(format!(
+                    "forward_batch: slot {max} exceeds the slot cap {}",
+                    super::transformer::MAX_SLOTS
+                )));
+            }
+            self.ensure_slots(max + 1);
+        }
+        ensure_len(&mut self.qb, b * q_dim);
+        ensure_len(&mut self.kb, b * kv_dim);
+        ensure_len(&mut self.vb, b * kv_dim);
+        ensure_len(&mut self.ctxb, b * q_dim);
+        self.wq.forward_batch(xs, b, &mut self.qb[..b * q_dim])?;
+        self.wk.forward_batch(xs, b, &mut self.kb[..b * kv_dim])?;
+        self.wv.forward_batch(xs, b, &mut self.vb[..b * kv_dim])?;
+
+        for (i, &slot) in slots.iter().enumerate() {
+            let pos = self.caches[slot].len();
+            rope.apply_heads(&mut self.qb[i * q_dim..(i + 1) * q_dim], pos);
+            rope.apply_heads(&mut self.kb[i * kv_dim..(i + 1) * kv_dim], pos);
+            self.caches[slot].append(
+                &self.kb[i * kv_dim..(i + 1) * kv_dim],
+                &self.vb[i * kv_dim..(i + 1) * kv_dim],
+            )?;
+        }
+
+        let hd = self.head_dim;
+        let group = self.n_heads / self.n_kv_heads;
+        let scale = 1.0 / (hd as f32).sqrt();
+        for (i, &slot) in slots.iter().enumerate() {
+            let cache = &self.caches[slot];
+            let t = cache.len();
+            for h in 0..self.n_heads {
+                let kv_h = h / group;
+                let qh = &self.qb[i * q_dim + h * hd..i * q_dim + (h + 1) * hd];
+                let scores = &mut self.scores[..t];
+                for (p, s) in scores.iter_mut().enumerate() {
+                    let kh = &cache.key(p)[kv_h * hd..(kv_h + 1) * hd];
+                    *s = qh.iter().zip(kh.iter()).map(|(a, b)| a * b).sum::<f32>() * scale;
+                }
+                softmax(scores);
+                let ctx_h = &mut self.ctxb[i * q_dim + h * hd..i * q_dim + (h + 1) * hd];
+                ctx_h.fill(0.0);
+                for (p, &w) in scores.iter().enumerate() {
+                    let vh = &cache.value(p)[kv_h * hd..(kv_h + 1) * hd];
+                    for (c, &vv) in ctx_h.iter_mut().zip(vh.iter()) {
+                        *c += w * vv;
+                    }
+                }
+            }
+        }
+        self.wo.forward_batch(&self.ctxb[..b * q_dim], b, out)
     }
 }
 

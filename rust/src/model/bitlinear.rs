@@ -42,8 +42,14 @@ enum Prepared {
     /// A store-shared RSR++ plan: the index lives behind an `Arc`
     /// (built once per process by a
     /// [`PlanStore`](crate::runtime::PlanStore)), only the scratch is
-    /// owned by this layer instance.
-    Shared { plan: Arc<SharedTernaryPlan>, scratch: PlanScratch },
+    /// owned by this layer instance. `batched` is the batched-decode
+    /// executor, built on the first [`BitLinear::forward_batch`] call —
+    /// sequential deployments never allocate it.
+    Shared {
+        plan: Arc<SharedTernaryPlan>,
+        scratch: PlanScratch,
+        batched: Option<crate::kernels::batched::BatchedExec>,
+    },
     /// A store-shared plan executing a **tuned** backend choice (an
     /// `rsr tune` profile winner) through
     /// [`ExecutablePlan`](crate::runtime::ExecutablePlan).
@@ -109,7 +115,7 @@ impl BitLinear {
             out_dim,
             scale,
             backend: Backend::RsrPlusPlus,
-            prepared: Prepared::Shared { plan, scratch },
+            prepared: Prepared::Shared { plan, scratch, batched: None },
         }
     }
 
@@ -199,8 +205,63 @@ impl BitLinear {
             Prepared::Parallel(plan) => plan.execute(x, out)?,
             Prepared::Tensorized(t) => t.execute(x, out)?,
             Prepared::Fused(plan) => plan.execute(x, out)?,
-            Prepared::Shared { plan, scratch } => plan.execute(scratch, x, out)?,
+            Prepared::Shared { plan, scratch, .. } => plan.execute(scratch, x, out)?,
             Prepared::Tuned(exec) => exec.execute(x, out)?,
+        }
+        if self.scale != 1.0 {
+            for o in out.iter_mut() {
+                *o *= self.scale;
+            }
+        }
+        Ok(())
+    }
+
+    /// Batched forward: `out[b] = (vs[b] · W) · β` for a row-major
+    /// `batch × in_dim` activation block (`out` is `batch × out_dim`) —
+    /// the continuous-batching hot path.
+    ///
+    /// Store-shared and tuned layers dispatch to the batched flat-plan
+    /// kernel, which reads the shared index once per **batch** instead
+    /// of once per row; per row the kernel performs the identical f32
+    /// addition sequence at every batch size, so a sequence's output
+    /// never depends on its batchmates (ragged batches and mid-flight
+    /// joins are exact). Owned backends, which have no batched kernel,
+    /// execute row by row through [`forward`](Self::forward) —
+    /// bit-identical to the sequential path, just without the index
+    /// amortization.
+    pub fn forward_batch(&mut self, vs: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
+        if batch == 0
+            || vs.len() != batch * self.in_dim
+            || out.len() != batch * self.out_dim
+        {
+            return Err(crate::error::Error::ShapeMismatch(format!(
+                "forward_batch: batch {batch}, vs len {}, out len {} for a {}x{} layer",
+                vs.len(),
+                out.len(),
+                self.in_dim,
+                self.out_dim
+            )));
+        }
+        if !matches!(self.prepared, Prepared::Shared { .. } | Prepared::Tuned(_)) {
+            for b in 0..batch {
+                // `forward` applies β per row.
+                self.forward(
+                    &vs[b * self.in_dim..(b + 1) * self.in_dim],
+                    &mut out[b * self.out_dim..(b + 1) * self.out_dim],
+                )?;
+            }
+            return Ok(());
+        }
+        match &mut self.prepared {
+            Prepared::Shared { plan, batched, .. } => {
+                if batched.is_none() {
+                    *batched = Some(plan.batch_exec(batch)?);
+                }
+                let exec = batched.as_mut().expect("created above");
+                plan.execute_batch(exec, vs, batch, out)?;
+            }
+            Prepared::Tuned(exec) => exec.execute_batch(vs, batch, out)?,
+            _ => unreachable!("owned backends took the per-row path above"),
         }
         if self.scale != 1.0 {
             for o in out.iter_mut() {
@@ -312,6 +373,54 @@ mod tests {
             layer.forward(&x, &mut got).unwrap();
             assert_eq!(got, expect, "{}", backend.name());
         }
+    }
+
+    #[test]
+    fn forward_batch_agrees_with_forward_on_every_path() {
+        let mut rng = Rng::new(193);
+        let w = TernaryMatrix::random(80, 56, 1.0 / 3.0, &mut rng);
+        let batch = 3;
+        // Integer activations: every backend must agree exactly.
+        let vs = rng.int_f32_vec(batch * 80, 2);
+        let plan =
+            Arc::new(SharedTernaryPlan::new(TernaryRsrIndex::preprocess(&w, 4)).unwrap());
+
+        let mut layers: Vec<(&str, BitLinear)> = vec![
+            ("owned-std", BitLinear::new(w.clone(), 0.5, Backend::Standard, 4).unwrap()),
+            ("owned-rsr++", BitLinear::new(w.clone(), 0.5, Backend::RsrPlusPlus, 4).unwrap()),
+            ("shared", BitLinear::from_shared(Arc::clone(&plan), 0.5)),
+        ];
+        for backend in TunedBackend::ALL {
+            let entry = PlanEntry {
+                name: "l".into(),
+                k: 4,
+                scale: 0.5,
+                weights_fp: 0,
+                tuned: Some(crate::tune::profile::LayerChoice { backend, k: 4, ns: 1.0 }),
+                plan: crate::runtime::plan_store::PlanKind::Ternary(Arc::clone(&plan)),
+            };
+            layers.push(("tuned", BitLinear::from_plan_entry(&entry, 0.5).unwrap()));
+        }
+        for (name, layer) in &mut layers {
+            let mut batched = vec![0.0; batch * 56];
+            layer.forward_batch(&vs, batch, &mut batched).unwrap();
+            for b in 0..batch {
+                let mut row = vec![0.0; 56];
+                layer.forward(&vs[b * 80..(b + 1) * 80], &mut row).unwrap();
+                assert_eq!(&batched[b * 56..(b + 1) * 56], &row[..], "{name} row {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_batch_rejects_bad_shapes() {
+        let mut rng = Rng::new(197);
+        let w = TernaryMatrix::random(32, 16, 1.0 / 3.0, &mut rng);
+        let mut layer = BitLinear::new(w, 1.0, Backend::RsrPlusPlus, 3).unwrap();
+        let mut out = vec![0.0; 2 * 16];
+        assert!(layer.forward_batch(&[0.0; 64], 0, &mut out).is_err());
+        assert!(layer.forward_batch(&[0.0; 63], 2, &mut out).is_err());
+        assert!(layer.forward_batch(&[0.0; 64], 2, &mut [0.0; 31]).is_err());
     }
 
     #[test]

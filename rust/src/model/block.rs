@@ -4,7 +4,7 @@ use super::attention::Attention;
 use super::mlp::Mlp;
 use super::rmsnorm::RmsNorm;
 use super::rope::Rope;
-use super::tensor::add_assign;
+use super::tensor::{add_assign, ensure_len};
 use crate::error::Result;
 
 /// A decoder block.
@@ -16,23 +16,55 @@ pub struct Block {
     // Scratch.
     normed: Vec<f32>,
     branch: Vec<f32>,
+    // Stacked batch scratch (grown on the first batched step).
+    normed_b: Vec<f32>,
+    branch_b: Vec<f32>,
 }
 
 impl Block {
     /// Assemble a block.
     pub fn new(attn_norm: RmsNorm, attn: Attention, mlp_norm: RmsNorm, mlp: Mlp) -> Self {
         let d = attn_norm.dim();
-        Self { attn_norm, attn, mlp_norm, mlp, normed: vec![0.0; d], branch: vec![0.0; d] }
+        Self {
+            attn_norm,
+            attn,
+            mlp_norm,
+            mlp,
+            normed: vec![0.0; d],
+            branch: vec![0.0; d],
+            normed_b: Vec::new(),
+            branch_b: Vec::new(),
+        }
     }
 
-    /// Clear the attention KV cache.
+    /// Clear every slot's KV cache.
     pub fn reset(&mut self) {
         self.attn.reset();
     }
 
-    /// Cached sequence length.
+    /// Cached sequence length (slot 0).
     pub fn seq_len(&self) -> usize {
         self.attn.seq_len()
+    }
+
+    /// KV slots currently allocated.
+    pub fn slots(&self) -> usize {
+        self.attn.slots()
+    }
+
+    /// Grow to at least `n` KV slots.
+    pub fn ensure_slots(&mut self, n: usize) {
+        self.attn.ensure_slots(n);
+    }
+
+    /// Cached sequence length of one slot.
+    pub fn seq_len_slot(&self, slot: usize) -> usize {
+        self.attn.seq_len_slot(slot)
+    }
+
+    /// Clear one slot's KV cache.
+    pub fn reset_slot(&mut self, slot: usize) {
+        self.attn.reset_slot(slot);
     }
 
     /// Bytes held by prepared weights.
@@ -49,6 +81,41 @@ impl Block {
         self.mlp_norm.forward(h, &mut self.normed);
         self.mlp.forward(&self.normed, &mut self.branch)?;
         add_assign(h, &self.branch);
+        Ok(())
+    }
+
+    /// Lockstep residual update of the stacked hidden states `hs`
+    /// (row-major `slots.len() × d`, row `i` belongs to slot
+    /// `slots[i]`). Norms and residual adds are per-row (identical
+    /// arithmetic to [`forward`](Self::forward)); the `BitLinear`
+    /// projections inside attention and the MLP run batched.
+    pub fn forward_batch(&mut self, hs: &mut [f32], slots: &[usize], rope: &Rope) -> Result<()> {
+        let b = slots.len();
+        let d = self.attn_norm.dim();
+        debug_assert_eq!(hs.len(), b * d);
+        ensure_len(&mut self.normed_b, b * d);
+        ensure_len(&mut self.branch_b, b * d);
+        for i in 0..b {
+            self.attn_norm
+                .forward(&hs[i * d..(i + 1) * d], &mut self.normed_b[i * d..(i + 1) * d]);
+        }
+        self.attn.forward_batch(
+            &self.normed_b[..b * d],
+            slots,
+            rope,
+            &mut self.branch_b[..b * d],
+        )?;
+        for i in 0..b {
+            add_assign(&mut hs[i * d..(i + 1) * d], &self.branch_b[i * d..(i + 1) * d]);
+        }
+        for i in 0..b {
+            self.mlp_norm
+                .forward(&hs[i * d..(i + 1) * d], &mut self.normed_b[i * d..(i + 1) * d]);
+        }
+        self.mlp.forward_batch(&self.normed_b[..b * d], b, &mut self.branch_b[..b * d])?;
+        for i in 0..b {
+            add_assign(&mut hs[i * d..(i + 1) * d], &self.branch_b[i * d..(i + 1) * d]);
+        }
         Ok(())
     }
 }

@@ -3,7 +3,7 @@
 //! speedup shows most (paper Fig 6 dims `2^11..2^13` are FFN widths).
 
 use super::bitlinear::BitLinear;
-use super::tensor::silu;
+use super::tensor::{ensure_len, silu};
 use crate::error::Result;
 
 /// `down( silu(gate(x)) ⊙ up(x) )`.
@@ -14,6 +14,9 @@ pub struct Mlp {
     // Scratch.
     g: Vec<f32>,
     u: Vec<f32>,
+    // Stacked batch scratch (grown on the first batched step).
+    gb: Vec<f32>,
+    ub: Vec<f32>,
 }
 
 impl Mlp {
@@ -22,7 +25,15 @@ impl Mlp {
         let d_ff = gate.out_dim();
         debug_assert_eq!(up.out_dim(), d_ff);
         debug_assert_eq!(down.in_dim(), d_ff);
-        Self { gate, up, down, g: vec![0.0; d_ff], u: vec![0.0; d_ff] }
+        Self {
+            gate,
+            up,
+            down,
+            g: vec![0.0; d_ff],
+            u: vec![0.0; d_ff],
+            gb: Vec::new(),
+            ub: Vec::new(),
+        }
     }
 
     /// Bytes held by prepared weights.
@@ -38,6 +49,25 @@ impl Mlp {
             *g = silu(*g) * u;
         }
         self.down.forward(&self.g, out)
+    }
+
+    /// Forward a stacked batch (row-major `batch × d`). The three
+    /// projections — the model's largest matrices, where batching the
+    /// index reads pays most — run batched; the SwiGLU gating is
+    /// elementwise and identical to [`forward`](Self::forward).
+    pub fn forward_batch(&mut self, xs: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
+        let d_ff = self.gate.out_dim();
+        ensure_len(&mut self.gb, batch * d_ff);
+        ensure_len(&mut self.ub, batch * d_ff);
+        self.gate.forward_batch(xs, batch, &mut self.gb[..batch * d_ff])?;
+        self.up.forward_batch(xs, batch, &mut self.ub[..batch * d_ff])?;
+        for (g, &u) in self.gb[..batch * d_ff]
+            .iter_mut()
+            .zip(self.ub[..batch * d_ff].iter())
+        {
+            *g = silu(*g) * u;
+        }
+        self.down.forward_batch(&self.gb[..batch * d_ff], batch, out)
     }
 }
 

@@ -49,6 +49,15 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     a.iter().zip(b.iter()).map(|(x, y)| x * y).sum()
 }
 
+/// Grow `v` to at least `n` elements (zero-filled). The batched decode
+/// path sizes its stacked-activation scratch with this: buffers only
+/// ever grow, so steady-state steps allocate nothing.
+pub(crate) fn ensure_len(v: &mut Vec<f32>, n: usize) {
+    if v.len() < n {
+        v.resize(n, 0.0);
+    }
+}
+
 /// Index of the maximum element (greedy decoding).
 pub fn argmax(xs: &[f32]) -> usize {
     xs.iter()

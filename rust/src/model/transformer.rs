@@ -15,7 +15,19 @@ use crate::error::{Error, Result};
 use crate::kernels::Backend;
 use crate::util::rng::Rng;
 
+/// Cap on decode-slot indices: each slot owns a full per-layer KV
+/// cache, so an arbitrary index must fail cleanly instead of
+/// allocating without bound (or wrapping `max + 1` in release builds).
+pub const MAX_SLOTS: usize = 1 << 16;
+
 /// A ready-to-run model instance: prepared weights on one backend.
+///
+/// Decoding has two entry points: [`forward_token`](Self::forward_token)
+/// (one sequence, slot 0 — the paper's §5.3 single-vector setting) and
+/// [`forward_batch`](Self::forward_batch) (continuous batched decode:
+/// `B` sequences stepped in lockstep against per-slot KV caches, every
+/// `BitLinear` reading its shared plan index once per step instead of
+/// once per sequence).
 pub struct Transformer {
     config: ModelConfig,
     backend: Backend,
@@ -27,6 +39,10 @@ pub struct Transformer {
     // Scratch.
     hidden: Vec<f32>,
     logits: Vec<f32>,
+    // Stacked batch scratch (grown on the first batched step).
+    hidden_b: Vec<f32>,
+    normed_b: Vec<f32>,
+    batch_logits: Vec<f32>,
 }
 
 impl Transformer {
@@ -66,6 +82,9 @@ impl Transformer {
             rope,
             hidden: vec![0.0; cfg.d_model],
             logits: vec![0.0; cfg.vocab_size],
+            hidden_b: Vec::new(),
+            normed_b: Vec::new(),
+            batch_logits: Vec::new(),
             blocks,
             backend,
             config: cfg,
@@ -175,6 +194,9 @@ impl Transformer {
             rope,
             hidden: vec![0.0; cfg.d_model],
             logits: vec![0.0; cfg.vocab_size],
+            hidden_b: Vec::new(),
+            normed_b: Vec::new(),
+            batch_logits: Vec::new(),
             blocks,
             backend: Backend::RsrPlusPlus,
             config: cfg,
@@ -191,9 +213,37 @@ impl Transformer {
         self.backend
     }
 
-    /// Current decoded length (KV cache fill).
+    /// Current decoded length (KV cache fill, slot 0).
     pub fn seq_len(&self) -> usize {
         self.blocks.first().map_or(0, |b| b.seq_len())
+    }
+
+    /// KV slots currently allocated (≥ 1; slot 0 is the
+    /// single-sequence path every existing API uses).
+    pub fn slots(&self) -> usize {
+        self.blocks.first().map_or(1, |b| b.slots())
+    }
+
+    /// Grow every layer to at least `n` KV slots. Existing slots keep
+    /// their cached state; new slots start empty. Cost is KV-cache
+    /// memory only — weights and plan indices stay shared.
+    pub fn ensure_slots(&mut self, n: usize) {
+        for b in &mut self.blocks {
+            b.ensure_slots(n);
+        }
+    }
+
+    /// Decoded length of one slot.
+    pub fn seq_len_slot(&self, slot: usize) -> usize {
+        self.blocks.first().map_or(0, |b| b.seq_len_slot(slot))
+    }
+
+    /// Clear one slot's KV caches for a new sequence (slot reuse in the
+    /// continuous-batching engine; other slots are untouched).
+    pub fn reset_slot(&mut self, slot: usize) {
+        for b in &mut self.blocks {
+            b.reset_slot(slot);
+        }
     }
 
     /// Total prepared-weight bytes (Fig 5 at the model level).
@@ -212,7 +262,7 @@ impl Transformer {
         &self.logits
     }
 
-    /// Reset all KV caches for a new sequence.
+    /// Reset all KV caches (every slot) for a new sequence.
     pub fn reset(&mut self) {
         for b in &mut self.blocks {
             b.reset();
@@ -239,6 +289,87 @@ impl Transformer {
         self.final_norm.forward(&self.hidden, &mut normed);
         self.lm_head.forward(&normed, &mut self.logits)?;
         Ok(&self.logits)
+    }
+
+    /// One **lockstep decode step** over a ragged batch of live slots:
+    /// feed `tokens[i]` to slot `slots[i]` at that slot's own position,
+    /// and return the stacked logits (row-major `tokens.len() ×
+    /// vocab_size`, row `i` belonging to slot `slots[i]`).
+    ///
+    /// This is the continuous-batching hot path: every `BitLinear`
+    /// executes the batched flat-plan kernel, reading its shared index
+    /// once per step instead of once per sequence. Per row that kernel
+    /// performs the identical f32 addition sequence at every batch
+    /// size, so a slot's logits are **independent of its batchmates** —
+    /// sequences joining or retiring mid-flight never perturb the
+    /// others, which is what makes ragged batches and mid-flight joins
+    /// safe to serve.
+    ///
+    /// Slots must be distinct within one step (each appends one KV
+    /// position). Everything is validated before any cache is touched,
+    /// so a failed call leaves no partial state behind. Slots beyond
+    /// the allocated count are grown on demand
+    /// ([`ensure_slots`](Self::ensure_slots)).
+    pub fn forward_batch(&mut self, tokens: &[u32], slots: &[usize]) -> Result<&[f32]> {
+        let b = tokens.len();
+        if b == 0 || b != slots.len() {
+            return Err(Error::Config(format!(
+                "forward_batch: {b} tokens for {} slots",
+                slots.len()
+            )));
+        }
+        for (i, &s) in slots.iter().enumerate() {
+            // Bound before growing: slots allocate a full KV cache
+            // each, so a wild index must be a clean error, not an
+            // overflow panic or an OOM abort.
+            if s >= MAX_SLOTS {
+                return Err(Error::Config(format!(
+                    "forward_batch: slot {s} exceeds the slot cap {MAX_SLOTS}"
+                )));
+            }
+            if slots[..i].contains(&s) {
+                return Err(Error::Config(format!(
+                    "forward_batch: slot {s} appears twice in one step"
+                )));
+            }
+        }
+        if let Some(&max) = slots.iter().max() {
+            self.ensure_slots(max + 1);
+        }
+        // Validate every row up front: a failure here must leave no
+        // partial KV appends behind.
+        for (&t, &s) in tokens.iter().zip(slots.iter()) {
+            if t as usize >= self.config.vocab_size {
+                return Err(Error::Config(format!("token {t} out of vocab")));
+            }
+            if self.seq_len_slot(s) >= self.config.max_seq_len {
+                return Err(Error::Serving(format!(
+                    "slot {s}: sequence exceeds max_seq_len"
+                )));
+            }
+        }
+        let d = self.config.d_model;
+        super::tensor::ensure_len(&mut self.hidden_b, b * d);
+        for (i, &t) in tokens.iter().enumerate() {
+            let t = t as usize;
+            self.hidden_b[i * d..(i + 1) * d]
+                .copy_from_slice(&self.embedding[t * d..(t + 1) * d]);
+        }
+        for block in &mut self.blocks {
+            block.forward_batch(&mut self.hidden_b[..b * d], slots, &self.rope)?;
+        }
+        super::tensor::ensure_len(&mut self.normed_b, b * d);
+        for i in 0..b {
+            self.final_norm.forward(
+                &self.hidden_b[i * d..(i + 1) * d],
+                &mut self.normed_b[i * d..(i + 1) * d],
+            );
+        }
+        let v = self.config.vocab_size;
+        super::tensor::ensure_len(&mut self.batch_logits, b * v);
+        self.lm_head
+            .forward_batch(&self.normed_b[..b * d], b, &mut self.batch_logits[..b * v])?;
+        Ok(&self.batch_logits[..b * v])
     }
 
     /// Feed a prompt (prefill) and greedily decode `max_new` tokens.
@@ -372,6 +503,24 @@ mod tests {
         assert_eq!(m.seq_len(), 2);
         m.reset();
         assert_eq!(m.seq_len(), 0);
+    }
+
+    #[test]
+    fn forward_batch_rejects_malformed_steps() {
+        let w = tiny_weights();
+        let mut m = Transformer::from_weights(&w, Backend::Standard, 0).unwrap();
+        // Wild slot indices fail cleanly — no wrap, no unbounded alloc.
+        assert!(m.forward_batch(&[1], &[usize::MAX]).is_err());
+        assert!(m.forward_batch(&[1], &[MAX_SLOTS]).is_err());
+        // Duplicate slots, empty steps, length mismatch, bad token.
+        assert!(m.forward_batch(&[1, 2], &[0, 0]).is_err());
+        assert!(m.forward_batch(&[], &[]).is_err());
+        assert!(m.forward_batch(&[1, 2], &[0]).is_err());
+        assert!(m.forward_batch(&[999_999], &[0]).is_err());
+        // A failed call left no partial state; a valid step still runs.
+        assert_eq!(m.seq_len_slot(0), 0);
+        assert!(m.forward_batch(&[1], &[1]).is_ok());
+        assert_eq!(m.seq_len_slot(1), 1);
     }
 
     #[test]

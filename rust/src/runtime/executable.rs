@@ -40,6 +40,11 @@ pub struct ExecutablePlan {
     plan: Arc<SharedTernaryPlan>,
     backend: TunedBackend,
     state: ExecState,
+    /// Lazily-built batched executor for [`execute_batch`]
+    /// (`Self::execute_batch`) on backends whose single-vector state is
+    /// not already batched. `None` until the first batched call — a
+    /// purely sequential deployment pays nothing for it.
+    batch_exec: Option<BatchedExec>,
 }
 
 impl std::fmt::Debug for ExecutablePlan {
@@ -72,7 +77,7 @@ impl ExecutablePlan {
                 ExecState::Batched(BatchedExec::new(plan.rows(), max_u, 1)?)
             }
         };
-        Ok(Self { plan, backend, state })
+        Ok(Self { plan, backend, state, batch_exec: None })
     }
 
     /// The backend this executor dispatches to.
@@ -127,6 +132,27 @@ impl ExecutablePlan {
             // exhaustive for what it constructs.
             (ExecState::Scratch(_), _) => unreachable!("scratch state with {:?}", self.backend),
         }
+    }
+
+    /// `out[b] = vs[b] · A` for a row-major `batch × rows` activation
+    /// block — the continuous-batching hot path. Every tuned backend
+    /// dispatches to the **batched** flat kernel here, whatever its
+    /// single-vector winner: per row that kernel performs the identical
+    /// f32 addition sequence at every batch size, so a sequence's
+    /// logits never change when batchmates join or retire (the
+    /// invariant ragged batches rely on). The tuned winner keeps
+    /// governing [`execute`](Self::execute), which strictly-sequential
+    /// deployments (`max_slots == 1`) still serve.
+    pub fn execute_batch(&mut self, vs: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
+        if !matches!(self.state, ExecState::Batched(_)) && self.batch_exec.is_none() {
+            self.batch_exec = Some(self.plan.batch_exec(batch)?);
+        }
+        let exec = match &mut self.state {
+            ExecState::Batched(e) => e,
+            _ => self.batch_exec.as_mut().expect("created above"),
+        };
+        exec.ensure_batch(batch);
+        exec.execute_ternary(self.plan.plus_flat(), self.plan.minus_flat(), vs, batch, out)
     }
 }
 
@@ -202,6 +228,48 @@ mod tests {
         let mut got = vec![0.0f32; 40];
         exec.execute(&v, &mut got).unwrap();
         assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn execute_batch_is_bit_exact_vs_sequential_on_integer_activations() {
+        // The batched-decode acceptance property: on integer-valued
+        // activations (every intermediate sum exactly representable),
+        // the batched path must agree to the last bit with the tuned
+        // single-vector path — for EVERY selectable backend.
+        let (a, plan) = shared_plan(88, 52, 4, 908);
+        let mut rng = Rng::new(909);
+        let batch = 4;
+        let vs = rng.int_f32_vec(batch * 88, 3);
+        for backend in TunedBackend::ALL {
+            let mut exec = ExecutablePlan::new(Arc::clone(&plan), backend).unwrap();
+            let mut batched = vec![0.0f32; batch * 52];
+            exec.execute_batch(&vs, batch, &mut batched).unwrap();
+            for bi in 0..batch {
+                let row = &vs[bi * 88..(bi + 1) * 88];
+                let mut seq = vec![0.0f32; 52];
+                exec.execute(row, &mut seq).unwrap();
+                assert_eq!(&batched[bi * 52..(bi + 1) * 52], &seq[..], "{}", backend.name());
+                assert_eq!(seq, standard_mul_ternary(row, &a), "{}", backend.name());
+            }
+        }
+    }
+
+    #[test]
+    fn execute_batch_rows_are_independent_of_batchmates() {
+        // Float activations: row bi in a batch of 4 must be
+        // bit-identical to the same row executed alone through the
+        // batched path (ragged-batch invariance).
+        let (_, plan) = shared_plan(64, 48, 4, 910);
+        let mut rng = Rng::new(911);
+        let vs = rng.f32_vec(4 * 64, -1.0, 1.0);
+        let mut exec = ExecutablePlan::new(Arc::clone(&plan), TunedBackend::RsrPlusPlus).unwrap();
+        let mut full = vec![0.0f32; 4 * 48];
+        exec.execute_batch(&vs, 4, &mut full).unwrap();
+        for bi in 0..4 {
+            let mut solo = vec![0.0f32; 48];
+            exec.execute_batch(&vs[bi * 64..(bi + 1) * 64], 1, &mut solo).unwrap();
+            assert_eq!(&full[bi * 48..(bi + 1) * 48], &solo[..], "row {bi}");
+        }
     }
 
     #[test]

@@ -39,6 +39,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::error::{Error, Result};
 use crate::kernels::artifact::{ternary_fingerprint, ArtifactPayload, PlanArtifact};
+use crate::kernels::batched::BatchedExec;
 use crate::kernels::flat::{
     execute_rsr_flat, execute_rsrpp_flat, execute_rsrpp_flat_scalar, FlatPlan,
     TernaryFlatPlan,
@@ -282,6 +283,34 @@ impl SharedTernaryPlan {
         out: &mut [f32],
     ) -> Result<()> {
         self.execute_with(scratch, v, out, SharedRsrPlan::execute_rsr)
+    }
+
+    /// A batched executor sized for this plan, accepting batches up to
+    /// `max_batch` rows — the per-instance scratch of the batched
+    /// serving path, analogous to [`scratch`](Self::scratch) for the
+    /// single-vector one.
+    pub fn batch_exec(&self, max_batch: usize) -> Result<BatchedExec> {
+        let max_u = self.plus.flat.max_u().max(self.minus.flat.max_u());
+        BatchedExec::new(self.rows(), max_u, max_batch)
+    }
+
+    /// `out[b] = vs[b] · A` for every row of a row-major `batch × rows`
+    /// activation block (`out` is `batch × cols`): the batched decode
+    /// hot path, reading the shared index once per **batch** instead of
+    /// once per vector (see [`crate::kernels::batched`]). Per row the
+    /// kernel performs the identical f32 addition sequence at every
+    /// batch size, so a row's result never depends on its batchmates.
+    /// The executor's batch ceiling is raised to `batch` automatically
+    /// (continuous batching grows the live-slot count mid-flight).
+    pub fn execute_batch(
+        &self,
+        exec: &mut BatchedExec,
+        vs: &[f32],
+        batch: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        exec.ensure_batch(batch);
+        exec.execute_ternary(self.plus_flat(), self.minus_flat(), vs, batch, out)
     }
 }
 
@@ -740,6 +769,33 @@ mod tests {
             .collect();
         for h in handles {
             assert_eq!(h.join().unwrap(), expect);
+        }
+    }
+
+    #[test]
+    fn shared_execute_batch_matches_per_vector_rows() {
+        let (a, shared) = sample_plan(72, 44, 4, 410);
+        let mut rng = Rng::new(411);
+        let batch = 3;
+        let vs = rng.f32_vec(batch * 72, -1.0, 1.0);
+        let mut exec = shared.batch_exec(1).unwrap(); // grows to 3 per call
+        let mut out = vec![0.0; batch * 44];
+        shared.execute_batch(&mut exec, &vs, batch, &mut out).unwrap();
+        for bi in 0..batch {
+            let expect = crate::kernels::standard::standard_mul_ternary(
+                &vs[bi * 72..(bi + 1) * 72],
+                &a,
+            );
+            for (g, e) in out[bi * 44..(bi + 1) * 44].iter().zip(expect.iter()) {
+                assert!((g - e).abs() < 1e-3 * (1.0 + e.abs()), "row {bi}: {g} vs {e}");
+            }
+            // Bit-identical to the same row executed alone — the
+            // batch-size invariance ragged serving depends on.
+            let mut solo = vec![0.0; 44];
+            shared
+                .execute_batch(&mut exec, &vs[bi * 72..(bi + 1) * 72], 1, &mut solo)
+                .unwrap();
+            assert_eq!(&out[bi * 44..(bi + 1) * 44], &solo[..]);
         }
     }
 

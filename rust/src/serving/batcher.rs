@@ -11,15 +11,22 @@ use super::request::Request;
 /// Batching policy.
 #[derive(Debug, Clone, Copy)]
 pub struct BatchPolicy {
-    /// Maximum requests per batch.
+    /// Maximum requests admitted in one pickup (the initial batch a
+    /// worker blocks for when idle).
     pub max_batch: usize,
     /// Maximum time to wait for the batch to fill.
     pub max_wait: Duration,
+    /// Concurrent decode slots per worker — the continuous-batching
+    /// knob. Each worker steps up to this many sequences in lockstep,
+    /// retiring finished ones and admitting queued requests into free
+    /// slots mid-flight ([`poll`](Batcher::poll)). `1` serves strictly
+    /// sequentially: the exact pre-batching code path, bit-for-bit.
+    pub max_slots: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        Self { max_batch: 8, max_wait: Duration::from_millis(2) }
+        Self { max_batch: 8, max_wait: Duration::from_millis(2), max_slots: 8 }
     }
 }
 
@@ -66,6 +73,17 @@ impl Batcher {
         }
         Some(Batch { requests, formed_at })
     }
+
+    /// Non-blocking top-up for continuous batching: drain up to `max`
+    /// queued requests without waiting. Called every decode step for
+    /// the free slots, so joins never stall the live sequences — an
+    /// empty queue costs one try-lock, not a `max_wait` pause.
+    pub fn poll(&self, max: usize) -> Vec<Request> {
+        if max == 0 {
+            return Vec::new();
+        }
+        self.queue.pop_many(max, Duration::ZERO)
+    }
 }
 
 #[cfg(test)]
@@ -84,7 +102,7 @@ mod tests {
         }
         let b = Batcher::new(
             Arc::clone(&q),
-            BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) },
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10), max_slots: 4 },
         );
         let t0 = Instant::now();
         let batch = b.next_batch(Duration::from_secs(1)).unwrap();
@@ -98,7 +116,7 @@ mod tests {
         q.try_push(req(0)).unwrap();
         let b = Batcher::new(
             Arc::clone(&q),
-            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(20) },
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(20), max_slots: 8 },
         );
         let t0 = Instant::now();
         let batch = b.next_batch(Duration::from_secs(1)).unwrap();
@@ -113,6 +131,23 @@ mod tests {
         let q: Arc<BoundedQueue<Request>> = Arc::new(BoundedQueue::new(4));
         let b = Batcher::new(Arc::clone(&q), BatchPolicy::default());
         assert!(b.next_batch(Duration::from_millis(10)).is_none());
+    }
+
+    #[test]
+    fn poll_drains_without_waiting() {
+        let q = Arc::new(BoundedQueue::new(16));
+        let b = Batcher::new(Arc::clone(&q), BatchPolicy::default());
+        // Empty queue: returns immediately with nothing.
+        let t0 = Instant::now();
+        assert!(b.poll(4).is_empty());
+        assert!(t0.elapsed() < Duration::from_millis(50), "poll must not block");
+        assert!(b.poll(0).is_empty());
+        // Queued requests come back, capped at the free-slot count.
+        for i in 0..5 {
+            q.try_push(req(i)).unwrap();
+        }
+        assert_eq!(b.poll(3).len(), 3);
+        assert_eq!(b.poll(8).len(), 2);
     }
 
     #[test]

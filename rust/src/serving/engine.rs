@@ -147,6 +147,27 @@ impl InferenceEngine {
                         cfg.workers
                     );
                 }
+                // The batched candidate is microbenched at one
+                // synthetic batch size (recorded in the .rsrt header);
+                // an engine decoding at a materially different
+                // occupancy may see a different ranking.
+                let batched_layers = p
+                    .layers
+                    .iter()
+                    .filter(|l| l.winner().backend == TunedBackend::Batched)
+                    .count();
+                let tuned_b = (p.bench_batch as usize).max(1);
+                let slots = cfg.batch.max_slots.max(1);
+                if batched_layers > 0 && slots.max(tuned_b) >= 2 * slots.min(tuned_b) {
+                    eprintln!(
+                        "warning: profile's batched winner ({batched_layers} \
+                         layer(s)) was measured at batch {tuned_b}, but the engine \
+                         decodes with max_slots {slots} — the measured ranking may \
+                         not hold at this occupancy; serve --max-slots {tuned_b} to \
+                         match the measurement, or treat batched winners as \
+                         approximate"
+                    );
+                }
                 Some(p)
             }
         };
@@ -304,6 +325,26 @@ impl InferenceEngine {
 }
 
 fn worker_loop(
+    model: Transformer,
+    queue: Arc<BoundedQueue<Request>>,
+    metrics: Arc<Metrics>,
+    tx: mpsc::Sender<Response>,
+    inflight: Arc<AtomicUsize>,
+    shutdown: Arc<AtomicBool>,
+    cfg: &EngineConfig,
+) {
+    // `max_slots == 1` degrades to the strictly sequential loop — the
+    // exact pre-batching code path, bit for bit. Anything larger runs
+    // continuous batching: a slot map stepped in lockstep, finished
+    // sequences retiring and queued requests joining mid-flight.
+    if cfg.batch.max_slots <= 1 {
+        sequential_loop(model, queue, metrics, tx, inflight, shutdown, cfg);
+    } else {
+        continuous_loop(model, queue, metrics, tx, inflight, shutdown, cfg);
+    }
+}
+
+fn sequential_loop(
     mut model: Transformer,
     queue: Arc<BoundedQueue<Request>>,
     metrics: Arc<Metrics>,
@@ -333,6 +374,220 @@ fn worker_loop(
             inflight.fetch_sub(1, Ordering::Relaxed);
             if tx.send(response).is_err() {
                 return; // receiver dropped — engine gone
+            }
+        }
+    }
+}
+
+/// One live sequence in the continuous-batching slot map.
+struct SlotState {
+    request: Request,
+    /// Next token to feed: `prompt[prompt_pos]` while prefilling, the
+    /// last sampled token while decoding.
+    next_input: u32,
+    /// Prompt tokens consumed so far; `== prompt.len()` once decoding.
+    prompt_pos: usize,
+    /// Generated tokens.
+    tokens: Vec<u32>,
+    picked_up: Instant,
+    /// Set by the step that consumes the final prompt token.
+    prefill_done: Option<Instant>,
+}
+
+/// Retire one sequence: build its response, account it, and send it.
+/// Returns `false` when the response receiver is gone (worker exits).
+fn finish_slot(
+    slot: SlotState,
+    error: Option<String>,
+    metrics: &Metrics,
+    inflight: &AtomicUsize,
+    tx: &mpsc::Sender<Response>,
+) -> bool {
+    let now = Instant::now();
+    let response = match error {
+        Some(msg) => Response::err(slot.request.id, msg),
+        None => {
+            let prefill_end = slot.prefill_done.unwrap_or(now);
+            let timing = Timing {
+                queue: slot.picked_up.duration_since(slot.request.arrival),
+                prefill: prefill_end.duration_since(slot.picked_up),
+                decode: now.duration_since(prefill_end),
+            };
+            Response::ok(slot.request.id, slot.tokens, timing)
+        }
+    };
+    match &response.error {
+        None => metrics.record(&response.timing, response.tokens.len()),
+        Some(_) => metrics.record_failure(),
+    }
+    inflight.fetch_sub(1, Ordering::Relaxed);
+    tx.send(response).is_ok()
+}
+
+/// The continuous-batching worker: a slot map of up to
+/// `cfg.batch.max_slots` sequences stepped in lockstep through
+/// [`Transformer::forward_batch`]. Each step feeds every live slot one
+/// token — prompt tokens for prefilling slots, the last sampled token
+/// for decoding ones — so prefill rides the same batched multiplies as
+/// decode, every layer reading its shared plan index once per step
+/// instead of once per sequence. Finished sequences retire their slot;
+/// queued requests are admitted into free slots between steps without
+/// ever stalling the live ones ([`Batcher::poll`]).
+///
+/// Per-sequence results are independent of batchmates (see
+/// [`Transformer::forward_batch`]), so joins and retirements never
+/// perturb the tokens of in-flight sequences.
+fn continuous_loop(
+    mut model: Transformer,
+    queue: Arc<BoundedQueue<Request>>,
+    metrics: Arc<Metrics>,
+    tx: mpsc::Sender<Response>,
+    inflight: Arc<AtomicUsize>,
+    shutdown: Arc<AtomicBool>,
+    cfg: &EngineConfig,
+) {
+    let max_slots = cfg.batch.max_slots;
+    model.ensure_slots(max_slots);
+    // The idle pickup must never admit more requests than there are
+    // slots to hold them.
+    let policy = BatchPolicy { max_batch: cfg.batch.max_batch.min(max_slots), ..cfg.batch };
+    let batcher = Batcher::new(Arc::clone(&queue), policy);
+    let mut rng = Rng::new(0xC0FFEE);
+    let sampler = Sampler::Greedy;
+    let max_seq = model.config().max_seq_len;
+    let vocab = model.config().vocab_size;
+    let mut slots: Vec<Option<SlotState>> = (0..max_slots).map(|_| None).collect();
+    let mut step_slots: Vec<usize> = Vec::with_capacity(max_slots);
+    let mut step_tokens: Vec<u32> = Vec::with_capacity(max_slots);
+    let mut len_after: Vec<usize> = Vec::with_capacity(max_slots);
+    let mut retired: Vec<usize> = Vec::with_capacity(max_slots);
+    loop {
+        let live = slots.iter().filter(|s| s.is_some()).count();
+        // Admission: block when idle (same idle/shutdown semantics as
+        // the sequential loop); top up free slots without waiting while
+        // sequences are in flight.
+        let admitted = if live == 0 {
+            if shutdown.load(Ordering::Relaxed) && queue.is_empty() {
+                break;
+            }
+            let Some(batch) = batcher.next_batch(Duration::from_millis(50)) else {
+                if queue.is_closed() && queue.is_empty() {
+                    break;
+                }
+                continue;
+            };
+            batch.requests
+        } else {
+            batcher.poll(max_slots - live)
+        };
+        for request in schedule(admitted, cfg.schedule) {
+            if request.prompt.is_empty() {
+                metrics.record_failure();
+                inflight.fetch_sub(1, Ordering::Relaxed);
+                if tx.send(Response::err(request.id, "empty prompt")).is_err() {
+                    return;
+                }
+                continue;
+            }
+            let free = slots
+                .iter()
+                .position(|s| s.is_none())
+                .expect("admission is capped at the free-slot count");
+            model.reset_slot(free);
+            let next_input = request.prompt[0];
+            slots[free] = Some(SlotState {
+                picked_up: Instant::now(),
+                next_input,
+                prompt_pos: 0,
+                tokens: Vec::with_capacity(request.max_new_tokens),
+                prefill_done: None,
+                request,
+            });
+        }
+        // Assemble the ragged step, retiring slots that cannot take
+        // another token — a bad request fails alone, never the batch.
+        step_slots.clear();
+        step_tokens.clear();
+        len_after.clear();
+        for i in 0..max_slots {
+            let Some(st) = &slots[i] else { continue };
+            let phase =
+                if st.prompt_pos < st.request.prompt.len() { "prefill" } else { "decode" };
+            let failure = if st.next_input as usize >= vocab {
+                Some(format!("{phase}: token {} out of vocab", st.next_input))
+            } else if model.seq_len_slot(i) >= max_seq {
+                Some(format!("{phase}: sequence exceeds max_seq_len"))
+            } else {
+                None
+            };
+            if let Some(msg) = failure {
+                let st = slots[i].take().expect("checked live above");
+                if !finish_slot(st, Some(msg), &metrics, &inflight, &tx) {
+                    return;
+                }
+                continue;
+            }
+            step_slots.push(i);
+            step_tokens.push(st.next_input);
+            len_after.push(model.seq_len_slot(i) + 1);
+        }
+        if step_slots.is_empty() {
+            continue;
+        }
+        let t0 = Instant::now();
+        let logits = match model.forward_batch(&step_tokens, &step_slots) {
+            Ok(l) => l,
+            Err(e) => {
+                // Per-slot preconditions were checked above, so a step
+                // failure is an engine-bug class: fail the live rows
+                // loudly rather than wedging them.
+                let msg = e.to_string();
+                for &i in &step_slots {
+                    let st = slots[i].take().expect("was in the step");
+                    if !finish_slot(st, Some(format!("step: {msg}")), &metrics, &inflight, &tx)
+                    {
+                        return;
+                    }
+                }
+                continue;
+            }
+        };
+        let step_dur = t0.elapsed();
+        // Advance every row: prefill consumes prompt tokens silently;
+        // the step that feeds the final prompt token samples the first
+        // generated one (exactly `run_request`'s sequencing, per slot).
+        retired.clear();
+        for (row, &i) in step_slots.iter().enumerate() {
+            let st = slots[i].as_mut().expect("was in the step");
+            if st.prompt_pos + 1 < st.request.prompt.len() {
+                st.prompt_pos += 1;
+                st.next_input = st.request.prompt[st.prompt_pos];
+                continue; // mid-prefill: logits unused
+            }
+            if st.prefill_done.is_none() {
+                st.prompt_pos = st.request.prompt.len();
+                st.prefill_done = Some(Instant::now());
+                if st.request.max_new_tokens == 0 {
+                    retired.push(i);
+                    continue;
+                }
+            }
+            let next = sampler.sample(&logits[row * vocab..(row + 1) * vocab], &mut rng);
+            st.tokens.push(next);
+            if st.tokens.len() >= st.request.max_new_tokens
+                || next == crate::model::tokenizer::EOS
+                || len_after[row] >= max_seq
+            {
+                retired.push(i);
+            } else {
+                st.next_input = next;
+            }
+        }
+        metrics.record_decode_step(step_slots.len(), step_dur);
+        for &i in &retired {
+            let st = slots[i].take().expect("retired from the step");
+            if !finish_slot(st, None, &metrics, &inflight, &tx) {
+                return;
             }
         }
     }
@@ -424,6 +679,61 @@ mod tests {
         }
         assert_eq!(seen.len(), 12);
         assert_eq!(engine.metrics().completed.load(Ordering::Relaxed), 12);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn continuous_and_sequential_engines_agree_token_for_token() {
+        // The batched-decode acceptance check at the engine level:
+        // greedy responses from a continuous-batching engine must match
+        // a strictly sequential (`max_slots == 1`) engine per request.
+        let weights =
+            Arc::new(ModelWeights::generate(ModelConfig::tiny(), 99).unwrap());
+        let prompts: Vec<Vec<u32>> =
+            (0..6u32).map(|i| vec![10 + i, 20, 30 + (i % 3)]).collect();
+        let run = |max_slots: usize| -> Vec<Vec<u32>> {
+            let engine = InferenceEngine::start(
+                Arc::clone(&weights),
+                EngineConfig {
+                    workers: 1,
+                    batch: BatchPolicy { max_slots, ..Default::default() },
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            for (i, p) in prompts.iter().enumerate() {
+                engine.submit(Request::new(i as u64, p.clone(), 6)).unwrap();
+            }
+            let mut out: Vec<(u64, Vec<u32>)> = (0..prompts.len())
+                .map(|_| {
+                    let r =
+                        engine.recv_timeout(Duration::from_secs(60)).expect("response");
+                    assert!(r.error.is_none(), "{:?}", r.error);
+                    (r.id, r.tokens)
+                })
+                .collect();
+            engine.shutdown();
+            out.sort_by_key(|(id, _)| *id);
+            out.into_iter().map(|(_, t)| t).collect()
+        };
+        assert_eq!(run(1), run(4), "batched decode must match sequential decode");
+    }
+
+    #[test]
+    fn batched_engine_reports_occupancy_above_one() {
+        let engine = tiny_engine(EngineConfig { workers: 1, ..Default::default() });
+        for i in 0..8 {
+            engine.submit(Request::new(i, vec![5 + i as u32, 6, 7], 24)).unwrap();
+        }
+        for _ in 0..8 {
+            let r = engine.recv_timeout(Duration::from_secs(60)).expect("response");
+            assert!(r.error.is_none(), "{:?}", r.error);
+        }
+        let snap = engine.metrics().snapshot();
+        assert!(snap.get("decode_steps").unwrap().as_f64().unwrap() > 0.0);
+        let occ = snap.get("batch_occupancy_mean").unwrap().as_f64().unwrap();
+        assert!(occ > 1.0, "8 concurrent requests must batch (occupancy {occ})");
+        assert!(snap.get("tokens_per_sec").unwrap().as_f64().unwrap() > 0.0);
         engine.shutdown();
     }
 

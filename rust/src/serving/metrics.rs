@@ -21,6 +21,16 @@ pub struct Metrics {
     pub failed: AtomicU64,
     /// Tokens generated in total.
     pub tokens_out: AtomicU64,
+    /// Lockstep decode steps executed (continuous batching; `0` on the
+    /// strictly sequential `max_slots == 1` path).
+    pub decode_steps: AtomicU64,
+    /// Sum of live slots over all decode steps — `/ decode_steps` is
+    /// the mean batch occupancy, the direct measure of how much index
+    /// amortization the batched kernels are actually getting.
+    pub decode_slot_steps: AtomicU64,
+    /// Wall nanoseconds spent inside model steps (prefill + decode) —
+    /// the denominator of the aggregate tokens/sec figure.
+    pub decode_busy_ns: AtomicU64,
     hist: Mutex<Hists>,
 }
 
@@ -54,6 +64,15 @@ impl Metrics {
         self.failed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one lockstep decode step over `live` slots that took
+    /// `dur` of model time (the continuous-batching engine calls this
+    /// once per step, prefill and decode rows alike).
+    pub fn record_decode_step(&self, live: usize, dur: Duration) {
+        self.decode_steps.fetch_add(1, Ordering::Relaxed);
+        self.decode_slot_steps.fetch_add(live as u64, Ordering::Relaxed);
+        self.decode_busy_ns.fetch_add(dur.as_nanos() as u64, Ordering::Relaxed);
+    }
+
     /// Record queue admission / rejection.
     pub fn record_admission(&self, admitted: bool) {
         if admitted {
@@ -75,12 +94,27 @@ impl Metrics {
                 ("max_us", Json::num(hist.max_us() as f64)),
             ])
         };
+        let steps = self.decode_steps.load(Ordering::Relaxed);
+        let slot_steps = self.decode_slot_steps.load(Ordering::Relaxed);
+        let busy_ns = self.decode_busy_ns.load(Ordering::Relaxed);
+        let tokens = self.tokens_out.load(Ordering::Relaxed);
+        // Mean live slots per lockstep step: 1.0 = no batching benefit,
+        // max_slots = fully saturated. 0 when the sequential path (or
+        // no traffic) ran.
+        let occupancy = if steps > 0 { slot_steps as f64 / steps as f64 } else { 0.0 };
+        // Generated tokens per second of model-busy time (prefill steps
+        // included in the denominator, prompt tokens not in the
+        // numerator — a conservative aggregate throughput).
+        let tps = if busy_ns > 0 { tokens as f64 / (busy_ns as f64 / 1e9) } else { 0.0 };
         Json::obj(vec![
             ("admitted", Json::num(self.admitted.load(Ordering::Relaxed) as f64)),
             ("rejected", Json::num(self.rejected.load(Ordering::Relaxed) as f64)),
             ("completed", Json::num(self.completed.load(Ordering::Relaxed) as f64)),
             ("failed", Json::num(self.failed.load(Ordering::Relaxed) as f64)),
-            ("tokens_out", Json::num(self.tokens_out.load(Ordering::Relaxed) as f64)),
+            ("tokens_out", Json::num(tokens as f64)),
+            ("decode_steps", Json::num(steps as f64)),
+            ("batch_occupancy_mean", Json::num(occupancy)),
+            ("tokens_per_sec", Json::num(tps)),
             ("queue", phase(&h.queue)),
             ("prefill", phase(&h.prefill)),
             ("decode", phase(&h.decode)),
@@ -125,6 +159,26 @@ mod tests {
         let total = snap.get("total").unwrap();
         assert_eq!(total.get("count").unwrap().as_f64(), Some(1.0));
         assert!(total.get("mean_us").unwrap().as_f64().unwrap() >= 1000.0);
+    }
+
+    #[test]
+    fn decode_steps_yield_occupancy_and_throughput() {
+        let m = Metrics::new();
+        let snap = m.snapshot();
+        assert_eq!(snap.get("batch_occupancy_mean").unwrap().as_f64(), Some(0.0));
+        assert_eq!(snap.get("tokens_per_sec").unwrap().as_f64(), Some(0.0));
+        // 3 steps at occupancies 4, 3, 1 → mean 8/3.
+        m.record_decode_step(4, Duration::from_millis(1));
+        m.record_decode_step(3, Duration::from_millis(1));
+        m.record_decode_step(1, Duration::from_millis(2));
+        m.record(&Timing::default(), 8);
+        let snap = m.snapshot();
+        assert_eq!(snap.get("decode_steps").unwrap().as_f64(), Some(3.0));
+        let occ = snap.get("batch_occupancy_mean").unwrap().as_f64().unwrap();
+        assert!((occ - 8.0 / 3.0).abs() < 1e-9, "{occ}");
+        // 8 tokens over 4ms of busy time → 2000 tok/s.
+        let tps = snap.get("tokens_per_sec").unwrap().as_f64().unwrap();
+        assert!((tps - 2000.0).abs() < 1.0, "{tps}");
     }
 
     #[test]

@@ -10,20 +10,27 @@
 //!                     │
 //!              bounded request queue (backpressure)
 //!                     │
-//!                  batcher (size + deadline dynamic batching)
+//!                  batcher (idle pickup + non-blocking poll top-up)
 //!                     │
 //!               scheduler (prefill-priority admission)
 //!                     │
-//!        engine workers (one Transformer instance each;
-//!        per-request prefill → decode; RSR/RSR++ backends)
+//!        engine workers (one Transformer instance each) running
+//!        CONTINUOUS BATCHED DECODE: a slot map of up to `max_slots`
+//!        sequences stepped in lockstep — finished slots retire,
+//!        queued requests join mid-flight, and every BitLinear reads
+//!        its shared plan index once per step instead of once per
+//!        sequence (`max_slots = 1` → the sequential per-request path)
 //!                     │
-//!                  metrics (latency histograms, counters)
+//!                  metrics (latency histograms, counters,
+//!                  batch occupancy, aggregate tokens/sec)
 //! ```
 //!
 //! The paper's setting is single-vector matmuls (one token per forward
-//! pass), so batching here amortizes *dispatch and queueing*, and
-//! parallelism comes from engine workers each running vector–matrix
-//! products — matching §5.3's CPU deployment scenario.
+//! pass); continuous batching extends its core amortization across
+//! concurrent sequences (the batched RSR kernels read the preprocessed
+//! index once per lockstep step), while replica workers add
+//! parallelism — matching §5.3's CPU deployment scenario under the
+//! ROADMAP's heavy-traffic direction.
 //!
 //! tokio is unavailable offline; everything is `std::thread` +
 //! `std::net` + condvar queues (see DESIGN.md §Substitutions).

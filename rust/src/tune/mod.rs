@@ -44,4 +44,4 @@ pub use microbench::{bench, human_ns, BenchOpts, BenchResult};
 pub use profile::{
     LayerChoice, LayerProfile, MachineFingerprint, TuneProfile, RSRT_MAGIC, RSRT_VERSION,
 };
-pub use tuner::{tune_matrix, tune_model, CandidateTiming, LayerReport, TuneOpts};
+pub use tuner::{tune_matrix, tune_model, CandidateTiming, LayerReport, TuneOpts, TUNE_BATCH};

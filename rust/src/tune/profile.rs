@@ -15,26 +15,33 @@
 //! fingerprint differs is an error, mirroring how `.rsrz` artifacts
 //! bind to the exact weights they were compiled from.
 //!
-//! ## On-disk layout (version 1, all integers little-endian)
+//! ## On-disk layout (version 2, all integers little-endian)
 //!
 //! ```text
 //! offset  size  field
 //! 0       4     magic  "RSRT"
-//! 4       4     format version (u32) — currently 1
+//! 4       4     format version (u32) — currently 2 (v1 still readable)
 //! 8       4     machine feature flags (u32; bit 0 x86-64, bit 1
 //!               aarch64, bit 2 AVX2-gather)
 //! 12      4     machine thread count (u32)
-//! 16      4     layer count (u32)
-//! 20      8     body length (u64)
-//! 28      8     FNV-1a 64 checksum (u64) over the body bytes followed
+//! 16      4     bench batch size (u32, v2 only) — the synthetic batch
+//!               the `batched` candidate was measured at; serving warns
+//!               when its configured `max_slots` differs materially
+//! 20      4     layer count (u32)
+//! 24      8     body length (u64)
+//! 32      8     FNV-1a 64 checksum (u64) over the body bytes followed
 //!               by every other header field — a flipped bit in the
 //!               thread count is as fatal as one in a measured time
-//! 36      …     body: per layer —
+//! 40      …     body: per layer —
 //!                 name length (u32), UTF-8 name,
 //!                 rows (u32), cols (u32),
 //!                 chain length (u32), then per chain entry:
 //!                   backend code (u32), k (u32), median ns (f64 bits)
 //! ```
+//!
+//! Version 1 files (no bench-batch field; layer count at offset 16)
+//! still load, with the bench batch defaulting to 1 — the value every
+//! v1 profile was in fact measured at. Re-saving writes v2.
 //!
 //! Decoding re-validates everything after the checksum passes: name and
 //! chain caps, `k` range, backend codes, finite non-negative times —
@@ -53,8 +60,8 @@ use crate::util::threadpool::default_threads;
 /// The `.rsrt` magic bytes.
 pub const RSRT_MAGIC: &[u8; 4] = b"RSRT";
 
-/// The format version this build reads and writes.
-pub const RSRT_VERSION: u32 = 1;
+/// The format version this build writes (it also reads version 1).
+pub const RSRT_VERSION: u32 = 2;
 
 /// Caps mirroring the `.rsrz` reader: bound what a corrupt header can
 /// ask the allocator for.
@@ -63,6 +70,7 @@ const MAX_NAME: usize = 4096;
 const MAX_CHAIN: usize = 256;
 const MAX_BODY: usize = 1 << 28;
 const MAX_DIM: usize = 1 << 20;
+const MAX_BATCH: usize = 1 << 16;
 
 /// Machine feature bits stored in the fingerprint.
 const FEAT_X86_64: u32 = 1 << 0;
@@ -156,23 +164,42 @@ impl LayerProfile {
 pub struct TuneProfile {
     /// The measuring host.
     pub fingerprint: MachineFingerprint,
+    /// The synthetic batch size the `batched` candidate was measured at
+    /// ([`crate::tune::tuner::TUNE_BATCH`]). Serving compares it to the
+    /// engine's configured `max_slots` and warns on a material gap —
+    /// a batched ranking measured at batch 1 says little about batch 16.
+    pub bench_batch: u32,
     /// Per-layer results, in tuning order.
     pub layers: Vec<LayerProfile>,
 }
 
 impl TuneProfile {
     /// Assemble a profile. Every layer must carry a non-empty chain and
-    /// in-range geometry (the same invariants loading enforces).
+    /// in-range geometry (the same invariants loading enforces). The
+    /// bench batch defaults to 1 ([`with_bench_batch`](Self::with_bench_batch)).
     pub fn new(
         fingerprint: MachineFingerprint,
         layers: Vec<LayerProfile>,
     ) -> Result<Self> {
-        let p = Self { fingerprint, layers };
+        let p = Self { fingerprint, bench_batch: 1, layers };
         p.validate()?;
         Ok(p)
     }
 
+    /// Record the batch size the `batched` candidate was measured at.
+    pub fn with_bench_batch(mut self, bench_batch: u32) -> Result<Self> {
+        self.bench_batch = bench_batch;
+        self.validate()?;
+        Ok(self)
+    }
+
     fn validate(&self) -> Result<()> {
+        if self.bench_batch == 0 || self.bench_batch as usize > MAX_BATCH {
+            return Err(Error::Artifact(format!(
+                "tuning profile bench batch {} out of range 1..={MAX_BATCH}",
+                self.bench_batch
+            )));
+        }
         if self.layers.len() > MAX_LAYERS {
             return Err(Error::Artifact(format!(
                 "tuning profile has {} layers (cap {MAX_LAYERS})",
@@ -268,6 +295,7 @@ impl TuneProfile {
         let checksum = profile_checksum(
             RSRT_VERSION,
             &self.fingerprint,
+            self.bench_batch,
             self.layers.len(),
             &body,
         );
@@ -276,6 +304,7 @@ impl TuneProfile {
             RSRT_VERSION,
             self.fingerprint.features,
             self.fingerprint.threads,
+            self.bench_batch,
             self.layers.len() as u32,
         ] {
             w.write_all(&v.to_le_bytes())?;
@@ -297,14 +326,17 @@ impl TuneProfile {
             ));
         }
         let version = read_u32(r)?;
-        if version != RSRT_VERSION {
+        if version == 0 || version > RSRT_VERSION {
             return Err(Error::Artifact(format!(
-                "unsupported .rsrt version {version} (this build reads version \
-                 {RSRT_VERSION})"
+                "unsupported .rsrt version {version} (this build reads versions \
+                 1..={RSRT_VERSION})"
             )));
         }
         let features = read_u32(r)?;
         let threads = read_u32(r)?;
+        // v1 predates the bench-batch header field; every v1 profile
+        // was measured at batch 1.
+        let bench_batch = if version >= 2 { read_u32(r)? } else { 1 };
         let layer_count = read_u32(r)? as usize;
         let body_len = u64::from_le_bytes(read_arr(r)?) as usize;
         let checksum = u64::from_le_bytes(read_arr(r)?);
@@ -325,7 +357,9 @@ impl TuneProfile {
         body.resize(body_len, 0);
         r.read_exact(&mut body)?;
         let fingerprint = MachineFingerprint { features, threads };
-        if profile_checksum(version, &fingerprint, layer_count, &body) != checksum {
+        if profile_checksum(version, &fingerprint, bench_batch, layer_count, &body)
+            != checksum
+        {
             return Err(Error::Artifact(
                 "checksum mismatch (corrupt tuning profile header or body)".into(),
             ));
@@ -365,7 +399,7 @@ impl TuneProfile {
                 body.len() - off
             )));
         }
-        Self::new(fingerprint, layers)
+        Self::new(fingerprint, layers)?.with_bench_batch(bench_batch)
     }
 
     /// Write to a file.
@@ -386,16 +420,23 @@ impl TuneProfile {
 /// FNV-1a over the body, continued over every other header field —
 /// computed from *parsed* values on read, exactly like the `.rsrz`
 /// checksum, so surviving header corruption still fails the comparison.
+/// The bench-batch field joins the hash from version 2 on (hashing it
+/// into v1 checksums would break every existing profile).
 fn profile_checksum(
     version: u32,
     fp: &MachineFingerprint,
+    bench_batch: u32,
     layer_count: usize,
     body: &[u8],
 ) -> u64 {
     let mut h = fnv1a64(body);
-    for v in [version, fp.features, fp.threads, layer_count as u32] {
+    for v in [version, fp.features, fp.threads] {
         h = fnv1a64_continue(h, &v.to_le_bytes());
     }
+    if version >= 2 {
+        h = fnv1a64_continue(h, &bench_batch.to_le_bytes());
+    }
+    h = fnv1a64_continue(h, &(layer_count as u32).to_le_bytes());
     fnv1a64_continue(h, &(body.len() as u64).to_le_bytes())
 }
 
@@ -455,6 +496,58 @@ mod tests {
         assert_eq!(back.get("lm_head").unwrap().winner().k, 6);
         assert!(back.get("nope").is_none());
         assert_eq!(back.len(), 2);
+    }
+
+    #[test]
+    fn v2_records_bench_batch_and_v1_defaults_to_one() {
+        let p = sample_profile().with_bench_batch(8).unwrap();
+        let mut buf = Vec::new();
+        p.write_to(&mut buf).unwrap();
+        let back = TuneProfile::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(back.bench_batch, 8);
+        assert_eq!(back, p);
+
+        // Hand-serialize the same layers as version 1 (no bench-batch
+        // header field, v1 checksum): it must still load, at batch 1 —
+        // the value every v1 profile was in fact measured at.
+        let mut body = Vec::new();
+        for l in &p.layers {
+            body.extend_from_slice(&(l.name.len() as u32).to_le_bytes());
+            body.extend_from_slice(l.name.as_bytes());
+            body.extend_from_slice(&(l.rows as u32).to_le_bytes());
+            body.extend_from_slice(&(l.cols as u32).to_le_bytes());
+            body.extend_from_slice(&(l.chain.len() as u32).to_le_bytes());
+            for c in &l.chain {
+                body.extend_from_slice(&c.backend.code().to_le_bytes());
+                body.extend_from_slice(&(c.k as u32).to_le_bytes());
+                body.extend_from_slice(&c.ns.to_bits().to_le_bytes());
+            }
+        }
+        let header = [
+            1u32,
+            p.fingerprint.features,
+            p.fingerprint.threads,
+            p.layers.len() as u32,
+        ];
+        let mut h = fnv1a64(&body);
+        for v in header {
+            h = fnv1a64_continue(h, &v.to_le_bytes());
+        }
+        let checksum = fnv1a64_continue(h, &(body.len() as u64).to_le_bytes());
+        let mut v1 = Vec::new();
+        v1.extend_from_slice(RSRT_MAGIC);
+        for v in header {
+            v1.extend_from_slice(&v.to_le_bytes());
+        }
+        v1.extend_from_slice(&(body.len() as u64).to_le_bytes());
+        v1.extend_from_slice(&checksum.to_le_bytes());
+        v1.extend_from_slice(&body);
+        let old = TuneProfile::read_from(&mut v1.as_slice()).unwrap();
+        assert_eq!(old.bench_batch, 1);
+        assert_eq!(old.layers, p.layers);
+
+        // A zero bench batch is rejected at construction.
+        assert!(sample_profile().with_bench_batch(0).is_err());
     }
 
     #[test]

@@ -31,6 +31,15 @@ use crate::model::weights::ModelWeights;
 use crate::runtime::{ExecutablePlan, SharedTernaryPlan};
 use crate::util::rng::Rng;
 
+/// The synthetic batch size the `batched` candidate is measured at.
+/// [`ExecutablePlan`]'s batched state executes at batch 1 — the honest
+/// single-vector serve shape — so profiles record 1 until the tuner
+/// grows a per-batch sweep. The value is written into the `.rsrt`
+/// header ([`TuneProfile::bench_batch`]); serving warns at startup when
+/// its configured `max_slots` differs materially, because a batched
+/// ranking measured at one occupancy says little about another.
+pub const TUNE_BATCH: usize = 1;
+
 /// Options for one tuning run.
 #[derive(Debug, Clone, Copy)]
 pub struct TuneOpts {
@@ -157,7 +166,8 @@ pub fn tune_model(
         progress(&report);
         reports.push(report);
     }
-    let profile = TuneProfile::new(MachineFingerprint::current(), layers)?;
+    let profile = TuneProfile::new(MachineFingerprint::current(), layers)?
+        .with_bench_batch(TUNE_BATCH as u32)?;
     Ok((profile, reports))
 }
 
@@ -198,6 +208,7 @@ mod tests {
         assert_eq!(reports.len(), expect);
         assert_eq!(seen, expect);
         profile.verify_host().unwrap();
+        assert_eq!(profile.bench_batch as usize, TUNE_BATCH);
         let l = profile.get("layer0.wq").unwrap();
         assert_eq!((l.rows, l.cols), (64, 64));
         assert!(!l.chain.is_empty());

@@ -1,0 +1,254 @@
+//! Continuous batched decode equivalence: the lockstep pipeline must
+//! serve exactly the tokens sequential decode serves — across RSR
+//! backends, under ragged completion (sequences finishing at different
+//! steps), under mid-flight joins, and on the `B = 1` degenerate path.
+//!
+//! Two kinds of guarantee are asserted:
+//!
+//! * **Exact invariance** — per row, the batched flat kernel performs
+//!   the identical f32 addition sequence at every batch size, so a
+//!   sequence's tokens are bit-independent of its batchmates. Ragged
+//!   and mid-flight tests compare batched runs against solo runs
+//!   through the same batched pipeline with `assert_eq!`.
+//! * **Cross-kernel greedy identity** — batched vs the single-vector
+//!   kernels re-associate sums differently, so those comparisons are
+//!   token-level greedy identity on the tiny model, the same check the
+//!   seed's cross-backend test (`Standard` vs `Rsr` vs `RsrPlusPlus`)
+//!   has always made.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use rsr::kernels::Backend;
+use rsr::model::config::ModelConfig;
+use rsr::model::sampler::Sampler;
+use rsr::model::tensor::argmax;
+use rsr::model::tokenizer::EOS;
+use rsr::model::transformer::Transformer;
+use rsr::model::weights::ModelWeights;
+use rsr::runtime::PlanStore;
+use rsr::serving::batcher::BatchPolicy;
+use rsr::serving::engine::{EngineConfig, InferenceEngine};
+use rsr::serving::request::Request;
+use rsr::util::rng::Rng;
+
+fn tiny_weights() -> ModelWeights {
+    ModelWeights::generate(ModelConfig::tiny(), 42).unwrap()
+}
+
+/// Greedy continuous decode at the model level, mirroring the engine's
+/// lockstep loop: slot `s` joins at step `join_at[s]`, prefills its
+/// prompt one token per step, then decodes until its own `max_new[s]`
+/// budget (or EOS / context limit) — so batches are ragged and slots
+/// retire mid-flight.
+fn lockstep_staggered(
+    model: &mut Transformer,
+    prompts: &[Vec<u32>],
+    max_new: &[usize],
+    join_at: &[usize],
+) -> Vec<Vec<u32>> {
+    let n = prompts.len();
+    model.ensure_slots(n);
+    let vocab = model.config().vocab_size;
+    let max_seq = model.config().max_seq_len;
+    let mut outs: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let mut pos = vec![0usize; n];
+    let mut fed = vec![0usize; n];
+    let mut next: Vec<u32> = prompts.iter().map(|p| p[0]).collect();
+    let mut joined = vec![false; n];
+    let mut live: Vec<usize> = Vec::new();
+    let mut step = 0usize;
+    loop {
+        for s in 0..n {
+            if !joined[s] && join_at[s] <= step {
+                joined[s] = true;
+                model.reset_slot(s);
+                live.push(s);
+            }
+        }
+        live.sort_unstable();
+        if live.is_empty() {
+            if joined.iter().all(|&j| j) {
+                break;
+            }
+            step += 1;
+            continue;
+        }
+        let tokens: Vec<u32> = live.iter().map(|&s| next[s]).collect();
+        let slots = live.clone();
+        let logits = model.forward_batch(&tokens, &slots).unwrap().to_vec();
+        let mut still = Vec::new();
+        for (row, &s) in slots.iter().enumerate() {
+            fed[s] += 1;
+            if pos[s] + 1 < prompts[s].len() {
+                pos[s] += 1;
+                next[s] = prompts[s][pos[s]];
+                still.push(s);
+                continue;
+            }
+            pos[s] = prompts[s].len();
+            if max_new[s] == 0 {
+                continue;
+            }
+            let nt = argmax(&logits[row * vocab..(row + 1) * vocab]) as u32;
+            outs[s].push(nt);
+            let done = outs[s].len() >= max_new[s] || nt == EOS || fed[s] >= max_seq;
+            if !done {
+                next[s] = nt;
+                still.push(s);
+            }
+        }
+        live = still;
+        step += 1;
+    }
+    outs
+}
+
+fn lockstep(model: &mut Transformer, prompts: &[Vec<u32>], max_new: &[usize]) -> Vec<Vec<u32>> {
+    lockstep_staggered(model, prompts, max_new, &vec![0; prompts.len()])
+}
+
+#[test]
+fn batched_matches_sequential_generate_across_all_backends() {
+    // The seed's cross-backend prompt/length: greedy tokens are known
+    // stable across accumulation orders on this model.
+    let w = tiny_weights();
+    let prompt: Vec<u32> = "What is 2+2?".bytes().map(|b| b as u32).collect();
+    for backend in Backend::ALL {
+        let mut seq = Transformer::from_weights(&w, backend, 0).unwrap();
+        let mut rng = Rng::new(0);
+        let expect = seq.generate(&prompt, 8, Sampler::Greedy, &mut rng).unwrap();
+        let mut batched = Transformer::from_weights(&w, backend, 0).unwrap();
+        let got =
+            lockstep(&mut batched, &[prompt.clone(), prompt.clone(), prompt.clone()], &[8; 3]);
+        for (i, g) in got.iter().enumerate() {
+            assert_eq!(g, &expect, "{} slot {i}", backend.name());
+        }
+    }
+}
+
+#[test]
+fn plan_store_batched_matches_sequential_generate() {
+    // The production path: store-shared plans, batched flat kernel.
+    let w = tiny_weights();
+    let prompt: Vec<u32> = "What is 2+2?".bytes().map(|b| b as u32).collect();
+    let store = PlanStore::for_model(Arc::new(w.clone()), 0);
+    let mut seq = Transformer::from_plan_store(&w, &store).unwrap();
+    let mut rng = Rng::new(0);
+    let expect = seq.generate(&prompt, 8, Sampler::Greedy, &mut rng).unwrap();
+    let mut batched = Transformer::from_plan_store(&w, &store).unwrap();
+    let got = lockstep(&mut batched, &[prompt.clone(), prompt.clone()], &[8; 2]);
+    for (i, g) in got.iter().enumerate() {
+        assert_eq!(g, &expect, "plan-store batched slot {i} vs sequential");
+    }
+}
+
+#[test]
+fn ragged_completion_is_bit_identical_to_solo_decode() {
+    // Four sequences with different prompts and budgets: the batch
+    // shrinks as each finishes. Every sequence must produce exactly
+    // the tokens it produces alone through the same batched pipeline —
+    // rows are independent of batchmates, so this is assert_eq-exact.
+    let w = tiny_weights();
+    let store = PlanStore::for_model(Arc::new(w.clone()), 0);
+    let prompts: Vec<Vec<u32>> =
+        vec![vec![5, 6, 7], vec![10, 20, 30, 40, 50], vec![9], vec![100, 101]];
+    let budgets = [3usize, 10, 6, 1];
+    let mut batched = Transformer::from_plan_store(&w, &store).unwrap();
+    let ragged = lockstep(&mut batched, &prompts, &budgets);
+    for (i, p) in prompts.iter().enumerate() {
+        let mut solo = Transformer::from_plan_store(&w, &store).unwrap();
+        let alone = lockstep(&mut solo, &[p.clone()], &budgets[i..=i]);
+        assert_eq!(ragged[i], alone[0], "slot {i} diverged from its solo run");
+        assert!(ragged[i].len() <= budgets[i]);
+        assert!(!ragged[i].is_empty());
+    }
+}
+
+#[test]
+fn mid_flight_joins_do_not_perturb_running_sequences() {
+    // Slot 1 joins four steps into slot 0's decode; slot 2 joins later
+    // still. Every sequence must match its solo run bit for bit.
+    let w = tiny_weights();
+    let store = PlanStore::for_model(Arc::new(w.clone()), 0);
+    let prompts: Vec<Vec<u32>> = vec![vec![11, 12, 13], vec![40, 41], vec![70, 71, 72]];
+    let budgets = [10usize, 6, 4];
+    let mut batched = Transformer::from_plan_store(&w, &store).unwrap();
+    let joined = lockstep_staggered(&mut batched, &prompts, &budgets, &[0, 4, 7]);
+    for (i, p) in prompts.iter().enumerate() {
+        let mut solo = Transformer::from_plan_store(&w, &store).unwrap();
+        let alone = lockstep(&mut solo, &[p.clone()], &budgets[i..=i]);
+        assert_eq!(joined[i], alone[0], "slot {i} perturbed by a mid-flight join");
+    }
+}
+
+#[test]
+fn single_slot_forward_batch_is_bitwise_forward_token_on_owned_backends() {
+    // The B=1 degenerate pin: owned backends execute the identical
+    // per-row kernel on both entry points, so logits must be equal to
+    // the last bit, step after step.
+    let w = tiny_weights();
+    for backend in [Backend::Standard, Backend::RsrPlusPlus] {
+        let mut a = Transformer::from_weights(&w, backend, 0).unwrap();
+        let mut b = Transformer::from_weights(&w, backend, 0).unwrap();
+        b.ensure_slots(3); // spare slots must not change slot-0 math
+        for (step, &t) in [7u32, 8, 9, 250].iter().enumerate() {
+            let la = a.forward_token(t).unwrap().to_vec();
+            let lb = b.forward_batch(&[t], &[0]).unwrap().to_vec();
+            assert_eq!(la, lb, "{} step {step}", backend.name());
+        }
+        assert_eq!(a.seq_len(), b.seq_len_slot(0));
+    }
+}
+
+#[test]
+fn continuous_engine_matches_one_at_a_time_engine_exactly() {
+    // Engine-level ragged + mid-flight check. Both runs use the
+    // continuous engine (max_slots > 1 → batched kernel at every live
+    // count), so batch-size invariance makes this assert_eq-exact:
+    // staggered concurrent submissions vs strictly one-at-a-time.
+    let weights = Arc::new(ModelWeights::generate(ModelConfig::tiny(), 0x77).unwrap());
+    let reqs: Vec<(u64, Vec<u32>, usize)> = vec![
+        (1, vec![5, 6, 7], 12),
+        (2, vec![10, 20], 4),
+        (3, vec![30, 31, 32, 33], 8),
+        (4, vec![40], 16),
+    ];
+    let run = |concurrent: bool| -> Vec<(u64, Vec<u32>)> {
+        let engine = InferenceEngine::start(
+            Arc::clone(&weights),
+            EngineConfig {
+                workers: 1,
+                batch: BatchPolicy { max_slots: 3, ..Default::default() },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut out = Vec::new();
+        if concurrent {
+            // Gaps between submissions so later requests join decodes
+            // already in flight (and, with 4 requests on 3 slots, one
+            // joins only after a retirement frees its slot).
+            for (id, p, m) in &reqs {
+                engine.submit(Request::new(*id, p.clone(), *m)).unwrap();
+                std::thread::sleep(Duration::from_millis(3));
+            }
+            for _ in 0..reqs.len() {
+                let r = engine.recv_timeout(Duration::from_secs(60)).expect("response");
+                assert!(r.error.is_none(), "{:?}", r.error);
+                out.push((r.id, r.tokens));
+            }
+        } else {
+            for (id, p, m) in &reqs {
+                engine.submit(Request::new(*id, p.clone(), *m)).unwrap();
+                let r = engine.recv_timeout(Duration::from_secs(60)).expect("response");
+                assert!(r.error.is_none(), "{:?}", r.error);
+                out.push((r.id, r.tokens));
+            }
+        }
+        engine.shutdown();
+        out.sort_by_key(|(id, _)| *id);
+        out
+    };
+    assert_eq!(run(true), run(false), "mid-flight joins must not change tokens");
+}

@@ -152,7 +152,11 @@ fn engine_backpressure_is_reported() {
         EngineConfig {
             workers: 1,
             queue_capacity: 1,
-            batch: BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) },
+            batch: BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+                max_slots: 1,
+            },
             ..Default::default()
         },
     )
