@@ -13,5 +13,6 @@ pub mod fig6;
 pub mod fig9;
 pub mod kernels;
 pub mod perf;
+pub mod prefill;
 pub mod serving;
 pub mod table1;

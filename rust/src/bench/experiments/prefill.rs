@@ -1,0 +1,238 @@
+//! `rsr bench-prefill` — the chunked-prefill perf trajectory:
+//! time-to-first-token as a function of the prefill chunk size.
+//!
+//! Sweeps `--chunks` (default `{1, 4, 8, 16}`) over a synthetic
+//! `n = 1024` layer stack by prefilling the same prompt through
+//! [`Transformer::forward_chunk`] in chunk-sized steps — the exact
+//! lockstep step the serving engine's continuous loop executes for a
+//! prefilling slot — and records TTFT and prefill tokens/sec to
+//! `BENCH_prefill.json` (CI's bench-record job commits it to the repo,
+//! so the trajectory accumulates). Chunk `1` is the old
+//! one-token-per-step path and anchors the speedup column; chunking
+//! amortizes one shared-index read per layer across the whole chunk,
+//! so throughput should rise with the chunk on paper-scale layers.
+//!
+//! The sweep double-checks correctness while it measures: every chunk
+//! size must greedily sample the **same first token** as chunk 1
+//! (chunked prefill is bit-identical by construction — see
+//! `rust/tests/prefill.rs` for the full pin), so a silently wrong
+//! kernel can never publish a benchmark number.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::bench::harness::Table;
+use crate::error::{Error, Result};
+use crate::model::config::ModelConfig;
+use crate::model::tensor::argmax;
+use crate::model::transformer::Transformer;
+use crate::model::weights::ModelWeights;
+use crate::runtime::PlanStore;
+use crate::util::json::Json;
+
+/// Options for one bench-prefill run.
+#[derive(Debug, Clone)]
+pub struct PrefillBenchOpts {
+    /// Prefill chunk sizes to sweep (1 = the one-token baseline).
+    pub chunks: Vec<usize>,
+    /// Hidden width of the synthetic model (the paper's `n`).
+    pub d_model: usize,
+    /// Feed-forward width.
+    pub d_ff: usize,
+    /// Decoder blocks.
+    pub n_layers: usize,
+    /// Prompt tokens prefilled per measurement.
+    pub prompt_len: usize,
+    /// Timed repetitions per chunk size (the minimum is reported —
+    /// standard wall-clock practice for a mutating workload).
+    pub trials: usize,
+    /// Where to write the JSON record (`None` → stdout table only).
+    pub json_path: Option<PathBuf>,
+}
+
+impl Default for PrefillBenchOpts {
+    fn default() -> Self {
+        Self {
+            chunks: vec![1, 4, 8, 16],
+            d_model: 1024,
+            d_ff: 2048,
+            n_layers: 1,
+            prompt_len: 256,
+            trials: 3,
+            json_path: Some(PathBuf::from("BENCH_prefill.json")),
+        }
+    }
+}
+
+/// Prefill `prompt` into slot 0 in `chunk`-token steps through
+/// [`Transformer::forward_chunk`] and return the wall time together
+/// with the greedily sampled first generated token. Resets slot 0
+/// first; shared with `bench-serve`'s TTFT sweep so both report the
+/// same methodology.
+pub(crate) fn chunked_prefill_ttft(
+    model: &mut Transformer,
+    prompt: &[u32],
+    chunk: usize,
+) -> Result<(Duration, u32)> {
+    let chunk = chunk.max(1);
+    let vocab = model.config().vocab_size;
+    model.reset_slot(0);
+    let t0 = Instant::now();
+    let mut first = 0u32;
+    let mut p = 0;
+    while p < prompt.len() {
+        let take = chunk.min(prompt.len() - p);
+        let logits = model.forward_chunk(&prompt[p..p + take], &[0], &[take])?;
+        p += take;
+        if p == prompt.len() {
+            let last = take - 1;
+            first = argmax(&logits[last * vocab..(last + 1) * vocab]) as u32;
+        }
+    }
+    Ok((t0.elapsed(), first))
+}
+
+fn synthetic_config(opts: &PrefillBenchOpts) -> ModelConfig {
+    ModelConfig {
+        name: format!("bench-prefill-{}", opts.d_model),
+        vocab_size: 270,
+        d_model: opts.d_model,
+        n_layers: opts.n_layers,
+        n_heads: 8,
+        n_kv_heads: 4,
+        d_ff: opts.d_ff,
+        max_seq_len: opts.prompt_len + 2,
+        rope_theta: 10_000.0,
+    }
+}
+
+/// Run the sweep; returns the JSON record that was (optionally)
+/// written. Preprocessing (Algorithm 1) runs **once** through a shared
+/// [`PlanStore`] — every chunk size executes the same compiled plans,
+/// so the sweep isolates the chunking effect.
+pub fn run(opts: &PrefillBenchOpts) -> Result<Json> {
+    if opts.chunks.is_empty() || opts.prompt_len == 0 {
+        return Err(Error::Config("bench-prefill needs chunks and a prompt".into()));
+    }
+    let cfg = synthetic_config(opts);
+    cfg.validate()?;
+    println!(
+        "bench-prefill: {} layer(s) of n={} (d_ff {}), prompt {}, best of {} trial(s)",
+        cfg.n_layers, cfg.d_model, cfg.d_ff, opts.prompt_len, opts.trials
+    );
+    let weights = Arc::new(ModelWeights::generate(cfg.clone(), 0xF111)?);
+    let store = PlanStore::for_model(Arc::clone(&weights), 0);
+    store.preload(&weights.matrix_names())?;
+    let prompt: Vec<u32> =
+        (0..opts.prompt_len).map(|j| ((j * 7 + 3) % 256) as u32).collect();
+
+    let mut model = Transformer::from_plan_store(&weights, &store)?;
+    let mut measured: Vec<(usize, f64)> = Vec::new();
+    let mut first_tokens: Vec<u32> = Vec::new();
+    for &chunk in &opts.chunks {
+        // One unmeasured pass per chunk (first-touch scratch growth).
+        let (_, warm_tok) = chunked_prefill_ttft(&mut model, &prompt, chunk)?;
+        let mut best = f64::INFINITY;
+        let mut tok = warm_tok;
+        for _ in 0..opts.trials.max(1) {
+            let (dt, t) = chunked_prefill_ttft(&mut model, &prompt, chunk)?;
+            best = best.min(dt.as_secs_f64());
+            tok = t;
+        }
+        measured.push((chunk, best));
+        first_tokens.push(tok);
+    }
+    // Correctness gate: every chunk size must sample the same first
+    // token (bit-identical prefill) — a benchmark over a wrong kernel
+    // is worse than no benchmark.
+    for (i, &t) in first_tokens.iter().enumerate() {
+        if t != first_tokens[0] {
+            return Err(Error::Config(format!(
+                "bench-prefill: chunk {} sampled token {t}, chunk {} sampled {} — \
+                 chunked prefill must be bit-identical",
+                opts.chunks[i], opts.chunks[0], first_tokens[0]
+            )));
+        }
+    }
+
+    // The speedup baseline is chunk 1 when swept, else the smallest.
+    let base = measured
+        .iter()
+        .min_by_key(|&&(c, _)| c)
+        .map_or(1.0, |&(_, s)| s)
+        .max(1e-12);
+    let base_c = measured.iter().map(|&(c, _)| c).min().unwrap_or(1);
+    let mut table = Table::new(&[
+        "chunk",
+        "ttft ms",
+        "prefill tok/s",
+        &format!("vs chunk={base_c}"),
+    ]);
+    let mut rows = Vec::new();
+    for &(chunk, secs) in &measured {
+        let tps = opts.prompt_len as f64 / secs.max(1e-12);
+        table.row(&[
+            chunk.to_string(),
+            format!("{:.3}", secs * 1e3),
+            format!("{tps:.1}"),
+            format!("{:.2}x", base / secs.max(1e-12)),
+        ]);
+        rows.push(Json::obj(vec![
+            ("chunk", Json::num(chunk as f64)),
+            ("ttft_ms", Json::num(secs * 1e3)),
+            ("prefill_tokens_per_sec", Json::num(tps)),
+            ("speedup_vs_smallest_chunk", Json::num(base / secs.max(1e-12))),
+        ]));
+    }
+    let record = Json::obj(vec![
+        ("bench", Json::str("prefill")),
+        ("d_model", Json::num(cfg.d_model as f64)),
+        ("d_ff", Json::num(cfg.d_ff as f64)),
+        ("n_layers", Json::num(cfg.n_layers as f64)),
+        ("prompt_len", Json::num(opts.prompt_len as f64)),
+        ("trials", Json::num(opts.trials as f64)),
+        ("first_token", Json::num(first_tokens[0] as f64)),
+        ("chunks", Json::Arr(rows)),
+    ]);
+    table.print("bench-prefill: time-to-first-token by prefill chunk");
+    if let Some(path) = &opts.json_path {
+        match std::fs::write(path, record.to_string()) {
+            Ok(()) => println!("\nwrote {}", path.display()),
+            Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
+        }
+    }
+    Ok(record)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_runs_and_records_every_chunk() {
+        let opts = PrefillBenchOpts {
+            chunks: vec![1, 4],
+            d_model: 64,
+            d_ff: 96,
+            n_layers: 1,
+            prompt_len: 9,
+            trials: 1,
+            json_path: None,
+        };
+        let record = run(&opts).unwrap();
+        let rows = record.get("chunks").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1].get("chunk").unwrap().as_f64(), Some(4.0));
+        assert!(rows[0].get("prefill_tokens_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert!(rows[1].get("ttft_ms").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn rejects_empty_sweeps() {
+        let opts = PrefillBenchOpts { chunks: vec![], ..Default::default() };
+        assert!(run(&opts).is_err());
+        let opts = PrefillBenchOpts { prompt_len: 0, ..Default::default() };
+        assert!(run(&opts).is_err());
+    }
+}

@@ -1,16 +1,23 @@
 //! `rsr bench-serve` — the serving-layer perf trajectory: decode
-//! throughput as a function of batch size.
+//! throughput as a function of batch size, plus time-to-first-token as
+//! a function of prompt length.
 //!
 //! Sweeps the continuous-batching batch size over a synthetic model
 //! (default `B ∈ {1, 4, 8, 16}` on one `n = 1024` layer stack) by
 //! driving [`Transformer::forward_batch`] — the exact lockstep step the
 //! serving engine's continuous loop executes — with every slot live,
 //! and records tokens/sec to `BENCH_serving.json` (CI uploads it as a
-//! workflow artifact). This is the number the batched RSR kernels
-//! exist for: the shared plan index is read once per **step** instead
-//! of once per sequence, so per-step cost grows sublinearly in `B` and
-//! decode tokens/sec should rise monotonically from `B = 1` on
-//! paper-scale layers.
+//! workflow artifact and the bench-record job commits it on main).
+//! This is the number the batched RSR kernels exist for: the shared
+//! plan index is read once per **step** instead of once per sequence,
+//! so per-step cost grows sublinearly in `B` and decode tokens/sec
+//! should rise monotonically from `B = 1` on paper-scale layers.
+//!
+//! The second sweep (`--prompt-lens`, default `{16, 128, 512}`)
+//! measures TTFT for one slot prefilling through
+//! [`Transformer::forward_chunk`] at the configured `--prefill-chunk`
+//! against the chunk-1 baseline — the same reuse argument applied to
+//! the sequence axis, and the latency a prompt-heavy caller feels.
 //!
 //! Timing is a plain wall-clock loop rather than
 //! [`crate::tune::microbench`]: a decode step mutates the KV caches
@@ -53,6 +60,10 @@ pub struct ServeBenchOpts {
     pub prompt_len: usize,
     /// Timed decode steps per batch size.
     pub steps: usize,
+    /// Prompt lengths for the TTFT sweep (empty → skip the sweep).
+    pub prompt_lens: Vec<usize>,
+    /// Prefill chunk the TTFT sweep runs at (compared against chunk 1).
+    pub prefill_chunk: usize,
     /// Where to write the JSON record (`None` → stdout table only).
     pub json_path: Option<PathBuf>,
 }
@@ -66,12 +77,18 @@ impl Default for ServeBenchOpts {
             n_layers: 1,
             prompt_len: 4,
             steps: 32,
+            prompt_lens: vec![16, 128, 512],
+            prefill_chunk: 8,
             json_path: Some(PathBuf::from("BENCH_serving.json")),
         }
     }
 }
 
 fn synthetic_config(opts: &ServeBenchOpts) -> ModelConfig {
+    // The context must cover both sweeps: the decode window and the
+    // longest TTFT prompt.
+    let decode_window = opts.prompt_len + WARMUP_STEPS + opts.steps;
+    let longest_prompt = opts.prompt_lens.iter().copied().max().unwrap_or(0);
     ModelConfig {
         name: format!("bench-serve-{}", opts.d_model),
         vocab_size: 270,
@@ -80,7 +97,7 @@ fn synthetic_config(opts: &ServeBenchOpts) -> ModelConfig {
         n_heads: 8,
         n_kv_heads: 4,
         d_ff: opts.d_ff,
-        max_seq_len: opts.prompt_len + WARMUP_STEPS + opts.steps + 2,
+        max_seq_len: decode_window.max(longest_prompt) + 2,
         rope_theta: 10_000.0,
     }
 }
@@ -177,6 +194,62 @@ pub fn run(opts: &ServeBenchOpts) -> Result<Json> {
         ]));
     }
 
+    table.print("bench-serve: continuous batched decode throughput by batch size");
+
+    // TTFT sweep: one slot, chunked prefill at `prefill_chunk` vs the
+    // one-token chunk-1 baseline, per prompt length. Chunking must
+    // sample the identical first token (bit-identical prefill) — the
+    // sweep refuses to report numbers over a wrong kernel.
+    let mut ttft_rows = Vec::new();
+    if !opts.prompt_lens.is_empty() {
+        use super::prefill::chunked_prefill_ttft;
+        let chunk = opts.prefill_chunk.max(1);
+        let mut ttft_table = Table::new(&[
+            "prompt len",
+            &format!("ttft ms (chunk={chunk})"),
+            "prefill tok/s",
+            "ttft ms (chunk=1)",
+            "speedup",
+        ]);
+        let mut model = Transformer::from_plan_store(&weights, &store)?;
+        for &plen in &opts.prompt_lens {
+            let prompt: Vec<u32> = (0..plen).map(|j| ((j * 7 + 3) % 256) as u32).collect();
+            // Unmeasured warmup (scratch growth), then one timed run per
+            // path — bench-prefill is the high-resolution instrument;
+            // this sweep tracks the serve-shaped trajectory.
+            chunked_prefill_ttft(&mut model, &prompt, chunk)?;
+            let (dt_chunk, tok_chunk) = chunked_prefill_ttft(&mut model, &prompt, chunk)?;
+            let (dt_one, tok_one) = chunked_prefill_ttft(&mut model, &prompt, 1)?;
+            if tok_chunk != tok_one {
+                return Err(crate::error::Error::Config(format!(
+                    "bench-serve: prompt {plen} sampled token {tok_chunk} at chunk \
+                     {chunk} but {tok_one} at chunk 1 — chunked prefill must be \
+                     bit-identical"
+                )));
+            }
+            let (s_chunk, s_one) =
+                (dt_chunk.as_secs_f64().max(1e-12), dt_one.as_secs_f64().max(1e-12));
+            let tps = plen as f64 / s_chunk;
+            ttft_table.row(&[
+                plen.to_string(),
+                format!("{:.3}", s_chunk * 1e3),
+                format!("{tps:.1}"),
+                format!("{:.3}", s_one * 1e3),
+                format!("{:.2}x", s_one / s_chunk),
+            ]);
+            ttft_rows.push(Json::obj(vec![
+                ("prompt_len", Json::num(plen as f64)),
+                ("prefill_chunk", Json::num(chunk as f64)),
+                ("ttft_ms", Json::num(s_chunk * 1e3)),
+                ("prefill_tokens_per_sec", Json::num(tps)),
+                ("ttft_ms_chunk1", Json::num(s_one * 1e3)),
+                ("speedup_vs_chunk1", Json::num(s_one / s_chunk)),
+            ]));
+        }
+        ttft_table
+            .print("bench-serve: time-to-first-token by prompt length (chunked prefill)");
+    }
+
     let record = Json::obj(vec![
         ("bench", Json::str("serving")),
         ("d_model", Json::num(cfg.d_model as f64)),
@@ -184,9 +257,10 @@ pub fn run(opts: &ServeBenchOpts) -> Result<Json> {
         ("n_layers", Json::num(cfg.n_layers as f64)),
         ("prompt_len", Json::num(opts.prompt_len as f64)),
         ("steps", Json::num(opts.steps as f64)),
+        ("prefill_chunk", Json::num(opts.prefill_chunk.max(1) as f64)),
         ("batches", Json::Arr(rows)),
+        ("ttft", Json::Arr(ttft_rows)),
     ]);
-    table.print("bench-serve: continuous batched decode throughput by batch size");
     if let Some(path) = &opts.json_path {
         match std::fs::write(path, record.to_string()) {
             Ok(()) => println!("\nwrote {}", path.display()),
@@ -209,6 +283,8 @@ mod tests {
             n_layers: 1,
             prompt_len: 2,
             steps: 2,
+            prompt_lens: vec![5, 9],
+            prefill_chunk: 4,
             json_path: None,
         };
         let record = run(&opts).unwrap();
@@ -217,5 +293,12 @@ mod tests {
         assert_eq!(rows[1].get("batch").unwrap().as_f64(), Some(2.0));
         assert!(rows[0].get("decode_tokens_per_sec").unwrap().as_f64().unwrap() > 0.0);
         assert!(rows[1].get("ms_per_token").unwrap().as_f64().unwrap() > 0.0);
+        // TTFT sweep: one row per prompt length, chunk recorded.
+        let ttft = record.get("ttft").unwrap().as_arr().unwrap();
+        assert_eq!(ttft.len(), 2);
+        assert_eq!(ttft[0].get("prompt_len").unwrap().as_f64(), Some(5.0));
+        assert_eq!(ttft[1].get("prefill_chunk").unwrap().as_f64(), Some(4.0));
+        assert!(ttft[0].get("ttft_ms").unwrap().as_f64().unwrap() > 0.0);
+        assert!(ttft[1].get("speedup_vs_chunk1").unwrap().as_f64().unwrap() > 0.0);
     }
 }

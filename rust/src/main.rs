@@ -99,6 +99,7 @@ fn run(args: &[String]) -> Result<()> {
         "client" => cmd_client(&f),
         "bench-kernels" => cmd_bench_kernels(&f),
         "bench-serve" => cmd_bench_serve(&f),
+        "bench-prefill" => cmd_bench_prefill(&f),
         "experiment" => cmd_experiment(rest, &f),
         "selfcheck" => cmd_selfcheck(),
         "artifacts" => cmd_artifacts(),
@@ -120,10 +121,11 @@ fn print_help() {
          pack           --model FILE | --n N  --out DIR [--k K] [--profile FILE.rsrt]  preprocess to .rsrz\n  \
          tune           --weights FILE --out FILE.rsrt [--budget-ms N] [--radius R] [--trials T]\n  \
          inspect        --plans DIR | --file FILE [--deep]      .rsrz / .rsrt stats\n  \
-         serve          --model FILE [--plans DIR] [--profile FILE.rsrt] [--addr A] [--replicas R] [--workers W] [--max-slots S] [--backend B]\n  \
+         serve          --model FILE [--plans DIR] [--profile FILE.rsrt] [--addr A] [--replicas R] [--workers W] [--max-slots S] [--prefill-chunk C] [--backend B]\n  \
          client         [--addr A] --prompt TEXT [--max-new N]\n  \
          bench-kernels  [--sizes 1024,4096] [--shapes 4096x11008] [--reps N] [--batch B] [--threads T] [--json FILE]\n  \
-         bench-serve    [--batches 1,4,8,16] [--d-model 1024] [--d-ff 2048] [--layers 1] [--steps 32] [--prompt 4] [--json FILE]\n  \
+         bench-serve    [--batches 1,4,8,16] [--d-model 1024] [--d-ff 2048] [--layers 1] [--steps 32] [--prompt 4] [--prompt-lens 16,128,512] [--prefill-chunk 8] [--json FILE]\n  \
+         bench-prefill  [--chunks 1,4,8,16] [--d-model 1024] [--d-ff 2048] [--layers 1] [--prompt 256] [--trials 3] [--json FILE]\n  \
          experiment     <fig4|fig5|fig6|fig9|fig10|fig11|fig12|table1|ablations|all> [--full]\n  \
          selfcheck                                              cross-backend equality\n  \
          artifacts                                              list AOT artifacts\n\n\
@@ -245,13 +247,22 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
     let plans = f.get("plans").map(PathBuf::from);
     let profile = f.get("profile").map(PathBuf::from);
     let k = get_usize(f, "k", 0)?;
-    // Continuous-batching knob: concurrent decode slots per worker.
-    // 1 serves strictly sequentially (the pre-batching path).
+    // Continuous-batching knobs: concurrent decode slots per worker
+    // (1 serves strictly sequentially — the pre-batching path) and the
+    // chunked-prefill chunk (1 feeds prompts one token per step — the
+    // pre-chunking path; larger values cut time-to-first-token by
+    // stacking prompt tokens along the batched kernels' batch axis).
     let batch = rsr::serving::batcher::BatchPolicy {
         max_slots: get_usize(
             f,
             "max-slots",
             rsr::serving::batcher::BatchPolicy::default().max_slots,
+        )?
+        .max(1),
+        prefill_chunk: get_usize(
+            f,
+            "prefill-chunk",
+            rsr::serving::batcher::BatchPolicy::default().prefill_chunk,
         )?
         .max(1),
         ..Default::default()
@@ -290,11 +301,13 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
     }
 
     println!(
-        "model {} loaded; {} replica(s) x {} worker(s) x {} slot(s), backend {}{}",
+        "model {} loaded; {} replica(s) x {} worker(s) x {} slot(s), \
+         prefill chunk {}, backend {}{}",
         weights.config.name,
         replicas,
         workers,
         cfg.batch.max_slots,
+        cfg.batch.prefill_chunk,
         backend.name(),
         if store.is_some() { " (shared plan store)" } else { "" }
     );
@@ -345,11 +358,7 @@ fn cmd_bench_kernels(f: &HashMap<String, String>) -> Result<()> {
     // either replaces the default grid.
     let mut shapes = Vec::new();
     if let Some(sizes) = f.get("sizes") {
-        for s in sizes.split(',') {
-            let n: usize = s
-                .trim()
-                .parse()
-                .map_err(|_| Error::Config(format!("bad size {s} in --sizes")))?;
+        for n in parse_usize_list(sizes, "sizes")? {
             shapes.push((n, n));
         }
     }
@@ -383,31 +392,69 @@ fn cmd_bench_serve(f: &HashMap<String, String>) -> Result<()> {
     use rsr::bench::experiments::serving::{run, ServeBenchOpts};
     let mut opts = ServeBenchOpts::default();
     if let Some(spec) = f.get("batches") {
-        let mut batches = Vec::new();
-        for s in spec.split(',') {
-            let b: usize = s
-                .trim()
-                .parse()
-                .map_err(|_| Error::Config(format!("bad batch {s} in --batches")))?;
-            if b == 0 {
-                return Err(Error::Config("batch sizes must be positive".into()));
-            }
-            batches.push(b);
-        }
-        if !batches.is_empty() {
-            opts.batches = batches;
-        }
+        opts.batches = parse_usize_list(spec, "batches")?;
     }
     opts.d_model = get_usize(f, "d-model", opts.d_model)?;
     opts.d_ff = get_usize(f, "d-ff", opts.d_ff)?;
     opts.n_layers = get_usize(f, "layers", opts.n_layers)?.max(1);
     opts.steps = get_usize(f, "steps", opts.steps)?.max(1);
     opts.prompt_len = get_usize(f, "prompt", opts.prompt_len)?.max(1);
+    // --prompt-lens 16,128,512 drives the TTFT sweep (`none` skips it);
+    // --prefill-chunk sets the measured chunk (compared to chunk 1).
+    if let Some(spec) = f.get("prompt-lens") {
+        opts.prompt_lens = if spec == "none" {
+            Vec::new()
+        } else {
+            parse_usize_list(spec, "prompt-lens")?
+        };
+    }
+    opts.prefill_chunk = get_usize(f, "prefill-chunk", opts.prefill_chunk)?.max(1);
     opts.json_path = Some(PathBuf::from(
         f.get("json").cloned().unwrap_or_else(|| "BENCH_serving.json".into()),
     ));
     run(&opts)?;
     Ok(())
+}
+
+/// `rsr bench-prefill`: sweep the chunked-prefill chunk size over a
+/// synthetic n=1024 stack and record TTFT + prefill tokens/sec to
+/// `BENCH_prefill.json` (the prefill perf trajectory; see
+/// bench/experiments/prefill).
+fn cmd_bench_prefill(f: &HashMap<String, String>) -> Result<()> {
+    use rsr::bench::experiments::prefill::{run, PrefillBenchOpts};
+    let mut opts = PrefillBenchOpts::default();
+    if let Some(spec) = f.get("chunks") {
+        opts.chunks = parse_usize_list(spec, "chunks")?;
+    }
+    opts.d_model = get_usize(f, "d-model", opts.d_model)?;
+    opts.d_ff = get_usize(f, "d-ff", opts.d_ff)?;
+    opts.n_layers = get_usize(f, "layers", opts.n_layers)?.max(1);
+    opts.prompt_len = get_usize(f, "prompt", opts.prompt_len)?.max(1);
+    opts.trials = get_usize(f, "trials", opts.trials)?.max(1);
+    opts.json_path = Some(PathBuf::from(
+        f.get("json").cloned().unwrap_or_else(|| "BENCH_prefill.json".into()),
+    ));
+    run(&opts)?;
+    Ok(())
+}
+
+/// Parse one positive comma-separated integer list flag.
+fn parse_usize_list(spec: &str, flag: &str) -> Result<Vec<usize>> {
+    let mut out = Vec::new();
+    for s in spec.split(',') {
+        let v: usize = s
+            .trim()
+            .parse()
+            .map_err(|_| Error::Config(format!("bad value {s} in --{flag}")))?;
+        if v == 0 {
+            return Err(Error::Config(format!("--{flag} values must be positive")));
+        }
+        out.push(v);
+    }
+    if out.is_empty() {
+        return Err(Error::Config(format!("--{flag} needs at least one value")));
+    }
+    Ok(out)
 }
 
 /// Parse one `NxM` pair (e.g. `4096x11008`).

@@ -1,10 +1,11 @@
 //! Multi-head attention with grouped-query KV heads, RoPE and per-slot
 //! KV caches — single-token (decode) forward, matching the paper's §5.3
 //! "one feedforward pass per token" setting where every projection is a
-//! vector–ternary-matrix product, plus a lockstep batched forward
-//! ([`Attention::forward_batch`]) where the projections amortize the
-//! shared index across every live slot while RoPE, cache appends and
-//! the attention reduction stay per-slot.
+//! vector–ternary-matrix product, plus a lockstep chunked forward
+//! ([`Attention::forward_chunk`]) where the projections amortize the
+//! shared index across every stacked row — decode slots contribute one
+//! row each, prefilling slots contribute a whole prompt chunk — while
+//! RoPE, cache appends and the attention reduction stay per-row.
 
 use super::bitlinear::BitLinear;
 use super::config::ModelConfig;
@@ -154,24 +155,35 @@ impl Attention {
         self.wo.forward(&self.ctx, out)
     }
 
-    /// Lockstep decode forward over the live slots: row `i` of `xs`
-    /// (row-major `slots.len() × d_model`, already normed) is one
-    /// decode step for slot `slots[i]` at that slot's own position.
+    /// Lockstep chunked forward over the live slots: slot `slots[i]`
+    /// contributes `counts[i]` consecutive rows of `xs` (row-major
+    /// `Σ counts × d_model`, already normed), one per token, starting
+    /// at that slot's own cache position. A decode slot feeds one row
+    /// (`counts[i] == 1` — the classic lockstep decode step); a
+    /// prefilling slot feeds a whole prompt chunk, which is where the
+    /// paper's index-reuse argument meets the sequence axis.
     ///
-    /// The Q/K/V/O projections run **batched** — the shared plan index
-    /// is read once per step instead of once per slot, the win the
-    /// batched RSR kernels exist for. RoPE, the cache append and the
-    /// attention reduction are inherently per-slot (each slot attends
-    /// its own cache at its own length) and loop over rows with exactly
-    /// the arithmetic of [`forward`](Self::forward).
-    pub fn forward_batch(
+    /// The Q/K/V/O projections run **batched over every stacked row** —
+    /// the shared plan index is read once per step instead of once per
+    /// token, the win the batched RSR kernels exist for. RoPE is
+    /// applied per row at the row's own position, the chunk's K/V rows
+    /// are all appended to the slot's cache, and the attention
+    /// reduction loops rows with exactly the arithmetic of
+    /// [`forward`](Self::forward): the row at chunk offset `j` attends
+    /// positions `0..=base+j` only. Because every later chunk row is
+    /// already in the cache when the earlier ones attend, the causal
+    /// mask *within* the chunk is this per-row window truncation — no
+    /// score is ever computed against a future position.
+    pub fn forward_chunk(
         &mut self,
         xs: &[f32],
         slots: &[usize],
+        counts: &[usize],
         rope: &Rope,
         out: &mut [f32],
     ) -> Result<()> {
-        let b = slots.len();
+        debug_assert_eq!(slots.len(), counts.len());
+        let rows: usize = counts.iter().sum();
         let q_dim = self.n_heads * self.head_dim;
         let kv_dim = self.k.len();
         if let Some(&max) = slots.iter().max() {
@@ -180,56 +192,73 @@ impl Attention {
             // `max + 1` or allocating without bound.
             if max >= super::transformer::MAX_SLOTS {
                 return Err(crate::error::Error::Config(format!(
-                    "forward_batch: slot {max} exceeds the slot cap {}",
+                    "forward_chunk: slot {max} exceeds the slot cap {}",
                     super::transformer::MAX_SLOTS
                 )));
             }
             self.ensure_slots(max + 1);
         }
-        ensure_len(&mut self.qb, b * q_dim);
-        ensure_len(&mut self.kb, b * kv_dim);
-        ensure_len(&mut self.vb, b * kv_dim);
-        ensure_len(&mut self.ctxb, b * q_dim);
-        self.wq.forward_batch(xs, b, &mut self.qb[..b * q_dim])?;
-        self.wk.forward_batch(xs, b, &mut self.kb[..b * kv_dim])?;
-        self.wv.forward_batch(xs, b, &mut self.vb[..b * kv_dim])?;
+        ensure_len(&mut self.qb, rows * q_dim);
+        ensure_len(&mut self.kb, rows * kv_dim);
+        ensure_len(&mut self.vb, rows * kv_dim);
+        ensure_len(&mut self.ctxb, rows * q_dim);
+        self.wq.forward_batch(xs, rows, &mut self.qb[..rows * q_dim])?;
+        self.wk.forward_batch(xs, rows, &mut self.kb[..rows * kv_dim])?;
+        self.wv.forward_batch(xs, rows, &mut self.vb[..rows * kv_dim])?;
 
+        // Per-position RoPE + multi-position KV append: the row at
+        // chunk offset `j` of slot `i` sits at position `base + j`,
+        // `base` being the slot's cache fill before this step.
+        let mut row = 0usize;
         for (i, &slot) in slots.iter().enumerate() {
-            let pos = self.caches[slot].len();
-            rope.apply_heads(&mut self.qb[i * q_dim..(i + 1) * q_dim], pos);
-            rope.apply_heads(&mut self.kb[i * kv_dim..(i + 1) * kv_dim], pos);
-            self.caches[slot].append(
-                &self.kb[i * kv_dim..(i + 1) * kv_dim],
-                &self.vb[i * kv_dim..(i + 1) * kv_dim],
-            )?;
+            let base = self.caches[slot].len();
+            for j in 0..counts[i] {
+                let pos = base + j;
+                rope.apply_heads(&mut self.qb[row * q_dim..(row + 1) * q_dim], pos);
+                rope.apply_heads(&mut self.kb[row * kv_dim..(row + 1) * kv_dim], pos);
+                self.caches[slot].append(
+                    &self.kb[row * kv_dim..(row + 1) * kv_dim],
+                    &self.vb[row * kv_dim..(row + 1) * kv_dim],
+                )?;
+                row += 1;
+            }
         }
 
         let hd = self.head_dim;
         let group = self.n_heads / self.n_kv_heads;
         let scale = 1.0 / (hd as f32).sqrt();
+        let mut row = 0usize;
         for (i, &slot) in slots.iter().enumerate() {
             let cache = &self.caches[slot];
-            let t = cache.len();
-            for h in 0..self.n_heads {
-                let kv_h = h / group;
-                let qh = &self.qb[i * q_dim + h * hd..i * q_dim + (h + 1) * hd];
-                let scores = &mut self.scores[..t];
-                for (p, s) in scores.iter_mut().enumerate() {
-                    let kh = &cache.key(p)[kv_h * hd..(kv_h + 1) * hd];
-                    *s = qh.iter().zip(kh.iter()).map(|(a, b)| a * b).sum::<f32>() * scale;
-                }
-                softmax(scores);
-                let ctx_h = &mut self.ctxb[i * q_dim + h * hd..i * q_dim + (h + 1) * hd];
-                ctx_h.fill(0.0);
-                for (p, &w) in scores.iter().enumerate() {
-                    let vh = &cache.value(p)[kv_h * hd..(kv_h + 1) * hd];
-                    for (c, &vv) in ctx_h.iter_mut().zip(vh.iter()) {
-                        *c += w * vv;
+            // Every chunk row is in the cache by now; the causal window
+            // of the row at offset `j` ends at its own position.
+            let base = cache.len() - counts[i];
+            for j in 0..counts[i] {
+                let t = base + j + 1;
+                for h in 0..self.n_heads {
+                    let kv_h = h / group;
+                    let qh = &self.qb[row * q_dim + h * hd..row * q_dim + (h + 1) * hd];
+                    let scores = &mut self.scores[..t];
+                    for (p, s) in scores.iter_mut().enumerate() {
+                        let kh = &cache.key(p)[kv_h * hd..(kv_h + 1) * hd];
+                        *s = qh.iter().zip(kh.iter()).map(|(a, b)| a * b).sum::<f32>()
+                            * scale;
+                    }
+                    softmax(scores);
+                    let ctx_h =
+                        &mut self.ctxb[row * q_dim + h * hd..row * q_dim + (h + 1) * hd];
+                    ctx_h.fill(0.0);
+                    for (p, &w) in scores.iter().enumerate() {
+                        let vh = &cache.value(p)[kv_h * hd..(kv_h + 1) * hd];
+                        for (c, &vv) in ctx_h.iter_mut().zip(vh.iter()) {
+                            *c += w * vv;
+                        }
                     }
                 }
+                row += 1;
             }
         }
-        self.wo.forward_batch(&self.ctxb[..b * q_dim], b, out)
+        self.wo.forward_batch(&self.ctxb[..rows * q_dim], rows, out)
     }
 }
 
@@ -293,6 +322,43 @@ mod tests {
                 assert!((x1 - x2).abs() < 1e-2 * (1.0 + x1.abs()), "{x1} vs {x2}");
             }
         }
+    }
+
+    #[test]
+    fn chunked_prefill_rows_match_sequential_decode_bitwise() {
+        // One chunk of 5 positions vs 5 single-token steps: per row the
+        // projections, RoPE, causal window and reduction perform the
+        // identical f32 sequence, so outputs must match to the last bit
+        // (owned backends route batched rows through the same per-row
+        // kernel).
+        let cfg = ModelConfig::tiny();
+        let d = cfg.d_model;
+        let rope = Rope::new(cfg.head_dim(), cfg.max_seq_len, cfg.rope_theta);
+        let mut seq = make_attn(&cfg, Backend::Standard, 211);
+        let mut chunked = make_attn(&cfg, Backend::Standard, 211);
+        let mut rng = Rng::new(213);
+        let n = 5;
+        let xs = rng.f32_vec(n * d, -1.0, 1.0);
+        let mut expect = vec![0.0; n * d];
+        for pos in 0..n {
+            let mut out = vec![0.0; d];
+            seq.forward(&xs[pos * d..(pos + 1) * d], pos, &rope, &mut out).unwrap();
+            expect[pos * d..(pos + 1) * d].copy_from_slice(&out);
+        }
+        let mut out = vec![0.0; n * d];
+        chunked.forward_chunk(&xs, &[0], &[n], &rope, &mut out).unwrap();
+        assert_eq!(out, expect, "chunked rows must be bit-identical to decode steps");
+        assert_eq!(chunked.seq_len(), n);
+
+        // A follow-up chunk continues from the cached positions: split
+        // 3 + 2 must also match.
+        let mut split = make_attn(&cfg, Backend::Standard, 211);
+        let mut o1 = vec![0.0; 3 * d];
+        let mut o2 = vec![0.0; 2 * d];
+        split.forward_chunk(&xs[..3 * d], &[0], &[3], &rope, &mut o1).unwrap();
+        split.forward_chunk(&xs[3 * d..], &[0], &[2], &rope, &mut o2).unwrap();
+        assert_eq!(&o1[..], &expect[..3 * d]);
+        assert_eq!(&o2[..], &expect[3 * d..]);
     }
 
     #[test]

@@ -85,35 +85,44 @@ impl Block {
     }
 
     /// Lockstep residual update of the stacked hidden states `hs`
-    /// (row-major `slots.len() × d`, row `i` belongs to slot
-    /// `slots[i]`). Norms and residual adds are per-row (identical
-    /// arithmetic to [`forward`](Self::forward)); the `BitLinear`
-    /// projections inside attention and the MLP run batched.
-    pub fn forward_batch(&mut self, hs: &mut [f32], slots: &[usize], rope: &Rope) -> Result<()> {
-        let b = slots.len();
+    /// (row-major `Σ counts × d`: slot `slots[i]` owns `counts[i]`
+    /// consecutive rows — one per token it feeds this step, so a decode
+    /// slot owns one row and a prefilling slot owns its whole chunk).
+    /// Norms and residual adds are per-row (identical arithmetic to
+    /// [`forward`](Self::forward)); the `BitLinear` projections inside
+    /// attention and the MLP run batched over every stacked row.
+    pub fn forward_chunk(
+        &mut self,
+        hs: &mut [f32],
+        slots: &[usize],
+        counts: &[usize],
+        rope: &Rope,
+    ) -> Result<()> {
+        let rows: usize = counts.iter().sum();
         let d = self.attn_norm.dim();
-        debug_assert_eq!(hs.len(), b * d);
-        ensure_len(&mut self.normed_b, b * d);
-        ensure_len(&mut self.branch_b, b * d);
-        for i in 0..b {
+        debug_assert_eq!(hs.len(), rows * d);
+        ensure_len(&mut self.normed_b, rows * d);
+        ensure_len(&mut self.branch_b, rows * d);
+        for i in 0..rows {
             self.attn_norm
                 .forward(&hs[i * d..(i + 1) * d], &mut self.normed_b[i * d..(i + 1) * d]);
         }
-        self.attn.forward_batch(
-            &self.normed_b[..b * d],
+        self.attn.forward_chunk(
+            &self.normed_b[..rows * d],
             slots,
+            counts,
             rope,
-            &mut self.branch_b[..b * d],
+            &mut self.branch_b[..rows * d],
         )?;
-        for i in 0..b {
+        for i in 0..rows {
             add_assign(&mut hs[i * d..(i + 1) * d], &self.branch_b[i * d..(i + 1) * d]);
         }
-        for i in 0..b {
+        for i in 0..rows {
             self.mlp_norm
                 .forward(&hs[i * d..(i + 1) * d], &mut self.normed_b[i * d..(i + 1) * d]);
         }
-        self.mlp.forward_batch(&self.normed_b[..b * d], b, &mut self.branch_b[..b * d])?;
-        for i in 0..b {
+        self.mlp.forward_chunk(&self.normed_b[..rows * d], rows, &mut self.branch_b[..rows * d])?;
+        for i in 0..rows {
             add_assign(&mut hs[i * d..(i + 1) * d], &self.branch_b[i * d..(i + 1) * d]);
         }
         Ok(())

@@ -69,6 +69,15 @@ impl Mlp {
         }
         self.down.forward_batch(&self.gb[..batch * d_ff], batch, out)
     }
+
+    /// Chunked-prefill forward. The MLP holds no per-position state, so
+    /// a chunk step is exactly a batched step over the stacked rows
+    /// (`rows = Σ counts` of the step): this is a documented alias of
+    /// [`forward_batch`](Self::forward_batch), kept so the chunk
+    /// pipeline reads uniformly across `Attention`/`Block`/`Mlp`.
+    pub fn forward_chunk(&mut self, xs: &[f32], rows: usize, out: &mut [f32]) -> Result<()> {
+        self.forward_batch(xs, rows, out)
+    }
 }
 
 #[cfg(test)]

@@ -1,6 +1,9 @@
 //! The assembled decoder-only transformer: embedding → blocks → final
 //! norm → LM head, decoding one token per forward pass (the paper's
-//! §5.3 setting).
+//! §5.3 setting), with a lockstep batched step for continuous decoding
+//! and a chunked step ([`Transformer::forward_chunk`]) that prefills
+//! several prompt tokens per pass by stacking them along the batch
+//! dimension of the same kernels.
 
 use super::attention::Attention;
 use super::bitlinear::BitLinear;
@@ -22,12 +25,17 @@ pub const MAX_SLOTS: usize = 1 << 16;
 
 /// A ready-to-run model instance: prepared weights on one backend.
 ///
-/// Decoding has two entry points: [`forward_token`](Self::forward_token)
-/// (one sequence, slot 0 — the paper's §5.3 single-vector setting) and
+/// Decoding has three entry points: [`forward_token`](Self::forward_token)
+/// (one sequence, slot 0 — the paper's §5.3 single-vector setting),
 /// [`forward_batch`](Self::forward_batch) (continuous batched decode:
 /// `B` sequences stepped in lockstep against per-slot KV caches, every
 /// `BitLinear` reading its shared plan index once per step instead of
-/// once per sequence).
+/// once per sequence), and [`forward_chunk`](Self::forward_chunk)
+/// (chunked prefill: a slot may feed several consecutive prompt tokens
+/// in one pass, stacked along the same batch dimension — one shared
+/// index read covers the whole chunk). `forward_batch` **is** the
+/// chunk path with every count equal to one, so there is a single
+/// lockstep implementation and the two can never diverge.
 pub struct Transformer {
     config: ModelConfig,
     backend: Backend,
@@ -43,6 +51,9 @@ pub struct Transformer {
     hidden_b: Vec<f32>,
     normed_b: Vec<f32>,
     batch_logits: Vec<f32>,
+    /// All-ones chunk lengths, reused so `forward_batch` delegates to
+    /// the chunk path without a per-step allocation.
+    ones: Vec<usize>,
 }
 
 impl Transformer {
@@ -85,6 +96,7 @@ impl Transformer {
             hidden_b: Vec::new(),
             normed_b: Vec::new(),
             batch_logits: Vec::new(),
+            ones: Vec::new(),
             blocks,
             backend,
             config: cfg,
@@ -197,6 +209,7 @@ impl Transformer {
             hidden_b: Vec::new(),
             normed_b: Vec::new(),
             batch_logits: Vec::new(),
+            ones: Vec::new(),
             blocks,
             backend: Backend::RsrPlusPlus,
             config: cfg,
@@ -311,11 +324,81 @@ impl Transformer {
     /// the allocated count are grown on demand
     /// ([`ensure_slots`](Self::ensure_slots)).
     pub fn forward_batch(&mut self, tokens: &[u32], slots: &[usize]) -> Result<&[f32]> {
-        let b = tokens.len();
-        if b == 0 || b != slots.len() {
+        if tokens.len() != slots.len() {
             return Err(Error::Config(format!(
-                "forward_batch: {b} tokens for {} slots",
+                "forward_batch: {} tokens for {} slots",
+                tokens.len(),
                 slots.len()
+            )));
+        }
+        let mut ones = std::mem::take(&mut self.ones);
+        ones.clear();
+        ones.resize(slots.len(), 1);
+        let rows = self.forward_chunk_impl(tokens, slots, &ones);
+        self.ones = ones;
+        let rows = rows?;
+        Ok(&self.batch_logits[..rows * self.config.vocab_size])
+    }
+
+    /// One **chunked lockstep step**: slot `slots[i]` feeds `counts[i]`
+    /// consecutive tokens this pass — its next `counts[i]` prompt
+    /// tokens while prefilling, exactly one token while decoding. The
+    /// concatenated `tokens` (length `Σ counts`, slot-major, in
+    /// sequence order) are stacked along the **batch dimension** of the
+    /// batched flat kernels, so one shared-index read per layer covers
+    /// the whole chunk — the paper's reuse argument applied to the
+    /// sequence axis, which is what makes prefill a matrix–matrix
+    /// workload instead of `prompt_len` decode-rate steps.
+    ///
+    /// Returns the stacked logits (row-major `Σ counts × vocab_size`;
+    /// the rows of slot `i` start at `counts[..i]` summed). Per row the
+    /// kernels perform the identical f32 addition sequence at every
+    /// batch size and the attention window of the row at chunk offset
+    /// `j` is truncated to its own position, so chunked prefill is
+    /// **bit-identical** to feeding the same tokens one step at a time
+    /// — the correctness spine `rust/tests/prefill.rs` pins.
+    ///
+    /// Slots must be distinct within one step; every count must be at
+    /// least 1 and fit the slot's remaining context. Everything is
+    /// validated before any cache is touched, so a failed call leaves
+    /// no partial state behind.
+    pub fn forward_chunk(
+        &mut self,
+        tokens: &[u32],
+        slots: &[usize],
+        counts: &[usize],
+    ) -> Result<&[f32]> {
+        let rows = self.forward_chunk_impl(tokens, slots, counts)?;
+        Ok(&self.batch_logits[..rows * self.config.vocab_size])
+    }
+
+    /// The single lockstep implementation behind
+    /// [`forward_batch`](Self::forward_batch) and
+    /// [`forward_chunk`](Self::forward_chunk); returns the stacked row
+    /// count (logits live in `self.batch_logits`).
+    fn forward_chunk_impl(
+        &mut self,
+        tokens: &[u32],
+        slots: &[usize],
+        counts: &[usize],
+    ) -> Result<usize> {
+        let b = slots.len();
+        if b == 0 || counts.len() != b {
+            return Err(Error::Config(format!(
+                "forward_chunk: {b} slots with {} chunk lengths",
+                counts.len()
+            )));
+        }
+        if counts.iter().any(|&c| c == 0) {
+            return Err(Error::Config(
+                "forward_chunk: every slot in a step must feed at least one token".into(),
+            ));
+        }
+        let rows: usize = counts.iter().sum();
+        if tokens.len() != rows {
+            return Err(Error::Config(format!(
+                "forward_chunk: {} tokens for {rows} stacked rows",
+                tokens.len()
             )));
         }
         for (i, &s) in slots.iter().enumerate() {
@@ -324,12 +407,12 @@ impl Transformer {
             // overflow panic or an OOM abort.
             if s >= MAX_SLOTS {
                 return Err(Error::Config(format!(
-                    "forward_batch: slot {s} exceeds the slot cap {MAX_SLOTS}"
+                    "forward_chunk: slot {s} exceeds the slot cap {MAX_SLOTS}"
                 )));
             }
             if slots[..i].contains(&s) {
                 return Err(Error::Config(format!(
-                    "forward_batch: slot {s} appears twice in one step"
+                    "forward_chunk: slot {s} appears twice in one step"
                 )));
             }
         }
@@ -338,38 +421,43 @@ impl Transformer {
         }
         // Validate every row up front: a failure here must leave no
         // partial KV appends behind.
-        for (&t, &s) in tokens.iter().zip(slots.iter()) {
+        for &t in tokens {
             if t as usize >= self.config.vocab_size {
                 return Err(Error::Config(format!("token {t} out of vocab")));
             }
-            if self.seq_len_slot(s) >= self.config.max_seq_len {
+        }
+        for (&s, &c) in slots.iter().zip(counts.iter()) {
+            if self.seq_len_slot(s) + c > self.config.max_seq_len {
                 return Err(Error::Serving(format!(
                     "slot {s}: sequence exceeds max_seq_len"
                 )));
             }
         }
         let d = self.config.d_model;
-        super::tensor::ensure_len(&mut self.hidden_b, b * d);
+        super::tensor::ensure_len(&mut self.hidden_b, rows * d);
         for (i, &t) in tokens.iter().enumerate() {
             let t = t as usize;
             self.hidden_b[i * d..(i + 1) * d]
                 .copy_from_slice(&self.embedding[t * d..(t + 1) * d]);
         }
         for block in &mut self.blocks {
-            block.forward_batch(&mut self.hidden_b[..b * d], slots, &self.rope)?;
+            block.forward_chunk(&mut self.hidden_b[..rows * d], slots, counts, &self.rope)?;
         }
-        super::tensor::ensure_len(&mut self.normed_b, b * d);
-        for i in 0..b {
+        super::tensor::ensure_len(&mut self.normed_b, rows * d);
+        for i in 0..rows {
             self.final_norm.forward(
                 &self.hidden_b[i * d..(i + 1) * d],
                 &mut self.normed_b[i * d..(i + 1) * d],
             );
         }
         let v = self.config.vocab_size;
-        super::tensor::ensure_len(&mut self.batch_logits, b * v);
-        self.lm_head
-            .forward_batch(&self.normed_b[..b * d], b, &mut self.batch_logits[..b * v])?;
-        Ok(&self.batch_logits[..b * v])
+        super::tensor::ensure_len(&mut self.batch_logits, rows * v);
+        self.lm_head.forward_batch(
+            &self.normed_b[..rows * d],
+            rows,
+            &mut self.batch_logits[..rows * v],
+        )?;
+        Ok(rows)
     }
 
     /// Feed a prompt (prefill) and greedily decode `max_new` tokens.
@@ -521,6 +609,55 @@ mod tests {
         assert_eq!(m.seq_len_slot(0), 0);
         assert!(m.forward_batch(&[1], &[1]).is_ok());
         assert_eq!(m.seq_len_slot(1), 1);
+    }
+
+    #[test]
+    fn forward_chunk_rejects_malformed_steps_without_partial_state() {
+        let w = tiny_weights();
+        let mut m = Transformer::from_weights(&w, Backend::Standard, 0).unwrap();
+        // Zero count, token/row mismatch, count-length mismatch,
+        // duplicate slot, context overflow.
+        assert!(m.forward_chunk(&[1], &[0], &[0]).is_err());
+        assert!(m.forward_chunk(&[1, 2, 3], &[0], &[2]).is_err());
+        assert!(m.forward_chunk(&[1, 2], &[0], &[1, 1]).is_err());
+        assert!(m.forward_chunk(&[1, 2, 3, 4], &[0, 0], &[2, 2]).is_err());
+        let max = w.config.max_seq_len;
+        assert!(m.forward_chunk(&vec![1; max + 1], &[0], &[max + 1]).is_err());
+        assert_eq!(m.seq_len_slot(0), 0, "failed chunk steps must leave no KV appends");
+        // A valid chunk appends exactly its count.
+        assert!(m.forward_chunk(&[1, 2, 3], &[0], &[3]).is_ok());
+        assert_eq!(m.seq_len_slot(0), 3);
+    }
+
+    #[test]
+    fn chunked_prefill_is_bitwise_token_by_token_on_owned_backends() {
+        // Owned backends execute the identical per-row kernel on every
+        // entry point, so each chunk row's logits must equal the
+        // corresponding forward_token step to the last bit — including
+        // a ragged tail chunk and a chunk covering the whole prompt.
+        let w = tiny_weights();
+        let prompt = [5u32, 6, 7, 8, 9, 10, 11];
+        let v = w.config.vocab_size;
+        let mut seq = Transformer::from_weights(&w, Backend::Standard, 0).unwrap();
+        let per_step: Vec<Vec<f32>> = prompt
+            .iter()
+            .map(|&t| seq.forward_token(t).unwrap().to_vec())
+            .collect();
+        for chunk in [2usize, 3, prompt.len()] {
+            let mut m = Transformer::from_weights(&w, Backend::Standard, 0).unwrap();
+            let mut rows: Vec<Vec<f32>> = Vec::new();
+            let mut p = 0;
+            while p < prompt.len() {
+                let take = chunk.min(prompt.len() - p);
+                let logits = m.forward_chunk(&prompt[p..p + take], &[0], &[take]).unwrap();
+                for r in 0..take {
+                    rows.push(logits[r * v..(r + 1) * v].to_vec());
+                }
+                p += take;
+            }
+            assert_eq!(rows, per_step, "chunk {chunk} diverged from token-by-token");
+            assert_eq!(m.seq_len_slot(0), prompt.len());
+        }
     }
 
     #[test]

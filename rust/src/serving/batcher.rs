@@ -22,11 +22,32 @@ pub struct BatchPolicy {
     /// slots mid-flight ([`poll`](Batcher::poll)). `1` serves strictly
     /// sequentially: the exact pre-batching code path, bit-for-bit.
     pub max_slots: usize,
+    /// Chunked-prefill knob: how many unconsumed prompt tokens a slot
+    /// may feed in one lockstep step, stacked along the batch dimension
+    /// of the batched RSR kernels (one shared-index read per layer
+    /// covers the whole chunk — the time-to-first-token lever). The
+    /// value doubles as the **per-step chunk budget**: the total prompt
+    /// rows one step stacks is capped at
+    /// `max(prefill_chunk, prefilling slots)` — the fair share
+    /// `prefill_chunk / prefilling` per slot, floored at one token so
+    /// every slot always advances (with more prefilling slots than
+    /// budget, each simply degrades to one-token prefill). One long
+    /// prompt therefore cannot starve decoding batchmates. `1` feeds
+    /// prompts one
+    /// token per step — the exact pre-chunking path. Chunked prefill is
+    /// bit-identical to it by construction (and by
+    /// `rust/tests/prefill.rs`).
+    pub prefill_chunk: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        Self { max_batch: 8, max_wait: Duration::from_millis(2), max_slots: 8 }
+        Self {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            max_slots: 8,
+            prefill_chunk: 8,
+        }
     }
 }
 
@@ -102,7 +123,7 @@ mod tests {
         }
         let b = Batcher::new(
             Arc::clone(&q),
-            BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10), max_slots: 4 },
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10), ..Default::default() },
         );
         let t0 = Instant::now();
         let batch = b.next_batch(Duration::from_secs(1)).unwrap();
@@ -116,7 +137,7 @@ mod tests {
         q.try_push(req(0)).unwrap();
         let b = Batcher::new(
             Arc::clone(&q),
-            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(20), max_slots: 8 },
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(20), ..Default::default() },
         );
         let t0 = Instant::now();
         let batch = b.next_batch(Duration::from_secs(1)).unwrap();

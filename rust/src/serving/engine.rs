@@ -333,11 +333,14 @@ fn worker_loop(
     shutdown: Arc<AtomicBool>,
     cfg: &EngineConfig,
 ) {
-    // `max_slots == 1` degrades to the strictly sequential loop — the
-    // exact pre-batching code path, bit for bit. Anything larger runs
-    // continuous batching: a slot map stepped in lockstep, finished
-    // sequences retiring and queued requests joining mid-flight.
-    if cfg.batch.max_slots <= 1 {
+    // `max_slots == 1` with `prefill_chunk == 1` degrades to the
+    // strictly sequential loop — the exact pre-batching code path, bit
+    // for bit. Anything larger runs continuous batching: a slot map
+    // stepped in lockstep, finished sequences retiring and queued
+    // requests joining mid-flight. A single slot with a chunk > 1
+    // still takes the continuous loop: chunked prefill pays off even
+    // with no batchmates (that is the time-to-first-token case).
+    if cfg.batch.max_slots <= 1 && cfg.batch.prefill_chunk <= 1 {
         sequential_loop(model, queue, metrics, tx, inflight, shutdown, cfg);
     } else {
         continuous_loop(model, queue, metrics, tx, inflight, shutdown, cfg);
@@ -368,7 +371,13 @@ fn sequential_loop(
         for request in schedule(batch.requests, cfg.schedule) {
             let response = run_request(&mut model, &request, &mut rng);
             match &response.error {
-                None => metrics.record(&response.timing, response.tokens.len()),
+                None => {
+                    metrics.record(
+                        &response.timing,
+                        response.tokens.len(),
+                        request.prompt.len(),
+                    );
+                }
                 Some(_) => metrics.record_failure(),
             }
             inflight.fetch_sub(1, Ordering::Relaxed);
@@ -382,8 +391,9 @@ fn sequential_loop(
 /// One live sequence in the continuous-batching slot map.
 struct SlotState {
     request: Request,
-    /// Next token to feed: `prompt[prompt_pos]` while prefilling, the
-    /// last sampled token while decoding.
+    /// Next token to feed while decoding (the last sampled token).
+    /// While prefilling, the step assembly reads the chunk straight
+    /// from `request.prompt[prompt_pos..]` instead.
     next_input: u32,
     /// Prompt tokens consumed so far; `== prompt.len()` once decoding.
     prompt_pos: usize,
@@ -404,6 +414,7 @@ fn finish_slot(
     tx: &mpsc::Sender<Response>,
 ) -> bool {
     let now = Instant::now();
+    let prompt_tokens = slot.request.prompt.len();
     let response = match error {
         Some(msg) => Response::err(slot.request.id, msg),
         None => {
@@ -417,7 +428,7 @@ fn finish_slot(
         }
     };
     match &response.error {
-        None => metrics.record(&response.timing, response.tokens.len()),
+        None => metrics.record(&response.timing, response.tokens.len(), prompt_tokens),
         Some(_) => metrics.record_failure(),
     }
     inflight.fetch_sub(1, Ordering::Relaxed);
@@ -426,17 +437,29 @@ fn finish_slot(
 
 /// The continuous-batching worker: a slot map of up to
 /// `cfg.batch.max_slots` sequences stepped in lockstep through
-/// [`Transformer::forward_batch`]. Each step feeds every live slot one
-/// token — prompt tokens for prefilling slots, the last sampled token
-/// for decoding ones — so prefill rides the same batched multiplies as
-/// decode, every layer reading its shared plan index once per step
-/// instead of once per sequence. Finished sequences retire their slot;
-/// queued requests are admitted into free slots between steps without
-/// ever stalling the live ones ([`Batcher::poll`]).
+/// [`Transformer::forward_chunk`]. Each step feeds every decoding slot
+/// its last sampled token, and every **prefilling** slot a chunk of up
+/// to `cfg.batch.prefill_chunk` unconsumed prompt tokens stacked along
+/// the batch dimension — so a prompt is consumed as a matrix–matrix
+/// workload (one shared-index read per layer per chunk) instead of one
+/// decode-rate step per token, which is where time-to-first-token is
+/// won. Finished sequences retire their slot; queued requests are
+/// admitted into free slots between steps without ever stalling the
+/// live ones ([`Batcher::poll`]).
 ///
-/// Per-sequence results are independent of batchmates (see
-/// [`Transformer::forward_batch`]), so joins and retirements never
-/// perturb the tokens of in-flight sequences.
+/// **Per-step chunk budget:** the total prompt rows one step stacks is
+/// capped at `max(prefill_chunk, prefilling slots)` — the fair share
+/// `prefill_chunk / prefilling` per slot, floored at one token so
+/// every slot still advances each step (more prefilling slots than
+/// budget degrades each to one-token prefill, the pre-chunk baseline).
+/// One long prompt inflates a step by at most `prefill_chunk − 1` rows
+/// and can never starve decoding batchmates of their once-per-step
+/// token.
+///
+/// Per-sequence results are independent of batchmates and chunking is
+/// bit-identical to one-token prefill (see
+/// [`Transformer::forward_chunk`]), so joins, retirements and chunk
+/// boundaries never perturb the tokens of in-flight sequences.
 fn continuous_loop(
     mut model: Transformer,
     queue: Arc<BoundedQueue<Request>>,
@@ -446,7 +469,8 @@ fn continuous_loop(
     shutdown: Arc<AtomicBool>,
     cfg: &EngineConfig,
 ) {
-    let max_slots = cfg.batch.max_slots;
+    let max_slots = cfg.batch.max_slots.max(1);
+    let prefill_chunk = cfg.batch.prefill_chunk.max(1);
     model.ensure_slots(max_slots);
     // The idle pickup must never admit more requests than there are
     // slots to hold them.
@@ -458,7 +482,8 @@ fn continuous_loop(
     let vocab = model.config().vocab_size;
     let mut slots: Vec<Option<SlotState>> = (0..max_slots).map(|_| None).collect();
     let mut step_slots: Vec<usize> = Vec::with_capacity(max_slots);
-    let mut step_tokens: Vec<u32> = Vec::with_capacity(max_slots);
+    let mut step_tokens: Vec<u32> = Vec::with_capacity(max_slots * prefill_chunk);
+    let mut step_counts: Vec<usize> = Vec::with_capacity(max_slots);
     let mut len_after: Vec<usize> = Vec::with_capacity(max_slots);
     let mut retired: Vec<usize> = Vec::with_capacity(max_slots);
     loop {
@@ -504,18 +529,35 @@ fn continuous_loop(
                 request,
             });
         }
+        // Fair-share chunk budget for this step: `prefill_chunk` total
+        // prompt rows, split across the slots currently prefilling
+        // (integer share, floor 1 — every slot always advances). With
+        // one prefilling slot the full chunk goes to it; with many, no
+        // single prompt can monopolize the step.
+        let prefilling = slots
+            .iter()
+            .flatten()
+            .filter(|st| st.prompt_pos < st.request.prompt.len())
+            .count();
+        let share = if prefilling == 0 { 1 } else { (prefill_chunk / prefilling).max(1) };
         // Assemble the ragged step, retiring slots that cannot take
         // another token — a bad request fails alone, never the batch.
         step_slots.clear();
         step_tokens.clear();
+        step_counts.clear();
         len_after.clear();
         for i in 0..max_slots {
             let Some(st) = &slots[i] else { continue };
-            let phase =
-                if st.prompt_pos < st.request.prompt.len() { "prefill" } else { "decode" };
-            let failure = if st.next_input as usize >= vocab {
-                Some(format!("{phase}: token {} out of vocab", st.next_input))
-            } else if model.seq_len_slot(i) >= max_seq {
+            let prompt = &st.request.prompt;
+            let prefill = st.prompt_pos < prompt.len();
+            let phase = if prefill { "prefill" } else { "decode" };
+            let seq = model.seq_len_slot(i);
+            // Validate the first token the step would feed — exactly
+            // the failure (and message) the one-token path produced.
+            let first = if prefill { prompt[st.prompt_pos] } else { st.next_input };
+            let failure = if first as usize >= vocab {
+                Some(format!("{phase}: token {first} out of vocab"))
+            } else if seq >= max_seq {
                 Some(format!("{phase}: sequence exceeds max_seq_len"))
             } else {
                 None
@@ -527,15 +569,38 @@ fn continuous_loop(
                 }
                 continue;
             }
+            let take = if prefill {
+                let mut take =
+                    (prompt.len() - st.prompt_pos).min(share).min(max_seq - seq);
+                // An invalid token mid-chunk truncates the chunk to the
+                // valid prefix: the prefix is consumed exactly as the
+                // one-token path would consume it, and the bad token
+                // fails on the next step with the same message.
+                for (j, &t) in prompt[st.prompt_pos..st.prompt_pos + take]
+                    .iter()
+                    .enumerate()
+                {
+                    if t as usize >= vocab {
+                        take = j;
+                        break;
+                    }
+                }
+                debug_assert!(take >= 1, "first token was validated above");
+                step_tokens.extend_from_slice(&prompt[st.prompt_pos..st.prompt_pos + take]);
+                take
+            } else {
+                step_tokens.push(st.next_input);
+                1
+            };
             step_slots.push(i);
-            step_tokens.push(st.next_input);
-            len_after.push(model.seq_len_slot(i) + 1);
+            step_counts.push(take);
+            len_after.push(seq + take);
         }
         if step_slots.is_empty() {
             continue;
         }
         let t0 = Instant::now();
-        let logits = match model.forward_batch(&step_tokens, &step_slots) {
+        let logits = match model.forward_chunk(&step_tokens, &step_slots, &step_counts) {
             Ok(l) => l,
             Err(e) => {
                 // Per-slot preconditions were checked above, so a step
@@ -553,30 +618,35 @@ fn continuous_loop(
             }
         };
         let step_dur = t0.elapsed();
-        // Advance every row: prefill consumes prompt tokens silently;
-        // the step that feeds the final prompt token samples the first
-        // generated one (exactly `run_request`'s sequencing, per slot).
+        // Advance every slot: prefill consumes its chunk silently; the
+        // step that feeds the final prompt token samples the first
+        // generated one from the chunk's **last row** (exactly
+        // `run_request`'s sequencing, per slot).
         retired.clear();
-        for (row, &i) in step_slots.iter().enumerate() {
+        let mut row0 = 0usize;
+        for (idx, &i) in step_slots.iter().enumerate() {
+            let c = step_counts[idx];
+            let last_row = row0 + c - 1;
+            row0 += c;
             let st = slots[i].as_mut().expect("was in the step");
-            if st.prompt_pos + 1 < st.request.prompt.len() {
-                st.prompt_pos += 1;
-                st.next_input = st.request.prompt[st.prompt_pos];
-                continue; // mid-prefill: logits unused
-            }
-            if st.prefill_done.is_none() {
-                st.prompt_pos = st.request.prompt.len();
+            if st.prompt_pos < st.request.prompt.len() {
+                st.prompt_pos += c;
+                if st.prompt_pos < st.request.prompt.len() {
+                    continue; // mid-prefill: logits unused
+                }
+                // This step consumed the final prompt token.
                 st.prefill_done = Some(Instant::now());
                 if st.request.max_new_tokens == 0 {
                     retired.push(i);
                     continue;
                 }
             }
-            let next = sampler.sample(&logits[row * vocab..(row + 1) * vocab], &mut rng);
+            let next =
+                sampler.sample(&logits[last_row * vocab..(last_row + 1) * vocab], &mut rng);
             st.tokens.push(next);
             if st.tokens.len() >= st.request.max_new_tokens
                 || next == crate::model::tokenizer::EOS
-                || len_after[row] >= max_seq
+                || len_after[idx] >= max_seq
             {
                 retired.push(i);
             } else {
@@ -691,12 +761,16 @@ mod tests {
             Arc::new(ModelWeights::generate(ModelConfig::tiny(), 99).unwrap());
         let prompts: Vec<Vec<u32>> =
             (0..6u32).map(|i| vec![10 + i, 20, 30 + (i % 3)]).collect();
-        let run = |max_slots: usize| -> Vec<Vec<u32>> {
+        // `prefill_chunk: 1` alongside `max_slots: 1` pins the strictly
+        // sequential worker loop (the default chunk of 8 would route a
+        // single slot through the continuous loop, and this test exists
+        // to compare the two loops, not the continuous loop to itself).
+        let run = |max_slots: usize, prefill_chunk: usize| -> Vec<Vec<u32>> {
             let engine = InferenceEngine::start(
                 Arc::clone(&weights),
                 EngineConfig {
                     workers: 1,
-                    batch: BatchPolicy { max_slots, ..Default::default() },
+                    batch: BatchPolicy { max_slots, prefill_chunk, ..Default::default() },
                     ..Default::default()
                 },
             )
@@ -716,7 +790,9 @@ mod tests {
             out.sort_by_key(|(id, _)| *id);
             out.into_iter().map(|(_, t)| t).collect()
         };
-        assert_eq!(run(1), run(4), "batched decode must match sequential decode");
+        let sequential = run(1, 1);
+        assert_eq!(run(4, 8), sequential, "batched+chunked decode must match sequential");
+        assert_eq!(run(4, 1), sequential, "batched unchunked decode must match sequential");
     }
 
     #[test]

@@ -31,6 +31,14 @@ pub struct Metrics {
     /// Wall nanoseconds spent inside model steps (prefill + decode) —
     /// the denominator of the aggregate tokens/sec figure.
     pub decode_busy_ns: AtomicU64,
+    /// Prompt tokens consumed by completed requests — the numerator of
+    /// `prefill_tokens_per_sec`, the number chunked prefill moves.
+    pub prefill_tokens: AtomicU64,
+    /// Wall nanoseconds of per-request prefill (pickup → first token),
+    /// summed across requests. Concurrent prefills overlap, so this is
+    /// a per-request-experienced denominator, not a busy-time one —
+    /// the resulting rate is what a caller observes, conservatively.
+    pub prefill_wall_ns: AtomicU64,
     hist: Mutex<Hists>,
 }
 
@@ -40,6 +48,9 @@ struct Hists {
     prefill: LatencyHistogram,
     decode: LatencyHistogram,
     total: LatencyHistogram,
+    /// Time to first token: queue wait + prefill, per completed
+    /// request — the latency chunked prefill exists to cut.
+    ttft: LatencyHistogram,
 }
 
 impl Metrics {
@@ -48,15 +59,21 @@ impl Metrics {
         Self::default()
     }
 
-    /// Record a completed request's timing.
-    pub fn record(&self, timing: &super::request::Timing, tokens: usize) {
+    /// Record a completed request's timing. `prompt_tokens` is the
+    /// request's consumed prompt length (feeds the TTFT and
+    /// prefill-throughput aggregates).
+    pub fn record(&self, timing: &super::request::Timing, tokens: usize, prompt_tokens: usize) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.tokens_out.fetch_add(tokens as u64, Ordering::Relaxed);
+        self.prefill_tokens.fetch_add(prompt_tokens as u64, Ordering::Relaxed);
+        self.prefill_wall_ns
+            .fetch_add(timing.prefill.as_nanos() as u64, Ordering::Relaxed);
         let mut h = self.hist.lock().unwrap();
         h.queue.record(timing.queue);
         h.prefill.record(timing.prefill);
         h.decode.record(timing.decode);
         h.total.record(timing.total());
+        h.ttft.record(timing.queue + timing.prefill);
     }
 
     /// Record a failure.
@@ -106,6 +123,11 @@ impl Metrics {
         // included in the denominator, prompt tokens not in the
         // numerator — a conservative aggregate throughput).
         let tps = if busy_ns > 0 { tokens as f64 / (busy_ns as f64 / 1e9) } else { 0.0 };
+        // Prompt tokens per second of per-request prefill wall time —
+        // the throughput chunked prefill raises (the TTFT lever).
+        let p_tokens = self.prefill_tokens.load(Ordering::Relaxed);
+        let p_ns = self.prefill_wall_ns.load(Ordering::Relaxed);
+        let ptps = if p_ns > 0 { p_tokens as f64 / (p_ns as f64 / 1e9) } else { 0.0 };
         Json::obj(vec![
             ("admitted", Json::num(self.admitted.load(Ordering::Relaxed) as f64)),
             ("rejected", Json::num(self.rejected.load(Ordering::Relaxed) as f64)),
@@ -115,6 +137,9 @@ impl Metrics {
             ("decode_steps", Json::num(steps as f64)),
             ("batch_occupancy_mean", Json::num(occupancy)),
             ("tokens_per_sec", Json::num(tps)),
+            ("prefill_tokens", Json::num(p_tokens as f64)),
+            ("prefill_tokens_per_sec", Json::num(ptps)),
+            ("ttft_us", phase(&h.ttft)),
             ("queue", phase(&h.queue)),
             ("prefill", phase(&h.prefill)),
             ("decode", phase(&h.decode)),
@@ -148,6 +173,7 @@ mod tests {
                 decode: Duration::from_micros(700),
             },
             5,
+            16,
         );
         m.record_failure();
         let snap = m.snapshot();
@@ -159,6 +185,15 @@ mod tests {
         let total = snap.get("total").unwrap();
         assert_eq!(total.get("count").unwrap().as_f64(), Some(1.0));
         assert!(total.get("mean_us").unwrap().as_f64().unwrap() >= 1000.0);
+        // TTFT = queue + prefill = 300us; 16 prompt tokens over 200us
+        // of prefill = 80k tok/s.
+        assert_eq!(snap.get("prefill_tokens").unwrap().as_f64(), Some(16.0));
+        let ttft = snap.get("ttft_us").unwrap();
+        assert_eq!(ttft.get("count").unwrap().as_f64(), Some(1.0));
+        let mean = ttft.get("mean_us").unwrap().as_f64().unwrap();
+        assert!((250.0..=350.0).contains(&mean), "{mean}");
+        let ptps = snap.get("prefill_tokens_per_sec").unwrap().as_f64().unwrap();
+        assert!((ptps - 80_000.0).abs() < 1.0, "{ptps}");
     }
 
     #[test]
@@ -171,7 +206,7 @@ mod tests {
         m.record_decode_step(4, Duration::from_millis(1));
         m.record_decode_step(3, Duration::from_millis(1));
         m.record_decode_step(1, Duration::from_millis(2));
-        m.record(&Timing::default(), 8);
+        m.record(&Timing::default(), 8, 4);
         let snap = m.snapshot();
         assert_eq!(snap.get("decode_steps").unwrap().as_f64(), Some(3.0));
         let occ = snap.get("batch_occupancy_mean").unwrap().as_f64().unwrap();

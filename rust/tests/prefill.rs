@@ -1,0 +1,304 @@
+//! Chunked prefill equivalence — the correctness spine of the chunked
+//! prefill PR: feeding a prompt in chunks of ≥ 2 tokens through
+//! [`Transformer::forward_chunk`] must produce **bit-identical** logits
+//! and greedy tokens to feeding it one token per step, because per row
+//! the batched flat kernels perform the identical f32 addition sequence
+//! at every batch size and the attention window of a chunk row is
+//! truncated to its own position.
+//!
+//! Covered here:
+//! * logit + greedy-token bit-exactness of chunk ∈ {2, 8, prompt_len}
+//!   vs chunk 1 across **every** `TunedBackend` (profile-forced stores)
+//!   and the untuned shared-plan store,
+//! * ragged prompts shorter than the chunk,
+//! * a chunk boundary landing mid-prompt while decode slots are live in
+//!   the same lockstep step (mixed counts),
+//! * engine-level equality of `--prefill-chunk {1, 2, 8}` under mixed
+//!   prompt lengths, and the TTFT / prefill-throughput metrics.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use rsr::model::config::ModelConfig;
+use rsr::model::tensor::argmax;
+use rsr::model::tokenizer::EOS;
+use rsr::model::transformer::Transformer;
+use rsr::model::weights::ModelWeights;
+use rsr::runtime::PlanStore;
+use rsr::serving::batcher::BatchPolicy;
+use rsr::serving::engine::{EngineConfig, InferenceEngine};
+use rsr::serving::request::Request;
+use rsr::tune::{LayerChoice, LayerProfile, MachineFingerprint, TuneProfile, TunedBackend};
+
+fn tiny_weights() -> ModelWeights {
+    ModelWeights::generate(ModelConfig::tiny(), 42).unwrap()
+}
+
+/// A profile forcing one `(backend, k)` on every layer — the same
+/// helper the tune tests use, so every `TunedBackend` can be pinned
+/// under the chunk path.
+fn forced_profile(weights: &ModelWeights, backend: TunedBackend, k: usize) -> TuneProfile {
+    let layers = weights
+        .named_matrices()
+        .into_iter()
+        .map(|(name, m, _scale)| LayerProfile {
+            name,
+            rows: m.rows(),
+            cols: m.cols(),
+            chain: vec![LayerChoice { backend, k, ns: 1.0 }],
+        })
+        .collect();
+    TuneProfile::new(MachineFingerprint::current(), layers).unwrap()
+}
+
+/// Greedy lockstep driver mirroring the engine's continuous loop with
+/// chunked prefill: slot `s` prefills its prompt `chunks[s]` tokens per
+/// step (ragged tail included), then decodes greedily to `max_new[s]`.
+/// Returns, per slot, the per-position prefill logits (the bit-exact
+/// artifact) and the generated tokens.
+fn drive(
+    model: &mut Transformer,
+    prompts: &[Vec<u32>],
+    max_new: &[usize],
+    chunks: &[usize],
+) -> (Vec<Vec<Vec<f32>>>, Vec<Vec<u32>>) {
+    let n = prompts.len();
+    model.ensure_slots(n);
+    for s in 0..n {
+        model.reset_slot(s);
+    }
+    let vocab = model.config().vocab_size;
+    let max_seq = model.config().max_seq_len;
+    let mut prefill_logits: Vec<Vec<Vec<f32>>> = vec![Vec::new(); n];
+    let mut outs: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let mut pos = vec![0usize; n];
+    let mut next = vec![0u32; n];
+    let mut done = vec![false; n];
+    while done.iter().any(|&d| !d) {
+        let mut slots = Vec::new();
+        let mut counts = Vec::new();
+        let mut tokens = Vec::new();
+        for s in 0..n {
+            if done[s] {
+                continue;
+            }
+            if pos[s] < prompts[s].len() {
+                let take = chunks[s].max(1).min(prompts[s].len() - pos[s]);
+                tokens.extend_from_slice(&prompts[s][pos[s]..pos[s] + take]);
+                counts.push(take);
+            } else {
+                tokens.push(next[s]);
+                counts.push(1);
+            }
+            slots.push(s);
+        }
+        let logits = model.forward_chunk(&tokens, &slots, &counts).unwrap().to_vec();
+        let mut row0 = 0usize;
+        for (i, &s) in slots.iter().enumerate() {
+            let c = counts[i];
+            let last = row0 + c - 1;
+            if pos[s] < prompts[s].len() {
+                for r in row0..row0 + c {
+                    prefill_logits[s].push(logits[r * vocab..(r + 1) * vocab].to_vec());
+                }
+                pos[s] += c;
+                if pos[s] < prompts[s].len() {
+                    row0 += c;
+                    continue;
+                }
+            }
+            let nt = argmax(&logits[last * vocab..(last + 1) * vocab]) as u32;
+            outs[s].push(nt);
+            let fed = model.seq_len_slot(s);
+            if outs[s].len() >= max_new[s] || nt == EOS || fed >= max_seq {
+                done[s] = true;
+            } else {
+                next[s] = nt;
+            }
+            row0 += c;
+        }
+    }
+    (prefill_logits, outs)
+}
+
+#[test]
+fn chunked_prefill_is_bit_identical_across_every_tuned_backend() {
+    // The acceptance criterion: chunk ∈ {2, 8, prompt_len} vs chunk 1,
+    // per-position prefill logits assert_eq-exact and greedy
+    // continuation token-for-token, on the untuned shared store and on
+    // a profile-forced store for EVERY TunedBackend (including the
+    // batched kernel itself and the parallel pool).
+    let w = tiny_weights();
+    let prompt: Vec<u32> = "What is 2+2?".bytes().map(|b| b as u32).collect();
+    let k = rsr::kernels::optimal_k::optimal_k_rsrpp(w.config.d_model);
+    let mut stores: Vec<(String, PlanStore)> =
+        vec![("untuned".into(), PlanStore::for_model(Arc::new(w.clone()), 0))];
+    for backend in TunedBackend::ALL {
+        let store = PlanStore::for_model(Arc::new(w.clone()), 0)
+            .with_profile(forced_profile(&w, backend, k))
+            .unwrap();
+        stores.push((format!("tuned-{}", backend.name()), store));
+    }
+    for (name, store) in &stores {
+        let mut base_model = Transformer::from_plan_store(&w, store).unwrap();
+        let (base_logits, base_tokens) =
+            drive(&mut base_model, &[prompt.clone()], &[6], &[1]);
+        assert_eq!(base_logits[0].len(), prompt.len(), "{name}");
+        assert!(!base_tokens[0].is_empty(), "{name}");
+        for chunk in [2usize, 8, prompt.len()] {
+            let mut m = Transformer::from_plan_store(&w, store).unwrap();
+            let (logits, tokens) = drive(&mut m, &[prompt.clone()], &[6], &[chunk]);
+            assert_eq!(
+                logits[0], base_logits[0],
+                "{name}: chunk {chunk} prefill logits diverged from chunk 1"
+            );
+            assert_eq!(
+                tokens[0], base_tokens[0],
+                "{name}: chunk {chunk} greedy tokens diverged from chunk 1"
+            );
+        }
+    }
+}
+
+#[test]
+fn ragged_prompt_shorter_than_the_chunk_is_exact() {
+    // A 2-token prompt under chunk 8: one partial chunk covers the
+    // whole prompt. Must equal the chunk-1 run bit for bit.
+    let w = tiny_weights();
+    let store = PlanStore::for_model(Arc::new(w.clone()), 0);
+    let prompt = vec![9u32, 201];
+    let mut a = Transformer::from_plan_store(&w, &store).unwrap();
+    let mut b = Transformer::from_plan_store(&w, &store).unwrap();
+    let (la, ta) = drive(&mut a, &[prompt.clone()], &[5], &[1]);
+    let (lb, tb) = drive(&mut b, &[prompt.clone()], &[5], &[8]);
+    assert_eq!(la, lb, "ragged chunk prefill logits diverged");
+    assert_eq!(ta, tb, "ragged chunk greedy tokens diverged");
+}
+
+#[test]
+fn chunk_boundary_mid_prompt_with_live_decode_slots_perturbs_no_one() {
+    // Slot 0 has a 1-token prompt, so it is decoding from the second
+    // step on while slot 1 is still mid-prompt: the lockstep steps mix
+    // a decode row with a 4-token chunk, and slot 1's chunk boundary
+    // (10 tokens = 4 + 4 + 2) lands mid-prompt twice. Both slots must
+    // match their solo runs bit for bit, and slot 1 must match its own
+    // chunk-1 solo run.
+    let w = tiny_weights();
+    let store = PlanStore::for_model(Arc::new(w.clone()), 0);
+    let p0 = vec![77u32];
+    let p1: Vec<u32> = (0..10u32).map(|j| 30 + j * 3).collect();
+
+    let mut mixed = Transformer::from_plan_store(&w, &store).unwrap();
+    let (logits, tokens) =
+        drive(&mut mixed, &[p0.clone(), p1.clone()], &[12, 6], &[1, 4]);
+
+    let mut solo0 = Transformer::from_plan_store(&w, &store).unwrap();
+    let (l0, t0) = drive(&mut solo0, &[p0.clone()], &[12], &[1]);
+    assert_eq!(logits[0], l0[0], "decode slot perturbed by a batchmate's chunk");
+    assert_eq!(tokens[0], t0[0], "decode tokens perturbed by a batchmate's chunk");
+
+    let mut solo1 = Transformer::from_plan_store(&w, &store).unwrap();
+    let (l1, t1) = drive(&mut solo1, &[p1.clone()], &[6], &[1]);
+    assert_eq!(logits[1], l1[0], "chunked slot diverged from its chunk-1 solo run");
+    assert_eq!(tokens[1], t1[0], "chunked tokens diverged from the chunk-1 solo run");
+}
+
+/// Run one engine at the given prefill chunk over a fixed request mix;
+/// returns the responses ordered by id.
+fn run_engine(
+    weights: &Arc<ModelWeights>,
+    prefill_chunk: usize,
+    reqs: &[(u64, Vec<u32>, usize)],
+) -> Vec<(u64, Vec<u32>)> {
+    let engine = InferenceEngine::start(
+        Arc::clone(weights),
+        EngineConfig {
+            workers: 1,
+            batch: BatchPolicy { max_slots: 3, prefill_chunk, ..Default::default() },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    for (id, p, m) in reqs {
+        engine.submit(Request::new(*id, p.clone(), *m)).unwrap();
+    }
+    let mut out = Vec::new();
+    for _ in 0..reqs.len() {
+        let r = engine.recv_timeout(Duration::from_secs(60)).expect("response");
+        assert!(r.error.is_none(), "{:?}", r.error);
+        out.push((r.id, r.tokens));
+    }
+    engine.shutdown();
+    out.sort_by_key(|(id, _)| *id);
+    out
+}
+
+#[test]
+fn engine_prefill_chunks_agree_token_for_token() {
+    // Mixed prompt lengths: shorter than the chunk, exactly the chunk,
+    // spanning several chunks — plus more requests than slots, so
+    // chunked prefill runs while decode slots are live and slots are
+    // reused after retirement. --prefill-chunk {2, 8} must match the
+    // chunk-1 engine exactly.
+    let weights = Arc::new(ModelWeights::generate(ModelConfig::tiny(), 0x99).unwrap());
+    let reqs: Vec<(u64, Vec<u32>, usize)> = vec![
+        (1, vec![5, 6, 7], 10),
+        (2, (0..17u32).map(|j| 40 + j).collect(), 6),
+        (3, vec![200], 8),
+        (4, (0..8u32).map(|j| 90 + j * 2).collect(), 4),
+        (5, vec![10, 20, 30, 40, 50], 12),
+    ];
+    let base = run_engine(&weights, 1, &reqs);
+    for chunk in [2usize, 8] {
+        assert_eq!(
+            run_engine(&weights, chunk, &reqs),
+            base,
+            "--prefill-chunk {chunk} must serve the chunk-1 tokens"
+        );
+    }
+}
+
+#[test]
+fn engine_reports_ttft_and_prefill_throughput() {
+    let weights = Arc::new(ModelWeights::generate(ModelConfig::tiny(), 0x99).unwrap());
+    let engine = InferenceEngine::start(
+        Arc::clone(&weights),
+        EngineConfig { workers: 1, ..Default::default() },
+    )
+    .unwrap();
+    let prompts = [vec![5u32; 12], vec![8u32; 20]];
+    for (i, p) in prompts.iter().enumerate() {
+        engine.submit(Request::new(i as u64, p.clone(), 3)).unwrap();
+    }
+    for _ in 0..prompts.len() {
+        let r = engine.recv_timeout(Duration::from_secs(60)).expect("response");
+        assert!(r.error.is_none(), "{:?}", r.error);
+    }
+    let snap = engine.metrics().snapshot();
+    let ttft = snap.get("ttft_us").unwrap();
+    assert_eq!(ttft.get("count").unwrap().as_f64(), Some(2.0));
+    assert!(ttft.get("mean_us").unwrap().as_f64().unwrap() > 0.0);
+    // 32 prompt tokens consumed across the two requests.
+    assert_eq!(snap.get("prefill_tokens").unwrap().as_f64(), Some(32.0));
+    assert!(snap.get("prefill_tokens_per_sec").unwrap().as_f64().unwrap() > 0.0);
+    engine.shutdown();
+}
+
+#[test]
+fn single_chunk_prefill_matches_generate() {
+    // Whole-prompt chunks through the public generate()-equivalent
+    // sequence: prefill in ONE chunk, then greedy forward_batch decode,
+    // vs the seed's token-by-token generate() on the same shared store
+    // — greedy tokens must match (same kernels per row, so bitwise).
+    let w = tiny_weights();
+    let store = PlanStore::for_model(Arc::new(w.clone()), 0);
+    let prompt = vec![11u32, 45, 99, 120, 7];
+    let mut seq = Transformer::from_plan_store(&w, &store).unwrap();
+    let mut rng = rsr::util::rng::Rng::new(0);
+    let expect = seq
+        .generate(&prompt, 6, rsr::model::sampler::Sampler::Greedy, &mut rng)
+        .unwrap();
+    let mut m = Transformer::from_plan_store(&w, &store).unwrap();
+    let (_, got) = drive(&mut m, &[prompt.clone()], &[6], &[prompt.len()]);
+    assert_eq!(got[0], expect, "one-chunk prefill + decode must match generate()");
+}

@@ -156,6 +156,9 @@ fn engine_backpressure_is_reported() {
                 max_batch: 1,
                 max_wait: Duration::from_millis(1),
                 max_slots: 1,
+                // Pins the strictly sequential worker loop (the
+                // pre-batching, pre-chunking code path).
+                prefill_chunk: 1,
             },
             ..Default::default()
         },
