@@ -20,19 +20,24 @@
 //!   segmented sums, pairwise fold);
 //! * `rsr_parallel` — RSR++ across the shared worker pool;
 //! * `batched_per_vec` — batched RSR++ (segment-major interleaved
-//!   layout), reported **per vector** at the configured batch size.
+//!   layout), reported **per vector** at the configured batch size;
+//! * `tl` — the table-lookup plan ([`crate::kernels::TlPlan`]),
+//!   runtime-dispatched to the host's best column loop.
 
 use std::path::PathBuf;
 use std::time::Duration;
 
 use crate::bench::harness::Table;
+use crate::error::{Error, Result};
 use crate::kernels::batched::BatchedTernaryRsrPlan;
+use crate::kernels::flat::TernaryFlatPlan;
 use crate::kernels::index::TernaryRsrIndex;
 use crate::kernels::optimal_k::optimal_k_rsrpp;
 use crate::kernels::parallel::ParallelTernaryRsrPlan;
 use crate::kernels::rsr::TernaryRsrPlan;
 use crate::kernels::rsrpp::TernaryRsrPlusPlusPlan;
 use crate::kernels::standard::standard_mul_ternary_i8;
+use crate::kernels::tl::{TlPlan, TL_GROUP};
 use crate::kernels::TernaryMatrix;
 use crate::tune::microbench::{bench, BenchOpts, BenchResult};
 use crate::util::json::Json;
@@ -84,7 +89,10 @@ fn speedup(standard: &BenchResult, other: &BenchResult) -> f64 {
 }
 
 /// Run the grid; returns the JSON record that was (optionally) written.
-pub fn run(opts: &KernelBenchOpts) -> Json {
+/// Failing to write a requested `json_path` is an **error**, not a
+/// warning — CI records the trajectory from this file, and a silently
+/// missing record reads as "bench never ran".
+pub fn run(opts: &KernelBenchOpts) -> Result<Json> {
     let mut table = Table::new(&[
         "shape",
         "k",
@@ -93,6 +101,7 @@ pub fn run(opts: &KernelBenchOpts) -> Json {
         "rsr++",
         "rsr++ parallel",
         "batched/vec",
+        "tl",
         "rsr++ speedup",
     ]);
     let mut shapes_json = Vec::new();
@@ -110,6 +119,8 @@ pub fn run(opts: &KernelBenchOpts) -> Json {
         // Preprocess once; cloning the index for each plan is a bulk
         // copy, not a repeat of Algorithm 1's sorting passes.
         let idx = TernaryRsrIndex::preprocess(&a, k);
+        let tl = TlPlan::from_flat(&TernaryFlatPlan::from_index(&idx)?, TL_GROUP)?;
+        let mut lut = tl.scratch();
         let mut rsr = TernaryRsrPlan::new(idx.clone()).expect("fresh index");
         let mut rsrpp = TernaryRsrPlusPlusPlan::new(idx.clone()).expect("fresh index");
         let mut par =
@@ -125,6 +136,9 @@ pub fn run(opts: &KernelBenchOpts) -> Json {
         let m_bat = bench(bench_opts, || {
             bat.execute(&vs, opts.batch, &mut bout).unwrap()
         });
+        let m_tl = bench(bench_opts, || {
+            tl.execute(&v, &mut out, &mut lut).unwrap()
+        });
         let bat_per_vec_ms = median_ms(&m_bat) / opts.batch as f64;
 
         table.row(&[
@@ -135,6 +149,7 @@ pub fn run(opts: &KernelBenchOpts) -> Json {
             fmt_ms(&m_pp),
             fmt_ms(&m_par),
             format!("{bat_per_vec_ms:.3}ms"),
+            fmt_ms(&m_tl),
             format!("{:.2}x", speedup(&m_std, &m_pp)),
         ]);
 
@@ -150,6 +165,7 @@ pub fn run(opts: &KernelBenchOpts) -> Json {
                     ("rsrpp", Json::num(median_ms(&m_pp))),
                     ("rsr_parallel", Json::num(median_ms(&m_par))),
                     ("batched_per_vec", Json::num(bat_per_vec_ms)),
+                    ("tl", Json::num(median_ms(&m_tl))),
                 ]),
             ),
             (
@@ -162,6 +178,7 @@ pub fn run(opts: &KernelBenchOpts) -> Json {
                         "batched_per_vec",
                         Json::num(median_ms(&m_std) / bat_per_vec_ms.max(1e-12)),
                     ),
+                    ("tl", Json::num(speedup(&m_std, &m_tl))),
                 ]),
             ),
         ]));
@@ -182,14 +199,14 @@ pub fn run(opts: &KernelBenchOpts) -> Json {
         ("shapes", Json::Arr(shapes_json)),
     ]);
 
-    table.print("bench-kernels: standard vs RSR vs RSR++ vs parallel/batched");
+    table.print("bench-kernels: standard vs RSR vs RSR++ vs parallel/batched/TL");
     if let Some(path) = &opts.json_path {
-        match std::fs::write(path, record.to_string()) {
-            Ok(()) => println!("\nwrote {}", path.display()),
-            Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
-        }
+        std::fs::write(path, record.to_string()).map_err(|e| {
+            Error::Config(format!("could not write {}: {e}", path.display()))
+        })?;
+        println!("\nwrote {}", path.display());
     }
-    record
+    Ok(record)
 }
 
 #[cfg(test)]
@@ -206,7 +223,7 @@ mod tests {
             budget: Duration::from_millis(2),
             json_path: None,
         };
-        let record = run(&opts);
+        let record = run(&opts).unwrap();
         let shapes = record.get("shapes").unwrap().as_arr().unwrap();
         assert_eq!(shapes.len(), 2);
         let entry = &shapes[1];
@@ -214,5 +231,21 @@ mod tests {
         assert_eq!(entry.get("m").unwrap().as_f64(), Some(160.0));
         let sp = entry.get("speedup_vs_standard").unwrap();
         assert!(sp.get("rsrpp").unwrap().as_f64().unwrap() > 0.0);
+        assert!(sp.get("tl").unwrap().as_f64().unwrap() > 0.0);
+        assert!(entry.get("ms").unwrap().get("tl").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn unwritable_json_path_is_an_error_not_a_warning() {
+        let opts = KernelBenchOpts {
+            shapes: vec![(64, 64)],
+            reps: 1,
+            batch: 1,
+            threads: 1,
+            budget: Duration::from_millis(1),
+            json_path: Some(PathBuf::from("/nonexistent-dir/bench.json")),
+        };
+        let err = run(&opts).unwrap_err();
+        assert!(err.to_string().contains("could not write"), "{err}");
     }
 }

@@ -24,7 +24,10 @@
 //! * [`parallel`] — block-parallel execution (paper Appendix C.1.I),
 //! * [`tensorized`] — the one-hot-matrix formulation used for the GPU
 //!   path (paper Appendix C.1.II / E.2–E.3),
-//! * [`qbit`] — the q-bit generalization (paper Appendix D.3).
+//! * [`qbit`] — the q-bit generalization (paper Appendix D.3),
+//! * [`tl`] — precomputed table-lookup execution (Bitnet.cpp-style
+//!   TL kernels; see PAPERS.md), grouped 2-bit codes + per-group
+//!   partial-sum tables.
 //!
 //! Because the weight matrices are fixed, preprocessing is a one-time
 //! cost: indices can be persisted to versioned, checksummed `.rsrz`
@@ -49,6 +52,7 @@ pub mod segmentation;
 pub mod standard;
 pub mod tensorized;
 pub mod ternary;
+pub mod tl;
 
 pub use artifact::{ArtifactKind, ArtifactMeta, ArtifactPayload, PlanArtifact};
 pub use binary::BinaryMatrix;
@@ -57,6 +61,7 @@ pub use index::{BinMatrix, BlockIndex, RsrIndex, TernaryRsrIndex};
 pub use rsr::{rsr_mul, RsrPlan};
 pub use rsrpp::{rsrpp_mul, RsrPlusPlusPlan};
 pub use ternary::TernaryMatrix;
+pub use tl::{tl_neon_available, tl_simd_available, TlPlan, TL_GROUP};
 
 /// Which algorithm executes a preprocessed multiply.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

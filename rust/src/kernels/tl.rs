@@ -1,0 +1,746 @@
+//! **TL (table-lookup) kernels** — the precomputed-lookup execution
+//! path over a ternary plan, in the spirit of Bitnet.cpp's TL1/TL2 and
+//! T-MAC's LUT kernels (see PAPERS.md).
+//!
+//! Where RSR/RSR++ amortize work through row permutations and
+//! segmented sums, TL amortizes it through **grouping**: `g` weight
+//! rows (the reduction dimension) are packed into one byte of 2-bit
+//! ternary codes per output column, precomputed at plan-build time
+//! from the validated [`FlatPlan`] arenas. At execute time each group
+//! builds the full `4^g`-entry table of partial sums over its `g`
+//! activation values once (a `O(4^g)` dynamic program), then every
+//! output column resolves its `g` multiply-adds with a **single table
+//! lookup**:
+//!
+//! ```text
+//!   codes:  [ group 0: m bytes | group 1: m bytes | … ]   (group-major)
+//!   byte:   bits 2j..2j+1 = code of row (group·g + j):
+//!           00 = 0, 01 = +1, 10 = −1, 11 = invalid (pack2 convention)
+//!
+//!   per group:  lut[c] = Σ_j sign(c_j) · v[base + j]      (4^g entries)
+//!               out[col] += lut[codes[group·m + col]]     (m lookups)
+//! ```
+//!
+//! Per group the cost is `4^g + m` instead of `g·m`, so for wide
+//! layers (`m ≫ 4^g/g`) the lookup stream replaces almost all of the
+//! arithmetic with a contiguous byte scan — exactly the access pattern
+//! that wins on gather-weak edge CPUs.
+//!
+//! ## Group size `g`
+//!
+//! `g` trades table-build cost against lookup density: doubling `g`
+//! halves the number of groups (and lookups) but squares the table.
+//! With `g = 4` (the default, [`TL_GROUP`]) the table is 256 × f32 =
+//! 1 KiB — it lives in L1 across the whole group scan — and a code is
+//! exactly one byte. `g > 4` would spill codes past a byte and the
+//! table past trivial L1 residency, so [`TL_MAX_GROUP`] caps it at 4.
+//!
+//! ## ISA dispatch
+//!
+//! [`TlPlan::execute`] is the single runtime-dispatch point:
+//!
+//! | host                  | column loop                                   |
+//! |-----------------------|-----------------------------------------------|
+//! | x86-64 with AVX2      | 8-wide `vpmovzxbd` + `vgatherdps` from the LUT|
+//! | aarch64 with NEON     | 4-wide lane-gathered `vaddq_f32`              |
+//! | anything else         | portable scalar loop                          |
+//!
+//! All three legs add `lut[code]` into each column in the **same group
+//! order**, so their outputs are bit-identical to each other even on
+//! arbitrary float activations (the SIMD legs vectorize across
+//! *columns*, which never reassociates a column's sum). Against the
+//! non-TL backends, equality is exact on integer-valued activations
+//! (every partial sum representable) — the property
+//! `rust/tests/backend_equivalence.rs` pins for every backend.
+//!
+//! ## Trust boundary
+//!
+//! Like [`FlatPlan`], a `TlPlan` validates everything at construction
+//! ([`TlPlan::from_parts`]) and is immutable afterwards: code bytes
+//! must stay below `4^g`, the reserved digit `11` is rejected
+//! (mirroring [`TernaryMatrix::unpack2`]'s Result-ification), and the
+//! ragged tail group's padding digits must be zero. Corrupt or
+//! truncated payloads are an `Err`, never a panic or an out-of-bounds
+//! table read.
+//!
+//! [`TernaryMatrix::unpack2`]: super::ternary::TernaryMatrix::unpack2
+
+use super::flat::{FlatPlan, TernaryFlatPlan};
+use super::rsr::check_shapes;
+use crate::error::{Error, Result};
+
+/// Default group size: 4 rows per code byte, 256-entry (1 KiB) tables.
+pub const TL_GROUP: usize = 4;
+
+/// Largest supported group size (codes must fit one byte).
+pub const TL_MAX_GROUP: usize = 4;
+
+/// Whether the pinned NEON column loop ([`TlPlan::execute_neon`], the
+/// `tl-neon` tuning candidate) can run on this host, detected once per
+/// process. Also feeds the machine fingerprint of `.rsrt` profiles.
+pub fn tl_neon_available() -> bool {
+    #[cfg(target_arch = "aarch64")]
+    {
+        use std::sync::atomic::{AtomicU8, Ordering};
+        static STATE: AtomicU8 = AtomicU8::new(0);
+        match STATE.load(Ordering::Relaxed) {
+            1 => true,
+            2 => false,
+            _ => {
+                let ok = std::arch::is_aarch64_feature_detected!("neon");
+                STATE.store(if ok { 1 } else { 2 }, Ordering::Relaxed);
+                ok
+            }
+        }
+    }
+    #[cfg(not(target_arch = "aarch64"))]
+    {
+        false
+    }
+}
+
+/// Whether [`TlPlan::execute`]'s dispatch can take a SIMD column loop
+/// on this host (AVX2 gather on x86-64, NEON on aarch64) — i.e.
+/// whether the `tl` candidate can differ from a scalar-pinned run.
+pub fn tl_simd_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        super::flat::simd_gather_available()
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        tl_neon_available()
+    }
+}
+
+/// A precomputed-lookup execution plan for one ternary matrix:
+/// group-major packed 2-bit weight codes, validated at construction.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TlPlan {
+    rows: usize,
+    cols: usize,
+    g: usize,
+    /// `groups × cols` code bytes, group-major (one contiguous `cols`
+    /// stream per group — the execute-time scan order).
+    codes: Vec<u8>,
+}
+
+impl TlPlan {
+    /// Build a TL plan from both Prop 2.1 halves of a validated flat
+    /// plan pair: the ternary weights are reconstructed from the
+    /// `σ`/`L` arenas (segment `j` of a block encodes bit pattern `j`,
+    /// MSB-first — the [`BinMatrix`](super::index::BinMatrix)
+    /// convention), then packed into group codes.
+    pub fn from_flat(plan: &TernaryFlatPlan, g: usize) -> Result<Self> {
+        plan.check_geometry()?;
+        Self::from_halves(&plan.plus, &plan.minus, g)
+    }
+
+    /// [`from_flat`](Self::from_flat) over the two halves directly —
+    /// the [`SharedTernaryPlan`](crate::runtime::SharedTernaryPlan)
+    /// build path, which holds each half behind its own `Arc`.
+    pub fn from_halves(plus: &FlatPlan, minus: &FlatPlan, g: usize) -> Result<Self> {
+        if plus.rows() != minus.rows() || plus.cols() != minus.cols() {
+            return Err(Error::InvalidIndex(
+                "ternary halves disagree on geometry".into(),
+            ));
+        }
+        let (rows, cols) = (plus.rows(), plus.cols());
+        let mut w = vec![0i8; rows * cols];
+        accumulate_half(plus, 1, &mut w);
+        accumulate_half(minus, -1, &mut w);
+        Self::from_weights(rows, cols, g, &w)
+    }
+
+    /// Pack dense row-major ternary weights into a TL plan.
+    pub fn from_weights(rows: usize, cols: usize, g: usize, w: &[i8]) -> Result<Self> {
+        check_group(g)?;
+        if w.len() != rows.checked_mul(cols).unwrap_or(usize::MAX) {
+            return Err(Error::InvalidIndex(format!(
+                "weight buffer of {} entries for a {rows}x{cols} TL plan",
+                w.len()
+            )));
+        }
+        let groups = rows.div_ceil(g);
+        let mut codes = vec![0u8; groups * cols];
+        for r in 0..rows {
+            let (gi, j) = (r / g, r % g);
+            let row = &w[r * cols..(r + 1) * cols];
+            let chunk = &mut codes[gi * cols..(gi + 1) * cols];
+            for (c, &v) in row.iter().enumerate() {
+                let code: u8 = match v {
+                    0 => 0b00,
+                    1 => 0b01,
+                    -1 => 0b10,
+                    other => {
+                        return Err(Error::InvalidIndex(format!(
+                            "weight {other} at ({r},{c}) is not ternary"
+                        )))
+                    }
+                };
+                chunk[c] |= code << (2 * j);
+            }
+        }
+        Self::from_parts(rows, cols, g, codes)
+    }
+
+    /// Assemble (and fully validate) a TL plan from a raw code buffer —
+    /// the single trust boundary every constructor funnels through.
+    /// Rejects, without panicking or reading out of bounds:
+    ///
+    /// * truncated or oversized payloads (`codes.len() ≠ groups·cols`),
+    /// * the reserved ternary digit `11` in any live position (a
+    ///   bit-flipped byte — same discipline as
+    ///   [`TernaryMatrix::unpack2`](super::ternary::TernaryMatrix::unpack2)),
+    /// * nonzero digits in the ragged tail group's padding positions,
+    /// * with `g < 4`, code bytes at or above `4^g` (they would index
+    ///   past the lookup table).
+    pub fn from_parts(rows: usize, cols: usize, g: usize, codes: Vec<u8>) -> Result<Self> {
+        check_group(g)?;
+        if rows == 0 || cols == 0 {
+            return Err(Error::InvalidIndex(format!(
+                "empty TL plan geometry {rows}x{cols}"
+            )));
+        }
+        let groups = rows.div_ceil(g);
+        let expect = groups * cols;
+        if codes.len() != expect {
+            return Err(Error::InvalidIndex(format!(
+                "TL code payload of {} bytes, expected {expect} for {rows}x{cols} at g={g}",
+                codes.len()
+            )));
+        }
+        // Rows the last (possibly ragged) group actually covers.
+        let tail = rows - (groups - 1) * g;
+        for (i, &b) in codes.iter().enumerate() {
+            let live = if i / cols + 1 == groups { tail } else { g };
+            for j in 0..g {
+                let digit = (b >> (2 * j)) & 0b11;
+                if j < live {
+                    if digit == 0b11 {
+                        return Err(Error::InvalidIndex(format!(
+                            "invalid ternary weight code 0b11 in TL byte {i}"
+                        )));
+                    }
+                } else if digit != 0 {
+                    return Err(Error::InvalidIndex(format!(
+                        "nonzero padding digit in ragged TL byte {i}"
+                    )));
+                }
+            }
+            if g < 4 && (b >> (2 * g)) != 0 {
+                return Err(Error::InvalidIndex(format!(
+                    "TL byte {i} indexes past the 4^{g}-entry table"
+                )));
+            }
+        }
+        Ok(Self { rows, cols, g, codes })
+    }
+
+    /// Rows of the planned matrix (`n`, the activation length).
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Columns of the planned matrix (`m`, the output length).
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Group size the codes were packed with.
+    #[inline]
+    pub fn group(&self) -> usize {
+        self.g
+    }
+
+    /// Number of row groups, `⌈rows/g⌉`.
+    #[inline]
+    pub fn groups(&self) -> usize {
+        self.rows.div_ceil(self.g)
+    }
+
+    /// The packed code buffer (group-major, `groups × cols`).
+    #[inline]
+    pub fn codes(&self) -> &[u8] {
+        &self.codes
+    }
+
+    /// Entries of the per-group lookup table, `4^g`.
+    #[inline]
+    pub fn lut_len(&self) -> usize {
+        1 << (2 * self.g)
+    }
+
+    /// A correctly-sized lookup-table scratch for this plan (the
+    /// per-executor mutable state; the plan itself stays shared).
+    pub fn scratch(&self) -> Vec<f32> {
+        vec![0.0; self.lut_len()]
+    }
+
+    /// Heap bytes the plan occupies — one byte per `g` weights.
+    pub fn bytes(&self) -> usize {
+        self.codes.len() + 4 * std::mem::size_of::<usize>()
+    }
+
+    /// Fill `lut` with every partial sum of the group starting at
+    /// activation `base`: a dynamic program adding one row per step
+    /// (`+v` for digit `01`, `−v` for `10`, a copy for the reserved
+    /// `11` so the table stays finite — validated codes never index
+    /// it). Ragged tail groups fill only their `4^live` prefix; their
+    /// padding digits are validated zero, so the stale suffix is never
+    /// indexed either.
+    fn build_lut(&self, v: &[f32], base: usize, lut: &mut [f32]) {
+        debug_assert_eq!(lut.len(), self.lut_len());
+        lut[0] = 0.0;
+        let live = (self.rows - base).min(self.g);
+        let mut filled = 1usize;
+        for j in 0..live {
+            let x = v[base + j];
+            for p in 0..filled {
+                let acc = lut[p];
+                lut[p + filled] = acc + x;
+                lut[p + 2 * filled] = acc - x;
+                lut[p + 3 * filled] = acc;
+            }
+            filled *= 4;
+        }
+    }
+
+    /// The shared group loop: build each group's table, then let `acc`
+    /// stream the group's code bytes into `out`. Every ISA leg runs
+    /// this exact loop, differing only in `acc` — which is what makes
+    /// the legs bit-identical (per column, one `+= lut[code]` per
+    /// group, in group order).
+    fn execute_with(
+        &self,
+        v: &[f32],
+        out: &mut [f32],
+        lut: &mut Vec<f32>,
+        acc: impl Fn(&[u8], &[f32], &mut [f32]),
+    ) -> Result<()> {
+        check_shapes(self.rows, self.cols, v, out)?;
+        if lut.len() != self.lut_len() {
+            lut.resize(self.lut_len(), 0.0);
+        }
+        out.fill(0.0);
+        for gi in 0..self.groups() {
+            self.build_lut(v, gi * self.g, lut);
+            acc(&self.codes[gi * self.cols..(gi + 1) * self.cols], lut, out);
+        }
+        Ok(())
+    }
+
+    /// `out = v · A` — the runtime-dispatched TL multiply (the
+    /// `tl` tuning candidate): AVX2 gather on x86-64 hosts that have
+    /// it, NEON on aarch64 hosts that have it, the portable scalar
+    /// loop everywhere else. All routes are bit-identical.
+    pub fn execute(&self, v: &[f32], out: &mut [f32], lut: &mut Vec<f32>) -> Result<()> {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if super::flat::simd_gather_available() {
+                // SAFETY: AVX2 presence just checked; codes/lut sizes
+                // are construction-validated invariants of `self`.
+                return self.execute_with(v, out, lut, |c, l, o| unsafe {
+                    accumulate_cols_avx2(c, l, o)
+                });
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if tl_neon_available() {
+                // SAFETY: NEON presence just checked; sizes validated.
+                return self.execute_with(v, out, lut, |c, l, o| unsafe {
+                    accumulate_cols_neon(c, l, o)
+                });
+            }
+        }
+        self.execute_scalar(v, out, lut)
+    }
+
+    /// [`execute`](Self::execute) pinned to the portable scalar column
+    /// loop — the reference the dispatch property tests compare
+    /// against.
+    pub fn execute_scalar(&self, v: &[f32], out: &mut [f32], lut: &mut Vec<f32>) -> Result<()> {
+        self.execute_with(v, out, lut, accumulate_cols_scalar)
+    }
+
+    /// [`execute`](Self::execute) pinned to the NEON column loop — the
+    /// `tl-neon` tuning candidate. A clean error (never a mis-dispatch)
+    /// on hosts without aarch64 NEON; [`tl_neon_available`] gates the
+    /// candidate so tuned profiles only ever record it where it runs.
+    pub fn execute_neon(&self, v: &[f32], out: &mut [f32], lut: &mut Vec<f32>) -> Result<()> {
+        #[cfg(target_arch = "aarch64")]
+        {
+            if tl_neon_available() {
+                // SAFETY: NEON presence just checked; sizes validated.
+                return self.execute_with(v, out, lut, |c, l, o| unsafe {
+                    accumulate_cols_neon(c, l, o)
+                });
+            }
+        }
+        let _ = (v, out, lut);
+        Err(Error::Config(
+            "the tl-neon backend requires aarch64 NEON, which this host lacks".into(),
+        ))
+    }
+
+    /// `out[b] = vs[b] · A` for a row-major `batch × rows` activation
+    /// block: the batched entry point is a per-row loop over the
+    /// dispatched single-vector kernel, so per row it performs the
+    /// identical f32 operation sequence at every batch size — the
+    /// batch-invariance contract continuous batching relies on, for
+    /// free.
+    pub fn execute_batch(
+        &self,
+        vs: &[f32],
+        batch: usize,
+        out: &mut [f32],
+        lut: &mut Vec<f32>,
+    ) -> Result<()> {
+        check_batch_shapes(self.rows, self.cols, vs, batch, out)?;
+        for b in 0..batch {
+            self.execute(
+                &vs[b * self.rows..(b + 1) * self.rows],
+                &mut out[b * self.cols..(b + 1) * self.cols],
+                lut,
+            )?;
+        }
+        Ok(())
+    }
+
+    /// [`execute_batch`](Self::execute_batch) pinned to the NEON leg.
+    pub fn execute_batch_neon(
+        &self,
+        vs: &[f32],
+        batch: usize,
+        out: &mut [f32],
+        lut: &mut Vec<f32>,
+    ) -> Result<()> {
+        check_batch_shapes(self.rows, self.cols, vs, batch, out)?;
+        for b in 0..batch {
+            self.execute_neon(
+                &vs[b * self.rows..(b + 1) * self.rows],
+                &mut out[b * self.cols..(b + 1) * self.cols],
+                lut,
+            )?;
+        }
+        Ok(())
+    }
+}
+
+fn check_group(g: usize) -> Result<()> {
+    if g == 0 || g > TL_MAX_GROUP {
+        return Err(Error::InvalidIndex(format!(
+            "TL group size {g} outside 1..={TL_MAX_GROUP}"
+        )));
+    }
+    Ok(())
+}
+
+fn check_batch_shapes(
+    rows: usize,
+    cols: usize,
+    vs: &[f32],
+    batch: usize,
+    out: &[f32],
+) -> Result<()> {
+    if batch == 0 || vs.len() != batch * rows || out.len() != batch * cols {
+        return Err(Error::ShapeMismatch(format!(
+            "TL batch {batch}: vs len {}, out len {} for a {rows}x{cols} plan",
+            vs.len(),
+            out.len()
+        )));
+    }
+    Ok(())
+}
+
+/// Add `sign` into `w` wherever one binary half has a 1, reading the
+/// weights back out of the flat arenas: every row in segment `pat` of
+/// a block has that block's columns equal to the bits of `pat`,
+/// MSB-first (the `Bin_[k]` convention Algorithm 1 sorts by).
+fn accumulate_half(flat: &FlatPlan, sign: i8, w: &mut [i8]) {
+    let cols = flat.cols();
+    for (i, blk) in flat.blocks().iter().enumerate() {
+        let width = blk.width as usize;
+        let col0 = blk.col_start as usize;
+        let sigma = flat.block_sigma(i);
+        let seg = flat.block_seg(i);
+        for pat in 0..(1usize << width) {
+            if pat == 0 {
+                continue; // all-zero rows contribute nothing
+            }
+            let (lo, hi) = (seg[pat] as usize, seg[pat + 1] as usize);
+            for &row in &sigma[lo..hi] {
+                let base = row as usize * cols + col0;
+                for jcol in 0..width {
+                    if (pat >> (width - 1 - jcol)) & 1 == 1 {
+                        w[base + jcol] += sign;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Portable column loop: one table lookup + add per output column.
+/// Safe indexing throughout — construction validated every code below
+/// `4^g` and `execute_with` sized the table to exactly `4^g`.
+fn accumulate_cols_scalar(codes: &[u8], lut: &[f32], out: &mut [f32]) {
+    for (o, &c) in out.iter_mut().zip(codes) {
+        *o += lut[c as usize];
+    }
+}
+
+/// AVX2 column loop: 8 code bytes widen to dword lanes (`vpmovzxbd`)
+/// and gather from the table (`vgatherdps`), 8 columns per iteration.
+/// Lanewise adds in column order — bit-identical to the scalar loop.
+///
+/// # Safety
+/// Caller must ensure AVX2 is available and every code byte is below
+/// `lut.len()` (guaranteed by [`TlPlan::from_parts`] validation).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn accumulate_cols_avx2(codes: &[u8], lut: &[f32], out: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = out.len();
+    let base = lut.as_ptr();
+    let cp = codes.as_ptr();
+    let op = out.as_mut_ptr();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let bytes = _mm_loadl_epi64(cp.add(i) as *const __m128i);
+        let ix = _mm256_cvtepu8_epi32(bytes);
+        let vals = _mm256_i32gather_ps::<4>(base, ix);
+        let acc = _mm256_add_ps(_mm256_loadu_ps(op.add(i)), vals);
+        _mm256_storeu_ps(op.add(i), acc);
+        i += 8;
+    }
+    while i < n {
+        *out.get_unchecked_mut(i) += *lut.get_unchecked(*cp.add(i) as usize);
+        i += 1;
+    }
+}
+
+/// NEON column loop: 4 lane-gathered table entries per `vaddq_f32`,
+/// column order preserved — bit-identical to the scalar loop.
+///
+/// # Safety
+/// Caller must ensure NEON is available and every code byte is below
+/// `lut.len()` (guaranteed by [`TlPlan::from_parts`] validation).
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn accumulate_cols_neon(codes: &[u8], lut: &[f32], out: &mut [f32]) {
+    use std::arch::aarch64::*;
+    let n = out.len();
+    let cp = codes.as_ptr();
+    let op = out.as_mut_ptr();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let vals = [
+            *lut.get_unchecked(*cp.add(i) as usize),
+            *lut.get_unchecked(*cp.add(i + 1) as usize),
+            *lut.get_unchecked(*cp.add(i + 2) as usize),
+            *lut.get_unchecked(*cp.add(i + 3) as usize),
+        ];
+        let acc = vaddq_f32(vld1q_f32(op.add(i)), vld1q_f32(vals.as_ptr()));
+        vst1q_f32(op.add(i), acc);
+        i += 4;
+    }
+    while i < n {
+        *out.get_unchecked_mut(i) += *lut.get_unchecked(*cp.add(i) as usize);
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::index::TernaryRsrIndex;
+    use super::super::standard::standard_mul_ternary;
+    use super::super::ternary::TernaryMatrix;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tl_from_matrix(a: &TernaryMatrix, k: usize, g: usize) -> TlPlan {
+        let idx = TernaryRsrIndex::preprocess(a, k);
+        let flat = TernaryFlatPlan::from_index(&idx).unwrap();
+        TlPlan::from_flat(&flat, g).unwrap()
+    }
+
+    #[test]
+    fn from_flat_reconstructs_the_weights_exactly() {
+        // The arena → weights → codes path must equal packing the
+        // original matrix directly, for every group size and a ragged
+        // row count.
+        let mut rng = Rng::new(7001);
+        for (n, m, k) in [(37, 23, 3), (64, 48, 5), (50, 31, 4)] {
+            let a = TernaryMatrix::random(n, m, 1.0 / 3.0, &mut rng);
+            for g in 1..=TL_MAX_GROUP {
+                let via_flat = tl_from_matrix(&a, k, g);
+                let direct = TlPlan::from_weights(n, m, g, a.data()).unwrap();
+                assert_eq!(via_flat, direct, "n={n} m={m} k={k} g={g}");
+            }
+        }
+    }
+
+    #[test]
+    fn execute_matches_standard_multiply() {
+        let mut rng = Rng::new(7003);
+        for (n, m) in [(40, 24), (37, 23), (96, 64)] {
+            let a = TernaryMatrix::random(n, m, 1.0 / 3.0, &mut rng);
+            let v = rng.f32_vec(n, -1.0, 1.0);
+            let expect = standard_mul_ternary(&v, &a);
+            for g in 1..=TL_MAX_GROUP {
+                let tl = tl_from_matrix(&a, 4, g);
+                let mut lut = tl.scratch();
+                let mut out = vec![0.0f32; m];
+                tl.execute(&v, &mut out, &mut lut).unwrap();
+                for (got, exp) in out.iter().zip(expect.iter()) {
+                    assert!(
+                        (got - exp).abs() <= 1e-4 * (1.0 + exp.abs()),
+                        "g={g}: {got} vs {exp}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dispatched_and_scalar_legs_are_bit_identical_on_floats() {
+        // The SIMD legs vectorize across columns, never inside one
+        // column's sum — so dispatch must match the scalar pin to the
+        // last bit even on arbitrary float activations.
+        let mut rng = Rng::new(7005);
+        let a = TernaryMatrix::random(83, 57, 1.0 / 3.0, &mut rng);
+        let v = rng.f32_vec(83, -1.0, 1.0);
+        let tl = tl_from_matrix(&a, 4, TL_GROUP);
+        let mut lut = tl.scratch();
+        let mut scalar = vec![0.0f32; 57];
+        tl.execute_scalar(&v, &mut scalar, &mut lut).unwrap();
+        let mut dispatched = vec![0.0f32; 57];
+        tl.execute(&v, &mut dispatched, &mut lut).unwrap();
+        assert_eq!(scalar, dispatched);
+    }
+
+    #[test]
+    fn scratch_reuse_and_shape_errors() {
+        let mut rng = Rng::new(7007);
+        let a = TernaryMatrix::random(32, 16, 1.0 / 3.0, &mut rng);
+        let v = rng.f32_vec(32, -1.0, 1.0);
+        let tl = tl_from_matrix(&a, 3, TL_GROUP);
+        let mut lut = Vec::new(); // wrong size: must be grown, not trusted
+        let mut out = vec![0.0f32; 16];
+        tl.execute(&v, &mut out, &mut lut).unwrap();
+        let first = out.clone();
+        tl.execute(&v, &mut out, &mut lut).unwrap();
+        assert_eq!(out, first, "scratch reuse must not change results");
+        assert!(tl.execute(&v[..31], &mut out, &mut lut).is_err());
+        assert!(tl.execute(&v, &mut out[..15], &mut lut).is_err());
+        assert!(tl.execute_batch(&v, 0, &mut out, &mut lut).is_err());
+        assert!(tl.execute_batch(&v, 2, &mut out, &mut lut).is_err());
+    }
+
+    #[test]
+    fn execute_batch_rows_match_single_vector_runs() {
+        let mut rng = Rng::new(7009);
+        let a = TernaryMatrix::random(41, 29, 1.0 / 3.0, &mut rng);
+        let tl = tl_from_matrix(&a, 4, TL_GROUP);
+        let mut lut = tl.scratch();
+        let batch = 3;
+        let vs = rng.f32_vec(batch * 41, -1.0, 1.0);
+        let mut bout = vec![0.0f32; batch * 29];
+        tl.execute_batch(&vs, batch, &mut bout, &mut lut).unwrap();
+        for b in 0..batch {
+            let mut solo = vec![0.0f32; 29];
+            tl.execute(&vs[b * 41..(b + 1) * 41], &mut solo, &mut lut).unwrap();
+            assert_eq!(&bout[b * 29..(b + 1) * 29], &solo[..], "row {b}");
+        }
+    }
+
+    #[test]
+    fn neon_pin_errs_cleanly_where_unavailable() {
+        let mut rng = Rng::new(7011);
+        let a = TernaryMatrix::random(16, 8, 1.0 / 3.0, &mut rng);
+        let v = rng.f32_vec(16, -1.0, 1.0);
+        let tl = tl_from_matrix(&a, 3, TL_GROUP);
+        let mut lut = tl.scratch();
+        let mut out = vec![0.0f32; 8];
+        let result = tl.execute_neon(&v, &mut out, &mut lut);
+        if tl_neon_available() {
+            result.unwrap();
+            let mut scalar = vec![0.0f32; 8];
+            tl.execute_scalar(&v, &mut scalar, &mut lut).unwrap();
+            assert_eq!(out, scalar);
+        } else {
+            let err = result.unwrap_err();
+            assert!(err.to_string().contains("tl-neon"), "{err}");
+        }
+    }
+
+    #[test]
+    fn from_parts_rejects_corruption_without_panicking() {
+        let mut rng = Rng::new(7013);
+        let a = TernaryMatrix::random(10, 6, 1.0 / 3.0, &mut rng);
+        let good = TlPlan::from_weights(10, 6, 4, a.data()).unwrap();
+        let codes = good.codes().to_vec();
+
+        // Truncated payload.
+        assert!(TlPlan::from_parts(10, 6, 4, codes[..codes.len() - 1].to_vec()).is_err());
+        // Oversized payload.
+        let mut long = codes.clone();
+        long.push(0);
+        assert!(TlPlan::from_parts(10, 6, 4, long).is_err());
+        // Bit flip that lands on the reserved digit 0b11.
+        let mut flipped = codes.clone();
+        flipped[0] |= 0b11;
+        let err = TlPlan::from_parts(10, 6, 4, flipped).unwrap_err();
+        assert!(err.to_string().contains("0b11"), "{err}");
+        // Nonzero padding digit in the ragged tail group (10 rows at
+        // g=4 → last group has 2 live rows; digits 2..4 must be 0).
+        let mut padded = codes.clone();
+        let tail_start = (10usize.div_ceil(4) - 1) * 6;
+        padded[tail_start] |= 0b01 << 4;
+        let err = TlPlan::from_parts(10, 6, 4, padded).unwrap_err();
+        assert!(err.to_string().contains("padding"), "{err}");
+        // g < 4: a code byte that would index past the 4^g table.
+        let small = TlPlan::from_weights(10, 6, 2, a.data()).unwrap();
+        let mut oob = small.codes().to_vec();
+        oob[0] |= 1 << 4;
+        let err = TlPlan::from_parts(10, 6, 2, oob).unwrap_err();
+        assert!(err.to_string().contains("table"), "{err}");
+        // Bad group sizes.
+        assert!(TlPlan::from_parts(10, 6, 0, vec![]).is_err());
+        assert!(TlPlan::from_parts(10, 6, 5, vec![0; 12]).is_err());
+        // The pristine payload still round-trips.
+        assert_eq!(TlPlan::from_parts(10, 6, 4, codes).unwrap(), good);
+    }
+
+    #[test]
+    fn ragged_tail_group_executes_correctly() {
+        // rows not divisible by g: the tail group's table only fills
+        // its 4^live prefix and padding digits are zero — outputs must
+        // still match the dense reference exactly on integers.
+        let mut rng = Rng::new(7015);
+        for rows in [5, 6, 7, 9] {
+            let a = TernaryMatrix::random(rows, 11, 1.0 / 3.0, &mut rng);
+            let v = rng.int_f32_vec(rows, 3);
+            let tl = TlPlan::from_weights(rows, 11, 4, a.data()).unwrap();
+            let mut lut = tl.scratch();
+            let mut out = vec![0.0f32; 11];
+            tl.execute(&v, &mut out, &mut lut).unwrap();
+            assert_eq!(out, standard_mul_ternary(&v, &a), "rows={rows}");
+        }
+    }
+
+    #[test]
+    fn plan_is_compact() {
+        let mut rng = Rng::new(7017);
+        let a = TernaryMatrix::random(256, 256, 1.0 / 3.0, &mut rng);
+        let tl = TlPlan::from_weights(256, 256, 4, a.data()).unwrap();
+        // One byte per 4 weights plus a constant header.
+        assert!(tl.bytes() < 256 * 256 / 4 + 64);
+        assert_eq!(tl.groups(), 64);
+        assert_eq!(tl.lut_len(), 256);
+    }
+}

@@ -381,7 +381,7 @@ fn cmd_bench_kernels(f: &HashMap<String, String>) -> Result<()> {
     opts.json_path = Some(PathBuf::from(
         f.get("json").cloned().unwrap_or_else(|| "BENCH_kernels.json".into()),
     ));
-    run(&opts);
+    run(&opts)?;
     Ok(())
 }
 
@@ -826,6 +826,20 @@ fn cmd_selfcheck() -> Result<()> {
         if max_err > 1e-2 {
             return Err(Error::Config(format!("{} disagrees", backend.name())));
         }
+    }
+    // The TL lookup path (runtime-dispatched column loop).
+    let tl = rsr::kernels::TlPlan::from_weights(512, 512, rsr::kernels::TL_GROUP, a.data())?;
+    let mut lut = tl.scratch();
+    let mut out = vec![0.0f32; 512];
+    tl.execute(&v, &mut out, &mut lut)?;
+    let max_err = out
+        .iter()
+        .zip(expect.iter())
+        .map(|(g, e)| (g - e).abs())
+        .fold(0.0f32, f32::max);
+    println!("  {:<16} max |err| = {max_err:.2e}", "tl");
+    if max_err > 1e-2 {
+        return Err(Error::Config("tl disagrees".into()));
     }
     // Index round-trip.
     let idx = TernaryRsrIndex::preprocess(&a, optimal_k_rsr(512));

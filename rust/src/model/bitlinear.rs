@@ -273,14 +273,17 @@ impl BitLinear {
 }
 
 /// Map a tuned backend to the coarse [`Backend`] family it belongs to
-/// (the scalar-gather and batched variants are RSR++ executions the
-/// `Backend` enum cannot distinguish).
+/// (the scalar-gather, batched and table-lookup variants are serve-time
+/// refinements the `Backend` enum cannot distinguish — they all replace
+/// the same RSR++ slot in the coarse taxonomy).
 fn coarse_backend(tuned: TunedBackend) -> Backend {
     match tuned {
         TunedBackend::Rsr => Backend::Rsr,
         TunedBackend::RsrPlusPlus
         | TunedBackend::RsrPlusPlusScalar
-        | TunedBackend::Batched => Backend::RsrPlusPlus,
+        | TunedBackend::Batched
+        | TunedBackend::Tl
+        | TunedBackend::TlNeon => Backend::RsrPlusPlus,
         TunedBackend::Parallel => Backend::RsrParallel,
     }
 }
@@ -361,7 +364,7 @@ mod tests {
 
         // A tuned entry dispatches its choice; on integer inputs every
         // backend is exactly equal.
-        for backend in TunedBackend::ALL {
+        for backend in TunedBackend::ALL.into_iter().filter(|b| b.available()) {
             let tuned_entry = PlanEntry {
                 tuned: Some(LayerChoice { backend, k: 4, ns: 1.0 }),
                 ..(*entry).clone()
@@ -390,7 +393,7 @@ mod tests {
             ("owned-rsr++", BitLinear::new(w.clone(), 0.5, Backend::RsrPlusPlus, 4).unwrap()),
             ("shared", BitLinear::from_shared(Arc::clone(&plan), 0.5)),
         ];
-        for backend in TunedBackend::ALL {
+        for backend in TunedBackend::ALL.into_iter().filter(|b| b.available()) {
             let entry = PlanEntry {
                 name: "l".into(),
                 k: 4,

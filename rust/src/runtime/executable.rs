@@ -1,8 +1,8 @@
 //! [`ExecutablePlan`] — one execution object over a store-shared plan,
 //! dispatching to whichever backend a tuning profile selected.
 //!
-//! The four plan families (RSR, RSR++ scalar/SIMD, block-parallel,
-//! batched) previously had four unrelated execute signatures; the
+//! The plan families (RSR, RSR++ scalar/SIMD, block-parallel, batched,
+//! table-lookup) previously had unrelated execute signatures; the
 //! profile-driven serve path needs them behind **one** `execute(v,
 //! out)` so a [`BitLinear`](crate::model::bitlinear::BitLinear) can run
 //! whatever `rsr tune` measured fastest without caring which family
@@ -17,9 +17,10 @@
 use std::sync::Arc;
 
 use super::plan_store::{PlanScratch, SharedTernaryPlan};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::kernels::batched::BatchedExec;
 use crate::kernels::parallel::SharedParallelExec;
+use crate::kernels::tl::{tl_neon_available, TlPlan};
 use crate::tune::candidates::TunedBackend;
 use crate::util::threadpool::PoolHandle;
 
@@ -32,6 +33,9 @@ enum ExecState {
     Parallel(SharedParallelExec),
     /// Batched layout executed at batch 1.
     Batched(BatchedExec),
+    /// Table lookup: the shared (plan-cached) code table plus this
+    /// executor's private lookup-table scratch.
+    Tl { tl: Arc<TlPlan>, lut: Vec<f32> },
 }
 
 /// A ready-to-run multiply over a store-shared ternary plan, executing
@@ -75,6 +79,18 @@ impl ExecutablePlan {
             )),
             TunedBackend::Batched => {
                 ExecState::Batched(BatchedExec::new(plan.rows(), max_u, 1)?)
+            }
+            TunedBackend::Tl | TunedBackend::TlNeon => {
+                if backend == TunedBackend::TlNeon && !tl_neon_available() {
+                    return Err(Error::Config(
+                        "the tl-neon backend requires aarch64 NEON, \
+                         which this host lacks"
+                            .into(),
+                    ));
+                }
+                let tl = plan.tl_plan()?;
+                let lut = tl.scratch();
+                ExecState::Tl { tl, lut }
             }
         };
         Ok(Self { plan, backend, state, batch_exec: None })
@@ -128,6 +144,10 @@ impl ExecutablePlan {
                 1,
                 out,
             ),
+            (ExecState::Tl { tl, lut }, TunedBackend::TlNeon) => {
+                tl.execute_neon(v, out, lut)
+            }
+            (ExecState::Tl { tl, lut }, _) => tl.execute(v, out, lut),
             // `new` pairs state and backend; the combinations above are
             // exhaustive for what it constructs.
             (ExecState::Scratch(_), _) => unreachable!("scratch state with {:?}", self.backend),
@@ -135,15 +155,25 @@ impl ExecutablePlan {
     }
 
     /// `out[b] = vs[b] · A` for a row-major `batch × rows` activation
-    /// block — the continuous-batching hot path. Every tuned backend
-    /// dispatches to the **batched** flat kernel here, whatever its
+    /// block — the continuous-batching hot path. The non-TL backends
+    /// all dispatch to the **batched** flat kernel here, whatever their
     /// single-vector winner: per row that kernel performs the identical
     /// f32 addition sequence at every batch size, so a sequence's
     /// logits never change when batchmates join or retire (the
-    /// invariant ragged batches rely on). The tuned winner keeps
-    /// governing [`execute`](Self::execute), which strictly-sequential
-    /// deployments (`max_slots == 1`) still serve.
+    /// invariant ragged batches rely on). The TL backends batch as a
+    /// per-row loop over their own single-vector kernel — the same
+    /// invariance, trivially, and the table stays the hot working set.
+    /// The tuned winner keeps governing [`execute`](Self::execute),
+    /// which strictly-sequential deployments (`max_slots == 1`) still
+    /// serve.
     pub fn execute_batch(&mut self, vs: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
+        if let ExecState::Tl { tl, lut } = &mut self.state {
+            return if self.backend == TunedBackend::TlNeon {
+                tl.execute_batch_neon(vs, batch, out, lut)
+            } else {
+                tl.execute_batch(vs, batch, out, lut)
+            };
+        }
         if !matches!(self.state, ExecState::Batched(_)) && self.batch_exec.is_none() {
             self.batch_exec = Some(self.plan.batch_exec(batch)?);
         }
@@ -178,7 +208,7 @@ mod tests {
         let mut rng = Rng::new(902);
         let v = rng.f32_vec(96, -1.0, 1.0);
         let expect = standard_mul_ternary(&v, &a);
-        for backend in TunedBackend::ALL {
+        for backend in TunedBackend::ALL.into_iter().filter(|b| b.available()) {
             let mut exec = ExecutablePlan::new(Arc::clone(&plan), backend).unwrap();
             assert_eq!(exec.backend(), backend);
             assert_eq!((exec.rows(), exec.cols()), (96, 64));
@@ -207,7 +237,7 @@ mod tests {
         let mut rng = Rng::new(904);
         let v = rng.int_f32_vec(80, 3);
         let expect = standard_mul_ternary(&v, &a);
-        for backend in TunedBackend::ALL {
+        for backend in TunedBackend::ALL.into_iter().filter(|b| b.available()) {
             let mut exec = ExecutablePlan::new(Arc::clone(&plan), backend).unwrap();
             let mut out = vec![0.0f32; 56];
             exec.execute(&v, &mut out).unwrap();
@@ -240,7 +270,7 @@ mod tests {
         let mut rng = Rng::new(909);
         let batch = 4;
         let vs = rng.int_f32_vec(batch * 88, 3);
-        for backend in TunedBackend::ALL {
+        for backend in TunedBackend::ALL.into_iter().filter(|b| b.available()) {
             let mut exec = ExecutablePlan::new(Arc::clone(&plan), backend).unwrap();
             let mut batched = vec![0.0f32; batch * 52];
             exec.execute_batch(&vs, batch, &mut batched).unwrap();
@@ -273,9 +303,35 @@ mod tests {
     }
 
     #[test]
+    fn tl_executor_shares_the_plan_cached_table() {
+        let (_, plan) = shared_plan(48, 32, 4, 912);
+        let a = ExecutablePlan::new(Arc::clone(&plan), TunedBackend::Tl).unwrap();
+        let b = ExecutablePlan::new(Arc::clone(&plan), TunedBackend::Tl).unwrap();
+        match (&a.state, &b.state) {
+            (ExecState::Tl { tl: ta, .. }, ExecState::Tl { tl: tb, .. }) => {
+                assert!(Arc::ptr_eq(ta, tb), "both executors must share one code table");
+            }
+            _ => panic!("TL backend must build TL state"),
+        }
+    }
+
+    #[test]
+    fn unavailable_backends_fail_to_materialize_cleanly() {
+        let (_, plan) = shared_plan(32, 16, 3, 913);
+        for backend in TunedBackend::ALL.into_iter().filter(|b| !b.available()) {
+            let err = ExecutablePlan::new(Arc::clone(&plan), backend).unwrap_err();
+            assert!(
+                err.to_string().contains(backend.name()),
+                "{}: {err}",
+                backend.name()
+            );
+        }
+    }
+
+    #[test]
     fn shape_errors_surface_for_every_backend() {
         let (_, plan) = shared_plan(32, 16, 3, 907);
-        for backend in TunedBackend::ALL {
+        for backend in TunedBackend::ALL.into_iter().filter(|b| b.available()) {
             let mut exec = ExecutablePlan::new(Arc::clone(&plan), backend).unwrap();
             let mut out = vec![0.0f32; 16];
             assert!(exec.execute(&[0.0; 31], &mut out).is_err(), "{}", backend.name());

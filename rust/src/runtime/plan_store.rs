@@ -35,7 +35,7 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::error::{Error, Result};
 use crate::kernels::artifact::{ternary_fingerprint, ArtifactPayload, PlanArtifact};
@@ -47,6 +47,7 @@ use crate::kernels::flat::{
 use crate::kernels::index::{RsrIndex, TernaryRsrIndex};
 use crate::kernels::optimal_k::optimal_k_rsrpp;
 use crate::kernels::rsr::check_shapes;
+use crate::kernels::tl::{TlPlan, TL_GROUP};
 use crate::model::weights::ModelWeights;
 use crate::tune::profile::{LayerChoice, TuneProfile};
 
@@ -181,6 +182,10 @@ impl SharedRsrPlan {
 pub struct SharedTernaryPlan {
     plus: SharedRsrPlan,
     minus: SharedRsrPlan,
+    /// The derived TL code table, built lazily on the first executor
+    /// that asks for a TL backend and shared by every clone (clones
+    /// share the cell, so one build serves all replicas/workers).
+    tl: Arc<OnceLock<Arc<TlPlan>>>,
 }
 
 impl SharedTernaryPlan {
@@ -197,7 +202,27 @@ impl SharedTernaryPlan {
         Ok(Self {
             plus: SharedRsrPlan::from_flat(plan.plus),
             minus: SharedRsrPlan::from_flat(plan.minus),
+            tl: Arc::new(OnceLock::new()),
         })
+    }
+
+    /// The TL execution form of this plan at the default group size
+    /// ([`TL_GROUP`]): grouped 2-bit weight codes reconstructed from
+    /// the flat arenas, built at most once per shared plan and cached —
+    /// the "precompute at plan-build time" half of the TL contract.
+    /// Concurrent first callers may race the build; the loser's copy is
+    /// dropped (benign — construction is deterministic).
+    pub fn tl_plan(&self) -> Result<Arc<TlPlan>> {
+        if let Some(p) = self.tl.get() {
+            return Ok(Arc::clone(p));
+        }
+        let built = Arc::new(TlPlan::from_halves(
+            self.plus.flat(),
+            self.minus.flat(),
+            TL_GROUP,
+        )?);
+        let _ = self.tl.set(built);
+        Ok(Arc::clone(self.tl.get().expect("just set")))
     }
 
     /// Rows (input length).
@@ -797,6 +822,29 @@ mod tests {
                 .unwrap();
             assert_eq!(&out[bi * 44..(bi + 1) * 44], &solo[..]);
         }
+    }
+
+    #[test]
+    fn tl_plan_is_built_once_and_matches_rsrpp() {
+        let (_, shared) = sample_plan(60, 36, 4, 420);
+        let first = shared.tl_plan().unwrap();
+        let again = shared.tl_plan().unwrap();
+        assert!(Arc::ptr_eq(&first, &again), "second request must hit the cache");
+        let cloned = shared.clone();
+        assert!(
+            Arc::ptr_eq(&first, &cloned.tl_plan().unwrap()),
+            "clones must share the cached TL plan"
+        );
+        // Integer activations: TL and RSR++ agree to the last bit.
+        let mut rng = Rng::new(421);
+        let v = rng.int_f32_vec(60, 4);
+        let mut scratch = shared.scratch();
+        let mut expect = vec![0.0; 36];
+        shared.execute(&mut scratch, &v, &mut expect).unwrap();
+        let mut lut = first.scratch();
+        let mut got = vec![0.0; 36];
+        first.execute(&v, &mut got, &mut lut).unwrap();
+        assert_eq!(got, expect);
     }
 
     #[test]

@@ -14,6 +14,7 @@
 use crate::error::{Error, Result};
 use crate::kernels::flat::simd_gather_available;
 use crate::kernels::optimal_k::k_candidates;
+use crate::kernels::tl::tl_neon_available;
 use crate::util::threadpool::PoolHandle;
 
 /// An execution backend the tuner can select for a layer. This is the
@@ -37,16 +38,25 @@ pub enum TunedBackend {
     /// RSR++ in the segment-major interleaved batched layout, executed
     /// at batch 1 — a serial single-accumulator kernel shape.
     Batched,
+    /// Precomputed table-lookup execution over grouped 2-bit weight
+    /// codes ([`crate::kernels::TlPlan`]), runtime-dispatched to the
+    /// best column loop the host has (AVX2 gather / NEON / scalar).
+    Tl,
+    /// The TL plan pinned to its aarch64 NEON column loop — only
+    /// offered (and only loadable) on hosts where NEON is detected.
+    TlNeon,
 }
 
 impl TunedBackend {
     /// Every backend, in stable `.rsrt` code order.
-    pub const ALL: [TunedBackend; 5] = [
+    pub const ALL: [TunedBackend; 7] = [
         TunedBackend::Rsr,
         TunedBackend::RsrPlusPlus,
         TunedBackend::RsrPlusPlusScalar,
         TunedBackend::Parallel,
         TunedBackend::Batched,
+        TunedBackend::Tl,
+        TunedBackend::TlNeon,
     ];
 
     /// Short stable name (CLI / `rsr inspect` / tune reports).
@@ -57,6 +67,20 @@ impl TunedBackend {
             TunedBackend::RsrPlusPlusScalar => "rsr++-scalar",
             TunedBackend::Parallel => "parallel",
             TunedBackend::Batched => "batched",
+            TunedBackend::Tl => "tl",
+            TunedBackend::TlNeon => "tl-neon",
+        }
+    }
+
+    /// Whether this backend can execute on the current host. Foreign
+    /// ISA pins (today: `tl-neon` off aarch64) are excluded from the
+    /// candidate space and rejected with a clean error by
+    /// [`crate::runtime::ExecutablePlan::new`]; `.rsrt` host
+    /// fingerprinting keeps such profiles from travelling anyway.
+    pub fn available(self) -> bool {
+        match self {
+            TunedBackend::TlNeon => tl_neon_available(),
+            _ => true,
         }
     }
 
@@ -73,6 +97,8 @@ impl TunedBackend {
             TunedBackend::RsrPlusPlusScalar => 3,
             TunedBackend::Parallel => 4,
             TunedBackend::Batched => 5,
+            TunedBackend::Tl => 6,
+            TunedBackend::TlNeon => 7,
         }
     }
 
@@ -102,7 +128,13 @@ pub struct Candidate {
 /// * `rsr++-scalar` is dropped when the dispatched path cannot take a
 ///   SIMD route anyway (the two candidates would be byte-for-byte the
 ///   same code);
-/// * `parallel` is dropped when the shared pool has a single lane.
+/// * `parallel` is dropped when the shared pool has a single lane;
+/// * `tl-neon` is dropped off aarch64 ([`TunedBackend::available`]);
+/// * the TL backends appear only at the **first** `k` of the window:
+///   TL reconstructs the dense weights from the arenas, so its codes —
+///   and its runtime — are identical at every `k`. Timing it once
+///   avoids both redundant trials and rebuilding the `O(n·m)` code
+///   table per window step.
 ///
 /// Grouped by `k` (all backends of one `k` adjacent) so the tuner
 /// preprocesses each index once and times every backend on it.
@@ -110,11 +142,13 @@ pub fn candidate_space(rows: usize, radius: usize) -> Vec<Candidate> {
     let simd = simd_gather_available();
     let lanes = PoolHandle::global().threads();
     let mut out = Vec::new();
-    for k in k_candidates(rows, radius) {
+    for (i, k) in k_candidates(rows, radius).into_iter().enumerate() {
         for backend in TunedBackend::ALL {
             match backend {
                 TunedBackend::RsrPlusPlusScalar if !simd => continue,
                 TunedBackend::Parallel if lanes < 2 => continue,
+                TunedBackend::Tl | TunedBackend::TlNeon if i > 0 => continue,
+                b if !b.available() => continue,
                 _ => out.push(Candidate { k, backend }),
             }
         }
@@ -163,5 +197,32 @@ mod tests {
             .iter()
             .any(|c| c.backend == TunedBackend::RsrPlusPlusScalar);
         assert_eq!(has_scalar, simd_gather_available());
+    }
+
+    #[test]
+    fn tl_is_timed_once_per_layer_not_once_per_k() {
+        let space = candidate_space(1024, 2);
+        let tl: Vec<&Candidate> =
+            space.iter().filter(|c| c.backend == TunedBackend::Tl).collect();
+        assert_eq!(tl.len(), 1, "tl is k-invariant; time it once");
+        assert_eq!(tl[0].k, k_candidates(1024, 2)[0]);
+        let neon = space
+            .iter()
+            .filter(|c| c.backend == TunedBackend::TlNeon)
+            .count();
+        assert_eq!(neon, usize::from(tl_neon_available()));
+    }
+
+    #[test]
+    fn every_candidate_is_available_on_this_host() {
+        for c in candidate_space(256, 2) {
+            assert!(c.backend.available(), "{} offered but unavailable", c.backend.name());
+        }
+        // And availability only ever excludes the foreign-ISA pin.
+        for b in TunedBackend::ALL {
+            if b != TunedBackend::TlNeon {
+                assert!(b.available(), "{}", b.name());
+            }
+        }
     }
 }

@@ -55,6 +55,7 @@ use super::candidates::TunedBackend;
 use crate::error::{Error, Result};
 use crate::kernels::artifact::{fnv1a64, fnv1a64_continue, read_arr, read_u32};
 use crate::kernels::flat::simd_gather_available;
+use crate::kernels::tl::tl_neon_available;
 use crate::util::threadpool::default_threads;
 
 /// The `.rsrt` magic bytes.
@@ -76,6 +77,7 @@ const MAX_BATCH: usize = 1 << 16;
 const FEAT_X86_64: u32 = 1 << 0;
 const FEAT_AARCH64: u32 = 1 << 1;
 const FEAT_AVX2_GATHER: u32 = 1 << 2;
+const FEAT_NEON: u32 = 1 << 3;
 
 /// What `rsr tune` measured *on*: the CPU features that change which
 /// kernels exist (the AVX2 gather path) plus the thread count that
@@ -103,6 +105,9 @@ impl MachineFingerprint {
         if simd_gather_available() {
             features |= FEAT_AVX2_GATHER;
         }
+        if tl_neon_available() {
+            features |= FEAT_NEON;
+        }
         Self { features, threads: default_threads() as u32 }
     }
 
@@ -117,6 +122,9 @@ impl MachineFingerprint {
         }
         if self.features & FEAT_AVX2_GATHER != 0 {
             parts.push("avx2");
+        }
+        if self.features & FEAT_NEON != 0 {
+            parts.push("neon");
         }
         if parts.is_empty() {
             parts.push("generic");

@@ -1,0 +1,165 @@
+//! The canonical cross-backend equivalence harness.
+//!
+//! One table-driven property suite executes **every** [`TunedBackend`]
+//! — RSR, RSR++ (dispatched and scalar-pinned), parallel, batched, and
+//! the TL lookup backends — over a shared grid of blocking parameters
+//! `k ∈ {1..8}`, ragged shapes (rows and cols indivisible by the block
+//! width, the group size, and the SIMD lane counts), and batch sizes
+//! `{1, 3, 8}`, asserting **bit-exact** outputs against the scalar
+//! dense reference on integer-valued activations (every intermediate
+//! f32 sum exactly representable, so any divergence is an indexing bug,
+//! never rounding).
+//!
+//! This file replaces the per-PR copy-pasted pin patterns as the one
+//! place a future backend gets added: putting a variant in
+//! [`TunedBackend::ALL`] automatically enrolls it in the full grid
+//! here. Keep the grid cheap enough to run under `cargo test -q`.
+
+use std::sync::Arc;
+
+use rsr::kernels::standard::standard_mul_ternary;
+use rsr::kernels::{TernaryFlatPlan, TernaryMatrix, TernaryRsrIndex, TlPlan, TL_GROUP};
+use rsr::runtime::{ExecutablePlan, SharedTernaryPlan};
+use rsr::tune::TunedBackend;
+use rsr::util::rng::Rng;
+
+/// Shapes chosen for their tails: every dimension is odd or otherwise
+/// indivisible by the k-window (1..8), the TL group size (4), the AVX2
+/// column width (8) and the NEON column width (4).
+const SHAPES: [(usize, usize); 3] = [(37, 23), (64, 48), (81, 50)];
+
+const KS: std::ops::RangeInclusive<usize> = 1..=8;
+
+const BATCHES: [usize; 3] = [1, 3, 8];
+
+fn backends() -> impl Iterator<Item = TunedBackend> {
+    TunedBackend::ALL.into_iter().filter(|b| b.available())
+}
+
+#[test]
+fn every_backend_is_bit_exact_across_the_full_grid() {
+    let mut rng = Rng::new(0xE0_01);
+    for (n, m) in SHAPES {
+        let a = TernaryMatrix::random(n, m, 1.0 / 3.0, &mut rng);
+        let v = rng.int_f32_vec(n, 3);
+        let expect = standard_mul_ternary(&v, &a);
+        for k in KS {
+            let plan = Arc::new(
+                SharedTernaryPlan::new(TernaryRsrIndex::preprocess(&a, k)).unwrap(),
+            );
+            for backend in backends() {
+                let mut exec = ExecutablePlan::new(Arc::clone(&plan), backend).unwrap();
+                let mut out = vec![0.0f32; m];
+                // Twice: scratch reuse must not change a bit.
+                for round in 0..2 {
+                    exec.execute(&v, &mut out).unwrap();
+                    assert_eq!(
+                        out,
+                        expect,
+                        "{n}x{m} k={k} {} round {round}",
+                        backend.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn every_backend_batches_bit_exactly_at_every_batch_size() {
+    let mut rng = Rng::new(0xE0_02);
+    for (n, m) in SHAPES {
+        let a = TernaryMatrix::random(n, m, 1.0 / 3.0, &mut rng);
+        // One k per shape here: the k-grid is covered above, and batch
+        // routing is k-independent.
+        let plan = Arc::new(
+            SharedTernaryPlan::new(TernaryRsrIndex::preprocess(&a, 4)).unwrap(),
+        );
+        for backend in backends() {
+            let mut exec = ExecutablePlan::new(Arc::clone(&plan), backend).unwrap();
+            for batch in BATCHES {
+                let vs = rng.int_f32_vec(batch * n, 3);
+                let mut out = vec![0.0f32; batch * m];
+                exec.execute_batch(&vs, batch, &mut out).unwrap();
+                for b in 0..batch {
+                    let row = &vs[b * n..(b + 1) * n];
+                    // Batched row == the same row alone through the
+                    // single-vector path == the dense reference.
+                    let mut solo = vec![0.0f32; m];
+                    exec.execute(row, &mut solo).unwrap();
+                    let got = &out[b * m..(b + 1) * m];
+                    assert_eq!(
+                        got,
+                        &solo[..],
+                        "{n}x{m} {} batch {batch} row {b} vs solo",
+                        backend.name()
+                    );
+                    assert_eq!(
+                        got,
+                        &standard_mul_ternary(row, &a)[..],
+                        "{n}x{m} {} batch {batch} row {b} vs reference",
+                        backend.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn unavailable_backends_are_excluded_and_fail_cleanly() {
+    // The complement of the grid: anything `available()` excludes must
+    // refuse to materialize with a clean error naming the backend —
+    // never a panic, never a silent wrong-ISA dispatch.
+    let mut rng = Rng::new(0xE0_03);
+    let a = TernaryMatrix::random(32, 16, 1.0 / 3.0, &mut rng);
+    let plan =
+        Arc::new(SharedTernaryPlan::new(TernaryRsrIndex::preprocess(&a, 3)).unwrap());
+    for backend in TunedBackend::ALL.into_iter().filter(|b| !b.available()) {
+        let err = ExecutablePlan::new(Arc::clone(&plan), backend).unwrap_err();
+        assert!(err.to_string().contains(backend.name()), "{err}");
+    }
+}
+
+#[test]
+fn tl_plans_from_arenas_stay_exact_across_the_k_grid() {
+    // TL reconstructs dense weights from the k-blocked arenas, so its
+    // codes must be identical whatever k produced the plan — the
+    // property that lets the tuner time TL once per layer.
+    let mut rng = Rng::new(0xE0_04);
+    let a = TernaryMatrix::random(53, 29, 1.0 / 3.0, &mut rng);
+    let direct = TlPlan::from_weights(53, 29, TL_GROUP, a.data()).unwrap();
+    for k in KS {
+        let flat =
+            TernaryFlatPlan::from_index(&TernaryRsrIndex::preprocess(&a, k)).unwrap();
+        let via_arena = TlPlan::from_flat(&flat, TL_GROUP).unwrap();
+        assert_eq!(via_arena, direct, "k={k}");
+    }
+}
+
+#[test]
+fn corrupt_tl_payloads_error_instead_of_panicking() {
+    // Integration-level mirror of the tl.rs unit corruption tests: a
+    // payload mangled the way a torn file or flipped bit would mangle
+    // it must surface as Err from validation — execution never sees it.
+    let mut rng = Rng::new(0xE0_05);
+    let a = TernaryMatrix::random(37, 23, 1.0 / 3.0, &mut rng);
+    let good = TlPlan::from_weights(37, 23, TL_GROUP, a.data()).unwrap();
+    let codes = good.codes().to_vec();
+
+    assert!(TlPlan::from_parts(37, 23, TL_GROUP, codes[..codes.len() - 1].to_vec()).is_err());
+    let mut flipped = codes.clone();
+    flipped[codes.len() / 2] |= 0b11;
+    assert!(TlPlan::from_parts(37, 23, TL_GROUP, flipped).is_err());
+    let mut grown = codes.clone();
+    grown.extend_from_slice(&[0, 0]);
+    assert!(TlPlan::from_parts(37, 23, TL_GROUP, grown).is_err());
+
+    // The pristine payload round-trips and still executes exactly.
+    let rebuilt = TlPlan::from_parts(37, 23, TL_GROUP, codes).unwrap();
+    let v = rng.int_f32_vec(37, 3);
+    let mut lut = rebuilt.scratch();
+    let mut out = vec![0.0f32; 23];
+    rebuilt.execute(&v, &mut out, &mut lut).unwrap();
+    assert_eq!(out, standard_mul_ternary(&v, &a));
+}
