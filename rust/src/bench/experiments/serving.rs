@@ -26,19 +26,34 @@
 //! overflow `max_seq_len`. Every batch size decodes the same number of
 //! steps from the same prefill depth, so the attention cost is
 //! identical across the sweep and the comparison stays honest.
+//!
+//! The third sweep is an **open-loop overload run** (`--overload-requests`,
+//! `0` skips it): Poisson arrivals at `--overload-rps` are fired at a
+//! deliberately under-provisioned engine (1 worker, queue capacity 2)
+//! with a per-request deadline, and the run records shed rate,
+//! deadline-miss rate and end-to-end p50/p99 — the request-lifecycle
+//! trajectory (does backpressure shed instead of queueing unboundedly,
+//! does every admitted request reach exactly one terminal outcome).
+//! Unlike the closed-loop sweeps above, arrivals do not wait for
+//! service: this is the load shape a shared endpoint actually sees.
 
+use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::bench::harness::Table;
-use crate::error::Result;
+use crate::error::{Error, Result};
+use crate::kernels::Backend;
 use crate::model::config::ModelConfig;
 use crate::model::tensor::argmax;
 use crate::model::transformer::Transformer;
 use crate::model::weights::ModelWeights;
 use crate::runtime::PlanStore;
+use crate::serving::engine::{EngineConfig, InferenceEngine};
+use crate::serving::request::Request;
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 
 /// Unmeasured decode steps per batch size (first-touch faults, branch
 /// history) before the timed window opens.
@@ -64,6 +79,12 @@ pub struct ServeBenchOpts {
     pub prompt_lens: Vec<usize>,
     /// Prefill chunk the TTFT sweep runs at (compared against chunk 1).
     pub prefill_chunk: usize,
+    /// Requests fired in the open-loop overload run (`0` → skip it).
+    pub overload_requests: usize,
+    /// Mean Poisson arrival rate of the overload run, requests/sec.
+    pub overload_rps: f64,
+    /// Per-request deadline in the overload run, milliseconds.
+    pub overload_deadline_ms: u64,
     /// Where to write the JSON record (`None` → stdout table only).
     pub json_path: Option<PathBuf>,
 }
@@ -79,6 +100,9 @@ impl Default for ServeBenchOpts {
             steps: 32,
             prompt_lens: vec![16, 128, 512],
             prefill_chunk: 8,
+            overload_requests: 48,
+            overload_rps: 2000.0,
+            overload_deadline_ms: 60,
             json_path: Some(PathBuf::from("BENCH_serving.json")),
         }
     }
@@ -250,6 +274,16 @@ pub fn run(opts: &ServeBenchOpts) -> Result<Json> {
             .print("bench-serve: time-to-first-token by prompt length (chunked prefill)");
     }
 
+    // Open-loop overload run (module doc §overload): its engine is
+    // separate from the sweep model above — deliberately
+    // under-provisioned so Poisson bursts overflow the bounded queue
+    // and per-request deadlines bite.
+    let overload = if opts.overload_requests > 0 {
+        overload_run(opts)?
+    } else {
+        Json::Null
+    };
+
     let record = Json::obj(vec![
         ("bench", Json::str("serving")),
         ("d_model", Json::num(cfg.d_model as f64)),
@@ -260,6 +294,7 @@ pub fn run(opts: &ServeBenchOpts) -> Result<Json> {
         ("prefill_chunk", Json::num(opts.prefill_chunk.max(1) as f64)),
         ("batches", Json::Arr(rows)),
         ("ttft", Json::Arr(ttft_rows)),
+        ("overload", overload),
     ]);
     if let Some(path) = &opts.json_path {
         match std::fs::write(path, record.to_string()) {
@@ -268,6 +303,182 @@ pub fn run(opts: &ServeBenchOpts) -> Result<Json> {
         }
     }
     Ok(record)
+}
+
+/// Tokens of prompt fed to every overload request.
+const OVERLOAD_PROMPT_LEN: usize = 8;
+/// Decode budget per overload request (deadline usually retires the
+/// request first — the budget bounds the run, the deadline shapes it).
+const OVERLOAD_MAX_NEW: usize = 32;
+/// Request queue capacity of the overload engine: small on purpose, so
+/// backpressure (not memory) absorbs the arrival bursts.
+const OVERLOAD_QUEUE_CAP: usize = 2;
+
+/// Classify one terminal response into the overload tallies.
+fn tally(
+    resp: &crate::serving::request::Response,
+    sent_at: &HashMap<u64, Instant>,
+    ok: &mut usize,
+    missed: &mut usize,
+    failed: &mut usize,
+    latencies_ms: &mut Vec<f64>,
+) {
+    let lat = sent_at
+        .get(&resp.id)
+        .map(|t| t.elapsed().as_secs_f64() * 1e3)
+        .unwrap_or(0.0);
+    match &resp.error {
+        None => {
+            *ok += 1;
+            latencies_ms.push(lat);
+        }
+        Some(e) if e.contains("deadline exceeded") => *missed += 1,
+        Some(_) => *failed += 1,
+    }
+}
+
+/// Nearest-rank percentile over an already-sorted sample (ms).
+fn percentile_ms(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p / 100.0).round() as usize;
+    sorted[idx]
+}
+
+/// Fire `overload_requests` requests with Poisson inter-arrivals at an
+/// engine sized to saturate (1 worker, 2 slots, queue capacity
+/// [`OVERLOAD_QUEUE_CAP`]) and account every terminal outcome:
+/// admitted/shed at submit, ok/deadline-missed/failed/hung at drain.
+/// The invariant this instruments is exactly-one-terminal-outcome —
+/// `hung > 0` in the record means an admitted request never got its
+/// response, which the lifecycle CI job treats as a failure.
+fn overload_run(opts: &ServeBenchOpts) -> Result<Json> {
+    let n = opts.overload_requests;
+    let lambda = opts.overload_rps.max(1.0);
+    let deadline = Duration::from_millis(opts.overload_deadline_ms.max(1));
+    let cfg = ModelConfig {
+        name: format!("bench-serve-overload-{}", opts.d_model),
+        vocab_size: 270,
+        d_model: opts.d_model,
+        n_layers: opts.n_layers,
+        n_heads: 8,
+        n_kv_heads: 4,
+        d_ff: opts.d_ff,
+        max_seq_len: OVERLOAD_PROMPT_LEN + OVERLOAD_MAX_NEW + 4,
+        rope_theta: 10_000.0,
+    };
+    cfg.validate()?;
+    println!(
+        "bench-serve overload: {n} requests at ~{lambda:.0}/s, deadline {}ms, \
+         queue cap {OVERLOAD_QUEUE_CAP}",
+        opts.overload_deadline_ms
+    );
+    // Standard backend: no preprocessing startup, and a service rate
+    // low enough that the arrival process actually overloads it.
+    let weights = Arc::new(ModelWeights::generate(cfg, 0x0A11)?);
+    let engine = InferenceEngine::start(
+        weights,
+        EngineConfig {
+            workers: 1,
+            queue_capacity: OVERLOAD_QUEUE_CAP,
+            batch: crate::serving::batcher::BatchPolicy {
+                max_slots: 2,
+                prefill_chunk: 4,
+                ..Default::default()
+            },
+            backend: Backend::Standard,
+            ..Default::default()
+        },
+    )?;
+
+    let mut rng = Rng::new(0x0A11_0AD5);
+    let mut sent_at: HashMap<u64, Instant> = HashMap::new();
+    let (mut admitted, mut shed_full, mut shed_dead) = (0usize, 0usize, 0usize);
+    let (mut ok, mut missed, mut failed) = (0usize, 0usize, 0usize);
+    let mut latencies_ms: Vec<f64> = Vec::new();
+    let mut pending = 0usize;
+    for i in 0..n {
+        // Exponential inter-arrival via inverse transform; 1 - u keeps
+        // the log argument strictly positive.
+        let gap = -(1.0 - rng.next_f64()).ln() / lambda;
+        std::thread::sleep(Duration::from_secs_f64(gap));
+        let prompt: Vec<u32> = (0..OVERLOAD_PROMPT_LEN)
+            .map(|j| ((i * 13 + j * 7 + 3) % 256) as u32)
+            .collect();
+        let id = i as u64;
+        sent_at.insert(id, Instant::now());
+        let req = Request::new(id, prompt, OVERLOAD_MAX_NEW).with_deadline(deadline);
+        match engine.submit(req) {
+            Ok(()) => {
+                admitted += 1;
+                pending += 1;
+            }
+            Err(Error::DeadlineExceeded(_)) => shed_dead += 1,
+            Err(_) => shed_full += 1,
+        }
+        // Open loop: absorb whatever has finished without ever waiting.
+        while let Some(resp) = engine.recv_timeout(Duration::ZERO) {
+            pending -= 1;
+            tally(&resp, &sent_at, &mut ok, &mut missed, &mut failed, &mut latencies_ms);
+        }
+    }
+    // Drain: every admitted request owes exactly one terminal response.
+    // The bound is a hang detector, not a tuning knob.
+    let drain_deadline = Instant::now() + Duration::from_secs(60);
+    while pending > 0 && Instant::now() < drain_deadline {
+        if let Some(resp) = engine.recv_timeout(Duration::from_millis(200)) {
+            pending -= 1;
+            tally(&resp, &sent_at, &mut ok, &mut missed, &mut failed, &mut latencies_ms);
+        }
+    }
+    let hung = pending;
+    engine.shutdown();
+    if hung > 0 {
+        eprintln!(
+            "warning: {hung} admitted request(s) never reached a terminal \
+             outcome — lifecycle invariant violated"
+        );
+    }
+
+    latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let shed = shed_full + shed_dead;
+    let shed_rate = shed as f64 / n.max(1) as f64;
+    let miss_rate = (missed + shed_dead) as f64 / n.max(1) as f64;
+    let (p50, p99) = (percentile_ms(&latencies_ms, 50.0), percentile_ms(&latencies_ms, 99.0));
+    let mut table = Table::new(&[
+        "requests", "admitted", "shed", "shed %", "miss %", "ok", "p50 ms", "p99 ms", "hung",
+    ]);
+    table.row(&[
+        n.to_string(),
+        admitted.to_string(),
+        shed.to_string(),
+        format!("{:.1}", shed_rate * 100.0),
+        format!("{:.1}", miss_rate * 100.0),
+        ok.to_string(),
+        format!("{p50:.2}"),
+        format!("{p99:.2}"),
+        hung.to_string(),
+    ]);
+    table.print("bench-serve: open-loop overload (Poisson arrivals, bounded queue)");
+
+    Ok(Json::obj(vec![
+        ("requests", Json::num(n as f64)),
+        ("rps", Json::num(lambda)),
+        ("deadline_ms", Json::num(opts.overload_deadline_ms as f64)),
+        ("queue_capacity", Json::num(OVERLOAD_QUEUE_CAP as f64)),
+        ("admitted", Json::num(admitted as f64)),
+        ("shed_queue_full", Json::num(shed_full as f64)),
+        ("shed_deadline", Json::num(shed_dead as f64)),
+        ("shed_rate", Json::num(shed_rate)),
+        ("deadline_missed", Json::num(missed as f64)),
+        ("deadline_miss_rate", Json::num(miss_rate)),
+        ("completed_ok", Json::num(ok as f64)),
+        ("failed", Json::num(failed as f64)),
+        ("hung", Json::num(hung as f64)),
+        ("p50_ms", Json::num(p50)),
+        ("p99_ms", Json::num(p99)),
+    ]))
 }
 
 #[cfg(test)]
@@ -285,6 +496,9 @@ mod tests {
             steps: 2,
             prompt_lens: vec![5, 9],
             prefill_chunk: 4,
+            overload_requests: 0,
+            overload_rps: 1000.0,
+            overload_deadline_ms: 50,
             json_path: None,
         };
         let record = run(&opts).unwrap();
@@ -300,5 +514,36 @@ mod tests {
         assert_eq!(ttft[1].get("prefill_chunk").unwrap().as_f64(), Some(4.0));
         assert!(ttft[0].get("ttft_ms").unwrap().as_f64().unwrap() > 0.0);
         assert!(ttft[1].get("speedup_vs_chunk1").unwrap().as_f64().unwrap() > 0.0);
+        // overload_requests: 0 skips the overload run.
+        assert!(matches!(record.get("overload"), Some(Json::Null)));
+    }
+
+    #[test]
+    fn overload_run_accounts_for_every_request() {
+        // Tiny model, fast arrivals, short deadline: whatever mix of
+        // shed/missed/ok this machine produces, the accounting must
+        // conserve requests and nothing may hang.
+        let opts = ServeBenchOpts {
+            d_model: 64,
+            d_ff: 96,
+            n_layers: 1,
+            overload_requests: 8,
+            overload_rps: 5000.0,
+            overload_deadline_ms: 40,
+            ..Default::default()
+        };
+        let rec = overload_run(&opts).unwrap();
+        let g = |k: &str| rec.get(k).unwrap().as_f64().unwrap();
+        assert_eq!(g("requests"), 8.0);
+        assert_eq!(
+            g("hung"),
+            0.0,
+            "every admitted request must reach exactly one terminal outcome"
+        );
+        let admitted = g("admitted");
+        assert_eq!(admitted + g("shed_queue_full") + g("shed_deadline"), 8.0);
+        assert_eq!(g("completed_ok") + g("deadline_missed") + g("failed"), admitted);
+        assert!((0.0..=1.0).contains(&g("shed_rate")));
+        assert!((0.0..=1.0).contains(&g("deadline_miss_rate")));
     }
 }

@@ -25,6 +25,15 @@ pub enum Error {
     /// Serving-layer failures (queue overflow, closed channels…).
     Serving(String),
 
+    /// A request's deadline expired before it completed. Distinct from
+    /// [`Serving`](Error::Serving) so the router does not fall back
+    /// through replicas on a request that is already dead.
+    DeadlineExceeded(String),
+
+    /// A request was cancelled (client disconnect). Terminal — never
+    /// retried or re-routed.
+    Cancelled(String),
+
     /// Configuration / CLI problems.
     Config(String),
 
@@ -43,6 +52,8 @@ impl fmt::Display for Error {
             Error::InvalidModel(m) => write!(f, "invalid model file: {m}"),
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Serving(m) => write!(f, "serving error: {m}"),
+            Error::DeadlineExceeded(m) => write!(f, "deadline exceeded: {m}"),
+            Error::Cancelled(m) => write!(f, "cancelled: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Io(e) => write!(f, "{e}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),

@@ -121,10 +121,10 @@ fn print_help() {
          pack           --model FILE | --n N  --out DIR [--k K] [--profile FILE.rsrt]  preprocess to .rsrz\n  \
          tune           --weights FILE --out FILE.rsrt [--budget-ms N] [--radius R] [--trials T]\n  \
          inspect        --plans DIR | --file FILE [--deep]      .rsrz / .rsrt stats\n  \
-         serve          --model FILE [--plans DIR] [--profile FILE.rsrt] [--addr A] [--replicas R] [--workers W] [--max-slots S] [--prefill-chunk C] [--backend B]\n  \
-         client         [--addr A] --prompt TEXT [--max-new N]\n  \
+         serve          --model FILE [--plans DIR] [--profile FILE.rsrt] [--addr A] [--replicas R] [--workers W] [--max-slots S] [--prefill-chunk C] [--backend B] [--default-deadline-ms D] [--replica-stall-ms S]\n  \
+         client         [--addr A] --prompt TEXT [--max-new N] [--deadline-ms D]\n  \
          bench-kernels  [--sizes 1024,4096] [--shapes 4096x11008] [--reps N] [--batch B] [--threads T] [--json FILE]\n  \
-         bench-serve    [--batches 1,4,8,16] [--d-model 1024] [--d-ff 2048] [--layers 1] [--steps 32] [--prompt 4] [--prompt-lens 16,128,512] [--prefill-chunk 8] [--json FILE]\n  \
+         bench-serve    [--batches 1,4,8,16] [--d-model 1024] [--d-ff 2048] [--layers 1] [--steps 32] [--prompt 4] [--prompt-lens 16,128,512] [--prefill-chunk 8] [--overload-requests 48] [--overload-rps 2000] [--overload-deadline-ms 60] [--json FILE]\n  \
          bench-prefill  [--chunks 1,4,8,16] [--d-model 1024] [--d-ff 2048] [--layers 1] [--prompt 256] [--trials 3] [--json FILE]\n  \
          experiment     <fig4|fig5|fig6|fig9|fig10|fig11|fig12|table1|ablations|all> [--full]\n  \
          selfcheck                                              cross-backend equality\n  \
@@ -324,8 +324,26 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
             .map(Arc::new)
         })
         .collect::<Result<_>>()?;
-    let router = Arc::new(Router::new(engines)?);
-    let server = Server::new(router);
+    // Request-lifecycle knobs: a deadline stamped on requests that
+    // don't carry their own `deadline_ms` (0 = none — requests wait as
+    // long as they take), and the heartbeat staleness beyond which the
+    // router stops sending traffic to a replica (0 = no health
+    // filtering; must exceed the model's worst-case step time).
+    let default_deadline_ms = get_usize(f, "default-deadline-ms", 0)? as u64;
+    let replica_stall_ms = get_usize(f, "replica-stall-ms", 0)? as u64;
+    let mut router = Router::new(engines)?;
+    if replica_stall_ms > 0 {
+        router =
+            router.with_replica_stall(std::time::Duration::from_millis(replica_stall_ms));
+        println!("replica health: skip replicas stalled > {replica_stall_ms}ms");
+    }
+    let router = Arc::new(router);
+    let mut server = Server::new(router);
+    if default_deadline_ms > 0 {
+        server = server
+            .with_default_deadline(std::time::Duration::from_millis(default_deadline_ms));
+        println!("default request deadline: {default_deadline_ms}ms");
+    }
     let stop = Arc::new(AtomicBool::new(false));
     println!("serving on {addr} (Ctrl-C to stop)");
     server.serve(&addr, stop, |bound| println!("bound {bound}"))
@@ -342,8 +360,17 @@ fn cmd_client(f: &HashMap<String, String>) -> Result<()> {
         .get("prompt")
         .ok_or_else(|| Error::Config("client requires --prompt TEXT".into()))?;
     let max_new = get_usize(f, "max-new", 16)?;
+    // --deadline-ms rides the wire as `deadline_ms`; the server sheds
+    // or retires the request with a `deadline exceeded` error once the
+    // budget is spent (0 = no deadline).
+    let deadline_ms = get_usize(f, "deadline-ms", 0)? as u64;
     let mut client = Client::connect(addr)?;
-    let reply = client.request(1, prompt, max_new)?;
+    let reply = client.request_with(
+        1,
+        prompt,
+        max_new,
+        if deadline_ms > 0 { Some(deadline_ms) } else { None },
+    )?;
     println!("{}", reply.to_string());
     Ok(())
 }
@@ -409,6 +436,13 @@ fn cmd_bench_serve(f: &HashMap<String, String>) -> Result<()> {
         };
     }
     opts.prefill_chunk = get_usize(f, "prefill-chunk", opts.prefill_chunk)?.max(1);
+    // Open-loop overload run (0 requests skips it): Poisson arrivals
+    // against a bounded queue, recording shed/deadline-miss rates and
+    // end-to-end p50/p99 into the same JSON record.
+    opts.overload_requests = get_usize(f, "overload-requests", opts.overload_requests)?;
+    opts.overload_rps = get_usize(f, "overload-rps", opts.overload_rps as usize)? as f64;
+    opts.overload_deadline_ms =
+        get_usize(f, "overload-deadline-ms", opts.overload_deadline_ms as usize)? as u64;
     opts.json_path = Some(PathBuf::from(
         f.get("json").cloned().unwrap_or_else(|| "BENCH_serving.json".into()),
     ));

@@ -1,9 +1,37 @@
 //! The inference engine: worker threads each owning a `Transformer`
 //! instance, pulling batches from the shared queue, running
 //! prefill → decode per request, and reporting completions.
+//!
+//! # Request lifecycle
+//!
+//! Every admitted request reaches **exactly one** terminal outcome —
+//! a response, a backpressure shed, a `deadline exceeded` error, or a
+//! `cancelled` error — never a hang. Deadlines and cancellation are
+//! checked at three points: admission ([`InferenceEngine::submit`]),
+//! slot assignment (when a worker seats a queued request), and between
+//! decode steps (so an expired or abandoned sequence frees its slot
+//! within one lockstep step).
+//!
+//! # Worker supervision
+//!
+//! Each batch step runs under `catch_unwind`. A panic is converted into
+//! per-slot terminal error responses (no leaked `inflight`, no hung
+//! waiters); the request that was mid-prefill when the panic hit is
+//! quarantined — re-run once from scratch, then poisoned on a second
+//! panic — and the worker rebuilds its `Transformer` (cheap: the plan
+//! store is shared) and keeps serving. `panics_total` counts caught
+//! panics in the metrics snapshot.
+//!
+//! # Heartbeat
+//!
+//! Workers stamp a shared heartbeat at the top of every loop iteration
+//! and after every completed step. [`InferenceEngine::heartbeat_age`]
+//! is the router's health signal: a worker wedged inside a step (or a
+//! stalled host) stops beating, and the router routes around the
+//! replica until the heartbeat recovers.
 
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -21,6 +49,55 @@ use crate::runtime::plan_store::PlanStore;
 use crate::tune::candidates::TunedBackend;
 use crate::tune::profile::TuneProfile;
 use crate::util::rng::Rng;
+
+/// Deterministic fault injection for the lifecycle test harness.
+///
+/// Threaded through [`EngineConfig::fault`]; compiled only for tests
+/// and the `fault-inject` feature, so release binaries carry no
+/// injection branches unless explicitly built with the feature. Step
+/// numbers refer to the engine-wide step counter (each lockstep step —
+/// or each sequential request — gets a unique, monotonically
+/// increasing number), so every trigger fires exactly once.
+#[cfg(any(test, feature = "fault-inject"))]
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Panic the worker when the step counter reaches any listed step.
+    pub panic_at_steps: Vec<u64>,
+    /// Stall the worker (sleep) for `.1` milliseconds when the step
+    /// counter reaches `.0` — wedges the heartbeat for that long.
+    pub stall_at_step: Option<(u64, u64)>,
+    /// Reject every submit as queue-full (admission-control testing).
+    pub force_queue_full: bool,
+}
+
+/// Fault checkpoint executed (inside the supervised section) just
+/// before a model step.
+#[cfg(any(test, feature = "fault-inject"))]
+fn fault_before_step(step: u64, cfg: &EngineConfig) {
+    if let Some((at, ms)) = cfg.fault.stall_at_step {
+        if step == at {
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+    }
+    if cfg.fault.panic_at_steps.contains(&step) {
+        panic!("fault-inject: panic at step {step}");
+    }
+}
+
+#[cfg(not(any(test, feature = "fault-inject")))]
+#[inline(always)]
+fn fault_before_step(_step: u64, _cfg: &EngineConfig) {}
+
+#[cfg(any(test, feature = "fault-inject"))]
+fn fault_queue_full(cfg: &EngineConfig) -> bool {
+    cfg.fault.force_queue_full
+}
+
+#[cfg(not(any(test, feature = "fault-inject")))]
+#[inline(always)]
+fn fault_queue_full(_cfg: &EngineConfig) -> bool {
+    false
+}
 
 /// Engine configuration.
 #[derive(Debug, Clone)]
@@ -49,6 +126,9 @@ pub struct EngineConfig {
     /// defaults. The profile must have been tuned on this machine
     /// (fingerprint-checked at startup).
     pub tune_profile: Option<PathBuf>,
+    /// Fault-injection plan (tests / `fault-inject` feature only).
+    #[cfg(any(test, feature = "fault-inject"))]
+    pub fault: FaultPlan,
 }
 
 impl Default for EngineConfig {
@@ -62,6 +142,8 @@ impl Default for EngineConfig {
             k: 0,
             plan_dir: None,
             tune_profile: None,
+            #[cfg(any(test, feature = "fault-inject"))]
+            fault: FaultPlan::default(),
         }
     }
 }
@@ -78,6 +160,11 @@ pub struct InferenceEngine {
     workers: Vec<std::thread::JoinHandle<()>>,
     inflight: Arc<AtomicUsize>,
     shutdown: Arc<AtomicBool>,
+    /// Engine start instant — the heartbeat's epoch.
+    epoch: Instant,
+    /// Milliseconds since `epoch` of the most recent worker heartbeat.
+    heartbeat_ms: Arc<AtomicU64>,
+    cfg: EngineConfig,
 }
 
 impl InferenceEngine {
@@ -231,17 +318,25 @@ impl InferenceEngine {
         let (tx, rx) = mpsc::channel::<Response>();
         let inflight = Arc::new(AtomicUsize::new(0));
         let shutdown = Arc::new(AtomicBool::new(false));
+        let epoch = Instant::now();
+        let heartbeat_ms = Arc::new(AtomicU64::new(0));
+        let step_counter = Arc::new(AtomicU64::new(0));
 
         let mut workers = Vec::with_capacity(cfg.workers.max(1));
         for wid in 0..cfg.workers.max(1) {
-            let queue = Arc::clone(&queue);
-            let metrics = Arc::clone(&metrics);
-            let tx = tx.clone();
+            let ctx = WorkerCtx {
+                queue: Arc::clone(&queue),
+                metrics: Arc::clone(&metrics),
+                tx: tx.clone(),
+                inflight: Arc::clone(&inflight),
+                shutdown: Arc::clone(&shutdown),
+                step_counter: Arc::clone(&step_counter),
+                epoch,
+                heartbeat_ms: Arc::clone(&heartbeat_ms),
+                cfg: cfg.clone(),
+            };
             let weights = Arc::clone(&weights);
-            let inflight = Arc::clone(&inflight);
-            let shutdown = Arc::clone(&shutdown);
             let store = store.clone();
-            let cfg = cfg.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("rsr-worker-{wid}"))
@@ -249,18 +344,25 @@ impl InferenceEngine {
                         // Fixed weights — preprocessing amortizes (the
                         // paper's core observation): shared plans from
                         // the store, or per-worker prepare otherwise.
-                        let built = match &store {
+                        // The same builder rebuilds the model after a
+                        // supervised panic (the "respawn" of the
+                        // supervision policy).
+                        let rebuild = || match &store {
                             Some(s) => Transformer::from_plan_store(&weights, s),
-                            None => Transformer::from_weights(&weights, cfg.backend, cfg.k),
+                            None => Transformer::from_weights(
+                                &weights,
+                                ctx.cfg.backend,
+                                ctx.cfg.k,
+                            ),
                         };
-                        let model = match built {
+                        let model = match rebuild() {
                             Ok(m) => m,
                             Err(e) => {
                                 eprintln!("worker {wid}: model build failed: {e}");
                                 return;
                             }
                         };
-                        worker_loop(model, queue, metrics, tx, inflight, shutdown, &cfg);
+                        worker_loop(model, &ctx, &rebuild);
                     })
                     .map_err(|e| Error::Serving(e.to_string()))?,
             );
@@ -272,11 +374,30 @@ impl InferenceEngine {
             workers,
             inflight,
             shutdown,
+            epoch,
+            heartbeat_ms,
+            cfg,
         })
     }
 
-    /// Submit a request; fails fast under backpressure.
+    /// Submit a request; fails fast under backpressure, and sheds
+    /// already-dead work (expired deadline / cancelled) before it ever
+    /// occupies queue capacity.
     pub fn submit(&self, request: Request) -> Result<()> {
+        if fault_queue_full(&self.cfg) {
+            self.metrics.record_admission(false);
+            return Err(Error::Serving("queue full — retry later".into()));
+        }
+        if request.cancel.is_cancelled() {
+            self.metrics.record_cancelled();
+            return Err(Error::Cancelled("request cancelled before admission".into()));
+        }
+        if request.deadline_expired() {
+            self.metrics.record_deadline_exceeded();
+            return Err(Error::DeadlineExceeded(
+                "deadline expired before admission".into(),
+            ));
+        }
         let res = self.queue.try_push(request);
         self.metrics.record_admission(res.is_ok());
         match res {
@@ -309,6 +430,23 @@ impl InferenceEngine {
         self.queue.len() + self.inflight()
     }
 
+    /// Time since the last worker heartbeat (top of a worker loop or a
+    /// completed step). Idle workers beat every ≤ 50 ms, so a healthy
+    /// replica's age stays well under 100 ms plus its longest single
+    /// step; a worker wedged *inside* a step stops beating. The
+    /// router's staleness threshold must exceed the model's worst-case
+    /// step time.
+    pub fn heartbeat_age(&self) -> Duration {
+        let now_ms = self.epoch.elapsed().as_millis() as u64;
+        let last = self.heartbeat_ms.load(Ordering::Relaxed);
+        Duration::from_millis(now_ms.saturating_sub(last))
+    }
+
+    /// Worker panics caught by supervision since startup.
+    pub fn panics_total(&self) -> u64 {
+        self.metrics.panics.load(Ordering::Relaxed)
+    }
+
     /// Metrics sink.
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
@@ -324,14 +462,112 @@ impl InferenceEngine {
     }
 }
 
-fn worker_loop(
-    model: Transformer,
+/// Everything a worker thread shares with the engine: queue, metrics,
+/// response channel, lifecycle bookkeeping, heartbeat, and config.
+struct WorkerCtx {
     queue: Arc<BoundedQueue<Request>>,
     metrics: Arc<Metrics>,
     tx: mpsc::Sender<Response>,
     inflight: Arc<AtomicUsize>,
     shutdown: Arc<AtomicBool>,
-    cfg: &EngineConfig,
+    /// Engine-wide lockstep step counter (fault-injection reference
+    /// frame; also unique-numbers every supervised section).
+    step_counter: Arc<AtomicU64>,
+    epoch: Instant,
+    heartbeat_ms: Arc<AtomicU64>,
+    cfg: EngineConfig,
+}
+
+impl WorkerCtx {
+    /// Stamp the shared heartbeat. `fetch_max` so a slow worker never
+    /// rolls the replica's freshness backwards.
+    fn beat(&self) {
+        self.heartbeat_ms
+            .fetch_max(self.epoch.elapsed().as_millis() as u64, Ordering::Relaxed);
+    }
+}
+
+/// Why a request is being retired — the terminal-outcome taxonomy.
+enum Retire {
+    /// Completed normally.
+    Done,
+    /// Failed with an engine/model error.
+    Failed(String),
+    /// Deadline expired (queued past deadline, or retired
+    /// mid-generation).
+    Deadline,
+    /// Client cancelled (disconnect observed by the server).
+    Cancelled,
+}
+
+impl Retire {
+    /// The error string carried by the terminal response (`None` for
+    /// success). Deadline/cancel messages are stable prefixes that
+    /// tests and clients can match on.
+    fn error_message(&self) -> Option<String> {
+        match self {
+            Retire::Done => None,
+            Retire::Failed(m) => Some(m.clone()),
+            Retire::Deadline => Some("deadline exceeded".into()),
+            Retire::Cancelled => Some("cancelled by client".into()),
+        }
+    }
+}
+
+/// Lifecycle preflight shared by the slot-assignment checkpoints:
+/// cancellation dominates (an abandoned request's deadline no longer
+/// matters to anyone).
+fn preflight(request: &Request) -> Option<Retire> {
+    if request.cancel.is_cancelled() {
+        return Some(Retire::Cancelled);
+    }
+    if request.deadline_expired() {
+        return Some(Retire::Deadline);
+    }
+    None
+}
+
+/// Account one terminal outcome and deliver the response. Returns
+/// `false` when the response receiver is gone (worker exits).
+fn account_and_send(
+    ctx: &WorkerCtx,
+    response: Response,
+    outcome: &Retire,
+    prompt_tokens: usize,
+) -> bool {
+    match outcome {
+        Retire::Done => {
+            ctx.metrics.record(&response.timing, response.tokens.len(), prompt_tokens)
+        }
+        Retire::Failed(_) => ctx.metrics.record_failure(),
+        Retire::Deadline => ctx.metrics.record_deadline_exceeded(),
+        Retire::Cancelled => ctx.metrics.record_cancelled(),
+    }
+    ctx.inflight.fetch_sub(1, Ordering::Relaxed);
+    ctx.tx.send(response).is_ok()
+}
+
+/// Terminal outcome for a request that never got (or lost) a slot.
+fn respond_terminal(ctx: &WorkerCtx, request: &Request, outcome: Retire) -> bool {
+    let msg = outcome.error_message().unwrap_or_else(|| "retired".into());
+    account_and_send(ctx, Response::err(request.id, msg), &outcome, request.prompt.len())
+}
+
+/// Render a caught panic payload.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".into()
+    }
+}
+
+fn worker_loop(
+    model: Transformer,
+    ctx: &WorkerCtx,
+    rebuild: &dyn Fn() -> Result<Transformer>,
 ) {
     // `max_slots == 1` with `prefill_chunk == 1` degrades to the
     // strictly sequential loop — the exact pre-batching code path, bit
@@ -340,49 +576,94 @@ fn worker_loop(
     // requests joining mid-flight. A single slot with a chunk > 1
     // still takes the continuous loop: chunked prefill pays off even
     // with no batchmates (that is the time-to-first-token case).
-    if cfg.batch.max_slots <= 1 && cfg.batch.prefill_chunk <= 1 {
-        sequential_loop(model, queue, metrics, tx, inflight, shutdown, cfg);
+    if ctx.cfg.batch.max_slots <= 1 && ctx.cfg.batch.prefill_chunk <= 1 {
+        sequential_loop(model, ctx, rebuild);
     } else {
-        continuous_loop(model, queue, metrics, tx, inflight, shutdown, cfg);
+        continuous_loop(model, ctx, rebuild);
     }
 }
 
 fn sequential_loop(
     mut model: Transformer,
-    queue: Arc<BoundedQueue<Request>>,
-    metrics: Arc<Metrics>,
-    tx: mpsc::Sender<Response>,
-    inflight: Arc<AtomicUsize>,
-    shutdown: Arc<AtomicBool>,
-    cfg: &EngineConfig,
+    ctx: &WorkerCtx,
+    rebuild: &dyn Fn() -> Result<Transformer>,
 ) {
-    let batcher = Batcher::new(Arc::clone(&queue), cfg.batch);
+    let batcher = Batcher::new(Arc::clone(&ctx.queue), ctx.cfg.batch);
     let mut rng = Rng::new(0xC0FFEE);
     loop {
-        if shutdown.load(Ordering::Relaxed) && queue.is_empty() {
+        ctx.beat();
+        if ctx.shutdown.load(Ordering::Relaxed) && ctx.queue.is_empty() {
             break;
         }
         let Some(batch) = batcher.next_batch(Duration::from_millis(50)) else {
-            if queue.is_closed() && queue.is_empty() {
+            if ctx.queue.is_closed() && ctx.queue.is_empty() {
                 break;
             }
             continue;
         };
-        for request in schedule(batch.requests, cfg.schedule) {
-            let response = run_request(&mut model, &request, &mut rng);
-            match &response.error {
-                None => {
-                    metrics.record(
-                        &response.timing,
-                        response.tokens.len(),
-                        request.prompt.len(),
-                    );
+        for mut request in schedule(batch.requests, ctx.cfg.schedule) {
+            // Supervision retry loop: at most two attempts (quarantine
+            // policy — one retry, then poisoned).
+            loop {
+                ctx.beat();
+                // Slot-assignment lifecycle checkpoint.
+                if let Some(outcome) = preflight(&request) {
+                    if !respond_terminal(ctx, &request, outcome) {
+                        return;
+                    }
+                    break;
                 }
-                Some(_) => metrics.record_failure(),
-            }
-            inflight.fetch_sub(1, Ordering::Relaxed);
-            if tx.send(response).is_err() {
-                return; // receiver dropped — engine gone
+                let step_no = ctx.step_counter.fetch_add(1, Ordering::Relaxed) + 1;
+                let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    fault_before_step(step_no, &ctx.cfg);
+                    run_request(&mut model, &request, &mut rng)
+                }));
+                match run {
+                    Ok((response, outcome)) => {
+                        if !account_and_send(ctx, response, &outcome, request.prompt.len())
+                        {
+                            return;
+                        }
+                        break;
+                    }
+                    Err(payload) => {
+                        ctx.metrics.record_panic();
+                        let msg = panic_message(payload);
+                        eprintln!(
+                            "worker: caught panic serving request {}: {msg} — \
+                             rebuilding model",
+                            request.id
+                        );
+                        match rebuild() {
+                            Ok(m) => model = m,
+                            Err(e) => {
+                                let _ = respond_terminal(
+                                    ctx,
+                                    &request,
+                                    Retire::Failed(format!(
+                                        "worker rebuild failed after panic: {e}"
+                                    )),
+                                );
+                                eprintln!("worker: model rebuild failed: {e}");
+                                return;
+                            }
+                        }
+                        if request.attempts == 0 {
+                            request.attempts = 1;
+                            continue; // quarantine retry
+                        }
+                        if !respond_terminal(
+                            ctx,
+                            &request,
+                            Retire::Failed(format!(
+                                "poisoned: request panicked the worker twice ({msg})"
+                            )),
+                        ) {
+                            return;
+                        }
+                        break;
+                    }
+                }
             }
         }
     }
@@ -406,16 +687,10 @@ struct SlotState {
 
 /// Retire one sequence: build its response, account it, and send it.
 /// Returns `false` when the response receiver is gone (worker exits).
-fn finish_slot(
-    slot: SlotState,
-    error: Option<String>,
-    metrics: &Metrics,
-    inflight: &AtomicUsize,
-    tx: &mpsc::Sender<Response>,
-) -> bool {
+fn finish_slot(slot: SlotState, outcome: Retire, ctx: &WorkerCtx) -> bool {
     let now = Instant::now();
     let prompt_tokens = slot.request.prompt.len();
-    let response = match error {
+    let response = match outcome.error_message() {
         Some(msg) => Response::err(slot.request.id, msg),
         None => {
             let prefill_end = slot.prefill_done.unwrap_or(now);
@@ -427,12 +702,62 @@ fn finish_slot(
             Response::ok(slot.request.id, slot.tokens, timing)
         }
     };
-    match &response.error {
-        None => metrics.record(&response.timing, response.tokens.len(), prompt_tokens),
-        Some(_) => metrics.record_failure(),
+    account_and_send(ctx, response, &outcome, prompt_tokens)
+}
+
+/// Supervision: convert a caught step panic into per-slot terminal
+/// outcomes. The request that was mid-prefill when the panic hit is
+/// quarantined — pushed onto `carryover` for one clean re-run (fresh
+/// slot, fresh KV) — unless it already spent its retry, in which case
+/// it is poisoned. Decode-phase slots fail terminally (their partial
+/// output died with the model state). Returns `false` when the
+/// response receiver is gone.
+fn supervise_panic(
+    payload: Box<dyn std::any::Any + Send>,
+    slots: &mut [Option<SlotState>],
+    step_slots: &[usize],
+    carryover: &mut Vec<Request>,
+    ctx: &WorkerCtx,
+) -> bool {
+    ctx.metrics.record_panic();
+    let msg = panic_message(payload);
+    eprintln!("worker: caught panic during lockstep step: {msg} — rebuilding model");
+    for &i in step_slots {
+        let mut st = slots[i].take().expect("was in the step");
+        let mid_prefill = st.prompt_pos < st.request.prompt.len();
+        if mid_prefill && st.request.attempts == 0 {
+            st.request.attempts = 1;
+            carryover.push(st.request);
+        } else if mid_prefill {
+            if !finish_slot(
+                st,
+                Retire::Failed(format!(
+                    "poisoned: request panicked the worker twice ({msg})"
+                )),
+                ctx,
+            ) {
+                return false;
+            }
+        } else if !finish_slot(
+            st,
+            Retire::Failed(format!("worker panicked mid-generation ({msg})")),
+            ctx,
+        ) {
+            return false;
+        }
     }
-    inflight.fetch_sub(1, Ordering::Relaxed);
-    tx.send(response).is_ok()
+    // Defensive sweep: every live slot joins every step today, but if
+    // that invariant ever changes, a leftover slot's KV still dies with
+    // the rebuilt model — fail it loudly rather than decoding garbage.
+    for s in slots.iter_mut() {
+        if let Some(st) = s.take() {
+            if !finish_slot(st, Retire::Failed("worker restarted after a panic".into()), ctx)
+            {
+                return false;
+            }
+        }
+    }
+    true
 }
 
 /// The continuous-batching worker: a slot map of up to
@@ -460,22 +785,25 @@ fn finish_slot(
 /// bit-identical to one-token prefill (see
 /// [`Transformer::forward_chunk`]), so joins, retirements and chunk
 /// boundaries never perturb the tokens of in-flight sequences.
+///
+/// **Lifecycle:** between steps every live slot is checked for
+/// cancellation and deadline expiry (retired with the matching
+/// terminal error), each step runs under `catch_unwind` (see
+/// [`supervise_panic`]), and the worker stamps the replica heartbeat
+/// at the top of every iteration.
 fn continuous_loop(
     mut model: Transformer,
-    queue: Arc<BoundedQueue<Request>>,
-    metrics: Arc<Metrics>,
-    tx: mpsc::Sender<Response>,
-    inflight: Arc<AtomicUsize>,
-    shutdown: Arc<AtomicBool>,
-    cfg: &EngineConfig,
+    ctx: &WorkerCtx,
+    rebuild: &dyn Fn() -> Result<Transformer>,
 ) {
+    let cfg = &ctx.cfg;
     let max_slots = cfg.batch.max_slots.max(1);
     let prefill_chunk = cfg.batch.prefill_chunk.max(1);
     model.ensure_slots(max_slots);
     // The idle pickup must never admit more requests than there are
     // slots to hold them.
     let policy = BatchPolicy { max_batch: cfg.batch.max_batch.min(max_slots), ..cfg.batch };
-    let batcher = Batcher::new(Arc::clone(&queue), policy);
+    let batcher = Batcher::new(Arc::clone(&ctx.queue), policy);
     let mut rng = Rng::new(0xC0FFEE);
     let sampler = Sampler::Greedy;
     let max_seq = model.config().max_seq_len;
@@ -486,30 +814,43 @@ fn continuous_loop(
     let mut step_counts: Vec<usize> = Vec::with_capacity(max_slots);
     let mut len_after: Vec<usize> = Vec::with_capacity(max_slots);
     let mut retired: Vec<usize> = Vec::with_capacity(max_slots);
+    // Panic-quarantined requests awaiting their clean re-run; they
+    // re-seat ahead of fresh queue pickups (they already held slots).
+    let mut carryover: Vec<Request> = Vec::new();
     loop {
+        ctx.beat();
         let live = slots.iter().filter(|s| s.is_some()).count();
         // Admission: block when idle (same idle/shutdown semantics as
         // the sequential loop); top up free slots without waiting while
         // sequences are in flight.
-        let admitted = if live == 0 {
-            if shutdown.load(Ordering::Relaxed) && queue.is_empty() {
+        let mut admitted: Vec<Request> = std::mem::take(&mut carryover);
+        if live == 0 && admitted.is_empty() {
+            if ctx.shutdown.load(Ordering::Relaxed) && ctx.queue.is_empty() {
                 break;
             }
             let Some(batch) = batcher.next_batch(Duration::from_millis(50)) else {
-                if queue.is_closed() && queue.is_empty() {
+                if ctx.queue.is_closed() && ctx.queue.is_empty() {
                     break;
                 }
                 continue;
             };
-            batch.requests
+            admitted = batch.requests;
         } else {
-            batcher.poll(max_slots - live)
-        };
+            let free = (max_slots - live).saturating_sub(admitted.len());
+            admitted.extend(batcher.poll(free));
+        }
         for request in schedule(admitted, cfg.schedule) {
+            // Slot-assignment lifecycle checkpoint: a request that
+            // expired or was abandoned while queued never takes a slot.
+            if let Some(outcome) = preflight(&request) {
+                if !respond_terminal(ctx, &request, outcome) {
+                    return;
+                }
+                continue;
+            }
             if request.prompt.is_empty() {
-                metrics.record_failure();
-                inflight.fetch_sub(1, Ordering::Relaxed);
-                if tx.send(Response::err(request.id, "empty prompt")).is_err() {
+                if !respond_terminal(ctx, &request, Retire::Failed("empty prompt".into()))
+                {
                     return;
                 }
                 continue;
@@ -528,6 +869,24 @@ fn continuous_loop(
                 prefill_done: None,
                 request,
             });
+        }
+        // Between-step lifecycle checkpoint: an expired or cancelled
+        // sequence frees its slot before the next step is assembled.
+        for i in 0..max_slots {
+            let Some(st) = &slots[i] else { continue };
+            let outcome = if st.request.cancel.is_cancelled() {
+                Some(Retire::Cancelled)
+            } else if st.request.deadline_expired() {
+                Some(Retire::Deadline)
+            } else {
+                None
+            };
+            if let Some(outcome) = outcome {
+                let st = slots[i].take().expect("checked live above");
+                if !finish_slot(st, outcome, ctx) {
+                    return;
+                }
+            }
         }
         // Fair-share chunk budget for this step: `prefill_chunk` total
         // prompt rows, split across the slots currently prefilling
@@ -564,7 +923,7 @@ fn continuous_loop(
             };
             if let Some(msg) = failure {
                 let st = slots[i].take().expect("checked live above");
-                if !finish_slot(st, Some(msg), &metrics, &inflight, &tx) {
+                if !finish_slot(st, Retire::Failed(msg), ctx) {
                     return;
                 }
                 continue;
@@ -599,18 +958,53 @@ fn continuous_loop(
         if step_slots.is_empty() {
             continue;
         }
+        let step_no = ctx.step_counter.fetch_add(1, Ordering::Relaxed) + 1;
         let t0 = Instant::now();
-        let logits = match model.forward_chunk(&step_tokens, &step_slots, &step_counts) {
-            Ok(l) => l,
-            Err(e) => {
+        // The supervised section: a panic anywhere inside the model
+        // step is caught, converted to per-slot terminal outcomes, and
+        // followed by a model rebuild — never a hung waiter.
+        let step_res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            fault_before_step(step_no, cfg);
+            model.forward_chunk(&step_tokens, &step_slots, &step_counts)
+        }));
+        let logits = match step_res {
+            Ok(Ok(l)) => l,
+            Ok(Err(e)) => {
                 // Per-slot preconditions were checked above, so a step
                 // failure is an engine-bug class: fail the live rows
                 // loudly rather than wedging them.
                 let msg = e.to_string();
                 for &i in &step_slots {
                     let st = slots[i].take().expect("was in the step");
-                    if !finish_slot(st, Some(format!("step: {msg}")), &metrics, &inflight, &tx)
-                    {
+                    if !finish_slot(st, Retire::Failed(format!("step: {msg}")), ctx) {
+                        return;
+                    }
+                }
+                continue;
+            }
+            Err(payload) => {
+                if !supervise_panic(payload, &mut slots, &step_slots, &mut carryover, ctx)
+                {
+                    return;
+                }
+                match rebuild() {
+                    Ok(m) => {
+                        model = m;
+                        model.ensure_slots(max_slots);
+                    }
+                    Err(e) => {
+                        eprintln!("worker: model rebuild after panic failed: {e}");
+                        for r in carryover.drain(..) {
+                            if !respond_terminal(
+                                ctx,
+                                &r,
+                                Retire::Failed(format!(
+                                    "worker rebuild failed after panic: {e}"
+                                )),
+                            ) {
+                                return;
+                            }
+                        }
                         return;
                     }
                 }
@@ -618,6 +1012,7 @@ fn continuous_loop(
             }
         };
         let step_dur = t0.elapsed();
+        ctx.beat();
         // Advance every slot: prefill consumes its chunk silently; the
         // step that feeds the final prompt token samples the first
         // generated one from the chunk's **last row** (exactly
@@ -653,33 +1048,58 @@ fn continuous_loop(
                 st.next_input = next;
             }
         }
-        metrics.record_decode_step(step_slots.len(), step_dur);
+        ctx.metrics.record_decode_step(step_slots.len(), step_dur);
         for &i in &retired {
             let st = slots[i].take().expect("retired from the step");
-            if !finish_slot(st, None, &metrics, &inflight, &tx) {
+            if !finish_slot(st, Retire::Done, ctx) {
                 return;
             }
         }
     }
 }
 
-fn run_request(model: &mut Transformer, request: &Request, rng: &mut Rng) -> Response {
+/// Run one request to a terminal outcome on the sequential path. The
+/// deadline and cancellation are checked between every model step
+/// (prefill tokens included), matching the continuous loop's
+/// between-step checkpoint.
+fn run_request(
+    model: &mut Transformer,
+    request: &Request,
+    rng: &mut Rng,
+) -> (Response, Retire) {
     let picked_up = Instant::now();
     let queue_time = picked_up.duration_since(request.arrival);
 
     model.reset();
     let mut timing = Timing { queue: queue_time, ..Timing::default() };
 
+    let lifecycle = |r: &Request| -> Option<(Response, Retire)> {
+        if r.cancel.is_cancelled() {
+            return Some((Response::err(r.id, "cancelled by client"), Retire::Cancelled));
+        }
+        if r.deadline_expired() {
+            return Some((Response::err(r.id, "deadline exceeded"), Retire::Deadline));
+        }
+        None
+    };
+
     // Prefill.
     let t0 = Instant::now();
     for &t in &request.prompt {
+        if let Some(out) = lifecycle(request) {
+            return out;
+        }
         if let Err(e) = model.forward_token(t) {
-            return Response::err(request.id, format!("prefill: {e}"));
+            let msg = format!("prefill: {e}");
+            return (Response::err(request.id, msg.clone()), Retire::Failed(msg));
         }
     }
     timing.prefill = t0.elapsed();
     if request.prompt.is_empty() {
-        return Response::err(request.id, "empty prompt");
+        return (
+            Response::err(request.id, "empty prompt"),
+            Retire::Failed("empty prompt".into()),
+        );
     }
 
     // Decode (greedy — the §5.3 equality-comparable setting).
@@ -687,9 +1107,15 @@ fn run_request(model: &mut Transformer, request: &Request, rng: &mut Rng) -> Res
     let mut tokens = Vec::with_capacity(request.max_new_tokens);
     let sampler = Sampler::Greedy;
     for _ in 0..request.max_new_tokens {
+        if let Some(out) = lifecycle(request) {
+            return out;
+        }
         let logits = match model_logits(model) {
             Ok(l) => l,
-            Err(e) => return Response::err(request.id, format!("decode: {e}")),
+            Err(e) => {
+                let msg = format!("decode: {e}");
+                return (Response::err(request.id, msg.clone()), Retire::Failed(msg));
+            }
         };
         let next = sampler.sample(&logits, rng);
         tokens.push(next);
@@ -699,11 +1125,12 @@ fn run_request(model: &mut Transformer, request: &Request, rng: &mut Rng) -> Res
             break;
         }
         if let Err(e) = model.forward_token(next) {
-            return Response::err(request.id, format!("decode: {e}"));
+            let msg = format!("decode: {e}");
+            return (Response::err(request.id, msg.clone()), Retire::Failed(msg));
         }
     }
     timing.decode = t0.elapsed();
-    Response::ok(request.id, tokens, timing)
+    (Response::ok(request.id, tokens, timing), Retire::Done)
 }
 
 fn model_logits(model: &Transformer) -> Result<Vec<f32>> {
@@ -898,6 +1325,241 @@ mod tests {
         engine.submit(Request::new(6, vec![10], 2)).unwrap();
         let r = engine.recv_timeout(Duration::from_secs(30)).unwrap();
         assert!(r.error.is_none());
+        engine.shutdown();
+    }
+
+    // ---- lifecycle: deadlines ------------------------------------
+
+    #[test]
+    fn expired_deadline_is_shed_at_admission() {
+        let engine = tiny_engine(EngineConfig { workers: 1, ..Default::default() });
+        let req = Request::new(1, vec![10, 20], 4).with_deadline(Duration::ZERO);
+        match engine.submit(req) {
+            Err(Error::DeadlineExceeded(_)) => {}
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        assert_eq!(engine.metrics().deadline_exceeded.load(Ordering::Relaxed), 1);
+        assert_eq!(engine.inflight(), 0, "shed work must not count inflight");
+        engine.shutdown();
+    }
+
+    #[test]
+    fn deadline_expiring_mid_generation_retires_the_slot() {
+        // A 16-token prompt at the default prefill_chunk of 8 needs at
+        // least two lockstep steps; stalling step 1 for 300 ms
+        // guarantees the 100 ms deadline expires while the request is
+        // mid-flight, so the between-step sweep retires it (or, if the
+        // worker was slow to seat it, the slot-assignment preflight
+        // sheds it — same terminal outcome either way).
+        let engine = tiny_engine(EngineConfig {
+            workers: 1,
+            fault: FaultPlan { stall_at_step: Some((1, 300)), ..Default::default() },
+            ..Default::default()
+        });
+        let req = Request::new(7, (10u32..26).collect(), 8)
+            .with_deadline(Duration::from_millis(100));
+        engine.submit(req).unwrap();
+        let r = engine.recv_timeout(Duration::from_secs(30)).expect("terminal outcome");
+        assert_eq!(r.id, 7);
+        let err = r.error.expect("must be retired with an error");
+        assert!(err.contains("deadline exceeded"), "{err}");
+        assert_eq!(engine.metrics().deadline_exceeded.load(Ordering::Relaxed), 1);
+        assert_eq!(engine.inflight(), 0);
+        // The slot is free again: a healthy request completes.
+        engine.submit(Request::new(8, vec![10, 20], 3)).unwrap();
+        let r = engine.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn deadline_on_sequential_path_retires_too() {
+        // The stall fires inside the supervised section just before
+        // `run_request`; by the time the request's first per-token
+        // lifecycle check runs, the 100 ms deadline has long expired.
+        let engine = tiny_engine(EngineConfig {
+            workers: 1,
+            batch: BatchPolicy { max_slots: 1, prefill_chunk: 1, ..Default::default() },
+            fault: FaultPlan { stall_at_step: Some((1, 300)), ..Default::default() },
+            ..Default::default()
+        });
+        let req = Request::new(3, vec![10, 20, 30], 8)
+            .with_deadline(Duration::from_millis(100));
+        engine.submit(req).unwrap();
+        let r = engine.recv_timeout(Duration::from_secs(30)).expect("terminal outcome");
+        assert!(r.error.unwrap().contains("deadline exceeded"));
+        assert_eq!(engine.inflight(), 0);
+        engine.shutdown();
+    }
+
+    // ---- lifecycle: cancellation ---------------------------------
+
+    #[test]
+    fn cancelled_request_frees_its_slot() {
+        // Step 1 stalls 400 ms; the cancel lands 100 ms in — during
+        // the stalled step (or before pickup, if the worker was slow) —
+        // so the between-step sweep (or the preflight) retires the
+        // request with the cancellation error, never an Ok response.
+        let engine = tiny_engine(EngineConfig {
+            workers: 1,
+            fault: FaultPlan { stall_at_step: Some((1, 400)), ..Default::default() },
+            ..Default::default()
+        });
+        let req = Request::new(9, (10u32..26).collect(), 8);
+        let token = req.cancel.clone();
+        engine.submit(req).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        token.cancel();
+        let r = engine.recv_timeout(Duration::from_secs(30)).expect("terminal outcome");
+        assert_eq!(r.id, 9);
+        let err = r.error.expect("cancelled requests get an error response");
+        assert!(err.contains("cancelled"), "{err}");
+        assert_eq!(engine.metrics().cancelled.load(Ordering::Relaxed), 1);
+        assert_eq!(engine.inflight(), 0);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn cancelled_before_admission_is_rejected() {
+        let engine = tiny_engine(EngineConfig { workers: 1, ..Default::default() });
+        let req = Request::new(4, vec![10], 4);
+        req.cancel.cancel();
+        match engine.submit(req) {
+            Err(Error::Cancelled(_)) => {}
+            other => panic!("expected Cancelled, got {other:?}"),
+        }
+        assert_eq!(engine.inflight(), 0);
+        engine.shutdown();
+    }
+
+    // ---- lifecycle: supervision ----------------------------------
+
+    #[test]
+    fn worker_panic_yields_terminal_outcomes_and_worker_survives() {
+        // Panic injected at engine step 2. Wherever it lands (normally
+        // mid-decode of the first request; mid-prefill of the second if
+        // the first happened to finish in one step), supervision must
+        // convert it into terminal outcomes: every request gets exactly
+        // one response, inflight drains to zero, `panics_total` counts
+        // the catch, and the rebuilt worker keeps serving.
+        let engine = tiny_engine(EngineConfig {
+            workers: 1,
+            fault: FaultPlan { panic_at_steps: vec![2], ..Default::default() },
+            ..Default::default()
+        });
+        engine.submit(Request::new(1, vec![10, 20, 30], 8)).unwrap();
+        let r1 = engine.recv_timeout(Duration::from_secs(30)).expect("terminal");
+        engine.submit(Request::new(2, vec![11, 21, 31], 8)).unwrap();
+        let r2 = engine.recv_timeout(Duration::from_secs(30)).expect("terminal");
+        // At most one of the two can have died in the panic (a
+        // mid-prefill hit is retried and completes); the error, when
+        // present, names the panic.
+        let errs: Vec<&String> =
+            [&r1, &r2].iter().filter_map(|r| r.error.as_ref()).collect();
+        assert!(errs.len() <= 1, "{errs:?}");
+        for e in &errs {
+            assert!(e.contains("panicked"), "{e}");
+        }
+        assert_eq!(engine.panics_total(), 1, "the step-2 panic is caught exactly once");
+        assert_eq!(engine.inflight(), 0, "no leaked inflight after a panic");
+        // The worker rebuilt its model and keeps serving.
+        engine.submit(Request::new(50, vec![10, 20], 3)).unwrap();
+        let r = engine.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn panic_mid_prefill_quarantines_and_retries_once() {
+        // prefill_chunk 1 + an 8-token prompt → steps 1..8 are prefill;
+        // the panic at step 3 hits mid-prefill, the request retries
+        // cleanly and completes.
+        let engine = tiny_engine(EngineConfig {
+            workers: 1,
+            batch: BatchPolicy { max_slots: 2, prefill_chunk: 1, ..Default::default() },
+            fault: FaultPlan { panic_at_steps: vec![3], ..Default::default() },
+            ..Default::default()
+        });
+        engine.submit(Request::new(1, vec![10, 20, 30, 40, 50, 60, 70, 80], 4)).unwrap();
+        let r = engine.recv_timeout(Duration::from_secs(30)).expect("terminal");
+        assert!(r.error.is_none(), "retried request must complete: {:?}", r.error);
+        assert!(!r.tokens.is_empty());
+        assert_eq!(engine.panics_total(), 1);
+        assert_eq!(engine.inflight(), 0);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn second_panic_poisons_the_request() {
+        // Panic at steps 2 and 3: the first attempt dies at step 2
+        // (mid-prefill → quarantine retry), the retry dies at step 3 →
+        // poisoned, with a terminal error response.
+        let engine = tiny_engine(EngineConfig {
+            workers: 1,
+            batch: BatchPolicy { max_slots: 2, prefill_chunk: 1, ..Default::default() },
+            fault: FaultPlan { panic_at_steps: vec![2, 3], ..Default::default() },
+            ..Default::default()
+        });
+        engine.submit(Request::new(2, vec![10, 20, 30, 40, 50, 60, 70, 80], 4)).unwrap();
+        let r = engine.recv_timeout(Duration::from_secs(30)).expect("terminal");
+        let err = r.error.expect("twice-panicking request must be poisoned");
+        assert!(err.contains("poisoned"), "{err}");
+        assert_eq!(engine.panics_total(), 2);
+        assert_eq!(engine.inflight(), 0);
+        // Engine still healthy afterwards.
+        engine.submit(Request::new(3, vec![10, 20], 3)).unwrap();
+        let r = engine.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn sequential_path_supervises_panics_too() {
+        let engine = tiny_engine(EngineConfig {
+            workers: 1,
+            batch: BatchPolicy { max_slots: 1, prefill_chunk: 1, ..Default::default() },
+            // Sequential steps number per request: the first request
+            // panics on both its attempts → poisoned.
+            fault: FaultPlan { panic_at_steps: vec![1, 2], ..Default::default() },
+            ..Default::default()
+        });
+        engine.submit(Request::new(1, vec![10, 20], 4)).unwrap();
+        let r = engine.recv_timeout(Duration::from_secs(30)).expect("terminal");
+        assert!(r.error.unwrap().contains("poisoned"));
+        assert_eq!(engine.panics_total(), 2);
+        // Worker survived; next request is fine.
+        engine.submit(Request::new(2, vec![10, 20], 2)).unwrap();
+        let r = engine.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(engine.inflight(), 0);
+        engine.shutdown();
+    }
+
+    // ---- lifecycle: heartbeat / fault plumbing -------------------
+
+    #[test]
+    fn heartbeat_stays_fresh_on_an_idle_engine() {
+        let engine = tiny_engine(EngineConfig { workers: 1, ..Default::default() });
+        std::thread::sleep(Duration::from_millis(150));
+        assert!(
+            engine.heartbeat_age() < Duration::from_millis(120),
+            "idle workers must keep beating (age {:?})",
+            engine.heartbeat_age()
+        );
+        engine.shutdown();
+    }
+
+    #[test]
+    fn forced_queue_full_rejects_and_counts() {
+        let engine = tiny_engine(EngineConfig {
+            workers: 1,
+            fault: FaultPlan { force_queue_full: true, ..Default::default() },
+            ..Default::default()
+        });
+        let err = engine.submit(Request::new(1, vec![10], 2)).unwrap_err();
+        assert!(err.to_string().contains("queue full"), "{err}");
+        let snap = engine.metrics().snapshot();
+        assert_eq!(snap.get("rejected_total").unwrap().as_f64(), Some(1.0));
         engine.shutdown();
     }
 }

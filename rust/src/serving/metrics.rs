@@ -19,6 +19,14 @@ pub struct Metrics {
     pub completed: AtomicU64,
     /// Requests failed.
     pub failed: AtomicU64,
+    /// Requests retired because their deadline expired (shed from the
+    /// queue at slot assignment, or retired mid-generation).
+    pub deadline_exceeded: AtomicU64,
+    /// Requests retired because the client cancelled (disconnected).
+    pub cancelled: AtomicU64,
+    /// Worker panics caught by supervision (each converts to per-slot
+    /// terminal responses and a model rebuild, never a hung waiter).
+    pub panics: AtomicU64,
     /// Tokens generated in total.
     pub tokens_out: AtomicU64,
     /// Lockstep decode steps executed (continuous batching; `0` on the
@@ -81,6 +89,21 @@ impl Metrics {
         self.failed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record a deadline-exceeded retirement.
+    pub fn record_deadline_exceeded(&self) {
+        self.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a client cancellation.
+    pub fn record_cancelled(&self) {
+        self.cancelled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one supervised worker panic.
+    pub fn record_panic(&self) {
+        self.panics.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Record one lockstep decode step over `live` slots that took
     /// `dur` of model time (the continuous-batching engine calls this
     /// once per step, prefill and decode rows alike).
@@ -133,6 +156,16 @@ impl Metrics {
             ("rejected", Json::num(self.rejected.load(Ordering::Relaxed) as f64)),
             ("completed", Json::num(self.completed.load(Ordering::Relaxed) as f64)),
             ("failed", Json::num(self.failed.load(Ordering::Relaxed) as f64)),
+            // Lifecycle counters (`_total` naming for dashboards;
+            // `rejected_total` mirrors `rejected` — the admission-shed
+            // count — under the same convention).
+            ("rejected_total", Json::num(self.rejected.load(Ordering::Relaxed) as f64)),
+            (
+                "deadline_exceeded_total",
+                Json::num(self.deadline_exceeded.load(Ordering::Relaxed) as f64),
+            ),
+            ("cancelled_total", Json::num(self.cancelled.load(Ordering::Relaxed) as f64)),
+            ("panics_total", Json::num(self.panics.load(Ordering::Relaxed) as f64)),
             ("tokens_out", Json::num(tokens as f64)),
             ("decode_steps", Json::num(steps as f64)),
             ("batch_occupancy_mean", Json::num(occupancy)),
@@ -214,6 +247,21 @@ mod tests {
         // 8 tokens over 4ms of busy time → 2000 tok/s.
         let tps = snap.get("tokens_per_sec").unwrap().as_f64().unwrap();
         assert!((tps - 2000.0).abs() < 1.0, "{tps}");
+    }
+
+    #[test]
+    fn lifecycle_counters_snapshot() {
+        let m = Metrics::new();
+        m.record_admission(false);
+        m.record_deadline_exceeded();
+        m.record_deadline_exceeded();
+        m.record_cancelled();
+        m.record_panic();
+        let snap = m.snapshot();
+        assert_eq!(snap.get("rejected_total").unwrap().as_f64(), Some(1.0));
+        assert_eq!(snap.get("deadline_exceeded_total").unwrap().as_f64(), Some(2.0));
+        assert_eq!(snap.get("cancelled_total").unwrap().as_f64(), Some(1.0));
+        assert_eq!(snap.get("panics_total").unwrap().as_f64(), Some(1.0));
     }
 
     #[test]

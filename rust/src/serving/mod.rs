@@ -32,6 +32,26 @@
 //! parallelism — matching §5.3's CPU deployment scenario under the
 //! ROADMAP's heavy-traffic direction.
 //!
+//! # Request lifecycle (see ARCHITECTURE.md §Request lifecycle)
+//!
+//! ```text
+//!  queued ──► assigned ──► generating ──► done
+//!    │            │             │
+//!    └────────────┴─────────────┴──► shed | deadline | cancelled
+//!                               │
+//!                 (worker panic)└──► quarantined ──► retried once
+//!                                        │
+//!                                        └──► poisoned
+//! ```
+//!
+//! Deadlines and cancellation are checked at three points: admission
+//! ([`InferenceEngine::submit`]), slot assignment, and between decode
+//! steps. Worker panics are caught per step; the worker rebuilds its
+//! model and the victim requests get terminal error responses — a
+//! request that panics the worker twice is poisoned, never retried
+//! again. The router skips replicas whose heartbeat is staler than
+//! `--replica-stall-ms`.
+//!
 //! tokio is unavailable offline; everything is `std::thread` +
 //! `std::net` + condvar queues (see DESIGN.md §Substitutions).
 
@@ -45,6 +65,8 @@ pub mod scheduler;
 pub mod server;
 
 pub use engine::{EngineConfig, InferenceEngine};
-pub use request::{Request, Response};
+#[cfg(any(test, feature = "fault-inject"))]
+pub use engine::FaultPlan;
+pub use request::{CancelToken, Request, Response};
 pub use router::Router;
-pub use server::Server;
+pub use server::{Client, ResponseHub, Server};

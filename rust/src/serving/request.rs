@@ -1,6 +1,36 @@
 //! Request/response types flowing through the serving stack.
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// A shared cancellation flag for one request.
+///
+/// The connection thread sets it when it observes the client
+/// disconnect; the engine checks it at admission, at slot assignment,
+/// and between decode steps, so abandoned work frees its slot within
+/// one lockstep step. Clones share the flag (a `Request` clone — e.g.
+/// the router's per-replica submit attempts — stays cancellable
+/// through any copy).
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    /// Fresh, un-cancelled token.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Mark the request cancelled. Idempotent.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+
+    /// True once [`cancel`](Self::cancel) has been called on any clone.
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
 
 /// A generation request.
 #[derive(Debug, Clone)]
@@ -13,12 +43,41 @@ pub struct Request {
     pub max_new_tokens: usize,
     /// Arrival timestamp (set at admission).
     pub arrival: Instant,
+    /// Absolute completion deadline. `None` = no deadline (the exact
+    /// pre-deadline behavior). Enforced at admission, slot assignment,
+    /// and between decode steps.
+    pub deadline: Option<Instant>,
+    /// Cancellation flag shared with the connection thread.
+    pub cancel: CancelToken,
+    /// Execution attempts consumed by worker-panic retries (the
+    /// supervision quarantine: one retry, then poisoned). Internal —
+    /// never set by clients.
+    pub attempts: u32,
 }
 
 impl Request {
-    /// New request stamped with the current time.
+    /// New request stamped with the current time, no deadline.
     pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize) -> Self {
-        Self { id, prompt, max_new_tokens, arrival: Instant::now() }
+        Self {
+            id,
+            prompt,
+            max_new_tokens,
+            arrival: Instant::now(),
+            deadline: None,
+            cancel: CancelToken::new(),
+            attempts: 0,
+        }
+    }
+
+    /// Set an absolute deadline `budget` from the arrival timestamp.
+    pub fn with_deadline(mut self, budget: Duration) -> Self {
+        self.deadline = Some(self.arrival + budget);
+        self
+    }
+
+    /// True once the deadline (if any) has passed.
+    pub fn deadline_expired(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
     }
 }
 
@@ -86,5 +145,24 @@ mod tests {
         let err = Response::err(8, "boom");
         assert_eq!(err.error.as_deref(), Some("boom"));
         assert!(err.tokens.is_empty());
+    }
+
+    #[test]
+    fn cancel_token_is_shared_across_clones() {
+        let r = Request::new(1, vec![1], 4);
+        let clone = r.clone();
+        assert!(!clone.cancel.is_cancelled());
+        r.cancel.cancel();
+        assert!(clone.cancel.is_cancelled(), "clones must share the flag");
+    }
+
+    #[test]
+    fn deadline_expiry() {
+        let r = Request::new(1, vec![1], 4);
+        assert!(!r.deadline_expired(), "no deadline never expires");
+        let r = r.with_deadline(Duration::from_secs(3600));
+        assert!(!r.deadline_expired());
+        let r = Request::new(2, vec![1], 4).with_deadline(Duration::ZERO);
+        assert!(r.deadline_expired());
     }
 }

@@ -1,12 +1,35 @@
-//! Least-loaded routing across engines.
+//! Least-loaded routing across engines, with replica health.
 //!
 //! An engine is one model replica (its own workers and queue). The
 //! router picks the replica with the smallest load signal
 //! (queue depth + inflight), falling back through replicas when the
 //! preferred one is saturated — the same strategy vllm-project/router
 //! uses across model servers.
+//!
+//! # Replica health
+//!
+//! Every engine exposes a heartbeat ([`InferenceEngine::heartbeat_age`]
+//! — time since a worker last topped its loop or completed a step).
+//! With a stall threshold configured
+//! ([`with_replica_stall`](Router::with_replica_stall), the
+//! `--replica-stall-ms` flag), [`pick`](Router::pick) and
+//! [`submit`](Router::submit) skip replicas whose heartbeat is staler
+//! than the threshold, so one wedged replica no longer blackholes its
+//! share of traffic. The circuit is implicitly half-open: staleness is
+//! re-evaluated per submit, so the moment a stalled replica's worker
+//! beats again it rejoins the rotation — no manual reset. The
+//! threshold must exceed the model's worst-case single-step time, or
+//! healthy-but-slow replicas flap out of rotation.
+//!
+//! # Terminal errors
+//!
+//! [`Error::DeadlineExceeded`] and [`Error::Cancelled`] are properties
+//! of the *request*, not the replica — falling back would re-shed the
+//! same dead request N times (double-counting metrics along the way),
+//! so the router returns them immediately.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use super::engine::InferenceEngine;
 use super::request::Request;
@@ -15,15 +38,25 @@ use crate::error::{Error, Result};
 /// Routes requests across replicas.
 pub struct Router {
     engines: Vec<Arc<InferenceEngine>>,
+    /// Heartbeat staleness beyond which a replica is skipped. `None`
+    /// disables health filtering (the pre-health behavior).
+    stall: Option<Duration>,
 }
 
 impl Router {
-    /// Router over ≥ 1 replicas.
+    /// Router over ≥ 1 replicas (no health filtering).
     pub fn new(engines: Vec<Arc<InferenceEngine>>) -> Result<Self> {
         if engines.is_empty() {
             return Err(Error::Config("router needs at least one engine".into()));
         }
-        Ok(Self { engines })
+        Ok(Self { engines, stall: None })
+    }
+
+    /// Skip replicas whose heartbeat is staler than `threshold`
+    /// (the `--replica-stall-ms` flag).
+    pub fn with_replica_stall(mut self, threshold: Duration) -> Self {
+        self.stall = Some(threshold);
+        self
     }
 
     /// Number of replicas.
@@ -31,29 +64,67 @@ impl Router {
         self.engines.len()
     }
 
-    /// The replica a request would currently be routed to.
-    pub fn pick(&self) -> usize {
-        self.engines
-            .iter()
-            .enumerate()
-            .min_by_key(|(_, e)| e.load())
-            .map(|(i, _)| i)
-            .unwrap()
+    /// Whether a replica's heartbeat is fresh enough to take traffic.
+    fn healthy(&self, idx: usize) -> bool {
+        match self.stall {
+            None => true,
+            Some(t) => self.engines[idx].heartbeat_age() <= t,
+        }
     }
 
-    /// Submit to the least-loaded replica, falling back through the
-    /// others if it rejects (all-full → error). Requests are cheap to
-    /// clone (token ids), so each attempt gets its own copy.
+    /// The replica a request would currently be routed to: least
+    /// loaded among the healthy ones. With every replica stalled this
+    /// falls back to the overall least-loaded (informational — a
+    /// [`submit`](Router::submit) in that state errors instead).
+    pub fn pick(&self) -> usize {
+        let healthy = self
+            .engines
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| self.healthy(*i))
+            .min_by_key(|(_, e)| e.load())
+            .map(|(i, _)| i);
+        healthy.unwrap_or_else(|| {
+            self.engines
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.load())
+                .map(|(i, _)| i)
+                .unwrap()
+        })
+    }
+
+    /// Submit to the least-loaded healthy replica, falling back through
+    /// the other healthy ones if it rejects (all-full → error; every
+    /// replica stalled → error naming the condition). Requests are
+    /// cheap to clone (token ids), so each attempt gets its own copy.
+    /// Deadline/cancel rejections are terminal for the *request* —
+    /// they return immediately, never falling back.
     pub fn submit(&self, request: Request) -> Result<usize> {
         let start = self.pick();
         let n = self.engines.len();
+        let mut tried = 0usize;
         let mut last_err = None;
         for off in 0..n {
             let idx = (start + off) % n;
+            if !self.healthy(idx) {
+                continue;
+            }
+            tried += 1;
             match self.engines[idx].submit(request.clone()) {
                 Ok(()) => return Ok(idx),
+                // The request is dead no matter which replica holds it.
+                Err(e @ (Error::DeadlineExceeded(_) | Error::Cancelled(_))) => {
+                    return Err(e);
+                }
                 Err(e) => last_err = Some(e),
             }
+        }
+        if tried == 0 {
+            return Err(Error::Serving(format!(
+                "all {n} replica(s) stalled — heartbeats older than the \
+                 --replica-stall-ms threshold"
+            )));
         }
         Err(last_err.unwrap_or_else(|| Error::Serving("all replicas saturated".into())))
     }
@@ -66,26 +137,28 @@ impl Router {
 
 #[cfg(test)]
 mod tests {
+    use super::super::engine::{EngineConfig, FaultPlan};
     use super::*;
-    use super::super::engine::EngineConfig;
     use crate::model::config::ModelConfig;
     use crate::model::weights::ModelWeights;
-    use std::time::Duration;
+    use std::sync::atomic::Ordering;
+    use std::time::{Duration, Instant};
 
-    fn engines(n: usize) -> Vec<Arc<InferenceEngine>> {
-        let weights =
-            Arc::new(ModelWeights::generate(ModelConfig::tiny(), 7).unwrap());
-        (0..n)
-            .map(|_| {
-                Arc::new(
-                    InferenceEngine::start(
-                        Arc::clone(&weights),
-                        EngineConfig { workers: 1, ..Default::default() },
-                    )
-                    .unwrap(),
-                )
+    fn engines_with(n: usize, cfgs: Vec<EngineConfig>) -> Vec<Arc<InferenceEngine>> {
+        let weights = Arc::new(ModelWeights::generate(ModelConfig::tiny(), 7).unwrap());
+        assert_eq!(cfgs.len(), n);
+        cfgs.into_iter()
+            .map(|cfg| {
+                Arc::new(InferenceEngine::start(Arc::clone(&weights), cfg).unwrap())
             })
             .collect()
+    }
+
+    fn engines(n: usize) -> Vec<Arc<InferenceEngine>> {
+        engines_with(
+            n,
+            (0..n).map(|_| EngineConfig { workers: 1, ..Default::default() }).collect(),
+        )
     }
 
     #[test]
@@ -123,6 +196,118 @@ mod tests {
             while e.inflight() > 0 {
                 e.recv_timeout(Duration::from_secs(30));
             }
+        }
+    }
+
+    #[test]
+    fn saturated_everywhere_names_the_condition() {
+        // Both replicas forced to reject as queue-full: the router must
+        // surface the backpressure error, not hang or panic.
+        let cfg = || EngineConfig {
+            workers: 1,
+            fault: FaultPlan { force_queue_full: true, ..Default::default() },
+            ..Default::default()
+        };
+        let es = engines_with(2, vec![cfg(), cfg()]);
+        let router = Router::new(es.clone()).unwrap();
+        let err = router.submit(Request::new(1, vec![2, 3], 2)).unwrap_err();
+        assert!(err.to_string().contains("queue full"), "{err}");
+        // Every replica counted the rejection; nothing was admitted.
+        for e in &es {
+            assert_eq!(e.metrics().rejected.load(Ordering::Relaxed), 1);
+            assert_eq!(e.inflight(), 0);
+        }
+    }
+
+    #[test]
+    fn terminal_rejections_do_not_fall_back() {
+        // A cancelled request is dead on every replica — the router
+        // must return the first replica's verdict, not re-shed it N
+        // times (the cancelled counter across replicas must sum to 1).
+        let es = engines(2);
+        let router = Router::new(es.clone()).unwrap();
+        let req = Request::new(1, vec![2, 3], 2);
+        req.cancel.cancel();
+        match router.submit(req) {
+            Err(Error::Cancelled(_)) => {}
+            other => panic!("expected Cancelled, got {other:?}"),
+        }
+        let total: u64 =
+            es.iter().map(|e| e.metrics().cancelled.load(Ordering::Relaxed)).sum();
+        assert_eq!(total, 1, "terminal rejection must not cascade through replicas");
+    }
+
+    #[test]
+    fn stalled_replica_is_skipped_until_heartbeat_recovers() {
+        // Replica 0's worker stalls 600 ms inside its first step;
+        // replica 1 stays healthy. With a 100 ms staleness threshold
+        // the router must route around 0 while it is wedged, and admit
+        // it back once its heartbeat resumes (implicit half-open).
+        let es = engines_with(
+            2,
+            vec![
+                EngineConfig {
+                    workers: 1,
+                    fault: FaultPlan {
+                        stall_at_step: Some((1, 600)),
+                        ..Default::default()
+                    },
+                    ..Default::default()
+                },
+                EngineConfig { workers: 1, ..Default::default() },
+            ],
+        );
+        let router =
+            Router::new(es.clone()).unwrap().with_replica_stall(Duration::from_millis(100));
+        // Wedge replica 0.
+        es[0].submit(Request::new(1, vec![10, 20, 30], 2)).unwrap();
+        std::thread::sleep(Duration::from_millis(300));
+        assert!(
+            es[0].heartbeat_age() > Duration::from_millis(100),
+            "replica 0 must look stalled mid-step (age {:?})",
+            es[0].heartbeat_age()
+        );
+        // Even though replica 0 has lower-or-equal load ordering, the
+        // router must route to the healthy replica 1.
+        assert_eq!(router.pick(), 1);
+        let idx = router.submit(Request::new(2, vec![11, 21], 2)).unwrap();
+        assert_eq!(idx, 1, "stalled replica must receive no new traffic");
+        // Drain both replicas (replica 0's response arrives after the
+        // stall completes) — after which its heartbeat is fresh again.
+        for e in &es {
+            while e.inflight() > 0 {
+                e.recv_timeout(Duration::from_secs(30));
+            }
+        }
+        let t0 = Instant::now();
+        while es[0].heartbeat_age() > Duration::from_millis(100) {
+            assert!(t0.elapsed() < Duration::from_secs(10), "heartbeat never recovered");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        // Half-open: the recovered replica rejoins the rotation (both
+        // idle → least-loaded tie resolves to index 0).
+        assert_eq!(router.pick(), 0);
+    }
+
+    #[test]
+    fn every_replica_stalled_is_an_error_naming_the_condition() {
+        let es = engines_with(
+            1,
+            vec![EngineConfig {
+                workers: 1,
+                fault: FaultPlan { stall_at_step: Some((1, 800)), ..Default::default() },
+                ..Default::default()
+            }],
+        );
+        let router =
+            Router::new(es.clone()).unwrap().with_replica_stall(Duration::from_millis(100));
+        es[0].submit(Request::new(1, vec![10, 20, 30], 2)).unwrap();
+        std::thread::sleep(Duration::from_millis(300));
+        let err = router.submit(Request::new(2, vec![11, 21], 2)).unwrap_err();
+        assert!(err.to_string().contains("stalled"), "{err}");
+        // The wedged request still reaches its terminal outcome.
+        while es[0].inflight() > 0 {
+            es[0].recv_timeout(Duration::from_secs(30));
         }
     }
 }

@@ -1,6 +1,7 @@
 //! TCP front end: newline-delimited JSON protocol over `std::net`.
 //!
-//! Request line:  `{"id": 1, "prompt": "text", "max_new": 16}`
+//! Request line:  `{"id": 1, "prompt": "text", "max_new": 16,
+//!                  "deadline_ms": 2000}`   (`deadline_ms` optional)
 //! Response line: `{"id": 1, "text": "...", "tokens": [..],
 //!                  "queue_us": .., "prefill_us": .., "decode_us": ..}`
 //! Error line:    `{"id": 1, "error": "..."}`
@@ -8,12 +9,23 @@
 //! One OS thread per connection (tokio is unavailable offline; at the
 //! request rates batch-1 CPU inference sustains, thread-per-conn is
 //! not the bottleneck — see DESIGN.md §Substitutions).
+//!
+//! # Lifecycle at the edge
+//!
+//! `deadline_ms` (or the server-wide `--default-deadline-ms`) stamps an
+//! absolute deadline on the request before it is routed. While a
+//! request is in flight, the connection thread polls its socket with a
+//! non-destructive peek; observing EOF sets the request's
+//! [`CancelToken`](super::request::CancelToken), and the engine retires
+//! the abandoned slot within one lockstep step. The thread then keeps
+//! waiting for the terminal response the engine guarantees — the hard
+//! timeout below is a defense line, not the cancellation mechanism.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
 use super::request::Request;
 use super::router::Router;
@@ -21,12 +33,22 @@ use crate::error::{Error, Result};
 use crate::model::tokenizer::Tokenizer;
 use crate::util::json::Json;
 
+/// Hard ceiling on waiting for a response when the request carries no
+/// deadline — the pre-deadline behavior.
+const NO_DEADLINE_WAIT: Duration = Duration::from_secs(120);
+
+/// Slack past a request's deadline before the connection thread stops
+/// waiting: the engine retires an expired request at its next
+/// between-step checkpoint, so the terminal response lands within one
+/// step of the deadline — 5 s covers the slowest plausible step.
+const DEADLINE_GRACE: Duration = Duration::from_secs(5);
+
 /// Routes completed responses from every engine to the connection
 /// thread that registered the request id. One dispatcher thread per
 /// engine owns that engine's receiver, so concurrent connections never
 /// steal each other's responses.
 pub struct ResponseHub {
-    waiters: Arc<std::sync::Mutex<std::collections::HashMap<u64, std::sync::mpsc::Sender<super::request::Response>>>>,
+    waiters: Arc<std::sync::Mutex<std::collections::HashMap<u64, mpsc::Sender<super::request::Response>>>>,
     stop: Arc<AtomicBool>,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
@@ -36,7 +58,7 @@ impl ResponseHub {
     pub fn start(router: &Arc<Router>) -> Self {
         let waiters: Arc<
             std::sync::Mutex<
-                std::collections::HashMap<u64, std::sync::mpsc::Sender<super::request::Response>>,
+                std::collections::HashMap<u64, mpsc::Sender<super::request::Response>>,
             >,
         > = Arc::default();
         let stop = Arc::new(AtomicBool::new(false));
@@ -64,16 +86,22 @@ impl ResponseHub {
     /// Register interest in a request id; returns the receiver the
     /// response will arrive on. Must be called BEFORE submit to avoid
     /// a lost-wakeup race.
-    pub fn register(&self, id: u64) -> std::sync::mpsc::Receiver<super::request::Response> {
-        let (tx, rx) = std::sync::mpsc::channel();
+    pub fn register(&self, id: u64) -> mpsc::Receiver<super::request::Response> {
+        let (tx, rx) = mpsc::channel();
         self.waiters.lock().unwrap().insert(id, tx);
-        tx_len_hint(&rx);
         rx
     }
 
     /// Remove a registration (request failed to submit).
     pub fn unregister(&self, id: u64) {
         self.waiters.lock().unwrap().remove(&id);
+    }
+
+    /// Waiters currently registered (tests: leak detection — after a
+    /// drain this must be 0, or some request path forgot to
+    /// unregister/deliver).
+    pub fn waiter_count(&self) -> usize {
+        self.waiters.lock().unwrap().len()
     }
 
     /// Stop dispatchers.
@@ -85,21 +113,43 @@ impl ResponseHub {
     }
 }
 
-fn tx_len_hint<T>(_rx: &std::sync::mpsc::Receiver<T>) {}
-
 /// The TCP server: accepts connections, parses request lines, routes
 /// them, and writes response lines.
 pub struct Server {
     router: Arc<Router>,
     hub: Arc<ResponseHub>,
-    next_id: AtomicU64,
+    /// Internal request ids: one global counter, one increment per
+    /// request — ids are unique for the lifetime of the process (no
+    /// per-connection block allocation to collide past).
+    next_id: Arc<AtomicU64>,
+    /// Deadline stamped on requests that don't carry `deadline_ms`
+    /// (the `--default-deadline-ms` flag). `None` = unbounded, the
+    /// pre-deadline behavior.
+    default_deadline: Option<Duration>,
 }
 
 impl Server {
     /// Server over a router (starts the response hub).
     pub fn new(router: Arc<Router>) -> Self {
         let hub = Arc::new(ResponseHub::start(&router));
-        Self { router, hub, next_id: AtomicU64::new(1) }
+        Self {
+            router,
+            hub,
+            next_id: Arc::new(AtomicU64::new(1)),
+            default_deadline: None,
+        }
+    }
+
+    /// Stamp `budget` as the deadline on every request that doesn't
+    /// set its own `deadline_ms` (the `--default-deadline-ms` flag).
+    pub fn with_default_deadline(mut self, budget: Duration) -> Self {
+        self.default_deadline = Some(budget);
+        self
+    }
+
+    /// The server's response hub (tests: waiter-leak assertions).
+    pub fn hub(&self) -> &Arc<ResponseHub> {
+        &self.hub
     }
 
     /// Bind and serve until `stop` is set. Returns the bound address
@@ -115,13 +165,17 @@ impl Server {
         on_bound(listener.local_addr()?);
         let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
         while !stop.load(Ordering::Relaxed) {
+            // Reap finished connection threads — a long-lived server
+            // must not grow one parked handle per connection served.
+            conns.retain(|c| !c.is_finished());
             match listener.accept() {
                 Ok((stream, _)) => {
                     let router = Arc::clone(&self.router);
                     let hub = Arc::clone(&self.hub);
-                    let next_id = self.next_id.fetch_add(1_000_000, Ordering::Relaxed);
+                    let next_id = Arc::clone(&self.next_id);
+                    let deadline = self.default_deadline;
                     conns.push(std::thread::spawn(move || {
-                        let _ = handle_connection(stream, router, hub, next_id);
+                        let _ = handle_connection(stream, router, hub, next_id, deadline);
                     }));
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -141,31 +195,28 @@ fn handle_connection(
     stream: TcpStream,
     router: Arc<Router>,
     hub: Arc<ResponseHub>,
-    id_base: u64,
+    next_id: Arc<AtomicU64>,
+    default_deadline: Option<Duration>,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
+    let reader = BufReader::new(stream.try_clone()?);
     let tokenizer = Tokenizer::new();
-    let mut local_id = 0u64;
 
     for line in reader.lines() {
         let line = line?;
         if line.trim().is_empty() {
             continue;
         }
-        local_id += 1;
-        let internal_id = id_base + local_id;
-        match parse_request_line(&line, internal_id, &tokenizer) {
+        let internal_id = next_id.fetch_add(1, Ordering::Relaxed);
+        match parse_request_line(&line, internal_id, &tokenizer, default_deadline) {
             Ok((client_id, request)) => {
-                let reply = match route_and_wait(&router, &hub, request) {
+                let reply = match route_and_wait(&router, &hub, request, Some(&stream)) {
                     Ok(resp) => render_response(client_id, &resp, &tokenizer),
-                    Err(e) => {
-                        Json::obj(vec![
-                            ("id", Json::num(client_id as f64)),
-                            ("error", Json::str(e.to_string())),
-                        ])
-                    }
+                    Err(e) => Json::obj(vec![
+                        ("id", Json::num(client_id as f64)),
+                        ("error", Json::str(e.to_string())),
+                    ]),
                 };
                 writeln!(writer, "{}", reply.to_string())?;
             }
@@ -182,6 +233,7 @@ fn parse_request_line(
     line: &str,
     internal_id: u64,
     tokenizer: &Tokenizer,
+    default_deadline: Option<Duration>,
 ) -> Result<(u64, Request)> {
     let json = Json::parse(line).map_err(|e| Error::Serving(format!("bad json: {e}")))?;
     let client_id = json
@@ -200,15 +252,49 @@ fn parse_request_line(
         return Err(Error::Serving("max_new out of range".into()));
     }
     let prompt = tokenizer.encode_with_bos(prompt_text);
-    Ok((client_id, Request::new(internal_id, prompt, max_new)))
+    let mut request = Request::new(internal_id, prompt, max_new);
+    match json.get("deadline_ms").and_then(|x| x.as_f64()) {
+        Some(ms) if (1.0..=86_400_000.0).contains(&ms) => {
+            request = request.with_deadline(Duration::from_millis(ms as u64));
+        }
+        Some(_) => return Err(Error::Serving("deadline_ms out of range".into())),
+        None => {
+            if let Some(budget) = default_deadline {
+                request = request.with_deadline(budget);
+            }
+        }
+    }
+    Ok((client_id, request))
+}
+
+/// True when the client side of `stream` is gone (orderly EOF or hard
+/// error). Non-destructive: a nonblocking 1-byte peek, with blocking
+/// mode restored before returning — `O_NONBLOCK` is a property of the
+/// shared socket, and the connection's line reader needs it off.
+fn client_disconnected(stream: &TcpStream) -> bool {
+    if stream.set_nonblocking(true).is_err() {
+        return true;
+    }
+    let mut buf = [0u8; 1];
+    let gone = match stream.peek(&mut buf) {
+        Ok(0) => true,  // EOF: client closed its write side
+        Ok(_) => false, // pipelined request bytes waiting
+        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => false,
+        Err(_) => true, // reset / broken
+    };
+    // `|` (not `||`): the restore must run even when the peer is gone.
+    gone | stream.set_nonblocking(false).is_err()
 }
 
 fn route_and_wait(
     router: &Router,
     hub: &ResponseHub,
     request: Request,
+    conn: Option<&TcpStream>,
 ) -> Result<super::request::Response> {
     let want_id = request.id;
+    let cancel = request.cancel.clone();
+    let deadline = request.deadline;
     // Register BEFORE submitting so the dispatcher can never observe
     // the response before the waiter exists.
     let rx = hub.register(want_id);
@@ -216,8 +302,37 @@ fn route_and_wait(
         hub.unregister(want_id);
         return Err(e);
     }
-    rx.recv_timeout(Duration::from_secs(120))
-        .map_err(|_| Error::Serving("timeout waiting for response".into()))
+    // Poll in short ticks so a client disconnect converts to
+    // cancellation within ~50 ms. After cancelling we keep waiting:
+    // the engine guarantees exactly one terminal response per admitted
+    // request, and consuming it here keeps the hub waiter-free. The
+    // hard stop is a defense line for a wedged engine, not the
+    // cancellation mechanism.
+    let hard_stop = match deadline {
+        Some(d) => d + DEADLINE_GRACE,
+        None => Instant::now() + NO_DEADLINE_WAIT,
+    };
+    loop {
+        match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(resp) => return Ok(resp),
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                hub.unregister(want_id);
+                return Err(Error::Serving("response dispatcher gone".into()));
+            }
+        }
+        if !cancel.is_cancelled() {
+            if let Some(s) = conn {
+                if client_disconnected(s) {
+                    cancel.cancel();
+                }
+            }
+        }
+        if Instant::now() >= hard_stop {
+            hub.unregister(want_id);
+            return Err(Error::Serving("timeout waiting for response".into()));
+        }
+    }
 }
 
 fn render_response(
@@ -257,11 +372,28 @@ impl Client {
 
     /// Send one prompt and wait for the reply line.
     pub fn request(&mut self, id: u64, prompt: &str, max_new: usize) -> Result<Json> {
-        let req = Json::obj(vec![
+        self.request_with(id, prompt, max_new, None)
+    }
+
+    /// Send one prompt with an optional per-request deadline
+    /// (milliseconds of total budget; the server sheds or retires the
+    /// request with a `deadline exceeded` error once it expires).
+    pub fn request_with(
+        &mut self,
+        id: u64,
+        prompt: &str,
+        max_new: usize,
+        deadline_ms: Option<u64>,
+    ) -> Result<Json> {
+        let mut fields = vec![
             ("id", Json::num(id as f64)),
             ("prompt", Json::str(prompt)),
             ("max_new", Json::num(max_new as f64)),
-        ]);
+        ];
+        if let Some(ms) = deadline_ms {
+            fields.push(("deadline_ms", Json::num(ms as f64)));
+        }
+        let req = Json::obj(fields);
         writeln!(self.stream, "{}", req.to_string())?;
         let mut reader = BufReader::new(self.stream.try_clone()?);
         let mut line = String::new();
