@@ -433,6 +433,10 @@ fn overload_run(opts: &ServeBenchOpts) -> Result<Json> {
         }
     }
     let hung = pending;
+    // The engine's own accounting of the same run — embedded in the
+    // record so the perf trajectory carries the serving counters and
+    // latency histograms alongside the bench-side tallies.
+    let engine_snapshot = engine.snapshot();
     engine.shutdown();
     if hung > 0 {
         eprintln!(
@@ -478,6 +482,7 @@ fn overload_run(opts: &ServeBenchOpts) -> Result<Json> {
         ("hung", Json::num(hung as f64)),
         ("p50_ms", Json::num(p50)),
         ("p99_ms", Json::num(p99)),
+        ("engine", engine_snapshot),
     ]))
 }
 
@@ -545,5 +550,9 @@ mod tests {
         assert_eq!(g("completed_ok") + g("deadline_missed") + g("failed"), admitted);
         assert!((0.0..=1.0).contains(&g("shed_rate")));
         assert!((0.0..=1.0).contains(&g("deadline_miss_rate")));
+        // The embedded engine snapshot carries the same run, conserved.
+        let engine = rec.get("engine").expect("engine snapshot embedded");
+        assert!(matches!(engine.get("conserved"), Some(Json::Bool(true))));
+        assert_eq!(engine.get("inflight").unwrap().as_f64(), Some(0.0));
     }
 }

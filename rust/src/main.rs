@@ -40,14 +40,16 @@ use rsr::model::config::ModelConfig;
 use rsr::model::weights::ModelWeights;
 use rsr::serving::engine::{EngineConfig, InferenceEngine};
 use rsr::serving::router::Router;
-use rsr::serving::server::{Client, Server};
+use rsr::serving::server::{Client, Server, ServerIdentity};
 use rsr::tune::{human_ns, tune_model, TuneOpts, TuneProfile};
+use rsr::util::json::Json;
+use rsr::util::obs::{set_log_level, Level};
 use rsr::util::rng::Rng;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     if let Err(e) = run(&args) {
-        eprintln!("error: {e}");
+        rsr::log!(Level::Error, "{e}");
         std::process::exit(1);
     }
 }
@@ -97,6 +99,9 @@ fn run(args: &[String]) -> Result<()> {
         "inspect" => cmd_inspect(&f),
         "serve" => cmd_serve(&f),
         "client" => cmd_client(&f),
+        "metrics" => cmd_metrics(&f),
+        "status" => cmd_status(&f),
+        "trace" => cmd_trace(&f),
         "bench-kernels" => cmd_bench_kernels(&f),
         "bench-serve" => cmd_bench_serve(&f),
         "bench-prefill" => cmd_bench_prefill(&f),
@@ -121,8 +126,11 @@ fn print_help() {
          pack           --model FILE | --n N  --out DIR [--k K] [--profile FILE.rsrt]  preprocess to .rsrz\n  \
          tune           --weights FILE --out FILE.rsrt [--budget-ms N] [--radius R] [--trials T]\n  \
          inspect        --plans DIR | --file FILE [--deep]      .rsrz / .rsrt stats\n  \
-         serve          --model FILE [--plans DIR] [--profile FILE.rsrt] [--addr A] [--replicas R] [--workers W] [--max-slots S] [--prefill-chunk C] [--backend B] [--default-deadline-ms D] [--replica-stall-ms S]\n  \
+         serve          --model FILE [--plans DIR] [--profile FILE.rsrt] [--addr A] [--replicas R] [--workers W] [--max-slots S] [--prefill-chunk C] [--backend B] [--default-deadline-ms D] [--replica-stall-ms S] [--log-level L] [--trace-slow-ms T] [--profile-layers]\n  \
          client         [--addr A] --prompt TEXT [--max-new N] [--deadline-ms D]\n  \
+         metrics        [--addr A] [--prom] [--watch SECS]      scrape a live server's metrics\n  \
+         status         [--addr A]                              live server identity + gauges\n  \
+         trace          [--addr A]                              dump request trace timelines\n  \
          bench-kernels  [--sizes 1024,4096] [--shapes 4096x11008] [--reps N] [--batch B] [--threads T] [--json FILE]\n  \
          bench-serve    [--batches 1,4,8,16] [--d-model 1024] [--d-ff 2048] [--layers 1] [--steps 32] [--prompt 4] [--prompt-lens 16,128,512] [--prefill-chunk 8] [--overload-requests 48] [--overload-rps 2000] [--overload-deadline-ms 60] [--json FILE]\n  \
          bench-prefill  [--chunks 1,4,8,16] [--d-model 1024] [--d-ff 2048] [--layers 1] [--prompt 256] [--trials 3] [--json FILE]\n  \
@@ -247,6 +255,27 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
     let plans = f.get("plans").map(PathBuf::from);
     let profile = f.get("profile").map(PathBuf::from);
     let k = get_usize(f, "k", 0)?;
+    // Observability knobs (all default-off; defaults add nothing to
+    // the decode hot path — see ARCHITECTURE.md §Observability).
+    if let Some(level) = f.get("log-level") {
+        let l = Level::parse(level).ok_or_else(|| {
+            Error::Config(format!(
+                "unknown --log-level {level} (error|warn|info|debug)"
+            ))
+        })?;
+        set_log_level(l);
+    }
+    // Presence-based: `--trace-slow-ms 0` is a valid threshold (pin
+    // every request), absence turns tracing off entirely.
+    let trace_slow_ms = f
+        .get("trace-slow-ms")
+        .map(|v| {
+            v.parse::<u64>().map_err(|_| {
+                Error::Config(format!("--trace-slow-ms expects an integer, got {v}"))
+            })
+        })
+        .transpose()?;
+    let profile_layers = f.contains_key("profile-layers");
     // Continuous-batching knobs: concurrent decode slots per worker
     // (1 serves strictly sequentially — the pre-batching path) and the
     // chunked-prefill chunk (1 feeds prompts one token per step — the
@@ -281,7 +310,9 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
         k,
         batch,
         plan_dir: plans.clone(),
-        tune_profile: profile,
+        tune_profile: profile.clone(),
+        trace_slow_ms,
+        profile_layers,
         ..Default::default()
     };
     if let Some(dir) = &plans {
@@ -338,11 +369,21 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
         println!("replica health: skip replicas stalled > {replica_stall_ms}ms");
     }
     let router = Arc::new(router);
-    let mut server = Server::new(router);
+    let mut server = Server::new(router).with_identity(ServerIdentity {
+        model: weights.config.name.to_string(),
+        plan_dir: plans.as_ref().map(|p| p.display().to_string()),
+        tune_profile: profile.as_ref().map(|p| p.display().to_string()),
+    });
     if default_deadline_ms > 0 {
         server = server
             .with_default_deadline(std::time::Duration::from_millis(default_deadline_ms));
         println!("default request deadline: {default_deadline_ms}ms");
+    }
+    if let Some(ms) = trace_slow_ms {
+        println!("request tracing: pinning requests slower than {ms}ms (rsr trace)");
+    }
+    if profile_layers {
+        println!("per-layer profiling: on (rsr metrics reports layer rows)");
     }
     let stop = Arc::new(AtomicBool::new(false));
     println!("serving on {addr} (Ctrl-C to stop)");
@@ -371,6 +412,66 @@ fn cmd_client(f: &HashMap<String, String>) -> Result<()> {
         max_new,
         if deadline_ms > 0 { Some(deadline_ms) } else { None },
     )?;
+    println!("{}", reply.to_string());
+    Ok(())
+}
+
+/// Parse `--addr` (shared by the scrape commands).
+fn control_addr(f: &HashMap<String, String>) -> Result<std::net::SocketAddr> {
+    f.get("addr")
+        .cloned()
+        .unwrap_or_else(|| "127.0.0.1:7878".into())
+        .parse()
+        .map_err(|e| Error::Config(format!("bad --addr: {e}")))
+}
+
+/// `rsr metrics`: scrape a live server's `metrics` wire command —
+/// JSON by default, Prometheus text exposition with `--prom`,
+/// repeating every `--watch SECS` seconds until interrupted.
+fn cmd_metrics(f: &HashMap<String, String>) -> Result<()> {
+    let addr = control_addr(f)?;
+    let prom = f.contains_key("prom");
+    let watch_s = get_usize(f, "watch", 0)?;
+    let line = if prom {
+        r#"{"cmd": "metrics", "format": "prom"}"#
+    } else {
+        r#"{"cmd": "metrics"}"#
+    };
+    let mut client = Client::connect(addr)?;
+    loop {
+        let reply = client.send_raw(line)?;
+        if let Some(err) = reply.get("error").and_then(|e| e.as_str()) {
+            return Err(Error::Serving(err.to_string()));
+        }
+        match reply.get("prom").and_then(|p| p.as_str()) {
+            // The prom text rides the wire JSON-escaped; print it raw.
+            Some(text) => print!("{text}"),
+            None => println!("{}", reply.to_string()),
+        }
+        if watch_s == 0 {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_secs(watch_s as u64));
+    }
+}
+
+/// `rsr status`: one-shot engine state — identity (model, plan dir,
+/// tuned profile) plus per-replica gauges.
+fn cmd_status(f: &HashMap<String, String>) -> Result<()> {
+    let mut client = Client::connect(control_addr(f)?)?;
+    let reply = client.send_raw(r#"{"cmd": "status"}"#)?;
+    println!("{}", reply.to_string());
+    Ok(())
+}
+
+/// `rsr trace`: dump the per-request trace ring (recent + slow-pinned
+/// timelines; requires the server to run with `--trace-slow-ms`).
+fn cmd_trace(f: &HashMap<String, String>) -> Result<()> {
+    let mut client = Client::connect(control_addr(f)?)?;
+    let reply = client.send_raw(r#"{"cmd": "trace"}"#)?;
+    if reply.get("enabled") == Some(&Json::Bool(false)) {
+        println!("tracing is off — start the server with --trace-slow-ms N");
+    }
     println!("{}", reply.to_string());
     Ok(())
 }

@@ -69,6 +69,20 @@ impl Attention {
         }
     }
 
+    /// Attach `--profile-layers` probes to the four projections, named
+    /// `layer{i}.wq` / `.wk` / `.wv` / `.wo` (the plan-store names, so
+    /// the profile rows line up with `rsr tune` output).
+    pub(crate) fn attach_probes(
+        &mut self,
+        profile: &crate::util::obs::LayerProfile,
+        layer: usize,
+    ) {
+        self.wq.attach_probe(profile, &format!("layer{layer}.wq"));
+        self.wk.attach_probe(profile, &format!("layer{layer}.wk"));
+        self.wv.attach_probe(profile, &format!("layer{layer}.wv"));
+        self.wo.attach_probe(profile, &format!("layer{layer}.wo"));
+    }
+
     /// Cached sequence length (slot 0 — the single-sequence path).
     pub fn seq_len(&self) -> usize {
         self.caches[0].len()

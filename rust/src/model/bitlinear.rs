@@ -10,6 +10,7 @@
 //! bit-exact against each other up to f32 re-association.
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::error::Result;
 use crate::kernels::index::TernaryRsrIndex;
@@ -22,6 +23,7 @@ use crate::kernels::{Backend, BinaryMatrix, TernaryMatrix};
 use crate::runtime::executable::ExecutablePlan;
 use crate::runtime::plan_store::{PlanEntry, PlanScratch, SharedTernaryPlan};
 use crate::tune::candidates::TunedBackend;
+use crate::util::obs::{LayerProbe, LayerProfile};
 
 /// Prepared execution state for one backend.
 enum Prepared {
@@ -63,6 +65,11 @@ pub struct BitLinear {
     scale: f32,
     backend: Backend,
     prepared: Prepared,
+    /// Optional `--profile-layers` timing probe for the prepared
+    /// variants that do not execute through an [`ExecutablePlan`]
+    /// (tuned layers probe at that boundary instead). `None` — the
+    /// default — is a single branch per forward.
+    probe: Option<Arc<LayerProbe>>,
 }
 
 impl BitLinear {
@@ -100,7 +107,7 @@ impl BitLinear {
                 crate::kernels::fused::FusedTernaryPlan::preprocess(&w, k)?,
             ),
         };
-        Ok(Self { in_dim, out_dim, scale, backend, prepared })
+        Ok(Self { in_dim, out_dim, scale, backend, prepared, probe: None })
     }
 
     /// Prepare a layer around a plan compiled elsewhere (a
@@ -116,6 +123,7 @@ impl BitLinear {
             scale,
             backend: Backend::RsrPlusPlus,
             prepared: Prepared::Shared { plan, scratch, batched: None },
+            probe: None,
         }
     }
 
@@ -136,6 +144,7 @@ impl BitLinear {
                     scale,
                     backend: coarse_backend(choice.backend),
                     prepared: Prepared::Tuned(exec),
+                    probe: None,
                 })
             }
         }
@@ -167,6 +176,28 @@ impl BitLinear {
         }
     }
 
+    /// Attach a `--profile-layers` timing probe keyed by `(layer,
+    /// backend)`. Tuned layers probe at the
+    /// [`ExecutablePlan::execute`] boundary — timing exactly what the
+    /// tuner measured, so its decisions can be audited against live
+    /// traffic — while the shared/owned paths time the whole forward
+    /// dispatch. The profile dedupes, so a worker re-attaching after a
+    /// panic rebuild keeps accumulating into the same aggregates.
+    pub fn attach_probe(&mut self, profile: &LayerProfile, layer: &str) {
+        match &mut self.prepared {
+            Prepared::Tuned(exec) => {
+                let backend = exec.backend().name();
+                exec.set_probe(profile.probe(layer, backend));
+            }
+            Prepared::Shared { .. } => {
+                self.probe = Some(profile.probe(layer, "rsr++-shared"));
+            }
+            _ => {
+                self.probe = Some(profile.probe(layer, self.backend.name()));
+            }
+        }
+    }
+
     /// Bytes held by the prepared weight representation — what Fig 5's
     /// memory comparison measures at the model level.
     pub fn weight_bytes(&self) -> usize {
@@ -189,6 +220,16 @@ impl BitLinear {
 
     /// `out = (x · W) · β`. `x.len() == in_dim`, `out.len() == out_dim`.
     pub fn forward(&mut self, x: &[f32], out: &mut [f32]) -> Result<()> {
+        if let Some(probe) = self.probe.clone() {
+            let t0 = Instant::now();
+            let res = self.forward_inner(x, out);
+            probe.record(t0.elapsed().as_nanos() as u64);
+            return res;
+        }
+        self.forward_inner(x, out)
+    }
+
+    fn forward_inner(&mut self, x: &[f32], out: &mut [f32]) -> Result<()> {
         debug_assert_eq!(x.len(), self.in_dim);
         debug_assert_eq!(out.len(), self.out_dim);
         match &mut self.prepared {
@@ -230,6 +271,16 @@ impl BitLinear {
     /// bit-identical to the sequential path, just without the index
     /// amortization.
     pub fn forward_batch(&mut self, vs: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
+        if let Some(probe) = self.probe.clone() {
+            let t0 = Instant::now();
+            let res = self.forward_batch_inner(vs, batch, out);
+            probe.record(t0.elapsed().as_nanos() as u64);
+            return res;
+        }
+        self.forward_batch_inner(vs, batch, out)
+    }
+
+    fn forward_batch_inner(&mut self, vs: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
         if batch == 0
             || vs.len() != batch * self.in_dim
             || out.len() != batch * self.out_dim
@@ -244,8 +295,9 @@ impl BitLinear {
         }
         if !matches!(self.prepared, Prepared::Shared { .. } | Prepared::Tuned(_)) {
             for b in 0..batch {
-                // `forward` applies β per row.
-                self.forward(
+                // `forward_inner` applies β per row (the un-probed
+                // body: the batch call was already timed as a whole).
+                self.forward_inner(
                     &vs[b * self.in_dim..(b + 1) * self.in_dim],
                     &mut out[b * self.out_dim..(b + 1) * self.out_dim],
                 )?;

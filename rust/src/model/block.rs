@@ -37,6 +37,17 @@ impl Block {
         }
     }
 
+    /// Attach `--profile-layers` probes to every projection in this
+    /// block (`layer` is the block index used in plan-store names).
+    pub(crate) fn attach_probes(
+        &mut self,
+        profile: &crate::util::obs::LayerProfile,
+        layer: usize,
+    ) {
+        self.attn.attach_probes(profile, layer);
+        self.mlp.attach_probes(profile, layer);
+    }
+
     /// Clear every slot's KV cache.
     pub fn reset(&mut self) {
         self.attn.reset();

@@ -41,6 +41,19 @@ impl Mlp {
         self.gate.weight_bytes() + self.up.weight_bytes() + self.down.weight_bytes()
     }
 
+    /// Attach `--profile-layers` probes to the three projections,
+    /// named `layer{i}.gate` / `.up` / `.down` (the plan-store names,
+    /// so the profile rows line up with `rsr tune` output).
+    pub(crate) fn attach_probes(
+        &mut self,
+        profile: &crate::util::obs::LayerProfile,
+        layer: usize,
+    ) {
+        self.gate.attach_probe(profile, &format!("layer{layer}.gate"));
+        self.up.attach_probe(profile, &format!("layer{layer}.up"));
+        self.down.attach_probe(profile, &format!("layer{layer}.down"));
+    }
+
     /// Forward one token.
     pub fn forward(&mut self, x: &[f32], out: &mut [f32]) -> Result<()> {
         self.gate.forward(x, &mut self.g)?;

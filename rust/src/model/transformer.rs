@@ -216,6 +216,20 @@ impl Transformer {
         })
     }
 
+    /// Attach `--profile-layers` timing probes to every `BitLinear` in
+    /// the model — all block projections plus the LM head — keyed by
+    /// the plan-store layer names (`layer{i}.wq` … `lm_head`), so the
+    /// profile rows can be audited against `rsr tune` output. The
+    /// registry dedupes per (layer, backend): a worker rebuilding its
+    /// model after a supervised panic re-attaches to the same
+    /// aggregates.
+    pub fn attach_layer_probes(&mut self, profile: &crate::util::obs::LayerProfile) {
+        for (i, block) in self.blocks.iter_mut().enumerate() {
+            block.attach_probes(profile, i);
+        }
+        self.lm_head.attach_probe(profile, "lm_head");
+    }
+
     /// Architecture.
     pub fn config(&self) -> &ModelConfig {
         &self.config

@@ -15,6 +15,7 @@
 //! makes its measurements transfer to serving.
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use super::plan_store::{PlanScratch, SharedTernaryPlan};
 use crate::error::{Error, Result};
@@ -22,6 +23,7 @@ use crate::kernels::batched::BatchedExec;
 use crate::kernels::parallel::SharedParallelExec;
 use crate::kernels::tl::{tl_neon_available, TlPlan};
 use crate::tune::candidates::TunedBackend;
+use crate::util::obs::LayerProbe;
 use crate::util::threadpool::PoolHandle;
 
 /// Per-backend execution state (the plan itself lives in the shared
@@ -49,6 +51,11 @@ pub struct ExecutablePlan {
     /// not already batched. `None` until the first batched call — a
     /// purely sequential deployment pays nothing for it.
     batch_exec: Option<BatchedExec>,
+    /// Optional per-layer timing probe (`--profile-layers`). `None` —
+    /// the default — costs one branch per execute; `Some` adds two
+    /// `Instant::now()` calls and two relaxed atomic adds around the
+    /// kernel, never a lock.
+    probe: Option<Arc<LayerProbe>>,
 }
 
 impl std::fmt::Debug for ExecutablePlan {
@@ -93,12 +100,19 @@ impl ExecutablePlan {
                 ExecState::Tl { tl, lut }
             }
         };
-        Ok(Self { plan, backend, state, batch_exec: None })
+        Ok(Self { plan, backend, state, batch_exec: None, probe: None })
     }
 
     /// The backend this executor dispatches to.
     pub fn backend(&self) -> TunedBackend {
         self.backend
+    }
+
+    /// Attach a timing probe: every [`execute`](Self::execute) /
+    /// [`execute_batch`](Self::execute_batch) call records its wall
+    /// nanoseconds into the probe's relaxed atomics.
+    pub fn set_probe(&mut self, probe: Arc<LayerProbe>) {
+        self.probe = Some(probe);
     }
 
     /// Rows of the planned matrix (input length).
@@ -124,6 +138,16 @@ impl ExecutablePlan {
     /// `out = v · A` through the tuned backend. Same shape contract as
     /// every plan executor: `v.len() == rows`, `out.len() == cols`.
     pub fn execute(&mut self, v: &[f32], out: &mut [f32]) -> Result<()> {
+        if let Some(probe) = self.probe.clone() {
+            let t0 = Instant::now();
+            let res = self.execute_inner(v, out);
+            probe.record(t0.elapsed().as_nanos() as u64);
+            return res;
+        }
+        self.execute_inner(v, out)
+    }
+
+    fn execute_inner(&mut self, v: &[f32], out: &mut [f32]) -> Result<()> {
         match (&mut self.state, self.backend) {
             (ExecState::Scratch(s), TunedBackend::Rsr) => {
                 self.plan.execute_rsr(s, v, out)
@@ -167,6 +191,16 @@ impl ExecutablePlan {
     /// which strictly-sequential deployments (`max_slots == 1`) still
     /// serve.
     pub fn execute_batch(&mut self, vs: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
+        if let Some(probe) = self.probe.clone() {
+            let t0 = Instant::now();
+            let res = self.execute_batch_inner(vs, batch, out);
+            probe.record(t0.elapsed().as_nanos() as u64);
+            return res;
+        }
+        self.execute_batch_inner(vs, batch, out)
+    }
+
+    fn execute_batch_inner(&mut self, vs: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
         if let ExecState::Tl { tl, lut } = &mut self.state {
             return if self.backend == TunedBackend::TlNeon {
                 tl.execute_batch_neon(vs, batch, out, lut)

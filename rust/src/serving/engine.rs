@@ -48,6 +48,8 @@ use crate::model::weights::ModelWeights;
 use crate::runtime::plan_store::PlanStore;
 use crate::tune::candidates::TunedBackend;
 use crate::tune::profile::TuneProfile;
+use crate::util::json::Json;
+use crate::util::obs::{LayerProfile, Level, TraceBuilder, TraceRing};
 use crate::util::rng::Rng;
 
 /// Deterministic fault injection for the lifecycle test harness.
@@ -126,6 +128,16 @@ pub struct EngineConfig {
     /// defaults. The profile must have been tuned on this machine
     /// (fingerprint-checked at startup).
     pub tune_profile: Option<PathBuf>,
+    /// Per-request trace timelines: `Some(ms)` turns tracing on and
+    /// pins any request slower than `ms` milliseconds (or any request
+    /// that did not complete cleanly) into the retained slow-log.
+    /// `None` — the default — compiles every trace hook down to a
+    /// branch on a `None` option: no locks, no allocation, no extra
+    /// `Instant::now()` on the decode path.
+    pub trace_slow_ms: Option<u64>,
+    /// Per-(layer, backend) execution profiling (`--profile-layers`).
+    /// Off by default: every probe site is then a single branch.
+    pub profile_layers: bool,
     /// Fault-injection plan (tests / `fault-inject` feature only).
     #[cfg(any(test, feature = "fault-inject"))]
     pub fault: FaultPlan,
@@ -142,6 +154,8 @@ impl Default for EngineConfig {
             k: 0,
             plan_dir: None,
             tune_profile: None,
+            trace_slow_ms: None,
+            profile_layers: false,
             #[cfg(any(test, feature = "fault-inject"))]
             fault: FaultPlan::default(),
         }
@@ -160,10 +174,20 @@ pub struct InferenceEngine {
     workers: Vec<std::thread::JoinHandle<()>>,
     inflight: Arc<AtomicUsize>,
     shutdown: Arc<AtomicBool>,
-    /// Engine start instant — the heartbeat's epoch.
+    /// Engine start instant — the heartbeat's epoch and the trace
+    /// timestamp base.
     epoch: Instant,
     /// Milliseconds since `epoch` of the most recent worker heartbeat.
     heartbeat_ms: Arc<AtomicU64>,
+    /// Recent + slow-pinned request timelines (`--trace-slow-ms`);
+    /// `None` when tracing is off.
+    trace: Option<Arc<TraceRing>>,
+    /// Per-(layer, backend) execution aggregates (`--profile-layers`);
+    /// `None` when profiling is off.
+    layer_profile: Option<Arc<LayerProfile>>,
+    /// Decode slots currently seated across all workers (the
+    /// `rsr_live_slots` gauge).
+    live_slots: Arc<AtomicUsize>,
     cfg: EngineConfig,
 }
 
@@ -225,10 +249,11 @@ impl InferenceEngine {
                     .filter(|l| l.winner().backend == TunedBackend::Parallel)
                     .count();
                 if parallel_layers > 0 && cfg.workers > 1 {
-                    eprintln!(
-                        "warning: profile selects the parallel backend for \
+                    crate::log!(
+                        Level::Warn,
+                        "profile selects the parallel backend for \
                          {parallel_layers} layer(s), but it was measured without \
-                         pool contention; with {} workers the shared pool will \
+                         pool contention; with workers={} the shared pool will \
                          contend and rsr++ may serve faster — consider --workers 1 \
                          or re-tuning under load",
                         cfg.workers
@@ -246,8 +271,9 @@ impl InferenceEngine {
                 let tuned_b = (p.bench_batch as usize).max(1);
                 let slots = cfg.batch.max_slots.max(1);
                 if batched_layers > 0 && slots.max(tuned_b) >= 2 * slots.min(tuned_b) {
-                    eprintln!(
-                        "warning: profile's batched winner ({batched_layers} \
+                    crate::log!(
+                        Level::Warn,
+                        "profile's batched winner ({batched_layers} \
                          layer(s)) was measured at batch {tuned_b}, but the engine \
                          decodes with max_slots {slots} — the measured ranking may \
                          not hold at this occupancy; serve --max-slots {tuned_b} to \
@@ -321,6 +347,11 @@ impl InferenceEngine {
         let epoch = Instant::now();
         let heartbeat_ms = Arc::new(AtomicU64::new(0));
         let step_counter = Arc::new(AtomicU64::new(0));
+        let trace = cfg
+            .trace_slow_ms
+            .map(|ms| Arc::new(TraceRing::with_threshold(Duration::from_millis(ms))));
+        let layer_profile = cfg.profile_layers.then(|| Arc::new(LayerProfile::new()));
+        let live_slots = Arc::new(AtomicUsize::new(0));
 
         let mut workers = Vec::with_capacity(cfg.workers.max(1));
         for wid in 0..cfg.workers.max(1) {
@@ -333,10 +364,13 @@ impl InferenceEngine {
                 step_counter: Arc::clone(&step_counter),
                 epoch,
                 heartbeat_ms: Arc::clone(&heartbeat_ms),
+                trace: trace.clone(),
+                live_slots: Arc::clone(&live_slots),
                 cfg: cfg.clone(),
             };
             let weights = Arc::clone(&weights);
             let store = store.clone();
+            let profile = layer_profile.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("rsr-worker-{wid}"))
@@ -346,19 +380,30 @@ impl InferenceEngine {
                         // the store, or per-worker prepare otherwise.
                         // The same builder rebuilds the model after a
                         // supervised panic (the "respawn" of the
-                        // supervision policy).
-                        let rebuild = || match &store {
-                            Some(s) => Transformer::from_plan_store(&weights, s),
-                            None => Transformer::from_weights(
-                                &weights,
-                                ctx.cfg.backend,
-                                ctx.cfg.k,
-                            ),
+                        // supervision policy); probe dedupe keeps the
+                        // rebuilt model accumulating into the same
+                        // per-layer aggregates.
+                        let rebuild = || -> Result<Transformer> {
+                            let mut m = match &store {
+                                Some(s) => Transformer::from_plan_store(&weights, s)?,
+                                None => Transformer::from_weights(
+                                    &weights,
+                                    ctx.cfg.backend,
+                                    ctx.cfg.k,
+                                )?,
+                            };
+                            if let Some(p) = &profile {
+                                m.attach_layer_probes(p);
+                            }
+                            Ok(m)
                         };
                         let model = match rebuild() {
                             Ok(m) => m,
                             Err(e) => {
-                                eprintln!("worker {wid}: model build failed: {e}");
+                                crate::log!(
+                                    Level::Error,
+                                    "model build failed worker={wid} err={e}"
+                                );
                                 return;
                             }
                         };
@@ -376,6 +421,9 @@ impl InferenceEngine {
             shutdown,
             epoch,
             heartbeat_ms,
+            trace,
+            layer_profile,
+            live_slots,
             cfg,
         })
     }
@@ -388,12 +436,21 @@ impl InferenceEngine {
             self.metrics.record_admission(false);
             return Err(Error::Serving("queue full — retry later".into()));
         }
+        // Pre-admission sheds reach a terminal outcome, so they count
+        // as admitted-with-immediate-terminal — `admitted` bumps BEFORE
+        // the terminal counter, keeping the snapshot's conservation
+        // residual (`inflight`) non-negative. Queue-full rejections
+        // stay un-admitted: the engine never took responsibility.
         if request.cancel.is_cancelled() {
-            self.metrics.record_cancelled();
+            self.metrics.record_admission(true);
+            self.metrics.record_cancelled(request.arrival.elapsed());
+            self.trace_shed(&request, "cancelled");
             return Err(Error::Cancelled("request cancelled before admission".into()));
         }
         if request.deadline_expired() {
-            self.metrics.record_deadline_exceeded();
+            self.metrics.record_admission(true);
+            self.metrics.record_deadline_exceeded(request.arrival.elapsed());
+            self.trace_shed(&request, "deadline_exceeded");
             return Err(Error::DeadlineExceeded(
                 "deadline expired before admission".into(),
             ));
@@ -452,6 +509,53 @@ impl InferenceEngine {
         &self.metrics
     }
 
+    /// Requests waiting in the bounded queue (the `rsr_queue_depth`
+    /// gauge; `load()` adds inflight for routing).
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Decode slots currently seated across this engine's workers.
+    pub fn live_slots(&self) -> usize {
+        self.live_slots.load(Ordering::Relaxed)
+    }
+
+    /// Time since the engine started.
+    pub fn uptime(&self) -> Duration {
+        self.epoch.elapsed()
+    }
+
+    /// Dump the trace ring (`trace` wire command); `None` when tracing
+    /// is off (`trace_slow_ms` unset).
+    pub fn trace_snapshot(&self) -> Option<Json> {
+        self.trace.as_ref().map(|t| t.snapshot())
+    }
+
+    /// The metrics snapshot, extended with the per-layer execution
+    /// profile when `--profile-layers` is on (each row's share is
+    /// attributed against `decode_busy_ns`).
+    pub fn snapshot(&self) -> Json {
+        let snap = self.metrics.snapshot();
+        let Some(profile) = &self.layer_profile else { return snap };
+        let busy = self.metrics.decode_busy_ns.load(Ordering::Relaxed);
+        match snap {
+            Json::Obj(mut map) => {
+                map.insert("layers".into(), profile.snapshot(busy));
+                Json::Obj(map)
+            }
+            other => other,
+        }
+    }
+
+    /// Minimal admitted→terminal timeline for a request shed before it
+    /// ever reached a worker (tracing on only).
+    fn trace_shed(&self, request: &Request, outcome: &'static str) {
+        if let Some(ring) = &self.trace {
+            let b = TraceBuilder::new(request.id, us_since(self.epoch, request.arrival));
+            ring.record(b.finish(us_since(self.epoch, Instant::now()), outcome));
+        }
+    }
+
     /// Stop accepting work, drain, and join workers.
     pub fn shutdown(mut self) {
         self.shutdown.store(true, Ordering::Relaxed);
@@ -475,6 +579,11 @@ struct WorkerCtx {
     step_counter: Arc<AtomicU64>,
     epoch: Instant,
     heartbeat_ms: Arc<AtomicU64>,
+    /// Trace ring (`--trace-slow-ms`); `None` = tracing off, and every
+    /// trace hook reduces to one branch.
+    trace: Option<Arc<TraceRing>>,
+    /// Seated-slot gauge, +1 at seat / −1 at retire.
+    live_slots: Arc<AtomicUsize>,
     cfg: EngineConfig,
 }
 
@@ -485,6 +594,19 @@ impl WorkerCtx {
         self.heartbeat_ms
             .fetch_max(self.epoch.elapsed().as_millis() as u64, Ordering::Relaxed);
     }
+
+    /// Current trace timestamp, `None` when tracing is off — so the
+    /// hot loop takes exactly one `Instant::now()` per step when
+    /// enabled and zero when not.
+    fn trace_now_us(&self) -> Option<u64> {
+        self.trace.as_ref().map(|_| us_since(self.epoch, Instant::now()))
+    }
+}
+
+/// Microseconds from `epoch` to `t` (saturating: a request stamped
+/// before the engine's epoch — impossible in practice — reads 0).
+fn us_since(epoch: Instant, t: Instant) -> u64 {
+    t.saturating_duration_since(epoch).as_micros() as u64
 }
 
 /// Why a request is being retired — the terminal-outcome taxonomy.
@@ -512,6 +634,18 @@ impl Retire {
             Retire::Cancelled => Some("cancelled by client".into()),
         }
     }
+
+    /// Outcome label — the same vocabulary as
+    /// [`Metrics::OUTCOMES`](super::metrics::OUTCOMES) and the trace
+    /// ring's terminal events.
+    fn label(&self) -> &'static str {
+        match self {
+            Retire::Done => "completed",
+            Retire::Failed(_) => "failed",
+            Retire::Deadline => "deadline_exceeded",
+            Retire::Cancelled => "cancelled",
+        }
+    }
 }
 
 /// Lifecycle preflight shared by the slot-assignment checkpoints:
@@ -527,30 +661,48 @@ fn preflight(request: &Request) -> Option<Retire> {
     None
 }
 
-/// Account one terminal outcome and deliver the response. Returns
-/// `false` when the response receiver is gone (worker exits).
+/// Account one terminal outcome and deliver the response. Every path
+/// — success AND failure — records a `total` latency observation
+/// (outcome-labelled in the snapshot), so shed and failed work is
+/// never invisible in the histograms. Returns `false` when the
+/// response receiver is gone (worker exits).
 fn account_and_send(
     ctx: &WorkerCtx,
     response: Response,
     outcome: &Retire,
     prompt_tokens: usize,
+    arrival: Instant,
 ) -> bool {
     match outcome {
         Retire::Done => {
             ctx.metrics.record(&response.timing, response.tokens.len(), prompt_tokens)
         }
-        Retire::Failed(_) => ctx.metrics.record_failure(),
-        Retire::Deadline => ctx.metrics.record_deadline_exceeded(),
-        Retire::Cancelled => ctx.metrics.record_cancelled(),
+        Retire::Failed(_) => ctx.metrics.record_failure(arrival.elapsed()),
+        Retire::Deadline => ctx.metrics.record_deadline_exceeded(arrival.elapsed()),
+        Retire::Cancelled => ctx.metrics.record_cancelled(arrival.elapsed()),
     }
     ctx.inflight.fetch_sub(1, Ordering::Relaxed);
     ctx.tx.send(response).is_ok()
 }
 
 /// Terminal outcome for a request that never got (or lost) a slot.
+/// Traces as a minimal admitted→terminal timeline (it was never
+/// seated).
 fn respond_terminal(ctx: &WorkerCtx, request: &Request, outcome: Retire) -> bool {
+    if let Some(ring) = &ctx.trace {
+        let b = TraceBuilder::new(request.id, us_since(ctx.epoch, request.arrival));
+        ring.record(
+            b.finish(us_since(ctx.epoch, Instant::now()), outcome.label()),
+        );
+    }
     let msg = outcome.error_message().unwrap_or_else(|| "retired".into());
-    account_and_send(ctx, Response::err(request.id, msg), &outcome, request.prompt.len())
+    account_and_send(
+        ctx,
+        Response::err(request.id, msg),
+        &outcome,
+        request.prompt.len(),
+        request.arrival,
+    )
 }
 
 /// Render a caught panic payload.
@@ -614,14 +766,37 @@ fn sequential_loop(
                     break;
                 }
                 let step_no = ctx.step_counter.fetch_add(1, Ordering::Relaxed) + 1;
+                // Sequential traces are coarse (admitted → seated →
+                // terminal): `run_request` owns the whole lifetime, so
+                // per-step events would mean threading the builder
+                // through the hot token loop for the degraded path.
+                let trace = ctx.trace.as_ref().map(|_| {
+                    let mut b = TraceBuilder::new(
+                        request.id,
+                        us_since(ctx.epoch, request.arrival),
+                    );
+                    b.seated(us_since(ctx.epoch, Instant::now()));
+                    b
+                });
                 let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     fault_before_step(step_no, &ctx.cfg);
                     run_request(&mut model, &request, &mut rng)
                 }));
                 match run {
                     Ok((response, outcome)) => {
-                        if !account_and_send(ctx, response, &outcome, request.prompt.len())
-                        {
+                        if let (Some(ring), Some(b)) = (&ctx.trace, trace) {
+                            ring.record(b.finish(
+                                us_since(ctx.epoch, Instant::now()),
+                                outcome.label(),
+                            ));
+                        }
+                        if !account_and_send(
+                            ctx,
+                            response,
+                            &outcome,
+                            request.prompt.len(),
+                            request.arrival,
+                        ) {
                             return;
                         }
                         break;
@@ -629,9 +804,10 @@ fn sequential_loop(
                     Err(payload) => {
                         ctx.metrics.record_panic();
                         let msg = panic_message(payload);
-                        eprintln!(
-                            "worker: caught panic serving request {}: {msg} — \
-                             rebuilding model",
+                        crate::log!(
+                            Level::Warn,
+                            "caught panic serving request — rebuilding model \
+                             request={} err={msg}",
                             request.id
                         );
                         match rebuild() {
@@ -644,7 +820,7 @@ fn sequential_loop(
                                         "worker rebuild failed after panic: {e}"
                                     )),
                                 );
-                                eprintln!("worker: model rebuild failed: {e}");
+                                crate::log!(Level::Error, "model rebuild failed err={e}");
                                 return;
                             }
                         }
@@ -683,12 +859,21 @@ struct SlotState {
     picked_up: Instant,
     /// Set by the step that consumes the final prompt token.
     prefill_done: Option<Instant>,
+    /// Per-request timeline under `--trace-slow-ms`; `None` when
+    /// tracing is off (the builder is slot-local, so recording an
+    /// event is a Vec push — no lock until the terminal outcome).
+    trace: Option<TraceBuilder>,
 }
 
 /// Retire one sequence: build its response, account it, and send it.
 /// Returns `false` when the response receiver is gone (worker exits).
-fn finish_slot(slot: SlotState, outcome: Retire, ctx: &WorkerCtx) -> bool {
+fn finish_slot(mut slot: SlotState, outcome: Retire, ctx: &WorkerCtx) -> bool {
     let now = Instant::now();
+    ctx.live_slots.fetch_sub(1, Ordering::Relaxed);
+    if let (Some(ring), Some(b)) = (&ctx.trace, slot.trace.take()) {
+        ring.record(b.finish(us_since(ctx.epoch, now), outcome.label()));
+    }
+    let arrival = slot.request.arrival;
     let prompt_tokens = slot.request.prompt.len();
     let response = match outcome.error_message() {
         Some(msg) => Response::err(slot.request.id, msg),
@@ -702,7 +887,7 @@ fn finish_slot(slot: SlotState, outcome: Retire, ctx: &WorkerCtx) -> bool {
             Response::ok(slot.request.id, slot.tokens, timing)
         }
     };
-    account_and_send(ctx, response, &outcome, prompt_tokens)
+    account_and_send(ctx, response, &outcome, prompt_tokens, arrival)
 }
 
 /// Supervision: convert a caught step panic into per-slot terminal
@@ -721,11 +906,20 @@ fn supervise_panic(
 ) -> bool {
     ctx.metrics.record_panic();
     let msg = panic_message(payload);
-    eprintln!("worker: caught panic during lockstep step: {msg} — rebuilding model");
+    crate::log!(
+        Level::Warn,
+        "caught panic during lockstep step — rebuilding model err={msg}"
+    );
     for &i in step_slots {
         let mut st = slots[i].take().expect("was in the step");
         let mid_prefill = st.prompt_pos < st.request.prompt.len();
         if mid_prefill && st.request.attempts == 0 {
+            // Quarantine frees the slot without going through
+            // `finish_slot` (no terminal outcome yet): the gauge drops
+            // here and bumps again when the retry re-seats. The
+            // first-attempt trace dies with the slot — the retry
+            // starts a fresh timeline.
+            ctx.live_slots.fetch_sub(1, Ordering::Relaxed);
             st.request.attempts = 1;
             carryover.push(st.request);
         } else if mid_prefill {
@@ -860,13 +1054,22 @@ fn continuous_loop(
                 .position(|s| s.is_none())
                 .expect("admission is capped at the free-slot count");
             model.reset_slot(free);
+            let picked_up = Instant::now();
+            ctx.live_slots.fetch_add(1, Ordering::Relaxed);
+            let trace = ctx.trace.as_ref().map(|_| {
+                let mut b =
+                    TraceBuilder::new(request.id, us_since(ctx.epoch, request.arrival));
+                b.seated(us_since(ctx.epoch, picked_up));
+                b
+            });
             let next_input = request.prompt[0];
             slots[free] = Some(SlotState {
-                picked_up: Instant::now(),
+                picked_up,
                 next_input,
                 prompt_pos: 0,
                 tokens: Vec::with_capacity(request.max_new_tokens),
                 prefill_done: None,
+                trace,
                 request,
             });
         }
@@ -993,7 +1196,10 @@ fn continuous_loop(
                         model.ensure_slots(max_slots);
                     }
                     Err(e) => {
-                        eprintln!("worker: model rebuild after panic failed: {e}");
+                        crate::log!(
+                            Level::Error,
+                            "model rebuild after panic failed err={e}"
+                        );
                         for r in carryover.drain(..) {
                             if !respond_terminal(
                                 ctx,
@@ -1017,6 +1223,12 @@ fn continuous_loop(
         // step that feeds the final prompt token samples the first
         // generated one from the chunk's **last row** (exactly
         // `run_request`'s sequencing, per slot).
+        //
+        // One trace timestamp per step, shared across every slot: the
+        // events record step granularity, not per-slot skew, and the
+        // hot loop pays a single `Instant::now()` when tracing is on
+        // (zero when off).
+        let trace_now = ctx.trace_now_us();
         retired.clear();
         let mut row0 = 0usize;
         for (idx, &i) in step_slots.iter().enumerate() {
@@ -1024,8 +1236,12 @@ fn continuous_loop(
             let last_row = row0 + c - 1;
             row0 += c;
             let st = slots[i].as_mut().expect("was in the step");
-            if st.prompt_pos < st.request.prompt.len() {
+            let was_prefill = st.prompt_pos < st.request.prompt.len();
+            if was_prefill {
                 st.prompt_pos += c;
+                if let (Some(t), Some(b)) = (trace_now, st.trace.as_mut()) {
+                    b.prefill_chunk(t, c as u32);
+                }
                 if st.prompt_pos < st.request.prompt.len() {
                     continue; // mid-prefill: logits unused
                 }
@@ -1039,6 +1255,13 @@ fn continuous_loop(
             let next =
                 sampler.sample(&logits[last_row * vocab..(last_row + 1) * vocab], &mut rng);
             st.tokens.push(next);
+            if let (Some(t), Some(b)) = (trace_now, st.trace.as_mut()) {
+                if was_prefill {
+                    b.first_token(t);
+                } else {
+                    b.decode_step(t);
+                }
+            }
             if st.tokens.len() >= st.request.max_new_tokens
                 || next == crate::model::tokenizer::EOS
                 || len_after[idx] >= max_seq
@@ -1546,6 +1769,116 @@ mod tests {
             "idle workers must keep beating (age {:?})",
             engine.heartbeat_age()
         );
+        engine.shutdown();
+    }
+
+    // ---- observability: traces / profiling / conservation --------
+
+    #[test]
+    fn trace_ring_records_complete_timelines() {
+        // Threshold 0 pins every request into the slow log, so the
+        // test can assert on a deterministic retained timeline.
+        let engine = tiny_engine(EngineConfig {
+            workers: 1,
+            trace_slow_ms: Some(0),
+            ..Default::default()
+        });
+        engine.submit(Request::new(41, vec![10, 20, 30], 4)).unwrap();
+        let r = engine.recv_timeout(Duration::from_secs(30)).expect("response");
+        assert!(r.error.is_none(), "{:?}", r.error);
+        let snap = engine.trace_snapshot().expect("tracing is on");
+        let slow = snap.get("slow").unwrap().as_arr().unwrap();
+        assert_eq!(slow.len(), 1, "threshold 0 pins the request");
+        let t = &slow[0];
+        assert_eq!(t.get("id").unwrap().as_f64(), Some(41.0));
+        assert_eq!(t.get("outcome").unwrap().as_str(), Some("completed"));
+        let events = t.get("events").unwrap().as_arr().unwrap();
+        let kinds: Vec<&str> =
+            events.iter().map(|e| e.get("event").unwrap().as_str().unwrap()).collect();
+        assert_eq!(kinds.first(), Some(&"admitted"));
+        assert_eq!(kinds.get(1), Some(&"seated"));
+        assert_eq!(kinds.last(), Some(&"terminal"));
+        assert!(kinds.contains(&"first_token"), "{kinds:?}");
+        // Timestamps are monotone within the coalesced event stream.
+        let ts: Vec<f64> =
+            events.iter().map(|e| e.get("t_us").unwrap().as_f64().unwrap()).collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]), "{ts:?}");
+        engine.shutdown();
+    }
+
+    #[test]
+    fn shed_requests_trace_and_conserve() {
+        let engine = tiny_engine(EngineConfig {
+            workers: 1,
+            trace_slow_ms: Some(10_000),
+            ..Default::default()
+        });
+        let req = Request::new(7, vec![10, 20], 4).with_deadline(Duration::ZERO);
+        assert!(engine.submit(req).is_err());
+        // A shed is terminal (non-completed) → pinned regardless of
+        // the 10 s threshold.
+        let snap = engine.trace_snapshot().unwrap();
+        let slow = snap.get("slow").unwrap().as_arr().unwrap();
+        assert_eq!(slow.len(), 1);
+        assert_eq!(slow[0].get("outcome").unwrap().as_str(), Some("deadline_exceeded"));
+        // The shed counted as admitted-with-immediate-terminal:
+        // conservation holds with zero inflight.
+        let m = engine.snapshot();
+        assert_eq!(m.get("admitted").unwrap().as_f64(), Some(1.0));
+        assert_eq!(m.get("inflight").unwrap().as_f64(), Some(0.0));
+        assert!(matches!(m.get("conserved"), Some(Json::Bool(true))));
+        engine.shutdown();
+    }
+
+    #[test]
+    fn layer_profile_attributes_decode_time() {
+        let engine = tiny_engine(EngineConfig {
+            workers: 1,
+            profile_layers: true,
+            ..Default::default()
+        });
+        engine.submit(Request::new(1, vec![10, 20, 30], 6)).unwrap();
+        let r = engine.recv_timeout(Duration::from_secs(30)).expect("response");
+        assert!(r.error.is_none(), "{:?}", r.error);
+        let snap = engine.snapshot();
+        let layers = snap.get("layers").expect("--profile-layers adds rows").as_arr().unwrap();
+        assert!(!layers.is_empty());
+        let names: Vec<&str> =
+            layers.iter().map(|l| l.get("layer").unwrap().as_str().unwrap()).collect();
+        assert!(names.contains(&"lm_head"), "{names:?}");
+        assert!(names.iter().any(|n| n.ends_with(".gate")), "{names:?}");
+        assert!(names.iter().any(|n| n.ends_with(".wq")), "{names:?}");
+        for l in layers {
+            assert!(l.get("count").unwrap().as_f64().unwrap() > 0.0);
+            assert!(l.get("total_ns").unwrap().as_f64().unwrap() > 0.0);
+        }
+        engine.shutdown();
+    }
+
+    #[test]
+    fn profiling_off_adds_no_layer_rows() {
+        let engine = tiny_engine(EngineConfig { workers: 1, ..Default::default() });
+        engine.submit(Request::new(1, vec![10, 20], 2)).unwrap();
+        let r = engine.recv_timeout(Duration::from_secs(30)).expect("response");
+        assert!(r.error.is_none());
+        assert!(engine.snapshot().get("layers").is_none());
+        assert!(engine.trace_snapshot().is_none(), "tracing defaults off");
+        engine.shutdown();
+    }
+
+    #[test]
+    fn live_slots_drains_to_zero() {
+        let engine = tiny_engine(EngineConfig { workers: 1, ..Default::default() });
+        for i in 0..6 {
+            engine.submit(Request::new(i, vec![10 + i as u32, 20], 8)).unwrap();
+        }
+        for _ in 0..6 {
+            let r = engine.recv_timeout(Duration::from_secs(60)).expect("response");
+            assert!(r.error.is_none(), "{:?}", r.error);
+        }
+        assert_eq!(engine.live_slots(), 0, "all slots retired");
+        assert!(engine.uptime() > Duration::ZERO);
+        assert_eq!(engine.queue_depth(), 0);
         engine.shutdown();
     }
 

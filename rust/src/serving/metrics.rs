@@ -55,11 +55,21 @@ struct Hists {
     queue: LatencyHistogram,
     prefill: LatencyHistogram,
     decode: LatencyHistogram,
+    /// Admitted → terminal latency over EVERY terminal path — failed,
+    /// deadline-exceeded and cancelled requests included, so p99 under
+    /// overload reflects the shed traffic, not just the survivors.
     total: LatencyHistogram,
+    /// The same `total` observations split by terminal outcome
+    /// (indexed by [`OUTCOMES`]) — the `outcome` label of the
+    /// Prometheus `rsr_request_total_us` histogram.
+    total_by_outcome: [LatencyHistogram; 4],
     /// Time to first token: queue wait + prefill, per completed
     /// request — the latency chunked prefill exists to cut.
     ttft: LatencyHistogram,
 }
+
+/// The four terminal outcomes, in `total_by_outcome` index order.
+pub const OUTCOMES: [&str; 4] = ["completed", "failed", "deadline_exceeded", "cancelled"];
 
 impl Metrics {
     /// Fresh metrics.
@@ -81,22 +91,35 @@ impl Metrics {
         h.prefill.record(timing.prefill);
         h.decode.record(timing.decode);
         h.total.record(timing.total());
+        h.total_by_outcome[0].record(timing.total());
         h.ttft.record(timing.queue + timing.prefill);
     }
 
-    /// Record a failure.
-    pub fn record_failure(&self) {
+    /// Record a failure. `total` is the request's admitted → terminal
+    /// wall time (every terminal path enters the total histogram).
+    pub fn record_failure(&self, total: Duration) {
         self.failed.fetch_add(1, Ordering::Relaxed);
+        let mut h = self.hist.lock().unwrap();
+        h.total.record(total);
+        h.total_by_outcome[1].record(total);
     }
 
-    /// Record a deadline-exceeded retirement.
-    pub fn record_deadline_exceeded(&self) {
+    /// Record a deadline-exceeded retirement with its admitted →
+    /// terminal wall time.
+    pub fn record_deadline_exceeded(&self, total: Duration) {
         self.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+        let mut h = self.hist.lock().unwrap();
+        h.total.record(total);
+        h.total_by_outcome[2].record(total);
     }
 
-    /// Record a client cancellation.
-    pub fn record_cancelled(&self) {
+    /// Record a client cancellation with its admitted → terminal wall
+    /// time.
+    pub fn record_cancelled(&self, total: Duration) {
         self.cancelled.fetch_add(1, Ordering::Relaxed);
+        let mut h = self.hist.lock().unwrap();
+        h.total.record(total);
+        h.total_by_outcome[3].record(total);
     }
 
     /// Record one supervised worker panic.
@@ -122,8 +145,28 @@ impl Metrics {
         }
     }
 
-    /// Snapshot as JSON (for the CLI `metrics` output and tests).
+    /// Snapshot as JSON (for the `metrics` wire command, the CLI, and
+    /// tests). Phase objects carry the raw cumulative buckets so the
+    /// Prometheus renderer ([`crate::util::obs::render_prometheus`])
+    /// and the JSON consumers read one schema.
     pub fn snapshot(&self) -> Json {
+        // Conservation: every admitted request is either terminal or
+        // still inflight. Terminal counters are read BEFORE `admitted`
+        // — each terminal increment is preceded by its own admitted
+        // increment (synchronized through the queue handoff), so this
+        // read order keeps the residual non-negative under concurrent
+        // traffic.
+        let completed = self.completed.load(Ordering::Relaxed);
+        let failed = self.failed.load(Ordering::Relaxed);
+        let deadline = self.deadline_exceeded.load(Ordering::Relaxed);
+        let cancelled = self.cancelled.load(Ordering::Relaxed);
+        let admitted = self.admitted.load(Ordering::Relaxed);
+        let terminal = completed + failed + deadline + cancelled;
+        debug_assert!(
+            admitted >= terminal,
+            "conservation violated: admitted {admitted} < terminal {terminal}"
+        );
+        let inflight = admitted.saturating_sub(terminal);
         let h = self.hist.lock().unwrap();
         let phase = |hist: &LatencyHistogram| {
             Json::obj(vec![
@@ -132,6 +175,21 @@ impl Metrics {
                 ("p50_us", Json::num(hist.percentile_us(50.0) as f64)),
                 ("p99_us", Json::num(hist.percentile_us(99.0) as f64)),
                 ("max_us", Json::num(hist.max_us() as f64)),
+                ("sum_us", Json::num(hist.sum_us() as f64)),
+                (
+                    "buckets",
+                    Json::Arr(
+                        hist.buckets()
+                            .into_iter()
+                            .map(|(le, cum)| {
+                                Json::Arr(vec![
+                                    Json::num(le as f64),
+                                    Json::num(cum as f64),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
             ])
         };
         let steps = self.decode_steps.load(Ordering::Relaxed);
@@ -151,20 +209,29 @@ impl Metrics {
         let p_tokens = self.prefill_tokens.load(Ordering::Relaxed);
         let p_ns = self.prefill_wall_ns.load(Ordering::Relaxed);
         let ptps = if p_ns > 0 { p_tokens as f64 / (p_ns as f64 / 1e9) } else { 0.0 };
+        let total_by_outcome = Json::obj(
+            OUTCOMES
+                .iter()
+                .zip(h.total_by_outcome.iter())
+                .map(|(name, hist)| (*name, phase(hist)))
+                .collect(),
+        );
         Json::obj(vec![
-            ("admitted", Json::num(self.admitted.load(Ordering::Relaxed) as f64)),
+            ("admitted", Json::num(admitted as f64)),
             ("rejected", Json::num(self.rejected.load(Ordering::Relaxed) as f64)),
-            ("completed", Json::num(self.completed.load(Ordering::Relaxed) as f64)),
-            ("failed", Json::num(self.failed.load(Ordering::Relaxed) as f64)),
+            ("completed", Json::num(completed as f64)),
+            ("failed", Json::num(failed as f64)),
+            // Conservation: admitted == completed + failed +
+            // deadline_exceeded + cancelled + inflight (debug-asserted
+            // above; `conserved` lets scrapers check it live).
+            ("inflight", Json::num(inflight as f64)),
+            ("conserved", Json::Bool(admitted >= terminal)),
             // Lifecycle counters (`_total` naming for dashboards;
             // `rejected_total` mirrors `rejected` — the admission-shed
             // count — under the same convention).
             ("rejected_total", Json::num(self.rejected.load(Ordering::Relaxed) as f64)),
-            (
-                "deadline_exceeded_total",
-                Json::num(self.deadline_exceeded.load(Ordering::Relaxed) as f64),
-            ),
-            ("cancelled_total", Json::num(self.cancelled.load(Ordering::Relaxed) as f64)),
+            ("deadline_exceeded_total", Json::num(deadline as f64)),
+            ("cancelled_total", Json::num(cancelled as f64)),
             ("panics_total", Json::num(self.panics.load(Ordering::Relaxed) as f64)),
             ("tokens_out", Json::num(tokens as f64)),
             ("decode_steps", Json::num(steps as f64)),
@@ -177,6 +244,7 @@ impl Metrics {
             ("prefill", phase(&h.prefill)),
             ("decode", phase(&h.decode)),
             ("total", phase(&h.total)),
+            ("total_by_outcome", total_by_outcome),
         ])
     }
 }
@@ -208,16 +276,25 @@ mod tests {
             5,
             16,
         );
-        m.record_failure();
+        m.record_admission(true);
+        m.record_failure(Duration::from_micros(50));
         let snap = m.snapshot();
-        assert_eq!(snap.get("admitted").unwrap().as_f64(), Some(1.0));
+        assert_eq!(snap.get("admitted").unwrap().as_f64(), Some(2.0));
         assert_eq!(snap.get("rejected").unwrap().as_f64(), Some(1.0));
         assert_eq!(snap.get("completed").unwrap().as_f64(), Some(1.0));
         assert_eq!(snap.get("failed").unwrap().as_f64(), Some(1.0));
         assert_eq!(snap.get("tokens_out").unwrap().as_f64(), Some(5.0));
+        // Both terminal paths entered the total histogram: the 1000 µs
+        // completion AND the 50 µs failure.
         let total = snap.get("total").unwrap();
-        assert_eq!(total.get("count").unwrap().as_f64(), Some(1.0));
-        assert!(total.get("mean_us").unwrap().as_f64().unwrap() >= 1000.0);
+        assert_eq!(total.get("count").unwrap().as_f64(), Some(2.0));
+        assert!(total.get("max_us").unwrap().as_f64().unwrap() >= 1000.0);
+        let by = snap.get("total_by_outcome").unwrap();
+        assert_eq!(by.get("completed").unwrap().get("count").unwrap().as_f64(), Some(1.0));
+        assert_eq!(by.get("failed").unwrap().get("count").unwrap().as_f64(), Some(1.0));
+        // Conservation: 2 admitted == 1 completed + 1 failed + 0 inflight.
+        assert_eq!(snap.get("inflight").unwrap().as_f64(), Some(0.0));
+        assert!(matches!(snap.get("conserved"), Some(Json::Bool(true))));
         // TTFT = queue + prefill = 300us; 16 prompt tokens over 200us
         // of prefill = 80k tok/s.
         assert_eq!(snap.get("prefill_tokens").unwrap().as_f64(), Some(16.0));
@@ -239,6 +316,7 @@ mod tests {
         m.record_decode_step(4, Duration::from_millis(1));
         m.record_decode_step(3, Duration::from_millis(1));
         m.record_decode_step(1, Duration::from_millis(2));
+        m.record_admission(true);
         m.record(&Timing::default(), 8, 4);
         let snap = m.snapshot();
         assert_eq!(snap.get("decode_steps").unwrap().as_f64(), Some(3.0));
@@ -253,15 +331,57 @@ mod tests {
     fn lifecycle_counters_snapshot() {
         let m = Metrics::new();
         m.record_admission(false);
-        m.record_deadline_exceeded();
-        m.record_deadline_exceeded();
-        m.record_cancelled();
+        for _ in 0..3 {
+            m.record_admission(true);
+        }
+        m.record_deadline_exceeded(Duration::from_micros(40));
+        m.record_deadline_exceeded(Duration::from_micros(60));
+        m.record_cancelled(Duration::from_micros(90));
         m.record_panic();
         let snap = m.snapshot();
         assert_eq!(snap.get("rejected_total").unwrap().as_f64(), Some(1.0));
         assert_eq!(snap.get("deadline_exceeded_total").unwrap().as_f64(), Some(2.0));
         assert_eq!(snap.get("cancelled_total").unwrap().as_f64(), Some(1.0));
         assert_eq!(snap.get("panics_total").unwrap().as_f64(), Some(1.0));
+        // Every shed path entered the outcome-labelled total
+        // histograms — p99 under overload sees the shed traffic.
+        let by = snap.get("total_by_outcome").unwrap();
+        let count_of = |outcome: &str| {
+            by.get(outcome).unwrap().get("count").unwrap().as_f64().unwrap()
+        };
+        assert_eq!(count_of("deadline_exceeded"), 2.0);
+        assert_eq!(count_of("cancelled"), 1.0);
+        assert_eq!(count_of("completed"), 0.0);
+        assert_eq!(snap.get("total").unwrap().get("count").unwrap().as_f64(), Some(3.0));
+        assert_eq!(snap.get("inflight").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn snapshot_phase_buckets_are_cumulative() {
+        let m = Metrics::new();
+        m.record_admission(true);
+        m.record(
+            &Timing {
+                queue: Duration::from_micros(3),
+                prefill: Duration::from_micros(5),
+                decode: Duration::from_micros(9),
+            },
+            1,
+            1,
+        );
+        let snap = m.snapshot();
+        let buckets = snap.get("total").unwrap().get("buckets").unwrap();
+        let arr = buckets.as_arr().unwrap();
+        assert_eq!(arr.len(), 25, "one pair per finite bucket");
+        let mut prev = 0.0;
+        for pair in arr {
+            let p = pair.as_arr().unwrap();
+            let cum = p[1].as_f64().unwrap();
+            assert!(cum >= prev, "buckets must be cumulative");
+            prev = cum;
+        }
+        assert_eq!(prev, 1.0);
+        assert_eq!(snap.get("total").unwrap().get("sum_us").unwrap().as_f64(), Some(17.0));
     }
 
     #[test]

@@ -32,6 +32,7 @@ use super::router::Router;
 use crate::error::{Error, Result};
 use crate::model::tokenizer::Tokenizer;
 use crate::util::json::Json;
+use crate::util::obs::{render_prometheus, ReplicaScrape};
 
 /// Hard ceiling on waiting for a response when the request carries no
 /// deadline — the pre-deadline behavior.
@@ -113,8 +114,23 @@ impl ResponseHub {
     }
 }
 
+/// Static facts the `status` wire command reports alongside the live
+/// gauges: what is being served and from which artifacts. Filled by
+/// `rsr serve` from its resolved flags.
+#[derive(Clone, Debug, Default)]
+pub struct ServerIdentity {
+    /// Model description (config summary or generation seed).
+    pub model: String,
+    /// `--plans` directory, when serving packed `.rsrz` artifacts.
+    pub plan_dir: Option<String>,
+    /// `--profile` path, when serving under a `.rsrt` tuned profile.
+    pub tune_profile: Option<String>,
+}
+
 /// The TCP server: accepts connections, parses request lines, routes
-/// them, and writes response lines.
+/// them, and writes response lines. Lines carrying a `cmd` key are
+/// control commands (`metrics` / `status` / `trace`) answered from the
+/// engines' observability surface instead of the inference path.
 pub struct Server {
     router: Arc<Router>,
     hub: Arc<ResponseHub>,
@@ -126,6 +142,8 @@ pub struct Server {
     /// (the `--default-deadline-ms` flag). `None` = unbounded, the
     /// pre-deadline behavior.
     default_deadline: Option<Duration>,
+    /// Identity reported by the `status` command.
+    identity: Arc<ServerIdentity>,
 }
 
 impl Server {
@@ -137,6 +155,7 @@ impl Server {
             hub,
             next_id: Arc::new(AtomicU64::new(1)),
             default_deadline: None,
+            identity: Arc::new(ServerIdentity::default()),
         }
     }
 
@@ -144,6 +163,12 @@ impl Server {
     /// set its own `deadline_ms` (the `--default-deadline-ms` flag).
     pub fn with_default_deadline(mut self, budget: Duration) -> Self {
         self.default_deadline = Some(budget);
+        self
+    }
+
+    /// Attach the identity the `status` command reports.
+    pub fn with_identity(mut self, identity: ServerIdentity) -> Self {
+        self.identity = Arc::new(identity);
         self
     }
 
@@ -174,8 +199,11 @@ impl Server {
                     let hub = Arc::clone(&self.hub);
                     let next_id = Arc::clone(&self.next_id);
                     let deadline = self.default_deadline;
+                    let identity = Arc::clone(&self.identity);
                     conns.push(std::thread::spawn(move || {
-                        let _ = handle_connection(stream, router, hub, next_id, deadline);
+                        let _ = handle_connection(
+                            stream, router, hub, next_id, deadline, identity,
+                        );
                     }));
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -197,6 +225,7 @@ fn handle_connection(
     hub: Arc<ResponseHub>,
     next_id: Arc<AtomicU64>,
     default_deadline: Option<Duration>,
+    identity: Arc<ServerIdentity>,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut writer = stream.try_clone()?;
@@ -208,8 +237,24 @@ fn handle_connection(
         if line.trim().is_empty() {
             continue;
         }
+        let json = match Json::parse(&line) {
+            Ok(j) => j,
+            Err(e) => {
+                let reply =
+                    Json::obj(vec![("error", Json::str(format!("bad json: {e}")))]);
+                writeln!(writer, "{}", reply.to_string())?;
+                continue;
+            }
+        };
+        // Control commands bypass the inference path: they read the
+        // engines' observability surface and answer immediately.
+        if let Some(cmd) = json.get("cmd").and_then(|c| c.as_str()) {
+            let reply = control_response(cmd, &json, &router, &identity);
+            writeln!(writer, "{}", reply.to_string())?;
+            continue;
+        }
         let internal_id = next_id.fetch_add(1, Ordering::Relaxed);
-        match parse_request_line(&line, internal_id, &tokenizer, default_deadline) {
+        match parse_request(&json, internal_id, &tokenizer, default_deadline) {
             Ok((client_id, request)) => {
                 let reply = match route_and_wait(&router, &hub, request, Some(&stream)) {
                     Ok(resp) => render_response(client_id, &resp, &tokenizer),
@@ -229,13 +274,119 @@ fn handle_connection(
     Ok(())
 }
 
-fn parse_request_line(
-    line: &str,
+/// Everything one replica contributes to a scrape.
+fn scrape_replicas(router: &Router) -> Vec<ReplicaScrape> {
+    (0..router.replicas())
+        .map(|i| {
+            let e = router.engine(i);
+            ReplicaScrape {
+                replica: i,
+                snapshot: e.snapshot(),
+                queue_depth: e.queue_depth() as u64,
+                inflight: e.inflight() as u64,
+                live_slots: e.live_slots() as u64,
+                heartbeat_ms: e.heartbeat_age().as_millis() as u64,
+            }
+        })
+        .collect()
+}
+
+/// Server uptime: the oldest replica's engine uptime (replicas start
+/// together at serve time).
+fn uptime_s(router: &Router) -> f64 {
+    (0..router.replicas())
+        .map(|i| router.engine(i).uptime().as_secs_f64())
+        .fold(0.0, f64::max)
+}
+
+/// Per-replica gauge object shared by `metrics` and `status`.
+fn replica_gauges(router: &Router, i: usize) -> Vec<(&'static str, Json)> {
+    let e = router.engine(i);
+    vec![
+        ("replica", Json::num(i as f64)),
+        ("queue_depth", Json::num(e.queue_depth() as f64)),
+        ("inflight", Json::num(e.inflight() as f64)),
+        ("live_slots", Json::num(e.live_slots() as f64)),
+        ("heartbeat_ms", Json::num(e.heartbeat_age().as_millis() as f64)),
+    ]
+}
+
+/// Answer one control command (`metrics` / `status` / `trace`).
+fn control_response(
+    cmd: &str,
+    json: &Json,
+    router: &Router,
+    identity: &ServerIdentity,
+) -> Json {
+    match cmd {
+        "metrics" => {
+            if json.get("format").and_then(|f| f.as_str()) == Some("prom") {
+                let text = render_prometheus(uptime_s(router), &scrape_replicas(router));
+                Json::obj(vec![("prom", Json::str(text))])
+            } else {
+                let replicas: Vec<Json> = (0..router.replicas())
+                    .map(|i| {
+                        let mut fields = replica_gauges(router, i);
+                        fields.push(("metrics", router.engine(i).snapshot()));
+                        Json::obj(fields)
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("uptime_s", Json::num(uptime_s(router))),
+                    ("replicas", Json::Arr(replicas)),
+                ])
+            }
+        }
+        "status" => {
+            let replicas: Vec<Json> = (0..router.replicas())
+                .map(|i| Json::obj(replica_gauges(router, i)))
+                .collect();
+            let opt = |v: &Option<String>| match v {
+                Some(s) => Json::str(s.clone()),
+                None => Json::Null,
+            };
+            Json::obj(vec![
+                ("model", Json::str(identity.model.clone())),
+                ("plan_dir", opt(&identity.plan_dir)),
+                ("tune_profile", opt(&identity.tune_profile)),
+                ("uptime_s", Json::num(uptime_s(router))),
+                ("replicas", Json::Arr(replicas)),
+            ])
+        }
+        "trace" => {
+            let mut enabled = false;
+            let replicas: Vec<Json> = (0..router.replicas())
+                .map(|i| {
+                    let t = match router.engine(i).trace_snapshot() {
+                        Some(t) => {
+                            enabled = true;
+                            t
+                        }
+                        None => Json::Null,
+                    };
+                    Json::obj(vec![("replica", Json::num(i as f64)), ("trace", t)])
+                })
+                .collect();
+            Json::obj(vec![
+                ("enabled", Json::Bool(enabled)),
+                ("replicas", Json::Arr(replicas)),
+            ])
+        }
+        other => Json::obj(vec![(
+            "error",
+            Json::str(format!(
+                "unknown cmd {other:?} (expected metrics, status or trace)"
+            )),
+        )]),
+    }
+}
+
+fn parse_request(
+    json: &Json,
     internal_id: u64,
     tokenizer: &Tokenizer,
     default_deadline: Option<Duration>,
 ) -> Result<(u64, Request)> {
-    let json = Json::parse(line).map_err(|e| Error::Serving(format!("bad json: {e}")))?;
     let client_id = json
         .get("id")
         .and_then(|x| x.as_f64())

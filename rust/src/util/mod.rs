@@ -9,10 +9,13 @@
 //! * [`timer`] — wall-clock measurement helpers,
 //! * [`json`] — a minimal JSON writer for metrics and bench reports,
 //! * [`threadpool`] — a scoped thread pool over `std::thread`,
-//! * [`bitops`] — bit-packing helpers shared by the kernels.
+//! * [`bitops`] — bit-packing helpers shared by the kernels,
+//! * [`obs`] — observability: leveled logging, request trace
+//!   timelines, per-layer profiling, Prometheus exposition.
 
 pub mod bitops;
 pub mod json;
+pub mod obs;
 pub mod rng;
 pub mod stats;
 pub mod threadpool;

@@ -1,0 +1,842 @@
+//! Observability substrate for the serving stack: a tiny leveled
+//! logger, per-request trace timelines ([`TraceRing`]), per-layer
+//! execution profiling ([`LayerProfile`]), and a Prometheus
+//! text-exposition renderer over the metrics snapshot.
+//!
+//! Everything here follows one overhead policy (see ARCHITECTURE.md
+//! §Observability): when the serving flags are at their defaults the
+//! hot path sees a single branch on a disabled `Option`/level — no
+//! locks, no allocation, no `Instant::now()`. The only lock any
+//! enabled facility takes on the request path is one short
+//! [`TraceRing`] mutex at request-terminal time.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use super::json::Json;
+
+// ---------------------------------------------------------------- //
+// Leveled logging                                                   //
+// ---------------------------------------------------------------- //
+
+/// Log severity, ordered: a configured level admits itself and
+/// everything more severe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    /// Unrecoverable or data-losing conditions.
+    Error = 0,
+    /// Degraded but self-healing conditions (panic recovery, stale
+    /// profiles, dropped responses).
+    Warn = 1,
+    /// Lifecycle milestones (startup knobs, worker respawn).
+    Info = 2,
+    /// Per-request chatter; off by default.
+    Debug = 3,
+}
+
+impl Level {
+    /// Parse a `--log-level` value.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+
+    /// Fixed-width lowercase name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// Process-wide threshold; `Info` until `rsr serve --log-level`
+/// (or a test) lowers/raises it.
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Set the process-wide log threshold.
+pub fn set_log_level(level: Level) {
+    LOG_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Current process-wide log threshold.
+pub fn log_level() -> Level {
+    match LOG_LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        _ => Level::Debug,
+    }
+}
+
+/// Would a line at `level` be emitted right now? One relaxed atomic
+/// load — the entire cost of a disabled `log!` call site.
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= LOG_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Milliseconds since the first observability call in this process
+/// (monotonic; the logger's timestamp base).
+fn now_ms() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_millis() as u64
+}
+
+/// Per-call-site rate limiter: at most [`Gate::BURST`] lines per
+/// one-second window, with a summary line counting what was dropped.
+/// Lock-free — three relaxed atomics — so a log storm in the worker
+/// loop cannot serialize workers on a logging mutex.
+pub struct Gate {
+    window_start_ms: AtomicU64,
+    in_window: AtomicU64,
+    suppressed: AtomicU64,
+}
+
+impl Gate {
+    /// Lines admitted per window before suppression kicks in.
+    pub const BURST: u64 = 10;
+    const WINDOW_MS: u64 = 1000;
+
+    /// A fresh gate (used as a `static` by the `log!` macro).
+    pub const fn new() -> Self {
+        Self {
+            window_start_ms: AtomicU64::new(0),
+            in_window: AtomicU64::new(0),
+            suppressed: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Emit one log line through `gate` (the `log!` macro's backend —
+/// call the macro, not this). Format:
+/// `[   12.345s] warn  module::path: message key=value`.
+pub fn emit(gate: &Gate, level: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    let now = now_ms();
+    let start = gate.window_start_ms.load(Ordering::Relaxed);
+    if now.saturating_sub(start) >= Gate::WINDOW_MS {
+        // One thread wins the window roll; losers just log into it.
+        if gate
+            .window_start_ms
+            .compare_exchange(start, now, Ordering::Relaxed, Ordering::Relaxed)
+            .is_ok()
+        {
+            gate.in_window.store(0, Ordering::Relaxed);
+            let dropped = gate.suppressed.swap(0, Ordering::Relaxed);
+            if dropped > 0 {
+                eprintln!(
+                    "[{:>9.3}s] warn  {target}: rate-limited suppressed={dropped}",
+                    now as f64 / 1000.0
+                );
+            }
+        }
+    }
+    if gate.in_window.fetch_add(1, Ordering::Relaxed) >= Gate::BURST {
+        gate.suppressed.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
+    eprintln!("[{:>9.3}s] {:5} {target}: {args}", now as f64 / 1000.0, level.name());
+}
+
+/// Leveled, rate-limited logging. Usage:
+///
+/// ```ignore
+/// crate::log!(Level::Warn, "worker panic recovered worker={w} step={s}");
+/// ```
+///
+/// Structured context goes in trailing `key=value` tokens so lines
+/// stay grep-able. A disabled level costs one relaxed atomic load;
+/// each call site gets its own [`Gate`](util::obs::Gate) so one
+/// storming site cannot silence another.
+#[macro_export]
+macro_rules! log {
+    ($lvl:expr, $($arg:tt)*) => {{
+        if $crate::util::obs::enabled($lvl) {
+            static GATE: $crate::util::obs::Gate = $crate::util::obs::Gate::new();
+            $crate::util::obs::emit(&GATE, $lvl, module_path!(), format_args!($($arg)*));
+        }
+    }};
+}
+
+// ---------------------------------------------------------------- //
+// Per-request trace timelines                                       //
+// ---------------------------------------------------------------- //
+
+/// One checkpoint in a request's lifetime. Timestamps are µs since
+/// the engine's start epoch (monotonic within one engine).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEventKind {
+    /// The engine took responsibility for the request.
+    Admitted,
+    /// A worker seated it into a decode slot (or picked it up
+    /// sequentially).
+    Seated,
+    /// One chunked-prefill step consumed `tokens` prompt tokens.
+    PrefillChunk {
+        /// Prompt tokens consumed by this step.
+        tokens: u32,
+    },
+    /// Prefill finished and the first output token was sampled.
+    FirstToken,
+    /// Coalesced decode steps: `steps` lockstep steps between this
+    /// event's `t_us` (first step) and `last_t_us` (latest step).
+    /// Updated in place — a 10 000-token generation is one event.
+    DecodeSteps {
+        /// Steps coalesced into this event.
+        steps: u32,
+        /// Timestamp of the most recent step (µs since engine epoch).
+        last_t_us: u64,
+    },
+    /// Exactly-one terminal outcome (PR 7 invariant):
+    /// `completed` / `failed` / `deadline_exceeded` / `cancelled`.
+    Terminal {
+        /// The outcome label.
+        outcome: &'static str,
+    },
+}
+
+/// A timestamped trace event.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// µs since the engine's start epoch.
+    pub t_us: u64,
+    /// What happened.
+    pub kind: TraceEventKind,
+}
+
+/// A completed request timeline, admitted → terminal.
+#[derive(Clone, Debug)]
+pub struct RequestTrace {
+    /// Request id.
+    pub id: u64,
+    /// Terminal outcome label.
+    pub outcome: &'static str,
+    /// Admitted → terminal wall time in µs.
+    pub total_us: u64,
+    /// The ordered events.
+    pub events: Vec<TraceEvent>,
+}
+
+impl RequestTrace {
+    /// Render one trace as JSON (the `trace` wire schema).
+    pub fn to_json(&self) -> Json {
+        let events: Vec<Json> = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut fields = vec![("t_us", Json::Num(e.t_us as f64))];
+                match &e.kind {
+                    TraceEventKind::Admitted => fields.push(("event", Json::str("admitted"))),
+                    TraceEventKind::Seated => fields.push(("event", Json::str("seated"))),
+                    TraceEventKind::PrefillChunk { tokens } => {
+                        fields.push(("event", Json::str("prefill_chunk")));
+                        fields.push(("tokens", Json::Num(*tokens as f64)));
+                    }
+                    TraceEventKind::FirstToken => {
+                        fields.push(("event", Json::str("first_token")))
+                    }
+                    TraceEventKind::DecodeSteps { steps, last_t_us } => {
+                        fields.push(("event", Json::str("decode_steps")));
+                        fields.push(("steps", Json::Num(*steps as f64)));
+                        fields.push(("last_t_us", Json::Num(*last_t_us as f64)));
+                    }
+                    TraceEventKind::Terminal { outcome } => {
+                        fields.push(("event", Json::str("terminal")));
+                        fields.push(("outcome", Json::str(outcome)));
+                    }
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("outcome", Json::str(self.outcome)),
+            ("total_us", Json::Num(self.total_us as f64)),
+            ("events", Json::Arr(events)),
+        ])
+    }
+}
+
+/// Slot-local timeline accumulator. Lives inside the worker's
+/// `SlotState`, so recording an event is a plain `Vec` push with no
+/// synchronization; the shared ring is only touched once, at
+/// [`finish`](TraceBuilder::finish) time.
+#[derive(Debug)]
+pub struct TraceBuilder {
+    id: u64,
+    admitted_us: u64,
+    events: Vec<TraceEvent>,
+}
+
+impl TraceBuilder {
+    /// Start a timeline at its admission timestamp.
+    pub fn new(id: u64, admitted_us: u64) -> Self {
+        let mut events = Vec::with_capacity(8);
+        events.push(TraceEvent { t_us: admitted_us, kind: TraceEventKind::Admitted });
+        Self { id, admitted_us, events }
+    }
+
+    /// The worker seated the request.
+    pub fn seated(&mut self, t_us: u64) {
+        self.events.push(TraceEvent { t_us, kind: TraceEventKind::Seated });
+    }
+
+    /// One prefill step consumed `tokens` prompt tokens.
+    pub fn prefill_chunk(&mut self, t_us: u64, tokens: u32) {
+        self.events
+            .push(TraceEvent { t_us, kind: TraceEventKind::PrefillChunk { tokens } });
+    }
+
+    /// Prefill done; first output token sampled.
+    pub fn first_token(&mut self, t_us: u64) {
+        self.events.push(TraceEvent { t_us, kind: TraceEventKind::FirstToken });
+    }
+
+    /// One decode step — coalesced in place into the trailing
+    /// `DecodeSteps` event (no per-step allocation).
+    pub fn decode_step(&mut self, t_us: u64) {
+        if let Some(TraceEvent {
+            kind: TraceEventKind::DecodeSteps { steps, last_t_us }, ..
+        }) = self.events.last_mut()
+        {
+            *steps += 1;
+            *last_t_us = t_us;
+            return;
+        }
+        self.events.push(TraceEvent {
+            t_us,
+            kind: TraceEventKind::DecodeSteps { steps: 1, last_t_us: t_us },
+        });
+    }
+
+    /// Seal the timeline with its terminal outcome.
+    pub fn finish(mut self, t_us: u64, outcome: &'static str) -> RequestTrace {
+        self.events.push(TraceEvent { t_us, kind: TraceEventKind::Terminal { outcome } });
+        RequestTrace {
+            id: self.id,
+            outcome,
+            total_us: t_us.saturating_sub(self.admitted_us),
+            events: self.events,
+        }
+    }
+}
+
+/// Fixed-capacity ring of recent request traces plus a retained
+/// slow-log: any trace that is slower than the configured threshold
+/// *or* did not complete cleanly is pinned so a burst of fast traffic
+/// cannot evict the interesting timeline before anyone scrapes it.
+pub struct TraceRing {
+    capacity: usize,
+    slow_capacity: usize,
+    slow_threshold_us: u64,
+    inner: Mutex<RingInner>,
+}
+
+struct RingInner {
+    recent: VecDeque<RequestTrace>,
+    slow: VecDeque<RequestTrace>,
+}
+
+impl TraceRing {
+    /// Default recent-ring capacity.
+    pub const DEFAULT_CAPACITY: usize = 256;
+    /// Default slow-log capacity.
+    pub const DEFAULT_SLOW_CAPACITY: usize = 64;
+
+    /// Ring with the given capacities and slow threshold.
+    pub fn new(capacity: usize, slow_capacity: usize, slow_threshold: Duration) -> Self {
+        Self {
+            capacity: capacity.max(1),
+            slow_capacity: slow_capacity.max(1),
+            slow_threshold_us: slow_threshold.as_micros() as u64,
+            inner: Mutex::new(RingInner {
+                recent: VecDeque::new(),
+                slow: VecDeque::new(),
+            }),
+        }
+    }
+
+    /// Ring with default capacities for a `--trace-slow-ms` threshold.
+    pub fn with_threshold(slow_threshold: Duration) -> Self {
+        Self::new(Self::DEFAULT_CAPACITY, Self::DEFAULT_SLOW_CAPACITY, slow_threshold)
+    }
+
+    /// Record a finished trace: one short lock per request terminal —
+    /// never on the decode hot path.
+    pub fn record(&self, trace: RequestTrace) {
+        let pin =
+            trace.outcome != "completed" || trace.total_us >= self.slow_threshold_us;
+        let mut g = self.inner.lock().unwrap();
+        if pin {
+            if g.slow.len() >= self.slow_capacity {
+                g.slow.pop_front();
+            }
+            g.slow.push_back(trace.clone());
+        }
+        if g.recent.len() >= self.capacity {
+            g.recent.pop_front();
+        }
+        g.recent.push_back(trace);
+    }
+
+    /// Traces currently in the recent ring.
+    pub fn recent_len(&self) -> usize {
+        self.inner.lock().unwrap().recent.len()
+    }
+
+    /// Traces currently pinned in the slow-log.
+    pub fn slow_len(&self) -> usize {
+        self.inner.lock().unwrap().slow.len()
+    }
+
+    /// Dump both rings as JSON (the `trace` wire command payload).
+    pub fn snapshot(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        Json::obj(vec![
+            ("recent", Json::Arr(g.recent.iter().map(|t| t.to_json()).collect())),
+            ("slow", Json::Arr(g.slow.iter().map(|t| t.to_json()).collect())),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------- //
+// Per-layer execution profiling                                     //
+// ---------------------------------------------------------------- //
+
+/// Lock-free per-(layer, backend) timing aggregate. The executor
+/// records into two relaxed atomics; readers snapshot whenever.
+pub struct LayerProbe {
+    count: AtomicU64,
+    total_ns: AtomicU64,
+}
+
+impl LayerProbe {
+    /// A zeroed probe.
+    pub fn new() -> Self {
+        Self { count: AtomicU64::new(0), total_ns: AtomicU64::new(0) }
+    }
+
+    /// Record one timed execution.
+    pub fn record(&self, ns: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.total_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Executions recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Total nanoseconds recorded so far.
+    pub fn total_ns(&self) -> u64 {
+        self.total_ns.load(Ordering::Relaxed)
+    }
+}
+
+/// Registry of layer probes, shared by every worker of an engine.
+/// `probe()` dedupes by (layer, backend), so a worker rebuilding its
+/// model after a panic re-attaches to the same aggregates instead of
+/// forking the history. The mutex is taken at model-(re)build and
+/// snapshot time only — executions touch just the probe atomics.
+pub struct LayerProfile {
+    entries: Mutex<Vec<(String, &'static str, std::sync::Arc<LayerProbe>)>>,
+}
+
+impl LayerProfile {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Self { entries: Mutex::new(Vec::new()) }
+    }
+
+    /// The shared probe for `(layer, backend)`, created on first use.
+    pub fn probe(&self, layer: &str, backend: &'static str) -> std::sync::Arc<LayerProbe> {
+        let mut g = self.entries.lock().unwrap();
+        if let Some((_, _, p)) =
+            g.iter().find(|(l, b, _)| l == layer && *b == backend)
+        {
+            return std::sync::Arc::clone(p);
+        }
+        let p = std::sync::Arc::new(LayerProbe::new());
+        g.push((layer.to_string(), backend, std::sync::Arc::clone(&p)));
+        p
+    }
+
+    /// Registered (layer, backend) pairs.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    /// True when nothing is registered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Render the aggregates, attributing each layer's share of
+    /// `decode_busy_ns` (the engine's total forward time — 0 disables
+    /// the share column). Sorted by total time, heaviest first.
+    pub fn snapshot(&self, decode_busy_ns: u64) -> Json {
+        let g = self.entries.lock().unwrap();
+        let mut rows: Vec<(String, &'static str, u64, u64)> = g
+            .iter()
+            .map(|(l, b, p)| (l.clone(), *b, p.count(), p.total_ns()))
+            .collect();
+        drop(g);
+        rows.sort_by(|a, b| b.3.cmp(&a.3).then_with(|| a.0.cmp(&b.0)));
+        let arr = rows
+            .into_iter()
+            .map(|(layer, backend, count, total_ns)| {
+                let share = if decode_busy_ns > 0 {
+                    total_ns as f64 / decode_busy_ns as f64
+                } else {
+                    0.0
+                };
+                Json::obj(vec![
+                    ("layer", Json::Str(layer)),
+                    ("backend", Json::str(backend)),
+                    ("count", Json::Num(count as f64)),
+                    ("total_ns", Json::Num(total_ns as f64)),
+                    ("share_of_decode_busy", Json::Num(share)),
+                ])
+            })
+            .collect();
+        Json::Arr(arr)
+    }
+}
+
+// ---------------------------------------------------------------- //
+// Prometheus text exposition                                        //
+// ---------------------------------------------------------------- //
+
+/// Escape a label value per the Prometheus text format: backslash,
+/// double-quote and newline.
+pub fn escape_label_value(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Everything one replica contributes to a scrape: its metrics
+/// snapshot (see `Metrics::snapshot`) plus the engine-level gauges
+/// the snapshot cannot know.
+pub struct ReplicaScrape {
+    /// Replica index (the `replica` label).
+    pub replica: usize,
+    /// `Metrics::snapshot()` output.
+    pub snapshot: Json,
+    /// Requests waiting in the bounded queue.
+    pub queue_depth: u64,
+    /// Admitted requests not yet terminal (queued + seated).
+    pub inflight: u64,
+    /// Decode slots currently occupied.
+    pub live_slots: u64,
+    /// Milliseconds since the last worker heartbeat.
+    pub heartbeat_ms: u64,
+}
+
+/// Render a number the text format accepts: non-finite values (a
+/// snapshot mean over zero observations, say) become 0 so a scraper's
+/// NaN guard never trips.
+fn fmt_num(v: f64) -> String {
+    if !v.is_finite() {
+        return "0".into();
+    }
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn num_at(j: &Json, key: &str) -> f64 {
+    j.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0)
+}
+
+/// Append `# HELP`/`# TYPE` headers once per metric.
+fn header(out: &mut String, name: &str, kind: &str, help: &str) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+}
+
+/// Append one histogram family (already-cumulative `buckets` from a
+/// `LatencyHistogram`) under `name` with `labels` (no trailing comma;
+/// may be empty).
+fn render_histogram(out: &mut String, name: &str, labels: &str, phase: &Json) {
+    let count = num_at(phase, "count");
+    let sum = num_at(phase, "sum_us");
+    let sep = if labels.is_empty() { "" } else { "," };
+    if let Some(buckets) = phase.get("buckets").and_then(|b| b.as_arr()) {
+        for b in buckets {
+            if let Some(pair) = b.as_arr() {
+                if pair.len() == 2 {
+                    let le = pair[0].as_f64().unwrap_or(0.0);
+                    let cum = pair[1].as_f64().unwrap_or(0.0);
+                    out.push_str(&format!(
+                        "{name}_bucket{{{labels}{sep}le=\"{}\"}} {}\n",
+                        fmt_num(le),
+                        fmt_num(cum)
+                    ));
+                }
+            }
+        }
+    }
+    out.push_str(&format!(
+        "{name}_bucket{{{labels}{sep}le=\"+Inf\"}} {}\n",
+        fmt_num(count)
+    ));
+    out.push_str(&format!("{name}_sum{{{labels}}} {}\n", fmt_num(sum)));
+    out.push_str(&format!("{name}_count{{{labels}}} {}\n", fmt_num(count)));
+}
+
+/// Render the full Prometheus text exposition for a set of replicas
+/// (the `metrics?format=prom` payload).
+pub fn render_prometheus(uptime_s: f64, replicas: &[ReplicaScrape]) -> String {
+    let mut out = String::with_capacity(4096);
+    header(&mut out, "rsr_uptime_seconds", "gauge", "Seconds since the server started.");
+    out.push_str(&format!("rsr_uptime_seconds {}\n", fmt_num(uptime_s)));
+
+    // (prom name, snapshot key, help) counter triples.
+    let counters: [(&str, &str, &str); 10] = [
+        ("rsr_requests_admitted_total", "admitted", "Requests the engine took responsibility for."),
+        ("rsr_requests_rejected_total", "rejected_total", "Requests shed at admission (queue full)."),
+        ("rsr_requests_completed_total", "completed", "Requests that finished cleanly."),
+        ("rsr_requests_failed_total", "failed", "Requests that failed terminally."),
+        ("rsr_requests_deadline_exceeded_total", "deadline_exceeded_total", "Requests retired past their deadline."),
+        ("rsr_requests_cancelled_total", "cancelled_total", "Requests cancelled by the client."),
+        ("rsr_worker_panics_total", "panics_total", "Supervised worker panics."),
+        ("rsr_tokens_out_total", "tokens_out", "Output tokens generated."),
+        ("rsr_decode_steps_total", "decode_steps", "Lockstep decode steps executed."),
+        ("rsr_prefill_tokens_total", "prefill_tokens", "Prompt tokens prefilled."),
+    ];
+    for (name, key, help) in counters {
+        header(&mut out, name, "counter", help);
+        for r in replicas {
+            out.push_str(&format!(
+                "{name}{{replica=\"{}\"}} {}\n",
+                r.replica,
+                fmt_num(num_at(&r.snapshot, key))
+            ));
+        }
+    }
+
+    let snap_gauges: [(&str, &str, &str); 3] = [
+        ("rsr_batch_occupancy_mean", "batch_occupancy_mean", "Mean live slots per decode step."),
+        ("rsr_tokens_per_sec", "tokens_per_sec", "Decode throughput over busy time."),
+        ("rsr_prefill_tokens_per_sec", "prefill_tokens_per_sec", "Prefill throughput over prefill wall time."),
+    ];
+    for (name, key, help) in snap_gauges {
+        header(&mut out, name, "gauge", help);
+        for r in replicas {
+            out.push_str(&format!(
+                "{name}{{replica=\"{}\"}} {}\n",
+                r.replica,
+                fmt_num(num_at(&r.snapshot, key))
+            ));
+        }
+    }
+
+    let engine_gauges: [(&str, &str); 4] = [
+        ("rsr_queue_depth", "Requests waiting in the bounded queue."),
+        ("rsr_inflight", "Admitted requests not yet terminal."),
+        ("rsr_live_slots", "Decode slots currently occupied."),
+        ("rsr_heartbeat_age_ms", "Milliseconds since the last worker heartbeat."),
+    ];
+    for (name, help) in engine_gauges {
+        header(&mut out, name, "gauge", help);
+        for r in replicas {
+            let v = match name {
+                "rsr_queue_depth" => r.queue_depth as f64,
+                "rsr_inflight" => r.inflight as f64,
+                "rsr_live_slots" => r.live_slots as f64,
+                _ => r.heartbeat_ms as f64,
+            };
+            out.push_str(&format!(
+                "{name}{{replica=\"{}\"}} {}\n",
+                r.replica,
+                fmt_num(v)
+            ));
+        }
+    }
+
+    // Phase histograms (µs). `total` is labelled by terminal outcome.
+    let phases: [(&str, &str, &str); 4] = [
+        ("rsr_request_queue_us", "queue", "Queue wait per request."),
+        ("rsr_request_prefill_us", "prefill", "Prefill time per request."),
+        ("rsr_request_decode_us", "decode", "Decode time per request."),
+        ("rsr_ttft_us", "ttft", "Time to first token per request."),
+    ];
+    for (name, key, help) in phases {
+        header(&mut out, name, "histogram", help);
+        for r in replicas {
+            if let Some(phase) = r.snapshot.get(key) {
+                render_histogram(
+                    &mut out,
+                    name,
+                    &format!("replica=\"{}\"", r.replica),
+                    phase,
+                );
+            }
+        }
+    }
+    header(
+        &mut out,
+        "rsr_request_total_us",
+        "histogram",
+        "Admitted-to-terminal latency per request, labelled by outcome.",
+    );
+    for r in replicas {
+        if let Some(Json::Obj(by_outcome)) = r.snapshot.get("total_by_outcome") {
+            for (outcome, phase) in by_outcome {
+                render_histogram(
+                    &mut out,
+                    "rsr_request_total_us",
+                    &format!(
+                        "replica=\"{}\",outcome=\"{}\"",
+                        r.replica,
+                        escape_label_value(outcome)
+                    ),
+                    phase,
+                );
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering_and_parse() {
+        assert!(Level::Error < Level::Debug);
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("verbose"), None);
+        // Threshold gating (restore Info for other tests in this
+        // process — the level is global).
+        set_log_level(Level::Error);
+        assert!(enabled(Level::Error));
+        assert!(!enabled(Level::Warn));
+        set_log_level(Level::Info);
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Debug));
+    }
+
+    #[test]
+    fn gate_suppresses_after_burst() {
+        let gate = Gate::new();
+        for _ in 0..Gate::BURST + 5 {
+            emit(&gate, Level::Info, "test", format_args!("line"));
+        }
+        assert_eq!(gate.suppressed.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn trace_builder_coalesces_decode_steps() {
+        let mut b = TraceBuilder::new(7, 100);
+        b.seated(150);
+        b.prefill_chunk(200, 8);
+        b.prefill_chunk(260, 4);
+        b.first_token(300);
+        for i in 0..1000 {
+            b.decode_step(300 + i);
+        }
+        let t = b.finish(1400, "completed");
+        assert_eq!(t.total_us, 1300);
+        // admitted, seated, 2 chunks, first_token, ONE decode event,
+        // terminal.
+        assert_eq!(t.events.len(), 7);
+        match &t.events[5].kind {
+            TraceEventKind::DecodeSteps { steps, last_t_us } => {
+                assert_eq!(*steps, 1000);
+                assert_eq!(*last_t_us, 1299);
+            }
+            k => panic!("expected coalesced decode event, got {k:?}"),
+        }
+        assert_eq!(
+            t.events.last().unwrap().kind,
+            TraceEventKind::Terminal { outcome: "completed" }
+        );
+    }
+
+    #[test]
+    fn trace_ring_evicts_recent_and_pins_slow_and_failed() {
+        let ring = TraceRing::new(4, 2, Duration::from_millis(10));
+        let mk = |id: u64, outcome: &'static str, total_us: u64| {
+            let b = TraceBuilder::new(id, 0);
+            let mut t = b.finish(total_us, outcome);
+            t.total_us = total_us;
+            t
+        };
+        for id in 0..8 {
+            ring.record(mk(id, "completed", 100)); // fast, clean
+        }
+        assert_eq!(ring.recent_len(), 4, "recent ring must evict to capacity");
+        assert_eq!(ring.slow_len(), 0, "fast clean traces are not pinned");
+        ring.record(mk(100, "completed", 50_000)); // slow
+        ring.record(mk(101, "failed", 10)); // failed => pinned
+        ring.record(mk(102, "deadline_exceeded", 10));
+        assert_eq!(ring.slow_len(), 2, "slow-log must evict to its own capacity");
+        let snap = ring.snapshot();
+        let slow = snap.get("slow").unwrap().as_arr().unwrap();
+        let ids: Vec<f64> =
+            slow.iter().map(|t| t.get("id").unwrap().as_f64().unwrap()).collect();
+        assert_eq!(ids, vec![101.0, 102.0], "oldest pinned trace evicted first");
+    }
+
+    #[test]
+    fn layer_profile_dedupes_and_snapshots_shares() {
+        let p = LayerProfile::new();
+        let a = p.probe("layer0.wq", "rsr++");
+        let a2 = p.probe("layer0.wq", "rsr++");
+        let b = p.probe("layer0.gate", "tl");
+        assert_eq!(p.len(), 2, "same (layer, backend) must dedupe");
+        a.record(750);
+        a2.record(250);
+        b.record(1000);
+        let snap = p.snapshot(2000);
+        let rows = snap.as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        // Heaviest first; shares against decode_busy_ns.
+        for row in rows {
+            let share = row.get("share_of_decode_busy").unwrap().as_f64().unwrap();
+            assert!((share - 0.5).abs() < 1e-9, "share {share}");
+        }
+        assert_eq!(
+            rows[0].get("count").unwrap().as_f64().unwrap()
+                + rows[1].get("count").unwrap().as_f64().unwrap(),
+            3.0
+        );
+    }
+
+    #[test]
+    fn label_escaping() {
+        assert_eq!(escape_label_value("plain"), "plain");
+        assert_eq!(escape_label_value(r#"a"b"#), r#"a\"b"#);
+        assert_eq!(escape_label_value("a\\b"), "a\\\\b");
+        assert_eq!(escape_label_value("a\nb"), "a\\nb");
+    }
+
+    #[test]
+    fn fmt_num_guards_non_finite() {
+        assert_eq!(fmt_num(f64::NAN), "0");
+        assert_eq!(fmt_num(f64::INFINITY), "0");
+        assert_eq!(fmt_num(3.0), "3");
+        assert_eq!(fmt_num(3.5), "3.5");
+    }
+}

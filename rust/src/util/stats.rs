@@ -187,6 +187,29 @@ impl LatencyHistogram {
         self.max_us
     }
 
+    /// Total of all recorded samples in microseconds (the Prometheus
+    /// `_sum` series).
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
+    }
+
+    /// Cumulative bucket counts as `(upper_bound_us, cumulative)`
+    /// pairs, one per finite bucket — the Prometheus exposition shape
+    /// (`le` buckets are cumulative by definition; the `+Inf` bucket
+    /// is [`count`](Self::count)). Monotone non-decreasing by
+    /// construction.
+    pub fn buckets(&self) -> Vec<(u64, u64)> {
+        let mut cum = 0u64;
+        self.bounds_us
+            .iter()
+            .zip(self.counts.iter())
+            .map(|(&b, &c)| {
+                cum += c;
+                (b, cum)
+            })
+            .collect()
+    }
+
     /// Merge another histogram into this one (same bucket layout).
     pub fn merge(&mut self, other: &LatencyHistogram) {
         for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
@@ -241,6 +264,27 @@ mod tests {
         // p50 of 1..=1000 µs falls in the 512-bucket.
         assert_eq!(h.percentile_us(50.0), 512);
         assert!(h.percentile_us(100.0) >= 1000);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_monotone() {
+        let mut h = LatencyHistogram::new();
+        for us in [1u64, 2, 3, 1000, 1_000_000, 40_000_000] {
+            h.record(Duration::from_micros(us));
+        }
+        let b = h.buckets();
+        assert_eq!(b.len(), 25);
+        let mut prev = 0;
+        for &(bound, cum) in &b {
+            assert!(bound.is_power_of_two());
+            assert!(cum >= prev, "cumulative counts must be monotone");
+            prev = cum;
+        }
+        // The 40 s sample exceeds the ~16.8 s top bound: it lives only
+        // in the implicit +Inf bucket (count()).
+        assert_eq!(prev, 5);
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.sum_us(), 1 + 2 + 3 + 1000 + 1_000_000 + 40_000_000);
     }
 
     #[test]

@@ -1,0 +1,378 @@
+//! Observability integration: scraping `metrics` / `status` / `trace`
+//! over the wire from a live server, Prometheus exposition
+//! well-formedness, trace slow-log capture of misbehaving requests,
+//! and counter conservation under concurrent traffic.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use rsr::kernels::Backend;
+use rsr::model::config::ModelConfig;
+use rsr::model::weights::ModelWeights;
+use rsr::serving::batcher::BatchPolicy;
+use rsr::serving::engine::{EngineConfig, InferenceEngine};
+use rsr::serving::router::Router;
+use rsr::serving::server::{Client, Server, ServerIdentity};
+use rsr::util::json::Json;
+
+fn tiny_weights() -> Arc<ModelWeights> {
+    Arc::new(ModelWeights::generate(ModelConfig::tiny(), 0x0B5E).unwrap())
+}
+
+/// Like the `serving.rs` harness, but parameterized over the engine
+/// config (to flip `trace_slow_ms` / `profile_layers`) and stamped
+/// with a `ServerIdentity` so `status` has something to report.
+struct TestServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TestServer {
+    fn start(replicas: usize, config: EngineConfig) -> Self {
+        let weights = tiny_weights();
+        let engines: Vec<Arc<InferenceEngine>> = (0..replicas)
+            .map(|_| {
+                Arc::new(
+                    InferenceEngine::start(Arc::clone(&weights), config.clone())
+                        .unwrap(),
+                )
+            })
+            .collect();
+        let router = Arc::new(Router::new(engines).unwrap());
+        let server = Server::new(router).with_identity(ServerIdentity {
+            model: "tiny".into(),
+            plan_dir: None,
+            tune_profile: Some("bench/tuned.rsrt".into()),
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let bound: Arc<Mutex<Option<std::net::SocketAddr>>> = Arc::default();
+        let bound2 = Arc::clone(&bound);
+        let thread = std::thread::spawn(move || {
+            server
+                .serve("127.0.0.1:0", stop2, move |a| {
+                    *bound2.lock().unwrap() = Some(a);
+                })
+                .unwrap();
+        });
+        let addr = loop {
+            if let Some(a) = *bound.lock().unwrap() {
+                break a;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        };
+        Self { addr, stop, thread: Some(thread) }
+    }
+
+    fn default_config() -> EngineConfig {
+        EngineConfig { workers: 1, backend: Backend::RsrPlusPlus, ..Default::default() }
+    }
+}
+
+impl Drop for TestServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Parse one Prometheus sample line into (name, labels, value).
+/// Returns `None` for comments and blank lines.
+fn parse_sample(line: &str) -> Option<(String, Vec<(String, String)>, f64)> {
+    if line.is_empty() || line.starts_with('#') {
+        return None;
+    }
+    let (head, value) = line.rsplit_once(' ')?;
+    let value: f64 = value.parse().ok()?;
+    let (name, labels) = match head.split_once('{') {
+        Some((n, rest)) => {
+            let body = rest.strip_suffix('}')?;
+            let labels = body
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|pair| {
+                    let (k, v) = pair.split_once('=').unwrap();
+                    (k.to_string(), v.trim_matches('"').to_string())
+                })
+                .collect();
+            (n.to_string(), labels)
+        }
+        None => (head.to_string(), Vec::new()),
+    };
+    Some((name, labels, value))
+}
+
+fn scrape_prom(client: &mut Client) -> String {
+    let reply = client.send_raw(r#"{"cmd": "metrics", "format": "prom"}"#).unwrap();
+    assert!(reply.get("error").is_none(), "{}", reply.to_string());
+    reply.get("prom").unwrap().as_str().unwrap().to_string()
+}
+
+#[test]
+fn prometheus_exposition_is_well_formed() {
+    let server = TestServer::start(1, TestServer::default_config());
+    let mut client = Client::connect(server.addr).unwrap();
+    for i in 0..3 {
+        let reply = client.request(i, "Name a planet in the solar system.", 4).unwrap();
+        assert!(reply.get("error").is_none(), "{}", reply.to_string());
+    }
+    let text = scrape_prom(&mut client);
+
+    // Every sample family is announced.
+    assert!(text.contains("# HELP rsr_requests_admitted_total "));
+    assert!(text.contains("# TYPE rsr_requests_admitted_total counter"));
+    assert!(text.contains("# TYPE rsr_ttft_us histogram"));
+    assert!(text.contains("# TYPE rsr_queue_depth gauge"));
+    // Nothing non-finite leaks into the exposition.
+    assert!(!text.contains("NaN") && !text.contains("inf "), "{text}");
+
+    let samples: Vec<_> = text.lines().filter_map(parse_sample).collect();
+    assert!(!samples.is_empty());
+
+    // Counters carry the `_total` suffix and are announced as counters.
+    for (name, _, v) in &samples {
+        if name.ends_with("_total") {
+            assert!(
+                text.contains(&format!("# TYPE {name} counter")),
+                "counter {name} missing TYPE line"
+            );
+            assert!(*v >= 0.0, "counter {name} negative: {v}");
+        }
+    }
+
+    // Traffic actually registered.
+    let admitted: f64 = samples
+        .iter()
+        .filter(|(n, _, _)| n == "rsr_requests_admitted_total")
+        .map(|(_, _, v)| *v)
+        .sum();
+    assert!(admitted >= 3.0, "admitted={admitted}");
+
+    // Histogram buckets: cumulative counts are monotone in `le` (the
+    // renderer emits buckets in ascending order) and the +Inf bucket
+    // equals `_count` for the same series.
+    let mut bucket_series: std::collections::BTreeMap<String, Vec<(String, f64)>> =
+        Default::default();
+    for (name, labels, v) in &samples {
+        if let Some(base) = name.strip_suffix("_bucket") {
+            let le = labels.iter().find(|(k, _)| k == "le").unwrap().1.clone();
+            let key: String = labels
+                .iter()
+                .filter(|(k, _)| k != "le")
+                .map(|(k, val)| format!("{k}={val},"))
+                .chain([base.to_string()])
+                .collect();
+            bucket_series.entry(key).or_default().push((le, *v));
+        }
+    }
+    assert!(!bucket_series.is_empty(), "no histogram buckets rendered");
+    for (key, buckets) in &bucket_series {
+        let mut prev = 0.0;
+        for (le, v) in buckets {
+            assert!(*v >= prev, "{key}: bucket le={le} decreased ({v} < {prev})");
+            prev = *v;
+        }
+        let (last_le, last_v) = buckets.last().unwrap();
+        assert_eq!(last_le, "+Inf", "{key}: final bucket must be +Inf");
+        let base = key.rsplit(',').next().unwrap();
+        let count: f64 = samples
+            .iter()
+            .filter(|(n, labels, _)| {
+                n == &format!("{base}_count")
+                    && labels.iter().all(|(k, v)| {
+                        k == "le" || key.contains(&format!("{k}={v},"))
+                    })
+            })
+            .map(|(_, _, v)| *v)
+            .sum();
+        assert_eq!(
+            *last_v, count,
+            "{key}: +Inf bucket ({last_v}) != _count ({count})"
+        );
+    }
+}
+
+#[test]
+fn metrics_json_scrape_reports_conserved_counters() {
+    let server = TestServer::start(2, TestServer::default_config());
+    let addr = server.addr;
+    let handles: Vec<_> = (0..6)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                client.request(i, "Which ocean is the largest?", 3).unwrap()
+            })
+        })
+        .collect();
+    // Scrape mid-traffic: the reply must parse and stay conserved even
+    // while requests are inflight.
+    let mut client = Client::connect(addr).unwrap();
+    let mid = client.send_raw(r#"{"cmd": "metrics"}"#).unwrap();
+    assert!(mid.get("error").is_none(), "{}", mid.to_string());
+    for h in handles {
+        let reply = h.join().unwrap();
+        assert!(reply.get("error").is_none(), "{}", reply.to_string());
+    }
+    let reply = client.send_raw(r#"{"cmd": "metrics"}"#).unwrap();
+    assert!(reply.get("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
+    let replicas = reply.get("replicas").unwrap().as_arr().unwrap();
+    assert_eq!(replicas.len(), 2);
+    let mut admitted = 0.0;
+    let mut completed = 0.0;
+    for r in replicas {
+        assert!(r.get("queue_depth").is_some() && r.get("live_slots").is_some());
+        let m = r.get("metrics").unwrap();
+        assert!(matches!(m.get("conserved"), Some(Json::Bool(true))), "{}", m.to_string());
+        admitted += m.get("admitted").unwrap().as_f64().unwrap();
+        completed += m.get("completed").unwrap().as_f64().unwrap();
+    }
+    assert_eq!(admitted, 6.0);
+    assert_eq!(completed, 6.0);
+}
+
+#[test]
+fn status_reports_identity_and_replica_gauges() {
+    let server = TestServer::start(1, TestServer::default_config());
+    let mut client = Client::connect(server.addr).unwrap();
+    let reply = client.send_raw(r#"{"cmd": "status"}"#).unwrap();
+    assert_eq!(reply.get("model").unwrap().as_str(), Some("tiny"));
+    assert_eq!(reply.get("plan_dir"), Some(&Json::Null));
+    assert_eq!(reply.get("tune_profile").unwrap().as_str(), Some("bench/tuned.rsrt"));
+    assert!(reply.get("uptime_s").unwrap().as_f64().is_some());
+    let replicas = reply.get("replicas").unwrap().as_arr().unwrap();
+    assert_eq!(replicas.len(), 1);
+    let r = &replicas[0];
+    assert_eq!(r.get("replica").unwrap().as_f64(), Some(0.0));
+    for key in ["queue_depth", "inflight", "live_slots", "heartbeat_ms"] {
+        assert!(r.get(key).unwrap().as_f64().is_some(), "missing gauge {key}");
+    }
+    // Control lines don't poison the connection for inference.
+    let reply = client.request(1, "still serving?", 2).unwrap();
+    assert!(reply.get("error").is_none());
+}
+
+#[test]
+fn trace_command_reports_disabled_when_tracing_off() {
+    let server = TestServer::start(1, TestServer::default_config());
+    let mut client = Client::connect(server.addr).unwrap();
+    let reply = client.send_raw(r#"{"cmd": "trace"}"#).unwrap();
+    assert_eq!(reply.get("enabled"), Some(&Json::Bool(false)));
+    let replicas = reply.get("replicas").unwrap().as_arr().unwrap();
+    assert_eq!(replicas[0].get("trace"), Some(&Json::Null));
+}
+
+#[test]
+fn trace_slow_log_is_scrapeable_with_complete_timelines() {
+    // Threshold 0 pins every request into the slow-log.
+    let config = EngineConfig { trace_slow_ms: Some(0), ..TestServer::default_config() };
+    let server = TestServer::start(1, config);
+    let mut client = Client::connect(server.addr).unwrap();
+    let reply = client.request(9, "Describe the water cycle.", 4).unwrap();
+    assert!(reply.get("error").is_none(), "{}", reply.to_string());
+
+    let trace = client.send_raw(r#"{"cmd": "trace"}"#).unwrap();
+    assert_eq!(trace.get("enabled"), Some(&Json::Bool(true)));
+    let replicas = trace.get("replicas").unwrap().as_arr().unwrap();
+    let ring = replicas[0].get("trace").unwrap();
+    let slow = ring.get("slow").unwrap().as_arr().unwrap();
+    assert_eq!(slow.len(), 1, "{}", ring.to_string());
+    let t = &slow[0];
+    assert_eq!(t.get("outcome").unwrap().as_str(), Some("completed"));
+    assert!(t.get("total_us").unwrap().as_f64().unwrap() > 0.0);
+    let events = t.get("events").unwrap().as_arr().unwrap();
+    let kinds: Vec<&str> =
+        events.iter().map(|e| e.get("event").unwrap().as_str().unwrap()).collect();
+    assert_eq!(kinds.first(), Some(&"admitted"));
+    assert_eq!(kinds.last(), Some(&"terminal"));
+    assert!(kinds.contains(&"seated"), "{kinds:?}");
+    assert!(kinds.contains(&"first_token"), "{kinds:?}");
+    let mut prev = 0.0;
+    for e in events {
+        let t_us = e.get("t_us").unwrap().as_f64().unwrap();
+        assert!(t_us >= prev, "timeline not monotone: {}", t.to_string());
+        prev = t_us;
+    }
+}
+
+#[test]
+fn deadline_exceeded_request_is_pinned_despite_high_threshold() {
+    // 60 s threshold: only *misbehaving* requests can reach the
+    // slow-log. The batcher's top-up wait (50 ms here) makes the trip
+    // deterministic: a lone request is picked up instantly but seated
+    // only after `max_wait`, by which point its 1 ms budget has
+    // expired — the pre-seat lifecycle checkpoint sheds it.
+    let config = EngineConfig {
+        trace_slow_ms: Some(60_000),
+        batch: BatchPolicy { max_wait: Duration::from_millis(50), ..Default::default() },
+        ..TestServer::default_config()
+    };
+    let server = TestServer::start(1, config);
+    let mut client = Client::connect(server.addr).unwrap();
+    let reply = client.request_with(11, "why is the sky blue?", 8, Some(1)).unwrap();
+    let err = reply.get("error").unwrap().as_str().unwrap();
+    assert!(err.contains("deadline"), "{err}");
+
+    let trace = client.send_raw(r#"{"cmd": "trace"}"#).unwrap();
+    let replicas = trace.get("replicas").unwrap().as_arr().unwrap();
+    let ring = replicas[0].get("trace").unwrap();
+    let slow = ring.get("slow").unwrap().as_arr().unwrap();
+    assert_eq!(slow.len(), 1, "{}", ring.to_string());
+    let t = &slow[0];
+    assert_eq!(t.get("outcome").unwrap().as_str(), Some("deadline_exceeded"));
+    let events = t.get("events").unwrap().as_arr().unwrap();
+    let kinds: Vec<&str> =
+        events.iter().map(|e| e.get("event").unwrap().as_str().unwrap()).collect();
+    assert_eq!(kinds.first(), Some(&"admitted"));
+    assert_eq!(kinds.last(), Some(&"terminal"));
+}
+
+#[test]
+fn layer_profile_rows_ride_the_metrics_scrape() {
+    let config =
+        EngineConfig { profile_layers: true, ..TestServer::default_config() };
+    let server = TestServer::start(1, config);
+    let mut client = Client::connect(server.addr).unwrap();
+    let reply = client.request(3, "Count to five.", 4).unwrap();
+    assert!(reply.get("error").is_none(), "{}", reply.to_string());
+
+    let reply = client.send_raw(r#"{"cmd": "metrics"}"#).unwrap();
+    let replicas = reply.get("replicas").unwrap().as_arr().unwrap();
+    let m = replicas[0].get("metrics").unwrap();
+    let layers = m.get("layers").expect("profiling on → layers key").as_arr().unwrap();
+    assert!(!layers.is_empty());
+    let names: Vec<&str> =
+        layers.iter().map(|l| l.get("layer").unwrap().as_str().unwrap()).collect();
+    assert!(names.contains(&"lm_head"), "{names:?}");
+    for l in layers {
+        assert!(l.get("count").unwrap().as_f64().unwrap() > 0.0);
+        assert!(l.get("total_ns").unwrap().as_f64().unwrap() > 0.0);
+        assert!(l.get("backend").unwrap().as_str().is_some());
+    }
+}
+
+#[test]
+fn profiling_off_keeps_metrics_scrape_lean() {
+    let server = TestServer::start(1, TestServer::default_config());
+    let mut client = Client::connect(server.addr).unwrap();
+    let reply = client.request(4, "Name a color.", 2).unwrap();
+    assert!(reply.get("error").is_none());
+    let reply = client.send_raw(r#"{"cmd": "metrics"}"#).unwrap();
+    let replicas = reply.get("replicas").unwrap().as_arr().unwrap();
+    let m = replicas[0].get("metrics").unwrap();
+    assert!(m.get("layers").is_none(), "profiling off must not emit layer rows");
+}
+
+#[test]
+fn unknown_control_command_gets_error_without_killing_connection() {
+    let server = TestServer::start(1, TestServer::default_config());
+    let mut client = Client::connect(server.addr).unwrap();
+    let reply = client.send_raw(r#"{"cmd": "flamegraph"}"#).unwrap();
+    let err = reply.get("error").unwrap().as_str().unwrap();
+    assert!(err.contains("metrics, status or trace"), "{err}");
+    let reply = client.request(5, "still alive?", 2).unwrap();
+    assert!(reply.get("error").is_none());
+}
