@@ -437,6 +437,13 @@ fn overload_run(opts: &ServeBenchOpts) -> Result<Json> {
     // record so the perf trajectory carries the serving counters and
     // latency histograms alongside the bench-side tallies.
     let engine_snapshot = engine.snapshot();
+    // KV-pool trajectory of the run: peak page occupancy is the
+    // memory high-water mark the budget planner sizes against, and
+    // evictions stay 0 here (the overload engine is unbudgeted) —
+    // recorded so a regression that starts evicting shows up in the
+    // committed record.
+    let kv_evictions = engine.kv_pool().evictions();
+    let kv_pages_peak = engine.kv_pool().peak_pages_in_use();
     engine.shutdown();
     if hung > 0 {
         eprintln!(
@@ -482,6 +489,8 @@ fn overload_run(opts: &ServeBenchOpts) -> Result<Json> {
         ("hung", Json::num(hung as f64)),
         ("p50_ms", Json::num(p50)),
         ("p99_ms", Json::num(p99)),
+        ("kv_evictions_total", Json::num(kv_evictions as f64)),
+        ("kv_pages_in_use_peak", Json::num(kv_pages_peak as f64)),
         ("engine", engine_snapshot),
     ]))
 }
@@ -554,5 +563,10 @@ mod tests {
         let engine = rec.get("engine").expect("engine snapshot embedded");
         assert!(matches!(engine.get("conserved"), Some(Json::Bool(true))));
         assert_eq!(engine.get("inflight").unwrap().as_f64(), Some(0.0));
+        // KV trajectory fields: the first request is always admitted
+        // (queue starts empty), so the pool saw real occupancy; an
+        // unbudgeted engine never evicts.
+        assert_eq!(g("kv_evictions_total"), 0.0);
+        assert!(g("kv_pages_in_use_peak") > 0.0);
     }
 }

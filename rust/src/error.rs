@@ -34,6 +34,12 @@ pub enum Error {
     /// retried or re-routed.
     Cancelled(String),
 
+    /// The KV page pool's byte budget (`--kv-budget`) could not cover
+    /// the request: shed at admission (no reservation) or evicted
+    /// mid-decode (youngest-first under page exhaustion). Terminal and
+    /// named — never a panic, never a silent drop.
+    KvBudgetExceeded(String),
+
     /// Configuration / CLI problems.
     Config(String),
 
@@ -54,6 +60,7 @@ impl fmt::Display for Error {
             Error::Serving(m) => write!(f, "serving error: {m}"),
             Error::DeadlineExceeded(m) => write!(f, "deadline exceeded: {m}"),
             Error::Cancelled(m) => write!(f, "cancelled: {m}"),
+            Error::KvBudgetExceeded(m) => write!(f, "kv budget exceeded: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Io(e) => write!(f, "{e}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),

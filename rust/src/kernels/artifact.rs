@@ -371,14 +371,26 @@ impl PlanArtifact {
         Ok(meta)
     }
 
-    /// Write to a file.
+    /// Write to a file crash-safely (tmp + fsync + atomic rename): a
+    /// kill mid-`rsr pack` leaves the old artifact, the complete new
+    /// one, or a stray `*.tmp` that loaders refuse — never a
+    /// loadable-but-corrupt file.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        self.write_to(&mut f)
+        crate::util::atomicfile::write_atomic(path, |w| self.write_to(w))
     }
 
-    /// Read + validate from a file.
+    /// Read + validate from a file. In-flight `*.tmp` names are
+    /// refused outright — only a finished, renamed artifact is
+    /// trustworthy, whatever its bytes parse as.
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        if crate::util::atomicfile::is_tmp(path) {
+            return Err(Error::Artifact(format!(
+                "{} is an in-flight temporary from an interrupted write, \
+                 not a finished artifact",
+                path.display()
+            )));
+        }
         let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
         Self::read_from(&mut f)
     }

@@ -83,6 +83,26 @@ fn get_usize(f: &HashMap<String, String>, key: &str, default: usize) -> Result<u
     }
 }
 
+/// Parse a byte size with an optional `K`/`M`/`G` suffix (decimal
+/// digits, binary multipliers): `512M`, `2G`, `65536`.
+fn parse_byte_size(v: &str, flag: &str) -> Result<u64> {
+    let s = v.trim();
+    let err = || {
+        Error::Config(format!(
+            "--{flag} expects a byte size like 512M, 2G or 65536, got {v}"
+        ))
+    };
+    let (digits, mult) = match s.chars().last() {
+        Some('k') | Some('K') => (&s[..s.len() - 1], 1u64 << 10),
+        Some('m') | Some('M') => (&s[..s.len() - 1], 1u64 << 20),
+        Some('g') | Some('G') => (&s[..s.len() - 1], 1u64 << 30),
+        Some(c) if c.is_ascii_digit() => (s, 1u64),
+        _ => return Err(err()),
+    };
+    let n: u64 = digits.trim().parse().map_err(|_| err())?;
+    n.checked_mul(mult).ok_or_else(err)
+}
+
 fn run(args: &[String]) -> Result<()> {
     let Some(cmd) = args.first() else {
         print_help();
@@ -125,8 +145,8 @@ fn print_help() {
          generate-model [--preset P] [--seed S] --out FILE      synthetic 1.58-bit model\n  \
          pack           --model FILE | --n N  --out DIR [--k K] [--profile FILE.rsrt]  preprocess to .rsrz\n  \
          tune           --weights FILE --out FILE.rsrt [--budget-ms N] [--radius R] [--trials T]\n  \
-         inspect        --plans DIR | --file FILE [--deep]      .rsrz / .rsrt stats\n  \
-         serve          --model FILE [--plans DIR] [--profile FILE.rsrt] [--addr A] [--replicas R] [--workers W] [--max-slots S] [--prefill-chunk C] [--backend B] [--default-deadline-ms D] [--replica-stall-ms S] [--log-level L] [--trace-slow-ms T] [--profile-layers]\n  \
+         inspect        --plans DIR | --file FILE [--deep] [--verify]  .rsrz / .rsrt stats, integrity\n  \
+         serve          --model FILE [--plans DIR] [--profile FILE.rsrt] [--addr A] [--replicas R] [--workers W] [--max-slots S] [--prefill-chunk C] [--backend B] [--kv-budget BYTES] [--kv-page-tokens N] [--default-deadline-ms D] [--replica-stall-ms S] [--log-level L] [--trace-slow-ms T] [--profile-layers]\n  \
          client         [--addr A] --prompt TEXT [--max-new N] [--deadline-ms D]\n  \
          metrics        [--addr A] [--prom] [--watch SECS]      scrape a live server's metrics\n  \
          status         [--addr A]                              live server identity + gauges\n  \
@@ -297,6 +317,17 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
         ..Default::default()
     };
 
+    // Memory governance: --kv-budget caps the bytes the paged KV cache
+    // may hold across every layer × slot × worker of a replica (absent
+    // = unbounded, the pre-budget behavior, bit-identical serving);
+    // --kv-page-tokens sets the page granularity.
+    let kv_budget = f
+        .get("kv-budget")
+        .map(|v| parse_byte_size(v, "kv-budget"))
+        .transpose()?;
+    let kv_page_tokens =
+        get_usize(f, "kv-page-tokens", EngineConfig::default().kv_page_tokens)?.max(1);
+
     println!("loading {model_path}...");
     let weights = Arc::new(ModelWeights::load(model_path)?);
 
@@ -313,6 +344,8 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
         tune_profile: profile.clone(),
         trace_slow_ms,
         profile_layers,
+        kv_budget,
+        kv_page_tokens,
         ..Default::default()
     };
     if let Some(dir) = &plans {
@@ -378,6 +411,14 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
         server = server
             .with_default_deadline(std::time::Duration::from_millis(default_deadline_ms));
         println!("default request deadline: {default_deadline_ms}ms");
+    }
+    if let Some(bytes) = kv_budget {
+        println!(
+            "kv budget: {} per replica ({} tokens/page) — requests beyond it are \
+             shed or evicted youngest-first with a kv_budget_exceeded outcome",
+            human_bytes(bytes as usize),
+            kv_page_tokens
+        );
     }
     if let Some(ms) = trace_slow_ms {
         println!("request tracing: pinning requests slower than {ms}ms (rsr trace)");
@@ -740,7 +781,12 @@ fn cmd_pack(f: &HashMap<String, String>) -> Result<()> {
 }
 
 fn cmd_inspect(f: &HashMap<String, String>) -> Result<()> {
-    let deep = f.contains_key("deep");
+    // --verify is --deep plus housekeeping: stray *.tmp leftovers of a
+    // killed `rsr pack`/`rsr tune` are deleted (each one logged), and
+    // any artifact or profile that fails its checksum walk makes the
+    // command exit nonzero naming the offending file.
+    let verify = f.contains_key("verify");
+    let deep = f.contains_key("deep") || verify;
     let mut paths: Vec<PathBuf> = Vec::new();
     let mut profiles: Vec<PathBuf> = Vec::new();
     let is_rsrt = |p: &Path| p.extension().is_some_and(|e| e == "rsrt");
@@ -756,6 +802,11 @@ fn cmd_inspect(f: &HashMap<String, String>) -> Result<()> {
     } else if let Some(dir) = f.get("plans") {
         for entry in std::fs::read_dir(dir)? {
             let p = entry?.path();
+            if verify && rsr::util::atomicfile::is_tmp(&p) && p.is_file() {
+                std::fs::remove_file(&p)?;
+                println!("deleted stray tmp file {} (interrupted write)", p.display());
+                continue;
+            }
             if p.extension().is_some_and(|e| e == "rsrz") {
                 paths.push(p);
             } else if is_rsrt(&p) {
@@ -783,9 +834,15 @@ fn cmd_inspect(f: &HashMap<String, String>) -> Result<()> {
         for p in &paths {
             // --deep decodes the payload, verifies the checksum and
             // re-validates every structural invariant; the default reads
-            // only the header.
-            let meta =
-                if deep { PlanArtifact::load(p)?.meta } else { PlanArtifact::peek(p)? };
+            // only the header. The error names the offending file (and
+            // exits nonzero through main) — the --verify contract.
+            let meta = if deep {
+                PlanArtifact::load(p)
+                    .map_err(|e| Error::Artifact(format!("{}: {e}", p.display())))?
+                    .meta
+            } else {
+                PlanArtifact::peek(p)?
+            };
             table.row(&[
                 meta.name.clone(),
                 meta.kind.name().to_string(),
@@ -813,7 +870,16 @@ fn cmd_inspect(f: &HashMap<String, String>) -> Result<()> {
         );
     }
     for p in &profiles {
-        inspect_profile(p)?;
+        inspect_profile(p)
+            .map_err(|e| Error::Artifact(format!("{}: {e}", p.display())))?;
+    }
+    if verify {
+        println!(
+            "\nverify OK: {} artifact(s) and {} profile(s) passed the deep \
+             checksum walk",
+            paths.len(),
+            profiles.len()
+        );
     }
     Ok(())
 }

@@ -7,15 +7,21 @@
 //! row each, prefilling slots contribute a whole prompt chunk — while
 //! RoPE, cache appends and the attention reduction stay per-row.
 
+use std::sync::Arc;
+
 use super::bitlinear::BitLinear;
 use super::config::ModelConfig;
 use super::kv_cache::KvCache;
 use super::rope::Rope;
 use super::tensor::{ensure_len, softmax};
 use crate::error::Result;
+use crate::runtime::kv_pool::KvPool;
 
 /// One attention layer: Q/K/V/O projections (all `BitLinear`) + one KV
-/// cache per decode slot (slot 0 is the single-sequence path).
+/// cache per decode slot (slot 0 is the single-sequence path). Every
+/// cache draws its pages from the layer's [`KvPool`] — the serving
+/// engine hands all layers (and all workers) one shared pool so the
+/// `--kv-budget` ceiling is global.
 pub struct Attention {
     n_heads: usize,
     n_kv_heads: usize,
@@ -25,6 +31,7 @@ pub struct Attention {
     wv: BitLinear,
     wo: BitLinear,
     caches: Vec<KvCache>,
+    kv_pool: Arc<KvPool>,
     // Scratch (no allocation in the decode path).
     q: Vec<f32>,
     k: Vec<f32>,
@@ -39,13 +46,28 @@ pub struct Attention {
 }
 
 impl Attention {
-    /// Assemble from projection layers.
+    /// Assemble from projection layers, with a private unbudgeted KV
+    /// pool (the single-sequence / non-serving path).
     pub fn new(
         cfg: &ModelConfig,
         wq: BitLinear,
         wk: BitLinear,
         wv: BitLinear,
         wo: BitLinear,
+    ) -> Self {
+        let pool = Arc::new(KvPool::unbounded(KvPool::DEFAULT_PAGE_TOKENS));
+        Self::with_pool(cfg, wq, wk, wv, wo, pool)
+    }
+
+    /// Assemble from projection layers, drawing KV pages from a shared
+    /// pool (the serving engine's budget-governed path).
+    pub fn with_pool(
+        cfg: &ModelConfig,
+        wq: BitLinear,
+        wk: BitLinear,
+        wv: BitLinear,
+        wo: BitLinear,
+        kv_pool: Arc<KvPool>,
     ) -> Self {
         let kv_dim = cfg.n_kv_heads * cfg.head_dim();
         Self {
@@ -56,7 +78,8 @@ impl Attention {
             wk,
             wv,
             wo,
-            caches: vec![KvCache::new(cfg.max_seq_len, kv_dim)],
+            caches: vec![KvCache::new_in(cfg.max_seq_len, kv_dim, Arc::clone(&kv_pool))],
+            kv_pool,
             q: vec![0.0; cfg.n_heads * cfg.head_dim()],
             k: vec![0.0; kv_dim],
             v: vec![0.0; kv_dim],
@@ -94,11 +117,13 @@ impl Attention {
     }
 
     /// Grow to at least `n` per-slot KV caches. Existing slots keep
-    /// their cached state; new slots start empty.
+    /// their cached state; new slots start empty — and, being paged,
+    /// cost nothing until positions are appended.
     pub fn ensure_slots(&mut self, n: usize) {
         let (cap, kv_dim) = (self.caches[0].capacity(), self.k.len());
         while self.caches.len() < n {
-            self.caches.push(KvCache::new(cap, kv_dim));
+            self.caches
+                .push(KvCache::new_in(cap, kv_dim, Arc::clone(&self.kv_pool)));
         }
     }
 

@@ -1,28 +1,55 @@
-//! Per-layer key/value cache for autoregressive decoding.
+//! Per-layer key/value cache for autoregressive decoding — a page
+//! table over [`KvPool`] grants.
+//!
+//! Storage is allocated page-by-page (`pool.page_tokens()` positions
+//! each) as positions are appended, and every page is returned to the
+//! pool on [`reset`](KvCache::reset) or drop — so a retired slot costs
+//! nothing and `max_slots` bounds concurrency, not memory. Reads
+//! ([`key`](KvCache::key) / [`value`](KvCache::value)) return the same
+//! single-position `kv_dim`-wide rows the contiguous layout returned,
+//! holding the same values — the attention arithmetic consumes an
+//! identical f32 sequence, so paged decode/prefill is bit-identical to
+//! the pre-pool layout (pinned by `rust/tests/prefill.rs`).
+
+use std::sync::Arc;
 
 use crate::error::{Error, Result};
+use crate::runtime::kv_pool::{page_bytes, KvPool};
 
-/// KV cache for one layer: `max_seq_len × (n_kv_heads · head_dim)`
-/// rows for keys and values.
-#[derive(Debug, Clone)]
+/// One granted page: `page_tokens` K rows and V rows, owned by the
+/// cache that acquired it (the pool tracks grants, not storage).
+#[derive(Debug)]
+struct Page {
+    k: Box<[f32]>,
+    v: Box<[f32]>,
+}
+
+/// KV cache for one layer: up to `max_seq_len` positions of
+/// `n_kv_heads · head_dim` K and V lanes, paged on demand.
+#[derive(Debug)]
 pub struct KvCache {
     kv_dim: usize,
     max_seq_len: usize,
     len: usize,
-    k: Vec<f32>,
-    v: Vec<f32>,
+    pages: Vec<Page>,
+    pool: Arc<KvPool>,
 }
 
 impl KvCache {
-    /// Allocate an empty cache.
+    /// An empty cache with its own unbudgeted pool (the standalone /
+    /// single-sequence path; no page grant can ever fail).
     pub fn new(max_seq_len: usize, kv_dim: usize) -> Self {
-        Self {
-            kv_dim,
+        Self::new_in(
             max_seq_len,
-            len: 0,
-            k: vec![0.0; max_seq_len * kv_dim],
-            v: vec![0.0; max_seq_len * kv_dim],
-        }
+            kv_dim,
+            Arc::new(KvPool::unbounded(KvPool::DEFAULT_PAGE_TOKENS)),
+        )
+    }
+
+    /// An empty cache drawing pages from a shared pool (the serving
+    /// path: one pool governs every layer × slot × worker).
+    pub fn new_in(max_seq_len: usize, kv_dim: usize, pool: Arc<KvPool>) -> Self {
+        Self { kv_dim, max_seq_len, len: 0, pages: Vec::new(), pool }
     }
 
     /// Number of cached positions.
@@ -35,12 +62,25 @@ impl KvCache {
         self.len == 0
     }
 
-    /// Capacity in positions.
+    /// Capacity in positions (the sequence-length ceiling; physical
+    /// pages are granted lazily up to it).
     pub fn capacity(&self) -> usize {
         self.max_seq_len
     }
 
-    /// Append one position's K and V rows.
+    /// Pages currently held.
+    pub fn pages_held(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// The pool this cache draws from.
+    pub fn pool(&self) -> &Arc<KvPool> {
+        &self.pool
+    }
+
+    /// Append one position's K and V rows, acquiring a page grant at
+    /// each page boundary. A refused grant is the named budget error —
+    /// the engine sheds or evicts on it; nothing panics.
     pub fn append(&mut self, k_row: &[f32], v_row: &[f32]) -> Result<()> {
         if k_row.len() != self.kv_dim || v_row.len() != self.kv_dim {
             return Err(Error::ShapeMismatch("kv row width".into()));
@@ -51,9 +91,26 @@ impl KvCache {
                 self.max_seq_len
             )));
         }
-        let off = self.len * self.kv_dim;
-        self.k[off..off + self.kv_dim].copy_from_slice(k_row);
-        self.v[off..off + self.kv_dim].copy_from_slice(v_row);
+        let pt = self.pool.page_tokens();
+        let (page, slot) = (self.len / pt, self.len % pt);
+        if page == self.pages.len() {
+            if !self.pool.try_acquire() {
+                return Err(Error::KvBudgetExceeded(format!(
+                    "kv pool exhausted at {} of {} pages",
+                    self.pool.pages_in_use(),
+                    self.pool.total_pages()
+                )));
+            }
+            let lanes = pt * self.kv_dim;
+            self.pages.push(Page {
+                k: vec![0.0; lanes].into_boxed_slice(),
+                v: vec![0.0; lanes].into_boxed_slice(),
+            });
+        }
+        let off = slot * self.kv_dim;
+        let p = &mut self.pages[page];
+        p.k[off..off + self.kv_dim].copy_from_slice(k_row);
+        p.v[off..off + self.kv_dim].copy_from_slice(v_row);
         self.len += 1;
         Ok(())
     }
@@ -61,23 +118,41 @@ impl KvCache {
     /// Key row at position `pos`.
     pub fn key(&self, pos: usize) -> &[f32] {
         debug_assert!(pos < self.len);
-        &self.k[pos * self.kv_dim..(pos + 1) * self.kv_dim]
+        let pt = self.pool.page_tokens();
+        let off = (pos % pt) * self.kv_dim;
+        &self.pages[pos / pt].k[off..off + self.kv_dim]
     }
 
     /// Value row at position `pos`.
     pub fn value(&self, pos: usize) -> &[f32] {
         debug_assert!(pos < self.len);
-        &self.v[pos * self.kv_dim..(pos + 1) * self.kv_dim]
+        let pt = self.pool.page_tokens();
+        let off = (pos % pt) * self.kv_dim;
+        &self.pages[pos / pt].v[off..off + self.kv_dim]
     }
 
-    /// Drop all cached positions (new request on a reused slot).
+    /// Drop all cached positions and return every page to the pool
+    /// (new request on a reused slot — a retired slot holds zero
+    /// pages, the fix for the eager `max_slots × max_seq_len`
+    /// over-allocation).
     pub fn reset(&mut self) {
+        self.pool.release(self.pages.len());
+        self.pages.clear();
         self.len = 0;
     }
 
-    /// Heap bytes.
+    /// Heap bytes currently held (granted pages only).
     pub fn bytes(&self) -> usize {
-        (self.k.len() + self.v.len()) * 4
+        self.pages.len() * page_bytes(self.pool.page_tokens(), self.kv_dim)
+    }
+}
+
+impl Drop for KvCache {
+    /// Pages go back to the pool when the cache dies — a worker's
+    /// panic-rebuild drops the old model (and every cache in it) after
+    /// the replacement is built, so grants never leak across rebuilds.
+    fn drop(&mut self) {
+        self.pool.release(self.pages.len());
     }
 }
 
@@ -116,5 +191,74 @@ mod tests {
         assert!(c.is_empty());
         c.append(&[2.0; 2], &[2.0; 2]).unwrap();
         assert_eq!(c.key(0), &[2.0, 2.0]);
+    }
+
+    #[test]
+    fn reads_are_identical_across_page_boundaries() {
+        // page_tokens 2 → positions 0..6 span 3 pages; every row must
+        // read back exactly what was appended, same as the contiguous
+        // layout held.
+        let pool = Arc::new(KvPool::bounded(2, 3, 1024).unwrap());
+        let mut c = KvCache::new_in(8, 3, pool);
+        let rows: Vec<[f32; 3]> =
+            (0..6).map(|i| [i as f32, i as f32 + 0.5, -(i as f32)]).collect();
+        for r in &rows {
+            c.append(r, r).unwrap();
+        }
+        assert_eq!(c.pages_held(), 3);
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(c.key(i), &r[..], "key row {i}");
+            assert_eq!(c.value(i), &r[..], "value row {i}");
+        }
+    }
+
+    #[test]
+    fn pages_grow_lazily_and_return_on_reset() {
+        let pool = Arc::new(KvPool::unbounded(2));
+        let mut c = KvCache::new_in(64, 2, Arc::clone(&pool));
+        assert_eq!(pool.pages_in_use(), 0, "no eager allocation");
+        c.append(&[1.0; 2], &[1.0; 2]).unwrap();
+        assert_eq!(pool.pages_in_use(), 1);
+        c.append(&[1.0; 2], &[1.0; 2]).unwrap();
+        assert_eq!(pool.pages_in_use(), 1, "second position fits the page");
+        c.append(&[1.0; 2], &[1.0; 2]).unwrap();
+        assert_eq!(pool.pages_in_use(), 2);
+        c.reset();
+        assert_eq!(pool.pages_in_use(), 0, "retirement returns every page");
+        assert_eq!(c.bytes(), 0);
+    }
+
+    #[test]
+    fn drop_returns_pages_to_the_pool() {
+        let pool = Arc::new(KvPool::unbounded(2));
+        {
+            let mut c = KvCache::new_in(8, 2, Arc::clone(&pool));
+            for _ in 0..5 {
+                c.append(&[0.0; 2], &[0.0; 2]).unwrap();
+            }
+            assert_eq!(pool.pages_in_use(), 3);
+        }
+        assert_eq!(pool.pages_in_use(), 0, "drop releases grants");
+    }
+
+    #[test]
+    fn exhausted_pool_is_a_named_error_not_a_panic() {
+        // One-page pool shared by two caches: the second page grant
+        // must fail with the KvBudgetExceeded variant and leave the
+        // cache consistent (the appended prefix intact).
+        let pool = Arc::new(KvPool::bounded(2, 2, page_bytes(2, 2) as u64).unwrap());
+        let mut a = KvCache::new_in(8, 2, Arc::clone(&pool));
+        let mut b = KvCache::new_in(8, 2, Arc::clone(&pool));
+        a.append(&[1.0; 2], &[1.0; 2]).unwrap();
+        let err = b.append(&[2.0; 2], &[2.0; 2]).unwrap_err();
+        assert!(
+            matches!(err, Error::KvBudgetExceeded(_)),
+            "expected KvBudgetExceeded, got {err}"
+        );
+        assert_eq!(b.len(), 0);
+        // Freeing the first cache lets the second proceed.
+        a.reset();
+        b.append(&[2.0; 2], &[2.0; 2]).unwrap();
+        assert_eq!(b.key(0), &[2.0, 2.0]);
     }
 }

@@ -16,7 +16,9 @@ use super::sampler::Sampler;
 use super::weights::ModelWeights;
 use crate::error::{Error, Result};
 use crate::kernels::Backend;
+use crate::runtime::kv_pool::KvPool;
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
 /// Cap on decode-slot indices: each slot owns a full per-layer KV
 /// cache, so an arbitrary index must fail cleanly instead of
@@ -60,17 +62,31 @@ impl Transformer {
     /// Prepare a model from raw weights on the given backend.
     /// `k = 0` selects the analytic optimal blocking parameter.
     pub fn from_weights(weights: &ModelWeights, backend: Backend, k: usize) -> Result<Self> {
+        let pool = Arc::new(KvPool::unbounded(KvPool::DEFAULT_PAGE_TOKENS));
+        Self::from_weights_pooled(weights, backend, k, pool)
+    }
+
+    /// [`from_weights`](Self::from_weights) drawing every layer's KV
+    /// pages from a shared [`KvPool`] — the serving engine passes one
+    /// pool to all workers so `--kv-budget` caps the whole process.
+    pub fn from_weights_pooled(
+        weights: &ModelWeights,
+        backend: Backend,
+        k: usize,
+        kv_pool: Arc<KvPool>,
+    ) -> Result<Self> {
         let cfg = weights.config.clone();
         cfg.validate()?;
         let rope = Rope::new(cfg.head_dim(), cfg.max_seq_len, cfg.rope_theta);
         let mut blocks = Vec::with_capacity(cfg.n_layers);
         for lw in &weights.layers {
-            let attn = Attention::new(
+            let attn = Attention::with_pool(
                 &cfg,
                 BitLinear::new(lw.wq.clone(), lw.scales[0], backend, k)?,
                 BitLinear::new(lw.wk.clone(), lw.scales[1], backend, k)?,
                 BitLinear::new(lw.wv.clone(), lw.scales[2], backend, k)?,
                 BitLinear::new(lw.wo.clone(), lw.scales[3], backend, k)?,
+                Arc::clone(&kv_pool),
             );
             let mlp = Mlp::new(
                 BitLinear::new(lw.gate.clone(), lw.scales[4], backend, k)?,
@@ -126,6 +142,18 @@ impl Transformer {
         weights: &ModelWeights,
         store: &crate::runtime::PlanStore,
     ) -> Result<Self> {
+        let pool = Arc::new(KvPool::unbounded(KvPool::DEFAULT_PAGE_TOKENS));
+        Self::from_plan_store_pooled(weights, store, pool)
+    }
+
+    /// [`from_plan_store`](Self::from_plan_store) drawing every
+    /// layer's KV pages from a shared [`KvPool`] (see
+    /// [`from_weights_pooled`](Self::from_weights_pooled)).
+    pub fn from_plan_store_pooled(
+        weights: &ModelWeights,
+        store: &crate::runtime::PlanStore,
+        kv_pool: Arc<KvPool>,
+    ) -> Result<Self> {
         let cfg = weights.config.clone();
         cfg.validate()?;
         // Fingerprints only carry information for disk-backed stores
@@ -179,12 +207,13 @@ impl Transformer {
         let rope = Rope::new(cfg.head_dim(), cfg.max_seq_len, cfg.rope_theta);
         let mut blocks = Vec::with_capacity(cfg.n_layers);
         for (i, lw) in weights.layers.iter().enumerate() {
-            let attn = Attention::new(
+            let attn = Attention::with_pool(
                 &cfg,
                 get(&format!("layer{i}.wq"), &lw.wq, lw.scales[0])?,
                 get(&format!("layer{i}.wk"), &lw.wk, lw.scales[1])?,
                 get(&format!("layer{i}.wv"), &lw.wv, lw.scales[2])?,
                 get(&format!("layer{i}.wo"), &lw.wo, lw.scales[3])?,
+                Arc::clone(&kv_pool),
             );
             let mlp = Mlp::new(
                 get(&format!("layer{i}.gate"), &lw.gate, lw.scales[4])?,

@@ -1,0 +1,297 @@
+//! Global KV page pool: a hard byte budget over fixed-size KV pages.
+//!
+//! The serving side of the paper's compile-once/serve-many design
+//! holds one preprocessed plan index per layer and N per-slot KV
+//! caches. Before this pool existed, every slot eagerly materialized
+//! `max_seq_len × kv_dim` K and V rows per layer, so memory grew with
+//! `max_slots × max_seq_len` regardless of how long sequences actually
+//! ran — raising `--max-slots` risked an unceremonious OOM kill. The
+//! pool turns that into a governed resource: [`KvCache`] allocates
+//! fixed-size pages (`--kv-page-tokens` positions each) on demand and
+//! returns them on retirement, and the pool enforces a process-wide
+//! byte ceiling (`--kv-budget`) so exhaustion is a *named, graceful*
+//! outcome (`Error::KvBudgetExceeded`) the engine can shed or evict
+//! on, never an OOM abort.
+//!
+//! # Accounting pool, cache-local storage
+//!
+//! The pool tracks **page grants**, not page storage: each `KvCache`
+//! owns the `f32` buffers of the pages it holds (allocated at grant
+//! time, freed at release), so the attention read path stays
+//! lock-free and touches no shared mutable memory across worker
+//! threads. Budget enforcement is a single atomic compare-exchange per
+//! page grant — one CAS per `--kv-page-tokens` appended positions, off
+//! the per-token hot path. Physical page sharing (prefix caching) can
+//! later slot in behind the same grant/release API.
+//!
+//! [`KvCache`]: crate::model::kv_cache::KvCache
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use crate::error::{Error, Result};
+
+/// A page-grant pool under an optional hard page ceiling, shared by
+/// every [`KvCache`](crate::model::kv_cache::KvCache) of an engine
+/// (all layers, all slots, all workers — the budget is global).
+#[derive(Debug)]
+pub struct KvPool {
+    /// Positions per page (`--kv-page-tokens`).
+    page_tokens: usize,
+    /// Hard ceiling in pages; `usize::MAX` when unbudgeted.
+    total_pages: usize,
+    /// Pages currently granted.
+    in_use: AtomicUsize,
+    /// High-water mark of `in_use` (bench reporting).
+    peak_in_use: AtomicUsize,
+    /// Admission reservations refused for lack of pages.
+    reservations_failed: AtomicU64,
+    /// Mid-decode slot evictions forced by page exhaustion.
+    evictions: AtomicU64,
+}
+
+/// Bytes one page occupies: K and V rows, `page_tokens` positions of
+/// `kv_dim` f32 lanes each.
+pub fn page_bytes(page_tokens: usize, kv_dim: usize) -> usize {
+    2 * page_tokens * kv_dim * 4
+}
+
+impl KvPool {
+    /// Default positions per page (`--kv-page-tokens`).
+    pub const DEFAULT_PAGE_TOKENS: usize = 64;
+
+    /// A budgeted pool: `budget_bytes` is the hard ceiling over all K
+    /// and V storage granted through this pool; `kv_dim` sizes a page.
+    /// The budget must cover at least one page.
+    pub fn bounded(page_tokens: usize, kv_dim: usize, budget_bytes: u64) -> Result<Self> {
+        if page_tokens == 0 || kv_dim == 0 {
+            return Err(Error::Config("kv pool: zero page_tokens or kv_dim".into()));
+        }
+        let pb = page_bytes(page_tokens, kv_dim) as u64;
+        let total = (budget_bytes / pb) as usize;
+        if total == 0 {
+            return Err(Error::Config(format!(
+                "kv budget {budget_bytes} B is below one {pb} B page \
+                 ({page_tokens} tokens × {kv_dim} kv lanes) — raise --kv-budget \
+                 or lower --kv-page-tokens"
+            )));
+        }
+        Ok(Self {
+            page_tokens,
+            total_pages: total,
+            in_use: AtomicUsize::new(0),
+            peak_in_use: AtomicUsize::new(0),
+            reservations_failed: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        })
+    }
+
+    /// An unbudgeted pool: grants always succeed (the `--kv-budget`
+    /// unset path — paging still fixes the eager over-allocation, but
+    /// no reservation can fail and no eviction ever fires).
+    pub fn unbounded(page_tokens: usize) -> Self {
+        Self {
+            page_tokens: page_tokens.max(1),
+            total_pages: usize::MAX,
+            in_use: AtomicUsize::new(0),
+            peak_in_use: AtomicUsize::new(0),
+            reservations_failed: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Positions per page.
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    /// True when a `--kv-budget` ceiling is being enforced.
+    pub fn is_bounded(&self) -> bool {
+        self.total_pages != usize::MAX
+    }
+
+    /// The page ceiling (`usize::MAX` when unbudgeted).
+    pub fn total_pages(&self) -> usize {
+        self.total_pages
+    }
+
+    /// Pages needed to hold `positions` cached positions.
+    pub fn pages_for(&self, positions: usize) -> usize {
+        positions.div_ceil(self.page_tokens)
+    }
+
+    /// Try to take one page grant. Lock-free CAS loop: concurrent
+    /// grants race but never overshoot the ceiling.
+    pub fn try_acquire(&self) -> bool {
+        let mut cur = self.in_use.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.total_pages {
+                return false;
+            }
+            match self.in_use.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    self.peak_in_use.fetch_max(cur + 1, Ordering::Relaxed);
+                    return true;
+                }
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Return `n` page grants.
+    pub fn release(&self, n: usize) {
+        if n > 0 {
+            let prev = self.in_use.fetch_sub(n, Ordering::Relaxed);
+            debug_assert!(prev >= n, "kv pool released more pages than granted");
+        }
+    }
+
+    /// Pages still grantable right now (advisory — concurrent grants
+    /// may take them first; `usize::MAX`-ceiling pools report a huge
+    /// headroom).
+    pub fn available(&self) -> usize {
+        self.total_pages.saturating_sub(self.in_use.load(Ordering::Relaxed))
+    }
+
+    /// Admission check: could `n` pages be granted right now? The
+    /// unbudgeted pool always says yes (reservation is a no-op).
+    pub fn can_reserve(&self, n: usize) -> bool {
+        !self.is_bounded() || n <= self.available()
+    }
+
+    /// Pages currently granted.
+    pub fn pages_in_use(&self) -> usize {
+        self.in_use.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of granted pages since startup.
+    pub fn peak_pages_in_use(&self) -> usize {
+        self.peak_in_use.load(Ordering::Relaxed)
+    }
+
+    /// Count one refused admission reservation.
+    pub fn record_reservation_failed(&self) {
+        self.reservations_failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Admission reservations refused since startup.
+    pub fn reservations_failed(&self) -> u64 {
+        self.reservations_failed.load(Ordering::Relaxed)
+    }
+
+    /// Count one mid-decode eviction.
+    pub fn record_eviction(&self) {
+        self.evictions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Mid-decode evictions since startup.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn bounded_pool_enforces_the_page_ceiling() {
+        // 3 pages of 4 tokens × 2 lanes: page = 2·4·2·4 = 64 B.
+        let pool = KvPool::bounded(4, 2, 3 * 64).unwrap();
+        assert!(pool.is_bounded());
+        assert_eq!(pool.total_pages(), 3);
+        assert!(pool.try_acquire());
+        assert!(pool.try_acquire());
+        assert!(pool.try_acquire());
+        assert!(!pool.try_acquire(), "fourth grant must fail");
+        assert_eq!(pool.pages_in_use(), 3);
+        assert_eq!(pool.available(), 0);
+        pool.release(2);
+        assert_eq!(pool.pages_in_use(), 1);
+        assert!(pool.try_acquire());
+        assert_eq!(pool.peak_pages_in_use(), 3, "peak survives releases");
+    }
+
+    #[test]
+    fn budget_below_one_page_is_a_config_error() {
+        let err = KvPool::bounded(64, 128, 10).unwrap_err();
+        assert!(err.to_string().contains("kv budget"), "{err}");
+        assert!(KvPool::bounded(0, 2, 1024).is_err());
+    }
+
+    #[test]
+    fn budget_rounds_down_to_whole_pages() {
+        // Page = 64 B; a 100 B budget holds exactly one page.
+        let pool = KvPool::bounded(4, 2, 100).unwrap();
+        assert_eq!(pool.total_pages(), 1);
+    }
+
+    #[test]
+    fn unbounded_pool_always_reserves_and_grants() {
+        let pool = KvPool::unbounded(64);
+        assert!(!pool.is_bounded());
+        assert!(pool.can_reserve(1_000_000));
+        for _ in 0..1000 {
+            assert!(pool.try_acquire());
+        }
+        assert_eq!(pool.pages_in_use(), 1000);
+        pool.release(1000);
+        assert_eq!(pool.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn can_reserve_tracks_availability() {
+        let pool = KvPool::bounded(4, 2, 2 * 64).unwrap();
+        assert!(pool.can_reserve(2));
+        assert!(!pool.can_reserve(3));
+        assert!(pool.try_acquire());
+        assert!(pool.can_reserve(1));
+        assert!(!pool.can_reserve(2));
+    }
+
+    #[test]
+    fn pages_for_rounds_up() {
+        let pool = KvPool::unbounded(64);
+        assert_eq!(pool.pages_for(0), 0);
+        assert_eq!(pool.pages_for(1), 1);
+        assert_eq!(pool.pages_for(64), 1);
+        assert_eq!(pool.pages_for(65), 2);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let pool = KvPool::bounded(4, 2, 64).unwrap();
+        pool.record_reservation_failed();
+        pool.record_reservation_failed();
+        pool.record_eviction();
+        assert_eq!(pool.reservations_failed(), 2);
+        assert_eq!(pool.evictions(), 1);
+    }
+
+    #[test]
+    fn concurrent_grants_never_overshoot() {
+        let pool = Arc::new(KvPool::bounded(4, 2, 50 * 64).unwrap());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let p = Arc::clone(&pool);
+            handles.push(std::thread::spawn(move || {
+                let mut got = 0usize;
+                for _ in 0..100 {
+                    if p.try_acquire() {
+                        got += 1;
+                    }
+                }
+                got
+            }));
+        }
+        let granted: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(granted, 50, "exactly the ceiling is granted");
+        assert_eq!(pool.pages_in_use(), 50);
+        assert!(pool.peak_pages_in_use() <= 50);
+    }
+}

@@ -10,6 +10,11 @@
 //!   artifacts on disk — and shared across every serving worker and
 //!   replica; callers hold per-thread execution scratch. This is the
 //!   crate's compile-once/serve-many backbone.
+//! * [`kv_pool`] — the [`KvPool`](kv_pool::KvPool): the serving-side
+//!   memory governor — a global grant pool of fixed-size KV pages
+//!   under a hard byte budget (`rsr serve --kv-budget`), shared by
+//!   every per-slot `KvCache` so exhaustion degrades gracefully
+//!   (`Error::KvBudgetExceeded`) instead of OOM-killing the process.
 //! * [`executable`] — the [`ExecutablePlan`]: one execution object
 //!   over a store-shared plan, dispatching to whichever backend an
 //!   `rsr tune` profile selected for that layer (RSR, RSR++
@@ -37,9 +42,11 @@ use crate::error::{Error, Result};
 use crate::util::json::Json;
 
 pub mod executable;
+pub mod kv_pool;
 pub mod plan_store;
 
 pub use executable::ExecutablePlan;
+pub use kv_pool::KvPool;
 pub use plan_store::{PlanEntry, PlanScratch, PlanStore, SharedRsrPlan, SharedTernaryPlan};
 
 /// Whether this build can execute AOT artifacts through PJRT.

@@ -466,7 +466,11 @@ impl PlanStore {
     }
 
     /// A registry backed by a directory of `.rsrz` artifacts (the
-    /// output of `rsr pack`). Artifacts load lazily on first `get`.
+    /// output of `rsr pack`). Artifacts load lazily on first `get`;
+    /// each load validates the artifact checksum before the plan is
+    /// handed to any executor. Stray `*.tmp` leftovers of a killed
+    /// `rsr pack` are quarantined here, at open, so a partial write
+    /// can never shadow or be mistaken for a finished plan.
     pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         if !dir.is_dir() {
@@ -475,6 +479,7 @@ impl PlanStore {
                 dir.display()
             )));
         }
+        crate::util::atomicfile::quarantine_stray_tmp(&dir)?;
         Ok(Self {
             source: Source::Dir(dir),
             entries: Mutex::new(HashMap::new()),

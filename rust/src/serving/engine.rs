@@ -45,6 +45,7 @@ use crate::kernels::Backend;
 use crate::model::sampler::Sampler;
 use crate::model::transformer::Transformer;
 use crate::model::weights::ModelWeights;
+use crate::runtime::kv_pool::KvPool;
 use crate::runtime::plan_store::PlanStore;
 use crate::tune::candidates::TunedBackend;
 use crate::tune::profile::TuneProfile;
@@ -70,6 +71,10 @@ pub struct FaultPlan {
     pub stall_at_step: Option<(u64, u64)>,
     /// Reject every submit as queue-full (admission-control testing).
     pub force_queue_full: bool,
+    /// Pretend the KV pool is exhausted just before the listed step:
+    /// the pressure checkpoint must evict the youngest live slot with
+    /// `KvBudgetExceeded`, exactly as if the real budget ran dry.
+    pub exhaust_kv_at_step: Option<u64>,
 }
 
 /// Fault checkpoint executed (inside the supervised section) just
@@ -98,6 +103,19 @@ fn fault_queue_full(cfg: &EngineConfig) -> bool {
 #[cfg(not(any(test, feature = "fault-inject")))]
 #[inline(always)]
 fn fault_queue_full(_cfg: &EngineConfig) -> bool {
+    false
+}
+
+/// Fault checkpoint consulted by the KV pressure sweep: force one
+/// youngest-slot eviction just before the given engine step.
+#[cfg(any(test, feature = "fault-inject"))]
+fn fault_exhaust_kv(step: u64, cfg: &EngineConfig) -> bool {
+    cfg.fault.exhaust_kv_at_step == Some(step)
+}
+
+#[cfg(not(any(test, feature = "fault-inject")))]
+#[inline(always)]
+fn fault_exhaust_kv(_step: u64, _cfg: &EngineConfig) -> bool {
     false
 }
 
@@ -138,6 +156,13 @@ pub struct EngineConfig {
     /// Per-(layer, backend) execution profiling (`--profile-layers`).
     /// Off by default: every probe site is then a single branch.
     pub profile_layers: bool,
+    /// Hard byte budget for all KV pages (`--kv-budget`). `None` — the
+    /// default — serves bit-identically to the unbudgeted engine:
+    /// pages still allocate lazily, but no reservation can fail and no
+    /// eviction ever fires.
+    pub kv_budget: Option<u64>,
+    /// Positions per KV page (`--kv-page-tokens`).
+    pub kv_page_tokens: usize,
     /// Fault-injection plan (tests / `fault-inject` feature only).
     #[cfg(any(test, feature = "fault-inject"))]
     pub fault: FaultPlan,
@@ -156,6 +181,8 @@ impl Default for EngineConfig {
             tune_profile: None,
             trace_slow_ms: None,
             profile_layers: false,
+            kv_budget: None,
+            kv_page_tokens: KvPool::DEFAULT_PAGE_TOKENS,
             #[cfg(any(test, feature = "fault-inject"))]
             fault: FaultPlan::default(),
         }
@@ -188,6 +215,12 @@ pub struct InferenceEngine {
     /// Decode slots currently seated across all workers (the
     /// `rsr_live_slots` gauge).
     live_slots: Arc<AtomicUsize>,
+    /// The engine-wide KV page pool (all layers × slots × workers draw
+    /// from it; `--kv-budget` caps it, unset leaves it unbounded).
+    kv_pool: Arc<KvPool>,
+    /// Decoder depth — every cached position costs one page slot per
+    /// layer, so admission math multiplies by this.
+    n_layers: usize,
     cfg: EngineConfig,
 }
 
@@ -352,6 +385,16 @@ impl InferenceEngine {
             .map(|ms| Arc::new(TraceRing::with_threshold(Duration::from_millis(ms))));
         let layer_profile = cfg.profile_layers.then(|| Arc::new(LayerProfile::new()));
         let live_slots = Arc::new(AtomicUsize::new(0));
+        // One pool for the whole engine: every layer of every worker's
+        // model draws pages from it, so `--kv-budget` is a process
+        // ceiling, not a per-worker one.
+        let kv_dim = weights.config.n_kv_heads * weights.config.head_dim();
+        let n_layers = weights.config.n_layers;
+        let page_tokens = cfg.kv_page_tokens.max(1);
+        let kv_pool = match cfg.kv_budget {
+            Some(bytes) => Arc::new(KvPool::bounded(page_tokens, kv_dim, bytes)?),
+            None => Arc::new(KvPool::unbounded(page_tokens)),
+        };
 
         let mut workers = Vec::with_capacity(cfg.workers.max(1));
         for wid in 0..cfg.workers.max(1) {
@@ -366,11 +409,14 @@ impl InferenceEngine {
                 heartbeat_ms: Arc::clone(&heartbeat_ms),
                 trace: trace.clone(),
                 live_slots: Arc::clone(&live_slots),
+                kv_pool: Arc::clone(&kv_pool),
+                n_layers,
                 cfg: cfg.clone(),
             };
             let weights = Arc::clone(&weights);
             let store = store.clone();
             let profile = layer_profile.clone();
+            let pool = Arc::clone(&kv_pool);
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("rsr-worker-{wid}"))
@@ -385,11 +431,16 @@ impl InferenceEngine {
                         // per-layer aggregates.
                         let rebuild = || -> Result<Transformer> {
                             let mut m = match &store {
-                                Some(s) => Transformer::from_plan_store(&weights, s)?,
-                                None => Transformer::from_weights(
+                                Some(s) => Transformer::from_plan_store_pooled(
+                                    &weights,
+                                    s,
+                                    Arc::clone(&pool),
+                                )?,
+                                None => Transformer::from_weights_pooled(
                                     &weights,
                                     ctx.cfg.backend,
                                     ctx.cfg.k,
+                                    Arc::clone(&pool),
                                 )?,
                             };
                             if let Some(p) = &profile {
@@ -424,6 +475,8 @@ impl InferenceEngine {
             trace,
             layer_profile,
             live_slots,
+            kv_pool,
+            n_layers,
             cfg,
         })
     }
@@ -454,6 +507,24 @@ impl InferenceEngine {
             return Err(Error::DeadlineExceeded(
                 "deadline expired before admission".into(),
             ));
+        }
+        // KV admission checkpoint: a prompt whose pages could not fit
+        // even an EMPTY pool can never be seated — shed it now with the
+        // named budget error instead of letting it starve in the queue.
+        // Transient pressure (pages held by in-flight sequences) is
+        // NOT checked here; the seating reservation handles it.
+        if self.kv_pool.is_bounded() {
+            let needed = self.n_layers * self.kv_pool.pages_for(request.prompt.len());
+            if needed > self.kv_pool.total_pages() {
+                self.kv_pool.record_reservation_failed();
+                self.metrics.record_admission(true);
+                self.metrics.record_kv_budget_exceeded(request.arrival.elapsed());
+                self.trace_shed(&request, "kv_budget_exceeded");
+                return Err(Error::KvBudgetExceeded(format!(
+                    "prompt needs {needed} KV pages but the budget holds {}",
+                    self.kv_pool.total_pages()
+                )));
+            }
         }
         let res = self.queue.try_push(request);
         self.metrics.record_admission(res.is_ok());
@@ -520,6 +591,11 @@ impl InferenceEngine {
         self.live_slots.load(Ordering::Relaxed)
     }
 
+    /// The engine-wide KV page pool (gauges, tests, `rsr status`).
+    pub fn kv_pool(&self) -> &Arc<KvPool> {
+        &self.kv_pool
+    }
+
     /// Time since the engine started.
     pub fn uptime(&self) -> Duration {
         self.epoch.elapsed()
@@ -531,16 +607,39 @@ impl InferenceEngine {
         self.trace.as_ref().map(|t| t.snapshot())
     }
 
-    /// The metrics snapshot, extended with the per-layer execution
-    /// profile when `--profile-layers` is on (each row's share is
-    /// attributed against `decode_busy_ns`).
+    /// The metrics snapshot, extended with the KV pool gauges and —
+    /// when `--profile-layers` is on — the per-layer execution profile
+    /// (each row's share is attributed against `decode_busy_ns`).
     pub fn snapshot(&self) -> Json {
         let snap = self.metrics.snapshot();
-        let Some(profile) = &self.layer_profile else { return snap };
-        let busy = self.metrics.decode_busy_ns.load(Ordering::Relaxed);
         match snap {
             Json::Obj(mut map) => {
-                map.insert("layers".into(), profile.snapshot(busy));
+                // Pool gauges: `kv_pages_total` reads 0 on an
+                // unbudgeted pool (no ceiling), so dashboards can tell
+                // "no budget" from "budget of N".
+                let total =
+                    if self.kv_pool.is_bounded() { self.kv_pool.total_pages() } else { 0 };
+                map.insert("kv_pages_total".into(), Json::num(total as f64));
+                map.insert(
+                    "kv_pages_in_use".into(),
+                    Json::num(self.kv_pool.pages_in_use() as f64),
+                );
+                map.insert(
+                    "kv_pages_peak".into(),
+                    Json::num(self.kv_pool.peak_pages_in_use() as f64),
+                );
+                map.insert(
+                    "kv_reservations_failed_total".into(),
+                    Json::num(self.kv_pool.reservations_failed() as f64),
+                );
+                map.insert(
+                    "kv_evictions_total".into(),
+                    Json::num(self.kv_pool.evictions() as f64),
+                );
+                if let Some(profile) = &self.layer_profile {
+                    let busy = self.metrics.decode_busy_ns.load(Ordering::Relaxed);
+                    map.insert("layers".into(), profile.snapshot(busy));
+                }
                 Json::Obj(map)
             }
             other => other,
@@ -584,6 +683,11 @@ struct WorkerCtx {
     trace: Option<Arc<TraceRing>>,
     /// Seated-slot gauge, +1 at seat / −1 at retire.
     live_slots: Arc<AtomicUsize>,
+    /// The engine-wide KV page pool (reservation + pressure sweeps).
+    kv_pool: Arc<KvPool>,
+    /// Decoder depth: one page grant per layer per `page_tokens`
+    /// cached positions.
+    n_layers: usize,
     cfg: EngineConfig,
 }
 
@@ -620,18 +724,23 @@ enum Retire {
     Deadline,
     /// Client cancelled (disconnect observed by the server).
     Cancelled,
+    /// KV page budget could not cover the request: seating reservation
+    /// refused, or evicted mid-decode (youngest-first) under page
+    /// exhaustion.
+    KvBudget(String),
 }
 
 impl Retire {
     /// The error string carried by the terminal response (`None` for
-    /// success). Deadline/cancel messages are stable prefixes that
-    /// tests and clients can match on.
+    /// success). Deadline/cancel/budget messages are stable prefixes
+    /// that tests and clients can match on.
     fn error_message(&self) -> Option<String> {
         match self {
             Retire::Done => None,
             Retire::Failed(m) => Some(m.clone()),
             Retire::Deadline => Some("deadline exceeded".into()),
             Retire::Cancelled => Some("cancelled by client".into()),
+            Retire::KvBudget(m) => Some(format!("kv budget exceeded: {m}")),
         }
     }
 
@@ -644,7 +753,17 @@ impl Retire {
             Retire::Failed(_) => "failed",
             Retire::Deadline => "deadline_exceeded",
             Retire::Cancelled => "cancelled",
+            Retire::KvBudget(_) => "kv_budget_exceeded",
         }
+    }
+}
+
+/// Map a model-step error to its retirement class: a refused KV page
+/// grant is the named budget outcome, anything else is a failure.
+fn retire_for_model_error(e: &Error, phase: &str) -> Retire {
+    match e {
+        Error::KvBudgetExceeded(m) => Retire::KvBudget(format!("{phase}: {m}")),
+        other => Retire::Failed(format!("{phase}: {other}")),
     }
 }
 
@@ -680,6 +799,7 @@ fn account_and_send(
         Retire::Failed(_) => ctx.metrics.record_failure(arrival.elapsed()),
         Retire::Deadline => ctx.metrics.record_deadline_exceeded(arrival.elapsed()),
         Retire::Cancelled => ctx.metrics.record_cancelled(arrival.elapsed()),
+        Retire::KvBudget(_) => ctx.metrics.record_kv_budget_exceeded(arrival.elapsed()),
     }
     ctx.inflight.fetch_sub(1, Ordering::Relaxed);
     ctx.tx.send(response).is_ok()
@@ -780,7 +900,11 @@ fn sequential_loop(
                 });
                 let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     fault_before_step(step_no, &ctx.cfg);
-                    run_request(&mut model, &request, &mut rng)
+                    let out = run_request(&mut model, &request, &mut rng);
+                    // Eager page release: an idle sequential worker
+                    // holds zero KV pages between requests.
+                    model.reset();
+                    out
                 }));
                 match run {
                     Ok((response, outcome)) => {
@@ -857,6 +981,11 @@ struct SlotState {
     /// Generated tokens.
     tokens: Vec<u32>,
     picked_up: Instant,
+    /// Worker-local seating order — the KV pressure sweep evicts the
+    /// slot with the **highest** value (the youngest: least work lost,
+    /// and the oldest sequences — closest to finishing — keep their
+    /// pages).
+    seated_seq: u64,
     /// Set by the step that consumes the final prompt token.
     prefill_done: Option<Instant>,
     /// Per-request timeline under `--trace-slow-ms`; `None` when
@@ -1011,6 +1140,8 @@ fn continuous_loop(
     // Panic-quarantined requests awaiting their clean re-run; they
     // re-seat ahead of fresh queue pickups (they already held slots).
     let mut carryover: Vec<Request> = Vec::new();
+    // Worker-local seating order for youngest-first eviction.
+    let mut seat_counter: u64 = 0;
     loop {
         ctx.beat();
         let live = slots.iter().filter(|s| s.is_some()).count();
@@ -1049,12 +1180,34 @@ fn continuous_loop(
                 }
                 continue;
             }
+            // Seating reservation (the slot-assignment checkpoint's
+            // memory analog): the prompt's full page need must be
+            // grantable right now, or the request is shed with the
+            // named budget error instead of being seated into certain
+            // mid-prefill eviction. A no-op on an unbudgeted pool.
+            let needed = ctx.n_layers * ctx.kv_pool.pages_for(request.prompt.len());
+            if !ctx.kv_pool.can_reserve(needed) {
+                ctx.kv_pool.record_reservation_failed();
+                if !respond_terminal(
+                    ctx,
+                    &request,
+                    Retire::KvBudget(format!(
+                        "seating reservation refused: prompt needs {needed} pages, \
+                         {} available",
+                        ctx.kv_pool.available()
+                    )),
+                ) {
+                    return;
+                }
+                continue;
+            }
             let free = slots
                 .iter()
                 .position(|s| s.is_none())
                 .expect("admission is capped at the free-slot count");
             model.reset_slot(free);
             let picked_up = Instant::now();
+            seat_counter += 1;
             ctx.live_slots.fetch_add(1, Ordering::Relaxed);
             let trace = ctx.trace.as_ref().map(|_| {
                 let mut b =
@@ -1068,6 +1221,7 @@ fn continuous_loop(
                 next_input,
                 prompt_pos: 0,
                 tokens: Vec::with_capacity(request.max_new_tokens),
+                seated_seq: seat_counter,
                 prefill_done: None,
                 trace,
                 request,
@@ -1086,7 +1240,76 @@ fn continuous_loop(
             };
             if let Some(outcome) = outcome {
                 let st = slots[i].take().expect("checked live above");
+                // Eager page release: a retired sequence's KV pages go
+                // back to the pool at retirement, not at slot reuse.
+                model.reset_slot(i);
                 if !finish_slot(st, outcome, ctx) {
+                    return;
+                }
+            }
+        }
+        // KV pressure checkpoint (the between-step sweep's memory
+        // analog): estimate the pages the upcoming step will grant —
+        // per slot, the page delta of appending its chunk across every
+        // layer — and while the pool cannot cover it, retire the
+        // **youngest** live slot with the named budget error, freeing
+        // its pages immediately. Youngest-first loses the least work
+        // and lets the oldest sequences (closest to finishing) keep
+        // their pages; the loop terminates because each round either
+        // fits or removes a slot. `exhaust_kv_at_step` forces one
+        // eviction so chaos tests can drive this deterministically.
+        // Cross-worker races (another worker granting pages between
+        // this check and the step) surface as a mid-step
+        // `KvBudgetExceeded`, handled below — never a panic.
+        let mut force_evict =
+            fault_exhaust_kv(ctx.step_counter.load(Ordering::Relaxed) + 1, cfg);
+        if ctx.kv_pool.is_bounded() || force_evict {
+            loop {
+                let prefilling = slots
+                    .iter()
+                    .flatten()
+                    .filter(|st| st.prompt_pos < st.request.prompt.len())
+                    .count();
+                let share =
+                    if prefilling == 0 { 1 } else { (prefill_chunk / prefilling).max(1) };
+                let mut delta = 0usize;
+                for i in 0..max_slots {
+                    let Some(st) = &slots[i] else { continue };
+                    let seq = model.seq_len_slot(i);
+                    let prompt = &st.request.prompt;
+                    // Upper bound of this slot's next chunk (invalid-
+                    // token truncation can only shrink it — a smaller
+                    // step never needs more pages).
+                    let take = if st.prompt_pos < prompt.len() {
+                        (prompt.len() - st.prompt_pos)
+                            .min(share)
+                            .min(max_seq.saturating_sub(seq))
+                            .max(1)
+                    } else {
+                        1
+                    };
+                    delta += ctx.n_layers
+                        * (ctx.kv_pool.pages_for(seq + take)
+                            - ctx.kv_pool.pages_for(seq));
+                }
+                if !force_evict && delta <= ctx.kv_pool.available() {
+                    break;
+                }
+                let Some(young) = (0..max_slots)
+                    .filter(|&i| slots[i].is_some())
+                    .max_by_key(|&i| slots[i].as_ref().map_or(0, |st| st.seated_seq))
+                else {
+                    break;
+                };
+                force_evict = false;
+                ctx.kv_pool.record_eviction();
+                let st = slots[young].take().expect("picked from live slots");
+                model.reset_slot(young);
+                if !finish_slot(
+                    st,
+                    Retire::KvBudget("evicted under page pressure (youngest slot)".into()),
+                    ctx,
+                ) {
                     return;
                 }
             }
@@ -1126,6 +1349,7 @@ fn continuous_loop(
             };
             if let Some(msg) = failure {
                 let st = slots[i].take().expect("checked live above");
+                model.reset_slot(i);
                 if !finish_slot(st, Retire::Failed(msg), ctx) {
                     return;
                 }
@@ -1174,12 +1398,20 @@ fn continuous_loop(
             Ok(Ok(l)) => l,
             Ok(Err(e)) => {
                 // Per-slot preconditions were checked above, so a step
-                // failure is an engine-bug class: fail the live rows
-                // loudly rather than wedging them.
-                let msg = e.to_string();
+                // failure is either the cross-worker KV race (another
+                // worker granted the pages this step had headroom for
+                // — retire the step's rows with the named budget
+                // error) or an engine-bug class (fail them loudly).
+                // Either way every row reaches a terminal outcome and
+                // its partial KV state is released.
+                let budget_race = matches!(e, Error::KvBudgetExceeded(_));
                 for &i in &step_slots {
                     let st = slots[i].take().expect("was in the step");
-                    if !finish_slot(st, Retire::Failed(format!("step: {msg}")), ctx) {
+                    model.reset_slot(i);
+                    if budget_race {
+                        ctx.kv_pool.record_eviction();
+                    }
+                    if !finish_slot(st, retire_for_model_error(&e, "step"), ctx) {
                         return;
                     }
                 }
@@ -1274,6 +1506,10 @@ fn continuous_loop(
         ctx.metrics.record_decode_step(step_slots.len(), step_dur);
         for &i in &retired {
             let st = slots[i].take().expect("retired from the step");
+            // Eager page release at completion, so a drained engine
+            // holds zero pages and waiting admissions see the headroom
+            // without waiting for slot reuse.
+            model.reset_slot(i);
             if !finish_slot(st, Retire::Done, ctx) {
                 return;
             }
@@ -1313,8 +1549,9 @@ fn run_request(
             return out;
         }
         if let Err(e) = model.forward_token(t) {
-            let msg = format!("prefill: {e}");
-            return (Response::err(request.id, msg.clone()), Retire::Failed(msg));
+            let outcome = retire_for_model_error(&e, "prefill");
+            let msg = outcome.error_message().unwrap_or_default();
+            return (Response::err(request.id, msg), outcome);
         }
     }
     timing.prefill = t0.elapsed();
@@ -1894,5 +2131,172 @@ mod tests {
         let snap = engine.metrics().snapshot();
         assert_eq!(snap.get("rejected_total").unwrap().as_f64(), Some(1.0));
         engine.shutdown();
+    }
+
+    // ---- memory governance: KV budget ----------------------------
+
+    /// Poll until the engine's pool reads zero pages in use. Terminal
+    /// responses are sent before (or concurrently with) the page
+    /// release on the panic-rebuild path, so a bounded wait is the
+    /// honest assertion.
+    fn assert_pool_drains(engine: &InferenceEngine) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while engine.kv_pool().pages_in_use() != 0 {
+            assert!(
+                Instant::now() < deadline,
+                "pool held {} page(s) after every request retired",
+                engine.kv_pool().pages_in_use()
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    #[test]
+    fn oversized_prompt_is_shed_at_admission_with_the_named_budget_error() {
+        // tiny: kv_dim = 2 kv-heads × 16 head-dim = 32 floats, so a
+        // 4-token page is 2·4·32·4 = 1024 bytes; a 2048-byte budget
+        // holds 2 pages. A 16-token prompt needs 4 pages × 2 layers =
+        // 8 — impossible even on an empty pool → admission sheds it.
+        let engine = tiny_engine(EngineConfig {
+            workers: 1,
+            kv_budget: Some(2048),
+            kv_page_tokens: 4,
+            ..Default::default()
+        });
+        assert_eq!(engine.kv_pool().total_pages(), 2);
+        let err = engine.submit(Request::new(1, (10u32..26).collect(), 4)).unwrap_err();
+        match &err {
+            Error::KvBudgetExceeded(m) => assert!(m.contains("8 KV pages"), "{m}"),
+            other => panic!("expected KvBudgetExceeded, got {other:?}"),
+        }
+        assert_eq!(engine.kv_pool().reservations_failed(), 1);
+        assert_eq!(engine.inflight(), 0, "shed work must not count inflight");
+        // The shed is a first-class terminal outcome: conservation
+        // holds with the kv_budget_exceeded counter carrying it.
+        let m = engine.snapshot();
+        assert_eq!(m.get("admitted").unwrap().as_f64(), Some(1.0));
+        assert_eq!(m.get("kv_budget_exceeded_total").unwrap().as_f64(), Some(1.0));
+        assert_eq!(m.get("inflight").unwrap().as_f64(), Some(0.0));
+        assert!(matches!(m.get("conserved"), Some(Json::Bool(true))));
+        // A prompt that fits still serves: the budget degrades, never
+        // disables.
+        engine.submit(Request::new(2, vec![10, 20], 2)).unwrap();
+        let r = engine.recv_timeout(Duration::from_secs(30)).expect("response");
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_pool_drains(&engine);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn forced_exhaustion_evicts_the_youngest_slot_with_a_terminal_error() {
+        // `exhaust_kv_at_step` fires the pressure checkpoint before
+        // step 2, while request 1 (and possibly 2) is mid-flight: the
+        // youngest live slot is retired with the named budget error —
+        // never a panic, never a hang — and everything else completes.
+        let engine = tiny_engine(EngineConfig {
+            workers: 1,
+            fault: FaultPlan { exhaust_kv_at_step: Some(2), ..Default::default() },
+            ..Default::default()
+        });
+        engine.submit(Request::new(1, vec![10, 20, 30], 16)).unwrap();
+        engine.submit(Request::new(2, vec![11, 21, 31], 16)).unwrap();
+        let mut errs = Vec::new();
+        for _ in 0..2 {
+            let r = engine.recv_timeout(Duration::from_secs(30)).expect("terminal");
+            if let Some(e) = r.error {
+                errs.push(e);
+            }
+        }
+        assert_eq!(errs.len(), 1, "exactly one slot is evicted: {errs:?}");
+        assert!(errs[0].contains("kv budget exceeded"), "{}", errs[0]);
+        assert!(errs[0].contains("evicted under page pressure"), "{}", errs[0]);
+        assert_eq!(engine.kv_pool().evictions(), 1);
+        assert_eq!(engine.inflight(), 0);
+        let m = engine.snapshot();
+        assert_eq!(m.get("kv_budget_exceeded_total").unwrap().as_f64(), Some(1.0));
+        assert_eq!(m.get("kv_evictions_total").unwrap().as_f64(), Some(1.0));
+        assert!(matches!(m.get("conserved"), Some(Json::Bool(true))));
+        assert_pool_drains(&engine);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn pool_occupancy_returns_to_zero_after_retirement_and_panic_rebuild() {
+        // Every retirement path — completion AND the panic-rebuild —
+        // must return all pages: a budgeted engine that leaked pages
+        // would brown out after enough panics.
+        let engine = tiny_engine(EngineConfig {
+            workers: 1,
+            kv_budget: Some(64 * 1024),
+            kv_page_tokens: 4,
+            batch: BatchPolicy { max_slots: 2, prefill_chunk: 1, ..Default::default() },
+            fault: FaultPlan { panic_at_steps: vec![3], ..Default::default() },
+            ..Default::default()
+        });
+        // The step-3 panic lands mid-prefill of the 8-token prompt →
+        // quarantine retry on a rebuilt model → completes. The old
+        // model's pages are released when the rebuild drops it.
+        engine.submit(Request::new(1, vec![10, 20, 30, 40, 50, 60, 70, 80], 4)).unwrap();
+        let r = engine.recv_timeout(Duration::from_secs(30)).expect("terminal");
+        assert!(r.error.is_none(), "retried request must complete: {:?}", r.error);
+        assert_eq!(engine.panics_total(), 1);
+        assert_pool_drains(&engine);
+        assert!(engine.kv_pool().peak_pages_in_use() > 0, "pages were actually used");
+        // And again for a plain completion, plus a healthy follow-up.
+        engine.submit(Request::new(2, vec![10, 20], 3)).unwrap();
+        let r = engine.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(engine.inflight(), 0);
+        assert_pool_drains(&engine);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn budgeted_engine_matches_unbudgeted_tokens_exactly() {
+        // The acceptance pin for `--kv-budget`: a budget large enough
+        // to never shed or evict must serve bit-identical tokens to
+        // the unbudgeted engine — paging, reservations and sweeps are
+        // invisible to the math.
+        let weights =
+            Arc::new(ModelWeights::generate(ModelConfig::tiny(), 99).unwrap());
+        let prompts: Vec<Vec<u32>> =
+            (0..5u32).map(|i| vec![10 + i, 20, 30 + (i % 3)]).collect();
+        let run = |budget: Option<u64>, page_tokens: usize| -> Vec<Vec<u32>> {
+            let engine = InferenceEngine::start(
+                Arc::clone(&weights),
+                EngineConfig {
+                    workers: 1,
+                    kv_budget: budget,
+                    kv_page_tokens: page_tokens,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            for (i, p) in prompts.iter().enumerate() {
+                engine.submit(Request::new(i as u64, p.clone(), 6)).unwrap();
+            }
+            let mut out: Vec<(u64, Vec<u32>)> = (0..prompts.len())
+                .map(|_| {
+                    let r =
+                        engine.recv_timeout(Duration::from_secs(60)).expect("response");
+                    assert!(r.error.is_none(), "{:?}", r.error);
+                    (r.id, r.tokens)
+                })
+                .collect();
+            engine.shutdown();
+            out.sort_by_key(|(id, _)| *id);
+            out.into_iter().map(|(_, t)| t).collect()
+        };
+        let unbudgeted = run(None, KvPool::DEFAULT_PAGE_TOKENS);
+        assert_eq!(
+            run(Some(1 << 20), 4),
+            unbudgeted,
+            "a generous budget with tiny pages must not perturb tokens"
+        );
+        assert_eq!(
+            run(Some(1 << 20), 1),
+            unbudgeted,
+            "one-token pages must not perturb tokens"
+        );
     }
 }

@@ -24,6 +24,12 @@ pub struct Metrics {
     pub deadline_exceeded: AtomicU64,
     /// Requests retired because the client cancelled (disconnected).
     pub cancelled: AtomicU64,
+    /// Requests retired because the KV page pool's byte budget could
+    /// not cover them — shed at admission/seating or evicted
+    /// youngest-first mid-decode. A terminal outcome, so conservation
+    /// (`admitted == terminals + inflight`) holds under budget
+    /// pressure exactly as it does under deadline pressure.
+    pub kv_budget_exceeded: AtomicU64,
     /// Worker panics caught by supervision (each converts to per-slot
     /// terminal responses and a model rebuild, never a hung waiter).
     pub panics: AtomicU64,
@@ -62,14 +68,20 @@ struct Hists {
     /// The same `total` observations split by terminal outcome
     /// (indexed by [`OUTCOMES`]) — the `outcome` label of the
     /// Prometheus `rsr_request_total_us` histogram.
-    total_by_outcome: [LatencyHistogram; 4],
+    total_by_outcome: [LatencyHistogram; 5],
     /// Time to first token: queue wait + prefill, per completed
     /// request — the latency chunked prefill exists to cut.
     ttft: LatencyHistogram,
 }
 
-/// The four terminal outcomes, in `total_by_outcome` index order.
-pub const OUTCOMES: [&str; 4] = ["completed", "failed", "deadline_exceeded", "cancelled"];
+/// The five terminal outcomes, in `total_by_outcome` index order.
+pub const OUTCOMES: [&str; 5] = [
+    "completed",
+    "failed",
+    "deadline_exceeded",
+    "cancelled",
+    "kv_budget_exceeded",
+];
 
 impl Metrics {
     /// Fresh metrics.
@@ -122,6 +134,15 @@ impl Metrics {
         h.total_by_outcome[3].record(total);
     }
 
+    /// Record a KV-budget retirement (admission shed, seating refusal,
+    /// or mid-decode eviction) with its admitted → terminal wall time.
+    pub fn record_kv_budget_exceeded(&self, total: Duration) {
+        self.kv_budget_exceeded.fetch_add(1, Ordering::Relaxed);
+        let mut h = self.hist.lock().unwrap();
+        h.total.record(total);
+        h.total_by_outcome[4].record(total);
+    }
+
     /// Record one supervised worker panic.
     pub fn record_panic(&self) {
         self.panics.fetch_add(1, Ordering::Relaxed);
@@ -160,8 +181,9 @@ impl Metrics {
         let failed = self.failed.load(Ordering::Relaxed);
         let deadline = self.deadline_exceeded.load(Ordering::Relaxed);
         let cancelled = self.cancelled.load(Ordering::Relaxed);
+        let kv_budget = self.kv_budget_exceeded.load(Ordering::Relaxed);
         let admitted = self.admitted.load(Ordering::Relaxed);
-        let terminal = completed + failed + deadline + cancelled;
+        let terminal = completed + failed + deadline + cancelled + kv_budget;
         debug_assert!(
             admitted >= terminal,
             "conservation violated: admitted {admitted} < terminal {terminal}"
@@ -222,8 +244,9 @@ impl Metrics {
             ("completed", Json::num(completed as f64)),
             ("failed", Json::num(failed as f64)),
             // Conservation: admitted == completed + failed +
-            // deadline_exceeded + cancelled + inflight (debug-asserted
-            // above; `conserved` lets scrapers check it live).
+            // deadline_exceeded + cancelled + kv_budget_exceeded +
+            // inflight (debug-asserted above; `conserved` lets
+            // scrapers check it live).
             ("inflight", Json::num(inflight as f64)),
             ("conserved", Json::Bool(admitted >= terminal)),
             // Lifecycle counters (`_total` naming for dashboards;
@@ -232,6 +255,7 @@ impl Metrics {
             ("rejected_total", Json::num(self.rejected.load(Ordering::Relaxed) as f64)),
             ("deadline_exceeded_total", Json::num(deadline as f64)),
             ("cancelled_total", Json::num(cancelled as f64)),
+            ("kv_budget_exceeded_total", Json::num(kv_budget as f64)),
             ("panics_total", Json::num(self.panics.load(Ordering::Relaxed) as f64)),
             ("tokens_out", Json::num(tokens as f64)),
             ("decode_steps", Json::num(steps as f64)),
@@ -342,6 +366,7 @@ mod tests {
         assert_eq!(snap.get("rejected_total").unwrap().as_f64(), Some(1.0));
         assert_eq!(snap.get("deadline_exceeded_total").unwrap().as_f64(), Some(2.0));
         assert_eq!(snap.get("cancelled_total").unwrap().as_f64(), Some(1.0));
+        assert_eq!(snap.get("kv_budget_exceeded_total").unwrap().as_f64(), Some(0.0));
         assert_eq!(snap.get("panics_total").unwrap().as_f64(), Some(1.0));
         // Every shed path entered the outcome-labelled total
         // histograms — p99 under overload sees the shed traffic.
@@ -354,6 +379,27 @@ mod tests {
         assert_eq!(count_of("completed"), 0.0);
         assert_eq!(snap.get("total").unwrap().get("count").unwrap().as_f64(), Some(3.0));
         assert_eq!(snap.get("inflight").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn kv_budget_is_a_terminal_outcome_that_conserves() {
+        let m = Metrics::new();
+        for _ in 0..3 {
+            m.record_admission(true);
+        }
+        m.record(&Timing::default(), 2, 4);
+        m.record_kv_budget_exceeded(Duration::from_micros(70));
+        m.record_kv_budget_exceeded(Duration::from_micros(120));
+        let snap = m.snapshot();
+        assert_eq!(snap.get("kv_budget_exceeded_total").unwrap().as_f64(), Some(2.0));
+        // 3 admitted == 1 completed + 2 kv_budget_exceeded + 0 inflight.
+        assert_eq!(snap.get("inflight").unwrap().as_f64(), Some(0.0));
+        assert!(matches!(snap.get("conserved"), Some(Json::Bool(true))));
+        let by = snap.get("total_by_outcome").unwrap();
+        let kv = by.get("kv_budget_exceeded").unwrap();
+        assert_eq!(kv.get("count").unwrap().as_f64(), Some(2.0));
+        // Budget retirements entered the total histogram too.
+        assert_eq!(snap.get("total").unwrap().get("count").unwrap().as_f64(), Some(3.0));
     }
 
     #[test]

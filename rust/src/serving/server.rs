@@ -302,11 +302,16 @@ fn uptime_s(router: &Router) -> f64 {
 /// Per-replica gauge object shared by `metrics` and `status`.
 fn replica_gauges(router: &Router, i: usize) -> Vec<(&'static str, Json)> {
     let e = router.engine(i);
+    let pool = e.kv_pool();
+    let pages_total = if pool.is_bounded() { pool.total_pages() } else { 0 };
     vec![
         ("replica", Json::num(i as f64)),
         ("queue_depth", Json::num(e.queue_depth() as f64)),
         ("inflight", Json::num(e.inflight() as f64)),
         ("live_slots", Json::num(e.live_slots() as f64)),
+        // KV pool occupancy (0 total = unbounded, no budget in force).
+        ("kv_pages_in_use", Json::num(pool.pages_in_use() as f64)),
+        ("kv_pages_total", Json::num(pages_total as f64)),
         ("heartbeat_ms", Json::num(e.heartbeat_age().as_millis() as f64)),
     ]
 }

@@ -410,16 +410,27 @@ impl TuneProfile {
         Self::new(fingerprint, layers)?.with_bench_batch(bench_batch)
     }
 
-    /// Write to a file.
+    /// Write to a file crash-safely (tmp + fsync + atomic rename): a
+    /// kill mid-`rsr tune` leaves the old profile, the complete new
+    /// one, or a stray `*.tmp` that loaders refuse — never a
+    /// loadable-but-corrupt file.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        self.write_to(&mut f)
+        crate::util::atomicfile::write_atomic(path, |w| self.write_to(w))
     }
 
     /// Read + validate from a file (host fingerprint is **not** checked
     /// here — `rsr inspect` must read foreign profiles; serve-time
-    /// loaders call [`verify_host`](Self::verify_host)).
+    /// loaders call [`verify_host`](Self::verify_host)). In-flight
+    /// `*.tmp` names are refused outright.
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        if crate::util::atomicfile::is_tmp(path) {
+            return Err(Error::Artifact(format!(
+                "{} is an in-flight temporary from an interrupted write, \
+                 not a finished tuning profile",
+                path.display()
+            )));
+        }
         let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
         Self::read_from(&mut f)
     }

@@ -1,0 +1,204 @@
+//! Crash-safe file writes: tmp file + fsync + atomic rename.
+//!
+//! Every durable artifact this crate writes (`.rsrz` plans, `.rsrt`
+//! tuning profiles) goes through [`write_atomic`], which guarantees a
+//! reader can only ever observe one of three states, no matter where a
+//! kill lands:
+//!
+//! * the **old** file (rename not reached),
+//! * the **complete new** file (rename done — rename within one
+//!   directory is atomic on POSIX),
+//! * a stray `*.tmp` alongside either (killed mid-write) — which
+//!   loaders refuse to open ([`is_tmp`]) and directory scans move
+//!   aside ([`quarantine_stray_tmp`]) so it can never be mistaken for
+//!   a finished artifact.
+//!
+//! A loadable-but-corrupt artifact therefore cannot exist: partial
+//! bytes only ever live under the `.tmp` name, and the checksum in the
+//! artifact formats covers whatever slips past anyway.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::log;
+use crate::util::obs::Level;
+
+/// Suffix carried by in-flight writes. Nothing with this suffix is
+/// ever a finished artifact.
+pub const TMP_SUFFIX: &str = ".tmp";
+
+/// Suffix a stray tmp file is renamed to when quarantined (kept for
+/// post-mortem inspection instead of silently deleted).
+pub const QUARANTINE_SUFFIX: &str = ".quarantined";
+
+/// The in-flight path for `target`: same directory, `.tmp` appended to
+/// the full file name (`plans/wq.rsrz` → `plans/wq.rsrz.tmp`). Same
+/// directory is load-bearing: `rename` is only atomic within one
+/// filesystem.
+pub fn tmp_path(target: &Path) -> PathBuf {
+    let mut name = target
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_default();
+    name.push_str(TMP_SUFFIX);
+    target.with_file_name(name)
+}
+
+/// True when `path` names an in-flight temporary — loaders must refuse
+/// these even if their bytes happen to parse.
+pub fn is_tmp(path: &Path) -> bool {
+    path.file_name()
+        .map(|n| n.to_string_lossy().ends_with(TMP_SUFFIX))
+        .unwrap_or(false)
+}
+
+/// Write `path` crash-safely: stream through `write` into
+/// `path + ".tmp"`, flush, `fsync`, then atomically rename over the
+/// target. On any error the tmp file is removed (best-effort) and the
+/// target is left exactly as it was — old content intact, or still
+/// absent.
+pub fn write_atomic(
+    path: impl AsRef<Path>,
+    write: impl FnOnce(&mut BufWriter<File>) -> Result<()>,
+) -> Result<()> {
+    let path = path.as_ref();
+    let tmp = tmp_path(path);
+    let result = (|| -> Result<()> {
+        let mut w = BufWriter::new(File::create(&tmp)?);
+        write(&mut w)?;
+        w.flush()?;
+        // Data must be durable BEFORE the rename publishes the name —
+        // otherwise a power cut can leave a complete-looking file with
+        // unflushed bytes.
+        w.get_ref().sync_all()?;
+        drop(w);
+        std::fs::rename(&tmp, path)?;
+        // Make the rename itself durable (best-effort: some
+        // filesystems reject directory fsync; the rename is still
+        // atomic without it).
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            if let Ok(d) = File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+        Ok(())
+    })();
+    if result.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    result
+}
+
+/// Move a stray tmp file aside as `<name>.quarantined` (overwriting
+/// any previous quarantine of the same name) and return the new path.
+pub fn quarantine(tmp: &Path) -> Result<PathBuf> {
+    let mut name = tmp
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_default();
+    name.push_str(QUARANTINE_SUFFIX);
+    let dest = tmp.with_file_name(name);
+    std::fs::rename(tmp, &dest).map_err(|e| {
+        Error::Artifact(format!("quarantining {}: {e}", tmp.display()))
+    })?;
+    Ok(dest)
+}
+
+/// Scan `dir` for stray `*.tmp` leftovers of killed writes and
+/// quarantine each, logging a warning per file. Returns the
+/// `(tmp, quarantined)` pairs moved. Finished artifacts are untouched.
+pub fn quarantine_stray_tmp(dir: &Path) -> Result<Vec<(PathBuf, PathBuf)>> {
+    let mut moved = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_file() && is_tmp(&path) {
+            let dest = quarantine(&path)?;
+            log!(
+                Level::Warn,
+                "quarantined stray tmp file (killed mid-write?) from={} to={}",
+                path.display(),
+                dest.display()
+            );
+            moved.push((path, dest));
+        }
+    }
+    Ok(moved)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn scratch_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("rsr-atomicfile-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn tmp_path_and_is_tmp() {
+        let t = tmp_path(Path::new("plans/wq.rsrz"));
+        assert_eq!(t, Path::new("plans/wq.rsrz.tmp"));
+        assert!(is_tmp(&t));
+        assert!(!is_tmp(Path::new("plans/wq.rsrz")));
+        assert!(!is_tmp(Path::new("plans/wq.rsrz.tmp.quarantined")));
+    }
+
+    #[test]
+    fn successful_write_leaves_only_the_target() {
+        let dir = scratch_dir("ok");
+        let target = dir.join("out.bin");
+        write_atomic(&target, |w| {
+            w.write_all(b"payload")?;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(std::fs::read(&target).unwrap(), b"payload");
+        assert!(!tmp_path(&target).exists(), "tmp must be renamed away");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn failed_write_leaves_old_content_untouched() {
+        let dir = scratch_dir("fail");
+        let target = dir.join("out.bin");
+        std::fs::write(&target, b"old").unwrap();
+        let err = write_atomic(&target, |w| {
+            w.write_all(b"half-written")?;
+            Err(Error::Artifact("simulated mid-write failure".into()))
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("simulated"), "{err}");
+        assert_eq!(
+            std::fs::read(&target).unwrap(),
+            b"old",
+            "target must keep its previous content"
+        );
+        assert!(!tmp_path(&target).exists(), "failed tmp must be cleaned up");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn stray_tmp_files_are_quarantined_not_loaded() {
+        let dir = scratch_dir("stray");
+        // A finished artifact and a truncated in-flight write, as a
+        // kill mid-`write_atomic` leaves them.
+        std::fs::write(dir.join("done.rsrz"), b"complete").unwrap();
+        let mut f = File::create(dir.join("next.rsrz.tmp")).unwrap();
+        f.write_all(b"trunca").unwrap();
+        drop(f);
+        let moved = quarantine_stray_tmp(&dir).unwrap();
+        assert_eq!(moved.len(), 1);
+        assert!(!dir.join("next.rsrz.tmp").exists());
+        assert!(dir.join("next.rsrz.tmp.quarantined").exists());
+        assert_eq!(std::fs::read(dir.join("done.rsrz")).unwrap(), b"complete");
+        // Idempotent: a second scan finds nothing.
+        assert!(quarantine_stray_tmp(&dir).unwrap().is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

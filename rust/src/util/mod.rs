@@ -11,8 +11,11 @@
 //! * [`threadpool`] — a scoped thread pool over `std::thread`,
 //! * [`bitops`] — bit-packing helpers shared by the kernels,
 //! * [`obs`] — observability: leveled logging, request trace
-//!   timelines, per-layer profiling, Prometheus exposition.
+//!   timelines, per-layer profiling, Prometheus exposition,
+//! * [`atomicfile`] — crash-safe writes (tmp + fsync + atomic rename)
+//!   for durable artifacts.
 
+pub mod atomicfile;
 pub mod bitops;
 pub mod json;
 pub mod obs;

@@ -610,13 +610,16 @@ pub fn render_prometheus(uptime_s: f64, replicas: &[ReplicaScrape]) -> String {
     out.push_str(&format!("rsr_uptime_seconds {}\n", fmt_num(uptime_s)));
 
     // (prom name, snapshot key, help) counter triples.
-    let counters: [(&str, &str, &str); 10] = [
+    let counters: [(&str, &str, &str); 13] = [
         ("rsr_requests_admitted_total", "admitted", "Requests the engine took responsibility for."),
         ("rsr_requests_rejected_total", "rejected_total", "Requests shed at admission (queue full)."),
         ("rsr_requests_completed_total", "completed", "Requests that finished cleanly."),
         ("rsr_requests_failed_total", "failed", "Requests that failed terminally."),
         ("rsr_requests_deadline_exceeded_total", "deadline_exceeded_total", "Requests retired past their deadline."),
         ("rsr_requests_cancelled_total", "cancelled_total", "Requests cancelled by the client."),
+        ("rsr_requests_kv_budget_exceeded_total", "kv_budget_exceeded_total", "Requests shed or evicted under the KV byte budget."),
+        ("rsr_kv_reservations_failed_total", "kv_reservations_failed_total", "KV page reservations refused at admission or seating."),
+        ("rsr_kv_evictions_total", "kv_evictions_total", "Slots evicted youngest-first under KV page pressure."),
         ("rsr_worker_panics_total", "panics_total", "Supervised worker panics."),
         ("rsr_tokens_out_total", "tokens_out", "Output tokens generated."),
         ("rsr_decode_steps_total", "decode_steps", "Lockstep decode steps executed."),
@@ -633,10 +636,13 @@ pub fn render_prometheus(uptime_s: f64, replicas: &[ReplicaScrape]) -> String {
         }
     }
 
-    let snap_gauges: [(&str, &str, &str); 3] = [
+    let snap_gauges: [(&str, &str, &str); 6] = [
         ("rsr_batch_occupancy_mean", "batch_occupancy_mean", "Mean live slots per decode step."),
         ("rsr_tokens_per_sec", "tokens_per_sec", "Decode throughput over busy time."),
         ("rsr_prefill_tokens_per_sec", "prefill_tokens_per_sec", "Prefill throughput over prefill wall time."),
+        ("rsr_kv_pages_total", "kv_pages_total", "KV page budget (0 = unbounded)."),
+        ("rsr_kv_pages_in_use", "kv_pages_in_use", "KV pages currently granted."),
+        ("rsr_kv_pages_peak", "kv_pages_peak", "High-water mark of granted KV pages."),
     ];
     for (name, key, help) in snap_gauges {
         header(&mut out, name, "gauge", help);

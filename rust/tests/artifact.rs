@@ -235,6 +235,63 @@ fn stale_plans_from_other_weights_are_rejected() {
 }
 
 #[test]
+fn killing_a_pack_mid_write_never_leaves_a_loadable_but_corrupt_artifact() {
+    // Simulate `rsr pack` dying at every dangerous point of an
+    // artifact write and assert the trichotomy the atomic writer
+    // guarantees: old file intact, complete new file, or a stray
+    // `*.tmp` that no loader will touch.
+    let mut rng = Rng::new(0x0DD);
+    let a = TernaryMatrix::random(48, 32, 1.0 / 3.0, &mut rng);
+    let art = PlanArtifact::ternary(
+        "layer0.wq",
+        TernaryRsrIndex::preprocess(&a, 3),
+        1.0,
+    )
+    .unwrap();
+    let dir = temp_dir("killmidwrite");
+    let target = dir.join("layer0.wq.rsrz");
+    art.save(&target).unwrap();
+    let good_bytes = std::fs::read(&target).unwrap();
+
+    // Kill case 1: the writer dies mid-stream. The target keeps its
+    // old bytes, and no tmp survives.
+    let err = rsr::util::atomicfile::write_atomic(&target, |w| {
+        use std::io::Write;
+        w.write_all(&good_bytes[..good_bytes.len() / 2])?;
+        Err(rsr::error::Error::Artifact("killed mid-write".into()))
+    })
+    .unwrap_err();
+    assert!(err.to_string().contains("killed"), "{err}");
+    assert_eq!(std::fs::read(&target).unwrap(), good_bytes);
+    assert!(PlanArtifact::load(&target).is_ok(), "old artifact still loads");
+
+    // Kill case 2: the process dies between tmp-write and rename — a
+    // truncated `.tmp` sits next to the finished artifact. The loader
+    // refuses it BY NAME (even a byte-perfect tmp is untrustworthy),
+    // and `PlanStore::open` quarantines it while serving the real one.
+    let tmp = dir.join("layer0.wq.rsrz.tmp");
+    std::fs::write(&tmp, &good_bytes[..good_bytes.len() / 2]).unwrap();
+    let err = PlanArtifact::load(&tmp).unwrap_err();
+    assert!(err.to_string().contains("in-flight temporary"), "{err}");
+
+    let store = PlanStore::open(&dir).unwrap();
+    assert!(!tmp.exists(), "open must quarantine the stray tmp");
+    assert!(
+        dir.join("layer0.wq.rsrz.tmp.quarantined").exists(),
+        "the stray is kept for post-mortem, not deleted"
+    );
+    assert!(store.get("layer0.wq").is_ok(), "the finished artifact still serves");
+
+    // Kill case 3: truncation slipping past the tmp discipline (e.g. a
+    // torn copy) still fails the checksum — loadable-but-corrupt does
+    // not exist.
+    let torn = dir.join("torn.rsrz");
+    std::fs::write(&torn, &good_bytes[..good_bytes.len() - 5]).unwrap();
+    assert!(PlanArtifact::load(&torn).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn store_reports_missing_artifacts_cleanly() {
     let dir = temp_dir("missing");
     let store = PlanStore::open(&dir).unwrap();

@@ -1,0 +1,326 @@
+//! Memory-governance integration: budget-capped KV serving over real
+//! TCP.
+//!
+//! The invariants every scenario checks, with a deliberately tiny
+//! `--kv-budget`:
+//!
+//! * **exactly one terminal outcome per request** — completed, or the
+//!   named `kv budget exceeded` error (admission shed, seating
+//!   refusal, or youngest-first eviction); never a hang, never a
+//!   silent drop,
+//! * **completed outputs are token-identical** to the same prompts on
+//!   an unbudgeted server — the budget degrades capacity, never math,
+//! * the response hub holds no stale waiter, lifecycle conservation
+//!   (`admitted == terminals + inflight`) holds with the new
+//!   `kv_budget_exceeded` terminal class, and the page pool drains to
+//!   zero once the engine idles.
+//!
+//! The deterministic forced-eviction scenario is gated on the
+//! `fault-inject` feature (the lifecycle-chaos CI job compiles it in);
+//! the budget-pressure scenarios run under a plain `cargo test`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use rsr::kernels::Backend;
+use rsr::model::config::ModelConfig;
+use rsr::model::weights::ModelWeights;
+use rsr::serving::engine::{EngineConfig, InferenceEngine};
+use rsr::serving::router::Router;
+use rsr::serving::server::{Client, ResponseHub, Server};
+use rsr::util::json::Json;
+
+fn tiny_weights() -> Arc<ModelWeights> {
+    Arc::new(ModelWeights::generate(ModelConfig::tiny(), 0x5E21).unwrap())
+}
+
+/// A running server plus handles on its internals (same shape as the
+/// lifecycle harness: engines for counter assertions, hub for
+/// waiter-leak assertions).
+struct Harness {
+    addr: std::net::SocketAddr,
+    engines: Vec<Arc<InferenceEngine>>,
+    hub: Arc<ResponseHub>,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Harness {
+    fn start(cfg: EngineConfig) -> Self {
+        let weights = tiny_weights();
+        let engines =
+            vec![Arc::new(InferenceEngine::start(weights, cfg).unwrap())];
+        let router = Arc::new(Router::new(engines.clone()).unwrap());
+        let server = Server::new(router);
+        let hub = Arc::clone(server.hub());
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let bound: Arc<Mutex<Option<std::net::SocketAddr>>> = Arc::default();
+        let bound2 = Arc::clone(&bound);
+        let thread = std::thread::spawn(move || {
+            server
+                .serve("127.0.0.1:0", stop2, move |a| {
+                    *bound2.lock().unwrap() = Some(a);
+                })
+                .unwrap();
+        });
+        let addr = loop {
+            if let Some(a) = *bound.lock().unwrap() {
+                break a;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        };
+        Self { addr, engines, hub, stop, thread: Some(thread) }
+    }
+
+    fn engine(&self) -> &InferenceEngine {
+        &self.engines[0]
+    }
+
+    /// Block until inflight drains, the hub holds no waiter, and the
+    /// KV pool reads zero pages in use (panics after 30 s — a hung
+    /// request or a leaked page is exactly what this file catches).
+    fn wait_quiescent(&self) {
+        let t0 = Instant::now();
+        loop {
+            let e = self.engine();
+            if e.inflight() == 0
+                && self.hub.waiter_count() == 0
+                && e.kv_pool().pages_in_use() == 0
+            {
+                return;
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(30),
+                "engine never quiesced: inflight={} waiters={} pages_in_use={}",
+                e.inflight(),
+                self.hub.waiter_count(),
+                e.kv_pool().pages_in_use()
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+}
+
+impl Drop for Harness {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// tiny: kv_dim = 2 kv-heads × 16 head-dim = 32 floats → a 4-token
+/// page is 2·4·32·4 = 1024 bytes, so this budget holds exactly
+/// `pages` pages across the model's 2 layers.
+fn budgeted_cfg(pages: u64) -> EngineConfig {
+    EngineConfig {
+        workers: 1,
+        backend: Backend::RsrPlusPlus,
+        kv_budget: Some(pages * 1024),
+        kv_page_tokens: 4,
+        ..Default::default()
+    }
+}
+
+fn tokens_of(reply: &Json) -> Vec<u64> {
+    reply
+        .get("tokens")
+        .expect("ok replies carry tokens")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_f64().unwrap() as u64)
+        .collect()
+}
+
+fn snapshot_num(engine: &InferenceEngine, key: &str) -> f64 {
+    engine.snapshot().get(key).unwrap().as_f64().unwrap()
+}
+
+#[test]
+fn budget_pressure_yields_exactly_one_terminal_outcome_per_request() {
+    // Reference pass first: the same prompt mix on an UNBUDGETED
+    // server pins the expected tokens per prompt.
+    let prompts: Vec<String> =
+        (0..14).map(|i| format!("client {i:02} asks a question")).collect();
+    let reference: HashMap<usize, Vec<u64>> = {
+        let h = Harness::start(EngineConfig {
+            workers: 1,
+            backend: Backend::RsrPlusPlus,
+            ..Default::default()
+        });
+        let mut client = Client::connect(h.addr).unwrap();
+        let map = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let reply = client.request(i as u64, p, 24).unwrap();
+                assert!(reply.get("error").is_none(), "{reply:?}");
+                (i, tokens_of(&reply))
+            })
+            .collect();
+        h.wait_quiescent();
+        map
+    };
+
+    // 26 pages: one 25-token prompt needs 7 pages × 2 layers = 14 at
+    // admission and grows to exactly 2·pages_for(25+24) = 26 at full
+    // decode length — a lone sequence fits, two concurrent ones
+    // cannot, so the blast must shed or evict while the oldest always
+    // finishes. An 80-token prompt needs 2·20 = 40 pages — impossible
+    // even on an empty pool, so one admission shed is deterministic.
+    let h = Harness::start(budgeted_cfg(26));
+    {
+        let mut c = Client::connect(h.addr).unwrap();
+        let reply = c.request(900, &"x".repeat(80), 4).unwrap();
+        let err = reply.get("error").and_then(|e| e.as_str()).unwrap_or("");
+        assert!(
+            err.contains("kv budget exceeded"),
+            "oversized prompt must be shed with the named error, got {reply:?}"
+        );
+    }
+    // 7 concurrent clients, two requests each: every reply must be a
+    // completion (token-identical to the reference) or the named
+    // budget error — nothing else, and nothing may hang.
+    let addr = h.addr;
+    let results: Vec<(usize, Json)> = {
+        let handles: Vec<_> = (0..7)
+            .map(|c| {
+                let prompts = prompts.clone();
+                std::thread::spawn(move || {
+                    let mut client = Client::connect(addr).unwrap();
+                    let mut out = Vec::new();
+                    for j in [c, c + 7] {
+                        let reply =
+                            client.request(j as u64, &prompts[j], 24).unwrap();
+                        out.push((j, reply));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|t| t.join().unwrap()).collect()
+    };
+    assert_eq!(results.len(), prompts.len(), "every request got exactly one reply");
+    let mut completed = 0usize;
+    let mut shed = 0usize;
+    for (i, reply) in &results {
+        match reply.get("error").and_then(|e| e.as_str()) {
+            None => {
+                assert_eq!(
+                    &tokens_of(reply),
+                    reference.get(i).unwrap(),
+                    "prompt {i}: budgeted completion diverged from the \
+                     unbudgeted reference"
+                );
+                completed += 1;
+            }
+            Some(err) => {
+                assert!(
+                    err.contains("kv budget exceeded"),
+                    "prompt {i}: only the named budget error may appear \
+                     under pure KV pressure, got: {err}"
+                );
+                shed += 1;
+            }
+        }
+    }
+    assert_eq!(completed + shed, prompts.len());
+    assert!(completed > 0, "the oldest sequence always has headroom to finish");
+
+    h.wait_quiescent();
+    let e = h.engine();
+    // Conservation holds with the kv_budget_exceeded terminal class
+    // carrying every shed and eviction (+1 for the oversized prompt).
+    assert_eq!(snapshot_num(e, "kv_budget_exceeded_total"), (shed + 1) as f64);
+    assert_eq!(
+        snapshot_num(e, "admitted"),
+        snapshot_num(e, "completed")
+            + snapshot_num(e, "failed")
+            + snapshot_num(e, "deadline_exceeded_total")
+            + snapshot_num(e, "cancelled_total")
+            + snapshot_num(e, "kv_budget_exceeded_total")
+    );
+    assert!(matches!(e.snapshot().get("conserved"), Some(Json::Bool(true))));
+    // The pool saw real traffic and accounted it.
+    assert!(e.kv_pool().peak_pages_in_use() > 0);
+    assert!(e.kv_pool().peak_pages_in_use() <= e.kv_pool().total_pages());
+    assert!(
+        e.kv_pool().reservations_failed() + e.kv_pool().evictions() >= 1,
+        "the oversized prompt alone guarantees one reservation failure"
+    );
+}
+
+#[test]
+fn generous_budget_serves_token_identically_to_no_budget() {
+    // `--kv-budget` large enough to never bind must be invisible:
+    // same prompts, same tokens, zero sheds, zero evictions.
+    let prompts: Vec<String> =
+        (0..4).map(|i| format!("steady request number {i}")).collect();
+    let run = |cfg: EngineConfig| -> Vec<Vec<u64>> {
+        let h = Harness::start(cfg);
+        let mut client = Client::connect(h.addr).unwrap();
+        let out = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let reply = client.request(i as u64, p, 12).unwrap();
+                assert!(reply.get("error").is_none(), "{reply:?}");
+                tokens_of(&reply)
+            })
+            .collect();
+        h.wait_quiescent();
+        assert_eq!(h.engine().kv_pool().reservations_failed(), 0);
+        assert_eq!(h.engine().kv_pool().evictions(), 0);
+        out
+    };
+    let unbudgeted = run(EngineConfig {
+        workers: 1,
+        backend: Backend::RsrPlusPlus,
+        ..Default::default()
+    });
+    assert_eq!(run(budgeted_cfg(4096)), unbudgeted);
+}
+
+// ---------------------------------------------------------------- //
+// Fault injection: deterministic forced eviction (feature-gated —   //
+// the lifecycle-chaos CI job compiles these in)                     //
+// ---------------------------------------------------------------- //
+
+#[cfg(feature = "fault-inject")]
+mod chaos {
+    use super::*;
+    use rsr::serving::engine::FaultPlan;
+
+    #[test]
+    fn forced_exhaustion_evicts_over_tcp_and_the_server_keeps_serving() {
+        // `exhaust_kv_at_step: 2` fires the pressure checkpoint while
+        // the first request is mid-flight (a 16-token prompt at the
+        // default prefill chunk of 8 spans steps 1–2): the youngest —
+        // only — slot is retired with the named budget error, the
+        // client sees exactly one reply, and the next request serves
+        // cleanly.
+        let h = Harness::start(EngineConfig {
+            workers: 1,
+            backend: Backend::RsrPlusPlus,
+            fault: FaultPlan { exhaust_kv_at_step: Some(2), ..Default::default() },
+            ..Default::default()
+        });
+        let mut client = Client::connect(h.addr).unwrap();
+        let reply = client.request(1, "abcdefghijklmnop", 8).unwrap();
+        let err = reply.get("error").and_then(|e| e.as_str()).unwrap_or("");
+        assert!(err.contains("kv budget exceeded"), "got {reply:?}");
+        assert!(err.contains("evicted under page pressure"), "got {reply:?}");
+        let reply = client.request(2, "next customer", 4).unwrap();
+        assert!(reply.get("error").is_none(), "{reply:?}");
+        h.wait_quiescent();
+        let e = h.engine();
+        assert_eq!(e.kv_pool().evictions(), 1);
+        assert_eq!(snapshot_num(e, "kv_budget_exceeded_total"), 1.0);
+        assert!(matches!(e.snapshot().get("conserved"), Some(Json::Bool(true))));
+    }
+}

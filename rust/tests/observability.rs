@@ -127,6 +127,13 @@ fn prometheus_exposition_is_well_formed() {
     assert!(text.contains("# TYPE rsr_requests_admitted_total counter"));
     assert!(text.contains("# TYPE rsr_ttft_us histogram"));
     assert!(text.contains("# TYPE rsr_queue_depth gauge"));
+    // Memory governance rides the same scrape: page gauges and the
+    // budget counters are always exposed (0 on an unbudgeted server).
+    assert!(text.contains("# TYPE rsr_kv_pages_in_use gauge"));
+    assert!(text.contains("# TYPE rsr_kv_pages_total gauge"));
+    assert!(text.contains("# TYPE rsr_kv_reservations_failed_total counter"));
+    assert!(text.contains("# TYPE rsr_kv_evictions_total counter"));
+    assert!(text.contains("# TYPE rsr_requests_kv_budget_exceeded_total counter"));
     // Nothing non-finite leaks into the exposition.
     assert!(!text.contains("NaN") && !text.contains("inf "), "{text}");
 
@@ -134,11 +141,15 @@ fn prometheus_exposition_is_well_formed() {
     assert!(!samples.is_empty());
 
     // Counters carry the `_total` suffix and are announced as counters.
+    // (`rsr_kv_pages_total` is the one deliberate exception: a gauge —
+    // the page budget — named for parity with the `kv_pages_total`
+    // snapshot key; it must still be announced, as a gauge.)
     for (name, _, v) in &samples {
         if name.ends_with("_total") {
+            let expected = if name == "rsr_kv_pages_total" { "gauge" } else { "counter" };
             assert!(
-                text.contains(&format!("# TYPE {name} counter")),
-                "counter {name} missing TYPE line"
+                text.contains(&format!("# TYPE {name} {expected}")),
+                "{name} missing `# TYPE {name} {expected}` line"
             );
             assert!(*v >= 0.0, "counter {name} negative: {v}");
         }
@@ -247,9 +258,13 @@ fn status_reports_identity_and_replica_gauges() {
     assert_eq!(replicas.len(), 1);
     let r = &replicas[0];
     assert_eq!(r.get("replica").unwrap().as_f64(), Some(0.0));
-    for key in ["queue_depth", "inflight", "live_slots", "heartbeat_ms"] {
+    for key in
+        ["queue_depth", "inflight", "live_slots", "heartbeat_ms", "kv_pages_in_use"]
+    {
         assert!(r.get(key).unwrap().as_f64().is_some(), "missing gauge {key}");
     }
+    // Unbudgeted server: the page ceiling gauge reads 0 (= no budget).
+    assert_eq!(r.get("kv_pages_total").unwrap().as_f64(), Some(0.0));
     // Control lines don't poison the connection for inference.
     let reply = client.request(1, "still serving?", 2).unwrap();
     assert!(reply.get("error").is_none());

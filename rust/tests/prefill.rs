@@ -285,6 +285,49 @@ fn engine_reports_ttft_and_prefill_throughput() {
 }
 
 #[test]
+fn paged_kv_cache_is_bit_identical_to_the_default_layout() {
+    // The memory-governance acceptance pin: a model whose KV caches
+    // draw fixed-size pages from a shared pool — across page sizes
+    // that force many page boundaries mid-prompt and mid-decode, and
+    // under a bounded (but sufficient) budget — must produce the SAME
+    // per-position prefill logits and greedy tokens as the default
+    // construction, bit for bit. Attention reads one position at a
+    // time, so the page table must be invisible to the math.
+    use rsr::runtime::KvPool;
+    let w = tiny_weights();
+    let store = PlanStore::for_model(Arc::new(w.clone()), 0);
+    let prompts = [
+        (0..10u32).map(|j| 30 + j * 3).collect::<Vec<u32>>(),
+        vec![77u32, 5, 201],
+    ];
+    let max_new = [8usize, 12];
+    let chunks = [4usize, 1];
+
+    let mut base = Transformer::from_plan_store(&w, &store).unwrap();
+    let (base_logits, base_tokens) = drive(&mut base, &prompts, &max_new, &chunks);
+
+    let kv_dim = w.config.n_kv_heads * w.config.head_dim();
+    let pools: Vec<(String, Arc<KvPool>)> = vec![
+        ("unbounded-pt1".into(), Arc::new(KvPool::unbounded(1))),
+        ("unbounded-pt2".into(), Arc::new(KvPool::unbounded(2))),
+        ("unbounded-pt64".into(), Arc::new(KvPool::unbounded(64))),
+        (
+            "bounded-pt4".into(),
+            Arc::new(KvPool::bounded(4, kv_dim, 4 << 20).unwrap()),
+        ),
+    ];
+    for (name, pool) in pools {
+        let mut m =
+            Transformer::from_plan_store_pooled(&w, &store, Arc::clone(&pool)).unwrap();
+        let (logits, tokens) = drive(&mut m, &prompts, &max_new, &chunks);
+        assert_eq!(logits, base_logits, "{name}: paged prefill logits diverged");
+        assert_eq!(tokens, base_tokens, "{name}: paged greedy tokens diverged");
+        drop(m);
+        assert_eq!(pool.pages_in_use(), 0, "{name}: dropped model must return pages");
+    }
+}
+
+#[test]
 fn single_chunk_prefill_matches_generate() {
     // Whole-prompt chunks through the public generate()-equivalent
     // sequence: prefill in ONE chunk, then greedy forward_batch decode,
