@@ -17,7 +17,8 @@ use rsr::model::config::ModelConfig;
 use rsr::model::weights::ModelWeights;
 use rsr::serving::engine::{EngineConfig, InferenceEngine};
 use rsr::serving::router::Router;
-use rsr::serving::server::{Client, Server};
+use rsr::serving::client::Client;
+use rsr::serving::server::Server;
 
 fn main() -> rsr::Result<()> {
     // A small-but-real model so the example finishes in ~a minute.
@@ -69,7 +70,9 @@ fn main() -> rsr::Result<()> {
             let mut lines = Vec::new();
             for (i, p) in prompts.iter().enumerate() {
                 let reply = client
-                    .request((ci * 100 + i) as u64, p, 8)
+                    .prompt((ci * 100 + i) as u64, p)
+                    .max_new(8)
+                    .send_json()
                     .expect("request");
                 lines.push(format!(
                     "client{ci}: {:<46} -> {} tok, {}µs decode",

@@ -277,11 +277,13 @@ pub fn run(opts: &ServeBenchOpts) -> Result<Json> {
     // Open-loop overload run (module doc §overload): its engine is
     // separate from the sweep model above — deliberately
     // under-provisioned so Poisson bursts overflow the bounded queue
-    // and per-request deadlines bite.
-    let overload = if opts.overload_requests > 0 {
-        overload_run(opts)?
+    // and per-request deadlines bite. The streaming and fairness runs
+    // ride the same gate: all three instrument serving dynamics rather
+    // than kernel throughput.
+    let (overload, streaming, fairness) = if opts.overload_requests > 0 {
+        (overload_run(opts)?, streaming_run(opts)?, fairness_run(opts)?)
     } else {
-        Json::Null
+        (Json::Null, Json::Null, Json::Null)
     };
 
     let record = Json::obj(vec![
@@ -295,6 +297,8 @@ pub fn run(opts: &ServeBenchOpts) -> Result<Json> {
         ("batches", Json::Arr(rows)),
         ("ttft", Json::Arr(ttft_rows)),
         ("overload", overload),
+        ("streaming", streaming),
+        ("fairness", fairness),
     ]);
     if let Some(path) = &opts.json_path {
         match std::fs::write(path, record.to_string()) {
@@ -327,13 +331,13 @@ fn tally(
         .get(&resp.id)
         .map(|t| t.elapsed().as_secs_f64() * 1e3)
         .unwrap_or(0.0);
-    match &resp.error {
-        None => {
-            *ok += 1;
-            latencies_ms.push(lat);
-        }
-        Some(e) if e.contains("deadline exceeded") => *missed += 1,
-        Some(_) => *failed += 1,
+    if resp.error.is_none() {
+        *ok += 1;
+        latencies_ms.push(lat);
+    } else if resp.code == Some("deadline_exceeded") {
+        *missed += 1;
+    } else {
+        *failed += 1;
     }
 }
 
@@ -495,6 +499,240 @@ fn overload_run(opts: &ServeBenchOpts) -> Result<Json> {
     ]))
 }
 
+/// Requests per arm of the streaming TTFT comparison.
+const STREAMING_REQS: usize = 6;
+/// Prompt/decode shape of the streaming comparison: enough decode
+/// steps that first-frame and last-frame latency visibly diverge.
+const STREAMING_PROMPT_LEN: usize = 8;
+const STREAMING_MAX_NEW: usize = 16;
+
+/// Streaming TTFT: the time-to-first-frame a `"stream": true` caller
+/// sees vs the single-line latency the same request costs a
+/// non-streaming caller. Both arms run the identical engine and
+/// request shape; the gap is the latency the token-frame wire path
+/// removes from "first visible output".
+fn streaming_run(opts: &ServeBenchOpts) -> Result<Json> {
+    use crate::serving::request::Frame;
+    let cfg = ModelConfig {
+        name: format!("bench-serve-streaming-{}", opts.d_model),
+        vocab_size: 270,
+        d_model: opts.d_model,
+        n_layers: opts.n_layers,
+        n_heads: 8,
+        n_kv_heads: 4,
+        d_ff: opts.d_ff,
+        max_seq_len: STREAMING_PROMPT_LEN + STREAMING_MAX_NEW + 4,
+        rope_theta: 10_000.0,
+    };
+    cfg.validate()?;
+    let weights = Arc::new(ModelWeights::generate(cfg, 0x57E0)?);
+    let engine = InferenceEngine::start(
+        weights,
+        EngineConfig { workers: 1, backend: Backend::Standard, ..Default::default() },
+    )?;
+    let prompt = |i: usize| -> Vec<u32> {
+        (0..STREAMING_PROMPT_LEN).map(|j| ((i * 13 + j * 7 + 3) % 256) as u32).collect()
+    };
+    let wait = Duration::from_secs(30);
+    let mut first_ms: Vec<f64> = Vec::new();
+    let mut stream_total_ms: Vec<f64> = Vec::new();
+    let mut full_ms: Vec<f64> = Vec::new();
+    for i in 0..STREAMING_REQS {
+        // Streamed arm: the first token frame is the first visible
+        // output; the done frame closes the request.
+        let t0 = Instant::now();
+        engine.submit(
+            Request::new(i as u64, prompt(i), STREAMING_MAX_NEW).with_stream(true),
+        )?;
+        let mut first: Option<Duration> = None;
+        loop {
+            match engine.recv_frame_timeout(wait) {
+                Some(Frame::Token { .. }) => {
+                    first.get_or_insert_with(|| t0.elapsed());
+                }
+                Some(Frame::Done(_)) => break,
+                None => {
+                    return Err(Error::Serving(
+                        "streaming bench: engine produced no frame within 30s".into(),
+                    ))
+                }
+            }
+        }
+        let total = t0.elapsed();
+        first_ms.push(first.unwrap_or(total).as_secs_f64() * 1e3);
+        stream_total_ms.push(total.as_secs_f64() * 1e3);
+        // Non-streaming twin: the single terminal line is both the
+        // first and the last byte the caller sees.
+        let t0 = Instant::now();
+        engine.submit(Request::new(
+            (STREAMING_REQS + i) as u64,
+            prompt(i),
+            STREAMING_MAX_NEW,
+        ))?;
+        if engine.recv_timeout(wait).is_none() {
+            return Err(Error::Serving(
+                "streaming bench: engine produced no response within 30s".into(),
+            ));
+        }
+        full_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    engine.shutdown();
+    for v in [&mut first_ms, &mut stream_total_ms, &mut full_ms] {
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    }
+    let (ttfb_p50, stream_p50, full_p50) = (
+        percentile_ms(&first_ms, 50.0),
+        percentile_ms(&stream_total_ms, 50.0),
+        percentile_ms(&full_ms, 50.0),
+    );
+    let mut table =
+        Table::new(&["requests", "ttfb p50 ms", "stream total p50 ms", "non-stream p50 ms", "ttfb speedup"]);
+    table.row(&[
+        STREAMING_REQS.to_string(),
+        format!("{ttfb_p50:.2}"),
+        format!("{stream_p50:.2}"),
+        format!("{full_p50:.2}"),
+        format!("{:.2}x", full_p50 / ttfb_p50.max(1e-9)),
+    ]);
+    table.print("bench-serve: streaming time-to-first-frame vs non-streaming");
+    Ok(Json::obj(vec![
+        ("requests_per_arm", Json::num(STREAMING_REQS as f64)),
+        ("max_new", Json::num(STREAMING_MAX_NEW as f64)),
+        ("ttfb_stream_p50_ms", Json::num(ttfb_p50)),
+        ("total_stream_p50_ms", Json::num(stream_p50)),
+        ("total_non_stream_p50_ms", Json::num(full_p50)),
+        ("ttfb_speedup_vs_non_stream", Json::num(full_p50 / ttfb_p50.max(1e-9))),
+    ]))
+}
+
+/// Fairness-run shape: one aggressive client floods the queue before
+/// three polite clients submit one burst each.
+const FAIRNESS_AGGRESSIVE_REQS: usize = 12;
+const FAIRNESS_POLITE_CLIENTS: usize = 3;
+const FAIRNESS_POLITE_REQS: usize = 3;
+const FAIRNESS_MAX_NEW: usize = 4;
+
+/// Fairness under overload: client 0 floods the fair-admission queue,
+/// then three polite clients each submit a small burst. With one
+/// strictly sequential worker, completion order equals pickup order,
+/// so each client's mean completion index measures how long the queue
+/// made it wait. Weighted round-robin keeps the polite means low even
+/// though the aggressive client submitted first; a FIFO would push
+/// them all behind the flood.
+fn fairness_run(opts: &ServeBenchOpts) -> Result<Json> {
+    let total =
+        FAIRNESS_AGGRESSIVE_REQS + FAIRNESS_POLITE_CLIENTS * FAIRNESS_POLITE_REQS;
+    let cfg = ModelConfig {
+        name: format!("bench-serve-fairness-{}", opts.d_model),
+        vocab_size: 270,
+        d_model: opts.d_model,
+        n_layers: opts.n_layers,
+        n_heads: 8,
+        n_kv_heads: 4,
+        d_ff: opts.d_ff,
+        max_seq_len: 8 + FAIRNESS_MAX_NEW + 4,
+        rope_theta: 10_000.0,
+    };
+    cfg.validate()?;
+    let weights = Arc::new(ModelWeights::generate(cfg, 0xFA12)?);
+    let engine = InferenceEngine::start(
+        weights,
+        EngineConfig {
+            workers: 1,
+            queue_capacity: total + 4,
+            batch: crate::serving::batcher::BatchPolicy {
+                max_slots: 1,
+                ..Default::default()
+            },
+            backend: Backend::Standard,
+            ..Default::default()
+        },
+    )?;
+    let prompt = |i: usize| -> Vec<u32> {
+        (0..6).map(|j| ((i * 13 + j * 7 + 3) % 256) as u32).collect()
+    };
+    // id → client lane. Client 0 floods first; 1..=3 submit after.
+    let mut lane_of: HashMap<u64, usize> = HashMap::new();
+    let mut next_id = 0u64;
+    let submit = |engine: &InferenceEngine,
+                  lane_of: &mut HashMap<u64, usize>,
+                  next_id: &mut u64,
+                  client: usize|
+     -> Result<()> {
+        let id = *next_id;
+        *next_id += 1;
+        lane_of.insert(id, client);
+        engine.submit(
+            Request::new(id, prompt(id as usize), FAIRNESS_MAX_NEW)
+                .with_client(client as u64),
+        )
+    };
+    for _ in 0..FAIRNESS_AGGRESSIVE_REQS {
+        submit(&engine, &mut lane_of, &mut next_id, 0)?;
+    }
+    for client in 1..=FAIRNESS_POLITE_CLIENTS {
+        for _ in 0..FAIRNESS_POLITE_REQS {
+            submit(&engine, &mut lane_of, &mut next_id, client)?;
+        }
+    }
+    // Drain every terminal, recording completion order per client.
+    let mut index_sums = vec![0.0f64; FAIRNESS_POLITE_CLIENTS + 1];
+    let mut counts = vec![0usize; FAIRNESS_POLITE_CLIENTS + 1];
+    for position in 0..total {
+        let Some(resp) = engine.recv_timeout(Duration::from_secs(30)) else {
+            return Err(Error::Serving(
+                "fairness bench: engine produced no response within 30s".into(),
+            ));
+        };
+        let lane = lane_of[&resp.id];
+        index_sums[lane] += position as f64;
+        counts[lane] += 1;
+    }
+    let conserved =
+        matches!(engine.snapshot().get("conserved"), Some(Json::Bool(true)));
+    engine.shutdown();
+    let means: Vec<f64> = index_sums
+        .iter()
+        .zip(&counts)
+        .map(|(s, &c)| s / (c.max(1) as f64))
+        .collect();
+    // Spread across the POLITE clients only: fairness means they wait
+    // about equally; the aggressive client's mean is reported but is
+    // expected (and correct) to be high.
+    let polite = &means[1..];
+    let spread = polite.iter().fold(0.0f64, |m, &x| m.max(x))
+        - polite.iter().fold(f64::MAX, |m, &x| m.min(x));
+    let mut table = Table::new(&["client", "requests", "completed", "mean completion idx"]);
+    let mut per_client = Vec::new();
+    for (client, mean) in means.iter().enumerate() {
+        let submitted = if client == 0 {
+            FAIRNESS_AGGRESSIVE_REQS
+        } else {
+            FAIRNESS_POLITE_REQS
+        };
+        table.row(&[
+            format!("{client}{}", if client == 0 { " (aggressive)" } else { "" }),
+            submitted.to_string(),
+            counts[client].to_string(),
+            format!("{mean:.1}"),
+        ]);
+        per_client.push(Json::obj(vec![
+            ("client", Json::num(client as f64)),
+            ("requests", Json::num(submitted as f64)),
+            ("completed", Json::num(counts[client] as f64)),
+            ("mean_completion_index", Json::num(*mean)),
+        ]));
+    }
+    table.print("bench-serve: per-client completion under one aggressive client");
+    Ok(Json::obj(vec![
+        ("aggressive_client", Json::num(0.0)),
+        ("total_requests", Json::num(total as f64)),
+        ("per_client", Json::Arr(per_client)),
+        ("polite_mean_index_spread", Json::num(spread)),
+        ("conserved", Json::Bool(conserved)),
+    ]))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -528,8 +766,34 @@ mod tests {
         assert_eq!(ttft[1].get("prefill_chunk").unwrap().as_f64(), Some(4.0));
         assert!(ttft[0].get("ttft_ms").unwrap().as_f64().unwrap() > 0.0);
         assert!(ttft[1].get("speedup_vs_chunk1").unwrap().as_f64().unwrap() > 0.0);
-        // overload_requests: 0 skips the overload run.
+        // overload_requests: 0 skips the serving-dynamics runs.
         assert!(matches!(record.get("overload"), Some(Json::Null)));
+        assert!(matches!(record.get("streaming"), Some(Json::Null)));
+        assert!(matches!(record.get("fairness"), Some(Json::Null)));
+    }
+
+    #[test]
+    fn streaming_and_fairness_runs_record_their_fields() {
+        let opts = ServeBenchOpts {
+            d_model: 64,
+            d_ff: 96,
+            n_layers: 1,
+            ..Default::default()
+        };
+        let s = streaming_run(&opts).unwrap();
+        assert!(s.get("ttfb_stream_p50_ms").unwrap().as_f64().unwrap() > 0.0);
+        assert!(s.get("total_stream_p50_ms").unwrap().as_f64().unwrap() > 0.0);
+        assert!(s.get("total_non_stream_p50_ms").unwrap().as_f64().unwrap() > 0.0);
+        let fr = fairness_run(&opts).unwrap();
+        assert!(matches!(fr.get("conserved"), Some(Json::Bool(true))));
+        let per = fr.get("per_client").unwrap().as_arr().unwrap();
+        assert_eq!(per.len(), 1 + FAIRNESS_POLITE_CLIENTS);
+        // Every submitted request completed (nothing hung or vanished).
+        let done: f64 = per
+            .iter()
+            .map(|c| c.get("completed").unwrap().as_f64().unwrap())
+            .sum();
+        assert_eq!(done, fr.get("total_requests").unwrap().as_f64().unwrap());
     }
 
     #[test]

@@ -22,8 +22,26 @@ pub enum Error {
     /// header, checksum or version mismatch).
     Artifact(String),
 
-    /// Serving-layer failures (queue overflow, closed channels…).
+    /// Serving-layer failures (closed channels, internal faults…).
     Serving(String),
+
+    /// The admission queue is at capacity — a backpressure shed. The
+    /// caller may retry; distinct from [`Serving`](Error::Serving) so
+    /// clients can discriminate overload from internal failure.
+    QueueFull(String),
+
+    /// The server (or replica) is draining: it completes in-flight and
+    /// queued work but refuses new submissions. Terminal for the
+    /// submission — the client should go elsewhere.
+    Draining(String),
+
+    /// No replica can take the request right now (all stalled, engine
+    /// shut down, or the response path is gone).
+    Unavailable(String),
+
+    /// A malformed request on the wire (bad JSON, missing or
+    /// out-of-range fields).
+    BadRequest(String),
 
     /// A request's deadline expired before it completed. Distinct from
     /// [`Serving`](Error::Serving) so the router does not fall back
@@ -58,12 +76,38 @@ impl fmt::Display for Error {
             Error::InvalidModel(m) => write!(f, "invalid model file: {m}"),
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Serving(m) => write!(f, "serving error: {m}"),
+            Error::QueueFull(m) => write!(f, "queue full: {m}"),
+            Error::Draining(m) => write!(f, "draining: {m}"),
+            Error::Unavailable(m) => write!(f, "unavailable: {m}"),
+            Error::BadRequest(m) => write!(f, "bad request: {m}"),
             Error::DeadlineExceeded(m) => write!(f, "deadline exceeded: {m}"),
             Error::Cancelled(m) => write!(f, "cancelled: {m}"),
             Error::KvBudgetExceeded(m) => write!(f, "kv budget exceeded: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Io(e) => write!(f, "{e}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl Error {
+    /// Stable machine-readable wire code for this error.
+    ///
+    /// These strings are the protocol-v2 `code` field of every error
+    /// reply and are part of the wire contract — they never change
+    /// once shipped (see ARCHITECTURE.md §Wire protocol v2 for the
+    /// full table). Everything without a dedicated code maps to
+    /// `"internal"`.
+    pub fn code(&self) -> &'static str {
+        match self {
+            Error::BadRequest(_) => "bad_request",
+            Error::QueueFull(_) => "queue_full",
+            Error::Draining(_) => "draining",
+            Error::DeadlineExceeded(_) => "deadline_exceeded",
+            Error::Cancelled(_) => "cancelled",
+            Error::KvBudgetExceeded(_) => "kv_budget_exceeded",
+            Error::Unavailable(_) => "unavailable",
+            _ => "internal",
         }
     }
 }

@@ -8,7 +8,8 @@
 //! rsr tune        --weights model.rtw --out model.rsrt [--budget-ms N]  # measure (k, backend)/layer
 //! rsr inspect     --plans plans/ [--deep]             # artifact/.rsrt stats, integrity
 //! rsr serve       --model model.rtw [--plans plans/] [--profile model.rsrt] --addr 0.0.0.0:7878
-//! rsr client      --addr 127.0.0.1:7878 --prompt "What is the capital of France?"
+//! rsr client      --addr 127.0.0.1:7878 --prompt "What is the capital of France?" [--stream]
+//! rsr drain       --addr 127.0.0.1:7878                # graceful drain: finish, refuse new, exit
 //! rsr experiment  fig4|fig5|fig6|fig9|fig10|fig11|fig12|table1|ablations [--full]
 //! rsr selfcheck                                        # cross-backend sanity
 //! rsr artifacts                                        # list AOT artifacts
@@ -27,7 +28,7 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::AtomicBool;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use rsr::bench::harness::Table;
@@ -40,7 +41,8 @@ use rsr::model::config::ModelConfig;
 use rsr::model::weights::ModelWeights;
 use rsr::serving::engine::{EngineConfig, InferenceEngine};
 use rsr::serving::router::Router;
-use rsr::serving::server::{Client, Server, ServerIdentity};
+use rsr::serving::client::Client;
+use rsr::serving::server::{Server, ServerIdentity};
 use rsr::tune::{human_ns, tune_model, TuneOpts, TuneProfile};
 use rsr::util::json::Json;
 use rsr::util::obs::{set_log_level, Level};
@@ -122,6 +124,7 @@ fn run(args: &[String]) -> Result<()> {
         "metrics" => cmd_metrics(&f),
         "status" => cmd_status(&f),
         "trace" => cmd_trace(&f),
+        "drain" => cmd_drain(&f),
         "bench-kernels" => cmd_bench_kernels(&f),
         "bench-serve" => cmd_bench_serve(&f),
         "bench-prefill" => cmd_bench_prefill(&f),
@@ -147,10 +150,11 @@ fn print_help() {
          tune           --weights FILE --out FILE.rsrt [--budget-ms N] [--radius R] [--trials T]\n  \
          inspect        --plans DIR | --file FILE [--deep] [--verify]  .rsrz / .rsrt stats, integrity\n  \
          serve          --model FILE [--plans DIR] [--profile FILE.rsrt] [--addr A] [--replicas R] [--workers W] [--max-slots S] [--prefill-chunk C] [--backend B] [--kv-budget BYTES] [--kv-page-tokens N] [--default-deadline-ms D] [--replica-stall-ms S] [--log-level L] [--trace-slow-ms T] [--profile-layers]\n  \
-         client         [--addr A] --prompt TEXT [--max-new N] [--deadline-ms D]\n  \
+         client         [--addr A] --prompt TEXT [--max-new N] [--deadline-ms D] [--stream]\n  \
          metrics        [--addr A] [--prom] [--watch SECS]      scrape a live server's metrics\n  \
          status         [--addr A]                              live server identity + gauges\n  \
          trace          [--addr A]                              dump request trace timelines\n  \
+         drain          [--addr A]                              graceful drain: finish work, refuse new, exit\n  \
          bench-kernels  [--sizes 1024,4096] [--shapes 4096x11008] [--reps N] [--batch B] [--threads T] [--json FILE]\n  \
          bench-serve    [--batches 1,4,8,16] [--d-model 1024] [--d-ff 2048] [--layers 1] [--steps 32] [--prompt 4] [--prompt-lens 16,128,512] [--prefill-chunk 8] [--overload-requests 48] [--overload-rps 2000] [--overload-deadline-ms 60] [--json FILE]\n  \
          bench-prefill  [--chunks 1,4,8,16] [--d-model 1024] [--d-ff 2048] [--layers 1] [--prompt 256] [--trials 3] [--json FILE]\n  \
@@ -427,8 +431,44 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<()> {
         println!("per-layer profiling: on (rsr metrics reports layer rows)");
     }
     let stop = Arc::new(AtomicBool::new(false));
-    println!("serving on {addr} (Ctrl-C to stop)");
+    // SIGTERM begins a graceful drain (identical to the `drain` wire
+    // command): queued and in-flight work completes, new submissions
+    // are refused with code `draining`, and serve() returns once every
+    // replica is idle.
+    #[cfg(unix)]
+    {
+        let term = install_sigterm_flag();
+        let drain = server.drain_handle();
+        std::thread::spawn(move || loop {
+            if term.load(Ordering::Relaxed) {
+                drain.store(true, Ordering::Relaxed);
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(100));
+        });
+    }
+    println!("serving on {addr} (Ctrl-C to stop; SIGTERM or `rsr drain` to drain)");
     server.serve(&addr, stop, |bound| println!("bound {bound}"))
+}
+
+/// Install a SIGTERM handler that only sets a flag (libc is not a
+/// dependency; `signal(2)` is declared by hand). The handler is
+/// async-signal-safe: one relaxed atomic store.
+#[cfg(unix)]
+fn install_sigterm_flag() -> &'static AtomicBool {
+    const SIGTERM: i32 = 15;
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    extern "C" fn on_sigterm(_signum: i32) {
+        TERM.store(true, Ordering::Relaxed);
+    }
+    static TERM: AtomicBool = AtomicBool::new(false);
+    // SAFETY: installing a handler that performs a single atomic store.
+    unsafe {
+        signal(SIGTERM, on_sigterm);
+    }
+    &TERM
 }
 
 fn cmd_client(f: &HashMap<String, String>) -> Result<()> {
@@ -443,17 +483,22 @@ fn cmd_client(f: &HashMap<String, String>) -> Result<()> {
         .ok_or_else(|| Error::Config("client requires --prompt TEXT".into()))?;
     let max_new = get_usize(f, "max-new", 16)?;
     // --deadline-ms rides the wire as `deadline_ms`; the server sheds
-    // or retires the request with a `deadline exceeded` error once the
+    // or retires the request with code `deadline_exceeded` once the
     // budget is spent (0 = no deadline).
     let deadline_ms = get_usize(f, "deadline-ms", 0)? as u64;
     let mut client = Client::connect(addr)?;
-    let reply = client.request_with(
-        1,
-        prompt,
-        max_new,
-        if deadline_ms > 0 { Some(deadline_ms) } else { None },
-    )?;
-    println!("{}", reply.to_string());
+    let mut builder = client.prompt(1, prompt).max_new(max_new);
+    if deadline_ms > 0 {
+        builder = builder.deadline_ms(deadline_ms);
+    }
+    if f.contains_key("stream") {
+        // Print each token frame as it lands, then the terminal line.
+        let out = builder.stream_with(|frame| println!("{}", frame.to_string()))?;
+        println!("{}", out.raw.to_string());
+    } else {
+        let reply = builder.send_json()?;
+        println!("{}", reply.to_string());
+    }
     Ok(())
 }
 
@@ -513,6 +558,16 @@ fn cmd_trace(f: &HashMap<String, String>) -> Result<()> {
     if reply.get("enabled") == Some(&Json::Bool(false)) {
         println!("tracing is off — start the server with --trace-slow-ms N");
     }
+    println!("{}", reply.to_string());
+    Ok(())
+}
+
+/// `rsr drain`: flip a live server into drain mode — it finishes
+/// queued and in-flight work (streams included), refuses new requests
+/// with code `draining`, and exits once every replica is idle.
+fn cmd_drain(f: &HashMap<String, String>) -> Result<()> {
+    let mut client = Client::connect(control_addr(f)?)?;
+    let reply = client.control("drain")?;
     println!("{}", reply.to_string());
     Ok(())
 }

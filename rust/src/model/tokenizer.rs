@@ -46,6 +46,81 @@ impl Tokenizer {
     }
 }
 
+/// Incremental decoder for token streaming.
+///
+/// Feeding every token through [`push`](StreamDecoder::push) and then
+/// calling [`finish`](StreamDecoder::finish) yields text whose
+/// concatenation is **byte-identical** to [`Tokenizer::decode`] over
+/// the same token sequence — the invariant the streaming wire protocol
+/// pins. It replicates `String::from_utf8_lossy`'s maximal-subpart
+/// substitution incrementally: an invalid sequence becomes one U+FFFD
+/// as soon as it is known invalid, while an *incomplete* multi-byte
+/// suffix is held back until more bytes arrive (or `finish` flushes it
+/// as the single U+FFFD the lossy decoder would emit at end of input).
+#[derive(Debug, Default)]
+pub struct StreamDecoder {
+    pending: Vec<u8>,
+}
+
+impl StreamDecoder {
+    /// Fresh decoder with no buffered bytes.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Feed one token; returns the text it completes (possibly empty —
+    /// specials decode to nothing, and a mid-character byte stays
+    /// buffered).
+    pub fn push(&mut self, token: u32) -> String {
+        if token >= 256 {
+            return String::new();
+        }
+        self.pending.push(token as u8);
+        let mut out = String::new();
+        loop {
+            match std::str::from_utf8(&self.pending) {
+                Ok(s) => {
+                    out.push_str(s);
+                    self.pending.clear();
+                    break;
+                }
+                Err(e) => {
+                    let valid = e.valid_up_to();
+                    out.push_str(std::str::from_utf8(&self.pending[..valid]).unwrap());
+                    match e.error_len() {
+                        // Incomplete-but-plausible suffix: wait for
+                        // the rest of the character.
+                        None => {
+                            self.pending.drain(..valid);
+                            break;
+                        }
+                        // Known-invalid sequence of `n` bytes: one
+                        // replacement char, exactly like the lossy
+                        // decoder's maximal-subpart rule.
+                        Some(n) => {
+                            out.push('\u{FFFD}');
+                            self.pending.drain(..valid + n);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Flush: any incomplete suffix still buffered becomes the single
+    /// U+FFFD that `from_utf8_lossy` emits for an unterminated
+    /// sequence at end of input.
+    pub fn finish(&mut self) -> String {
+        if self.pending.is_empty() {
+            String::new()
+        } else {
+            self.pending.clear();
+            "\u{FFFD}".to_string()
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -76,5 +151,57 @@ mod tests {
     fn specials_do_not_collide_with_bytes() {
         assert!(BOS as usize >= 256 && EOS as usize >= 256 && PAD as usize >= 256);
         assert!(VOCAB_MIN > PAD as usize);
+    }
+
+    /// Concatenated incremental output must equal the batch decode,
+    /// byte for byte, for every prefix boundary of every sequence.
+    fn assert_stream_matches_batch(tokens: &[u32]) {
+        let t = Tokenizer::new();
+        let mut dec = StreamDecoder::new();
+        let mut streamed = String::new();
+        for &tok in tokens {
+            streamed.push_str(&dec.push(tok));
+        }
+        streamed.push_str(&dec.finish());
+        assert_eq!(streamed, t.decode(tokens), "tokens: {tokens:?}");
+    }
+
+    #[test]
+    fn stream_decoder_matches_batch_decode() {
+        let t = Tokenizer::new();
+        assert_stream_matches_batch(&t.encode("plain ascii"));
+        assert_stream_matches_batch(&t.encode("héllo — 世界"));
+        // Specials interleaved: dropped by both paths.
+        let mut toks = t.encode_with_bos("caf");
+        toks.extend(t.encode("é"));
+        toks.push(EOS);
+        assert_stream_matches_batch(&toks);
+    }
+
+    #[test]
+    fn stream_decoder_multibyte_chars_arrive_only_when_complete() {
+        let t = Tokenizer::new();
+        let mut dec = StreamDecoder::new();
+        let bytes = "é".as_bytes(); // two bytes
+        assert_eq!(dec.push(bytes[0] as u32), "", "first byte must buffer");
+        assert_eq!(dec.push(bytes[1] as u32), "é");
+        assert_eq!(dec.finish(), "");
+        let _ = t;
+    }
+
+    #[test]
+    fn stream_decoder_lossy_semantics_on_invalid_and_truncated_utf8() {
+        // Lone continuation byte: invalid as soon as it is seen.
+        assert_stream_matches_batch(&[0x80]);
+        // Invalid start byte then valid ascii.
+        assert_stream_matches_batch(&[0xFF, b'a' as u32]);
+        // Overlong/invalid sequence mid-text.
+        assert_stream_matches_batch(&[b'a' as u32, 0xE2, 0x28, 0xA1, b'b' as u32]);
+        // Truncated 3-byte sequence at end of input → one U+FFFD.
+        assert_stream_matches_batch(&[b'x' as u32, 0xE2, 0x82]);
+        // Truncated 2-byte sequence alone.
+        assert_stream_matches_batch(&[0xC3]);
+        // Valid text ending exactly on a boundary.
+        assert_stream_matches_batch(&[0xE2, 0x82, 0xAC]); // €
     }
 }

@@ -5,7 +5,7 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use super::queue::BoundedQueue;
+use super::queue::FairQueue;
 use super::request::Request;
 
 /// Batching policy.
@@ -60,15 +60,18 @@ pub struct Batch {
     pub formed_at: Instant,
 }
 
-/// Pulls requests off the shared queue according to a [`BatchPolicy`].
+/// Pulls requests off the shared fair-admission queue according to a
+/// [`BatchPolicy`]. Pickup order is the queue's weighted round-robin
+/// over client lanes, so one chatty client cannot fill a whole batch
+/// while others wait.
 pub struct Batcher {
-    queue: Arc<BoundedQueue<Request>>,
+    queue: Arc<FairQueue>,
     policy: BatchPolicy,
 }
 
 impl Batcher {
     /// Batcher over a shared queue.
-    pub fn new(queue: Arc<BoundedQueue<Request>>, policy: BatchPolicy) -> Self {
+    pub fn new(queue: Arc<FairQueue>, policy: BatchPolicy) -> Self {
         Self { queue, policy }
     }
 
@@ -117,7 +120,7 @@ mod tests {
 
     #[test]
     fn full_batch_returns_immediately() {
-        let q = Arc::new(BoundedQueue::new(100));
+        let q = Arc::new(FairQueue::new(100));
         for i in 0..10 {
             q.try_push(req(i)).unwrap();
         }
@@ -133,7 +136,7 @@ mod tests {
 
     #[test]
     fn deadline_flushes_partial_batch() {
-        let q = Arc::new(BoundedQueue::new(100));
+        let q = Arc::new(FairQueue::new(100));
         q.try_push(req(0)).unwrap();
         let b = Batcher::new(
             Arc::clone(&q),
@@ -149,14 +152,14 @@ mod tests {
 
     #[test]
     fn idle_timeout_returns_none() {
-        let q: Arc<BoundedQueue<Request>> = Arc::new(BoundedQueue::new(4));
+        let q = Arc::new(FairQueue::new(4));
         let b = Batcher::new(Arc::clone(&q), BatchPolicy::default());
         assert!(b.next_batch(Duration::from_millis(10)).is_none());
     }
 
     #[test]
     fn poll_drains_without_waiting() {
-        let q = Arc::new(BoundedQueue::new(16));
+        let q = Arc::new(FairQueue::new(16));
         let b = Batcher::new(Arc::clone(&q), BatchPolicy::default());
         // Empty queue: returns immediately with nothing.
         let t0 = Instant::now();
@@ -173,7 +176,7 @@ mod tests {
 
     #[test]
     fn closed_queue_returns_none_after_drain() {
-        let q = Arc::new(BoundedQueue::new(4));
+        let q = Arc::new(FairQueue::new(4));
         q.try_push(req(1)).unwrap();
         q.close();
         let b = Batcher::new(Arc::clone(&q), BatchPolicy::default());

@@ -1,0 +1,309 @@
+//! First-class blocking client for the wire protocol (v2).
+//!
+//! Entry point is [`Client::prompt`], which returns a
+//! [`RequestBuilder`]:
+//!
+//! ```no_run
+//! # use rsr::serving::client::Client;
+//! # fn main() -> rsr::error::Result<()> {
+//! let mut client = Client::connect("127.0.0.1:7777".parse().unwrap())?;
+//! let out = client.prompt(1, "hello").max_new(8).deadline_ms(2_000).send()?;
+//! if let Some((code, msg)) = &out.error {
+//!     eprintln!("failed ({code:?}): {msg}");
+//! } else {
+//!     println!("{}", out.text);
+//! }
+//! // Streaming: one callback per token frame, then the terminal outcome.
+//! let out = client
+//!     .prompt(2, "hello again")
+//!     .max_new(8)
+//!     .stream(true)
+//!     .stream_with(|frame| {
+//!         if let Some(text) = frame.get("text").and_then(|t| t.as_str()) {
+//!             print!("{text}");
+//!         }
+//!     })?;
+//! assert!(out.is_ok());
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Terminal failures surface as machine-readable [`ErrorCode`]s parsed
+//! from the wire `code` field — callers branch on the enum, never on
+//! error prose (the prose is for humans and carries no stability
+//! promise; see ARCHITECTURE.md §Wire protocol v2 for the code table).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Stable machine-readable terminal outcome codes — the wire `code`
+/// field. One variant per code the server emits, plus [`Other`] for
+/// forward compatibility with codes this client version predates.
+///
+/// [`Other`]: ErrorCode::Other
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Malformed or out-of-range request (`bad_request`).
+    BadRequest,
+    /// Admission queue at capacity — retry later (`queue_full`).
+    QueueFull,
+    /// Server is draining and refuses new work (`draining`).
+    Draining,
+    /// Request deadline expired (`deadline_exceeded`).
+    DeadlineExceeded,
+    /// Cancelled — typically a client disconnect (`cancelled`).
+    Cancelled,
+    /// KV memory budget exhausted under load (`kv_budget_exceeded`).
+    KvBudgetExceeded,
+    /// Replicas stalled, saturated or shut down (`unavailable`).
+    Unavailable,
+    /// Server-side fault: worker panic, dispatcher loss (`internal`).
+    Internal,
+    /// A code this client version doesn't know.
+    Other,
+}
+
+impl ErrorCode {
+    /// Parse a wire `code` string.
+    pub fn from_wire(code: &str) -> Self {
+        match code {
+            "bad_request" => Self::BadRequest,
+            "queue_full" => Self::QueueFull,
+            "draining" => Self::Draining,
+            "deadline_exceeded" => Self::DeadlineExceeded,
+            "cancelled" => Self::Cancelled,
+            "kv_budget_exceeded" => Self::KvBudgetExceeded,
+            "unavailable" => Self::Unavailable,
+            "internal" => Self::Internal,
+            _ => Self::Other,
+        }
+    }
+}
+
+/// Parsed terminal reply: the v1 response line or the v2 `done` frame.
+#[derive(Debug)]
+pub struct Outcome {
+    /// Client-assigned request id echoed by the server.
+    pub id: u64,
+    /// Decoded completion text (empty on error).
+    pub text: String,
+    /// Generated token ids (empty on error).
+    pub tokens: Vec<u32>,
+    /// Terminal failure: machine-readable code + human prose.
+    pub error: Option<(ErrorCode, String)>,
+    /// The raw reply object (timings and any fields this struct
+    /// doesn't model).
+    pub raw: Json,
+}
+
+impl Outcome {
+    /// True when the request completed (no terminal error).
+    pub fn is_ok(&self) -> bool {
+        self.error.is_none()
+    }
+
+    /// The terminal error code, when the request failed.
+    pub fn code(&self) -> Option<ErrorCode> {
+        self.error.as_ref().map(|(c, _)| *c)
+    }
+
+    fn from_json(raw: Json) -> Self {
+        let id = raw.get("id").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64;
+        let error = raw.get("error").and_then(|e| e.as_str()).map(|msg| {
+            let code = raw
+                .get("code")
+                .and_then(|c| c.as_str())
+                .map(ErrorCode::from_wire)
+                // Pre-v2 servers send no code; treat as internal.
+                .unwrap_or(ErrorCode::Internal);
+            (code, msg.to_string())
+        });
+        let text = raw
+            .get("text")
+            .and_then(|t| t.as_str())
+            .unwrap_or_default()
+            .to_string();
+        let tokens = match raw.get("tokens") {
+            Some(Json::Arr(xs)) => xs
+                .iter()
+                .filter_map(|x| x.as_f64())
+                .map(|x| x as u32)
+                .collect(),
+            _ => Vec::new(),
+        };
+        Self { id, text, tokens, error, raw }
+    }
+}
+
+/// A minimal blocking client for tests, examples and the CLI.
+pub struct Client {
+    stream: TcpStream,
+}
+
+/// One request under construction — build with [`Client::prompt`],
+/// finish with [`send`](RequestBuilder::send) /
+/// [`send_json`](RequestBuilder::send_json) /
+/// [`stream_with`](RequestBuilder::stream_with).
+pub struct RequestBuilder<'c> {
+    client: &'c mut Client,
+    id: u64,
+    prompt: String,
+    max_new: usize,
+    deadline_ms: Option<u64>,
+    stream: bool,
+}
+
+impl Client {
+    /// Connect to a server.
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Self> {
+        Ok(Self { stream: TcpStream::connect(addr)? })
+    }
+
+    /// Start building a request (default `max_new` 16, no deadline,
+    /// not streamed).
+    pub fn prompt(&mut self, id: u64, prompt: &str) -> RequestBuilder<'_> {
+        RequestBuilder {
+            client: self,
+            id,
+            prompt: prompt.to_string(),
+            max_new: 16,
+            deadline_ms: None,
+            stream: false,
+        }
+    }
+
+    /// Send a control command (`metrics` / `status` / `trace` /
+    /// `drain`) and return the reply object.
+    pub fn control(&mut self, cmd: &str) -> Result<Json> {
+        let line = Json::obj(vec![("cmd", Json::str(cmd))]);
+        self.send_raw(&line.to_string())
+    }
+
+    /// Send a raw line (failure-injection tests) and read one reply
+    /// line.
+    pub fn send_raw(&mut self, line: &str) -> Result<Json> {
+        writeln!(self.stream, "{line}")?;
+        self.read_reply()
+    }
+
+    /// Send one prompt and wait for the reply line.
+    #[deprecated(note = "use `client.prompt(id, text).max_new(n).send_json()`")]
+    pub fn request(&mut self, id: u64, prompt: &str, max_new: usize) -> Result<Json> {
+        self.prompt(id, prompt).max_new(max_new).send_json()
+    }
+
+    /// Send one prompt with an optional per-request deadline.
+    #[deprecated(
+        note = "use `client.prompt(id, text).max_new(n).deadline_ms(ms).send_json()`"
+    )]
+    pub fn request_with(
+        &mut self,
+        id: u64,
+        prompt: &str,
+        max_new: usize,
+        deadline_ms: Option<u64>,
+    ) -> Result<Json> {
+        let mut b = self.prompt(id, prompt).max_new(max_new);
+        if let Some(ms) = deadline_ms {
+            b = b.deadline_ms(ms);
+        }
+        b.send_json()
+    }
+
+    fn read_reply(&mut self) -> Result<Json> {
+        let mut reader = BufReader::new(self.stream.try_clone()?);
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        if line.is_empty() {
+            return Err(Error::Unavailable("server closed the connection".into()));
+        }
+        Json::parse(&line).map_err(Error::Serving)
+    }
+}
+
+impl RequestBuilder<'_> {
+    /// Generation budget in tokens (1..=4096; default 16).
+    pub fn max_new(mut self, n: usize) -> Self {
+        self.max_new = n;
+        self
+    }
+
+    /// Total request budget in milliseconds — the server sheds or
+    /// retires the request with code `deadline_exceeded` once it
+    /// expires.
+    pub fn deadline_ms(mut self, ms: u64) -> Self {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
+    /// Request incremental token frames instead of one reply line.
+    /// Read them with [`stream_with`](Self::stream_with);
+    /// [`send`](Self::send) / [`send_json`](Self::send_json) also
+    /// accept a streamed reply by skipping to the `done` frame.
+    pub fn stream(mut self, on: bool) -> Self {
+        self.stream = on;
+        self
+    }
+
+    fn wire_line(&self) -> String {
+        let mut fields = vec![
+            ("id", Json::num(self.id as f64)),
+            ("prompt", Json::str(self.prompt.clone())),
+            ("max_new", Json::num(self.max_new as f64)),
+        ];
+        if let Some(ms) = self.deadline_ms {
+            fields.push(("deadline_ms", Json::num(ms as f64)));
+        }
+        if self.stream {
+            fields.push(("stream", Json::Bool(true)));
+        }
+        Json::obj(fields).to_string()
+    }
+
+    /// Send and return the raw terminal reply object (the v1 line, or
+    /// the `done` frame of a streamed request — intermediate token
+    /// frames are read and discarded).
+    pub fn send_json(self) -> Result<Json> {
+        self.stream_frames(|_| {})
+    }
+
+    /// Send and return the typed terminal [`Outcome`].
+    pub fn send(self) -> Result<Outcome> {
+        self.send_json().map(Outcome::from_json)
+    }
+
+    /// Send a streaming request, invoking `on_frame` with each raw
+    /// token frame (fields `event`/`id`/`index`/`token`/`text`; the
+    /// flush frame carries `text` only) as it arrives, and return the
+    /// typed terminal [`Outcome`] of the `done` frame. Implies
+    /// [`stream(true)`](Self::stream).
+    pub fn stream_with(mut self, on_frame: impl FnMut(&Json)) -> Result<Outcome> {
+        self.stream = true;
+        self.stream_frames(on_frame).map(Outcome::from_json)
+    }
+
+    /// Shared wire loop: write the request line, forward token frames
+    /// to `on_frame`, return the terminal reply.
+    fn stream_frames(self, mut on_frame: impl FnMut(&Json)) -> Result<Json> {
+        let line = self.wire_line();
+        writeln!(self.client.stream, "{line}")?;
+        let mut reader = BufReader::new(self.client.stream.try_clone()?);
+        let mut buf = String::new();
+        loop {
+            buf.clear();
+            reader.read_line(&mut buf)?;
+            if buf.is_empty() {
+                return Err(Error::Unavailable("server closed the connection".into()));
+            }
+            let json = Json::parse(&buf).map_err(Error::Serving)?;
+            match json.get("event").and_then(|e| e.as_str()) {
+                Some("token") => on_frame(&json),
+                // "done", or a v1-shaped line (no event field at all).
+                _ => return Ok(json),
+            }
+        }
+    }
+}

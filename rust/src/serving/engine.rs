@@ -37,8 +37,8 @@ use std::time::{Duration, Instant};
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
-use super::queue::{BoundedQueue, PushError};
-use super::request::{Request, Response, Timing};
+use super::queue::{FairQueue, PushError};
+use super::request::{Frame, Request, Response, Timing};
 use super::scheduler::{schedule, Policy};
 use crate::error::{Error, Result};
 use crate::kernels::Backend;
@@ -195,12 +195,16 @@ impl Default for EngineConfig {
 /// multi-consumer settings (the TCP server) a single dispatcher thread
 /// should own consumption (see `server::ResponseHub`).
 pub struct InferenceEngine {
-    queue: Arc<BoundedQueue<Request>>,
+    queue: Arc<FairQueue>,
     metrics: Arc<Metrics>,
-    responses: std::sync::Mutex<mpsc::Receiver<Response>>,
+    responses: std::sync::Mutex<mpsc::Receiver<Frame>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     inflight: Arc<AtomicUsize>,
     shutdown: Arc<AtomicBool>,
+    /// Drain mode: in-flight and queued work completes, new submissions
+    /// are refused with [`Error::Draining`]. Never reset — draining is
+    /// the beginning of the end of the process.
+    draining: Arc<AtomicBool>,
     /// Engine start instant — the heartbeat's epoch and the trace
     /// timestamp base.
     epoch: Instant,
@@ -372,11 +376,12 @@ impl InferenceEngine {
         cfg: EngineConfig,
         store: Option<Arc<PlanStore>>,
     ) -> Result<Self> {
-        let queue = Arc::new(BoundedQueue::new(cfg.queue_capacity));
+        let queue = Arc::new(FairQueue::new(cfg.queue_capacity));
         let metrics = Arc::new(Metrics::new());
-        let (tx, rx) = mpsc::channel::<Response>();
+        let (tx, rx) = mpsc::channel::<Frame>();
         let inflight = Arc::new(AtomicUsize::new(0));
         let shutdown = Arc::new(AtomicBool::new(false));
+        let draining = Arc::new(AtomicBool::new(false));
         let epoch = Instant::now();
         let heartbeat_ms = Arc::new(AtomicU64::new(0));
         let step_counter = Arc::new(AtomicU64::new(0));
@@ -470,6 +475,7 @@ impl InferenceEngine {
             workers,
             inflight,
             shutdown,
+            draining,
             epoch,
             heartbeat_ms,
             trace,
@@ -485,9 +491,16 @@ impl InferenceEngine {
     /// already-dead work (expired deadline / cancelled) before it ever
     /// occupies queue capacity.
     pub fn submit(&self, request: Request) -> Result<()> {
+        // Drain refusals — like queue-full sheds — stay un-admitted:
+        // the engine never took responsibility for the work, so
+        // conservation accounts them under `rejected`.
+        if self.is_draining() {
+            self.metrics.record_admission(false);
+            return Err(Error::Draining("engine is draining — not accepting work".into()));
+        }
         if fault_queue_full(&self.cfg) {
             self.metrics.record_admission(false);
-            return Err(Error::Serving("queue full — retry later".into()));
+            return Err(Error::QueueFull("retry later".into()));
         }
         // Pre-admission sheds reach a terminal outcome, so they count
         // as admitted-with-immediate-terminal — `admitted` bumps BEFORE
@@ -533,19 +546,51 @@ impl InferenceEngine {
                 self.inflight.fetch_add(1, Ordering::Relaxed);
                 Ok(())
             }
-            Err(PushError::Full) => {
-                Err(Error::Serving("queue full — retry later".into()))
-            }
-            Err(PushError::Closed) => Err(Error::Serving("engine shut down".into())),
+            Err(PushError::Full) => Err(Error::QueueFull("retry later".into())),
+            Err(PushError::Closed) => Err(Error::Unavailable("engine shut down".into())),
         }
     }
 
-    /// Receive the next completed response (blocking with timeout).
-    /// Single-consumer: concurrent callers serialize on an internal
-    /// lock and may steal each other's responses — multi-connection
-    /// fronts must use one dispatcher (see `server::ResponseHub`).
+    /// Receive the next **terminal** response (blocking with timeout),
+    /// skipping any interleaved streaming token frames. Single-consumer:
+    /// concurrent callers serialize on an internal lock and may steal
+    /// each other's responses — multi-connection fronts must use one
+    /// dispatcher (see `server::ResponseHub`).
     pub fn recv_timeout(&self, timeout: Duration) -> Option<Response> {
+        let deadline = Instant::now() + timeout;
+        let rx = self.responses.lock().unwrap();
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(left) {
+                Ok(Frame::Done(r)) => return Some(r),
+                Ok(Frame::Token { .. }) => continue,
+                Err(_) => return None,
+            }
+        }
+    }
+
+    /// Receive the next frame — token or terminal — from any request.
+    /// Same single-consumer contract as [`recv_timeout`](Self::recv_timeout).
+    pub fn recv_frame_timeout(&self, timeout: Duration) -> Option<Frame> {
         self.responses.lock().unwrap().recv_timeout(timeout).ok()
+    }
+
+    /// Flip the engine into drain mode: queued and in-flight work runs
+    /// to completion, every new [`submit`](Self::submit) is refused
+    /// with [`Error::Draining`]. Idempotent; never reversed.
+    pub fn set_draining(&self) {
+        self.draining.store(true, Ordering::Relaxed);
+    }
+
+    /// True once [`set_draining`](Self::set_draining) has been called.
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Relaxed)
+    }
+
+    /// True when the engine is draining and holds no work — the
+    /// server's exit condition.
+    pub fn drained(&self) -> bool {
+        self.is_draining() && self.load() == 0
     }
 
     /// Requests admitted but not yet answered.
@@ -619,6 +664,7 @@ impl InferenceEngine {
                 // "no budget" from "budget of N".
                 let total =
                     if self.kv_pool.is_bounded() { self.kv_pool.total_pages() } else { 0 };
+                map.insert("draining".into(), Json::Bool(self.is_draining()));
                 map.insert("kv_pages_total".into(), Json::num(total as f64));
                 map.insert(
                     "kv_pages_in_use".into(),
@@ -668,9 +714,9 @@ impl InferenceEngine {
 /// Everything a worker thread shares with the engine: queue, metrics,
 /// response channel, lifecycle bookkeeping, heartbeat, and config.
 struct WorkerCtx {
-    queue: Arc<BoundedQueue<Request>>,
+    queue: Arc<FairQueue>,
     metrics: Arc<Metrics>,
-    tx: mpsc::Sender<Response>,
+    tx: mpsc::Sender<Frame>,
     inflight: Arc<AtomicUsize>,
     shutdown: Arc<AtomicBool>,
     /// Engine-wide lockstep step counter (fault-injection reference
@@ -756,6 +802,17 @@ impl Retire {
             Retire::KvBudget(_) => "kv_budget_exceeded",
         }
     }
+
+    /// Stable wire code for the terminal error response (same table as
+    /// [`Error::code`]; `Failed` is the catch-all `internal`).
+    fn code(&self) -> &'static str {
+        match self {
+            Retire::Done | Retire::Failed(_) => "internal",
+            Retire::Deadline => "deadline_exceeded",
+            Retire::Cancelled => "cancelled",
+            Retire::KvBudget(_) => "kv_budget_exceeded",
+        }
+    }
 }
 
 /// Map a model-step error to its retirement class: a refused KV page
@@ -802,7 +859,7 @@ fn account_and_send(
         Retire::KvBudget(_) => ctx.metrics.record_kv_budget_exceeded(arrival.elapsed()),
     }
     ctx.inflight.fetch_sub(1, Ordering::Relaxed);
-    ctx.tx.send(response).is_ok()
+    ctx.tx.send(Frame::Done(response)).is_ok()
 }
 
 /// Terminal outcome for a request that never got (or lost) a slot.
@@ -818,7 +875,7 @@ fn respond_terminal(ctx: &WorkerCtx, request: &Request, outcome: Retire) -> bool
     let msg = outcome.error_message().unwrap_or_else(|| "retired".into());
     account_and_send(
         ctx,
-        Response::err(request.id, msg),
+        Response::err_coded(request.id, msg, outcome.code()),
         &outcome,
         request.prompt.len(),
         request.arrival,
@@ -900,7 +957,7 @@ fn sequential_loop(
                 });
                 let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     fault_before_step(step_no, &ctx.cfg);
-                    let out = run_request(&mut model, &request, &mut rng);
+                    let out = run_request(&mut model, &request, &mut rng, ctx);
                     // Eager page release: an idle sequential worker
                     // holds zero KV pages between requests.
                     model.reset();
@@ -948,17 +1005,21 @@ fn sequential_loop(
                                 return;
                             }
                         }
-                        if request.attempts == 0 {
+                        // A streaming request may already have shipped
+                        // token frames — those cannot be unsent, so a
+                        // clean re-run (which would re-emit them) is
+                        // off the table: it fails terminally instead of
+                        // taking the quarantine retry.
+                        if request.attempts == 0 && !request.stream {
                             request.attempts = 1;
                             continue; // quarantine retry
                         }
-                        if !respond_terminal(
-                            ctx,
-                            &request,
-                            Retire::Failed(format!(
-                                "poisoned: request panicked the worker twice ({msg})"
-                            )),
-                        ) {
+                        let msg = if request.attempts == 0 {
+                            format!("worker panicked mid-stream ({msg})")
+                        } else {
+                            format!("poisoned: request panicked the worker twice ({msg})")
+                        };
+                        if !respond_terminal(ctx, &request, Retire::Failed(msg)) {
                             return;
                         }
                         break;
@@ -1005,7 +1066,7 @@ fn finish_slot(mut slot: SlotState, outcome: Retire, ctx: &WorkerCtx) -> bool {
     let arrival = slot.request.arrival;
     let prompt_tokens = slot.request.prompt.len();
     let response = match outcome.error_message() {
-        Some(msg) => Response::err(slot.request.id, msg),
+        Some(msg) => Response::err_coded(slot.request.id, msg, outcome.code()),
         None => {
             let prefill_end = slot.prefill_done.unwrap_or(now);
             let timing = Timing {
@@ -1487,6 +1548,17 @@ fn continuous_loop(
             let next =
                 sampler.sample(&logits[last_row * vocab..(last_row + 1) * vocab], &mut rng);
             st.tokens.push(next);
+            // Streaming: every sampled token ships immediately as a
+            // `Token` frame; the terminal `Done` still carries the full
+            // sequence, so non-streaming consumers see no difference.
+            // A dropped receiver surfaces at the terminal send.
+            if st.request.stream {
+                let _ = ctx.tx.send(Frame::Token {
+                    id: st.request.id,
+                    index: st.tokens.len() - 1,
+                    token: next,
+                });
+            }
             if let (Some(t), Some(b)) = (trace_now, st.trace.as_mut()) {
                 if was_prefill {
                     b.first_token(t);
@@ -1520,11 +1592,14 @@ fn continuous_loop(
 /// Run one request to a terminal outcome on the sequential path. The
 /// deadline and cancellation are checked between every model step
 /// (prefill tokens included), matching the continuous loop's
-/// between-step checkpoint.
+/// between-step checkpoint. Streaming requests ship each sampled token
+/// as a [`Frame::Token`] through `ctx.tx` (the terminal `Done` is sent
+/// by the caller's accounting path, as everywhere else).
 fn run_request(
     model: &mut Transformer,
     request: &Request,
     rng: &mut Rng,
+    ctx: &WorkerCtx,
 ) -> (Response, Retire) {
     let picked_up = Instant::now();
     let queue_time = picked_up.duration_since(request.arrival);
@@ -1534,10 +1609,16 @@ fn run_request(
 
     let lifecycle = |r: &Request| -> Option<(Response, Retire)> {
         if r.cancel.is_cancelled() {
-            return Some((Response::err(r.id, "cancelled by client"), Retire::Cancelled));
+            return Some((
+                Response::err_coded(r.id, "cancelled by client", "cancelled"),
+                Retire::Cancelled,
+            ));
         }
         if r.deadline_expired() {
-            return Some((Response::err(r.id, "deadline exceeded"), Retire::Deadline));
+            return Some((
+                Response::err_coded(r.id, "deadline exceeded", "deadline_exceeded"),
+                Retire::Deadline,
+            ));
         }
         None
     };
@@ -1551,7 +1632,7 @@ fn run_request(
         if let Err(e) = model.forward_token(t) {
             let outcome = retire_for_model_error(&e, "prefill");
             let msg = outcome.error_message().unwrap_or_default();
-            return (Response::err(request.id, msg), outcome);
+            return (Response::err_coded(request.id, msg, outcome.code()), outcome);
         }
     }
     timing.prefill = t0.elapsed();
@@ -1579,6 +1660,13 @@ fn run_request(
         };
         let next = sampler.sample(&logits, rng);
         tokens.push(next);
+        if request.stream {
+            let _ = ctx.tx.send(Frame::Token {
+                id: request.id,
+                index: tokens.len() - 1,
+                token: next,
+            });
+        }
         if next == crate::model::tokenizer::EOS
             || model.seq_len() >= model.config().max_seq_len
         {
@@ -1821,8 +1909,8 @@ mod tests {
         engine.submit(req).unwrap();
         let r = engine.recv_timeout(Duration::from_secs(30)).expect("terminal outcome");
         assert_eq!(r.id, 7);
-        let err = r.error.expect("must be retired with an error");
-        assert!(err.contains("deadline exceeded"), "{err}");
+        assert!(r.error.is_some(), "must be retired with an error");
+        assert_eq!(r.code, Some("deadline_exceeded"));
         assert_eq!(engine.metrics().deadline_exceeded.load(Ordering::Relaxed), 1);
         assert_eq!(engine.inflight(), 0);
         // The slot is free again: a healthy request completes.
@@ -1847,7 +1935,7 @@ mod tests {
             .with_deadline(Duration::from_millis(100));
         engine.submit(req).unwrap();
         let r = engine.recv_timeout(Duration::from_secs(30)).expect("terminal outcome");
-        assert!(r.error.unwrap().contains("deadline exceeded"));
+        assert_eq!(r.code, Some("deadline_exceeded"));
         assert_eq!(engine.inflight(), 0);
         engine.shutdown();
     }
@@ -1872,8 +1960,8 @@ mod tests {
         token.cancel();
         let r = engine.recv_timeout(Duration::from_secs(30)).expect("terminal outcome");
         assert_eq!(r.id, 9);
-        let err = r.error.expect("cancelled requests get an error response");
-        assert!(err.contains("cancelled"), "{err}");
+        assert!(r.error.is_some(), "cancelled requests get an error response");
+        assert_eq!(r.code, Some("cancelled"));
         assert_eq!(engine.metrics().cancelled.load(Ordering::Relaxed), 1);
         assert_eq!(engine.inflight(), 0);
         engine.shutdown();
@@ -2127,9 +2215,82 @@ mod tests {
             ..Default::default()
         });
         let err = engine.submit(Request::new(1, vec![10], 2)).unwrap_err();
-        assert!(err.to_string().contains("queue full"), "{err}");
+        assert!(matches!(err, Error::QueueFull(_)), "{err:?}");
+        assert_eq!(err.code(), "queue_full");
         let snap = engine.metrics().snapshot();
         assert_eq!(snap.get("rejected_total").unwrap().as_f64(), Some(1.0));
+        engine.shutdown();
+    }
+
+    // ---- streaming -----------------------------------------------
+
+    #[test]
+    fn streaming_frames_reassemble_to_the_response_tokens() {
+        let engine = tiny_engine(EngineConfig { workers: 1, ..Default::default() });
+        engine.submit(Request::new(1, vec![10, 20, 30], 6).with_stream(true)).unwrap();
+        let mut streamed = Vec::new();
+        let done = loop {
+            match engine.recv_frame_timeout(Duration::from_secs(30)).expect("frame") {
+                Frame::Token { id, index, token } => {
+                    assert_eq!(id, 1);
+                    assert_eq!(index, streamed.len(), "frames arrive in order");
+                    streamed.push(token);
+                }
+                Frame::Done(r) => break r,
+            }
+        };
+        assert!(done.error.is_none(), "{:?}", done.error);
+        assert!(!done.tokens.is_empty());
+        assert_eq!(streamed, done.tokens, "frames must reassemble exactly");
+        engine.shutdown();
+    }
+
+    #[test]
+    fn streaming_matches_non_streaming_token_for_token() {
+        let weights =
+            Arc::new(ModelWeights::generate(ModelConfig::tiny(), 99).unwrap());
+        let run = |stream: bool| -> Vec<u32> {
+            let engine = InferenceEngine::start(
+                Arc::clone(&weights),
+                EngineConfig { workers: 1, ..Default::default() },
+            )
+            .unwrap();
+            engine
+                .submit(Request::new(1, vec![10, 20, 30], 6).with_stream(stream))
+                .unwrap();
+            let r = engine.recv_timeout(Duration::from_secs(30)).expect("response");
+            assert!(r.error.is_none(), "{:?}", r.error);
+            engine.shutdown();
+            r.tokens
+        };
+        assert_eq!(run(true), run(false), "streaming must not perturb sampling");
+    }
+
+    // ---- drain ----------------------------------------------------
+
+    #[test]
+    fn drain_completes_queued_work_and_refuses_new() {
+        let engine = tiny_engine(EngineConfig { workers: 1, ..Default::default() });
+        engine.submit(Request::new(1, vec![10, 20, 30], 4)).unwrap();
+        engine.set_draining();
+        let err = engine.submit(Request::new(2, vec![10], 2)).unwrap_err();
+        assert!(matches!(err, Error::Draining(_)), "{err:?}");
+        assert_eq!(err.code(), "draining");
+        let r =
+            engine.recv_timeout(Duration::from_secs(30)).expect("in-flight completes");
+        assert!(r.error.is_none(), "{:?}", r.error);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !engine.drained() {
+            assert!(Instant::now() < deadline, "engine must reach drained()");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // The refused submit is a rejection (never admitted), so
+        // conservation holds with zero inflight at exit.
+        let m = engine.snapshot();
+        assert_eq!(m.get("rejected_total").unwrap().as_f64(), Some(1.0));
+        assert_eq!(m.get("inflight").unwrap().as_f64(), Some(0.0));
+        assert!(matches!(m.get("conserved"), Some(Json::Bool(true))));
+        assert!(matches!(m.get("draining"), Some(Json::Bool(true))));
         engine.shutdown();
     }
 
@@ -2204,11 +2365,13 @@ mod tests {
         for _ in 0..2 {
             let r = engine.recv_timeout(Duration::from_secs(30)).expect("terminal");
             if let Some(e) = r.error {
+                assert_eq!(r.code, Some("kv_budget_exceeded"));
                 errs.push(e);
             }
         }
         assert_eq!(errs.len(), 1, "exactly one slot is evicted: {errs:?}");
-        assert!(errs[0].contains("kv budget exceeded"), "{}", errs[0]);
+        // The prose discriminates the eviction cause within the coded
+        // budget outcome (shed-at-seating vs mid-decode eviction).
         assert!(errs[0].contains("evicted under page pressure"), "{}", errs[0]);
         assert_eq!(engine.kv_pool().evictions(), 1);
         assert_eq!(engine.inflight(), 0);

@@ -56,6 +56,7 @@
 //! `std::net` + condvar queues (see DESIGN.md §Substitutions).
 
 pub mod batcher;
+pub mod client;
 pub mod engine;
 pub mod metrics;
 pub mod queue;
@@ -64,9 +65,10 @@ pub mod router;
 pub mod scheduler;
 pub mod server;
 
+pub use client::{Client, ErrorCode, Outcome, RequestBuilder};
 pub use engine::{EngineConfig, InferenceEngine};
 #[cfg(any(test, feature = "fault-inject"))]
 pub use engine::FaultPlan;
-pub use request::{CancelToken, Request, Response};
+pub use request::{CancelToken, Frame, Request, Response};
 pub use router::Router;
-pub use server::{Client, ResponseHub, Server};
+pub use server::{ResponseHub, Server};

@@ -1,11 +1,23 @@
-//! A bounded MPMC queue with blocking pop and non-blocking push —
-//! the backpressure point of the serving stack: when the queue is
-//! full, `try_push` fails and the server returns an overload error
-//! instead of accepting unbounded work.
+//! Admission queues — the backpressure point of the serving stack.
+//!
+//! [`BoundedQueue`] is a bounded MPMC FIFO with blocking pop and
+//! non-blocking push: when the queue is full, `try_push` fails and the
+//! server returns an overload error instead of accepting unbounded
+//! work.
+//!
+//! [`FairQueue`] is the engine's admission queue since protocol v2: a
+//! per-client weighted round-robin over [`Request`] lanes keyed by
+//! [`Request::client`] under one bounded global cap. Within a lane,
+//! order is FIFO; across lanes, pops rotate so a chatty client's
+//! backlog cannot starve others. With a single lane (all requests from
+//! one client, or every `client == 0`) it degenerates to exactly the
+//! old FIFO.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
+
+use super::request::Request;
 
 /// Bounded FIFO queue shared between producers (server threads) and
 /// consumers (engine workers).
@@ -112,6 +124,158 @@ impl<T> BoundedQueue<T> {
     }
 }
 
+/// Bounded per-client weighted round-robin admission queue.
+///
+/// Requests land in per-client FIFO lanes (keyed by
+/// [`Request::client`]); consumers pop lanes in round-robin rotation,
+/// taking up to `weight` requests from a lane before moving on
+/// (`weight == 1`, the default, is classic fair round-robin). The
+/// capacity bounds the **global** item count — the shed decision is
+/// identical to [`BoundedQueue`]'s, so conservation semantics carry
+/// over unchanged.
+pub struct FairQueue {
+    inner: Mutex<FairInner>,
+    not_empty: Condvar,
+    capacity: usize,
+    /// Requests served from one lane per rotation turn.
+    weight: usize,
+}
+
+#[derive(Default)]
+struct FairInner {
+    /// Per-client FIFO lanes. A lane exists iff it holds ≥ 1 request.
+    lanes: HashMap<u64, VecDeque<Request>>,
+    /// Round-robin rotation of lane keys; front is served next. Every
+    /// non-empty lane appears exactly once.
+    order: VecDeque<u64>,
+    /// Remaining turn budget of the front lane (starts at `weight`).
+    turn_left: usize,
+    /// Total queued requests across lanes.
+    len: usize,
+    closed: bool,
+}
+
+impl FairInner {
+    /// Pop the next request in weighted round-robin order.
+    fn pop(&mut self, weight: usize) -> Option<Request> {
+        let &key = self.order.front()?;
+        if self.turn_left == 0 {
+            self.turn_left = weight;
+        }
+        let lane = self.lanes.get_mut(&key).expect("lane in rotation exists");
+        let item = lane.pop_front().expect("lane in rotation is non-empty");
+        self.len -= 1;
+        self.turn_left -= 1;
+        if lane.is_empty() {
+            self.lanes.remove(&key);
+            self.order.pop_front();
+            self.turn_left = 0;
+        } else if self.turn_left == 0 {
+            // Turn spent: rotate the lane to the back.
+            self.order.rotate_left(1);
+        }
+        Some(item)
+    }
+}
+
+impl FairQueue {
+    /// Queue with the given global capacity (≥ 1) and unit lane weight.
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            inner: Mutex::new(FairInner::default()),
+            not_empty: Condvar::new(),
+            capacity: capacity.max(1),
+            weight: 1,
+        }
+    }
+
+    /// Serve up to `weight` requests per lane per rotation turn (≥ 1).
+    pub fn with_weight(mut self, weight: usize) -> Self {
+        self.weight = weight.max(1);
+        self
+    }
+
+    /// Non-blocking push into the sender's lane; fails when the global
+    /// cap is reached or the queue is closed.
+    pub fn try_push(&self, item: Request) -> Result<(), PushError> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(PushError::Closed);
+        }
+        if g.len >= self.capacity {
+            return Err(PushError::Full);
+        }
+        let key = item.client;
+        let lane = g.lanes.entry(key).or_default();
+        let was_empty = lane.is_empty();
+        lane.push_back(item);
+        g.len += 1;
+        if was_empty {
+            g.order.push_back(key);
+        }
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking round-robin pop with timeout; `None` on timeout or
+    /// when closed and drained.
+    pub fn pop_timeout(&self, timeout: Duration) -> Option<Request> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.pop(self.weight) {
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            let (guard, res) = self.not_empty.wait_timeout(g, timeout).unwrap();
+            g = guard;
+            if res.timed_out() && g.len == 0 {
+                return None;
+            }
+        }
+    }
+
+    /// Drain up to `max` requests in rotation order without blocking
+    /// (after at least one is available) — the batcher's bulk pickup.
+    pub fn pop_many(&self, max: usize, timeout: Duration) -> Vec<Request> {
+        let mut out = Vec::new();
+        if let Some(first) = self.pop_timeout(timeout) {
+            out.push(first);
+            let mut g = self.inner.lock().unwrap();
+            while out.len() < max {
+                match g.pop(self.weight) {
+                    Some(x) => out.push(x),
+                    None => break,
+                }
+            }
+        }
+        out
+    }
+
+    /// Requests currently queued across all lanes.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close the queue: producers fail, consumers drain then get `None`.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+    }
+
+    /// True when closed.
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -177,5 +341,92 @@ mod tests {
         }
         producer.join().unwrap();
         assert_eq!(got, (0..1000).collect::<Vec<_>>());
+    }
+
+    // ------------------------------------------------------------ //
+    // FairQueue                                                     //
+    // ------------------------------------------------------------ //
+
+    fn req(id: u64, client: u64) -> Request {
+        Request::new(id, vec![1], 4).with_client(client)
+    }
+
+    fn drain_ids(q: &FairQueue) -> Vec<u64> {
+        let mut ids = Vec::new();
+        while let Some(r) = q.pop_timeout(Duration::from_millis(1)) {
+            ids.push(r.id);
+        }
+        ids
+    }
+
+    #[test]
+    fn single_lane_degenerates_to_fifo() {
+        let q = FairQueue::new(10);
+        for i in 0..4 {
+            q.try_push(req(i, 0)).unwrap();
+        }
+        assert_eq!(drain_ids(&q), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn round_robin_interleaves_a_chatty_client_with_others() {
+        let q = FairQueue::new(16);
+        // Client 1 floods 6 requests before clients 2 and 3 get one in.
+        for i in 0..6 {
+            q.try_push(req(10 + i, 1)).unwrap();
+        }
+        q.try_push(req(20, 2)).unwrap();
+        q.try_push(req(30, 3)).unwrap();
+        // Rotation: lanes entered the rotation in order 1, 2, 3, so
+        // the late clients' single requests are served on the first
+        // rotation turns — not behind the 6-deep backlog.
+        assert_eq!(drain_ids(&q), vec![10, 20, 30, 11, 12, 13, 14, 15]);
+    }
+
+    #[test]
+    fn weight_serves_bursts_per_turn() {
+        let q = FairQueue::new(16).with_weight(2);
+        for i in 0..4 {
+            q.try_push(req(10 + i, 1)).unwrap();
+        }
+        q.try_push(req(20, 2)).unwrap();
+        q.try_push(req(21, 2)).unwrap();
+        q.try_push(req(22, 2)).unwrap();
+        // Two per lane per turn.
+        assert_eq!(drain_ids(&q), vec![10, 11, 20, 21, 12, 13, 22]);
+    }
+
+    #[test]
+    fn global_cap_sheds_regardless_of_lane() {
+        let q = FairQueue::new(2);
+        q.try_push(req(1, 1)).unwrap();
+        q.try_push(req(2, 2)).unwrap();
+        assert_eq!(q.try_push(req(3, 3)).unwrap_err(), PushError::Full);
+        assert_eq!(q.len(), 2);
+        q.pop_timeout(Duration::from_millis(1)).unwrap();
+        q.try_push(req(3, 3)).unwrap();
+    }
+
+    #[test]
+    fn fair_close_rejects_producers_but_drains() {
+        let q = FairQueue::new(4);
+        q.try_push(req(1, 1)).unwrap();
+        q.close();
+        assert_eq!(q.try_push(req(2, 1)).unwrap_err(), PushError::Closed);
+        assert_eq!(drain_ids(&q), vec![1]);
+        assert!(q.is_closed());
+    }
+
+    #[test]
+    fn fair_pop_many_respects_rotation() {
+        let q = FairQueue::new(16);
+        for i in 0..3 {
+            q.try_push(req(10 + i, 1)).unwrap();
+        }
+        q.try_push(req(20, 2)).unwrap();
+        let batch = q.pop_many(3, Duration::from_millis(5));
+        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![10, 20, 11]);
+        assert_eq!(q.len(), 1);
     }
 }

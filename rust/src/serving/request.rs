@@ -53,6 +53,16 @@ pub struct Request {
     /// supervision quarantine: one retry, then poisoned). Internal —
     /// never set by clients.
     pub attempts: u32,
+    /// Stream tokens as they are sampled: the engine emits one
+    /// [`Frame::Token`] per generated token in addition to the
+    /// terminal [`Frame::Done`]. `false` (the default) is the exact
+    /// single-response behavior.
+    pub stream: bool,
+    /// Fair-admission lane key (the server stamps one per connection;
+    /// `0` = the shared default lane). Requests from different lanes
+    /// are admitted round-robin so one chatty client cannot starve
+    /// others.
+    pub client: u64,
 }
 
 impl Request {
@@ -66,12 +76,26 @@ impl Request {
             deadline: None,
             cancel: CancelToken::new(),
             attempts: 0,
+            stream: false,
+            client: 0,
         }
     }
 
     /// Set an absolute deadline `budget` from the arrival timestamp.
     pub fn with_deadline(mut self, budget: Duration) -> Self {
         self.deadline = Some(self.arrival + budget);
+        self
+    }
+
+    /// Request per-token streaming frames.
+    pub fn with_stream(mut self, stream: bool) -> Self {
+        self.stream = stream;
+        self
+    }
+
+    /// Key the request into a fair-admission lane.
+    pub fn with_client(mut self, client: u64) -> Self {
+        self.client = client;
         self
     }
 
@@ -110,17 +134,66 @@ pub struct Response {
     pub timing: Timing,
     /// Error message when generation failed (tokens empty).
     pub error: Option<String>,
+    /// Stable machine-readable code for the error (`None` on success;
+    /// see [`crate::error::Error::code`] for the table). This is what
+    /// the wire's `code` field carries — clients match on it instead
+    /// of on message prose.
+    pub code: Option<&'static str>,
 }
 
 impl Response {
     /// Successful response.
     pub fn ok(id: u64, tokens: Vec<u32>, timing: Timing) -> Self {
-        Self { id, tokens, timing, error: None }
+        Self { id, tokens, timing, error: None, code: None }
     }
 
-    /// Failed response.
+    /// Failed response with the catch-all `internal` code.
     pub fn err(id: u64, msg: impl Into<String>) -> Self {
-        Self { id, tokens: Vec::new(), timing: Timing::default(), error: Some(msg.into()) }
+        Self::err_coded(id, msg, "internal")
+    }
+
+    /// Failed response carrying a stable wire code.
+    pub fn err_coded(id: u64, msg: impl Into<String>, code: &'static str) -> Self {
+        Self {
+            id,
+            tokens: Vec::new(),
+            timing: Timing::default(),
+            error: Some(msg.into()),
+            code: Some(code),
+        }
+    }
+}
+
+/// One message from the engine to a request's waiter.
+///
+/// Non-streaming requests produce exactly one `Done`. A streaming
+/// request ([`Request::stream`]) additionally produces one `Token` per
+/// sampled token, in order, before the terminal `Done` — multi-frame
+/// per request id through the same channel and
+/// [`ResponseHub`](crate::serving::server::ResponseHub) routing.
+#[derive(Debug, Clone)]
+pub enum Frame {
+    /// One sampled token of a streaming request.
+    Token {
+        /// Echoed request id.
+        id: u64,
+        /// 0-based position of this token in the generated sequence.
+        index: usize,
+        /// The sampled token id.
+        token: u32,
+    },
+    /// The request's single terminal response (always sent, streaming
+    /// or not).
+    Done(Response),
+}
+
+impl Frame {
+    /// The request id this frame belongs to.
+    pub fn id(&self) -> u64 {
+        match self {
+            Frame::Token { id, .. } => *id,
+            Frame::Done(r) => r.id,
+        }
     }
 }
 
@@ -142,9 +215,31 @@ mod tests {
     fn response_constructors() {
         let ok = Response::ok(7, vec![1, 2], Timing::default());
         assert!(ok.error.is_none());
+        assert!(ok.code.is_none());
         let err = Response::err(8, "boom");
         assert_eq!(err.error.as_deref(), Some("boom"));
         assert!(err.tokens.is_empty());
+        assert_eq!(err.code, Some("internal"));
+        let coded = Response::err_coded(9, "late", "deadline_exceeded");
+        assert_eq!(coded.code, Some("deadline_exceeded"));
+    }
+
+    #[test]
+    fn frame_ids_route_by_request() {
+        let t = Frame::Token { id: 3, index: 0, token: 42 };
+        assert_eq!(t.id(), 3);
+        let d = Frame::Done(Response::ok(4, vec![], Timing::default()));
+        assert_eq!(d.id(), 4);
+    }
+
+    #[test]
+    fn stream_and_client_builders() {
+        let r = Request::new(1, vec![1], 4);
+        assert!(!r.stream);
+        assert_eq!(r.client, 0);
+        let r = r.with_stream(true).with_client(9);
+        assert!(r.stream);
+        assert_eq!(r.client, 9);
     }
 
     #[test]

@@ -64,17 +64,30 @@ impl Router {
         self.engines.len()
     }
 
-    /// Whether a replica's heartbeat is fresh enough to take traffic.
+    /// Whether a replica may take new traffic: heartbeat fresh enough
+    /// (when a stall threshold is set) and not draining.
     fn healthy(&self, idx: usize) -> bool {
+        if self.engines[idx].is_draining() {
+            return false;
+        }
         match self.stall {
             None => true,
             Some(t) => self.engines[idx].heartbeat_age() <= t,
         }
     }
 
+    /// A replica's routing load: requests waiting in its admission
+    /// queue plus decode slots currently seated — the signal named by
+    /// the protocol-v2 front door (a replica with deep queue OR full
+    /// slots is equally unattractive).
+    fn load_of(e: &InferenceEngine) -> usize {
+        e.queue_depth() + e.live_slots()
+    }
+
     /// The replica a request would currently be routed to: least
-    /// loaded among the healthy ones. With every replica stalled this
-    /// falls back to the overall least-loaded (informational — a
+    /// loaded among the healthy (fresh-heartbeat, non-draining) ones.
+    /// With every replica stalled or draining this falls back to the
+    /// overall least-loaded (informational — a
     /// [`submit`](Router::submit) in that state errors instead).
     pub fn pick(&self) -> usize {
         let healthy = self
@@ -82,13 +95,13 @@ impl Router {
             .iter()
             .enumerate()
             .filter(|(i, _)| self.healthy(*i))
-            .min_by_key(|(_, e)| e.load())
+            .min_by_key(|(_, e)| Self::load_of(e))
             .map(|(i, _)| i);
         healthy.unwrap_or_else(|| {
             self.engines
                 .iter()
                 .enumerate()
-                .min_by_key(|(_, e)| e.load())
+                .min_by_key(|(_, e)| Self::load_of(e))
                 .map(|(i, _)| i)
                 .unwrap()
         })
@@ -121,12 +134,18 @@ impl Router {
             }
         }
         if tried == 0 {
-            return Err(Error::Serving(format!(
+            if self.engines.iter().all(|e| e.is_draining()) {
+                return Err(Error::Draining(format!(
+                    "all {n} replica(s) draining — not accepting new work"
+                )));
+            }
+            return Err(Error::Unavailable(format!(
                 "all {n} replica(s) stalled — heartbeats older than the \
                  --replica-stall-ms threshold"
             )));
         }
-        Err(last_err.unwrap_or_else(|| Error::Serving("all replicas saturated".into())))
+        Err(last_err
+            .unwrap_or_else(|| Error::Unavailable("all replicas saturated".into())))
     }
 
     /// Engine handle by index (metrics, recv).
@@ -211,7 +230,8 @@ mod tests {
         let es = engines_with(2, vec![cfg(), cfg()]);
         let router = Router::new(es.clone()).unwrap();
         let err = router.submit(Request::new(1, vec![2, 3], 2)).unwrap_err();
-        assert!(err.to_string().contains("queue full"), "{err}");
+        assert!(matches!(err, Error::QueueFull(_)), "{err:?}");
+        assert_eq!(err.code(), "queue_full");
         // Every replica counted the rejection; nothing was admitted.
         for e in &es {
             assert_eq!(e.metrics().rejected.load(Ordering::Relaxed), 1);
@@ -304,10 +324,39 @@ mod tests {
         es[0].submit(Request::new(1, vec![10, 20, 30], 2)).unwrap();
         std::thread::sleep(Duration::from_millis(300));
         let err = router.submit(Request::new(2, vec![11, 21], 2)).unwrap_err();
+        // `unavailable` is the coded refusal; the prose discriminates
+        // the stalled condition from plain saturation.
+        assert!(matches!(err, Error::Unavailable(_)), "{err:?}");
         assert!(err.to_string().contains("stalled"), "{err}");
         // The wedged request still reaches its terminal outcome.
         while es[0].inflight() > 0 {
             es[0].recv_timeout(Duration::from_secs(30));
         }
+    }
+
+    #[test]
+    fn draining_replica_receives_no_new_traffic() {
+        let es = engines(2);
+        let router = Router::new(es.clone()).unwrap();
+        es[0].set_draining();
+        for i in 0..4 {
+            let idx = router.submit(Request::new(i, vec![2, 3], 2)).unwrap();
+            assert_eq!(idx, 1, "draining replica must be skipped");
+        }
+        while es[1].inflight() > 0 {
+            es[1].recv_timeout(Duration::from_secs(30));
+        }
+        assert_eq!(es[0].metrics().admitted.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn all_replicas_draining_is_a_coded_refusal() {
+        let es = engines(1);
+        let router = Router::new(es.clone()).unwrap();
+        es[0].set_draining();
+        let err = router.submit(Request::new(1, vec![2, 3], 2)).unwrap_err();
+        assert!(matches!(err, Error::Draining(_)), "{err:?}");
+        assert_eq!(err.code(), "draining");
+        assert!(es[0].drained(), "idle draining replica reads drained");
     }
 }

@@ -1,10 +1,23 @@
-//! TCP front end: newline-delimited JSON protocol over `std::net`.
+//! TCP front end: newline-delimited JSON, wire protocol v2.
 //!
 //! Request line:  `{"id": 1, "prompt": "text", "max_new": 16,
-//!                  "deadline_ms": 2000}`   (`deadline_ms` optional)
+//!                  "deadline_ms": 2000, "stream": true}`
+//!                (`deadline_ms` and `stream` optional)
 //! Response line: `{"id": 1, "text": "...", "tokens": [..],
 //!                  "queue_us": .., "prefill_us": .., "decode_us": ..}`
-//! Error line:    `{"id": 1, "error": "..."}`
+//! Error line:    `{"id": 1, "error": "...", "code": "..."}`
+//!
+//! A request with `"stream": true` receives one frame per sampled
+//! token — `{"event":"token","id":1,"index":0,"token":104,"text":"h"}`
+//! — followed by a terminal `{"event":"done", ...}` frame carrying the
+//! exact fields of the non-streaming response (or error) line. The
+//! concatenation of every token frame's `text` is byte-identical to
+//! the done frame's `text` (incremental UTF-8 decode buffers split
+//! multi-byte characters; a trailing incomplete character flushes as
+//! one final `text`-only frame). Requests without `"stream"` — every
+//! v1 client — get the exact single-line v1 shape; `code` on error
+//! lines is the one additive v2 field (see ARCHITECTURE.md §Wire
+//! protocol v2 for the stable code table).
 //!
 //! One OS thread per connection (tokio is unavailable offline; at the
 //! request rates batch-1 CPU inference sustains, thread-per-conn is
@@ -20,6 +33,16 @@
 //! the abandoned slot within one lockstep step. The thread then keeps
 //! waiting for the terminal response the engine guarantees — the hard
 //! timeout below is a defense line, not the cancellation mechanism.
+//!
+//! # Fairness and drain
+//!
+//! Every connection gets a process-unique lane key stamped into its
+//! requests ([`Request::client`]), so the engines' fair-admission
+//! queues round-robin across connections. The `drain` control command
+//! (or SIGTERM in `rsr serve`) flips every replica into drain mode:
+//! queued and in-flight work — streams included — runs to completion,
+//! new submissions are refused with code `draining`, and
+//! [`Server::serve`] returns once every replica reads `drained()`.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -27,12 +50,14 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
-use super::request::Request;
+use super::request::{Frame, Request, Response};
 use super::router::Router;
 use crate::error::{Error, Result};
-use crate::model::tokenizer::Tokenizer;
+use crate::model::tokenizer::{StreamDecoder, Tokenizer};
 use crate::util::json::Json;
 use crate::util::obs::{render_prometheus, ReplicaScrape};
+
+pub use super::client::Client;
 
 /// Hard ceiling on waiting for a response when the request carries no
 /// deadline — the pre-deadline behavior.
@@ -44,12 +69,15 @@ const NO_DEADLINE_WAIT: Duration = Duration::from_secs(120);
 /// step of the deadline — 5 s covers the slowest plausible step.
 const DEADLINE_GRACE: Duration = Duration::from_secs(5);
 
-/// Routes completed responses from every engine to the connection
-/// thread that registered the request id. One dispatcher thread per
-/// engine owns that engine's receiver, so concurrent connections never
-/// steal each other's responses.
+/// Routes frames from every engine to the connection thread that
+/// registered the request id. One dispatcher thread per engine owns
+/// that engine's receiver, so concurrent connections never steal each
+/// other's frames. Since protocol v2 a request id may receive many
+/// frames ([`Frame::Token`] per sampled token of a streaming request)
+/// before its single terminal [`Frame::Done`] — token frames look the
+/// waiter up without removing it; `Done` removes it.
 pub struct ResponseHub {
-    waiters: Arc<std::sync::Mutex<std::collections::HashMap<u64, mpsc::Sender<super::request::Response>>>>,
+    waiters: Arc<std::sync::Mutex<std::collections::HashMap<u64, mpsc::Sender<Frame>>>>,
     stop: Arc<AtomicBool>,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
@@ -58,9 +86,7 @@ impl ResponseHub {
     /// Spawn one dispatcher per engine in the router.
     pub fn start(router: &Arc<Router>) -> Self {
         let waiters: Arc<
-            std::sync::Mutex<
-                std::collections::HashMap<u64, mpsc::Sender<super::request::Response>>,
-            >,
+            std::sync::Mutex<std::collections::HashMap<u64, mpsc::Sender<Frame>>>,
         > = Arc::default();
         let stop = Arc::new(AtomicBool::new(false));
         let mut threads = Vec::new();
@@ -70,12 +96,20 @@ impl ResponseHub {
             let stop = Arc::clone(&stop);
             threads.push(std::thread::spawn(move || {
                 while !stop.load(Ordering::Relaxed) {
-                    if let Some(resp) =
-                        router.engine(i).recv_timeout(Duration::from_millis(100))
+                    if let Some(frame) =
+                        router.engine(i).recv_frame_timeout(Duration::from_millis(100))
                     {
-                        let tx = waiters.lock().unwrap().remove(&resp.id);
+                        let id = frame.id();
+                        let terminal = matches!(frame, Frame::Done(_));
+                        let mut g = waiters.lock().unwrap();
+                        let tx = if terminal {
+                            g.remove(&id)
+                        } else {
+                            g.get(&id).cloned()
+                        };
+                        drop(g);
                         if let Some(tx) = tx {
-                            let _ = tx.send(resp);
+                            let _ = tx.send(frame);
                         }
                     }
                 }
@@ -85,9 +119,9 @@ impl ResponseHub {
     }
 
     /// Register interest in a request id; returns the receiver the
-    /// response will arrive on. Must be called BEFORE submit to avoid
-    /// a lost-wakeup race.
-    pub fn register(&self, id: u64) -> mpsc::Receiver<super::request::Response> {
+    /// request's frames will arrive on. Must be called BEFORE submit to
+    /// avoid a lost-wakeup race.
+    pub fn register(&self, id: u64) -> mpsc::Receiver<Frame> {
         let (tx, rx) = mpsc::channel();
         self.waiters.lock().unwrap().insert(id, tx);
         rx
@@ -129,8 +163,9 @@ pub struct ServerIdentity {
 
 /// The TCP server: accepts connections, parses request lines, routes
 /// them, and writes response lines. Lines carrying a `cmd` key are
-/// control commands (`metrics` / `status` / `trace`) answered from the
-/// engines' observability surface instead of the inference path.
+/// control commands (`metrics` / `status` / `trace` / `drain`)
+/// answered from the engines' observability surface instead of the
+/// inference path.
 pub struct Server {
     router: Arc<Router>,
     hub: Arc<ResponseHub>,
@@ -138,6 +173,15 @@ pub struct Server {
     /// request — ids are unique for the lifetime of the process (no
     /// per-connection block allocation to collide past).
     next_id: Arc<AtomicU64>,
+    /// Fair-admission lane keys: one per connection, stamped into every
+    /// request the connection submits so the engines' weighted
+    /// round-robin treats each connection as one client.
+    next_client: Arc<AtomicU64>,
+    /// Set by the `drain` control command or by
+    /// [`drain_handle`](Self::drain_handle) (SIGTERM bridge in
+    /// `rsr serve`). Never cleared: draining is the beginning of the
+    /// end of the process.
+    draining: Arc<AtomicBool>,
     /// Deadline stamped on requests that don't carry `deadline_ms`
     /// (the `--default-deadline-ms` flag). `None` = unbounded, the
     /// pre-deadline behavior.
@@ -154,6 +198,8 @@ impl Server {
             router,
             hub,
             next_id: Arc::new(AtomicU64::new(1)),
+            next_client: Arc::new(AtomicU64::new(1)),
+            draining: Arc::new(AtomicBool::new(false)),
             default_deadline: None,
             identity: Arc::new(ServerIdentity::default()),
         }
@@ -177,8 +223,24 @@ impl Server {
         &self.hub
     }
 
-    /// Bind and serve until `stop` is set. Returns the bound address
-    /// through `on_bound` (lets tests use port 0).
+    /// Handle an external party (the SIGTERM bridge in `rsr serve`)
+    /// can set to start a drain — equivalent to the `drain` wire
+    /// command. The accept loop notices within one tick.
+    pub fn drain_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.draining)
+    }
+
+    /// Flip every replica into drain mode (idempotent).
+    fn begin_drain(&self) {
+        self.draining.store(true, Ordering::Relaxed);
+        for i in 0..self.router.replicas() {
+            self.router.engine(i).set_draining();
+        }
+    }
+
+    /// Bind and serve until `stop` is set or a drain completes (every
+    /// replica draining with zero in-flight work). Returns the bound
+    /// address through `on_bound` (lets tests use port 0).
     pub fn serve(
         &self,
         addr: &str,
@@ -193,16 +255,29 @@ impl Server {
             // Reap finished connection threads — a long-lived server
             // must not grow one parked handle per connection served.
             conns.retain(|c| !c.is_finished());
+            if self.draining.load(Ordering::Relaxed) {
+                // The flag may have been set externally through
+                // `drain_handle` — make sure the engines know.
+                self.begin_drain();
+                if (0..self.router.replicas()).all(|i| self.router.engine(i).drained()) {
+                    stop.store(true, Ordering::Relaxed);
+                    break;
+                }
+            }
             match listener.accept() {
                 Ok((stream, _)) => {
                     let router = Arc::clone(&self.router);
                     let hub = Arc::clone(&self.hub);
                     let next_id = Arc::clone(&self.next_id);
+                    let client_key = self.next_client.fetch_add(1, Ordering::Relaxed);
                     let deadline = self.default_deadline;
                     let identity = Arc::clone(&self.identity);
+                    let draining = Arc::clone(&self.draining);
+                    let conn_stop = Arc::clone(&stop);
                     conns.push(std::thread::spawn(move || {
                         let _ = handle_connection(
-                            stream, router, hub, next_id, deadline, identity,
+                            stream, router, hub, next_id, client_key, deadline,
+                            identity, draining, conn_stop,
                         );
                     }));
                 }
@@ -219,29 +294,57 @@ impl Server {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn handle_connection(
     stream: TcpStream,
     router: Arc<Router>,
     hub: Arc<ResponseHub>,
     next_id: Arc<AtomicU64>,
+    client_key: u64,
     default_deadline: Option<Duration>,
     identity: Arc<ServerIdentity>,
+    draining: Arc<AtomicBool>,
+    stop: Arc<AtomicBool>,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream.try_clone()?);
+    let mut reader = BufReader::new(stream.try_clone()?);
     let tokenizer = Tokenizer::new();
 
-    for line in reader.lines() {
-        let line = line?;
+    // Short read timeout so the loop can notice a server stop between
+    // lines; partial bytes of a slow line persist in `buf` across
+    // WouldBlock retries, so no request bytes are ever dropped.
+    stream.set_read_timeout(Some(Duration::from_millis(250)))?;
+    let mut buf = String::new();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        match reader.read_line(&mut buf) {
+            Ok(0) => break, // EOF: client closed the connection
+            Ok(_) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // Partial bytes of a slow line stay in `buf`; retry.
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
+        let line = std::mem::take(&mut buf);
         if line.trim().is_empty() {
             continue;
         }
         let json = match Json::parse(&line) {
             Ok(j) => j,
             Err(e) => {
-                let reply =
-                    Json::obj(vec![("error", Json::str(format!("bad json: {e}")))]);
+                let reply = Json::obj(vec![
+                    ("error", Json::str(format!("bad json: {e}"))),
+                    ("code", Json::str("bad_request")),
+                ]);
                 writeln!(writer, "{}", reply.to_string())?;
                 continue;
             }
@@ -249,24 +352,34 @@ fn handle_connection(
         // Control commands bypass the inference path: they read the
         // engines' observability surface and answer immediately.
         if let Some(cmd) = json.get("cmd").and_then(|c| c.as_str()) {
-            let reply = control_response(cmd, &json, &router, &identity);
+            let reply = control_response(cmd, &json, &router, &identity, &draining);
             writeln!(writer, "{}", reply.to_string())?;
             continue;
         }
         let internal_id = next_id.fetch_add(1, Ordering::Relaxed);
-        match parse_request(&json, internal_id, &tokenizer, default_deadline) {
+        match parse_request(&json, internal_id, client_key, &tokenizer, default_deadline)
+        {
+            Ok((client_id, request)) if request.stream => {
+                route_and_stream(
+                    &router, &hub, request, client_id, &stream, &mut writer, &tokenizer,
+                )?;
+            }
             Ok((client_id, request)) => {
                 let reply = match route_and_wait(&router, &hub, request, Some(&stream)) {
                     Ok(resp) => render_response(client_id, &resp, &tokenizer),
                     Err(e) => Json::obj(vec![
                         ("id", Json::num(client_id as f64)),
                         ("error", Json::str(e.to_string())),
+                        ("code", Json::str(e.code())),
                     ]),
                 };
                 writeln!(writer, "{}", reply.to_string())?;
             }
             Err(e) => {
-                let reply = Json::obj(vec![("error", Json::str(e.to_string()))]);
+                let reply = Json::obj(vec![
+                    ("error", Json::str(e.to_string())),
+                    ("code", Json::str(e.code())),
+                ]);
                 writeln!(writer, "{}", reply.to_string())?;
             }
         }
@@ -304,6 +417,15 @@ fn replica_gauges(router: &Router, i: usize) -> Vec<(&'static str, Json)> {
     let e = router.engine(i);
     let pool = e.kv_pool();
     let pages_total = if pool.is_bounded() { pool.total_pages() } else { 0 };
+    // Median time-to-first-token, from the engine's ttft phase
+    // histogram — the router's least-loaded pick and operators both
+    // read per-replica responsiveness from here.
+    let ttft_p50 = e
+        .snapshot()
+        .get("ttft_us")
+        .and_then(|t| t.get("p50_us"))
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0);
     vec![
         ("replica", Json::num(i as f64)),
         ("queue_depth", Json::num(e.queue_depth() as f64)),
@@ -313,17 +435,37 @@ fn replica_gauges(router: &Router, i: usize) -> Vec<(&'static str, Json)> {
         ("kv_pages_in_use", Json::num(pool.pages_in_use() as f64)),
         ("kv_pages_total", Json::num(pages_total as f64)),
         ("heartbeat_ms", Json::num(e.heartbeat_age().as_millis() as f64)),
+        ("draining", Json::Bool(e.is_draining())),
+        ("ttft_p50_us", Json::num(ttft_p50)),
     ]
 }
 
-/// Answer one control command (`metrics` / `status` / `trace`).
+/// Answer one control command (`metrics` / `status` / `trace` /
+/// `drain`).
 fn control_response(
     cmd: &str,
     json: &Json,
     router: &Router,
     identity: &ServerIdentity,
+    draining: &AtomicBool,
 ) -> Json {
     match cmd {
+        "drain" => {
+            // Flip the server flag; the accept loop propagates it to
+            // every engine within one tick. Set the engines here too so
+            // the reply already reflects drain mode.
+            draining.store(true, Ordering::Relaxed);
+            let mut inflight = 0usize;
+            for i in 0..router.replicas() {
+                let e = router.engine(i);
+                e.set_draining();
+                inflight += e.load();
+            }
+            Json::obj(vec![
+                ("draining", Json::Bool(true)),
+                ("inflight", Json::num(inflight as f64)),
+            ])
+        }
         "metrics" => {
             if json.get("format").and_then(|f| f.as_str()) == Some("prom") {
                 let text = render_prometheus(uptime_s(router), &scrape_replicas(router));
@@ -377,43 +519,50 @@ fn control_response(
                 ("replicas", Json::Arr(replicas)),
             ])
         }
-        other => Json::obj(vec![(
-            "error",
-            Json::str(format!(
-                "unknown cmd {other:?} (expected metrics, status or trace)"
-            )),
-        )]),
+        other => Json::obj(vec![
+            (
+                "error",
+                Json::str(format!(
+                    "unknown cmd {other:?} (expected metrics, status, trace or drain)"
+                )),
+            ),
+            ("code", Json::str("bad_request")),
+        ]),
     }
 }
 
 fn parse_request(
     json: &Json,
     internal_id: u64,
+    client_key: u64,
     tokenizer: &Tokenizer,
     default_deadline: Option<Duration>,
 ) -> Result<(u64, Request)> {
     let client_id = json
         .get("id")
         .and_then(|x| x.as_f64())
-        .ok_or_else(|| Error::Serving("missing id".into()))? as u64;
+        .ok_or_else(|| Error::BadRequest("missing id".into()))? as u64;
     let prompt_text = json
         .get("prompt")
         .and_then(|x| x.as_str())
-        .ok_or_else(|| Error::Serving("missing prompt".into()))?;
+        .ok_or_else(|| Error::BadRequest("missing prompt".into()))?;
     if prompt_text.is_empty() {
-        return Err(Error::Serving("empty prompt".into()));
+        return Err(Error::BadRequest("empty prompt".into()));
     }
     let max_new = json.get("max_new").and_then(|x| x.as_f64()).unwrap_or(16.0) as usize;
     if max_new == 0 || max_new > 4096 {
-        return Err(Error::Serving("max_new out of range".into()));
+        return Err(Error::BadRequest("max_new out of range".into()));
     }
+    let stream = matches!(json.get("stream"), Some(Json::Bool(true)));
     let prompt = tokenizer.encode_with_bos(prompt_text);
-    let mut request = Request::new(internal_id, prompt, max_new);
+    let mut request = Request::new(internal_id, prompt, max_new)
+        .with_client(client_key)
+        .with_stream(stream);
     match json.get("deadline_ms").and_then(|x| x.as_f64()) {
         Some(ms) if (1.0..=86_400_000.0).contains(&ms) => {
             request = request.with_deadline(Duration::from_millis(ms as u64));
         }
-        Some(_) => return Err(Error::Serving("deadline_ms out of range".into())),
+        Some(_) => return Err(Error::BadRequest("deadline_ms out of range".into())),
         None => {
             if let Some(budget) = default_deadline {
                 request = request.with_deadline(budget);
@@ -447,7 +596,7 @@ fn route_and_wait(
     hub: &ResponseHub,
     request: Request,
     conn: Option<&TcpStream>,
-) -> Result<super::request::Response> {
+) -> Result<Response> {
     let want_id = request.id;
     let cancel = request.cancel.clone();
     let deadline = request.deadline;
@@ -470,11 +619,14 @@ fn route_and_wait(
     };
     loop {
         match rx.recv_timeout(Duration::from_millis(50)) {
-            Ok(resp) => return Ok(resp),
+            Ok(Frame::Done(resp)) => return Ok(resp),
+            // Non-streaming requests never produce token frames, but
+            // ignoring them here keeps the waiter alive regardless.
+            Ok(Frame::Token { .. }) => continue,
             Err(mpsc::RecvTimeoutError::Timeout) => {}
             Err(mpsc::RecvTimeoutError::Disconnected) => {
                 hub.unregister(want_id);
-                return Err(Error::Serving("response dispatcher gone".into()));
+                return Err(Error::Unavailable("response dispatcher gone".into()));
             }
         }
         if !cancel.is_cancelled() {
@@ -491,15 +643,129 @@ fn route_and_wait(
     }
 }
 
-fn render_response(
+/// Stream one request: register, submit, then forward every token
+/// frame to the wire as it arrives, terminated by a `done` frame with
+/// the exact fields of the non-streaming reply. On mid-stream client
+/// disconnect the request is cancelled but the loop keeps draining
+/// frames until the terminal one, keeping the hub waiter-free and the
+/// slot accounting exact.
+fn route_and_stream(
+    router: &Router,
+    hub: &ResponseHub,
+    request: Request,
     client_id: u64,
-    resp: &super::request::Response,
+    stream: &TcpStream,
+    writer: &mut TcpStream,
     tokenizer: &Tokenizer,
-) -> Json {
+) -> Result<()> {
+    let want_id = request.id;
+    let cancel = request.cancel.clone();
+    let deadline = request.deadline;
+    let rx = hub.register(want_id);
+    if let Err(e) = router.submit(request) {
+        hub.unregister(want_id);
+        let reply = Json::obj(vec![
+            ("event", Json::str("done")),
+            ("id", Json::num(client_id as f64)),
+            ("error", Json::str(e.to_string())),
+            ("code", Json::str(e.code())),
+        ]);
+        writeln!(writer, "{}", reply.to_string())?;
+        return Ok(());
+    }
+    let hard_stop = match deadline {
+        Some(d) => d + DEADLINE_GRACE,
+        None => Instant::now() + NO_DEADLINE_WAIT,
+    };
+    // Incremental UTF-8: token frames carry exactly the bytes a
+    // non-streaming reply would decode, split per token (multi-byte
+    // characters buffer until complete).
+    let mut dec = StreamDecoder::new();
+    // After the peer vanishes we stop writing but keep draining frames
+    // until the engine's guaranteed terminal response.
+    let mut peer_gone = false;
+    loop {
+        match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(Frame::Token { index, token, .. }) => {
+                if peer_gone {
+                    continue;
+                }
+                let text = dec.push(token);
+                let frame = Json::obj(vec![
+                    ("event", Json::str("token")),
+                    ("id", Json::num(client_id as f64)),
+                    ("index", Json::num(index as f64)),
+                    ("token", Json::num(token as f64)),
+                    ("text", Json::str(text)),
+                ]);
+                if writeln!(writer, "{}", frame.to_string()).is_err() {
+                    peer_gone = true;
+                    cancel.cancel();
+                }
+            }
+            Ok(Frame::Done(resp)) => {
+                if !peer_gone {
+                    // Flush a buffered incomplete character (the lossy
+                    // replacement the batch decode would emit) as one
+                    // final text-only frame.
+                    let tail = dec.finish();
+                    if !tail.is_empty() {
+                        let frame = Json::obj(vec![
+                            ("event", Json::str("token")),
+                            ("id", Json::num(client_id as f64)),
+                            ("text", Json::str(tail)),
+                        ]);
+                        let _ = writeln!(writer, "{}", frame.to_string());
+                    }
+                    let mut done = render_response(client_id, &resp, tokenizer);
+                    if let Json::Obj(map) = &mut done {
+                        map.insert("event".into(), Json::str("done"));
+                    }
+                    writeln!(writer, "{}", done.to_string())?;
+                }
+                return Ok(());
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                hub.unregister(want_id);
+                if !peer_gone {
+                    let reply = Json::obj(vec![
+                        ("event", Json::str("done")),
+                        ("id", Json::num(client_id as f64)),
+                        ("error", Json::str("unavailable: response dispatcher gone")),
+                        ("code", Json::str("unavailable")),
+                    ]);
+                    let _ = writeln!(writer, "{}", reply.to_string());
+                }
+                return Ok(());
+            }
+        }
+        if !peer_gone && !cancel.is_cancelled() && client_disconnected(stream) {
+            peer_gone = true;
+            cancel.cancel();
+        }
+        if Instant::now() >= hard_stop {
+            hub.unregister(want_id);
+            if !peer_gone {
+                let reply = Json::obj(vec![
+                    ("event", Json::str("done")),
+                    ("id", Json::num(client_id as f64)),
+                    ("error", Json::str("timeout waiting for response")),
+                    ("code", Json::str("internal")),
+                ]);
+                let _ = writeln!(writer, "{}", reply.to_string());
+            }
+            return Ok(());
+        }
+    }
+}
+
+fn render_response(client_id: u64, resp: &Response, tokenizer: &Tokenizer) -> Json {
     if let Some(err) = &resp.error {
         return Json::obj(vec![
             ("id", Json::num(client_id as f64)),
             ("error", Json::str(err.clone())),
+            ("code", Json::str(resp.code.unwrap_or("internal"))),
         ]);
     }
     Json::obj(vec![
@@ -513,56 +779,4 @@ fn render_response(
         ("prefill_us", Json::num(resp.timing.prefill.as_micros() as f64)),
         ("decode_us", Json::num(resp.timing.decode.as_micros() as f64)),
     ])
-}
-
-/// A minimal blocking client for tests, examples and the CLI.
-pub struct Client {
-    stream: TcpStream,
-}
-
-impl Client {
-    /// Connect to a server.
-    pub fn connect(addr: std::net::SocketAddr) -> Result<Self> {
-        Ok(Self { stream: TcpStream::connect(addr)? })
-    }
-
-    /// Send one prompt and wait for the reply line.
-    pub fn request(&mut self, id: u64, prompt: &str, max_new: usize) -> Result<Json> {
-        self.request_with(id, prompt, max_new, None)
-    }
-
-    /// Send one prompt with an optional per-request deadline
-    /// (milliseconds of total budget; the server sheds or retires the
-    /// request with a `deadline exceeded` error once it expires).
-    pub fn request_with(
-        &mut self,
-        id: u64,
-        prompt: &str,
-        max_new: usize,
-        deadline_ms: Option<u64>,
-    ) -> Result<Json> {
-        let mut fields = vec![
-            ("id", Json::num(id as f64)),
-            ("prompt", Json::str(prompt)),
-            ("max_new", Json::num(max_new as f64)),
-        ];
-        if let Some(ms) = deadline_ms {
-            fields.push(("deadline_ms", Json::num(ms as f64)));
-        }
-        let req = Json::obj(fields);
-        writeln!(self.stream, "{}", req.to_string())?;
-        let mut reader = BufReader::new(self.stream.try_clone()?);
-        let mut line = String::new();
-        reader.read_line(&mut line)?;
-        Json::parse(&line).map_err(Error::Serving)
-    }
-
-    /// Send a raw line (failure-injection tests).
-    pub fn send_raw(&mut self, line: &str) -> Result<Json> {
-        writeln!(self.stream, "{line}")?;
-        let mut reader = BufReader::new(self.stream.try_clone()?);
-        let mut out = String::new();
-        reader.read_line(&mut out)?;
-        Json::parse(&out).map_err(Error::Serving)
-    }
 }

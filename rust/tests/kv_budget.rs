@@ -29,7 +29,8 @@ use rsr::model::config::ModelConfig;
 use rsr::model::weights::ModelWeights;
 use rsr::serving::engine::{EngineConfig, InferenceEngine};
 use rsr::serving::router::Router;
-use rsr::serving::server::{Client, ResponseHub, Server};
+use rsr::serving::client::Client;
+use rsr::serving::server::{ResponseHub, Server};
 use rsr::util::json::Json;
 
 fn tiny_weights() -> Arc<ModelWeights> {
@@ -158,7 +159,8 @@ fn budget_pressure_yields_exactly_one_terminal_outcome_per_request() {
             .iter()
             .enumerate()
             .map(|(i, p)| {
-                let reply = client.request(i as u64, p, 24).unwrap();
+                let reply =
+                    client.prompt(i as u64, p).max_new(24).send_json().unwrap();
                 assert!(reply.get("error").is_none(), "{reply:?}");
                 (i, tokens_of(&reply))
             })
@@ -176,11 +178,11 @@ fn budget_pressure_yields_exactly_one_terminal_outcome_per_request() {
     let h = Harness::start(budgeted_cfg(26));
     {
         let mut c = Client::connect(h.addr).unwrap();
-        let reply = c.request(900, &"x".repeat(80), 4).unwrap();
-        let err = reply.get("error").and_then(|e| e.as_str()).unwrap_or("");
-        assert!(
-            err.contains("kv budget exceeded"),
-            "oversized prompt must be shed with the named error, got {reply:?}"
+        let reply = c.prompt(900, &"x".repeat(80)).max_new(4).send_json().unwrap();
+        assert_eq!(
+            reply.get("code").and_then(|c| c.as_str()),
+            Some("kv_budget_exceeded"),
+            "oversized prompt must be shed with the stable code, got {reply:?}"
         );
     }
     // 7 concurrent clients, two requests each: every reply must be a
@@ -195,8 +197,11 @@ fn budget_pressure_yields_exactly_one_terminal_outcome_per_request() {
                     let mut client = Client::connect(addr).unwrap();
                     let mut out = Vec::new();
                     for j in [c, c + 7] {
-                        let reply =
-                            client.request(j as u64, &prompts[j], 24).unwrap();
+                        let reply = client
+                            .prompt(j as u64, &prompts[j])
+                            .max_new(24)
+                            .send_json()
+                            .unwrap();
                         out.push((j, reply));
                     }
                     out
@@ -209,24 +214,22 @@ fn budget_pressure_yields_exactly_one_terminal_outcome_per_request() {
     let mut completed = 0usize;
     let mut shed = 0usize;
     for (i, reply) in &results {
-        match reply.get("error").and_then(|e| e.as_str()) {
-            None => {
-                assert_eq!(
-                    &tokens_of(reply),
-                    reference.get(i).unwrap(),
-                    "prompt {i}: budgeted completion diverged from the \
-                     unbudgeted reference"
-                );
-                completed += 1;
-            }
-            Some(err) => {
-                assert!(
-                    err.contains("kv budget exceeded"),
-                    "prompt {i}: only the named budget error may appear \
-                     under pure KV pressure, got: {err}"
-                );
-                shed += 1;
-            }
+        if reply.get("error").is_none() {
+            assert_eq!(
+                &tokens_of(reply),
+                reference.get(i).unwrap(),
+                "prompt {i}: budgeted completion diverged from the \
+                 unbudgeted reference"
+            );
+            completed += 1;
+        } else {
+            assert_eq!(
+                reply.get("code").and_then(|c| c.as_str()),
+                Some("kv_budget_exceeded"),
+                "prompt {i}: only the budget code may appear under pure \
+                 KV pressure, got: {reply:?}"
+            );
+            shed += 1;
         }
     }
     assert_eq!(completed + shed, prompts.len());
@@ -268,7 +271,7 @@ fn generous_budget_serves_token_identically_to_no_budget() {
             .iter()
             .enumerate()
             .map(|(i, p)| {
-                let reply = client.request(i as u64, p, 12).unwrap();
+                let reply = client.prompt(i as u64, p).max_new(12).send_json().unwrap();
                 assert!(reply.get("error").is_none(), "{reply:?}");
                 tokens_of(&reply)
             })
@@ -311,11 +314,17 @@ mod chaos {
             ..Default::default()
         });
         let mut client = Client::connect(h.addr).unwrap();
-        let reply = client.request(1, "abcdefghijklmnop", 8).unwrap();
+        let reply = client.prompt(1, "abcdefghijklmnop").max_new(8).send_json().unwrap();
+        assert_eq!(
+            reply.get("code").and_then(|c| c.as_str()),
+            Some("kv_budget_exceeded"),
+            "got {reply:?}"
+        );
+        // Eviction vs admission-shed has no dedicated code — the prose
+        // is the only discriminator for this sub-case.
         let err = reply.get("error").and_then(|e| e.as_str()).unwrap_or("");
-        assert!(err.contains("kv budget exceeded"), "got {reply:?}");
         assert!(err.contains("evicted under page pressure"), "got {reply:?}");
-        let reply = client.request(2, "next customer", 4).unwrap();
+        let reply = client.prompt(2, "next customer").max_new(4).send_json().unwrap();
         assert!(reply.get("error").is_none(), "{reply:?}");
         h.wait_quiescent();
         let e = h.engine();

@@ -26,7 +26,8 @@ use rsr::serving::batcher::BatchPolicy;
 use rsr::serving::engine::{EngineConfig, InferenceEngine};
 use rsr::serving::request::Request;
 use rsr::serving::router::Router;
-use rsr::serving::server::{Client, ResponseHub, Server};
+use rsr::serving::client::Client;
+use rsr::serving::server::{ResponseHub, Server};
 
 fn tiny_weights() -> Arc<ModelWeights> {
     Arc::new(ModelWeights::generate(ModelConfig::tiny(), 0x5E21).unwrap())
@@ -179,11 +180,14 @@ fn server_default_deadline_applies_to_requests_without_deadline_ms() {
     );
     let mut client = Client::connect(h.addr).unwrap();
     let reply = client
-        .request(1, "please think very carefully about this long question", 64)
+        .prompt(1, "please think very carefully about this long question")
+        .max_new(64)
+        .send_json()
         .unwrap();
     h.wait_drained();
-    if let Some(err) = reply.get("error").and_then(|e| e.as_str()) {
-        assert!(err.contains("deadline exceeded"), "unexpected error: {err}");
+    if reply.get("error").is_some() {
+        let code = reply.get("code").and_then(|c| c.as_str());
+        assert_eq!(code, Some("deadline_exceeded"), "unexpected error: {reply:?}");
         assert_eq!(
             summed(&h.engines, |e| {
                 e.metrics().deadline_exceeded.load(Ordering::Relaxed)
@@ -200,11 +204,16 @@ fn explicit_deadline_ms_out_of_range_is_rejected() {
     let reply = client
         .send_raw(r#"{"id": 1, "prompt": "hi", "max_new": 2, "deadline_ms": 0}"#)
         .unwrap();
-    let err = reply.get("error").and_then(|e| e.as_str()).unwrap_or("");
-    assert!(err.contains("deadline_ms"), "expected range error, got: {reply:?}");
+    assert!(reply.get("error").is_some(), "expected range error, got: {reply:?}");
+    assert_eq!(
+        reply.get("code").and_then(|c| c.as_str()),
+        Some("bad_request"),
+        "expected range error, got: {reply:?}"
+    );
     // The connection still serves good requests (with a generous
     // explicit deadline this time).
-    let reply = client.request_with(2, "still alive?", 2, Some(30_000)).unwrap();
+    let reply =
+        client.prompt(2, "still alive?").max_new(2).deadline_ms(30_000).send_json().unwrap();
     assert!(reply.get("error").is_none(), "{reply:?}");
 }
 
@@ -234,9 +243,10 @@ fn overload_sheds_with_queue_full_and_every_admission_terminates() {
         match engine.submit(Request::new(i, vec![3; 32], 8)) {
             Ok(()) => admitted += 1,
             Err(e) => {
-                assert!(
-                    e.to_string().contains("queue full"),
-                    "overload rejection must name the condition: {e}"
+                assert_eq!(
+                    e.code(),
+                    "queue_full",
+                    "overload rejection must carry the stable code: {e}"
                 );
                 rejected += 1;
             }
@@ -289,9 +299,10 @@ fn saturated_router_names_the_condition_and_unregister_leaves_no_waiter() {
     let mut saw_rejection = false;
     for i in 0..20 {
         if let Err(e) = router.submit(Request::new(100 + i, vec![3; 8], 2)) {
-            assert!(
-                e.to_string().contains("queue full"),
-                "saturation error must name the condition: {e}"
+            assert_eq!(
+                e.code(),
+                "queue_full",
+                "saturation error must carry the stable code: {e}"
             );
             saw_rejection = true;
             break;
@@ -353,7 +364,7 @@ mod chaos {
             None,
         );
         let mut client = Client::connect(h.addr).unwrap();
-        let reply = client.request(1, LONG_PROMPT, 4).unwrap();
+        let reply = client.prompt(1, LONG_PROMPT).max_new(4).send_json().unwrap();
         assert!(
             reply.get("error").is_none(),
             "mid-prefill panic must quarantine and retry, got {reply:?}"
@@ -361,7 +372,7 @@ mod chaos {
         h.wait_drained();
         assert_eq!(h.engines[0].panics_total(), 1, "exactly one supervised panic");
         // The worker respawned: a second request is served cleanly.
-        let reply = client.request(2, "still serving?", 2).unwrap();
+        let reply = client.prompt(2, "still serving?").max_new(2).send_json().unwrap();
         assert!(reply.get("error").is_none(), "{reply:?}");
     }
 
@@ -380,13 +391,15 @@ mod chaos {
         // Step 2 panics mid-prefill (quarantine), the retry's first
         // step is 3 (panics again) — the request must be poisoned, not
         // retried forever.
-        let reply = client.request(1, LONG_PROMPT, 4).unwrap();
+        let reply = client.prompt(1, LONG_PROMPT).max_new(4).send_json().unwrap();
+        // Poisoning has no dedicated wire code (it maps to the
+        // `internal` catch-all), so the prose is the discriminator.
         let err = reply.get("error").and_then(|e| e.as_str()).unwrap_or("");
         assert!(err.contains("poisoned"), "expected poisoned, got {reply:?}");
         h.wait_drained();
         assert_eq!(h.engines[0].panics_total(), 2);
         // Poisoning one request must not poison the worker.
-        let reply = client.request(2, "next customer", 2).unwrap();
+        let reply = client.prompt(2, "next customer").max_new(2).send_json().unwrap();
         assert!(reply.get("error").is_none(), "{reply:?}");
     }
 
@@ -406,9 +419,13 @@ mod chaos {
             None,
         );
         let mut client = Client::connect(h.addr).unwrap();
-        let reply = client.request_with(1, LONG_PROMPT, 8, Some(100)).unwrap();
-        let err = reply.get("error").and_then(|e| e.as_str()).unwrap_or("");
-        assert!(err.contains("deadline exceeded"), "got {reply:?}");
+        let reply =
+            client.prompt(1, LONG_PROMPT).max_new(8).deadline_ms(100).send_json().unwrap();
+        assert_eq!(
+            reply.get("code").and_then(|c| c.as_str()),
+            Some("deadline_exceeded"),
+            "got {reply:?}"
+        );
         h.wait_drained();
         assert_eq!(
             h.engines[0].metrics().deadline_exceeded.load(Ordering::Relaxed),
@@ -448,7 +465,7 @@ mod chaos {
         // the healthy replica — not queued behind the wedged one.
         let t0 = Instant::now();
         let mut client = Client::connect(h.addr).unwrap();
-        let reply = client.request(1, "who serves me?", 2).unwrap();
+        let reply = client.prompt(1, "who serves me?").max_new(2).send_json().unwrap();
         assert!(reply.get("error").is_none(), "{reply:?}");
         // Discriminating bound: the wedge clears 600 ms after the
         // direct submit (~350 ms from here), so a reply queued behind

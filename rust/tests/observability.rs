@@ -13,7 +13,8 @@ use rsr::model::weights::ModelWeights;
 use rsr::serving::batcher::BatchPolicy;
 use rsr::serving::engine::{EngineConfig, InferenceEngine};
 use rsr::serving::router::Router;
-use rsr::serving::server::{Client, Server, ServerIdentity};
+use rsr::serving::client::Client;
+use rsr::serving::server::{Server, ServerIdentity};
 use rsr::util::json::Json;
 
 fn tiny_weights() -> Arc<ModelWeights> {
@@ -117,7 +118,11 @@ fn prometheus_exposition_is_well_formed() {
     let server = TestServer::start(1, TestServer::default_config());
     let mut client = Client::connect(server.addr).unwrap();
     for i in 0..3 {
-        let reply = client.request(i, "Name a planet in the solar system.", 4).unwrap();
+        let reply = client
+            .prompt(i, "Name a planet in the solar system.")
+            .max_new(4)
+            .send_json()
+            .unwrap();
         assert!(reply.get("error").is_none(), "{}", reply.to_string());
     }
     let text = scrape_prom(&mut client);
@@ -215,7 +220,7 @@ fn metrics_json_scrape_reports_conserved_counters() {
         .map(|i| {
             std::thread::spawn(move || {
                 let mut client = Client::connect(addr).unwrap();
-                client.request(i, "Which ocean is the largest?", 3).unwrap()
+                client.prompt(i, "Which ocean is the largest?").max_new(3).send_json().unwrap()
             })
         })
         .collect();
@@ -266,7 +271,7 @@ fn status_reports_identity_and_replica_gauges() {
     // Unbudgeted server: the page ceiling gauge reads 0 (= no budget).
     assert_eq!(r.get("kv_pages_total").unwrap().as_f64(), Some(0.0));
     // Control lines don't poison the connection for inference.
-    let reply = client.request(1, "still serving?", 2).unwrap();
+    let reply = client.prompt(1, "still serving?").max_new(2).send_json().unwrap();
     assert!(reply.get("error").is_none());
 }
 
@@ -286,7 +291,8 @@ fn trace_slow_log_is_scrapeable_with_complete_timelines() {
     let config = EngineConfig { trace_slow_ms: Some(0), ..TestServer::default_config() };
     let server = TestServer::start(1, config);
     let mut client = Client::connect(server.addr).unwrap();
-    let reply = client.request(9, "Describe the water cycle.", 4).unwrap();
+    let reply =
+        client.prompt(9, "Describe the water cycle.").max_new(4).send_json().unwrap();
     assert!(reply.get("error").is_none(), "{}", reply.to_string());
 
     let trace = client.send_raw(r#"{"cmd": "trace"}"#).unwrap();
@@ -327,9 +333,17 @@ fn deadline_exceeded_request_is_pinned_despite_high_threshold() {
     };
     let server = TestServer::start(1, config);
     let mut client = Client::connect(server.addr).unwrap();
-    let reply = client.request_with(11, "why is the sky blue?", 8, Some(1)).unwrap();
-    let err = reply.get("error").unwrap().as_str().unwrap();
-    assert!(err.contains("deadline"), "{err}");
+    let reply = client
+        .prompt(11, "why is the sky blue?")
+        .max_new(8)
+        .deadline_ms(1)
+        .send_json()
+        .unwrap();
+    assert_eq!(
+        reply.get("code").and_then(|c| c.as_str()),
+        Some("deadline_exceeded"),
+        "{reply:?}"
+    );
 
     let trace = client.send_raw(r#"{"cmd": "trace"}"#).unwrap();
     let replicas = trace.get("replicas").unwrap().as_arr().unwrap();
@@ -351,7 +365,7 @@ fn layer_profile_rows_ride_the_metrics_scrape() {
         EngineConfig { profile_layers: true, ..TestServer::default_config() };
     let server = TestServer::start(1, config);
     let mut client = Client::connect(server.addr).unwrap();
-    let reply = client.request(3, "Count to five.", 4).unwrap();
+    let reply = client.prompt(3, "Count to five.").max_new(4).send_json().unwrap();
     assert!(reply.get("error").is_none(), "{}", reply.to_string());
 
     let reply = client.send_raw(r#"{"cmd": "metrics"}"#).unwrap();
@@ -373,7 +387,7 @@ fn layer_profile_rows_ride_the_metrics_scrape() {
 fn profiling_off_keeps_metrics_scrape_lean() {
     let server = TestServer::start(1, TestServer::default_config());
     let mut client = Client::connect(server.addr).unwrap();
-    let reply = client.request(4, "Name a color.", 2).unwrap();
+    let reply = client.prompt(4, "Name a color.").max_new(2).send_json().unwrap();
     assert!(reply.get("error").is_none());
     let reply = client.send_raw(r#"{"cmd": "metrics"}"#).unwrap();
     let replicas = reply.get("replicas").unwrap().as_arr().unwrap();
@@ -387,7 +401,8 @@ fn unknown_control_command_gets_error_without_killing_connection() {
     let mut client = Client::connect(server.addr).unwrap();
     let reply = client.send_raw(r#"{"cmd": "flamegraph"}"#).unwrap();
     let err = reply.get("error").unwrap().as_str().unwrap();
-    assert!(err.contains("metrics, status or trace"), "{err}");
-    let reply = client.request(5, "still alive?", 2).unwrap();
+    assert!(err.contains("metrics, status, trace or drain"), "{err}");
+    assert_eq!(reply.get("code").and_then(|c| c.as_str()), Some("bad_request"));
+    let reply = client.prompt(5, "still alive?").max_new(2).send_json().unwrap();
     assert!(reply.get("error").is_none());
 }

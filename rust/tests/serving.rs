@@ -11,9 +11,10 @@ use rsr::model::config::ModelConfig;
 use rsr::model::weights::ModelWeights;
 use rsr::serving::batcher::BatchPolicy;
 use rsr::serving::engine::{EngineConfig, InferenceEngine};
+use rsr::serving::client::Client;
 use rsr::serving::request::Request;
 use rsr::serving::router::Router;
-use rsr::serving::server::{Client, Server};
+use rsr::serving::server::Server;
 
 fn tiny_weights() -> Arc<ModelWeights> {
     Arc::new(ModelWeights::generate(ModelConfig::tiny(), 0x5E21).unwrap())
@@ -79,7 +80,8 @@ impl Drop for TestServer {
 fn tcp_round_trip_generates_tokens() {
     let server = TestServer::start(1, 1);
     let mut client = Client::connect(server.addr).unwrap();
-    let reply = client.request(7, "What is the capital of France?", 4).unwrap();
+    let reply =
+        client.prompt(7, "What is the capital of France?").max_new(4).send_json().unwrap();
     assert_eq!(reply.get("id").unwrap().as_f64(), Some(7.0));
     assert!(reply.get("error").is_none(), "{}", reply.to_string());
     let tokens = reply.get("tokens").unwrap().as_arr().unwrap();
@@ -92,7 +94,8 @@ fn multiple_requests_on_one_connection() {
     let server = TestServer::start(1, 1);
     let mut client = Client::connect(server.addr).unwrap();
     for i in 0..3 {
-        let reply = client.request(i, "How many continents are there?", 2).unwrap();
+        let reply =
+            client.prompt(i, "How many continents are there?").max_new(2).send_json().unwrap();
         assert_eq!(reply.get("id").unwrap().as_f64(), Some(i as f64));
         assert!(reply.get("error").is_none());
     }
@@ -110,7 +113,9 @@ fn concurrent_clients_get_their_own_answers() {
                 // across connections to prove isolation comes from the
                 // hub, not the client id.
                 let reply = client
-                    .request(1, &format!("Question number {ci}?"), 3)
+                    .prompt(1, &format!("Question number {ci}?"))
+                    .max_new(3)
+                    .send_json()
                     .unwrap();
                 assert!(reply.get("error").is_none(), "{}", reply.to_string());
                 reply.get("tokens").unwrap().as_arr().unwrap().len()
@@ -140,7 +145,7 @@ fn malformed_lines_get_error_replies_and_do_not_kill_connection() {
         client.send_raw(r#"{"id": 3, "prompt": "hi", "max_new": 100000}"#).unwrap();
     assert!(reply.get("error").is_some());
     // Connection still serves good requests.
-    let reply = client.request(4, "still alive?", 2).unwrap();
+    let reply = client.prompt(4, "still alive?").max_new(2).send_json().unwrap();
     assert!(reply.get("error").is_none());
 }
 
@@ -207,7 +212,7 @@ fn replicated_router_balances_and_both_replicas_complete() {
         .map(|i| {
             std::thread::spawn(move || {
                 let mut client = Client::connect(addr).unwrap();
-                client.request(i, "Where is the Nile?", 2).unwrap()
+                client.prompt(i, "Where is the Nile?").max_new(2).send_json().unwrap()
             })
         })
         .collect();

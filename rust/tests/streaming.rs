@@ -1,0 +1,321 @@
+//! Wire protocol v2 streaming integration: token-frame reassembly,
+//! interleaved streaming/non-streaming clients, mid-stream disconnect
+//! accounting, drain semantics over the wire, and the v1 shape pin.
+//!
+//! Terminal-outcome assertions use the typed [`ErrorCode`] surface —
+//! never error prose, which carries no stability promise.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use rsr::kernels::Backend;
+use rsr::model::config::ModelConfig;
+use rsr::model::weights::ModelWeights;
+use rsr::serving::client::{Client, ErrorCode};
+use rsr::serving::engine::{EngineConfig, InferenceEngine};
+use rsr::serving::router::Router;
+use rsr::serving::server::{ResponseHub, Server};
+use rsr::util::json::Json;
+
+/// A model big enough that decoding ~200 tokens takes a few hundred
+/// milliseconds — the window the disconnect and drain tests act in.
+fn slow_config() -> ModelConfig {
+    ModelConfig {
+        name: "streaming-slow".into(),
+        vocab_size: 270,
+        d_model: 256,
+        n_layers: 4,
+        n_heads: 8,
+        n_kv_heads: 4,
+        d_ff: 512,
+        max_seq_len: 256,
+        rope_theta: 10_000.0,
+    }
+}
+
+struct TestServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    engines: Vec<Arc<InferenceEngine>>,
+    hub: Arc<ResponseHub>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TestServer {
+    fn start(cfg: ModelConfig, replicas: usize, workers: usize) -> Self {
+        let weights = Arc::new(ModelWeights::generate(cfg, 0x5712).unwrap());
+        let engines: Vec<Arc<InferenceEngine>> = (0..replicas)
+            .map(|_| {
+                Arc::new(
+                    InferenceEngine::start(
+                        Arc::clone(&weights),
+                        EngineConfig {
+                            workers,
+                            backend: Backend::RsrPlusPlus,
+                            ..Default::default()
+                        },
+                    )
+                    .unwrap(),
+                )
+            })
+            .collect();
+        let router = Arc::new(Router::new(engines.clone()).unwrap());
+        let server = Server::new(router);
+        let hub = Arc::clone(server.hub());
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let bound: Arc<Mutex<Option<std::net::SocketAddr>>> = Arc::default();
+        let bound2 = Arc::clone(&bound);
+        let thread = std::thread::spawn(move || {
+            server
+                .serve("127.0.0.1:0", stop2, move |a| {
+                    *bound2.lock().unwrap() = Some(a);
+                })
+                .unwrap();
+        });
+        let addr = loop {
+            if let Some(a) = *bound.lock().unwrap() {
+                break a;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        };
+        Self { addr, stop, engines, hub, thread: Some(thread) }
+    }
+
+    /// Wait (bounded) for the serve loop to return on its own — the
+    /// drain exit path. Panics if it is still running at the deadline.
+    fn join_within(mut self, timeout: Duration) {
+        let deadline = Instant::now() + timeout;
+        let thread = self.thread.take().unwrap();
+        while !thread.is_finished() {
+            assert!(
+                Instant::now() < deadline,
+                "server did not exit within {timeout:?} after drain"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        thread.join().unwrap();
+    }
+}
+
+impl Drop for TestServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Drive one streaming request and return (concatenated frame text,
+/// frame token ids, terminal outcome).
+fn run_streamed(
+    client: &mut Client,
+    id: u64,
+    prompt: &str,
+    max_new: usize,
+) -> (String, Vec<u32>, rsr::serving::client::Outcome) {
+    let mut text = String::new();
+    let mut tokens: Vec<u32> = Vec::new();
+    let mut next_index = 0u64;
+    let out = client
+        .prompt(id, prompt)
+        .max_new(max_new)
+        .stream_with(|frame| {
+            if let Some(t) = frame.get("text").and_then(|t| t.as_str()) {
+                text.push_str(t);
+            }
+            // The flush frame carries text only; real token frames
+            // carry a contiguous index and the sampled token id.
+            if let Some(tok) = frame.get("token").and_then(|t| t.as_f64()) {
+                tokens.push(tok as u32);
+                let idx = frame.get("index").and_then(|i| i.as_f64()).unwrap();
+                assert_eq!(idx as u64, next_index, "token frames must be in order");
+                next_index += 1;
+            }
+        })
+        .unwrap();
+    (text, tokens, out)
+}
+
+#[test]
+fn streamed_concatenation_is_byte_identical_to_non_streaming() {
+    let server = TestServer::start(ModelConfig::tiny(), 1, 1);
+    let mut client = Client::connect(server.addr).unwrap();
+    let prompt = "What is the capital of France?";
+
+    let (text, tokens, out) = run_streamed(&mut client, 7, prompt, 6);
+    assert!(out.is_ok(), "{:?}", out.error);
+    assert!(!tokens.is_empty() && tokens.len() <= 6);
+    // Reassembly: the frames carry exactly the done frame's payload.
+    assert_eq!(text, out.text, "concatenated frame text != done text");
+    assert_eq!(tokens, out.tokens, "frame token ids != done tokens");
+
+    // Greedy decode is deterministic: a non-streaming request for the
+    // same prompt must produce the identical completion.
+    let plain = client.prompt(8, prompt).max_new(6).send().unwrap();
+    assert!(plain.is_ok(), "{:?}", plain.error);
+    assert_eq!(plain.text, text, "streamed reassembly != non-streaming completion");
+    assert_eq!(plain.tokens, tokens);
+}
+
+#[test]
+fn streaming_and_plain_clients_interleave() {
+    let server = TestServer::start(ModelConfig::tiny(), 1, 2);
+    let addr = server.addr;
+    let streamer = std::thread::spawn(move || {
+        let mut client = Client::connect(addr).unwrap();
+        for i in 0..3u64 {
+            let (text, tokens, out) =
+                run_streamed(&mut client, i, "Name a planet, slowly.", 4);
+            assert!(out.is_ok(), "{:?}", out.error);
+            assert_eq!(text, out.text);
+            assert_eq!(tokens, out.tokens);
+        }
+    });
+    let plain = std::thread::spawn(move || {
+        let mut client = Client::connect(addr).unwrap();
+        for i in 0..3u64 {
+            let out = client.prompt(i, "Name a river.").max_new(4).send().unwrap();
+            assert!(out.is_ok(), "{:?}", out.error);
+            assert!(!out.tokens.is_empty());
+        }
+    });
+    streamer.join().unwrap();
+    plain.join().unwrap();
+}
+
+#[test]
+fn mid_stream_disconnect_frees_the_slot() {
+    let server = TestServer::start(slow_config(), 1, 1);
+    let engine = Arc::clone(&server.engines[0]);
+    {
+        // Raw socket: start a long stream, read two frames, vanish.
+        let stream = TcpStream::connect(server.addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        writeln!(
+            writer,
+            r#"{{"id": 9, "prompt": "stream then vanish mid-flight", "max_new": 200, "stream": true}}"#
+        )
+        .unwrap();
+        let mut line = String::new();
+        for _ in 0..2 {
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            assert!(
+                line.contains(r#""event""#),
+                "expected a streaming frame, got: {line}"
+            );
+        }
+        // Drop both halves: the server's next disconnect poll cancels
+        // the request and the engine retires the slot within a step.
+    }
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while engine.live_slots() > 0 || engine.inflight() > 0 || server.hub.waiter_count() > 0
+    {
+        assert!(
+            Instant::now() < deadline,
+            "slot/waiter not freed after mid-stream disconnect: \
+             live_slots={} inflight={} waiters={}",
+            engine.live_slots(),
+            engine.inflight(),
+            server.hub.waiter_count()
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    // Conservation: the cancelled request still reached exactly one
+    // terminal outcome.
+    let snap = engine.snapshot();
+    assert!(matches!(snap.get("conserved"), Some(Json::Bool(true))));
+}
+
+#[test]
+fn drain_finishes_streams_and_refuses_new_with_code() {
+    let server = TestServer::start(slow_config(), 1, 1);
+    let addr = server.addr;
+    let engine = Arc::clone(&server.engines[0]);
+
+    // A long in-flight stream: the drain must let it run to completion.
+    let streamer = std::thread::spawn(move || {
+        let mut client = Client::connect(addr).unwrap();
+        run_streamed(&mut client, 1, "please stream this long answer", 200)
+    });
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while engine.live_slots() == 0 && engine.inflight() == 0 {
+        assert!(Instant::now() < deadline, "stream never became in-flight");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    let mut control = Client::connect(addr).unwrap();
+    let reply = control.control("drain").unwrap();
+    assert!(matches!(reply.get("draining"), Some(Json::Bool(true))), "{}", reply.to_string());
+
+    // New work is refused with the stable code, not prose.
+    let refused = control.prompt(2, "too late").max_new(4).send().unwrap();
+    assert_eq!(refused.code(), Some(ErrorCode::Draining), "{:?}", refused.error);
+
+    // The in-flight stream still completes in full.
+    let (text, tokens, out) = streamer.join().unwrap();
+    assert!(out.is_ok(), "{:?}", out.error);
+    assert_eq!(text, out.text);
+    assert_eq!(tokens, out.tokens);
+
+    // serve() exits on its own once every replica is drained …
+    server.join_within(Duration::from_secs(30));
+    // … with nothing in flight and the books balanced.
+    assert!(engine.drained());
+    assert_eq!(engine.inflight(), 0);
+    let snap = engine.snapshot();
+    assert!(matches!(snap.get("conserved"), Some(Json::Bool(true))));
+    assert!(matches!(snap.get("draining"), Some(Json::Bool(true))));
+}
+
+/// The sorted key set of a reply object (the wire uses sorted-key
+/// JSON, so this is also the on-wire field order).
+fn keys(reply: &Json) -> Vec<String> {
+    match reply {
+        Json::Obj(map) => map.keys().cloned().collect(),
+        other => panic!("expected an object, got {other:?}"),
+    }
+}
+
+#[test]
+fn v1_reply_shape_is_pinned() {
+    let server = TestServer::start(ModelConfig::tiny(), 1, 1);
+    let mut client = Client::connect(server.addr).unwrap();
+
+    // Success line: exactly the v1 fields — no `event`, no `code`.
+    let reply = client
+        .send_raw(r#"{"id": 5, "prompt": "hi there", "max_new": 2}"#)
+        .unwrap();
+    assert_eq!(
+        keys(&reply),
+        ["decode_us", "id", "prefill_us", "queue_us", "text", "tokens"],
+        "v1 success line shape changed: {reply}",
+        reply = reply.to_string()
+    );
+
+    // Error lines gain exactly one additive v2 field: `code`.
+    let reply = client.send_raw(r#"{"id": 5}"#).unwrap();
+    assert_eq!(keys(&reply), ["code", "error"]);
+    assert_eq!(
+        reply.get("code").and_then(|c| c.as_str()).map(ErrorCode::from_wire),
+        Some(ErrorCode::BadRequest)
+    );
+    let reply = client
+        .send_raw(r#"{"id": 5, "prompt": "hi", "max_new": 100000}"#)
+        .unwrap();
+    assert_eq!(keys(&reply), ["code", "error"]);
+    assert_eq!(
+        reply.get("code").and_then(|c| c.as_str()).map(ErrorCode::from_wire),
+        Some(ErrorCode::BadRequest)
+    );
+
+    // The connection still serves a good v1 request afterwards.
+    let out = client.prompt(6, "still alive?").max_new(2).send().unwrap();
+    assert!(out.is_ok());
+}
